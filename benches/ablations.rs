@@ -1,0 +1,101 @@
+//! Bench: micro-ablations over the kernel design choices DESIGN.md calls
+//! out — block size vs MXU-style tile efficiency, fused vs unfused MLP,
+//! BCSC vs CSR at matched sparsity, and the blk_M (row-tile) sweep.
+//! `cargo bench --bench ablations [-- --quick]`
+use blast::kernels::bspmm::{bspmm, fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
+use blast::kernels::csr_spmm::csr_spmm;
+use blast::kernels::gemm::gemm;
+use blast::kernels::ops;
+use blast::sparse::{Bcsc, BlockMask, Csr};
+use blast::tensor::Tensor;
+use blast::testkit::bench::{bench_quick, black_box, fmt_time, Table};
+use blast::util::cli::Args;
+use blast::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse();
+    let quick = args.get_bool("quick");
+    let mut rng = Rng::new(7);
+    let (m, k, n) = if quick { (128, 512, 1024) } else { (256, 1024, 4096) };
+    let s = 0.9;
+
+    // 1. block-size sweep at fixed sparsity
+    let mut t1 = Table::new("ablation: block size @90% sparsity", &["b", "time", "vs b=128"]);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let wd = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let mut t128 = 0.0;
+    for b in [128usize, 64, 32, 16] {
+        let mask = BlockMask::random(k / b, n / b, s, &mut rng);
+        let w = Bcsc::from_dense(&wd, &mask, b);
+        let t = bench_quick("b", || {
+            black_box(bspmm(&x, &w));
+        })
+        .secs();
+        if b == 128 {
+            t128 = t;
+        }
+        t1.row(&[b.to_string(), fmt_time(t), format!("{:.2}x", t128 / t)]);
+    }
+    t1.print();
+
+    // 2. fused vs unfused sparse MLP
+    let e = k;
+    let f = n;
+    let b = 64;
+    let w1d = Tensor::randn(&[e, f], 0.02, &mut rng);
+    let w2d = Tensor::randn(&[e, f], 0.02, &mut rng);
+    let w3d = Tensor::randn(&[f, e], 0.02, &mut rng);
+    let m1 = BlockMask::random(e / b, f / b, s, &mut rng);
+    let m2 = BlockMask::random(e / b, f / b, s, &mut rng);
+    let m3 = BlockMask::random(f / b, e / b, s, &mut rng);
+    let w1 = Bcsc::from_dense(&w1d, &m1, b);
+    let w2 = Bcsc::from_dense(&w2d, &m2, b);
+    let w3 = Bcsc::from_dense(&w3d, &m3, b);
+    let t_fused = bench_quick("fused", || {
+        black_box(fused_mlp_sparse(&x, &FusedMlpWeights { w1: &w1, w2: &w2, w3: &w3 }));
+    })
+    .secs();
+    let t_unfused = bench_quick("unfused", || {
+        let h1 = bspmm(&x, &w1);
+        let h2 = bspmm(&x, &w2);
+        let mut h = h1.clone();
+        for (a, (&p, &q)) in h.data_mut().iter_mut().zip(h1.data().iter().zip(h2.data())) {
+            *a = ops::silu(p) * q;
+        }
+        black_box(bspmm(&h, &w3));
+    })
+    .secs();
+    let mut t2 = Table::new("ablation: fused vs unfused sparse MLP (§3.3.3)", &["variant", "time", "speedup"]);
+    t2.row(&["unfused".into(), fmt_time(t_unfused), "1.00x".into()]);
+    t2.row(&["fused".into(), fmt_time(t_fused), format!("{:.2}x", t_unfused / t_fused)]);
+    t2.print();
+
+    // 3. BCSC vs CSR vs dense at matched sparsity
+    let mut t3 = Table::new("ablation: format comparison @90%", &["format", "time", "vs dense"]);
+    let t_dense = bench_quick("dense", || {
+        black_box(gemm(&x, &wd));
+    })
+    .secs();
+    let mask = BlockMask::random(k / 64, n / 64, s, &mut rng);
+    let wb = Bcsc::from_dense(&wd, &mask, 64);
+    let t_b = bench_quick("bcsc", || {
+        black_box(bspmm(&x, &wb));
+    })
+    .secs();
+    let wc = Csr::random(k, n, s, &mut rng);
+    let t_c = bench_quick("csr", || {
+        black_box(csr_spmm(&x, &wc));
+    })
+    .secs();
+    t3.row(&["dense GEMM".into(), fmt_time(t_dense), "1.00x".into()]);
+    t3.row(&["BCSC 64x64".into(), fmt_time(t_b), format!("{:.2}x", t_dense / t_b)]);
+    t3.row(&["CSR".into(), fmt_time(t_c), format!("{:.2}x", t_dense / t_c)]);
+    t3.print();
+
+    // 4. gelu MLP variant sanity (GPT-2 path)
+    let t_gelu = bench_quick("gelu-mlp", || {
+        black_box(gelu_mlp_sparse(&x, &w1, &w3));
+    })
+    .secs();
+    println!("\ngelu sparse MLP (GPT-2 path): {}", fmt_time(t_gelu));
+}

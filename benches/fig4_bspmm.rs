@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 4 (BSpMM kernel speedup sweep).
+//! `cargo bench --bench fig4_bspmm [-- --quick]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::kernel_exps::fig4(&args).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 5 (Llama-family fused sparse MLP speedup).
+//! `cargo bench --bench fig5_mlp_llama [-- --quick]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::kernel_exps::fig5(&args).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 6 (end-to-end inference speedup, dense vs sparse
+//! native engine). `cargo bench --bench fig6_inference_e2e [-- --quick]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::kernel_exps::fig6(&args).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 7 (GPU-count / memory footprint model).
+//! `cargo bench --bench fig7_memory_footprint`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::memory_exps::fig7(&args).unwrap();
+}

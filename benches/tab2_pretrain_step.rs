@@ -1,0 +1,41 @@
+//! Bench: Table 2's wall-clock axis — time per training iteration through
+//! the AOT train_step at each Table 2 configuration, without the full-run
+//! perplexity (use `blast exp tab2` for the complete table).
+//! `cargo bench --bench tab2_pretrain_step [-- --steps 12]`
+use blast::runtime::Runtime;
+use blast::testkit::bench::Table;
+use blast::train::pretrain::{PretrainOptions, Trainer};
+use blast::util::cli::Args;
+use blast::util::stats;
+
+fn main() {
+    let args = Args::parse();
+    let steps = args.get_usize("steps", 12);
+    let rt = Runtime::open_default().expect("run `make artifacts`");
+    let mut table = Table::new(
+        "Tab.2 (time axis) — per-iteration wall-clock",
+        &["config", "variant", "median ms/iter", "mask-update ms"],
+    );
+    for config in ["gpt2s-sim", "llama-sim"] {
+        for (smax, mult, tag) in [(0.0, 1usize, "dense"), (0.8, 4, "BLaST-80%/128")] {
+            let opts = PretrainOptions {
+                total_iters: steps,
+                s_max: smax,
+                step_size: 5,
+                block_mult: mult,
+                ..Default::default()
+            };
+            let mut t = Trainer::new(&rt, config, opts).unwrap();
+            t.run(steps).unwrap();
+            let plain: Vec<f64> = t.log.iter().filter(|l| !l.mask_update).map(|l| l.secs * 1e3).collect();
+            let upd: Vec<f64> = t.log.iter().filter(|l| l.mask_update).map(|l| l.secs * 1e3).collect();
+            table.row(&[
+                config.into(),
+                tag.into(),
+                format!("{:.1}", stats::median(&plain)),
+                format!("{:.1}", stats::median(&upd)),
+            ]);
+        }
+    }
+    table.print();
+}

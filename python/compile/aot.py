@@ -1,0 +1,420 @@
+"""AOT compilation: lower every L2 entry point to HLO *text* + manifest.
+
+Run once via ``make artifacts``; Rust loads the results through
+``HloModuleProto::from_text_file`` (PJRT CPU). HLO text — not
+``.serialize()`` — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+The manifest (``artifacts/manifest.json``) is the ABI contract with the Rust
+runtime: for every entry it records the flat positional input/output lists
+(name, shape, dtype) plus the model geometry, parameter spec and mask spec.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--full]
+        (--full additionally lowers the ~100M `e2e-100m` twin)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.bspmm import bspmm
+from .kernels.fused_mlp import fused_mlp
+
+# ---------------------------------------------------------------------------
+# Config registry (scaled twins of the paper geometries — DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+CONFIGS: Dict[str, M.ModelConfig] = {
+    c.name: c
+    for c in [
+        # test-scale twin used by pytest + rust integration tests
+        M.ModelConfig("micro", "gpt2", 256, 64, 128, 2, 2, 32, 2, 32,
+                      paper_equiv="GPT2-small"),
+        # llama twin at test scale — carries the Pallas-composition proof
+        M.ModelConfig("micro-llama", "llama", 256, 64, 128, 2, 2, 32, 2, 32,
+                      paper_equiv="Llama-3.2-1B"),
+        # pretraining twins (Table 2 / Fig. 8 / ablation tables)
+        M.ModelConfig("gpt2s-sim", "gpt2", 2048, 256, 1024, 4, 4, 128, 8, 32,
+                      paper_equiv="GPT2-small"),
+        # block-size ablation twins (Table 4 / Fig. 10): b=1 is the
+        # unstructured-pruning point, b=16 the smallest blocked point;
+        # b ∈ {64, 128} reuse gpt2s-sim via coarse mask grouping in Rust.
+        M.ModelConfig("gpt2s-sim-b1", "gpt2", 2048, 256, 1024, 4, 4, 128, 8, 1,
+                      paper_equiv="GPT2-small"),
+        M.ModelConfig("gpt2s-sim-b16", "gpt2", 2048, 256, 1024, 4, 4, 128, 8, 16,
+                      paper_equiv="GPT2-small"),
+        M.ModelConfig("llama-sim", "llama", 2048, 256, 1024, 4, 4, 128, 8, 32,
+                      paper_equiv="Llama-3.2-1B"),
+        # end-to-end driver twins (EXPERIMENTS.md headline run)
+        M.ModelConfig("e2e-small", "gpt2", 4096, 512, 2048, 8, 8, 256, 4, 64,
+                      paper_equiv="GPT2-medium"),
+        M.ModelConfig("e2e-100m", "gpt2", 8192, 768, 3072, 12, 12, 256, 4, 64,
+                      paper_equiv="GPT2-large"),
+        # vision twin (Table 3 / Fig. 9)
+        M.ModelConfig("vit-sim", "vit", 0, 128, 512, 4, 4, 17, 32, 32,
+                      num_classes=10, patch_dim=192, paper_equiv="ViT-B/16"),
+        # GLUE-like sequence-classification twin (Table 1)
+        M.ModelConfig("glue-sim", "vit", 0, 128, 512, 4, 4, 33, 32, 32,
+                      num_classes=2, patch_dim=64, paper_equiv="Llama-3.2-1B+GLUE"),
+    ]
+}
+
+LEARNING_RATES = {
+    "micro": 1e-3, "micro-llama": 1e-3,
+    "gpt2s-sim": 6e-4, "gpt2s-sim-b1": 6e-4, "gpt2s-sim-b16": 6e-4,
+    "llama-sim": 6e-4,
+    "e2e-small": 3e-4, "e2e-100m": 2.5e-4,
+    "vit-sim": 1e-3, "glue-sim": 1e-3,
+}
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name: str, s: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids re-assigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Flat-ABI wrappers: dict pytrees → positional array lists
+# ---------------------------------------------------------------------------
+
+
+def _flat_entries(cfg: M.ModelConfig):
+    """(param names+shapes, mask names+shapes) in ABI order."""
+    pspec = M.param_spec(cfg)
+    mspec = M.mask_spec(cfg)
+    return pspec, mspec
+
+
+def flatten_io(cfg: M.ModelConfig):
+    pspec, mspec = _flat_entries(cfg)
+    pnames = [n for n, _ in pspec]
+    mnames = [n for n, _ in mspec]
+
+    def to_params(args: Sequence[jnp.ndarray]) -> M.Params:
+        return dict(zip(pnames, args))
+
+    def to_masks(args: Sequence[jnp.ndarray]) -> M.Masks:
+        return dict(zip(mnames, args))
+
+    return pnames, mnames, to_params, to_masks
+
+
+def make_entry_fns(cfg: M.ModelConfig, lr: float):
+    """Build the flat-positional entry functions for one config."""
+    pnames, mnames, to_params, to_masks = flatten_io(cfg)
+    P, K = len(pnames), len(mnames)
+    step_fn = M.make_train_step(cfg, lr)
+
+    def train_step(*args):
+        params = to_params(args[:P])
+        m = to_params(args[P : 2 * P])
+        v = to_params(args[2 * P : 3 * P])
+        step = args[3 * P]
+        masks = to_masks(args[3 * P + 1 : 3 * P + 1 + K])
+        inputs, labels = args[3 * P + 1 + K], args[3 * P + 2 + K]
+        new_p, new_m, new_v, new_step, loss, mlp_g = step_fn(
+            params, m, v, step, masks, inputs, labels
+        )
+        out = [new_p[n] for n in pnames]
+        out += [new_m[n] for n in pnames]
+        out += [new_v[n] for n in pnames]
+        out += [new_step, loss]
+        out += [mlp_g[n] for n in cfg.mlp_weight_names()]
+        return tuple(out)
+
+    def eval_loss(*args):
+        params = to_params(args[:P])
+        masks = to_masks(args[P : P + K])
+        inputs, labels = args[P + K], args[P + K + 1]
+        if cfg.kind == "vit":
+            logits = M.vit_logits(cfg, params, masks, inputs)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+            return (loss, logits)
+        loss = M.lm_loss(cfg, params, masks, inputs, labels)
+        return (loss,)
+
+    def eval_loss_pallas(*args):
+        params = to_params(args[:P])
+        masks = to_masks(args[P : P + K])
+        inputs, labels = args[P + K], args[P + K + 1]
+        return (M.lm_loss(cfg, params, masks, inputs, labels, use_pallas=True),)
+
+    def prefill(*args):
+        params = to_params(args[:P])
+        masks = to_masks(args[P : P + K])
+        tokens = args[P + K]
+        return M.prefill(cfg, params, masks, tokens)
+
+    def decode_step(*args):
+        params = to_params(args[:P])
+        masks = to_masks(args[P : P + K])
+        kc, vc, token, pos = args[P + K : P + K + 4]
+        return M.decode_step(cfg, params, masks, kc, vc, token, pos)
+
+    return {
+        "train_step": train_step,
+        "eval_loss": eval_loss,
+        "eval_loss_pallas": eval_loss_pallas,
+        "prefill": prefill,
+        "decode_step": decode_step,
+    }
+
+
+def entry_specs(cfg: M.ModelConfig, kind: str):
+    """Input (name, ShapeDtypeStruct) list for an entry kind, ABI order."""
+    pspec, mspec = _flat_entries(cfg)
+    params = [(n, _spec(s)) for n, s in pspec]
+    masks = [("mask:" + n, _spec(s)) for n, s in mspec]
+    if cfg.kind == "vit":
+        data = [
+            ("inputs", _spec((cfg.batch, cfg.seq - 1, cfg.patch_dim))),
+            ("labels", _spec((cfg.batch,), jnp.int32)),
+        ]
+    else:
+        data = [
+            ("inputs", _spec((cfg.batch, cfg.seq), jnp.int32)),
+            ("labels", _spec((cfg.batch, cfg.seq), jnp.int32)),
+        ]
+    kv = (cfg.layers, cfg.batch, cfg.heads, cfg.seq, cfg.head_dim)
+    if kind == "train_step":
+        opt = [("m:" + n, s) for n, s in params] + [("v:" + n, s) for n, s in params]
+        return (
+            params
+            + opt
+            + [("step", _spec((), jnp.int32))]
+            + masks
+            + data
+        )
+    if kind in ("eval_loss", "eval_loss_pallas"):
+        return params + masks + data
+    if kind == "prefill":
+        return params + masks + [("tokens", _spec((cfg.batch, cfg.seq), jnp.int32))]
+    if kind == "decode_step":
+        return params + masks + [
+            ("kcache", _spec(kv)),
+            ("vcache", _spec(kv)),
+            ("token", _spec((cfg.batch,), jnp.int32)),
+            ("pos", _spec((), jnp.int32)),
+        ]
+    raise ValueError(kind)
+
+
+def output_names(cfg: M.ModelConfig, kind: str) -> List[str]:
+    pnames = [n for n, _ in M.param_spec(cfg)]
+    if kind == "train_step":
+        return (
+            pnames
+            + ["m:" + n for n in pnames]
+            + ["v:" + n for n in pnames]
+            + ["step", "loss"]
+            + ["grad:" + n for n in cfg.mlp_weight_names()]
+        )
+    if kind == "eval_loss":
+        return ["loss", "logits"] if cfg.kind == "vit" else ["loss"]
+    if kind == "eval_loss_pallas":
+        return ["loss"]
+    if kind == "prefill":
+        return ["logits", "kcache", "vcache"]
+    if kind == "decode_step":
+        return ["logits", "kcache", "vcache"]
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Standalone kernel artifacts (L1 → L3 composition proof)
+# ---------------------------------------------------------------------------
+
+KERNEL_SHAPES = {
+    # (m, k, n, block) — small enough for fast interpret-mode HLO
+    "bspmm_pallas": (64, 128, 128, 32),
+    "fused_mlp_pallas": (64, 128, 256, 32),
+}
+
+
+def kernel_entries():
+    out = []
+    m, k, n, b = KERNEL_SHAPES["bspmm_pallas"]
+
+    def bspmm_fn(x, w, mask):
+        return (bspmm(x, w, mask, block=b),)
+
+    out.append(
+        (
+            "bspmm_pallas",
+            bspmm_fn,
+            [
+                ("x", _spec((m, k))),
+                ("w", _spec((k, n))),
+                ("mask", _spec((k // b, n // b))),
+            ],
+            ["y"],
+            {"m": m, "k": k, "n": n, "block": b},
+        )
+    )
+
+    m2, k2, f2, b2 = KERNEL_SHAPES["fused_mlp_pallas"]
+
+    def mlp_fn(x, w1, w2, w3, m1, mm2, m3):
+        return (fused_mlp(x, w1, w2, w3, m1, mm2, m3, block=b2),)
+
+    out.append(
+        (
+            "fused_mlp_pallas",
+            mlp_fn,
+            [
+                ("x", _spec((m2, k2))),
+                ("w1", _spec((k2, f2))),
+                ("w2", _spec((k2, f2))),
+                ("w3", _spec((f2, k2))),
+                ("m1", _spec((k2 // b2, f2 // b2))),
+                ("m2", _spec((k2 // b2, f2 // b2))),
+                ("m3", _spec((f2 // b2, k2 // b2))),
+            ],
+            ["y"],
+            {"m": m2, "k": k2, "n": f2, "block": b2},
+        )
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+# (config, [entry kinds]) lowered by default; e2e-100m needs --full
+PLAN = [
+    ("micro", ["train_step", "eval_loss"]),
+    ("micro-llama", ["train_step", "eval_loss", "eval_loss_pallas",
+                     "prefill", "decode_step"]),
+    ("gpt2s-sim", ["train_step", "eval_loss"]),
+    ("gpt2s-sim-b1", ["train_step", "eval_loss"]),
+    ("gpt2s-sim-b16", ["train_step", "eval_loss"]),
+    ("llama-sim", ["train_step", "eval_loss", "prefill", "decode_step"]),
+    ("e2e-small", ["train_step", "eval_loss", "prefill", "decode_step"]),
+    ("vit-sim", ["train_step", "eval_loss"]),
+    ("glue-sim", ["train_step", "eval_loss"]),
+]
+PLAN_FULL = PLAN + [("e2e-100m", ["train_step", "eval_loss"])]
+
+
+def lower_entry(cfg: M.ModelConfig, kind: str, out_dir: str) -> dict:
+    fns = make_entry_fns(cfg, LEARNING_RATES[cfg.name])
+    specs = entry_specs(cfg, kind)
+    lowered = jax.jit(fns[kind]).lower(*[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}_{kind}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "name": f"{cfg.name}_{kind}",
+        "file": fname,
+        "config": cfg.name,
+        "kind": kind,
+        "inputs": [_io_entry(n, s) for n, s in specs],
+        "outputs": output_names(cfg, kind),
+        "hlo_bytes": len(text),
+    }
+
+
+def config_manifest(cfg: M.ModelConfig) -> dict:
+    pspec, mspec = _flat_entries(cfg)
+    nparams = sum(int(jnp.prod(jnp.array(s))) for _, s in pspec)
+    d = dataclasses_asdict(cfg)
+    d.update(
+        {
+            "lr": LEARNING_RATES[cfg.name],
+            "param_count": nparams,
+            "params": [{"name": n, "shape": list(s)} for n, s in pspec],
+            "masks": [{"name": n, "shape": list(s)} for n, s in mspec],
+            "mlp_weights": cfg.mlp_weight_names(),
+            "head_dim": cfg.head_dim,
+        }
+    )
+    return d
+
+
+def dataclasses_asdict(cfg) -> dict:
+    import dataclasses as dc
+
+    return {f.name: getattr(cfg, f.name) for f in dc.fields(cfg)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the ~100M e2e-100m twin")
+    ap.add_argument("--only", default="",
+                    help="comma-separated config names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    plan = PLAN_FULL if args.full else PLAN
+    if args.only:
+        keep = set(args.only.split(","))
+        plan = [(c, ks) for c, ks in plan if c in keep]
+
+    entries = []
+    for cname, kinds in plan:
+        cfg = CONFIGS[cname]
+        for kind in kinds:
+            e = lower_entry(cfg, kind, args.out)
+            entries.append(e)
+            print(f"lowered {e['name']:40s} {e['hlo_bytes']:>9d} B")
+
+    for name, fn, specs, outs, meta in kernel_entries():
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "config": None,
+                "kind": "kernel",
+                "inputs": [_io_entry(n, s) for n, s in specs],
+                "outputs": outs,
+                "meta": meta,
+                "hlo_bytes": len(text),
+            }
+        )
+        print(f"lowered {name:40s} {len(text):>9d} B")
+
+    manifest = {
+        "version": 1,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "configs": {c: config_manifest(CONFIGS[c]) for c, _ in plan},
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} entries to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

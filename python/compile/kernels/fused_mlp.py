@@ -1,0 +1,124 @@
+"""L1 — fused block-sparse MLP gate kernel (paper §3.3.3).
+
+The paper fuses the memory-bound nonlinearity into the compute-bound SpMM so
+the gated hidden state ``H = SiLU(X W1) ⊙ (X W2)`` never round-trips through
+HBM. We express that as a single Pallas kernel whose ``(i, j)`` grid step:
+
+  1. loops over the K block-column of both ``W1`` and ``W2``,
+  2. predicates each ``b×b`` block MAC on its block-mask entry (pruned
+     blocks contribute neither FLOPs nor — on a real TPU — DMA traffic),
+  3. applies the SiLU gate as the *epilogue* of the contraction, writing the
+     already-gated tile.
+
+The down-projection ``Y = H W3`` is the plain ``bspmm`` kernel. Both are
+lowered ``interpret=True`` (see bspmm.py for why).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bspmm import bspmm
+
+
+def _gate_kernel(x_ref, w1_ref, w2_ref, m1_ref, m2_ref, h_ref, *, nk: int, block: int, act: str):
+    """One (i, j) grid step producing the gated hidden tile H[i, j]."""
+    blk_m = h_ref.shape[0]
+    bn = h_ref.shape[1]
+
+    def body(kk, accs):
+        acc1, acc2 = accs
+        x_blk = pl.load(x_ref, (slice(None), pl.ds(kk * block, block)))
+        w1_blk = pl.load(w1_ref, (pl.ds(kk * block, block), slice(None)))
+        w2_blk = pl.load(w2_ref, (pl.ds(kk * block, block), slice(None)))
+        m1 = pl.load(m1_ref, (pl.ds(kk, 1), slice(None)))[0, 0]
+        m2 = pl.load(m2_ref, (pl.ds(kk, 1), slice(None)))[0, 0]
+        # Predicated MACs: a pruned block contributes nothing. (On TPU the
+        # DMA itself is predicated; under interpret we gate the MAC value.)
+        p1 = jnp.dot(x_blk, w1_blk, preferred_element_type=jnp.float32)
+        p2 = jnp.dot(x_blk, w2_blk, preferred_element_type=jnp.float32)
+        acc1 = acc1 + jnp.where(m1 != 0, p1, 0.0)
+        acc2 = acc2 + jnp.where(m2 != 0, p2, 0.0)
+        return acc1, acc2
+
+    zero = jnp.zeros((blk_m, bn), jnp.float32)
+    acc1, acc2 = jax.lax.fori_loop(0, nk, body, (zero, zero))
+    # Fused epilogue: the nonlinearity + gating happen in VMEM, before the
+    # tile is written back — H never exists un-gated in HBM.
+    if act == "silu":
+        gated = acc1 * jnp.reciprocal(1.0 + jnp.exp(-acc1)) * acc2
+    elif act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi)
+        gated = 0.5 * acc1 * (1.0 + jnp.tanh(c * (acc1 + 0.044715 * acc1**3)))
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    h_ref[...] = gated.astype(h_ref.dtype)
+
+
+def fused_gate(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    m1: jnp.ndarray,
+    m2: jnp.ndarray,
+    *,
+    block: int,
+    blk_m: int = 0,
+    act: str = "silu",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``H = act(X W1) ⊙ (X W2)`` with block-masked W1/W2, fused epilogue.
+
+    For ``act="gelu"`` the ``w2``/``m2`` operands are still contracted but the
+    epilogue ignores the gate (pass ``w2 = w1`` to share); prefer
+    :func:`fused_mlp` which handles both layouts.
+    """
+    m, k = x.shape
+    k2, f = w1.shape
+    assert k == k2 and w2.shape == (k, f)
+    assert k % block == 0 and f % block == 0
+    nk, nf = k // block, f // block
+    assert m1.shape == (nk, nf) and m2.shape == (nk, nf)
+    if blk_m == 0:
+        blk_m = min(m, 128)
+    assert m % blk_m == 0, (m, blk_m)
+
+    grid = (m // blk_m, nf)
+    return pl.pallas_call(
+        functools.partial(_gate_kernel, nk=nk, block=block, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block), lambda i, j: (0, j)),
+            pl.BlockSpec((k, block), lambda i, j: (0, j)),
+            pl.BlockSpec((nk, 1), lambda i, j: (0, j)),
+            pl.BlockSpec((nk, 1), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_m, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, f), x.dtype),
+        interpret=interpret,
+    )(x, w1, w2, m1, m2)
+
+
+def fused_mlp(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    w3: jnp.ndarray,
+    m1: jnp.ndarray,
+    m2: jnp.ndarray,
+    m3: jnp.ndarray,
+    *,
+    block: int,
+    blk_m: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full sparse MLP (paper Eq. 1): ``Y = (SiLU(X W1) ⊙ (X W2)) W3``."""
+    h = fused_gate(
+        x, w1, w2, m1, m2, block=block, blk_m=blk_m, act="silu", interpret=interpret
+    )
+    return bspmm(h, w3, m3, block=block, blk_m=blk_m, interpret=interpret)

@@ -1,0 +1,77 @@
+"""Pure-jnp correctness oracles for the BLaST kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the AOT'd
+HLO executed from Rust) are validated against in ``python/tests``. They are
+deliberately written in the most obvious way possible — readability over
+speed — so that a bug here is implausible.
+
+Shapes and conventions (mirrors paper §3.3, ``Y = XW`` variant):
+  * ``x``      — activations, ``(seq, k)`` (a flattened ``(batch*seq, k)``).
+  * ``w``      — weight matrix, ``(k, n)``.
+  * ``mask``   — block mask, ``(k // b, n // b)`` with entries in {0, 1};
+                 ``mask[i, j] == 0`` means the ``b×b`` block is pruned.
+  * block size ``b`` must divide both ``k`` and ``n``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expand_mask(mask: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Expand a block mask ``(kb, nb)`` to elementwise ``(kb*b, nb*b)``."""
+    return jnp.repeat(jnp.repeat(mask, block, axis=0), block, axis=1)
+
+
+def masked_weight(w: jnp.ndarray, mask: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Apply a block mask to a dense weight matrix (the pruned ``W_new``)."""
+    kb, nb = mask.shape
+    assert w.shape == (kb * block, nb * block), (w.shape, mask.shape, block)
+    return w * expand_mask(mask, block).astype(w.dtype)
+
+
+def bspmm_ref(
+    x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray, block: int
+) -> jnp.ndarray:
+    """Reference block-sparse matmul: ``Y = X @ (W ⊙ expand(mask))``."""
+    return x @ masked_weight(w, mask, block)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    # tanh approximation, matching jax.nn.gelu(approximate=True)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_mlp_ref(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    w3: jnp.ndarray,
+    m1: jnp.ndarray,
+    m2: jnp.ndarray,
+    m3: jnp.ndarray,
+    block: int,
+) -> jnp.ndarray:
+    """Reference Llama-style sparse MLP (paper Eq. 1):
+
+    ``Y = (SiLU(X W1) ⊙ (X W2)) W3`` with per-matrix block masks.
+    """
+    h = silu(bspmm_ref(x, w1, m1, block)) * bspmm_ref(x, w2, m2, block)
+    return bspmm_ref(h, w3, m3, block)
+
+
+def gelu_mlp_ref(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    m1: jnp.ndarray,
+    m3: jnp.ndarray,
+    block: int,
+) -> jnp.ndarray:
+    """Reference GPT-2-style sparse MLP: ``Y = GELU(X W1) W3``."""
+    return bspmm_ref(gelu(bspmm_ref(x, w1, m1, block)), w3, m3, block)

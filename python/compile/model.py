@@ -1,0 +1,507 @@
+"""L2 — JAX model definitions for the BLaST reproduction.
+
+Defines the Transformer variants the paper evaluates (GPT-2-style decoder,
+Llama-style decoder, ViT-style encoder classifier) plus the AOT entry points
+the Rust coordinator executes:
+
+  * ``train_step``      — fused fwd + bwd + Adam update with block-masked
+                          MLP weights; returns the MLP weight gradients so
+                          the Rust prune-and-grow controller (L3) can run
+                          the paper's §3.2 algorithm.
+  * ``eval_loss``       — test loss (Rust converts to perplexity).
+  * ``prefill``         — prompt pass producing last-position logits + KV.
+  * ``decode_step``     — single-token KV-cached decode.
+  * ``classify_*``      — ViT / GLUE-style classification head variants.
+
+Masking semantics (paper §3.2): the *pruned* weight ``W ⊙ expand(M)`` is
+used in both the forward and the backward pass (no straight-through
+estimator). Autodiff through the mask multiplication therefore yields
+*masked* gradients — exactly the ``G_i`` matrices the paper feeds to
+``S(G_i)`` in the grow step. The dense weights are kept intact in the
+optimizer state and keep receiving (masked) Adam updates, mirroring
+"the dense weight and gradient matrices are kept intact".
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once; Python never runs on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.fused_mlp import fused_mlp as fused_mlp_pallas
+
+Params = Dict[str, jnp.ndarray]
+Masks = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of one model variant.
+
+    ``paper_equiv`` names the paper geometry this scaled twin stands for
+    (DESIGN.md §7); analytic models (Figs. 5/7) use the real geometry, the
+    wall-clock runs use the twin.
+    """
+
+    name: str
+    kind: str  # "gpt2" | "llama" | "vit"
+    vocab: int
+    emb: int
+    ffn: int
+    layers: int
+    heads: int
+    seq: int
+    batch: int
+    block: int  # sparse block size b (paper's blk_N)
+    num_classes: int = 0  # vit / classifier only
+    patch_dim: int = 0  # vit only: flattened patch size (p*p*3)
+    paper_equiv: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.emb // self.heads
+
+    def mlp_weight_names(self) -> List[str]:
+        """Names of the sparsifiable MLP weight matrices, in layer order."""
+        names = []
+        for i in range(self.layers):
+            if self.kind == "llama":
+                names += [f"layer{i}.mlp.w1", f"layer{i}.mlp.w2", f"layer{i}.mlp.w3"]
+            else:
+                names += [f"layer{i}.mlp.w1", f"layer{i}.mlp.w3"]
+        return names
+
+
+def _lm_param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    e, f, v = cfg.emb, cfg.ffn, cfg.vocab
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("tok_emb", (v, e))]
+    if cfg.kind == "gpt2":
+        spec.append(("pos_emb", (cfg.seq, e)))
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (e,)),
+            (p + "attn.wq", (e, e)),
+            (p + "attn.wk", (e, e)),
+            (p + "attn.wv", (e, e)),
+            (p + "attn.wo", (e, e)),
+            (p + "ln2", (e,)),
+            (p + "mlp.w1", (e, f)),
+        ]
+        if cfg.kind == "llama":
+            spec.append((p + "mlp.w2", (e, f)))
+        spec.append((p + "mlp.w3", (f, e)))
+    spec += [("final_norm", (e,)), ("lm_head", (e, v))]
+    return spec
+
+
+def _vit_param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    e, f = cfg.emb, cfg.ffn
+    npatch = cfg.seq - 1  # one slot reserved for the CLS token
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("patch_proj", (cfg.patch_dim, e)),
+        ("cls_token", (e,)),
+        ("pos_emb", (cfg.seq, e)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (e,)),
+            (p + "attn.wq", (e, e)),
+            (p + "attn.wk", (e, e)),
+            (p + "attn.wv", (e, e)),
+            (p + "attn.wo", (e, e)),
+            (p + "ln2", (e,)),
+            (p + "mlp.w1", (e, f)),
+            (p + "mlp.w3", (f, e)),
+        ]
+    spec += [("final_norm", (e,)), ("head", (e, cfg.num_classes))]
+    _ = npatch
+    return spec
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the ABI between aot.py and Rust."""
+    return _vit_param_spec(cfg) if cfg.kind == "vit" else _lm_param_spec(cfg)
+
+
+def mask_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, int]]]:
+    """Ordered (mlp-weight-name, block-mask-shape) list."""
+    shapes = dict(param_spec(cfg))
+    b = cfg.block
+    out = []
+    for name in cfg.mlp_weight_names():
+        k, n = shapes[name]
+        assert k % b == 0 and n % b == 0, (name, k, n, b)
+        out.append((name, (k // b, n // b)))
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal init (0.02 / sqrt(2L) on residual-out projections)."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    resid_scale = 0.02 / math.sqrt(2 * cfg.layers)
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "final_norm")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "cls_token":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            scale = resid_scale if name.endswith(("attn.wo", "mlp.w3")) else 0.02
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def full_masks(cfg: ModelConfig) -> Masks:
+    """All-ones (fully dense) block masks."""
+    return {n: jnp.ones(s, jnp.float32) for n, s in mask_spec(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+def _norm(cfg: ModelConfig, x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(x, g) if cfg.kind == "llama" else layernorm(x, g)
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: (..., seq, head_dim); positions: (seq,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (seq, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x: jnp.ndarray, heads: int) -> jnp.ndarray:
+    b, s, e = x.shape
+    return x.reshape(b, s, heads, e // heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _attention(
+    cfg: ModelConfig,
+    p: Params,
+    prefix: str,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    causal: bool,
+) -> jnp.ndarray:
+    """Dense multi-head attention over full sequence (train / prefill)."""
+    q = _split_heads(x @ p[prefix + "attn.wq"], cfg.heads)
+    k = _split_heads(x @ p[prefix + "attn.wk"], cfg.heads)
+    v = _split_heads(x @ p[prefix + "attn.wv"], cfg.heads)
+    if cfg.kind == "llama":
+        q, k = _rope(q, positions), _rope(k, positions)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+    if causal:
+        s = x.shape[1]
+        neg = jnp.finfo(jnp.float32).min
+        causal_mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(causal_mask[None, None], scores, neg)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, v))
+    return out @ p[prefix + "attn.wo"]
+
+
+def _mlp(
+    cfg: ModelConfig,
+    p: Params,
+    masks: Masks,
+    prefix: str,
+    x: jnp.ndarray,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Block-sparse MLP. The masked-dense formulation is numerically
+    identical to the Pallas kernel path (asserted in python/tests); the
+    Pallas path proves L1→L2 composition and is emitted for the micro
+    config, while large training graphs use the XLA-fused dense form for
+    CPU wall-clock sanity (DESIGN.md §1/L1)."""
+    b = cfg.block
+    bsz, s, e = x.shape
+    w1, w3 = p[prefix + "mlp.w1"], p[prefix + "mlp.w3"]
+    m1, m3 = masks[prefix + "mlp.w1"], masks[prefix + "mlp.w3"]
+    if cfg.kind == "llama":
+        w2, m2 = p[prefix + "mlp.w2"], masks[prefix + "mlp.w2"]
+        if use_pallas:
+            y = fused_mlp_pallas(
+                x.reshape(bsz * s, e), w1, w2, w3, m1, m2, m3, block=b
+            )
+            return y.reshape(bsz, s, e)
+        return ref.fused_mlp_ref(
+            x.reshape(bsz * s, e), w1, w2, w3, m1, m2, m3, b
+        ).reshape(bsz, s, e)
+    # gpt2 / vit: GELU MLP
+    y = ref.gelu_mlp_ref(x.reshape(bsz * s, e), w1, w3, m1, m3, b)
+    return y.reshape(bsz, s, e)
+
+
+def _block(
+    cfg: ModelConfig,
+    p: Params,
+    masks: Masks,
+    i: int,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    causal: bool,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    pre = f"layer{i}."
+    x = x + _attention(cfg, p, pre, _norm(cfg, x, p[pre + "ln1"]), positions, causal)
+    x = x + _mlp(cfg, p, masks, pre, _norm(cfg, x, p[pre + "ln2"]), use_pallas)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# LM forward / loss
+# ---------------------------------------------------------------------------
+
+
+def apply_masks(cfg: ModelConfig, params: Params, masks: Masks) -> Params:
+    """Replace each sparsifiable W by its pruned form W ⊙ expand(M)."""
+    out = dict(params)
+    for name in cfg.mlp_weight_names():
+        out[name] = ref.masked_weight(params[name], masks[name], cfg.block)
+    return out
+
+
+def lm_logits(
+    cfg: ModelConfig,
+    params: Params,
+    masks: Masks,
+    tokens: jnp.ndarray,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence logits. tokens: (batch, seq) int32."""
+    p = apply_masks(cfg, params, masks)
+    # masks already folded into p; pass all-ones to _mlp to avoid double-mask
+    ones = {n: jnp.ones_like(m) for n, m in masks.items()}
+    x = p["tok_emb"][tokens]
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    if cfg.kind == "gpt2":
+        x = x + p["pos_emb"][None, :s]
+    for i in range(cfg.layers):
+        x = _block(cfg, p, ones if not use_pallas else masks, i, x, positions, True, use_pallas)
+    x = _norm(cfg, x, p["final_norm"])
+    return x @ p["lm_head"]
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    params: Params,
+    masks: Masks,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Mean cross-entropy. targets: (batch, seq) int32 (next tokens)."""
+    logits = lm_logits(cfg, params, masks, tokens, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# ViT forward / loss
+# ---------------------------------------------------------------------------
+
+
+def vit_logits(
+    cfg: ModelConfig, params: Params, masks: Masks, patches: jnp.ndarray
+) -> jnp.ndarray:
+    """patches: (batch, seq-1, patch_dim) pre-patchified images."""
+    p = apply_masks(cfg, params, masks)
+    ones = {n: jnp.ones_like(m) for n, m in masks.items()}
+    bsz = patches.shape[0]
+    x = patches @ p["patch_proj"]
+    cls = jnp.broadcast_to(p["cls_token"], (bsz, 1, cfg.emb))
+    x = jnp.concatenate([cls, x], axis=1) + p["pos_emb"][None]
+    positions = jnp.arange(cfg.seq)
+    for i in range(cfg.layers):
+        x = _block(cfg, p, ones, i, x, positions, False, False)
+    x = _norm(cfg, x, p["final_norm"])
+    return x[:, 0] @ p["head"]
+
+
+def vit_loss(
+    cfg: ModelConfig,
+    params: Params,
+    masks: Masks,
+    patches: jnp.ndarray,
+    labels: jnp.ndarray,
+) -> jnp.ndarray:
+    logits = vit_logits(cfg, params, masks, patches)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Adam train step (fwd + bwd + update fused into one HLO)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    step: jnp.ndarray,
+    lr: float,
+    wd: float = 0.0,
+) -> Tuple[Params, Params, Params]:
+    """Bias-corrected AdamW over the flat param dict."""
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - ADAM_B1**t
+    c2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        nm = ADAM_B1 * m[k] + (1 - ADAM_B1) * g
+        nv = ADAM_B2 * v[k] + (1 - ADAM_B2) * g * g
+        upd = (nm / c1) / (jnp.sqrt(nv / c2) + ADAM_EPS)
+        new_p[k] = params[k] - lr * (upd + wd * params[k])
+        new_m[k], new_v[k] = nm, nv
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg: ModelConfig, lr: float, wd: float = 0.01):
+    """Returns f(params, m, v, step, masks, tokens, targets) ->
+    (params', m', v', step+1, loss, mlp_grads)."""
+
+    loss_fn = vit_loss if cfg.kind == "vit" else lm_loss
+
+    def step_fn(params, m, v, step, masks, inputs, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, masks, inputs, labels)
+        )(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr, wd)
+        mlp_grads = {k: grads[k] for k in cfg.mlp_weight_names()}
+        return new_p, new_m, new_v, step + 1, loss, mlp_grads
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# KV-cached inference (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig, params: Params, masks: Masks, tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prompt pass. tokens: (batch, seq). Returns (last_logits, K, V) with
+    K/V: (layers, batch, heads, max_seq, head_dim); positions beyond the
+    prompt are zero-filled and masked out during decode."""
+    p = apply_masks(cfg, params, masks)
+    ones = {n: jnp.ones_like(m) for n, m in masks.items()}
+    bsz, s = tokens.shape
+    x = p["tok_emb"][tokens]
+    positions = jnp.arange(s)
+    if cfg.kind == "gpt2":
+        x = x + p["pos_emb"][None, :s]
+    ks, vs = [], []
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        xn = _norm(cfg, x, p[pre + "ln1"])
+        q = _split_heads(xn @ p[pre + "attn.wq"], cfg.heads)
+        k = _split_heads(xn @ p[pre + "attn.wk"], cfg.heads)
+        vv = _split_heads(xn @ p[pre + "attn.wv"], cfg.heads)
+        if cfg.kind == "llama":
+            q, k = _rope(q, positions), _rope(k, positions)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        neg = jnp.finfo(jnp.float32).min
+        scores = jnp.where(jnp.tril(jnp.ones((s, s), bool))[None, None], scores, neg)
+        att = jax.nn.softmax(scores, axis=-1)
+        out = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, vv))
+        x = x + out @ p[pre + "attn.wo"]
+        x = x + _mlp(cfg, p, ones, pre, _norm(cfg, x, p[pre + "ln2"]), False)
+        # pad K/V to the model's max seq for a fixed-shape decode cache
+        pad = cfg.seq - s
+        ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    x = _norm(cfg, x, p["final_norm"])
+    logits = x[:, -1] @ p["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    masks: Masks,
+    kcache: jnp.ndarray,
+    vcache: jnp.ndarray,
+    token: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. token: (batch,) int32; pos: () int32 — the index the
+    new token occupies. Returns (logits, K', V')."""
+    p = apply_masks(cfg, params, masks)
+    ones = {n: jnp.ones_like(m) for n, m in masks.items()}
+    bsz = token.shape[0]
+    x = p["tok_emb"][token][:, None]  # (b, 1, e)
+    if cfg.kind == "gpt2":
+        x = x + jax.lax.dynamic_slice_in_dim(p["pos_emb"], pos, 1)[None]
+    positions = pos[None]
+    new_k, new_v = [], []
+    valid = (jnp.arange(cfg.seq) <= pos)[None, None, None, :]  # (1,1,1,S)
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        xn = _norm(cfg, x, p[pre + "ln1"])
+        q = _split_heads(xn @ p[pre + "attn.wq"], cfg.heads)  # (b,h,1,d)
+        k1 = _split_heads(xn @ p[pre + "attn.wk"], cfg.heads)
+        v1 = _split_heads(xn @ p[pre + "attn.wv"], cfg.heads)
+        if cfg.kind == "llama":
+            q, k1 = _rope(q, positions), _rope(k1, positions)
+        kc = jax.lax.dynamic_update_slice(
+            kcache[i], k1, (0, 0, pos.astype(jnp.int32), 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            vcache[i], v1, (0, 0, pos.astype(jnp.int32), 0)
+        )
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kc) / math.sqrt(cfg.head_dim)
+        neg = jnp.finfo(jnp.float32).min
+        scores = jnp.where(valid, scores, neg)
+        att = jax.nn.softmax(scores, axis=-1)
+        out = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, vc))
+        x = x + out @ p[pre + "attn.wo"]
+        x = x + _mlp(cfg, p, ones, pre, _norm(cfg, x, p[pre + "ln2"]), False)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = _norm(cfg, x, p["final_norm"])
+    logits = x[:, 0] @ p["lm_head"]
+    _ = bsz
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

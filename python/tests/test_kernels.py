@@ -1,0 +1,173 @@
+"""L1 kernel correctness: Pallas BSpMM + fused MLP vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/blocks/sparsities/dtypes (per DESIGN.md §9); a few
+pinned cases guard the exact geometries that get AOT'd for Rust.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.bspmm import bspmm
+from compile.kernels.fused_mlp import fused_gate, fused_mlp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_mask(rng, kb, nb, sparsity):
+    """Random block mask with approximately the requested sparsity."""
+    n_total = kb * nb
+    n_zero = min(n_total - 1, int(round(sparsity * n_total)))
+    flat = np.ones(n_total, np.float32)
+    flat[rng.choice(n_total, size=n_zero, replace=False)] = 0.0
+    return jnp.asarray(flat.reshape(kb, nb))
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([16, 32, 64, 96]),          # m
+    st.sampled_from([32, 64, 96, 128]),         # k
+    st.sampled_from([32, 64, 128]),             # n
+    st.sampled_from([16, 32]),                  # block
+    st.floats(min_value=0.0, max_value=0.95),   # sparsity
+    st.integers(min_value=0, max_value=2**31),  # seed
+)
+
+
+@hypothesis.given(shape_strategy)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_bspmm_matches_ref_hypothesis(args):
+    m, k, n, b, sparsity, seed = args
+    hypothesis.assume(k % b == 0 and n % b == 0)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    mask = rand_mask(rng, k // b, n // b, sparsity)
+    got = bspmm(x, w, mask, block=b)
+    want = ref.bspmm_ref(x, w, mask, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("blk_m", [8, 16, 64])
+def test_bspmm_blk_m_sweep(blk_m):
+    """blk_M (the paper's dense-operand tile height) must not change results."""
+    rng = np.random.default_rng(7)
+    m, k, n, b = 64, 64, 96, 32
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    mask = rand_mask(rng, k // b, n // b, 0.5)
+    got = bspmm(x, w, mask, block=b, blk_m=blk_m)
+    want = ref.bspmm_ref(x, w, mask, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_bspmm_fully_sparse_is_zero():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    mask = jnp.zeros((2, 2), jnp.float32)
+    assert float(jnp.abs(bspmm(x, w, mask, block=32)).max()) == 0.0
+
+
+def test_bspmm_dense_mask_equals_matmul():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    mask = jnp.ones((2, 2), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(bspmm(x, w, mask, block=32)), np.asarray(x @ w), atol=1e-4
+    )
+
+
+def test_bspmm_bf16():
+    """Paper reports BF16 results (§5.1); interpret-mode must agree too."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.bfloat16)
+    mask = rand_mask(rng, 2, 2, 0.5)
+    got = bspmm(x, w, mask, block=32)
+    want = ref.bspmm_ref(x, w, mask, 32)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=0.15
+    )
+
+
+mlp_strategy = st.tuples(
+    st.sampled_from([16, 32, 64]),              # m (rows)
+    st.sampled_from([32, 64]),                  # k (emb)
+    st.sampled_from([32, 64, 128]),             # f (ffn)
+    st.floats(min_value=0.0, max_value=0.95),   # sparsity
+    st.integers(min_value=0, max_value=2**31),  # seed
+)
+
+
+@hypothesis.given(mlp_strategy)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_fused_mlp_matches_ref_hypothesis(args):
+    m, k, f, sparsity, seed = args
+    b = 32
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w1 = jnp.asarray(0.2 * rng.normal(size=(k, f)), jnp.float32)
+    w2 = jnp.asarray(0.2 * rng.normal(size=(k, f)), jnp.float32)
+    w3 = jnp.asarray(0.2 * rng.normal(size=(f, k)), jnp.float32)
+    m1 = rand_mask(rng, k // b, f // b, sparsity)
+    m2 = rand_mask(rng, k // b, f // b, sparsity)
+    m3 = rand_mask(rng, f // b, k // b, sparsity)
+    got = fused_mlp(x, w1, w2, w3, m1, m2, m3, block=b)
+    want = ref.fused_mlp_ref(x, w1, w2, w3, m1, m2, m3, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)
+
+
+def test_fused_gate_silu_epilogue():
+    """The gate kernel's fused epilogue == unfused silu(XW1)*(XW2)."""
+    rng = np.random.default_rng(11)
+    m, k, f, b = 32, 64, 96, 32
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w1 = jnp.asarray(0.3 * rng.normal(size=(k, f)), jnp.float32)
+    w2 = jnp.asarray(0.3 * rng.normal(size=(k, f)), jnp.float32)
+    m1 = rand_mask(rng, k // b, f // b, 0.3)
+    m2 = rand_mask(rng, k // b, f // b, 0.3)
+    got = fused_gate(x, w1, w2, m1, m2, block=b)
+    want = ref.silu(ref.bspmm_ref(x, w1, m1, b)) * ref.bspmm_ref(x, w2, m2, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_fused_mlp_pruned_blocks_do_not_contribute():
+    """Zeroed blocks must not affect the output even if W has garbage there."""
+    rng = np.random.default_rng(13)
+    m, k, f, b = 32, 64, 64, 32
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(k, f)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(k, f)), jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(f, k)), jnp.float32)
+    m1 = rand_mask(rng, 2, 2, 0.5)
+    m2 = rand_mask(rng, 2, 2, 0.5)
+    m3 = rand_mask(rng, 2, 2, 0.5)
+    base = fused_mlp(x, w1, w2, w3, m1, m2, m3, block=b)
+    # poison the pruned blocks of w1 with huge values
+    poison = np.asarray(w1).copy()
+    em1 = np.asarray(ref.expand_mask(m1, b))
+    poison[em1 == 0] = 1e9
+    got = fused_mlp(x, jnp.asarray(poison), w2, w3, m1, m2, m3, block=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), atol=1e-4)
+
+
+def test_aot_kernel_shapes_pinned():
+    """Guard the exact shapes aot.py exports for the Rust composition test."""
+    from compile.aot import KERNEL_SHAPES
+
+    m, k, n, b = KERNEL_SHAPES["bspmm_pallas"]
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    mask = rand_mask(rng, k // b, n // b, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(bspmm(x, w, mask, block=b)),
+        np.asarray(ref.bspmm_ref(x, w, mask, b)),
+        atol=1e-4,
+    )

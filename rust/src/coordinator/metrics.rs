@@ -1,0 +1,111 @@
+//! Serving metrics: TTFT / end-to-end latency distributions, decode
+//! throughput, queueing stats — the observables behind the Fig. 6
+//! end-to-end reproduction.
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Welford};
+
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    ttft: Welford,
+    e2e: Welford,
+    queue_wait: Welford,
+    ttft_samples: Vec<f64>,
+    e2e_samples: Vec<f64>,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub requests_done: u64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            ttft: Welford::new(),
+            e2e: Welford::new(),
+            queue_wait: Welford::new(),
+            ttft_samples: Vec::new(),
+            e2e_samples: Vec::new(),
+            tokens_generated: 0,
+            prefill_tokens: 0,
+            requests_done: 0,
+        }
+    }
+
+    pub fn record_request(
+        &mut self,
+        queue_secs: f64,
+        ttft_secs: f64,
+        e2e_secs: f64,
+        prompt_tokens: usize,
+        new_tokens: usize,
+    ) {
+        self.queue_wait.push(queue_secs);
+        self.ttft.push(ttft_secs);
+        self.e2e.push(e2e_secs);
+        self.ttft_samples.push(ttft_secs);
+        self.e2e_samples.push(e2e_secs);
+        self.prefill_tokens += prompt_tokens as u64;
+        self.tokens_generated += new_tokens as u64;
+        self.requests_done += 1;
+    }
+
+    /// Decode throughput since startup (tokens/s).
+    pub fn throughput(&self) -> f64 {
+        self.tokens_generated as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn ttft_mean(&self) -> f64 {
+        self.ttft.mean()
+    }
+
+    pub fn e2e_p50(&self) -> f64 {
+        percentile(&self.e2e_samples, 50.0)
+    }
+
+    pub fn e2e_p99(&self) -> f64 {
+        percentile(&self.e2e_samples, 99.0)
+    }
+
+    pub fn queue_wait_mean(&self) -> f64 {
+        self.queue_wait.mean()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s ttft_mean={:.1}ms e2e_p50={:.1}ms e2e_p99={:.1}ms",
+            self.requests_done,
+            self.tokens_generated,
+            self.throughput(),
+            self.ttft_mean() * 1e3,
+            self.e2e_p50() * 1e3,
+            self.e2e_p99() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = ServeMetrics::new();
+        for i in 0..10 {
+            m.record_request(0.001, 0.01 + i as f64 * 0.001, 0.1, 8, 16);
+        }
+        assert_eq!(m.requests_done, 10);
+        assert_eq!(m.tokens_generated, 160);
+        assert!(m.e2e_p50() > 0.0);
+        assert!(m.e2e_p99() >= m.e2e_p50());
+        assert!(m.summary().contains("requests=10"));
+    }
+}

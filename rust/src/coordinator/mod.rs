@@ -1,0 +1,16 @@
+//! Inference serving coordinator (L3).
+//!
+//! The vLLM-router-shaped component: a bounded admission queue, a
+//! continuous batcher that multiplexes decode rounds across active
+//! sequences, per-request KV sessions over the shared block-sparse
+//! [`crate::model::Engine`], and latency/throughput metrics. All pure
+//! scheduling logic lives in [`router`] (deterministically unit- and
+//! property-tested); [`server`] adds the threads.
+
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use metrics::ServeMetrics;
+pub use router::{Batcher, BatcherConfig, Request, Session};
+pub use server::{Completion, Coordinator};

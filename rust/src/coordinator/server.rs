@@ -1,0 +1,355 @@
+//! Threaded serving front-end: a scheduler thread drives the continuous
+//! batcher over engine sessions; clients submit requests through a bounded
+//! channel and receive completions on another.
+//!
+//! Each active session owns a KV cache; the shared block-sparse weights
+//! live in one `Arc<Engine>`. Decode rounds touch every active session
+//! once (continuous batching), so short requests retire early and free
+//! their slot for waiting requests — the Orca/vLLM scheduling shape, with
+//! the paper's sparse MLP on the hot path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::router::{Batcher, BatcherConfig, Request};
+use crate::model::engine::{Engine, KvCache};
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub queue_secs: f64,
+    pub ttft_secs: f64,
+    pub e2e_secs: f64,
+    pub error: Option<String>,
+}
+
+struct Timing {
+    submitted: Instant,
+    admitted: Option<Instant>,
+    first_token: Option<Instant>,
+}
+
+pub struct Coordinator {
+    tx: SyncSender<Request>,
+    completions: Receiver<Completion>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the scheduler over an engine.
+    pub fn start(engine: Arc<Engine>, cfg: BatcherConfig) -> Coordinator {
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
+        let stop2 = stop.clone();
+        let metrics2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            scheduler_loop(engine, cfg, rx, ctx, stop2, metrics2);
+        });
+        Coordinator {
+            tx,
+            completions: crx,
+            stop,
+            metrics,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a request; `Err` = queue full (backpressure) or shut down.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(r)) => anyhow::bail!("queue full, rejected request {}", r.id),
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("coordinator stopped"),
+        }
+    }
+
+    /// Block for the next completion.
+    pub fn next_completion(&self, timeout: Duration) -> Option<Completion> {
+        self.completions.recv_timeout(timeout).ok()
+    }
+
+    pub fn metrics_summary(&self) -> String {
+        self.metrics.lock().unwrap().summary()
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.metrics.lock().unwrap().throughput()
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.worker.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn scheduler_loop(
+    engine: Arc<Engine>,
+    cfg: BatcherConfig,
+    rx: Receiver<Request>,
+    ctx: Sender<Completion>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+) {
+    let mut batcher = Batcher::new(cfg);
+    let mut caches: HashMap<u64, KvCache> = HashMap::new();
+    let mut timing: HashMap<u64, Timing> = HashMap::new();
+    while !stop.load(Ordering::Relaxed) {
+        // drain the submission channel into the waiting queue
+        loop {
+            match rx.recv_timeout(if batcher.idle() {
+                Duration::from_millis(20)
+            } else {
+                Duration::ZERO
+            }) {
+                Ok(req) => {
+                    timing.insert(
+                        req.id,
+                        Timing {
+                            submitted: Instant::now(),
+                            admitted: None,
+                            first_token: None,
+                        },
+                    );
+                    if !batcher.enqueue(req) {
+                        // bounded-queue overflow (should not happen: the
+                        // channel is the same size) — report as error
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if batcher.idle() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+
+        if batcher.idle() {
+            continue;
+        }
+
+        // admit + prefill new sessions
+        for idx in batcher.admit() {
+            let s = &mut batcher.active_mut()[idx];
+            let id = s.req.id;
+            if let Some(t) = timing.get_mut(&id) {
+                t.admitted = Some(Instant::now());
+            }
+            let mut cache = engine.new_cache();
+            match engine.prefill(&s.req.prompt, &mut cache) {
+                Ok(logits) => {
+                    let tok = Engine::argmax(&logits);
+                    s.output.push(tok);
+                    s.prefilled = true;
+                    if let Some(t) = timing.get_mut(&id) {
+                        t.first_token = Some(Instant::now());
+                    }
+                    caches.insert(id, cache);
+                }
+                Err(e) => {
+                    ctx.send(Completion {
+                        id,
+                        tokens: vec![],
+                        queue_secs: 0.0,
+                        ttft_secs: 0.0,
+                        e2e_secs: 0.0,
+                        error: Some(e.to_string()),
+                    })
+                    .ok();
+                    s.output = vec![0; s.req.max_new]; // force retirement
+                    s.prefilled = true;
+                }
+            }
+        }
+
+        // one continuous-batching decode round
+        for s in batcher.active_mut() {
+            if !s.prefilled || s.finished() {
+                continue;
+            }
+            let id = s.req.id;
+            let cache = caches.get_mut(&id).unwrap();
+            let last = *s.output.last().unwrap();
+            match engine.decode(last, cache) {
+                Ok(logits) => s.output.push(Engine::argmax(&logits)),
+                Err(_) => {
+                    // KV exhausted → finish what we have
+                    s.req.max_new = s.output.len();
+                }
+            }
+        }
+
+        // retire finished sessions
+        for s in batcher.end_round() {
+            let id = s.req.id;
+            caches.remove(&id);
+            let t = timing.remove(&id);
+            let now = Instant::now();
+            let (queue_secs, ttft_secs, e2e_secs) = match &t {
+                Some(t) => (
+                    t.admitted
+                        .map(|a| (a - t.submitted).as_secs_f64())
+                        .unwrap_or(0.0),
+                    t.first_token
+                        .map(|f| (f - t.submitted).as_secs_f64())
+                        .unwrap_or(0.0),
+                    (now - t.submitted).as_secs_f64(),
+                ),
+                None => (0.0, 0.0, 0.0),
+            };
+            metrics.lock().unwrap().record_request(
+                queue_secs,
+                ttft_secs,
+                e2e_secs,
+                s.req.prompt.len(),
+                s.output.len(),
+            );
+            ctx.send(Completion {
+                id,
+                tokens: s.output,
+                queue_secs,
+                ttft_secs,
+                e2e_secs,
+                error: None,
+            })
+            .ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{ModelKind, NativeConfig};
+    use crate::model::engine::MlpMode;
+    use crate::model::params::ParamStore;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn tiny_engine() -> Arc<Engine> {
+        let cfg = NativeConfig {
+            name: "t".into(),
+            kind: ModelKind::Llama,
+            vocab: 32,
+            emb: 16,
+            ffn: 32,
+            layers: 1,
+            heads: 2,
+            max_seq: 32,
+            block: 8,
+        };
+        let mut rng = Rng::new(1);
+        let mut s = ParamStore::new();
+        let e = cfg.emb;
+        s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.1, &mut rng));
+        for i in 0..cfg.layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+            for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                s.insert(p(w), Tensor::randn(&[e, e], 0.1, &mut rng));
+            }
+            s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+            for (n, r, c) in cfg.mlp_shapes() {
+                s.insert(p(n), Tensor::randn(&[r, c], 0.1, &mut rng));
+            }
+        }
+        s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+        s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
+        Arc::new(Engine::new(cfg, &s, &BTreeMap::new(), MlpMode::Sparse).unwrap())
+    }
+
+    #[test]
+    fn serves_batch_of_requests_end_to_end() {
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 3,
+                max_queue: 16,
+            },
+        );
+        let n = 8;
+        for i in 0..n {
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt: vec![1, 2, 3],
+                    max_new: 5,
+                    eos: None,
+                })
+                .unwrap();
+        }
+        let mut done = Vec::new();
+        for _ in 0..n {
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .expect("completion");
+            assert!(c.error.is_none(), "{:?}", c.error);
+            assert_eq!(c.tokens.len(), 5);
+            assert!(c.e2e_secs >= c.ttft_secs);
+            done.push(c.id);
+        }
+        done.sort_unstable();
+        assert_eq!(done, (0..n).collect::<Vec<_>>());
+        coord.stop();
+    }
+
+    #[test]
+    fn identical_prompts_get_identical_outputs() {
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start(engine, BatcherConfig::default());
+        for i in 0..2 {
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt: vec![4, 4, 4],
+                    max_new: 6,
+                    eos: None,
+                })
+                .unwrap();
+        }
+        let a = coord.next_completion(Duration::from_secs(30)).unwrap();
+        let b = coord.next_completion(Duration::from_secs(30)).unwrap();
+        assert_eq!(a.tokens, b.tokens, "greedy decode must be deterministic");
+        coord.stop();
+    }
+
+    #[test]
+    fn overlong_prompt_reports_error() {
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start(engine, BatcherConfig::default());
+        coord
+            .submit(Request {
+                id: 0,
+                prompt: vec![1; 100],
+                max_new: 4,
+                eos: None,
+            })
+            .unwrap();
+        let c = coord.next_completion(Duration::from_secs(30)).unwrap();
+        assert!(c.error.is_some());
+        coord.stop();
+    }
+}

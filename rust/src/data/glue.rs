@@ -1,0 +1,271 @@
+//! Synthetic GLUE-like benchmark (Table 1 substitution).
+//!
+//! Five binary sequence-classification tasks named after the GLUE subset
+//! the paper uses. Each task generates `(seq, feat)` float sequences whose
+//! label depends on a task-specific linear-temporal rule, with a per-task
+//! noise level chosen so the *difficulty spread* resembles the paper's
+//! (WNLI near-chance, SST-2 easy, CoLA in between — compare Table 1's
+//! dense row). The fine-tuning protocol, and the claim under test
+//! (robustness of accuracy to sparsity level and block size), carry over
+//! unchanged.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlueTask {
+    CoLA,
+    Sst2,
+    Mrpc,
+    Rte,
+    Wnli,
+}
+
+impl GlueTask {
+    pub fn all() -> [GlueTask; 5] {
+        [
+            GlueTask::CoLA,
+            GlueTask::Sst2,
+            GlueTask::Mrpc,
+            GlueTask::Rte,
+            GlueTask::Wnli,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::CoLA => "CoLA",
+            GlueTask::Sst2 => "SST-2",
+            GlueTask::Mrpc => "MRPC",
+            GlueTask::Rte => "RTE",
+            GlueTask::Wnli => "WNLI",
+        }
+    }
+
+    /// Metric reported in Table 1.
+    pub fn metric(&self) -> &'static str {
+        match self {
+            GlueTask::CoLA => "Matt. Corr",
+            GlueTask::Mrpc => "ACC/F1",
+            _ => "ACC",
+        }
+    }
+
+    /// Label-noise rate — sets the achievable ceiling per task.
+    fn noise(&self) -> f64 {
+        match self {
+            GlueTask::CoLA => 0.20,
+            GlueTask::Sst2 => 0.05,
+            GlueTask::Mrpc => 0.15,
+            GlueTask::Rte => 0.25,
+            GlueTask::Wnli => 0.48, // near-chance, like the paper's 56.34
+        }
+    }
+
+    fn seed_tag(&self) -> u64 {
+        match self {
+            GlueTask::CoLA => 0xC01A,
+            GlueTask::Sst2 => 0x5572,
+            GlueTask::Mrpc => 0x3390,
+            GlueTask::Rte => 0x0973,
+            GlueTask::Wnli => 0x3311,
+        }
+    }
+}
+
+/// One classification batch in the AOT ABI layout.
+#[derive(Clone, Debug)]
+pub struct GlueBatch {
+    /// (batch * seq * feat) features, row-major.
+    pub features: Vec<f32>,
+    /// (batch) labels in {0, 1}.
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub feat: usize,
+}
+
+/// Deterministic task generator.
+pub struct GlueGen {
+    task: GlueTask,
+    seq: usize,
+    feat: usize,
+    /// Hidden direction defining the decision rule.
+    w: Vec<f32>,
+    rng: Rng,
+}
+
+impl GlueGen {
+    pub fn new(task: GlueTask, seq: usize, feat: usize, seed: u64) -> GlueGen {
+        // the hidden decision rule `w` is a function of (task, seed) ONLY —
+        // train and eval streams must share it (they differ in the example
+        // stream, reseeded via `reseed_stream`)
+        let mut wrng = Rng::new(seed ^ task.seed_tag());
+        let w = wrng.normal_vec(feat, 1.0);
+        let rng = Rng::new(seed ^ task.seed_tag() ^ 0x5EED_0001);
+        GlueGen {
+            task,
+            seq,
+            feat,
+            w,
+            rng,
+        }
+    }
+
+    /// Switch to an independent example stream (same task rule).
+    pub fn reseed_stream(&mut self, tag: u64) {
+        self.rng = Rng::new(tag ^ 0xE7A1_0000_0000);
+    }
+
+    pub fn task(&self) -> GlueTask {
+        self.task
+    }
+
+    /// Draw one example: features + true label (possibly noise-flipped).
+    fn example(&mut self) -> (Vec<f32>, i32) {
+        let mut x = self.rng.normal_vec(self.seq * self.feat, 1.0);
+        // the signal lives in the mean projection onto w, modulated by a
+        // simple temporal pattern (first half vs second half contrast)
+        let label = self.rng.below(2) as i32;
+        let sign = if label == 1 { 1.0 } else { -1.0 };
+        let half = self.seq / 2;
+        for s in 0..self.seq {
+            let amp = if s < half { 1.0 } else { -1.0 };
+            for f in 0..self.feat {
+                x[s * self.feat + f] += sign * amp * self.w[f] / (self.feat as f32).sqrt() * 3.0;
+            }
+        }
+        let noisy = if self.rng.f64() < self.task.noise() {
+            1 - label
+        } else {
+            label
+        };
+        (x, noisy)
+    }
+
+    pub fn batch(&mut self, batch: usize) -> GlueBatch {
+        let mut features = Vec::with_capacity(batch * self.seq * self.feat);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (x, y) = self.example();
+            features.extend_from_slice(&x);
+            labels.push(y);
+        }
+        GlueBatch {
+            features,
+            labels,
+            batch,
+            seq: self.seq,
+            feat: self.feat,
+        }
+    }
+
+    /// Fixed held-out set for scoring — same task rule, independent stream.
+    pub fn eval_set(task: GlueTask, seq: usize, feat: usize, seed: u64, n: usize, batch: usize) -> Vec<GlueBatch> {
+        let mut g = GlueGen::new(task, seq, feat, seed);
+        g.reseed_stream(seed);
+        (0..n).map(|_| g.batch(batch)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_balanced_and_deterministic() {
+        let mut g = GlueGen::new(GlueTask::Sst2, 8, 16, 1);
+        let b = g.batch(200);
+        let ones: i32 = b.labels.iter().sum();
+        assert!((60..140).contains(&ones), "unbalanced: {ones}");
+        let mut g2 = GlueGen::new(GlueTask::Sst2, 8, 16, 1);
+        let b2 = g2.batch(200);
+        assert_eq!(b.labels, b2.labels);
+        assert_eq!(b.features, b2.features);
+    }
+
+    #[test]
+    fn linear_probe_separates_sst2_but_not_wnli() {
+        // score examples by the hidden rule itself: SST-2 should be highly
+        // separable, WNLI near chance (by construction of the noise rates)
+        for (task, lo, hi) in [(GlueTask::Sst2, 0.85, 1.0), (GlueTask::Wnli, 0.40, 0.65)] {
+            let mut g = GlueGen::new(task, 8, 16, 3);
+            let w = g.w.clone();
+            let b = g.batch(400);
+            let mut correct = 0;
+            for i in 0..400 {
+                let x = &b.features[i * 8 * 16..(i + 1) * 8 * 16];
+                let mut first = 0.0;
+                let mut second = 0.0;
+                for s in 0..8 {
+                    let proj: f32 = (0..16).map(|f| x[s * 16 + f] * w[f]).sum();
+                    if s < 4 {
+                        first += proj;
+                    } else {
+                        second += proj;
+                    }
+                }
+                let pred = if first - second > 0.0 { 1 } else { 0 };
+                if pred == b.labels[i] {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / 400.0;
+            assert!(
+                (lo..=hi).contains(&acc),
+                "{}: probe acc {acc} outside [{lo},{hi}]",
+                task.name()
+            );
+        }
+    }
+
+    #[test]
+    fn task_metadata() {
+        assert_eq!(GlueTask::all().len(), 5);
+        assert_eq!(GlueTask::CoLA.metric(), "Matt. Corr");
+        assert_eq!(GlueTask::Mrpc.metric(), "ACC/F1");
+    }
+}
+
+#[cfg(test)]
+mod eval_consistency {
+    use super::*;
+
+    /// Regression test for the eval-mismatch bug: train and eval streams
+    /// must share the SAME hidden rule (w), differing only in examples.
+    #[test]
+    fn eval_set_shares_task_rule_with_training() {
+        let (seq, feat, seed) = (8, 16, 42);
+        let train_gen = GlueGen::new(GlueTask::Sst2, seq, feat, seed);
+        let w = train_gen.w.clone();
+        // score the eval set with the TRAINING generator's rule
+        let eval = GlueGen::eval_set(GlueTask::Sst2, seq, feat, seed, 4, 64);
+        let mut correct = 0;
+        let mut total = 0;
+        for b in &eval {
+            for i in 0..b.batch {
+                let x = &b.features[i * seq * feat..(i + 1) * seq * feat];
+                let mut first = 0.0;
+                let mut second = 0.0;
+                for s in 0..seq {
+                    let proj: f32 = (0..feat).map(|f| x[s * feat + f] * w[f]).sum();
+                    if s < seq / 2 {
+                        first += proj;
+                    } else {
+                        second += proj;
+                    }
+                }
+                let pred = if first - second > 0.0 { 1 } else { 0 };
+                if pred == b.labels[i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.85, "train rule must classify eval set: acc {acc}");
+        // and the eval stream is genuinely different data
+        let mut train_gen2 = GlueGen::new(GlueTask::Sst2, seq, feat, seed);
+        let tb = train_gen2.batch(64);
+        assert_ne!(tb.features, eval[0].features);
+    }
+}

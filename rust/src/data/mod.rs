@@ -1,0 +1,24 @@
+//! Synthetic data substrates (DESIGN.md §6 substitutions).
+//!
+//! The paper trains on OpenWebText, GLUE and CIFAR-10 — none of which are
+//! available in this offline environment. Each generator below preserves
+//! the property the corresponding experiment actually measures:
+//!
+//! * [`corpus`] — a Markov-chain language with Zipf-distributed unigram
+//!   frequencies and controllable entropy: learnable structure so
+//!   perplexity *differences between sparsification settings* (Tables 2,
+//!   4–6) are meaningful.
+//! * [`glue`] — five binary sequence-classification tasks with a spread of
+//!   difficulty and the paper's metric types (Matthews corr, accuracy,
+//!   acc/F1) for the Table 1 fine-tuning protocol.
+//! * [`cifar`] — a 10-class procedural image set (class-dependent spatial
+//!   frequency patterns + noise), pre-patchified for the ViT twin
+//!   (Table 3, Fig. 9).
+
+pub mod cifar;
+pub mod corpus;
+pub mod glue;
+
+pub use cifar::CifarSim;
+pub use corpus::{Corpus, LmBatch};
+pub use glue::{GlueTask, GlueBatch};

@@ -1,0 +1,254 @@
+//! Classification experiments: Table 1 (GLUE fine-tuning), Table 3 (ViT
+//! accuracy vs sparsity), Fig. 9 (ViT accuracy per PFLOP).
+
+use anyhow::Result;
+
+use crate::data::cifar::CifarSim;
+use crate::data::glue::{GlueGen, GlueTask};
+use crate::model::config::{ModelKind, NativeConfig};
+use crate::perf::flops;
+use crate::runtime::Runtime;
+use crate::sparsify::SparsitySchedule;
+use crate::testkit::bench::Table;
+use crate::train::classify::{ClassifyTrainer, ClsBatch};
+use crate::train::pretrain::PretrainOptions;
+use crate::util::cli::Args;
+
+fn glue_batches(task: GlueTask, seq: usize, feat: usize, seed: u64, n: usize, batch: usize) -> Vec<ClsBatch> {
+    let mut g = GlueGen::new(task, seq, feat, seed);
+    (0..n)
+        .map(|_| {
+            let b = g.batch(batch);
+            ClsBatch {
+                features: b.features,
+                labels: b.labels,
+            }
+        })
+        .collect()
+}
+
+fn glue_eval_batches(task: GlueTask, seq: usize, feat: usize, seed: u64, n: usize, batch: usize) -> Vec<ClsBatch> {
+    GlueGen::eval_set(task, seq, feat, seed, n, batch)
+        .into_iter()
+        .map(|b| ClsBatch {
+            features: b.features,
+            labels: b.labels,
+        })
+        .collect()
+}
+
+/// Table 1: fine-tune the GLUE twin from a dense checkpoint under
+/// (sparsity, block) grids; report per-task metrics + average score.
+pub fn tab1(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let quick = args.get_bool("quick");
+    let pre_steps = args.get_usize("pre-steps", if quick { 25 } else { 50 });
+    let ft_steps = args.get_usize("steps", if quick { 25 } else { 50 });
+    let sparsities = args.get_f64_list("sparsities", if quick { &[0.9] } else { &[0.7, 0.8, 0.9, 0.95] });
+    let mults = args.get_usize_list("mults", if quick { &[1] } else { &[1, 2, 4] }); // b = 32, 64, 128
+    let cfg = rt.manifest().config("glue-sim")?.clone();
+    let (seq, feat, batch) = (cfg.seq - 1, cfg.patch_dim, cfg.batch);
+    let eval_n = args.get_usize("eval-batches", 8);
+    let seed: u64 = 0x61e5;
+
+    let mut table = Table::new(
+        "Tab.1 — GLUE-sim fine-tuning (paper: robust to s and b; dense avg 66.13)",
+        &["config", "CoLA(mcc)", "SST-2(acc)", "MRPC(acc/f1)", "RTE(acc)", "WNLI(acc)", "Avg"],
+    );
+
+    // run one (s, b) config across all five tasks
+    let mut run_grid = |smax: f64, mult: usize, tag: &str, table: &mut Table| -> Result<()> {
+        let mut cells: Vec<String> = vec![tag.to_string()];
+        let mut avg = 0.0;
+        for task in GlueTask::all() {
+            let tseed = seed ^ task.name().len() as u64 * 7919;
+            // 1. dense "pretrained" checkpoint on the task
+            let dense_opts = PretrainOptions {
+                total_iters: pre_steps,
+                s_max: 0.0,
+                step_size: 5,
+                seed: tseed,
+                ..Default::default()
+            };
+            let mut dense = ClassifyTrainer::new(&rt, "glue-sim", &dense_opts)?;
+            let train = glue_batches(task, seq, feat, tseed, pre_steps + ft_steps, batch);
+            for (i, b) in train.iter().take(pre_steps).enumerate() {
+                dense.train_iteration(i, b)?;
+            }
+            let ckpt = dense.params().clone();
+            // 2. sparsify + recover (or keep training dense for tag=dense)
+            let ft_opts = PretrainOptions {
+                total_iters: ft_steps,
+                s_max: smax,
+                step_size: 5,
+                seed: tseed,
+                block_mult: mult,
+                ..Default::default()
+            };
+            let mut ft = ClassifyTrainer::with_params(&rt, "glue-sim", &ft_opts, ckpt)?;
+            for (i, b) in train.iter().skip(pre_steps).enumerate() {
+                ft.train_iteration(i, b)?;
+            }
+            let scores = ft.eval(&glue_eval_batches(task, seq, feat, tseed, eval_n, batch))?;
+            let (cell, score) = match task {
+                GlueTask::CoLA => (format!("{:.1}", scores.matthews * 100.0), scores.matthews * 100.0),
+                GlueTask::Mrpc => (
+                    format!("{:.1}/{:.1}", scores.accuracy * 100.0, scores.f1 * 100.0),
+                    (scores.accuracy + scores.f1) / 2.0 * 100.0,
+                ),
+                _ => (format!("{:.1}", scores.accuracy * 100.0), scores.accuracy * 100.0),
+            };
+            cells.push(cell);
+            avg += score / 5.0;
+        }
+        cells.push(format!("{avg:.1}"));
+        table.row(&cells);
+        Ok(())
+    };
+
+    run_grid(0.0, 1, "Dense", &mut table)?;
+    for &mult in &mults {
+        for &s in &sparsities {
+            run_grid(s, mult, &format!("{:.0}%/{}x{}", s * 100.0, 32 * mult, 32 * mult), &mut table)?;
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+/// Table 3: ViT twin accuracy at increasing sparsity.
+pub fn tab3(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let quick = args.get_bool("quick");
+    let steps = args.get_usize("steps", if quick { 60 } else { 120 });
+    let sparsities = args.get_f64_list("sparsities", &[0.7, 0.8, 0.9, 0.95]);
+    let cfg = rt.manifest().config("vit-sim")?.clone();
+    let eval_n = args.get_usize("eval-batches", 8);
+    let noise = args.get_f64("noise", 1.2) as f32;
+
+    let mut table = Table::new(
+        "Tab.3 — ViT-sim accuracy vs sparsity (paper: few-point drop from dense)",
+        &["config", "accuracy", "final sparsity"],
+    );
+    for smax in std::iter::once(0.0).chain(sparsities.iter().copied()) {
+        let opts = PretrainOptions {
+            total_iters: steps,
+            s_max: smax,
+            step_size: 5,
+            seed: 0x517,
+            ..Default::default()
+        };
+        let mut t = ClassifyTrainer::new(&rt, "vit-sim", &opts)?;
+        let mut gen = CifarSim::new(0x517, noise);
+        for i in 0..steps {
+            let b = gen.batch(cfg.batch);
+            t.train_iteration(
+                i,
+                &ClsBatch {
+                    features: b.patches,
+                    labels: b.labels,
+                },
+            )?;
+        }
+        let eval: Vec<ClsBatch> = CifarSim::eval_set(0x517, noise, eval_n, cfg.batch)
+            .into_iter()
+            .map(|b| ClsBatch {
+                features: b.patches,
+                labels: b.labels,
+            })
+            .collect();
+        let scores = t.eval(&eval)?;
+        let tag = if smax == 0.0 {
+            "Dense".to_string()
+        } else {
+            format!("BLaST-{:.0}%", smax * 100.0)
+        };
+        table.row(&[
+            tag,
+            format!("{:.1}%", scores.accuracy * 100.0),
+            format!("{:.2}", t.mean_sparsity()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Fig. 9: ViT accuracy vs cumulative training FLOPs under the schedule.
+pub fn fig9(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let steps = args.get_usize("steps", 120);
+    let epoch = args.get_usize("epoch", 20);
+    let cfg = rt.manifest().config("vit-sim")?.clone();
+    let noise = args.get_f64("noise", 1.2) as f32;
+    let eval_n = 6;
+
+    let native = NativeConfig {
+        name: cfg.name.clone(),
+        kind: ModelKind::Vit,
+        vocab: cfg.num_classes,
+        emb: cfg.emb,
+        ffn: cfg.ffn,
+        layers: cfg.layers,
+        heads: cfg.heads,
+        max_seq: cfg.seq,
+        block: cfg.block,
+    };
+    let tokens_per_iter = (cfg.batch * cfg.seq) as f64;
+
+    let mut table = Table::new(
+        "Fig.9 — ViT accuracy vs cumulative PFLOP (paper: BLaST better acc/FLOP)",
+        &["iter", "dense acc", "dense GFLOP", "BLaST acc", "BLaST GFLOP"],
+    );
+    let eval: Vec<ClsBatch> = CifarSim::eval_set(0x519, noise, eval_n, cfg.batch)
+        .into_iter()
+        .map(|b| ClsBatch {
+            features: b.patches,
+            labels: b.labels,
+        })
+        .collect();
+
+    let mut run = |smax: f64| -> Result<Vec<(usize, f64, f64)>> {
+        let opts = PretrainOptions {
+            total_iters: steps,
+            s_max: smax,
+            step_size: 5,
+            seed: 0x519,
+            ..Default::default()
+        };
+        let sched = SparsitySchedule::new(0.0, smax.max(1e-9), steps, 0);
+        let mut t = ClassifyTrainer::new(&rt, "vit-sim", &opts)?;
+        let mut gen = CifarSim::new(0x519, noise);
+        let mut out = Vec::new();
+        for i in 0..steps {
+            let b = gen.batch(cfg.batch);
+            t.train_iteration(
+                i,
+                &ClsBatch {
+                    features: b.patches,
+                    labels: b.labels,
+                },
+            )?;
+            if (i + 1) % epoch == 0 {
+                let acc = t.eval(&eval)?.accuracy;
+                let fl = flops::cumulative_train_flops(&native, cfg.seq, tokens_per_iter, &sched, i + 1);
+                out.push((i + 1, acc, fl / 1e9));
+            }
+        }
+        Ok(out)
+    };
+
+    let dense = run(0.0)?;
+    let blast = run(0.9)?;
+    for (d, b) in dense.iter().zip(&blast) {
+        table.row(&[
+            d.0.to_string(),
+            format!("{:.1}%", d.1 * 100.0),
+            format!("{:.1}", d.2),
+            format!("{:.1}%", b.1 * 100.0),
+            format!("{:.1}", b.2),
+        ]);
+    }
+    table.print();
+    println!("\npaper shape: BLaST reaches comparable accuracy with fewer cumulative FLOPs.");
+    Ok(())
+}

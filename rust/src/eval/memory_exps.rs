@@ -1,0 +1,52 @@
+//! Fig. 7 — inference memory footprint / GPU-count model.
+
+use anyhow::Result;
+
+use crate::model::config::paper_catalog;
+use crate::perf::memory::{gpus_required, reduction_factor, weight_bytes};
+use crate::testkit::bench::Table;
+use crate::util::cli::Args;
+
+/// Fig. 7: GH200s (96 GB) required for FP32 weights, dense vs sparse.
+pub fn fig7(args: &Args) -> Result<()> {
+    let block = args.get_usize("block", 128);
+    let sparsities = args.get_f64_list("sparsities", &[0.7, 0.8, 0.9, 0.95]);
+    let mut table = Table::new(
+        "Fig.7 — #GH200 (96GB) for FP32 weights (paper: 405B dense 17 → ~6, 2.9x fewer)",
+        &["model", "dense GB", "dense GPUs", "s", "sparse GB", "sparse GPUs", "GPU ratio", "mem reduction"],
+    );
+    for g in paper_catalog() {
+        if !g.name.starts_with("Llama") {
+            continue;
+        }
+        let dense_b = weight_bytes(&g, 0.0, block);
+        let dense_g = gpus_required(&g, 0.0, block);
+        for &s in &sparsities {
+            let sb = weight_bytes(&g, s, block);
+            let sg = gpus_required(&g, s, block);
+            table.row(&[
+                g.name.to_string(),
+                format!("{:.0}", dense_b / 1e9),
+                dense_g.to_string(),
+                format!("{:.0}%", s * 100.0),
+                format!("{:.0}", sb / 1e9),
+                sg.to_string(),
+                format!("{:.2}x", dense_g as f64 / sg as f64),
+                format!("{:.2}x", reduction_factor(&g, s, block)),
+            ]);
+        }
+    }
+    table.print();
+    println!("\npaper check: Llama-3.1-405B dense needs 17 GPUs; @80% ~6 GPUs (2.8-2.9x).");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_runs() {
+        fig7(&Args::default()).unwrap();
+    }
+}

@@ -1,0 +1,66 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §5).
+//!
+//! Each driver regenerates its table/figure's rows on this testbed and
+//! prints them next to the paper's reference values, so `blast exp <id>`
+//! output can be pasted into EXPERIMENTS.md. Drivers accept `--steps`,
+//! `--quick` and experiment-specific flags; defaults are sized for minutes,
+//! not hours.
+//!
+//! | id    | paper artifact                             | driver            |
+//! |-------|--------------------------------------------|-------------------|
+//! | fig4  | BSpMM kernel speedup sweep                 | [`kernel_exps`]   |
+//! | fig5  | Llama-family MLP speedup                   | [`kernel_exps`]   |
+//! | fig6  | end-to-end inference speedup               | [`kernel_exps`]   |
+//! | fig7  | GPU-count memory model                     | [`memory_exps`]   |
+//! | tab1  | GLUE fine-tuning robustness                | [`classify_exps`] |
+//! | tab2  | pretraining time + perplexity              | [`pretrain_exps`] |
+//! | fig8  | time-per-iteration curves                  | [`pretrain_exps`] |
+//! | tab3  | ViT accuracy vs sparsity                   | [`classify_exps`] |
+//! | fig9  | ViT accuracy per PFLOP                     | [`classify_exps`] |
+//! | tab4  | perplexity vs block size                   | [`pretrain_exps`] |
+//! | fig10 | regrown-block ratio vs block size          | [`pretrain_exps`] |
+//! | tab5  | perplexity vs step_size                    | [`pretrain_exps`] |
+//! | tab6  | perplexity vs sparsity decay d             | [`pretrain_exps`] |
+//! | fig11 | dense-layer placement (left vs right)      | [`pretrain_exps`] |
+
+pub mod classify_exps;
+pub mod kernel_exps;
+pub mod memory_exps;
+pub mod pretrain_exps;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub const ALL: &[&str] = &[
+    "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "fig8", "tab3", "fig9",
+    "tab4", "fig10", "tab5", "tab6", "fig11",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig4" => kernel_exps::fig4(args),
+        "fig5" => kernel_exps::fig5(args),
+        "fig6" => kernel_exps::fig6(args),
+        "fig7" => memory_exps::fig7(args),
+        "tab1" => classify_exps::tab1(args),
+        "tab2" => pretrain_exps::tab2(args),
+        "fig8" => pretrain_exps::fig8(args),
+        "tab3" => classify_exps::tab3(args),
+        "fig9" => classify_exps::fig9(args),
+        "tab4" => pretrain_exps::tab4(args),
+        "fig10" => pretrain_exps::fig10(args),
+        "tab5" => pretrain_exps::tab5(args),
+        "tab6" => pretrain_exps::tab6(args),
+        "fig11" => pretrain_exps::fig11(args),
+        "all" => {
+            for e in ALL {
+                println!("\n################ {e} ################");
+                run(e, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; available: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,363 @@
+//! Pretraining experiments: Table 2, Fig. 8, and the ablations (Tables
+//! 4–6, Figs. 10–11). All drive the AOT `train_step` through
+//! [`crate::train::Trainer`] on the synthetic corpus; geometry is the
+//! `gpt2s-sim` / `llama-sim` scaled twin and iteration counts are scaled
+//! with `--steps` (paper: m = 10,000 over 4.9B tokens; default here: 150).
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::sparsify::SparsitySchedule;
+use crate::testkit::bench::Table;
+use crate::train::pretrain::{PretrainOptions, Trainer};
+use crate::util::cli::Args;
+
+pub fn open_runtime() -> Result<Runtime> {
+    Runtime::open_default()
+}
+
+fn base_opts(args: &Args) -> PretrainOptions {
+    let steps = args.get_usize("steps", 80);
+    PretrainOptions {
+        total_iters: steps,
+        s_init: 0.0,
+        s_max: args.get_f64("smax", 0.8),
+        decay: args.get_usize("decay", 0),
+        step_size: args.get_usize("step-size", 10),
+        dense_right: 0,
+        dense_left: 0,
+        seed: args.get_usize("seed", 0xB1A57) as u64,
+        branching: args.get_usize("branching", 8),
+        block_mult: 1,
+    }
+}
+
+/// Run one pretraining configuration; returns (wall secs, perplexity,
+/// trainer for further inspection).
+fn run_one<'rt>(
+    rt: &'rt Runtime,
+    config: &str,
+    opts: PretrainOptions,
+    eval_batches: usize,
+) -> Result<(f64, f64, Trainer<'rt>)> {
+    let mut t = Trainer::new(rt, config, opts.clone())?;
+    let t0 = std::time::Instant::now();
+    t.run(opts.total_iters)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let ppl = t.eval_perplexity(eval_batches)?;
+    Ok((secs, ppl, t))
+}
+
+/// Table 2: end-to-end pretraining time + perplexity, dense vs BLaST.
+pub fn tab2(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let opts = base_opts(args);
+    let evals = args.get_usize("eval-batches", 8);
+    let mut table = Table::new(
+        "Tab.2 — pretraining wall-clock + PPL (paper: BLaST ~10% faster, small PPL gap)",
+        &["model", "config", "s_max", "b", "step", "d", "time(s)", "PPL"],
+    );
+    for config in ["gpt2s-sim", "llama-sim"] {
+        // dense baseline
+        let dense = PretrainOptions {
+            s_max: 0.0,
+            ..opts.clone()
+        };
+        let (secs, ppl, _) = run_one(&rt, config, dense, evals)?;
+        table.row(&[
+            config.into(),
+            "dense".into(),
+            "0%".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{secs:.1}"),
+            format!("{ppl:.2}"),
+        ]);
+        // BLaST: the Table 2 hyper-parameter shapes, scaled
+        let d_big = (opts.total_iters as f64 * 0.9) as usize;
+        for (smax, mult, step, d, tag) in [
+            (0.80, 4, opts.step_size, d_big, "80%/128"),
+            (0.75, 4, opts.step_size, d_big, "75%/128"),
+            (0.70, 2, opts.step_size, 0, "70%/64"),
+        ] {
+            let o = PretrainOptions {
+                s_max: smax,
+                block_mult: mult,
+                step_size: step,
+                decay: d,
+                dense_right: args.get_usize("dense-right", 1),
+                ..opts.clone()
+            };
+            let (secs, ppl, t) = run_one(&rt, config, o, evals)?;
+            table.row(&[
+                config.into(),
+                format!("BLaST-{tag}"),
+                format!("{:.0}%", smax * 100.0),
+                format!("{}", 32 * mult),
+                format!("{step}"),
+                format!("{d}"),
+                format!("{secs:.1}"),
+                format!("{ppl:.2}"),
+            ]);
+            drop(t);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+/// Fig. 8: per-iteration time. Two series are reported honestly:
+/// the measured HLO step time (mask-regeneration spikes reproduce), and a
+/// native-kernel projection of the MLP share (the AOT graph computes the
+/// masked MLP densely, so the paper's BSpMM-activation drop is projected
+/// from the measured native dense/sparse MLP times at the same geometry —
+/// see EXPERIMENTS.md fig8 notes).
+pub fn fig8(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let opts = PretrainOptions {
+        dense_right: 1,
+        block_mult: 2,
+        ..base_opts(args)
+    };
+    let config = args.get_str("config", "gpt2s-sim");
+    let mut t = Trainer::new(&rt, &config, opts.clone())?;
+    t.run(opts.total_iters)?;
+
+    // native MLP projection at this twin's geometry
+    let cfg = rt.manifest().config(&config)?;
+    let (tok, emb, ffn) = (cfg.batch * cfg.seq, cfg.emb, cfg.ffn);
+    let mut rng = crate::util::rng::Rng::new(8);
+    let x = crate::tensor::Tensor::randn(&[tok, emb], 0.5, &mut rng);
+    let w1 = crate::tensor::Tensor::randn(&[emb, ffn], 0.02, &mut rng);
+    let w3 = crate::tensor::Tensor::randn(&[ffn, emb], 0.02, &mut rng);
+    let mut mlp_native = |s: f64| -> f64 {
+        let b = cfg.block * opts.block_mult;
+        let m1 = crate::sparse::BlockMask::random(emb / b, ffn / b, s, &mut rng.fork(1));
+        let m3 = crate::sparse::BlockMask::random(ffn / b, emb / b, s, &mut rng.fork(2));
+        let s1 = crate::sparse::Bcsc::from_dense(&w1, &m1, b);
+        let s3 = crate::sparse::Bcsc::from_dense(&w3, &m3, b);
+        let meas = crate::testkit::bench::bench_quick("mlp", || {
+            crate::testkit::bench::black_box(crate::kernels::bspmm::gelu_mlp_sparse(&x, &s1, &s3));
+        });
+        meas.secs()
+    };
+    let t_mlp_dense = mlp_native(0.0);
+
+    let mut table = Table::new(
+        &format!(
+            "Fig.8 — time/iteration, {config} (paper: sparse config drops below dense once BSpMM activates)"
+        ),
+        &["iter", "s(i)", "HLO step (ms)", "mask upd", "projected iter (ms): dense", "projected: BLaST"],
+    );
+    let stride = (opts.total_iters / 20).max(1);
+    for l in t.log.iter().filter(|l| l.iter % stride == 0) {
+        // projected = measured step, with the dense-MLP share swapped for
+        // the native sparse-MLP time (x3 for fwd+bwd), per layer
+        let layers = cfg.layers as f64;
+        let t_mlp_s = mlp_native(l.mean_mask_sparsity);
+        let proj_dense = l.secs; // HLO step is already dense-MLP
+        let proj_blast = l.secs + 3.0 * layers * (t_mlp_s - t_mlp_dense);
+        table.row(&[
+            l.iter.to_string(),
+            format!("{:.2}", l.mean_mask_sparsity),
+            format!("{:.1}", l.secs * 1e3),
+            if l.mask_update { "*".into() } else { "".into() },
+            format!("{:.1}", proj_dense * 1e3),
+            format!("{:.1}", proj_blast.max(0.0) * 1e3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Table 4: perplexity vs block size b ∈ {1, 16, 32, 64, 128} @ s=70%.
+pub fn tab4(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let mut opts = base_opts(args);
+    opts.s_max = 0.7;
+    opts.step_size = args.get_usize("step-size", 1); // paper: mask every iter
+    let evals = args.get_usize("eval-batches", 8);
+    let mut table = Table::new(
+        "Tab.4 — PPL vs block size @70% (paper: 1x1 clearly worst, 16..128 similar)",
+        &["b", "config", "PPL", "mean regrown ratio"],
+    );
+    // dense reference
+    let (_, ppl_dense, _) = run_one(
+        &rt,
+        "gpt2s-sim",
+        PretrainOptions {
+            s_max: 0.0,
+            ..opts.clone()
+        },
+        evals,
+    )?;
+    table.row(&["dense".into(), "gpt2s-sim".into(), format!("{ppl_dense:.2}"), "-".into()]);
+    for (b, config, mult) in [
+        (1usize, "gpt2s-sim-b1", 1usize),
+        (16, "gpt2s-sim-b16", 1),
+        (32, "gpt2s-sim", 1),
+        (64, "gpt2s-sim", 2),
+        (128, "gpt2s-sim", 4),
+    ] {
+        let o = PretrainOptions {
+            block_mult: mult,
+            ..opts.clone()
+        };
+        let (_, ppl, t) = run_one(&rt, config, o, evals)?;
+        let ratios: Vec<f64> = t
+            .controller()
+            .history()
+            .iter()
+            .map(|u| u.stats.regrown_ratio)
+            .collect();
+        table.row(&[
+            b.to_string(),
+            config.into(),
+            format!("{ppl:.2}"),
+            format!("{:.3}", crate::util::stats::mean(&ratios)),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Fig. 10: regrown-block ratio over training for each block size.
+pub fn fig10(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let mut opts = base_opts(args);
+    opts.s_max = 0.7;
+    opts.step_size = 1;
+    let mut table = Table::new(
+        "Fig.10 — regrown-block ratio vs iteration (paper: b=1 highest & noisiest)",
+        &["iter", "b=1", "b=16", "b=32", "b=64", "b=128"],
+    );
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    for (config, mult) in [
+        ("gpt2s-sim-b1", 1usize),
+        ("gpt2s-sim-b16", 1),
+        ("gpt2s-sim", 1),
+        ("gpt2s-sim", 2),
+        ("gpt2s-sim", 4),
+    ] {
+        let o = PretrainOptions {
+            block_mult: mult,
+            ..opts.clone()
+        };
+        let mut t = Trainer::new(&rt, config, o)?;
+        t.run(opts.total_iters)?;
+        series.push(
+            t.controller()
+                .history()
+                .iter()
+                .map(|u| u.stats.regrown_ratio)
+                .collect(),
+        );
+    }
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    let stride = (n / 20).max(1);
+    for i in (0..n).step_by(stride) {
+        table.row(&[
+            i.to_string(),
+            format!("{:.3}", series[0][i]),
+            format!("{:.3}", series[1][i]),
+            format!("{:.3}", series[2][i]),
+            format!("{:.3}", series[3][i]),
+            format!("{:.3}", series[4][i]),
+        ]);
+    }
+    table.print();
+    // paper shape: mean ratio at b=1 exceeds blocked variants
+    let means: Vec<f64> = series.iter().map(|s| crate::util::stats::mean(s)).collect();
+    println!("\nmean regrown ratios: b=1 {:.3}, b=16 {:.3}, b=32 {:.3}, b=64 {:.3}, b=128 {:.3}",
+        means[0], means[1], means[2], means[3], means[4]);
+    Ok(())
+}
+
+/// Table 5: perplexity vs step_size (paper: flat until 1000).
+pub fn tab5(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let mut opts = base_opts(args);
+    opts.s_max = 0.7;
+    let evals = args.get_usize("eval-batches", 8);
+    let steps = opts.total_iters;
+    // the paper sweeps 1..1000 over m=10,000; scale the "too large" point
+    // to ~2/3 of total iters
+    let sweep = [1usize, 2, 5, 10, 25, 50, (steps * 2) / 3];
+    let mut table = Table::new(
+        "Tab.5 — PPL vs step_size @32x32, 70% (paper: flat until step_size too large)",
+        &["step_size", "PPL"],
+    );
+    for ss in sweep {
+        let o = PretrainOptions {
+            step_size: ss,
+            ..opts.clone()
+        };
+        let (_, ppl, _) = run_one(&rt, "gpt2s-sim", o, evals)?;
+        table.row(&[ss.to_string(), format!("{ppl:.2}")]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Table 6: perplexity vs decay d (paper: negligible effect).
+pub fn tab6(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let mut opts = base_opts(args);
+    opts.s_max = 0.7;
+    let evals = args.get_usize("eval-batches", 8);
+    let m = opts.total_iters;
+    let mut table = Table::new(
+        "Tab.6 — PPL vs sparsity decay d (paper: flat; earlier SpMM activation for free)",
+        &["d", "d/m", "60%-sparsity reached at iter", "PPL"],
+    );
+    for frac in [0.0, 0.1, 0.4, 0.7, 0.9] {
+        let d = (m as f64 * frac) as usize;
+        let o = PretrainOptions {
+            decay: d,
+            ..opts.clone()
+        };
+        let sched = SparsitySchedule::new(0.0, 0.7, m, d.min(m - 1));
+        let at60 = sched
+            .first_iter_reaching(0.6)
+            .map(|i| i.to_string())
+            .unwrap_or_else(|| "never".into());
+        let (_, ppl, _) = run_one(&rt, "gpt2s-sim", o, evals)?;
+        table.row(&[
+            d.to_string(),
+            format!("{frac:.1}"),
+            at60,
+            format!("{ppl:.2}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Fig. 11: dense-layer placement — keep L MLP blocks dense on the left vs
+/// the right (paper: right placement preserves perplexity better).
+pub fn fig11(args: &Args) -> Result<()> {
+    let rt = open_runtime()?;
+    let mut opts = base_opts(args);
+    opts.s_max = args.get_f64("smax", 0.8);
+    let evals = args.get_usize("eval-batches", 8);
+    let mut table = Table::new(
+        "Fig.11 — PPL vs dense-layer placement (paper: dense-on-the-right wins)",
+        &["L", "side", "PPL"],
+    );
+    let (_, ppl0, _) = run_one(&rt, "gpt2s-sim", opts.clone(), evals)?;
+    table.row(&["0".into(), "-".into(), format!("{ppl0:.2}")]);
+    for l in [1usize, 2] {
+        for (side, left, right) in [("left", l, 0), ("right", 0, l)] {
+            let o = PretrainOptions {
+                dense_left: left,
+                dense_right: right,
+                ..opts.clone()
+            };
+            let (_, ppl, _) = run_one(&rt, "gpt2s-sim", o, evals)?;
+            table.row(&[l.to_string(), side.into(), format!("{ppl:.2}")]);
+        }
+    }
+    table.print();
+    Ok(())
+}

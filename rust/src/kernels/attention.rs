@@ -1,0 +1,182 @@
+//! Dense attention for the native inference engine.
+//!
+//! The paper leaves attention dense (its contribution is MLP sparsity), so
+//! this module provides exactly what the engine needs: a causal prefill
+//! pass over a whole prompt, and a single-position decode pass against a KV
+//! cache. Layout is `(heads, seq, head_dim)` per layer, contiguous.
+
+use crate::kernels::ops::softmax_row;
+use crate::util::threadpool;
+
+/// Causal self-attention over a full sequence (prefill / training-eval).
+///
+/// `q,k,v`: `(heads, seq, hd)` flattened; returns `(seq, heads*hd)` merged.
+pub fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    seq: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; seq * heads * hd];
+    let out_base = out.as_mut_ptr() as usize;
+    threadpool::parallel_for(heads, |h| {
+        let qh = &q[h * seq * hd..(h + 1) * seq * hd];
+        let kh = &k[h * seq * hd..(h + 1) * seq * hd];
+        let vh = &v[h * seq * hd..(h + 1) * seq * hd];
+        let mut scores = vec![0.0f32; seq];
+        for i in 0..seq {
+            let qi = &qh[i * hd..(i + 1) * hd];
+            for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
+                let kj = &kh[j * hd..(j + 1) * hd];
+                *s = dot(qi, kj) * scale;
+            }
+            softmax_row(&mut scores[..i + 1]);
+            // out[i, h*hd..] = sum_j scores[j] * v[j]
+            // SAFETY: each head writes a disjoint column stripe.
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (out_base as *mut f32).add(i * heads * hd + h * hd),
+                    hd,
+                )
+            };
+            orow.fill(0.0);
+            for (j, &w) in scores.iter().enumerate().take(i + 1) {
+                let vj = &vh[j * hd..(j + 1) * hd];
+                for d in 0..hd {
+                    orow[d] += w * vj[d];
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Decode attention for one new position against a KV cache.
+///
+/// `q`: `(heads, hd)` for the new token. `kcache`/`vcache`:
+/// `(heads, max_seq, hd)`; positions `0..=pos` are valid. Returns
+/// `(heads*hd,)` merged.
+pub fn decode_attention(
+    q: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    heads: usize,
+    max_seq: usize,
+    hd: usize,
+    pos: usize,
+) -> Vec<f32> {
+    assert!(pos < max_seq);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; heads * hd];
+    let out_base = out.as_mut_ptr() as usize;
+    threadpool::parallel_for(heads, |h| {
+        let qh = &q[h * hd..(h + 1) * hd];
+        let kh = &kcache[h * max_seq * hd..];
+        let vh = &vcache[h * max_seq * hd..];
+        let mut scores = vec![0.0f32; pos + 1];
+        for (j, s) in scores.iter_mut().enumerate() {
+            *s = dot(qh, &kh[j * hd..(j + 1) * hd]) * scale;
+        }
+        softmax_row(&mut scores);
+        let orow = unsafe {
+            std::slice::from_raw_parts_mut((out_base as *mut f32).add(h * hd), hd)
+        };
+        for (j, &w) in scores.iter().enumerate() {
+            let vj = &vh[j * hd..(j + 1) * hd];
+            for d in 0..hd {
+                orow[d] += w * vj[d];
+            }
+        }
+    });
+    out
+}
+
+#[inline(always)]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Naive single-threaded oracle.
+    fn causal_naive(q: &[f32], k: &[f32], v: &[f32], h: usize, s: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; s * h * d];
+        for hh in 0..h {
+            for i in 0..s {
+                let qi = &q[hh * s * d + i * d..hh * s * d + (i + 1) * d];
+                let mut sc: Vec<f32> = (0..=i)
+                    .map(|j| {
+                        dot(qi, &k[hh * s * d + j * d..hh * s * d + (j + 1) * d])
+                            / (d as f32).sqrt()
+                    })
+                    .collect();
+                softmax_row(&mut sc);
+                for (j, &w) in sc.iter().enumerate() {
+                    for dd in 0..d {
+                        out[i * h * d + hh * d + dd] += w * v[hh * s * d + j * d + dd];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn causal_matches_naive() {
+        let (h, s, d) = (3, 7, 4);
+        let mut rng = Rng::new(1);
+        let q = rng.normal_vec(h * s * d, 1.0);
+        let k = rng.normal_vec(h * s * d, 1.0);
+        let v = rng.normal_vec(h * s * d, 1.0);
+        let got = causal_attention(&q, &k, &v, h, s, d);
+        let want = causal_naive(&q, &k, &v, h, s, d);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn decode_matches_last_row_of_causal() {
+        let (h, s, d) = (2, 6, 4);
+        let mut rng = Rng::new(2);
+        let q = rng.normal_vec(h * s * d, 1.0);
+        let k = rng.normal_vec(h * s * d, 1.0);
+        let v = rng.normal_vec(h * s * d, 1.0);
+        let full = causal_attention(&q, &k, &v, h, s, d);
+        // decode for position s-1 using q's last row per head
+        let mut qlast = vec![0.0f32; h * d];
+        for hh in 0..h {
+            qlast[hh * d..(hh + 1) * d]
+                .copy_from_slice(&q[hh * s * d + (s - 1) * d..hh * s * d + s * d]);
+        }
+        let got = decode_attention(&qlast, &k, &v, h, s, d, s - 1);
+        for hh in 0..h {
+            for dd in 0..d {
+                let want = full[(s - 1) * h * d + hh * d + dd];
+                assert!((got[hh * d + dd] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn first_position_attends_only_to_itself() {
+        let (h, s, d) = (1, 3, 2);
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(h * s * d, 1.0);
+        let k = rng.normal_vec(h * s * d, 1.0);
+        let v = rng.normal_vec(h * s * d, 1.0);
+        let out = causal_attention(&q, &k, &v, h, s, d);
+        assert!((out[0] - v[0]).abs() < 1e-5);
+        assert!((out[1] - v[1]).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,288 @@
+//! BLaST BSpMM — the paper's kernel (§3.3), CPU edition.
+//!
+//! `Y = X @ W` with `W` in BCSC. The structure mirrors Listing 2 of the
+//! paper: for each output block column, stream the surviving blocks,
+//! resolve the dynamic `X` panel via the block-row index (the "pointer
+//! algebra on blk_col_ptr"), and run a dense micro-GEMM per block. Pruned
+//! blocks cost *nothing* — no FLOPs, no loads — which is where the
+//! `1/(1-s)`-shaped speedup over [`gemm`] comes from.
+//!
+//! `blk_M` (the paper's dense-operand tile height) maps to the `MR` row
+//! tile here: the loaded `W` block is reused for `MR` rows of `X`.
+//!
+//! [`fused_mlp_sparse`] extends the kernel over the whole Llama-style MLP
+//! (paper §3.3.3): per row tile the gated hidden state is produced and
+//! consumed in cache — the memory-bound nonlinearity rides along the
+//! compute-bound contractions instead of round-tripping through memory.
+
+use crate::kernels::gemm::axpy;
+use crate::sparse::Bcsc;
+use crate::tensor::Tensor;
+use crate::util::threadpool;
+
+/// Rows of X/Y per task (the paper's blk_M role).
+const MR: usize = 8;
+
+/// `Y = X @ W_bcsc`; allocates the output.
+pub fn bspmm(x: &Tensor, w: &Bcsc) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let (wk, n) = w.shape();
+    assert_eq!(k, wk, "bspmm inner dims {k} vs {wk}");
+    let mut y = Tensor::zeros(&[m, n]);
+    bspmm_into(x.data(), w, y.data_mut(), m);
+    y
+}
+
+/// `Y += X @ W_bcsc` over raw slices.
+pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
+    let (k, n) = w.shape();
+    assert_eq!(x.len(), m * k);
+    assert_eq!(y.len(), m * n);
+    if m == 0 || w.nnzb() == 0 {
+        return;
+    }
+    let b = w.block;
+    let n_row_tiles = m.div_ceil(MR);
+    // task grid: row tiles × block columns; output regions are disjoint
+    let tasks = n_row_tiles * w.cb;
+    let y_base = y.as_mut_ptr() as usize;
+    threadpool::parallel_for(tasks, |t| {
+        let it = t / w.cb;
+        let bc = t % w.cb;
+        let i0 = it * MR;
+        let i1 = (i0 + MR).min(m);
+        let lo = w.col_ptr[bc];
+        let hi = w.col_ptr[bc + 1];
+        if lo == hi {
+            return;
+        }
+        // SAFETY: (row tile, block column) regions of Y are disjoint and
+        // parallel_for blocks until completion.
+        let y_ptr = y_base as *mut f32;
+        for idx in lo..hi {
+            let br = w.row_idx[idx];
+            let blk = w.block_vals(idx);
+            for i in i0..i1 {
+                let xrow = &x[i * k + br * b..i * k + br * b + b];
+                let yrow = unsafe {
+                    std::slice::from_raw_parts_mut(y_ptr.add(i * n + bc * b), b)
+                };
+                // micro-GEMM row: y[b] += sum_kk x[kk] * blk[kk, :]
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv != 0.0 {
+                        axpy(xv, &blk[kk * b..kk * b + b], yrow);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// The three masked matrices of one Llama-style MLP block.
+pub struct FusedMlpWeights<'a> {
+    pub w1: &'a Bcsc, // (e, f) gate
+    pub w2: &'a Bcsc, // (e, f) up
+    pub w3: &'a Bcsc, // (f, e) down
+}
+
+#[inline(always)]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Fused sparse MLP: `Y = (SiLU(X W1) ⊙ (X W2)) W3` (paper Eq. 1).
+///
+/// Per `MR`-row tile the two gate contractions, the SiLU epilogue and the
+/// down-projection all happen on cache-resident tile buffers.
+pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
+    let (m, e) = (x.rows(), x.cols());
+    let (e1, f) = w.w1.shape();
+    let (f2, e2) = w.w3.shape();
+    assert_eq!(e, e1);
+    assert_eq!(w.w2.shape(), (e, f));
+    assert_eq!((f2, e2), (f, e));
+    let mut y = Tensor::zeros(&[m, e]);
+    let n_tiles = m.div_ceil(MR);
+    let y_base = y.data_mut().as_mut_ptr() as usize;
+    let xd = x.data();
+    threadpool::parallel_for(n_tiles, |t| {
+        let i0 = t * MR;
+        let i1 = (i0 + MR).min(m);
+        let mr = i1 - i0;
+        // tile-local hidden buffers (thread stack): mr×f each
+        let mut h1 = vec![0.0f32; mr * f];
+        let mut h2 = vec![0.0f32; mr * f];
+        let xt = &xd[i0 * e..i1 * e];
+        tile_bspmm(xt, w.w1, &mut h1, mr);
+        tile_bspmm(xt, w.w2, &mut h2, mr);
+        // fused epilogue: h1 <- silu(h1) * h2, in cache
+        for (a, &b) in h1.iter_mut().zip(h2.iter()) {
+            *a = silu(*a) * b;
+        }
+        // down-projection into the tile's Y rows
+        // SAFETY: tiles own disjoint Y row ranges.
+        let yt = unsafe {
+            std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * e), mr * e)
+        };
+        tile_bspmm(&h1, w.w3, yt, mr);
+    });
+    y
+}
+
+/// GELU MLP variant (GPT-2/ViT): `Y = GELU(X W1) W3`.
+pub fn gelu_mlp_sparse(x: &Tensor, w1: &Bcsc, w3: &Bcsc) -> Tensor {
+    let (m, e) = (x.rows(), x.cols());
+    let (_, f) = w1.shape();
+    let mut y = Tensor::zeros(&[m, e]);
+    let n_tiles = m.div_ceil(MR);
+    let y_base = y.data_mut().as_mut_ptr() as usize;
+    let xd = x.data();
+    threadpool::parallel_for(n_tiles, |t| {
+        let i0 = t * MR;
+        let i1 = (i0 + MR).min(m);
+        let mr = i1 - i0;
+        let mut h = vec![0.0f32; mr * f];
+        tile_bspmm(&xd[i0 * e..i1 * e], w1, &mut h, mr);
+        for a in h.iter_mut() {
+            *a = crate::kernels::ops::gelu(*a);
+        }
+        let yt = unsafe {
+            std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * e), mr * e)
+        };
+        tile_bspmm(&h, w3, yt, mr);
+    });
+    y
+}
+
+/// Single-threaded BSpMM over one row tile (used inside fused kernels).
+#[inline]
+fn tile_bspmm(x: &[f32], w: &Bcsc, y: &mut [f32], mr: usize) {
+    let (k, n) = w.shape();
+    debug_assert_eq!(x.len(), mr * k);
+    debug_assert_eq!(y.len(), mr * n);
+    let b = w.block;
+    for bc in 0..w.cb {
+        for idx in w.col_ptr[bc]..w.col_ptr[bc + 1] {
+            let br = w.row_idx[idx];
+            let blk = w.block_vals(idx);
+            for i in 0..mr {
+                let xrow = &x[i * k + br * b..i * k + br * b + b];
+                let yrow = &mut y[i * n + bc * b..i * n + bc * b + b];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv != 0.0 {
+                        axpy(xv, &blk[kk * b..kk * b + b], yrow);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// FLOPs actually executed by a BSpMM (only surviving blocks).
+pub fn bspmm_flops(m: usize, w: &Bcsc) -> f64 {
+    2.0 * m as f64 * (w.nnzb() * w.block * w.block) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::gemm_naive;
+    use crate::sparse::BlockMask;
+    use crate::testkit::prop;
+    use crate::prop_assert;
+    use crate::util::rng::Rng;
+
+    fn masked_dense(w: &Tensor, mask: &BlockMask, b: usize) -> Tensor {
+        let mut out = w.clone();
+        mask.apply_to(out.data_mut(), b);
+        out
+    }
+
+    #[test]
+    fn matches_masked_gemm_property() {
+        prop::check_default("bspmm-vs-masked-gemm", |rng| {
+            let b = *prop::pick(rng, &[4, 8, 16]);
+            let rb = prop::usize_in(rng, 1, 6);
+            let cb = prop::usize_in(rng, 1, 6);
+            let m = prop::usize_in(rng, 1, 20);
+            let x = Tensor::randn(&[m, rb * b], 1.0, rng);
+            let w = Tensor::randn(&[rb * b, cb * b], 1.0, rng);
+            let mask = BlockMask::random(rb, cb, rng.f64(), rng);
+            let sp = Bcsc::from_dense(&w, &mask, b);
+            let got = bspmm(&x, &sp);
+            let want = gemm_naive(&x, &masked_dense(&w, &mask, b));
+            let diff = got.max_abs_diff(&want);
+            prop_assert!(diff < 1e-3, "diff {diff} (b={b} rb={rb} cb={cb} m={m})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_mask_equals_gemm() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[10, 32], 1.0, &mut rng);
+        let w = Tensor::randn(&[32, 48], 1.0, &mut rng);
+        let sp = Bcsc::from_dense(&w, &BlockMask::ones(2, 3), 16);
+        assert!(bspmm(&x, &sp).allclose(&gemm_naive(&x, &w), 1e-3));
+    }
+
+    #[test]
+    fn fused_mlp_matches_unfused() {
+        prop::check_default("fused-mlp-vs-unfused", |rng| {
+            let b = 8;
+            let e = 2 * b;
+            let f = 4 * b;
+            let m = prop::usize_in(rng, 1, 20);
+            let x = Tensor::randn(&[m, e], 1.0, rng);
+            let w1d = Tensor::randn(&[e, f], 0.3, rng);
+            let w2d = Tensor::randn(&[e, f], 0.3, rng);
+            let w3d = Tensor::randn(&[f, e], 0.3, rng);
+            let m1 = BlockMask::random(e / b, f / b, rng.f64(), rng);
+            let m2 = BlockMask::random(e / b, f / b, rng.f64(), rng);
+            let m3 = BlockMask::random(f / b, e / b, rng.f64(), rng);
+            let w1 = Bcsc::from_dense(&w1d, &m1, b);
+            let w2 = Bcsc::from_dense(&w2d, &m2, b);
+            let w3 = Bcsc::from_dense(&w3d, &m3, b);
+            let got = fused_mlp_sparse(&x, &FusedMlpWeights { w1: &w1, w2: &w2, w3: &w3 });
+            // unfused oracle
+            let h1 = gemm_naive(&x, &masked_dense(&w1d, &m1, b)).map(silu);
+            let h2 = gemm_naive(&x, &masked_dense(&w2d, &m2, b));
+            let mut h = h1.clone();
+            for (a, &bb) in h.data_mut().iter_mut().zip(h2.data()) {
+                *a *= bb;
+            }
+            let want = gemm_naive(&h, &masked_dense(&w3d, &m3, b));
+            let diff = got.max_abs_diff(&want);
+            prop_assert!(diff < 1e-3, "diff {diff} (m={m})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gelu_mlp_matches_unfused() {
+        let mut rng = Rng::new(5);
+        let (b, e, f, m) = (8, 16, 32, 9);
+        let x = Tensor::randn(&[m, e], 1.0, &mut rng);
+        let w1d = Tensor::randn(&[e, f], 0.3, &mut rng);
+        let w3d = Tensor::randn(&[f, e], 0.3, &mut rng);
+        let m1 = BlockMask::random(e / b, f / b, 0.4, &mut rng);
+        let m3 = BlockMask::random(f / b, e / b, 0.4, &mut rng);
+        let got = gelu_mlp_sparse(
+            &x,
+            &Bcsc::from_dense(&w1d, &m1, b),
+            &Bcsc::from_dense(&w3d, &m3, b),
+        );
+        let h = gemm_naive(&x, &masked_dense(&w1d, &m1, b)).map(crate::kernels::ops::gelu);
+        let want = gemm_naive(&h, &masked_dense(&w3d, &m3, b));
+        assert!(got.allclose(&want, 1e-3), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn flop_accounting() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let mask = BlockMask::random(4, 4, 0.5, &mut rng);
+        let sp = Bcsc::from_dense(&w, &mask, 16);
+        assert_eq!(bspmm_flops(10, &sp), 2.0 * 10.0 * (8 * 16 * 16) as f64);
+    }
+}

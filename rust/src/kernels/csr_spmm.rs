@@ -1,0 +1,80 @@
+//! Unstructured CSR SpMM baseline (cuSPARSE role in Fig. 4).
+//!
+//! `Y = X @ W` with element-wise sparse `W`. Written as well as the format
+//! allows — same thread pool, row-tiled X, W traversed once per tile — but
+//! the scalar scatter into `Y` columns is exactly the memory-pipeline
+//! defeat the paper describes: FLOP savings without block structure do not
+//! become time savings until sparsity is extreme.
+
+use crate::sparse::Csr;
+use crate::tensor::Tensor;
+use crate::util::threadpool;
+
+const MR: usize = 8;
+
+/// `Y = X @ W_csr`.
+pub fn csr_spmm(x: &Tensor, w: &Csr) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    assert_eq!(k, w.rows);
+    let n = w.cols;
+    let mut y = Tensor::zeros(&[m, n]);
+    let n_tiles = m.div_ceil(MR);
+    let y_base = y.data_mut().as_mut_ptr() as usize;
+    let xd = x.data();
+    threadpool::parallel_for(n_tiles, |t| {
+        let i0 = t * MR;
+        let i1 = (i0 + MR).min(m);
+        // SAFETY: row tiles of Y are disjoint; parallel_for blocks.
+        let yt = unsafe {
+            std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * n), (i1 - i0) * n)
+        };
+        for kk in 0..k {
+            let lo = w.row_ptr[kk];
+            let hi = w.row_ptr[kk + 1];
+            if lo == hi {
+                continue;
+            }
+            for i in i0..i1 {
+                let xv = xd[i * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yrow = &mut yt[(i - i0) * n..(i - i0 + 1) * n];
+                for idx in lo..hi {
+                    yrow[w.col_idx[idx] as usize] += xv * w.vals[idx];
+                }
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::gemm_naive;
+    use crate::testkit::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn matches_dense_property() {
+        prop::check_default("csr-spmm-vs-dense", |rng| {
+            let m = prop::usize_in(rng, 1, 20);
+            let k = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 24);
+            let x = Tensor::randn(&[m, k], 1.0, rng);
+            let mut wd = Tensor::randn(&[k, n], 1.0, rng);
+            for v in wd.data_mut() {
+                if rng.f64() < 0.7 {
+                    *v = 0.0;
+                }
+            }
+            let w = Csr::from_dense(&wd, |v| v != 0.0);
+            let got = csr_spmm(&x, &w);
+            let want = gemm_naive(&x, &wd);
+            let diff = got.max_abs_diff(&want);
+            prop_assert!(diff < 1e-3, "diff {diff}");
+            Ok(())
+        });
+    }
+}

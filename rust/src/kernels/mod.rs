@@ -1,0 +1,25 @@
+//! Native CPU kernel stack — the measured reproduction substrate.
+//!
+//! The paper's wall-clock claims (Figs. 4–6) are *kernel* claims: a BCSC
+//! block-sparse matmul that beats the best dense baseline once sparsity
+//! crosses ~50%, a fused sparse MLP, and the end-to-end inference speedup
+//! they produce. On this testbed the compute device is the CPU, so the
+//! whole kernel stack is implemented here and benchmarked directly:
+//!
+//! * [`gemm`] — cache-blocked, multithreaded dense GEMM: the
+//!   cuBLAS/CUTLASS stand-in and the denominator of every speedup.
+//! * [`bspmm`] — the paper's kernel: stream surviving BCSC blocks, run a
+//!   dense micro-GEMM per block, fuse the epilogue.
+//! * [`csr_spmm`] — the unstructured-sparsity baseline (cuSPARSE role).
+//! * [`ops`] — softmax/norms/activations/rope for the native engine.
+//! * [`attention`] — dense causal attention + KV-cache decode.
+
+pub mod attention;
+pub mod bspmm;
+pub mod csr_spmm;
+pub mod gemm;
+pub mod ops;
+
+pub use bspmm::{bspmm, fused_mlp_sparse, FusedMlpWeights};
+pub use csr_spmm::csr_spmm;
+pub use gemm::{gemm, gemm_into};

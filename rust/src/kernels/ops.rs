@@ -1,0 +1,133 @@
+//! Element-wise and row-wise operators for the native engine: activations,
+//! softmax, RMSNorm/LayerNorm, RoPE. The fused variants live next to the
+//! contractions in [`super::bspmm`]; these standalone forms serve the
+//! attention path and the unfused baselines in the ablation benches.
+
+#[inline(always)]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline(always)]
+pub fn gelu(x: f32) -> f32 {
+    // tanh approximation — matches jax.nn.gelu(approximate=True) / ref.py
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// In-place softmax over a row.
+pub fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMSNorm: `x * rsqrt(mean(x²) + eps) * g`, out-of-place.
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32], eps: f32) {
+    debug_assert_eq!(x.len(), g.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * r * g[i];
+    }
+}
+
+/// LayerNorm (no bias, matching the L2 model): `(x-μ)/σ * g`.
+pub fn layernorm(x: &[f32], g: &[f32], out: &mut [f32], eps: f32) {
+    let n = x.len() as f32;
+    let mu = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let r = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mu) * r * g[i];
+    }
+}
+
+/// Rotary position embedding applied in place to one head vector
+/// (split-half convention, matching `model._rope`).
+pub fn rope_inplace(x: &mut [f32], pos: usize, theta: f32) {
+    let hd = x.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let a = x[i];
+        let b = x[i + half];
+        x[i] = a * cos - b * sin;
+        x[i + half] = a * sin + b * cos;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut row = vec![1.0, 2.0, 3.0, 4.0];
+        softmax_row(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(row[3] > row[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut row = vec![1000.0, 1000.0];
+        softmax_row(&mut row);
+        assert!((row[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0, 4.0];
+        let g = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &g, &mut out, 0.0);
+        // rms = sqrt(12.5); 3/rms ≈ 0.8485
+        assert!((out[0] - 3.0 / 12.5f32.sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn layernorm_zero_mean() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; 4];
+        let mut out = vec![0.0; 4];
+        layernorm(&x, &g, &mut out, 0.0);
+        let mu: f32 = out.iter().sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_pos_zero_is_identity() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        rope_inplace(&mut x, 0, 10000.0);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = vec![1.0, -2.0, 0.5, 3.0];
+        let norm0: f32 = x.iter().map(|v| v * v).sum();
+        rope_inplace(&mut x, 17, 10000.0);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn activations_reference_points() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+}

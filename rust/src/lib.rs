@@ -1,0 +1,39 @@
+//! # BLaST — Block Sparse Transformers
+//!
+//! A reproduction of *"BLaST: High Performance Inference and Pretraining
+//! using BLock Sparse Transformers"* (Okanovic et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1 (Pallas, build time)** — the paper's BSpMM + fused sparse-MLP
+//!   kernels, in `python/compile/kernels/`, validated against pure-jnp
+//!   oracles and lowered (interpret mode) into the AOT artifacts.
+//! * **L2 (JAX, build time)** — the Transformer model family (GPT-2-style,
+//!   Llama-style, ViT-style) with block-masked MLP weights; `train_step`,
+//!   `eval_loss`, `prefill` and `decode_step` entry points exported as HLO
+//!   text in `artifacts/`.
+//! * **L3 (this crate, run time)** — the coordinator: the paper's blocked
+//!   prune-and-grow algorithm ([`sparsify`]), the pretraining orchestrator
+//!   ([`train`]), a batched inference server ([`coordinator`]), the PJRT
+//!   runtime bridge ([`runtime`]), and a native block-sparse kernel stack
+//!   ([`kernels`], [`sparse`], [`tensor`], [`model`]) that carries the
+//!   wall-clock reproduction of the paper's Figures 4–6.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, and the `blast` binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a module and bench target.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod kernels;
+pub mod model;
+pub mod perf;
+pub mod runtime;
+pub mod sparse;
+pub mod sparsify;
+pub mod tensor;
+pub mod testkit;
+pub mod train;
+pub mod util;

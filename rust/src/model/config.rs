@@ -1,0 +1,181 @@
+//! Model geometry: native configs (for the engine) and the paper's real
+//! model family (for the analytic reproductions of Figs. 5 and 7).
+
+use crate::runtime::ConfigInfo;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Gpt2,
+    Llama,
+    Vit,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> ModelKind {
+        match s {
+            "gpt2" => ModelKind::Gpt2,
+            "llama" => ModelKind::Llama,
+            "vit" => ModelKind::Vit,
+            other => panic!("unknown model kind {other:?}"),
+        }
+    }
+}
+
+/// Geometry the native engine runs (usually constructed from the manifest).
+#[derive(Clone, Debug)]
+pub struct NativeConfig {
+    pub name: String,
+    pub kind: ModelKind,
+    pub vocab: usize,
+    pub emb: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub block: usize,
+}
+
+impl NativeConfig {
+    pub fn from_manifest(c: &ConfigInfo) -> NativeConfig {
+        NativeConfig {
+            name: c.name.clone(),
+            kind: ModelKind::parse(&c.kind),
+            vocab: c.vocab,
+            emb: c.emb,
+            ffn: c.ffn,
+            layers: c.layers,
+            heads: c.heads,
+            max_seq: c.seq,
+            block: c.block,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.emb / self.heads
+    }
+
+    /// MLP weight matrices per layer (name suffix, rows, cols).
+    pub fn mlp_shapes(&self) -> Vec<(&'static str, usize, usize)> {
+        match self.kind {
+            ModelKind::Llama => vec![
+                ("mlp.w1", self.emb, self.ffn),
+                ("mlp.w2", self.emb, self.ffn),
+                ("mlp.w3", self.ffn, self.emb),
+            ],
+            _ => vec![
+                ("mlp.w1", self.emb, self.ffn),
+                ("mlp.w3", self.ffn, self.emb),
+            ],
+        }
+    }
+
+    /// Total parameter count (matches the L2 `param_spec`).
+    pub fn param_count(&self) -> usize {
+        let e = self.emb;
+        let attn = 4 * e * e;
+        let mlp: usize = self.mlp_shapes().iter().map(|(_, r, c)| r * c).sum();
+        let per_layer = attn + mlp + 2 * e;
+        let emb = self.vocab * e
+            + if self.kind == ModelKind::Gpt2 {
+                self.max_seq * e
+            } else {
+                0
+            };
+        emb + self.layers * per_layer + e + e * self.vocab
+    }
+}
+
+/// A real model geometry from the paper's evaluation (Figs. 5/7).
+#[derive(Clone, Debug)]
+pub struct PaperGeometry {
+    pub name: &'static str,
+    pub emb: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    /// Total parameters (billions) as reported publicly.
+    pub params_b: f64,
+    /// Llama-style (3 MLP matrices) vs GPT-2-style (2).
+    pub swiglu: bool,
+}
+
+impl PaperGeometry {
+    /// MLP parameters per layer.
+    pub fn mlp_params_per_layer(&self) -> usize {
+        let mats = if self.swiglu { 3 } else { 2 };
+        mats * self.emb * self.ffn
+    }
+
+    /// Total MLP parameters.
+    pub fn mlp_params(&self) -> usize {
+        self.layers * self.mlp_params_per_layer()
+    }
+
+    /// Total parameters (from the headline count).
+    pub fn total_params(&self) -> f64 {
+        self.params_b * 1e9
+    }
+
+    /// FLOPs of one MLP block application per token (dense).
+    pub fn mlp_flops_per_token(&self) -> f64 {
+        2.0 * self.mlp_params_per_layer() as f64
+    }
+}
+
+/// The model family of Figs. 1, 5 and 7.
+pub fn paper_catalog() -> Vec<PaperGeometry> {
+    vec![
+        PaperGeometry { name: "Llama-3.2-1B", emb: 2048, ffn: 8192, layers: 16, params_b: 1.24, swiglu: true },
+        PaperGeometry { name: "Llama-3.2-3B", emb: 3072, ffn: 8192, layers: 28, params_b: 3.21, swiglu: true },
+        PaperGeometry { name: "Llama-3.1-8B", emb: 4096, ffn: 14336, layers: 32, params_b: 8.03, swiglu: true },
+        PaperGeometry { name: "Llama-3.1-70B", emb: 8192, ffn: 28672, layers: 80, params_b: 70.6, swiglu: true },
+        PaperGeometry { name: "Llama-3.1-405B", emb: 16384, ffn: 53248, layers: 126, params_b: 405.0, swiglu: true },
+        PaperGeometry { name: "GPT2-small", emb: 768, ffn: 3072, layers: 12, params_b: 0.124, swiglu: false },
+        PaperGeometry { name: "GPT2-medium", emb: 1024, ffn: 4096, layers: 24, params_b: 0.355, swiglu: false },
+        PaperGeometry { name: "GPT2-large", emb: 1280, ffn: 5120, layers: 36, params_b: 0.774, swiglu: false },
+        PaperGeometry { name: "GPT2-XL", emb: 1600, ffn: 6400, layers: 48, params_b: 1.44, swiglu: false },
+        PaperGeometry { name: "ViT-B/16", emb: 768, ffn: 3072, layers: 12, params_b: 0.086, swiglu: false },
+        PaperGeometry { name: "ViT-L/16", emb: 1024, ffn: 4096, layers: 24, params_b: 0.307, swiglu: false },
+    ]
+}
+
+pub fn paper_geometry(name: &str) -> PaperGeometry {
+    paper_catalog()
+        .into_iter()
+        .find(|g| g.name == name)
+        .unwrap_or_else(|| panic!("unknown paper geometry {name:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_sane() {
+        let cat = paper_catalog();
+        assert_eq!(cat.len(), 11);
+        let l405 = paper_geometry("Llama-3.1-405B");
+        // MLP weights dominate at 405B scale
+        assert!(l405.mlp_params() as f64 > 0.7 * l405.total_params());
+        let g = paper_geometry("GPT2-small");
+        assert_eq!(g.mlp_params_per_layer(), 2 * 768 * 3072);
+    }
+
+    #[test]
+    fn native_param_count_matches_micro_manifest_value() {
+        // micro: gpt2, vocab 256, emb 64, ffn 128, layers 2, seq 32
+        let c = NativeConfig {
+            name: "micro".into(),
+            kind: ModelKind::Gpt2,
+            vocab: 256,
+            emb: 64,
+            ffn: 128,
+            layers: 2,
+            heads: 2,
+            max_seq: 32,
+            block: 32,
+        };
+        // tok 256*64 + pos 32*64 + 2*(4*64*64 + 2*64*128 + 2*64) + 64 + 64*256
+        let want = 256 * 64 + 32 * 64 + 2 * (4 * 64 * 64 + 2 * 64 * 128 + 128) + 64 + 64 * 256;
+        assert_eq!(c.param_count(), want);
+    }
+}

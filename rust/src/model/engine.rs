@@ -1,0 +1,519 @@
+//! Native block-sparse inference engine.
+//!
+//! Runs the same Transformer the L2 JAX model defines, but entirely on the
+//! native kernel stack, with the MLP weights in either dense (GEMM) or
+//! BCSC (BSpMM) form. This is the component behind the paper's Fig. 6:
+//! identical weights + masks, two execution modes, and the wall-clock gap
+//! between them is the end-to-end inference speedup of block sparsity.
+//!
+//! The engine is single-sequence; the serving coordinator multiplexes many
+//! engine sessions (each with its own KV cache) over the shared weights.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::attention::{causal_attention, decode_attention};
+use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
+use crate::kernels::gemm::gemm_into;
+use crate::kernels::ops;
+use crate::model::config::{ModelKind, NativeConfig};
+use crate::model::params::ParamStore;
+use crate::sparse::{Bcsc, BlockMask};
+use crate::tensor::Tensor;
+
+/// MLP execution mode (the Fig. 6 switch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MlpMode {
+    /// Masked weights stored dense, multiplied with the dense GEMM — the
+    /// baseline (what a dense-only runtime would do).
+    Dense,
+    /// Masked weights stored in BCSC, multiplied with BSpMM + fused
+    /// nonlinearity — the paper's kernel.
+    Sparse,
+}
+
+enum MlpWeights {
+    DenseSwiglu { w1: Tensor, w2: Tensor, w3: Tensor },
+    DenseGelu { w1: Tensor, w3: Tensor },
+    SparseSwiglu { w1: Bcsc, w2: Bcsc, w3: Bcsc },
+    SparseGelu { w1: Bcsc, w3: Bcsc },
+}
+
+struct LayerWeights {
+    ln1: Vec<f32>,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ln2: Vec<f32>,
+    mlp: MlpWeights,
+}
+
+/// Per-sequence KV cache: one `(heads * max_seq * hd)` buffer per layer.
+pub struct KvCache {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Number of valid positions.
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
+    }
+}
+
+pub struct Engine {
+    cfg: NativeConfig,
+    mode: MlpMode,
+    tok_emb: Tensor,
+    pos_emb: Option<Tensor>,
+    layers: Vec<LayerWeights>,
+    final_norm: Vec<f32>,
+    lm_head: Tensor,
+}
+
+fn masked(params: &ParamStore, masks: &BTreeMap<String, BlockMask>, name: &str, block: usize) -> Tensor {
+    let mut t = params.req(name).clone();
+    if let Some(m) = masks.get(name) {
+        m.apply_to(t.data_mut(), block);
+    }
+    t
+}
+
+fn bcsc_of(params: &ParamStore, masks: &BTreeMap<String, BlockMask>, name: &str, block: usize) -> Bcsc {
+    let t = params.req(name);
+    let full;
+    let mask = match masks.get(name) {
+        Some(m) => m,
+        None => {
+            full = BlockMask::ones(t.rows() / block, t.cols() / block);
+            &full
+        }
+    };
+    Bcsc::from_dense(t, mask, block)
+}
+
+impl Engine {
+    /// Build an engine over trained parameters + masks.
+    pub fn new(
+        cfg: NativeConfig,
+        params: &ParamStore,
+        masks: &BTreeMap<String, BlockMask>,
+        mode: MlpMode,
+    ) -> Result<Engine> {
+        if cfg.kind == ModelKind::Vit {
+            bail!("the autoregressive engine serves LM configs; use the eval drivers for ViT");
+        }
+        let b = cfg.block;
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for i in 0..cfg.layers {
+            let p = |s: &str| format!("layer{i}.{s}");
+            let mlp = match (cfg.kind, mode) {
+                (ModelKind::Llama, MlpMode::Dense) => MlpWeights::DenseSwiglu {
+                    w1: masked(params, masks, &p("mlp.w1"), b),
+                    w2: masked(params, masks, &p("mlp.w2"), b),
+                    w3: masked(params, masks, &p("mlp.w3"), b),
+                },
+                (ModelKind::Llama, MlpMode::Sparse) => MlpWeights::SparseSwiglu {
+                    w1: bcsc_of(params, masks, &p("mlp.w1"), b),
+                    w2: bcsc_of(params, masks, &p("mlp.w2"), b),
+                    w3: bcsc_of(params, masks, &p("mlp.w3"), b),
+                },
+                (_, MlpMode::Dense) => MlpWeights::DenseGelu {
+                    w1: masked(params, masks, &p("mlp.w1"), b),
+                    w3: masked(params, masks, &p("mlp.w3"), b),
+                },
+                (_, MlpMode::Sparse) => MlpWeights::SparseGelu {
+                    w1: bcsc_of(params, masks, &p("mlp.w1"), b),
+                    w3: bcsc_of(params, masks, &p("mlp.w3"), b),
+                },
+            };
+            layers.push(LayerWeights {
+                ln1: params.req(&p("ln1")).data().to_vec(),
+                wq: params.req(&p("attn.wq")).clone(),
+                wk: params.req(&p("attn.wk")).clone(),
+                wv: params.req(&p("attn.wv")).clone(),
+                wo: params.req(&p("attn.wo")).clone(),
+                ln2: params.req(&p("ln2")).data().to_vec(),
+                mlp,
+            });
+        }
+        Ok(Engine {
+            mode,
+            tok_emb: params.req("tok_emb").clone(),
+            pos_emb: params.get("pos_emb").cloned(),
+            layers,
+            final_norm: params.req("final_norm").data().to_vec(),
+            lm_head: params.req("lm_head").clone(),
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &NativeConfig {
+        &self.cfg
+    }
+
+    pub fn mode(&self) -> MlpMode {
+        self.mode
+    }
+
+    /// Weight bytes resident for the MLP blocks in the current mode — the
+    /// per-model input to the Fig. 7 memory model.
+    pub fn mlp_weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match &l.mlp {
+                MlpWeights::DenseSwiglu { w1, w2, w3 } => (w1.len() + w2.len() + w3.len()) * 4,
+                MlpWeights::DenseGelu { w1, w3 } => (w1.len() + w3.len()) * 4,
+                MlpWeights::SparseSwiglu { w1, w2, w3 } => w1.bytes() + w2.bytes() + w3.bytes(),
+                MlpWeights::SparseGelu { w1, w3 } => w1.bytes() + w3.bytes(),
+            })
+            .sum()
+    }
+
+    pub fn new_cache(&self) -> KvCache {
+        let per_layer = self.cfg.heads * self.cfg.max_seq * self.cfg.head_dim();
+        KvCache {
+            k: (0..self.cfg.layers).map(|_| vec![0.0; per_layer]).collect(),
+            v: (0..self.cfg.layers).map(|_| vec![0.0; per_layer]).collect(),
+            len: 0,
+        }
+    }
+
+    fn norm(&self, x: &[f32], g: &[f32], out: &mut [f32]) {
+        match self.cfg.kind {
+            ModelKind::Llama => ops::rmsnorm(x, g, out, 1e-5),
+            _ => ops::layernorm(x, g, out, 1e-5),
+        }
+    }
+
+    fn mlp(&self, x: &Tensor, l: &LayerWeights) -> Tensor {
+        match &l.mlp {
+            MlpWeights::SparseSwiglu { w1, w2, w3 } => {
+                fused_mlp_sparse(x, &FusedMlpWeights { w1, w2, w3 })
+            }
+            MlpWeights::SparseGelu { w1, w3 } => gelu_mlp_sparse(x, w1, w3),
+            MlpWeights::DenseSwiglu { w1, w2, w3 } => {
+                let m = x.rows();
+                let (e, f) = (w1.rows(), w1.cols());
+                let mut h1 = Tensor::zeros(&[m, f]);
+                let mut h2 = Tensor::zeros(&[m, f]);
+                gemm_into(x.data(), w1.data(), h1.data_mut(), m, e, f);
+                gemm_into(x.data(), w2.data(), h2.data_mut(), m, e, f);
+                for (a, &bb) in h1.data_mut().iter_mut().zip(h2.data()) {
+                    *a = ops::silu(*a) * bb;
+                }
+                let mut y = Tensor::zeros(&[m, e]);
+                gemm_into(h1.data(), w3.data(), y.data_mut(), m, f, e);
+                y
+            }
+            MlpWeights::DenseGelu { w1, w3 } => {
+                let m = x.rows();
+                let (e, f) = (w1.rows(), w1.cols());
+                let mut h = Tensor::zeros(&[m, f]);
+                gemm_into(x.data(), w1.data(), h.data_mut(), m, e, f);
+                for a in h.data_mut() {
+                    *a = ops::gelu(*a);
+                }
+                let mut y = Tensor::zeros(&[m, e]);
+                gemm_into(h.data(), w3.data(), y.data_mut(), m, f, e);
+                y
+            }
+        }
+    }
+
+    /// (seq, e) row-major → (heads, seq, hd) head-major.
+    fn split_heads(&self, x: &[f32], seq: usize) -> Vec<f32> {
+        let (h, hd, e) = (self.cfg.heads, self.cfg.head_dim(), self.cfg.emb);
+        let mut out = vec![0.0f32; seq * e];
+        for s in 0..seq {
+            for hh in 0..h {
+                out[hh * seq * hd + s * hd..hh * seq * hd + (s + 1) * hd]
+                    .copy_from_slice(&x[s * e + hh * hd..s * e + (hh + 1) * hd]);
+            }
+        }
+        out
+    }
+
+    /// Prompt pass: fills `cache` for positions `0..tokens.len()` and
+    /// returns the logits of the last position.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        let seq = tokens.len();
+        if seq == 0 || seq > self.cfg.max_seq {
+            bail!("prompt length {seq} out of range 1..={}", self.cfg.max_seq);
+        }
+        let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
+        // embed
+        let mut x = Tensor::zeros(&[seq, e]);
+        for (s, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.cfg.vocab {
+                bail!("token {t} out of vocab {}", self.cfg.vocab);
+            }
+            x.row_mut(s).copy_from_slice(self.tok_emb.row(t));
+            if let Some(pe) = &self.pos_emb {
+                for (a, &b) in x.row_mut(s).iter_mut().zip(pe.row(s)) {
+                    *a += b;
+                }
+            }
+        }
+
+        let mut xn = Tensor::zeros(&[seq, e]);
+        for (li, l) in self.layers.iter().enumerate() {
+            // pre-norm
+            for s in 0..seq {
+                let (xr, nr) = (x.row(s).to_vec(), xn.row_mut(s));
+                self.norm(&xr, &l.ln1, nr);
+            }
+            // projections
+            let mut q = Tensor::zeros(&[seq, e]);
+            let mut k = Tensor::zeros(&[seq, e]);
+            let mut v = Tensor::zeros(&[seq, e]);
+            gemm_into(xn.data(), l.wq.data(), q.data_mut(), seq, e, e);
+            gemm_into(xn.data(), l.wk.data(), k.data_mut(), seq, e, e);
+            gemm_into(xn.data(), l.wv.data(), v.data_mut(), seq, e, e);
+            let mut qh = self.split_heads(q.data(), seq);
+            let mut kh = self.split_heads(k.data(), seq);
+            let vh = self.split_heads(v.data(), seq);
+            if self.cfg.kind == ModelKind::Llama {
+                for hh in 0..h {
+                    for s in 0..seq {
+                        let o = hh * seq * hd + s * hd;
+                        ops::rope_inplace(&mut qh[o..o + hd], s, 10000.0);
+                        ops::rope_inplace(&mut kh[o..o + hd], s, 10000.0);
+                    }
+                }
+            }
+            // stash K/V into the cache (head-major, max_seq stride)
+            for hh in 0..h {
+                for s in 0..seq {
+                    let src = hh * seq * hd + s * hd;
+                    let dst = hh * self.cfg.max_seq * hd + s * hd;
+                    cache.k[li][dst..dst + hd].copy_from_slice(&kh[src..src + hd]);
+                    cache.v[li][dst..dst + hd].copy_from_slice(&vh[src..src + hd]);
+                }
+            }
+            let att = causal_attention(&qh, &kh, &vh, h, seq, hd);
+            let mut proj = Tensor::zeros(&[seq, e]);
+            gemm_into(&att, l.wo.data(), proj.data_mut(), seq, e, e);
+            x.add_inplace(&proj);
+            // MLP
+            for s in 0..seq {
+                let (xr, nr) = (x.row(s).to_vec(), xn.row_mut(s));
+                self.norm(&xr, &l.ln2, nr);
+            }
+            let y = self.mlp(&xn, l);
+            x.add_inplace(&y);
+        }
+        cache.len = seq;
+        // final norm + head for the last position only
+        let mut last = vec![0.0f32; e];
+        self.norm(x.row(seq - 1), &self.final_norm, &mut last);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        gemm_into(&last, self.lm_head.data(), &mut logits, 1, e, self.cfg.vocab);
+        Ok(logits)
+    }
+
+    /// One decode step: append `token` at position `cache.len` and return
+    /// the next-token logits.
+    pub fn decode(&self, token: u32, cache: &mut KvCache) -> Result<Vec<f32>> {
+        let pos = cache.len;
+        if pos >= self.cfg.max_seq {
+            bail!("KV cache full ({} positions)", self.cfg.max_seq);
+        }
+        let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
+        let mut x = self.tok_emb.row(token as usize).to_vec();
+        if let Some(pe) = &self.pos_emb {
+            for (a, &b) in x.iter_mut().zip(pe.row(pos)) {
+                *a += b;
+            }
+        }
+        let mut xn = vec![0.0f32; e];
+        for (li, l) in self.layers.iter().enumerate() {
+            self.norm(&x, &l.ln1, &mut xn);
+            let mut q = vec![0.0f32; e];
+            let mut k = vec![0.0f32; e];
+            let mut v = vec![0.0f32; e];
+            gemm_into(&xn, l.wq.data(), &mut q, 1, e, e);
+            gemm_into(&xn, l.wk.data(), &mut k, 1, e, e);
+            gemm_into(&xn, l.wv.data(), &mut v, 1, e, e);
+            if self.cfg.kind == ModelKind::Llama {
+                for hh in 0..h {
+                    ops::rope_inplace(&mut q[hh * hd..(hh + 1) * hd], pos, 10000.0);
+                    ops::rope_inplace(&mut k[hh * hd..(hh + 1) * hd], pos, 10000.0);
+                }
+            }
+            // write K/V at pos
+            for hh in 0..h {
+                let dst = hh * self.cfg.max_seq * hd + pos * hd;
+                cache.k[li][dst..dst + hd].copy_from_slice(&k[hh * hd..(hh + 1) * hd]);
+                cache.v[li][dst..dst + hd].copy_from_slice(&v[hh * hd..(hh + 1) * hd]);
+            }
+            let att = decode_attention(
+                &q,
+                &cache.k[li],
+                &cache.v[li],
+                h,
+                self.cfg.max_seq,
+                hd,
+                pos,
+            );
+            let mut proj = vec![0.0f32; e];
+            gemm_into(&att, l.wo.data(), &mut proj, 1, e, e);
+            for (a, b) in x.iter_mut().zip(&proj) {
+                *a += b;
+            }
+            self.norm(&x, &l.ln2, &mut xn);
+            let y = self.mlp(&Tensor::new(&[1, e], xn.clone()), l);
+            for (a, &b) in x.iter_mut().zip(y.data()) {
+                *a += b;
+            }
+        }
+        cache.len = pos + 1;
+        let mut last = vec![0.0f32; e];
+        self.norm(&x, &self.final_norm, &mut last);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        gemm_into(&last, self.lm_head.data(), &mut logits, 1, e, self.cfg.vocab);
+        Ok(logits)
+    }
+
+    /// Greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> u32 {
+        let mut best = 0usize;
+        for i in 1..logits.len() {
+            if logits[i] > logits[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn test_cfg(kind: ModelKind) -> NativeConfig {
+        NativeConfig {
+            name: "t".into(),
+            kind,
+            vocab: 32,
+            emb: 16,
+            ffn: 32,
+            layers: 2,
+            heads: 2,
+            max_seq: 16,
+            block: 8,
+        }
+    }
+
+    fn test_params(cfg: &NativeConfig, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut s = ParamStore::new();
+        let e = cfg.emb;
+        s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.1, &mut rng));
+        if cfg.kind == ModelKind::Gpt2 {
+            s.insert("pos_emb".into(), Tensor::randn(&[cfg.max_seq, e], 0.1, &mut rng));
+        }
+        for i in 0..cfg.layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+            for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                s.insert(p(w), Tensor::randn(&[e, e], 0.1, &mut rng));
+            }
+            s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+            for (n, r, c) in cfg.mlp_shapes() {
+                s.insert(p(n), Tensor::randn(&[r, c], 0.1, &mut rng));
+            }
+        }
+        s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+        s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
+        s
+    }
+
+    fn random_masks(cfg: &NativeConfig, sparsity: f64, seed: u64) -> BTreeMap<String, BlockMask> {
+        let mut rng = Rng::new(seed);
+        let mut m = BTreeMap::new();
+        for i in 0..cfg.layers {
+            for (n, r, c) in cfg.mlp_shapes() {
+                m.insert(
+                    format!("layer{i}.{n}"),
+                    BlockMask::random(r / cfg.block, c / cfg.block, sparsity, &mut rng),
+                );
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn decode_matches_prefill_both_kinds() {
+        for kind in [ModelKind::Gpt2, ModelKind::Llama] {
+            let cfg = test_cfg(kind);
+            let params = test_params(&cfg, 1);
+            let masks = random_masks(&cfg, 0.3, 2);
+            let eng = Engine::new(cfg.clone(), &params, &masks, MlpMode::Dense).unwrap();
+            let tokens: Vec<u32> = vec![3, 7, 11, 2, 9];
+            // full prefill
+            let mut c1 = eng.new_cache();
+            let full = eng.prefill(&tokens, &mut c1).unwrap();
+            // prefill on the prefix, then decode the last token
+            let mut c2 = eng.new_cache();
+            eng.prefill(&tokens[..4], &mut c2).unwrap();
+            let step = eng.decode(tokens[4], &mut c2).unwrap();
+            for (a, b) in full.iter().zip(&step) {
+                assert!((a - b).abs() < 1e-3, "{kind:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_modes_agree() {
+        for kind in [ModelKind::Gpt2, ModelKind::Llama] {
+            let cfg = test_cfg(kind);
+            let params = test_params(&cfg, 3);
+            let masks = random_masks(&cfg, 0.5, 4);
+            let dense = Engine::new(cfg.clone(), &params, &masks, MlpMode::Dense).unwrap();
+            let sparse = Engine::new(cfg.clone(), &params, &masks, MlpMode::Sparse).unwrap();
+            let tokens: Vec<u32> = vec![1, 5, 9];
+            let mut cd = dense.new_cache();
+            let mut cs = sparse.new_cache();
+            let ld = dense.prefill(&tokens, &mut cd).unwrap();
+            let ls = sparse.prefill(&tokens, &mut cs).unwrap();
+            for (a, b) in ld.iter().zip(&ls) {
+                assert!((a - b).abs() < 1e-3, "{kind:?} prefill: {a} vs {b}");
+            }
+            let dd = dense.decode(2, &mut cd).unwrap();
+            let ds = sparse.decode(2, &mut cs).unwrap();
+            for (a, b) in dd.iter().zip(&ds) {
+                assert!((a - b).abs() < 1e-3, "{kind:?} decode: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_mode_shrinks_mlp_bytes() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 5);
+        let dense_masks = BTreeMap::new();
+        let sparse_masks = random_masks(&cfg, 0.75, 6);
+        let dense = Engine::new(cfg.clone(), &params, &dense_masks, MlpMode::Sparse).unwrap();
+        let sparse = Engine::new(cfg.clone(), &params, &sparse_masks, MlpMode::Sparse).unwrap();
+        assert!(sparse.mlp_weight_bytes() < dense.mlp_weight_bytes() / 2);
+    }
+
+    #[test]
+    fn cache_overflow_and_bad_token_rejected() {
+        let cfg = test_cfg(ModelKind::Gpt2);
+        let params = test_params(&cfg, 7);
+        let eng = Engine::new(cfg.clone(), &params, &BTreeMap::new(), MlpMode::Dense).unwrap();
+        let mut c = eng.new_cache();
+        assert!(eng.prefill(&[999], &mut c).is_err());
+        let long: Vec<u32> = vec![1; cfg.max_seq + 1];
+        assert!(eng.prefill(&long, &mut c).is_err());
+        eng.prefill(&vec![1; cfg.max_seq], &mut c).unwrap();
+        assert!(eng.decode(1, &mut c).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Native model layer: geometry catalog, parameter store, and the
+//! block-sparse inference engine.
+//!
+//! Two kinds of model geometry coexist (DESIGN.md §7):
+//!
+//! * **paper geometries** ([`config::paper_catalog`]) — the real
+//!   Llama/GPT-2/ViT shapes, used by the analytic memory/FLOP models
+//!   (Figs. 5, 7, 9);
+//! * **scaled twins** (from the AOT manifest) — the shapes that actually
+//!   run on this testbed, used by the engine, trainer and serving stack.
+//!
+//! The [`engine`] executes a decoder Transformer forward pass entirely on
+//! the native kernel stack ([`crate::kernels`]), with the MLP in either
+//! dense (GEMM) or block-sparse (BCSC/BSpMM) mode — the switch that
+//! produces the paper's Fig. 6 end-to-end inference speedup.
+
+pub mod config;
+pub mod engine;
+pub mod params;
+
+pub use config::{paper_catalog, ModelKind, NativeConfig, PaperGeometry};
+pub use engine::{Engine, MlpMode};
+pub use params::ParamStore;

@@ -1,0 +1,275 @@
+//! Parameter store: named dense tensors + binary checkpoint I/O.
+//!
+//! Checkpoints are the bridge between pipeline stages (pretrain → finetune
+//! → serve): a tiny self-describing binary format (`BLST1` magic, JSON
+//! header with names/shapes, raw little-endian f32 payload) so no external
+//! serialization crate is needed.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::ConfigInfo;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Named parameter collection (insertion order = manifest ABI order).
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    order: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> ParamStore {
+        ParamStore::default()
+    }
+
+    /// Initialize from a manifest config, mirroring the L2 `init_params`
+    /// scheme (0.02 normals, scaled residual projections, unit norms).
+    pub fn init(cfg: &ConfigInfo, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut store = ParamStore::new();
+        let resid_scale = 0.02 / (2.0 * cfg.layers as f32).sqrt();
+        for (name, shape) in &cfg.params {
+            let n: usize = shape.iter().product();
+            let t = if name.ends_with("ln1")
+                || name.ends_with("ln2")
+                || name.ends_with("final_norm")
+            {
+                Tensor::full(shape, 1.0)
+            } else if name == "cls_token" {
+                Tensor::zeros(shape)
+            } else {
+                let scale = if name.ends_with("attn.wo") || name.ends_with("mlp.w3") {
+                    resid_scale
+                } else {
+                    0.02
+                };
+                Tensor::new(shape, rng.normal_vec(n, scale))
+            };
+            store.insert(name.clone(), t);
+        }
+        store
+    }
+
+    /// Initialize weights for a [`crate::model::NativeConfig`] (the native
+    /// engine's LM layout; used by examples/benches that run without AOT
+    /// artifacts).
+    pub fn init_native(cfg: &crate::model::config::NativeConfig, seed: u64) -> ParamStore {
+        use crate::model::config::ModelKind;
+        let mut rng = Rng::new(seed);
+        let mut s = ParamStore::new();
+        let e = cfg.emb;
+        let resid = 0.02 / (2.0 * cfg.layers as f32).sqrt();
+        s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.02, &mut rng));
+        if cfg.kind == ModelKind::Gpt2 {
+            s.insert("pos_emb".into(), Tensor::randn(&[cfg.max_seq, e], 0.02, &mut rng));
+        }
+        for i in 0..cfg.layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+            for w in ["attn.wq", "attn.wk", "attn.wv"] {
+                s.insert(p(w), Tensor::randn(&[e, e], 0.02, &mut rng));
+            }
+            s.insert(p("attn.wo"), Tensor::randn(&[e, e], resid, &mut rng));
+            s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+            for (n, r, c) in cfg.mlp_shapes() {
+                let scale = if n.ends_with("w3") { resid } else { 0.02 };
+                s.insert(p(n), Tensor::randn(&[r, c], scale, &mut rng));
+            }
+        }
+        s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+        s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.02, &mut rng));
+        s
+    }
+
+    pub fn insert(&mut self, name: String, t: Tensor) {
+        if !self.map.contains_key(&name) {
+            self.order.push(name.clone());
+        }
+        self.map.insert(name, t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn req(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Values in ABI order (for flat positional calls).
+    pub fn in_order(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.order.iter().map(move |n| (n, &self.map[n]))
+    }
+
+    // ---- checkpoint I/O ---------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = Json::arr(self.order.iter().map(|n| {
+            let t = &self.map[n];
+            Json::obj(vec![
+                ("name", Json::str(n)),
+                (
+                    "shape",
+                    Json::arr(t.shape().iter().map(|&d| Json::num(d as f64))),
+                ),
+            ])
+        }))
+        .dump();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {path:?}"))?;
+        f.write_all(b"BLST1")?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for n in &self.order {
+            let data = self.map[n].data();
+            let bytes =
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut magic = [0u8; 5];
+        f.read_exact(&mut magic)?;
+        if &magic != b"BLST1" {
+            bail!("{path:?} is not a BLST1 checkpoint");
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let mut store = ParamStore::new();
+        for item in header.as_arr().context("header array")? {
+            let name = item.str_or("name", "");
+            let shape: Vec<usize> = item
+                .req("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect();
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            store.insert(name, Tensor::new(&shape, data));
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_config() -> ConfigInfo {
+        ConfigInfo {
+            name: "t".into(),
+            kind: "gpt2".into(),
+            vocab: 8,
+            emb: 4,
+            ffn: 8,
+            layers: 1,
+            heads: 1,
+            head_dim: 4,
+            seq: 4,
+            batch: 1,
+            block: 2,
+            num_classes: 0,
+            patch_dim: 0,
+            lr: 1e-3,
+            param_count: 0,
+            paper_equiv: String::new(),
+            params: vec![
+                ("tok_emb".into(), vec![8, 4]),
+                ("layer0.ln1".into(), vec![4]),
+                ("layer0.mlp.w1".into(), vec![4, 8]),
+                ("layer0.mlp.w3".into(), vec![8, 4]),
+            ],
+            masks: vec![
+                ("layer0.mlp.w1".into(), vec![2, 4]),
+                ("layer0.mlp.w3".into(), vec![4, 2]),
+            ],
+            mlp_weights: vec!["layer0.mlp.w1".into(), "layer0.mlp.w3".into()],
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_norm_layers() {
+        let s = ParamStore::init(&mini_config(), 0);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.req("tok_emb").shape(), &[8, 4]);
+        // norm gains start at exactly 1
+        assert!(s.req("layer0.ln1").data().iter().all(|&x| x == 1.0));
+        // w3 has the scaled-down residual init
+        let w3_absmax = s.req("layer0.mlp.w3").data().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert!(w3_absmax < 0.1);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ParamStore::init(&mini_config(), 7);
+        let b = ParamStore::init(&mini_config(), 7);
+        assert!(a.req("tok_emb").allclose(b.req("tok_emb"), 0.0));
+        let c = ParamStore::init(&mini_config(), 8);
+        assert!(!a.req("tok_emb").allclose(c.req("tok_emb"), 0.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let s = ParamStore::init(&mini_config(), 3);
+        let dir = std::env::temp_dir().join("blast_test_ckpt.bin");
+        s.save(&dir).unwrap();
+        let back = ParamStore::load(&dir).unwrap();
+        assert_eq!(back.names(), s.names());
+        for (n, t) in s.in_order() {
+            assert!(back.req(n).allclose(t, 0.0), "mismatch in {n}");
+        }
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let p = std::env::temp_dir().join("blast_test_garbage.bin");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(ParamStore::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

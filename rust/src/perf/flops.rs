@@ -1,0 +1,98 @@
+//! FLOP accounting under a sparsity schedule (Fig. 9).
+//!
+//! The ViT experiment plots accuracy against cumulative PFLOP: as the
+//! schedule prunes the MLP blocks, each epoch costs fewer FLOPs. Attention
+//! and embedding FLOPs are unaffected by BLaST and counted dense.
+
+use crate::model::config::NativeConfig;
+use crate::model::config::ModelKind;
+use crate::sparsify::SparsitySchedule;
+
+/// Dense forward FLOPs per token for one config (matmuls only — the
+/// elementwise ops are < 1% and the paper's counters ignore them too).
+pub fn dense_fwd_flops_per_token(cfg: &NativeConfig, seq: usize) -> f64 {
+    let e = cfg.emb as f64;
+    let f = cfg.ffn as f64;
+    let attn_proj = 4.0 * 2.0 * e * e;
+    let attn_scores = 2.0 * 2.0 * seq as f64 * e; // QK^T + AV per token
+    let mlp_mats = match cfg.kind {
+        ModelKind::Llama => 3.0,
+        _ => 2.0,
+    };
+    let mlp = mlp_mats * 2.0 * e * f;
+    let head = 2.0 * e * cfg.vocab as f64;
+    cfg.layers as f64 * (attn_proj + attn_scores + mlp) + head
+}
+
+/// Forward FLOPs per token at MLP sparsity `s`.
+pub fn sparse_fwd_flops_per_token(cfg: &NativeConfig, seq: usize, s: f64) -> f64 {
+    let e = cfg.emb as f64;
+    let f = cfg.ffn as f64;
+    let mlp_mats = match cfg.kind {
+        ModelKind::Llama => 3.0,
+        _ => 2.0,
+    };
+    let mlp_dense = cfg.layers as f64 * mlp_mats * 2.0 * e * f;
+    dense_fwd_flops_per_token(cfg, seq) - s * mlp_dense
+}
+
+/// Training FLOPs per token (fwd + bwd ≈ 3× fwd for matmul-dominated nets).
+pub fn train_flops_per_token(cfg: &NativeConfig, seq: usize, s: f64) -> f64 {
+    3.0 * sparse_fwd_flops_per_token(cfg, seq, s)
+}
+
+/// Cumulative training FLOPs over `iters` iterations of `tokens_per_iter`
+/// under the schedule (the x-axis of Fig. 9).
+pub fn cumulative_train_flops(
+    cfg: &NativeConfig,
+    seq: usize,
+    tokens_per_iter: f64,
+    schedule: &SparsitySchedule,
+    iters: usize,
+) -> f64 {
+    (0..iters)
+        .map(|i| tokens_per_iter * train_flops_per_token(cfg, seq, schedule.sparsity_at(i)))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NativeConfig {
+        NativeConfig {
+            name: "t".into(),
+            kind: ModelKind::Gpt2,
+            vocab: 1000,
+            emb: 256,
+            ffn: 1024,
+            layers: 4,
+            heads: 4,
+            max_seq: 128,
+            block: 32,
+        }
+    }
+
+    #[test]
+    fn sparsity_reduces_flops() {
+        let c = cfg();
+        let dense = sparse_fwd_flops_per_token(&c, 128, 0.0);
+        let sparse = sparse_fwd_flops_per_token(&c, 128, 0.9);
+        assert!((dense - dense_fwd_flops_per_token(&c, 128)).abs() < 1.0);
+        assert!(sparse < dense);
+        // MLP share of this config ≈ 2*2*e*f*L / total; 90% of it saved
+        let mlp = 4.0 * 2.0 * 2.0 * 256.0 * 1024.0;
+        assert!((dense - sparse - 0.9 * mlp).abs() < 1.0);
+    }
+
+    #[test]
+    fn cumulative_flops_below_dense_schedule() {
+        let c = cfg();
+        let sched = SparsitySchedule::new(0.0, 0.9, 100, 0);
+        let sparse = cumulative_train_flops(&c, 128, 1024.0, &sched, 100);
+        let dense_sched = SparsitySchedule::new(0.0, 0.0, 100, 0);
+        let dense = cumulative_train_flops(&c, 128, 1024.0, &dense_sched, 100);
+        assert!(sparse < dense);
+        assert!(sparse > 0.5 * dense, "cubic ramp keeps early iters dense-ish");
+    }
+}

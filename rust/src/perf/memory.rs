@@ -1,0 +1,103 @@
+//! Inference memory footprint model (paper §5.2.1, Fig. 7).
+//!
+//! The paper counts the GH200s (96 GB HBM each) needed to hold FP32
+//! weights. BLaST prunes only the MLP matrices, so:
+//!
+//! ```text
+//! bytes(s) = 4 · [ non_mlp_params + (1 - s) · mlp_params ] + index(s)
+//! gpus(s)  = ceil(bytes(s) / 96 GB)
+//! ```
+//!
+//! `index(s)` is the BCSC bookkeeping (block row indices + column
+//! pointers), which is negligible for the paper's block sizes but modeled
+//! anyway for honesty at b = 1.
+
+use crate::model::config::PaperGeometry;
+
+pub const GH200_BYTES: f64 = 96e9;
+pub const FP32: f64 = 4.0;
+
+/// Weight bytes for a geometry at MLP sparsity `s` with block size `b`.
+pub fn weight_bytes(g: &PaperGeometry, sparsity: f64, block: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let mlp = g.mlp_params() as f64;
+    let non_mlp = (g.total_params() - mlp).max(0.0);
+    let kept = (1.0 - sparsity) * mlp;
+    // BCSC index: one i32 block-row id per kept block + col_ptr array
+    let kept_blocks = kept / (block * block) as f64;
+    let mats = if g.swiglu { 3.0 } else { 2.0 };
+    let col_ptrs = g.layers as f64 * mats * (g.ffn.max(g.emb) / block + 1) as f64;
+    FP32 * (non_mlp + kept) + 4.0 * (kept_blocks + col_ptrs)
+}
+
+/// GH200 GPUs required to hold the weights.
+pub fn gpus_required(g: &PaperGeometry, sparsity: f64, block: usize) -> usize {
+    (weight_bytes(g, sparsity, block) / GH200_BYTES).ceil().max(1.0) as usize
+}
+
+/// Memory reduction factor dense → sparse (the paper's "3.12×").
+pub fn reduction_factor(g: &PaperGeometry, sparsity: f64, block: usize) -> f64 {
+    weight_bytes(g, 0.0, block) / weight_bytes(g, sparsity, block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::paper_geometry;
+
+    #[test]
+    fn dense_405b_needs_about_17_gpus() {
+        let g = paper_geometry("Llama-3.1-405B");
+        // 405e9 * 4B = 1.62 TB → 17 × 96 GB
+        assert_eq!(gpus_required(&g, 0.0, 128), 17);
+    }
+
+    #[test]
+    fn sparsity_cuts_gpus_about_3x_at_405b() {
+        let g = paper_geometry("Llama-3.1-405B");
+        let dense = gpus_required(&g, 0.0, 128);
+        // The paper's 2.9× GPU-count headline corresponds to its 80%
+        // pretraining sparsity point; our pure-weight-bytes model lands at
+        // 2.8–3.0× there (17 → 6 GPUs).
+        let sparse80 = gpus_required(&g, 0.80, 128);
+        let ratio80 = dense as f64 / sparse80 as f64;
+        assert!(
+            (2.5..=3.2).contains(&ratio80),
+            "expected ~2.9x at 80%, got {ratio80} ({dense} → {sparse80})"
+        );
+        // at 95% the pure-weight model exceeds the paper's figure (the
+        // paper's footprint includes unsparsified runtime state)
+        let sparse95 = gpus_required(&g, 0.95, 128);
+        assert!(dense as f64 / sparse95 as f64 >= 2.9);
+    }
+
+    #[test]
+    fn reduction_factor_matches_paper_band() {
+        let g = paper_geometry("Llama-3.1-405B");
+        // paper: "up to 3.12× inference memory usage reduction"; counting
+        // weight bytes alone we must meet or exceed that at 95% sparsity
+        let r = reduction_factor(&g, 0.95, 128);
+        assert!(r >= 3.12, "reduction {r} below the paper's headline");
+        assert!(r <= 6.0, "reduction {r} implausibly high");
+        // and the ~84% point reproduces the headline number closely
+        let r84 = reduction_factor(&g, 0.84, 128);
+        assert!((2.9..=3.4).contains(&r84), "reduction@84% {r84}");
+    }
+
+    #[test]
+    fn monotone_in_sparsity() {
+        let g = paper_geometry("Llama-3.1-8B");
+        let mut prev = f64::INFINITY;
+        for s in [0.0, 0.5, 0.7, 0.9, 0.95] {
+            let b = weight_bytes(&g, s, 128);
+            assert!(b < prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn tiny_blocks_pay_index_overhead() {
+        let g = paper_geometry("Llama-3.2-1B");
+        assert!(weight_bytes(&g, 0.9, 1) > weight_bytes(&g, 0.9, 128));
+    }
+}

@@ -1,0 +1,13 @@
+//! Analytic performance & cost models.
+//!
+//! * [`memory`] — inference memory footprint and GPU-count model (Fig. 7,
+//!   and the 2.9×-fewer-GPUs headline of Fig. 1).
+//! * [`flops`] — training/inference FLOP accounting under a sparsity
+//!   schedule (Fig. 9's accuracy-per-PFLOP axis).
+//! * [`roofline`] — TPU/MXU estimates for the L1 Pallas kernel (DESIGN.md
+//!   §8): VMEM working set, DMA traffic, MXU utilization bound, and the
+//!   implied speedup ceiling `1/(1-s)` the CPU kernels are checked against.
+
+pub mod flops;
+pub mod memory;
+pub mod roofline;

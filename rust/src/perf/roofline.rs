@@ -1,0 +1,132 @@
+//! TPU/MXU analytic estimates for the L1 Pallas BSpMM (DESIGN.md §8).
+//!
+//! Pallas kernels run here under `interpret=True` (CPU), whose wall-clock
+//! says nothing about TPU behaviour. What *can* be reasoned about exactly
+//! from the BlockSpec is the memory schedule: the VMEM working set per grid
+//! step, the HBM→VMEM DMA volume (pruned blocks issue no DMA), and the MXU
+//! occupancy bound implied by the tile shape vs the 128×128 systolic array.
+//! These numbers drive the L1 structural optimization and are recorded in
+//! EXPERIMENTS.md §Perf.
+
+/// One (blk_m, b) kernel configuration at a given sparsity.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelSpec {
+    /// Rows of X per grid step (paper blk_M; our Pallas default 128).
+    pub blk_m: usize,
+    /// Sparse block edge (paper blk_N = b).
+    pub block: usize,
+    /// Problem shape Y(m,n) = X(m,k) W(k,n).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Block sparsity of W.
+    pub sparsity: f64,
+    /// Bytes per element (4 = f32, 2 = bf16).
+    pub elem_bytes: usize,
+}
+
+pub const MXU_DIM: usize = 128;
+/// Per-core VMEM on contemporary TPUs (v4/v5e ≈ 16 MiB); the budget the
+/// BlockSpec must fit.
+pub const VMEM_BYTES: usize = 16 << 20;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Estimate {
+    /// VMEM bytes resident per grid step (X tile + W block + acc tile).
+    pub vmem_per_step: usize,
+    /// Total HBM→VMEM DMA bytes for the whole kernel.
+    pub dma_bytes: f64,
+    /// Same for a dense kernel — the data-movement saving is the ratio.
+    pub dma_bytes_dense: f64,
+    /// Fraction of MXU lanes busy given the tile shape (≤ 1).
+    pub mxu_utilization: f64,
+    /// Upper bound on speedup over the dense kernel at this sparsity
+    /// (compute-bound regime): 1 / (1 - s), derated by MXU occupancy.
+    pub speedup_ceiling: f64,
+    /// Does the working set fit VMEM?
+    pub fits_vmem: bool,
+}
+
+pub fn estimate(s: &KernelSpec) -> Estimate {
+    assert!(s.k % s.block == 0 && s.n % s.block == 0);
+    let eb = s.elem_bytes;
+    // per grid step: X tile (blk_m × b), W block (b × b), acc (blk_m × b)
+    let vmem = eb * (s.blk_m * s.block + s.block * s.block) + 4 * s.blk_m * s.block;
+    let kept = 1.0 - s.sparsity;
+    let n_blocks = ((s.k / s.block) * (s.n / s.block)) as f64;
+    let x_tiles = (s.m / s.blk_m.min(s.m)) as f64;
+    // every kept W block DMA'd once per X row-tile pass; X tile re-DMA'd
+    // once per kept block column entry
+    let w_dma = kept * n_blocks * (s.block * s.block * eb) as f64 * x_tiles.max(1.0);
+    let x_dma = kept * n_blocks * (s.blk_m * s.block * eb) as f64;
+    let y_dma = (s.m * s.n * eb) as f64;
+    let dma = w_dma + x_dma + y_dma;
+    let dense = {
+        let w = n_blocks * (s.block * s.block * eb) as f64 * x_tiles.max(1.0);
+        let x = n_blocks * (s.blk_m * s.block * eb) as f64;
+        w + x + y_dma
+    };
+    // MXU lanes: a b×b tile occupies (b/128)² of the array per issue; the
+    // systolic array pipelines blk_m rows, so row occupancy is blk_m/128.
+    let mxu = (s.block.min(MXU_DIM) as f64 / MXU_DIM as f64)
+        * (s.blk_m.min(MXU_DIM) as f64 / MXU_DIM as f64);
+    Estimate {
+        vmem_per_step: vmem,
+        dma_bytes: dma,
+        dma_bytes_dense: dense,
+        mxu_utilization: mxu,
+        speedup_ceiling: mxu / kept.max(1e-9) / 1.0f64.max(mxu),
+        fits_vmem: vmem <= VMEM_BYTES,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(block: usize, sparsity: f64) -> KernelSpec {
+        KernelSpec {
+            blk_m: 128,
+            block,
+            m: 1024,
+            k: 4096,
+            n: 16384,
+            sparsity,
+            elem_bytes: 2,
+        }
+    }
+
+    #[test]
+    fn paper_blocks_fit_vmem() {
+        for b in [32, 64, 128] {
+            let e = estimate(&spec(b, 0.9));
+            assert!(e.fits_vmem, "b={b} vmem={}", e.vmem_per_step);
+        }
+    }
+
+    #[test]
+    fn mxu_utilization_favors_128() {
+        let u32_ = estimate(&spec(32, 0.9)).mxu_utilization;
+        let u128 = estimate(&spec(128, 0.9)).mxu_utilization;
+        assert!(u128 > u32_, "{u128} vs {u32_}");
+        assert!((u128 - 1.0).abs() < 1e-9, "128×128 fills the MXU");
+    }
+
+    #[test]
+    fn dma_savings_track_sparsity() {
+        let e = estimate(&spec(128, 0.95));
+        let saving = e.dma_bytes_dense / e.dma_bytes;
+        // output writes are irreducible, so saving < 20× but well > 5×
+        assert!(saving > 5.0 && saving < 20.0, "saving {saving}");
+    }
+
+    #[test]
+    fn speedup_ceiling_at_95_is_about_20x() {
+        let e = estimate(&spec(128, 0.95));
+        assert!(
+            (15.0..=21.0).contains(&e.speedup_ceiling),
+            "ceiling {} — paper reports up to 16.7×",
+            e.speedup_ceiling
+        );
+    }
+}

@@ -1,0 +1,298 @@
+//! Typed view of `artifacts/manifest.json` — the ABI contract emitted by
+//! `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input/output of an entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "float32" | "int32"
+    pub dtype: String,
+}
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub name: String,
+    pub file: String,
+    /// Config name, or None for standalone kernel artifacts.
+    pub config: Option<String>,
+    /// "train_step" | "eval_loss" | "eval_loss_pallas" | "prefill"
+    /// | "decode_step" | "kernel"
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Geometry + ABI of one model config (a scaled twin of a paper geometry).
+#[derive(Clone, Debug)]
+pub struct ConfigInfo {
+    pub name: String,
+    /// "gpt2" | "llama" | "vit"
+    pub kind: String,
+    pub vocab: usize,
+    pub emb: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub block: usize,
+    pub num_classes: usize,
+    pub patch_dim: usize,
+    pub lr: f64,
+    pub param_count: usize,
+    pub paper_equiv: String,
+    /// Ordered (name, shape) — the positional parameter ABI.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Ordered (mlp-weight name, block-mask shape).
+    pub masks: Vec<(String, Vec<usize>)>,
+    pub mlp_weights: Vec<String>,
+}
+
+impl ConfigInfo {
+    pub fn param_shape(&self, name: &str) -> Option<&[usize]> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+    }
+
+    /// Layer index encoded in a weight name like `layer3.mlp.w1`.
+    pub fn layer_of(name: &str) -> Option<usize> {
+        name.strip_prefix("layer")?
+            .split('.')
+            .next()?
+            .parse()
+            .ok()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigInfo>,
+    pub entries: BTreeMap<String, EntryInfo>,
+    pub adam: (f64, f64, f64),
+}
+
+fn shape_of(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .expect("shape must be an array")
+        .iter()
+        .map(|d| d.as_usize().expect("dim"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut configs = BTreeMap::new();
+        for (cname, cj) in j.req("configs").as_obj().context("configs")? {
+            let params = cj
+                .req("params")
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| (p.str_or("name", ""), shape_of(p.req("shape"))))
+                .collect();
+            let masks = cj
+                .req("masks")
+                .as_arr()
+                .context("masks")?
+                .iter()
+                .map(|p| (p.str_or("name", ""), shape_of(p.req("shape"))))
+                .collect();
+            let mlp_weights = cj
+                .req("mlp_weights")
+                .as_arr()
+                .context("mlp_weights")?
+                .iter()
+                .map(|w| w.as_str().unwrap_or("").to_string())
+                .collect();
+            configs.insert(
+                cname.clone(),
+                ConfigInfo {
+                    name: cname.clone(),
+                    kind: cj.str_or("kind", ""),
+                    vocab: cj.usize_or("vocab", 0),
+                    emb: cj.usize_or("emb", 0),
+                    ffn: cj.usize_or("ffn", 0),
+                    layers: cj.usize_or("layers", 0),
+                    heads: cj.usize_or("heads", 0),
+                    head_dim: cj.usize_or("head_dim", 0),
+                    seq: cj.usize_or("seq", 0),
+                    batch: cj.usize_or("batch", 0),
+                    block: cj.usize_or("block", 0),
+                    num_classes: cj.usize_or("num_classes", 0),
+                    patch_dim: cj.usize_or("patch_dim", 0),
+                    lr: cj.f64_or("lr", 0.0),
+                    param_count: cj.usize_or("param_count", 0),
+                    paper_equiv: cj.str_or("paper_equiv", ""),
+                    params,
+                    masks,
+                    mlp_weights,
+                },
+            );
+        }
+
+        let mut entries = BTreeMap::new();
+        for ej in j.req("entries").as_arr().context("entries")? {
+            let inputs = ej
+                .req("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|i| IoSpec {
+                    name: i.str_or("name", ""),
+                    shape: shape_of(i.req("shape")),
+                    dtype: i.str_or("dtype", "float32"),
+                })
+                .collect();
+            let outputs = ej
+                .req("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(|o| o.as_str().unwrap_or("").to_string())
+                .collect();
+            let name = ej.str_or("name", "");
+            entries.insert(
+                name.clone(),
+                EntryInfo {
+                    name,
+                    file: ej.str_or("file", ""),
+                    config: ej.get("config").and_then(|c| c.as_str()).map(String::from),
+                    kind: ej.str_or("kind", ""),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let adam = j.req("adam");
+        let manifest = Manifest {
+            configs,
+            entries,
+            adam: (
+                adam.f64_or("b1", 0.9),
+                adam.f64_or("b2", 0.95),
+                adam.f64_or("eps", 1e-8),
+            ),
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for e in self.entries.values() {
+            if let Some(cfg) = &e.config {
+                if !self.configs.contains_key(cfg) {
+                    bail!("entry {} references unknown config {cfg}", e.name);
+                }
+            }
+            if e.inputs.is_empty() || e.outputs.is_empty() {
+                bail!("entry {} has empty IO", e.name);
+            }
+        }
+        for c in self.configs.values() {
+            for (name, shape) in &c.masks {
+                let (k, n) = match c.param_shape(name) {
+                    Some([k, n]) => (*k, *n),
+                    other => bail!("mask {name} has non-2D param shape {other:?}"),
+                };
+                if shape[0] * c.block != k || shape[1] * c.block != n {
+                    bail!("mask {name} shape {shape:?} inconsistent with block {}", c.block);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryInfo> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no AOT entry {name:?} (have: {:?})", self.entries.keys()))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("no config {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1,
+      "adam": {"b1": 0.9, "b2": 0.95, "eps": 1e-8},
+      "configs": {
+        "t": {"name": "t", "kind": "gpt2", "vocab": 8, "emb": 4, "ffn": 8,
+              "layers": 1, "heads": 1, "head_dim": 4, "seq": 4, "batch": 1,
+              "block": 2, "num_classes": 0, "patch_dim": 0, "lr": 0.001,
+              "param_count": 10, "paper_equiv": "GPT2",
+              "params": [{"name": "layer0.mlp.w1", "shape": [4, 8]}],
+              "masks": [{"name": "layer0.mlp.w1", "shape": [2, 4]}],
+              "mlp_weights": ["layer0.mlp.w1"]}
+      },
+      "entries": [
+        {"name": "t_eval", "file": "t_eval.hlo.txt", "config": "t",
+         "kind": "eval_loss",
+         "inputs": [{"name": "x", "shape": [1, 4], "dtype": "int32"}],
+         "outputs": ["loss"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.configs.len(), 1);
+        let c = m.config("t").unwrap();
+        assert_eq!(c.block, 2);
+        assert_eq!(c.param_shape("layer0.mlp.w1"), Some(&[4usize, 8][..]));
+        let e = m.entry("t_eval").unwrap();
+        assert_eq!(e.inputs[0].dtype, "int32");
+        assert_eq!(m.adam.0, 0.9);
+    }
+
+    #[test]
+    fn rejects_inconsistent_mask_shape() {
+        let bad = MINI.replace("\"shape\": [2, 4]", "\"shape\": [3, 4]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn layer_parse() {
+        assert_eq!(ConfigInfo::layer_of("layer3.mlp.w1"), Some(3));
+        assert_eq!(ConfigInfo::layer_of("tok_emb"), None);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // exercised against the actual artifacts when present
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.contains_key("micro_train_step"));
+            let c = m.config("micro").unwrap();
+            assert_eq!(c.kind, "gpt2");
+            assert_eq!(c.params.len(), c.params.iter().map(|_| 1).sum::<usize>());
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime bridge — loads the AOT artifacts and executes them.
+//!
+//! `make artifacts` (the only Python invocation) lowers every L2 entry
+//! point to HLO text plus a JSON manifest describing the flat positional
+//! ABI. This module is the Rust side of that contract:
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` into typed structs.
+//! * [`client`] — wrap `xla::PjRtClient`: compile each HLO module once
+//!   (cached), validate call shapes against the manifest, convert between
+//!   [`crate::tensor::Tensor`] / host buffers and `xla::Literal`.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{HostValue, Runtime};
+pub use manifest::{ConfigInfo, EntryInfo, IoSpec, Manifest};

@@ -1,0 +1,187 @@
+//! Blocked Compressed Sparse Column storage (paper §3.2, Figure 3).
+//!
+//! For the left-multiply `Y = X @ W`, surviving `b×b` blocks of `W (k×n)`
+//! are grouped by *block column* so the kernel can stream the blocks that
+//! contribute to one `n`-tile of the output while reusing the loaded `X`
+//! row-panel — the access pattern of the paper's Listing 2.
+
+use crate::sparse::mask::BlockMask;
+use crate::tensor::Tensor;
+
+/// Blocked CSC matrix: values of kept blocks only, each block stored densely
+/// row-major, blocks ordered column-block-major (then by block row).
+#[derive(Clone, Debug)]
+pub struct Bcsc {
+    /// Sparse block edge length (paper's `b` / `blk_N`).
+    pub block: usize,
+    /// Block-grid rows (`k / b`).
+    pub rb: usize,
+    /// Block-grid cols (`n / b`).
+    pub cb: usize,
+    /// `cb + 1` offsets into `row_idx`/blocks per block column.
+    pub col_ptr: Vec<usize>,
+    /// Block-row index of each stored block.
+    pub row_idx: Vec<usize>,
+    /// Dense block payloads, `nnzb * block * block`, blocks in col_ptr order.
+    pub vals: Vec<f32>,
+}
+
+impl Bcsc {
+    /// Build from a dense `(k, n)` matrix and a block mask. Pruned blocks'
+    /// values are dropped regardless of their dense contents.
+    pub fn from_dense(w: &Tensor, mask: &BlockMask, block: usize) -> Bcsc {
+        let (k, n) = (w.rows(), w.cols());
+        assert_eq!(k, mask.rb * block, "rows {k} != {} * {block}", mask.rb);
+        assert_eq!(n, mask.cb * block);
+        let bb = block * block;
+        let mut col_ptr = Vec::with_capacity(mask.cb + 1);
+        let mut row_idx = Vec::new();
+        let mut vals = Vec::with_capacity(mask.nnzb() * bb);
+        col_ptr.push(0);
+        for bc in 0..mask.cb {
+            for br in 0..mask.rb {
+                if mask.get(br, bc) {
+                    row_idx.push(br);
+                    // copy the b×b block, row-major
+                    for i in 0..block {
+                        let src = (br * block + i) * n + bc * block;
+                        vals.extend_from_slice(&w.data()[src..src + block]);
+                    }
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        Bcsc {
+            block,
+            rb: mask.rb,
+            cb: mask.cb,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    pub fn nnzb(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// Fraction of pruned blocks.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnzb() as f64 / (self.rb * self.cb) as f64
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rb * self.block, self.cb * self.block)
+    }
+
+    /// Bytes of payload + index structure (the inference-memory model input).
+    pub fn bytes(&self) -> usize {
+        self.vals.len() * 4 + self.row_idx.len() * 8 + self.col_ptr.len() * 8
+    }
+
+    /// Payload slice of block `idx` (in storage order).
+    #[inline]
+    pub fn block_vals(&self, idx: usize) -> &[f32] {
+        let bb = self.block * self.block;
+        &self.vals[idx * bb..(idx + 1) * bb]
+    }
+
+    /// Reconstruct the dense matrix (pruned blocks = 0).
+    pub fn to_dense(&self) -> Tensor {
+        let (k, n) = self.shape();
+        let mut out = vec![0.0f32; k * n];
+        for bc in 0..self.cb {
+            for idx in self.col_ptr[bc]..self.col_ptr[bc + 1] {
+                let br = self.row_idx[idx];
+                let blk = self.block_vals(idx);
+                for i in 0..self.block {
+                    let dst = (br * self.block + i) * n + bc * self.block;
+                    out[dst..dst + self.block]
+                        .copy_from_slice(&blk[i * self.block..(i + 1) * self.block]);
+                }
+            }
+        }
+        Tensor::new(&[k, n], out)
+    }
+
+    /// The mask this matrix realizes.
+    pub fn mask(&self) -> BlockMask {
+        let mut m = BlockMask::zeros(self.rb, self.cb);
+        for bc in 0..self.cb {
+            for idx in self.col_ptr[bc]..self.col_ptr[bc + 1] {
+                m.set(self.row_idx[idx], bc, true);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+    use crate::prop_assert;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[8, 12], 1.0, &mut rng);
+        let mask = BlockMask::random(2, 3, 0.3, &mut rng);
+        let b = Bcsc::from_dense(&w, &mask, 4);
+        let d = b.to_dense();
+        // kept blocks must match w exactly; pruned blocks must be zero
+        for br in 0..2 {
+            for bc in 0..3 {
+                for i in 0..4 {
+                    for j in 0..4 {
+                        let (r, c) = (br * 4 + i, bc * 4 + j);
+                        let want = if mask.get(br, bc) { w.at2(r, c) } else { 0.0 };
+                        assert_eq!(d.at2(r, c), want, "at ({r},{c})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_roundtrip_property() {
+        prop::check_default("bcsc-mask-roundtrip", |rng| {
+            let rb = prop::usize_in(rng, 1, 5);
+            let cb = prop::usize_in(rng, 1, 5);
+            let block = *prop::pick(rng, &[2, 4, 8]);
+            let w = Tensor::randn(&[rb * block, cb * block], 1.0, rng);
+            let mask = BlockMask::random(rb, cb, rng.f64(), rng);
+            let b = Bcsc::from_dense(&w, &mask, block);
+            prop_assert!(b.mask() == mask, "mask not preserved");
+            prop_assert!(b.nnzb() == mask.nnzb(), "nnzb mismatch");
+            let d = b.to_dense();
+            let mut w2 = w.clone();
+            mask.apply_to(w2.data_mut(), block);
+            prop_assert!(
+                d.allclose(&w2, 0.0),
+                "to_dense != masked dense (diff {})",
+                d.max_abs_diff(&w2)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bytes_shrink_with_sparsity() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let dense = Bcsc::from_dense(&w, &BlockMask::ones(4, 4), 16);
+        let sparse = Bcsc::from_dense(&w, &BlockMask::random(4, 4, 0.75, &mut rng), 16);
+        assert!(sparse.bytes() < dense.bytes() / 2);
+    }
+
+    #[test]
+    fn empty_mask_is_all_zero() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let b = Bcsc::from_dense(&w, &BlockMask::zeros(2, 2), 4);
+        assert_eq!(b.nnzb(), 0);
+        assert!(b.to_dense().allclose(&Tensor::zeros(&[8, 8]), 0.0));
+    }
+}

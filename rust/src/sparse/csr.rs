@@ -1,0 +1,114 @@
+//! Element-wise CSR — the *unstructured* sparsity baseline.
+//!
+//! The paper's argument (§1, §3.2) is that unstructured pruning saves FLOPs
+//! but not wall-clock on real hardware because scalar gathers defeat the
+//! memory pipeline. We implement the format + SpMM honestly (it gets the
+//! same multithreading as the block kernel) so the Fig. 4-style benches can
+//! show the same crossover: CSR only wins at extreme sparsity, BCSC wins
+//! from ~50-60% on.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// CSR over elements of a `(k, n)` matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Keep entries where `keep(value)`; typically `|v| v != 0.0`.
+    pub fn from_dense(w: &Tensor, keep: impl Fn(f32) -> bool) -> Csr {
+        let (k, n) = (w.rows(), w.cols());
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..k {
+            for j in 0..n {
+                let v = w.at2(i, j);
+                if keep(v) {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr {
+            rows: k,
+            cols: n,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Random unstructured matrix with element sparsity `s`.
+    pub fn random(rows: usize, cols: usize, sparsity: f64, rng: &mut Rng) -> Csr {
+        let mut dense = Tensor::randn(&[rows, cols], 1.0, rng);
+        for v in dense.data_mut() {
+            if rng.f64() < sparsity {
+                *v = 0.0;
+            }
+        }
+        Csr::from_dense(&dense, |v| v != 0.0)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.vals.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 8
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                out[i * self.cols + self.col_idx[idx] as usize] = self.vals[idx];
+            }
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn roundtrip() {
+        prop::check_default("csr-roundtrip", |rng| {
+            let r = prop::usize_in(rng, 1, 12);
+            let c = prop::usize_in(rng, 1, 12);
+            let mut w = Tensor::randn(&[r, c], 1.0, rng);
+            for v in w.data_mut() {
+                if rng.f64() < 0.6 {
+                    *v = 0.0;
+                }
+            }
+            let csr = Csr::from_dense(&w, |v| v != 0.0);
+            prop_assert!(csr.to_dense().allclose(&w, 0.0), "roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparsity_accounting() {
+        let mut rng = Rng::new(7);
+        let csr = Csr::random(64, 64, 0.9, &mut rng);
+        assert!((csr.sparsity() - 0.9).abs() < 0.05);
+        assert_eq!(csr.nnz(), csr.vals.len());
+    }
+}

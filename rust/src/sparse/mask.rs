@@ -1,0 +1,236 @@
+//! Boolean block masks — the unit of bookkeeping for blocked prune-and-grow.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One bit per `b×b` block of a `(rb*b, cb*b)` weight matrix.
+/// `true` = block kept, `false` = block pruned.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockMask {
+    pub rb: usize,
+    pub cb: usize,
+    bits: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn ones(rb: usize, cb: usize) -> BlockMask {
+        BlockMask {
+            rb,
+            cb,
+            bits: vec![true; rb * cb],
+        }
+    }
+
+    pub fn zeros(rb: usize, cb: usize) -> BlockMask {
+        BlockMask {
+            rb,
+            cb,
+            bits: vec![false; rb * cb],
+        }
+    }
+
+    pub fn from_bits(rb: usize, cb: usize, bits: Vec<bool>) -> BlockMask {
+        assert_eq!(bits.len(), rb * cb);
+        BlockMask { rb, cb, bits }
+    }
+
+    /// Random mask with exactly `round(sparsity * rb*cb)` pruned blocks.
+    pub fn random(rb: usize, cb: usize, sparsity: f64, rng: &mut Rng) -> BlockMask {
+        let total = rb * cb;
+        let n_zero = ((sparsity * total as f64).round() as usize).min(total);
+        let mut m = BlockMask::ones(rb, cb);
+        for i in rng.sample_indices(total, n_zero) {
+            m.bits[i] = false;
+        }
+        m
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.bits[r * self.cb + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.bits[r * self.cb + c] = v;
+    }
+
+    pub fn bits(&self) -> &[bool] {
+        &self.bits
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.rb * self.cb
+    }
+
+    /// Number of *kept* blocks.
+    pub fn nnzb(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of *pruned* blocks.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnzb() as f64 / self.total_blocks() as f64
+    }
+
+    /// Linear indices (r * cb + c) of kept blocks, ascending.
+    pub fn kept_indices(&self) -> Vec<usize> {
+        (0..self.bits.len()).filter(|&i| self.bits[i]).collect()
+    }
+
+    /// Set union (kept if kept in either).
+    pub fn union(&self, other: &BlockMask) -> BlockMask {
+        assert_eq!((self.rb, self.cb), (other.rb, other.cb));
+        BlockMask {
+            rb: self.rb,
+            cb: self.cb,
+            bits: self
+                .bits
+                .iter()
+                .zip(&other.bits)
+                .map(|(a, b)| *a || *b)
+                .collect(),
+        }
+    }
+
+    /// Set difference: kept in `self` but not in `other`.
+    pub fn difference(&self, other: &BlockMask) -> BlockMask {
+        assert_eq!((self.rb, self.cb), (other.rb, other.cb));
+        BlockMask {
+            rb: self.rb,
+            cb: self.cb,
+            bits: self
+                .bits
+                .iter()
+                .zip(&other.bits)
+                .map(|(a, b)| *a && !*b)
+                .collect(),
+        }
+    }
+
+    /// Expand to an elementwise 0/1 tensor of shape `(rb*b, cb*b)` — the
+    /// layout the AOT graphs consume.
+    pub fn expand(&self, block: usize) -> Tensor {
+        let (r, c) = (self.rb * block, self.cb * block);
+        let mut out = vec![0.0f32; r * c];
+        for br in 0..self.rb {
+            for bc in 0..self.cb {
+                if self.get(br, bc) {
+                    for i in 0..block {
+                        let row = (br * block + i) * c + bc * block;
+                        out[row..row + block].fill(1.0);
+                    }
+                }
+            }
+        }
+        Tensor::new(&[r, c], out)
+    }
+
+    /// The f32 block-grid tensor (shape `(rb, cb)`) passed to HLO entries.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(
+            &[self.rb, self.cb],
+            self.bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+        )
+    }
+
+    pub fn from_tensor(t: &Tensor) -> BlockMask {
+        assert_eq!(t.shape().len(), 2);
+        BlockMask {
+            rb: t.shape()[0],
+            cb: t.shape()[1],
+            bits: t.data().iter().map(|&x| x != 0.0).collect(),
+        }
+    }
+
+    /// Zero out pruned blocks of a dense `(rb*b, cb*b)` matrix in place.
+    pub fn apply_to(&self, w: &mut [f32], block: usize) {
+        let c = self.cb * block;
+        assert_eq!(w.len(), self.rb * block * c);
+        for br in 0..self.rb {
+            for bc in 0..self.cb {
+                if !self.get(br, bc) {
+                    for i in 0..block {
+                        let row = (br * block + i) * c + bc * block;
+                        w[row..row + block].fill(0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn counting() {
+        let mut m = BlockMask::ones(2, 3);
+        assert_eq!(m.nnzb(), 6);
+        m.set(1, 2, false);
+        assert_eq!(m.nnzb(), 5);
+        assert!((m.sparsity() - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_mask_exact_sparsity() {
+        let mut rng = Rng::new(0);
+        let m = BlockMask::random(8, 8, 0.75, &mut rng);
+        assert_eq!(m.nnzb(), 16);
+    }
+
+    #[test]
+    fn expand_layout() {
+        let mut m = BlockMask::zeros(2, 2);
+        m.set(0, 1, true);
+        let e = m.expand(2);
+        assert_eq!(e.shape(), &[4, 4]);
+        assert_eq!(e.at2(0, 2), 1.0);
+        assert_eq!(e.at2(1, 3), 1.0);
+        assert_eq!(e.at2(0, 0), 0.0);
+        assert_eq!(e.at2(3, 3), 0.0);
+    }
+
+    #[test]
+    fn set_algebra_properties() {
+        prop::check_default("mask-set-algebra", |rng| {
+            let rb = prop::usize_in(rng, 1, 6);
+            let cb = prop::usize_in(rng, 1, 6);
+            let a = BlockMask::random(rb, cb, rng.f64(), rng);
+            let b = BlockMask::random(rb, cb, rng.f64(), rng);
+            let u = a.union(&b);
+            let d = a.difference(&b);
+            prop_assert!(
+                u.nnzb() >= a.nnzb().max(b.nnzb()),
+                "union smaller than operand"
+            );
+            // |A \ B| = |A| - |A ∩ B|; check via u = b ∪ (a\b)
+            let rebuilt = b.union(&d);
+            prop_assert!(rebuilt == u, "b ∪ (a\\b) != a ∪ b");
+            prop_assert!(d.difference(&a).nnzb() == 0, "(a\\b)\\a nonempty");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn apply_to_zeroes_only_pruned() {
+        let mut m = BlockMask::ones(2, 2);
+        m.set(0, 0, false);
+        let mut w: Vec<f32> = (0..16).map(|x| x as f32 + 1.0).collect();
+        m.apply_to(&mut w, 2);
+        // block (0,0) covers elements (0,0),(0,1),(1,0),(1,1) of a 4x4
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[1], 0.0);
+        assert_eq!(w[4], 0.0);
+        assert_eq!(w[5], 0.0);
+        assert_eq!(w[2], 3.0); // block (0,1) intact
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Rng::new(3);
+        let m = BlockMask::random(5, 7, 0.4, &mut rng);
+        assert_eq!(BlockMask::from_tensor(&m.to_tensor()), m);
+    }
+}

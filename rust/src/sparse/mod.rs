@@ -1,0 +1,18 @@
+//! Block-sparse formats (paper §3.2/§3.3).
+//!
+//! * [`BlockMask`] — the boolean block grid the prune-and-grow controller
+//!   manipulates (one bit per `b×b` block of a weight matrix).
+//! * [`Bcsc`] — blocked Compressed Sparse Column, the storage format of the
+//!   paper's BSpMM kernel for the `Y = XW` (multiply-from-the-left) case:
+//!   surviving blocks are streamed column-block by column-block, each block
+//!   stored densely so the per-block micro-GEMM runs at dense speed.
+//! * [`Csr`] — element-wise CSR, the *unstructured* sparsity baseline the
+//!   paper argues cannot convert FLOP savings into wall-clock savings.
+
+pub mod bcsc;
+pub mod csr;
+pub mod mask;
+
+pub use bcsc::Bcsc;
+pub use csr::Csr;
+pub use mask::BlockMask;

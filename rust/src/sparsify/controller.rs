@@ -1,0 +1,309 @@
+//! The stateful prune-and-grow controller — the L3 piece that turns the
+//! paper's Listing 1 into a service the trainer calls between AOT
+//! `train_step` executions:
+//!
+//! ```text
+//! for iteration in range(train_iters):
+//!     forward_and_backward_step()          # runtime::Executable (HLO)
+//!     if iteration % step_size == 0:
+//!         generate_masks()                 # PruneGrowController::update
+//!         prune_weights()                  #   + BlockMask application
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::sparse::BlockMask;
+use crate::sparsify::prune::{generate_mask, GrowStats};
+use crate::sparsify::schedule::SparsitySchedule;
+use crate::tensor::Tensor;
+
+/// Which MLP blocks stay dense (Fig. 11 / the `L` hyper-parameter in
+/// Table 2). The paper finds keeping the *rightmost* (last) layers dense
+/// preserves perplexity best.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DensePolicy {
+    pub left: usize,
+    pub right: usize,
+}
+
+impl DensePolicy {
+    pub fn right_only(l: usize) -> Self {
+        DensePolicy { left: 0, right: l }
+    }
+
+    pub fn is_dense(&self, layer: usize, n_layers: usize) -> bool {
+        layer < self.left || layer >= n_layers.saturating_sub(self.right)
+    }
+}
+
+/// One sparsifiable weight matrix the controller tracks.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub layer: usize,
+    /// Block-grid shape of the mask.
+    pub rb: usize,
+    pub cb: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneGrowConfig {
+    pub block: usize,
+    pub schedule: SparsitySchedule,
+    /// Mask regeneration interval (Listing 1's `step_size`, Table 5).
+    pub step_size: usize,
+    pub dense_policy: DensePolicy,
+    pub n_layers: usize,
+}
+
+/// Result of one `generate_masks()` + `prune_weights()` application.
+#[derive(Clone, Debug, Default)]
+pub struct MaskUpdate {
+    /// Per-weight regrow sets — blocks the trainer must zero in the dense
+    /// weights (paper: regrown blocks start at zero).
+    pub regrown: BTreeMap<String, BlockMask>,
+    /// Aggregated over all updated weights.
+    pub stats: GrowStats,
+    pub target_sparsity: f64,
+    pub iteration: usize,
+}
+
+pub struct PruneGrowController {
+    cfg: PruneGrowConfig,
+    specs: Vec<WeightSpec>,
+    masks: BTreeMap<String, BlockMask>,
+    /// (iteration, aggregated stats) per update — Fig. 10's series.
+    history: Vec<MaskUpdate>,
+}
+
+impl PruneGrowController {
+    pub fn new(cfg: PruneGrowConfig, specs: Vec<WeightSpec>) -> Self {
+        let masks = specs
+            .iter()
+            .map(|s| (s.name.clone(), BlockMask::ones(s.rb, s.cb)))
+            .collect();
+        PruneGrowController {
+            cfg,
+            specs,
+            masks,
+            history: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &PruneGrowConfig {
+        &self.cfg
+    }
+
+    pub fn masks(&self) -> &BTreeMap<String, BlockMask> {
+        &self.masks
+    }
+
+    pub fn history(&self) -> &[MaskUpdate] {
+        &self.history
+    }
+
+    /// Is this weight exempted by the dense-layer policy?
+    pub fn is_dense_layer(&self, spec: &WeightSpec) -> bool {
+        self.cfg
+            .dense_policy
+            .is_dense(spec.layer, self.cfg.n_layers)
+    }
+
+    /// Listing 1's `iteration % step_size == 0` gate.
+    pub fn should_update(&self, iteration: usize) -> bool {
+        iteration % self.cfg.step_size == 0
+    }
+
+    /// Target sparsity at `iteration` (Eq. 2).
+    pub fn target_sparsity(&self, iteration: usize) -> f64 {
+        self.cfg.schedule.sparsity_at(iteration)
+    }
+
+    /// Run `generate_masks()` for every sparsifiable weight. `weights` and
+    /// `grads` are dense matrices keyed by name (fetched from the device by
+    /// the trainer). Returns the update to apply (regrown blocks to zero).
+    pub fn update(
+        &mut self,
+        iteration: usize,
+        weights: &BTreeMap<String, Tensor>,
+        grads: &BTreeMap<String, Tensor>,
+    ) -> MaskUpdate {
+        let s = self.target_sparsity(iteration);
+        let mut upd = MaskUpdate {
+            target_sparsity: s,
+            iteration,
+            ..Default::default()
+        };
+        let mut agg = GrowStats::default();
+        let mut n_updated = 0usize;
+        for spec in &self.specs {
+            if self.cfg.dense_policy.is_dense(spec.layer, self.cfg.n_layers) {
+                continue; // mask stays all-ones
+            }
+            let w = weights
+                .get(&spec.name)
+                .unwrap_or_else(|| panic!("missing weight {}", spec.name));
+            let g = grads
+                .get(&spec.name)
+                .unwrap_or_else(|| panic!("missing grad {}", spec.name));
+            let (mask, regrow, stats) = generate_mask(w, g, self.cfg.block, s);
+            // regrown = blocks newly enabled that were PRUNED under the old
+            // mask; blocks that stayed active keep their trained values.
+            let old = &self.masks[&spec.name];
+            let newly_enabled = mask.difference(old);
+            let to_zero = regrow.difference(old).union(&newly_enabled.difference(&regrow));
+            upd.regrown.insert(spec.name.clone(), to_zero);
+            self.masks.insert(spec.name.clone(), mask);
+            agg.total_blocks += stats.total_blocks;
+            agg.kept_by_weight += stats.kept_by_weight;
+            agg.regrown += stats.regrown;
+            agg.realized_sparsity += stats.realized_sparsity;
+            n_updated += 1;
+        }
+        if n_updated > 0 {
+            agg.realized_sparsity /= n_updated as f64;
+            agg.regrown_ratio = agg.regrown as f64
+                / (agg.kept_by_weight + agg.regrown).max(1) as f64;
+        }
+        upd.stats = agg;
+        self.history.push(upd.clone());
+        upd
+    }
+
+    /// Mean realized sparsity across all tracked masks (dense-policy layers
+    /// included — this is what the runtime's kernel-selection threshold and
+    /// the memory model see).
+    pub fn mean_sparsity(&self) -> f64 {
+        if self.masks.is_empty() {
+            return 0.0;
+        }
+        self.masks.values().map(|m| m.sparsity()).sum::<f64>() / self.masks.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn specs_2layer(rb: usize, cb: usize) -> Vec<WeightSpec> {
+        (0..2)
+            .flat_map(|l| {
+                ["w1", "w3"].iter().map(move |w| WeightSpec {
+                    name: format!("layer{l}.mlp.{w}"),
+                    layer: l,
+                    rb,
+                    cb,
+                })
+            })
+            .collect()
+    }
+
+    fn tensors(specs: &[WeightSpec], block: usize, seed: u64) -> BTreeMap<String, Tensor> {
+        let mut rng = Rng::new(seed);
+        specs
+            .iter()
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    Tensor::randn(&[s.rb * block, s.cb * block], 1.0, &mut rng),
+                )
+            })
+            .collect()
+    }
+
+    fn controller(step_size: usize, policy: DensePolicy) -> PruneGrowController {
+        PruneGrowController::new(
+            PruneGrowConfig {
+                block: 4,
+                schedule: SparsitySchedule::new(0.0, 0.75, 100, 0),
+                step_size,
+                dense_policy: policy,
+                n_layers: 2,
+            },
+            specs_2layer(4, 4),
+        )
+    }
+
+    #[test]
+    fn starts_fully_dense() {
+        let c = controller(10, DensePolicy::default());
+        assert_eq!(c.mean_sparsity(), 0.0);
+        assert!(c.masks().values().all(|m| m.nnzb() == 16));
+    }
+
+    #[test]
+    fn sparsity_follows_schedule() {
+        let mut c = controller(1, DensePolicy::default());
+        let specs = specs_2layer(4, 4);
+        for it in [0usize, 25, 50, 75, 99] {
+            let w = tensors(&specs, 4, it as u64);
+            let g = tensors(&specs, 4, it as u64 + 1000);
+            let upd = c.update(it, &w, &g);
+            // realized ≤ target, and reasonably close for random norms
+            assert!(upd.stats.realized_sparsity <= upd.target_sparsity + 1e-9);
+        }
+        // by iteration 99 the schedule is ~0.75
+        assert!(c.target_sparsity(99) > 0.74);
+    }
+
+    #[test]
+    fn dense_policy_exempts_layers() {
+        let mut c = controller(1, DensePolicy::right_only(1));
+        let specs = specs_2layer(4, 4);
+        let w = tensors(&specs, 4, 1);
+        let g = tensors(&specs, 4, 2);
+        c.update(90, &w, &g);
+        // layer1 (rightmost) stays dense, layer0 got pruned
+        assert_eq!(c.masks()["layer1.mlp.w1"].sparsity(), 0.0);
+        assert!(c.masks()["layer0.mlp.w1"].sparsity() > 0.5);
+    }
+
+    #[test]
+    fn step_size_gate() {
+        let c = controller(25, DensePolicy::default());
+        assert!(c.should_update(0));
+        assert!(!c.should_update(13));
+        assert!(c.should_update(50));
+    }
+
+    #[test]
+    fn regrown_blocks_are_newly_enabled_only() {
+        let mut c = controller(1, DensePolicy::default());
+        let specs = specs_2layer(4, 4);
+        let w = tensors(&specs, 4, 3);
+        let g = tensors(&specs, 4, 4);
+        c.update(50, &w, &g); // establishes a sparse mask
+        let before = c.masks().clone();
+        let w2 = tensors(&specs, 4, 5);
+        let g2 = tensors(&specs, 4, 6);
+        let upd = c.update(60, &w2, &g2);
+        for (name, to_zero) in &upd.regrown {
+            // every to-zero block must be enabled in the new mask and
+            // disabled in the old one
+            let new_mask = &c.masks()[name];
+            let old = &before[name];
+            assert_eq!(to_zero.difference(new_mask).nnzb(), 0);
+            for r in 0..to_zero.rb {
+                for cc in 0..to_zero.cb {
+                    if to_zero.get(r, cc) {
+                        assert!(!old.get(r, cc), "{name}: zeroing an already-active block");
+                    }
+                }
+            }
+        }
+        let _ = upd;
+    }
+
+    #[test]
+    fn history_records_every_update() {
+        let mut c = controller(1, DensePolicy::default());
+        let specs = specs_2layer(4, 4);
+        for it in 0..5 {
+            let w = tensors(&specs, 4, it);
+            let g = tensors(&specs, 4, it + 99);
+            c.update(it as usize, &w, &g);
+        }
+        assert_eq!(c.history().len(), 5);
+    }
+}

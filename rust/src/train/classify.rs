@@ -1,0 +1,266 @@
+//! Classification training/fine-tuning (ViT twin for Table 3 / Fig. 9,
+//! GLUE twin for Table 1).
+//!
+//! Shares the Listing-1 structure with [`super::pretrain`], but over
+//! `(features, label)` batches, and scores accuracy / Matthews correlation
+//! / F1 on a fixed held-out set — the metrics of Table 1.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::params::ParamStore;
+use crate::runtime::{ConfigInfo, HostValue, Runtime};
+use crate::sparse::BlockMask;
+use crate::sparsify::controller::{DensePolicy, PruneGrowConfig, PruneGrowController, WeightSpec};
+use crate::sparsify::SparsitySchedule;
+use crate::tensor::Tensor;
+use crate::train::pretrain::{expand_mask_grid, IterLog, PretrainOptions};
+use crate::util::stats;
+
+/// One labeled batch in the classifier ABI.
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    /// (batch * seq * feat) features.
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+/// Table 1-style metrics on a held-out set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalScores {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub matthews: f64,
+    pub f1: f64,
+}
+
+pub struct ClassifyTrainer<'rt> {
+    rt: &'rt Runtime,
+    cfg: ConfigInfo,
+    params: ParamStore,
+    adam_m: ParamStore,
+    adam_v: ParamStore,
+    step: i32,
+    controller: PruneGrowController,
+    block_mult: usize,
+    pub log: Vec<IterLog>,
+}
+
+impl<'rt> ClassifyTrainer<'rt> {
+    pub fn new(rt: &'rt Runtime, config: &str, opts: &PretrainOptions) -> Result<Self> {
+        let cfg = rt.manifest().config(config)?.clone();
+        let params = ParamStore::init(&cfg, opts.seed);
+        Self::with_params(rt, config, opts, params)
+    }
+
+    /// Fine-tune from a dense checkpoint (the Table 1 protocol).
+    pub fn with_params(
+        rt: &'rt Runtime,
+        config: &str,
+        opts: &PretrainOptions,
+        params: ParamStore,
+    ) -> Result<Self> {
+        let cfg = rt.manifest().config(config)?.clone();
+        let mut adam_m = ParamStore::new();
+        let mut adam_v = ParamStore::new();
+        for (name, t) in params.in_order() {
+            adam_m.insert(name.clone(), Tensor::zeros(t.shape()));
+            adam_v.insert(name.clone(), Tensor::zeros(t.shape()));
+        }
+        let mult = opts.block_mult.max(1);
+        let specs: Vec<WeightSpec> = cfg
+            .masks
+            .iter()
+            .map(|(name, shape)| WeightSpec {
+                name: name.clone(),
+                layer: ConfigInfo::layer_of(name).unwrap_or(0),
+                rb: shape[0] / mult,
+                cb: shape[1] / mult,
+            })
+            .collect();
+        let controller = PruneGrowController::new(
+            PruneGrowConfig {
+                block: cfg.block * mult,
+                schedule: SparsitySchedule::new(
+                    opts.s_init,
+                    opts.s_max,
+                    opts.total_iters,
+                    opts.decay.min(opts.total_iters.saturating_sub(1)),
+                ),
+                step_size: opts.step_size,
+                dense_policy: DensePolicy {
+                    left: opts.dense_left,
+                    right: opts.dense_right,
+                },
+                n_layers: cfg.layers,
+            },
+            specs,
+        );
+        Ok(ClassifyTrainer {
+            rt,
+            cfg,
+            params,
+            adam_m,
+            adam_v,
+            step: 0,
+            controller,
+            block_mult: mult,
+            log: Vec::new(),
+        })
+    }
+
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    pub fn masks(&self) -> &BTreeMap<String, BlockMask> {
+        self.controller.masks()
+    }
+
+    pub fn config(&self) -> &ConfigInfo {
+        &self.cfg
+    }
+
+    pub fn mean_sparsity(&self) -> f64 {
+        self.controller.mean_sparsity()
+    }
+
+    fn feat_shape(&self) -> [usize; 3] {
+        [self.cfg.batch, self.cfg.seq - 1, self.cfg.patch_dim]
+    }
+
+    /// One Listing-1 iteration over a labeled batch.
+    pub fn train_iteration(&mut self, iter: usize, batch: &ClsBatch) -> Result<f32> {
+        let t0 = Instant::now();
+        let mut inputs = Vec::with_capacity(3 * self.params.len() + self.cfg.masks.len() + 3);
+        for (_, t) in self.params.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        for (_, t) in self.adam_m.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        for (_, t) in self.adam_v.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        inputs.push(HostValue::scalar_i32(self.step));
+        for (name, _) in &self.cfg.masks {
+            let fine = expand_mask_grid(&self.controller.masks()[name], self.block_mult);
+            inputs.push(HostValue::tensor(fine.to_tensor()));
+        }
+        let fs = self.feat_shape();
+        inputs.push(HostValue::F32 {
+            shape: fs.to_vec(),
+            data: batch.features.clone(),
+        });
+        inputs.push(HostValue::i32s(&[self.cfg.batch], batch.labels.clone()));
+
+        let entry = format!("{}_train_step", self.cfg.name);
+        let out = self.rt.execute(&entry, &inputs)?;
+        let p = self.params.len();
+        let names: Vec<String> = self.params.names().to_vec();
+        for (i, name) in names.iter().enumerate() {
+            self.params.insert(name.clone(), out[i].clone().into_tensor()?);
+            self.adam_m
+                .insert(name.clone(), out[p + i].clone().into_tensor()?);
+            self.adam_v
+                .insert(name.clone(), out[2 * p + i].clone().into_tensor()?);
+        }
+        self.step = out[3 * p].as_i32().context("step")?[0];
+        let loss = out[3 * p + 1].scalar()?;
+
+        let mask_update = self.controller.should_update(iter);
+        let mut regrown_ratio = 0.0;
+        if mask_update {
+            let mut weights = BTreeMap::new();
+            let mut grads = BTreeMap::new();
+            for (gi, wname) in self.cfg.mlp_weights.iter().enumerate() {
+                weights.insert(wname.clone(), self.params.req(wname).clone());
+                grads.insert(wname.clone(), out[3 * p + 2 + gi].clone().into_tensor()?);
+            }
+            let upd = self.controller.update(iter, &weights, &grads);
+            regrown_ratio = upd.stats.regrown_ratio;
+            for (name, to_zero) in &upd.regrown {
+                let block = self.cfg.block * self.block_mult;
+                let w = self.params.get_mut(name).unwrap();
+                let mut inv = BlockMask::ones(to_zero.rb, to_zero.cb);
+                for r in 0..to_zero.rb {
+                    for c in 0..to_zero.cb {
+                        if to_zero.get(r, c) {
+                            inv.set(r, c, false);
+                        }
+                    }
+                }
+                inv.apply_to(w.data_mut(), block);
+            }
+        }
+
+        self.log.push(IterLog {
+            iter,
+            loss,
+            secs: t0.elapsed().as_secs_f64(),
+            target_sparsity: self.controller.target_sparsity(iter),
+            mean_mask_sparsity: self.controller.mean_sparsity(),
+            regrown_ratio,
+            mask_update,
+        });
+        Ok(loss)
+    }
+
+    /// Score a held-out set: loss, accuracy, Matthews correlation (binary),
+    /// F1 (binary, positive class = 1).
+    pub fn eval(&self, batches: &[ClsBatch]) -> Result<EvalScores> {
+        let entry = format!("{}_eval_loss", self.cfg.name);
+        let mut losses = Vec::new();
+        let (mut tp, mut tn, mut fp, mut fn_) = (0u64, 0u64, 0u64, 0u64);
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        for b in batches {
+            let mut inputs = Vec::with_capacity(self.params.len() + self.cfg.masks.len() + 2);
+            for (_, t) in self.params.in_order() {
+                inputs.push(HostValue::from_tensor(t));
+            }
+            for (name, _) in &self.cfg.masks {
+                let fine = expand_mask_grid(&self.controller.masks()[name], self.block_mult);
+                inputs.push(HostValue::tensor(fine.to_tensor()));
+            }
+            let fs = self.feat_shape();
+            inputs.push(HostValue::F32 {
+                shape: fs.to_vec(),
+                data: b.features.clone(),
+            });
+            inputs.push(HostValue::i32s(&[self.cfg.batch], b.labels.clone()));
+            let out = self.rt.execute(&entry, &inputs)?;
+            losses.push(out[0].scalar()? as f64);
+            let logits = out[1].as_f32()?;
+            let nc = self.cfg.num_classes;
+            for (row, &label) in b.labels.iter().enumerate() {
+                let slice = &logits[row * nc..(row + 1) * nc];
+                let pred = slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                total += 1;
+                if pred == label {
+                    correct += 1;
+                }
+                match (pred, label) {
+                    (1, 1) => tp += 1,
+                    (0, 0) => tn += 1,
+                    (1, 0) => fp += 1,
+                    (0, 1) => fn_ += 1,
+                    _ => {}
+                }
+            }
+        }
+        Ok(EvalScores {
+            loss: stats::mean(&losses),
+            accuracy: correct as f64 / total.max(1) as f64,
+            matthews: stats::matthews_corr(tp, tn, fp, fn_),
+            f1: stats::f1(tp, fp, fn_),
+        })
+    }
+}

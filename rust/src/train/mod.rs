@@ -1,0 +1,15 @@
+//! Training orchestration (L3): drive the AOT `train_step` executables,
+//! interleave the blocked prune-and-grow controller per the paper's
+//! Listing 1, and log the per-iteration series behind Tables 2/4/5/6 and
+//! Figs. 8/10.
+//!
+//! * [`pretrain`] — LM pretraining on the synthetic corpus.
+//! * [`classify`] — classification (ViT / GLUE twins) training +
+//!   fine-tuning, including the dense-checkpoint → sparsify-and-recover
+//!   pipeline of Table 1 / §5.2.
+
+pub mod classify;
+pub mod pretrain;
+
+pub use classify::{ClassifyTrainer, EvalScores};
+pub use pretrain::{IterLog, PretrainOptions, Trainer};

@@ -1,0 +1,134 @@
+//! Tiny declarative CLI parsing (clap stand-in).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults keep call sites compact:
+//!
+//! ```no_run
+//! # use blast::util::cli::Args;
+//! let a = Args::parse_from(vec!["exp".into(), "tab4".into(), "--steps".into(), "200".into()]);
+//! assert_eq!(a.pos(0), Some("exp"));
+//! assert_eq!(a.get_usize("steps", 100), 200);
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from process args (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse_from(argv: Vec<String>) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usize, e.g. `--blocks 32,64,128`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad int {s:?}")))
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of f64, e.g. `--sparsities 0.7,0.9,0.95`.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad num {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // boolean flags must use `=` or come after positionals (documented
+        // limitation of arity-free parsing)
+        let a = Args::parse_from(argv("run pos2 --steps 10 --lr=0.5 --verbose"));
+        assert_eq!(a.pos(0), Some("run"));
+        assert_eq!(a.pos(1), Some("pos2"));
+        assert_eq!(a.get_usize("steps", 0), 10);
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse_from(argv("--blocks 32,64 --sp 0.5,0.95"));
+        assert_eq!(a.get_usize_list("blocks", &[]), vec![32, 64]);
+        assert_eq!(a.get_f64_list("sp", &[]), vec![0.5, 0.95]);
+        assert_eq!(a.get_usize_list("missing", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse_from(argv("--flag"));
+        assert!(a.get_bool("flag"));
+    }
+}

@@ -1,0 +1,46 @@
+//! Self-built substrates for the offline environment.
+//!
+//! Only the `xla` crate's dependency closure exists in the vendored
+//! registry, so the usual ecosystem crates are re-implemented here at the
+//! scale this project needs: a scoped thread pool (rayon stand-in), a JSON
+//! parser/serializer (serde stand-in), a declarative CLI parser (clap
+//! stand-in), a deterministic PRNG with the samplers the data generators
+//! need, and timing/statistics helpers.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(n: usize, m: usize) -> usize {
+    n.div_ceil(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

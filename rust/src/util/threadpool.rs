@@ -1,0 +1,235 @@
+//! Persistent scoped thread pool (rayon stand-in).
+//!
+//! The pool keeps `ncpu` parked workers and exposes a blocking
+//! `parallel_for(n, f)` that splits `0..n` into per-worker index grabs via a
+//! shared atomic counter. The caller blocks until every index is processed,
+//! so borrowed data in `f` is safe to reference — the closure's lifetime is
+//! erased internally but provably outlives its use (the completion barrier
+//! fires before `parallel_for` returns).
+//!
+//! This matters for the kernel hot paths: decode-time GEMMs run every few
+//! hundred microseconds, and re-spawning OS threads per call (the
+//! `std::thread::scope` pattern) costs more than some of the GEMMs
+//! themselves.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Arc<JobInner>;
+
+struct JobInner {
+    // type-erased `&(dyn Fn(usize) + Sync)` valid until `done` is signaled
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    n: usize,
+    chunk: usize,
+    pending: AtomicUsize,
+}
+
+unsafe impl Send for JobInner {}
+unsafe impl Sync for JobInner {}
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    cv: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Arc<Self> {
+        let workers = workers.max(1);
+        let pool = Arc::new(ThreadPool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(Vec::new()),
+                cv: Condvar::new(),
+            }),
+            workers,
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        for _ in 0..workers {
+            let shared = pool.shared.clone();
+            let pool2 = Arc::downgrade(&pool);
+            std::thread::spawn(move || loop {
+                let job = {
+                    let mut q = shared.queue.lock().unwrap();
+                    loop {
+                        if let Some(j) = q.pop() {
+                            break j;
+                        }
+                        q = shared.cv.wait(q).unwrap();
+                    }
+                };
+                run_job(&job);
+                if let Some(p) = pool2.upgrade() {
+                    if job.pending.load(Ordering::Acquire) == 0 {
+                        let _g = p.done.lock().unwrap();
+                        p.done_cv.notify_all();
+                    }
+                }
+            });
+        }
+        pool
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, blocking until all complete.
+    /// Indices are handed out in chunks to amortize the atomic traffic.
+    pub fn parallel_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.workers == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let chunk = (n / (self.workers * 4)).max(1);
+        // SAFETY: `job` is only executed by worker threads between now and
+        // the `pending == 0` wait below; `f` outlives this function call.
+        let f_erased: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        let job: Job = Arc::new(JobInner {
+            f: f_erased,
+            next: AtomicUsize::new(0),
+            n,
+            chunk,
+            pending: AtomicUsize::new(n),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            // enqueue one handle per worker so all of them participate
+            for _ in 0..self.workers {
+                q.push(job.clone());
+            }
+        }
+        self.shared.cv.notify_all();
+        // the calling thread helps too
+        run_job(&job);
+        if job.pending.load(Ordering::Acquire) != 0 {
+            let mut g = self.done.lock().unwrap();
+            while job.pending.load(Ordering::Acquire) != 0 {
+                let (g2, _timeout) = self
+                    .done_cv
+                    .wait_timeout(g, std::time::Duration::from_millis(1))
+                    .unwrap();
+                g = g2;
+            }
+        }
+    }
+}
+
+fn run_job(job: &JobInner) {
+    // SAFETY: see `parallel_for` — the reference is valid while pending > 0.
+    let f = unsafe { &*job.f };
+    loop {
+        let start = job.next.fetch_add(job.chunk, Ordering::Relaxed);
+        if start >= job.n {
+            break;
+        }
+        let end = (start + job.chunk).min(job.n);
+        for i in start..end {
+            f(i);
+        }
+        job.pending.fetch_sub(end - start, Ordering::AcqRel);
+    }
+}
+
+static GLOBAL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+
+/// The process-wide pool (ncpu workers, lazily created).
+pub fn global() -> &'static Arc<ThreadPool> {
+    GLOBAL.get_or_init(|| {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ThreadPool::new(n)
+    })
+}
+
+/// Convenience: run `f(i)` for `i in 0..n` on the global pool.
+pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
+    global().parallel_for(n, &f);
+}
+
+/// Split `data` into `n_chunks` contiguous mutable chunks and process each on
+/// the pool. `f(chunk_index, chunk)`.
+pub fn parallel_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let base = data.as_mut_ptr() as usize;
+    let total = data.len();
+    parallel_for(n_chunks, |ci| {
+        let start = ci * chunk_len;
+        let end = (start + chunk_len).min(total);
+        // SAFETY: chunks are disjoint; `data` is borrowed mutably for the
+        // duration of the (blocking) parallel_for.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(start), end - start) };
+        f(ci, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn reentrant_calls_sequential() {
+        for _ in 0..50 {
+            let sum = AtomicU64::new(0);
+            parallel_for(64, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 64 * 63 / 2);
+        }
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint() {
+        let mut v = vec![0u32; 257];
+        parallel_chunks_mut(&mut v, 32, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        assert_eq!(v[0], 1);
+        assert_eq!(v[256], 9);
+    }
+
+    #[test]
+    fn zero_and_one_items() {
+        parallel_for(0, |_| panic!("should not run"));
+        let ran = AtomicU64::new(0);
+        parallel_for(1, |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+}

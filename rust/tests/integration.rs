@@ -1,0 +1,280 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These are the cross-layer proofs:
+//!  * L1→L3: the Pallas-lowered kernels execute through PJRT from Rust and
+//!    match the native Rust kernels bit-for-tolerance.
+//!  * L2→L3: `train_step` drives loss down; eval/perplexity works; the
+//!    Pallas-MLP model variant agrees with the masked-dense variant.
+//!  * native engine ↔ AOT graphs: identical weights + masks produce the
+//!    same prefill logits in both stacks.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use blast::kernels::bspmm::{bspmm, fused_mlp_sparse, FusedMlpWeights};
+use blast::model::config::NativeConfig;
+use blast::model::engine::{Engine, MlpMode};
+use blast::model::params::ParamStore;
+use blast::runtime::{HostValue, Runtime};
+use blast::sparse::{Bcsc, BlockMask};
+use blast::tensor::Tensor;
+use blast::train::pretrain::{PretrainOptions, Trainer};
+use blast::util::rng::Rng;
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::open_default().expect("run `make artifacts` first"))
+}
+
+// ---------------------------------------------------------------------------
+// L1 → L3: Pallas kernel artifacts vs native kernels
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pallas_bspmm_artifact_matches_native_kernel() {
+    let rt = runtime();
+    let info = rt.manifest().entry("bspmm_pallas").unwrap().clone();
+    // shapes from the manifest: x (m,k), w (k,n), mask (k/b, n/b)
+    let m = info.inputs[0].shape[0];
+    let k = info.inputs[0].shape[1];
+    let n = info.inputs[1].shape[1];
+    let kb = info.inputs[2].shape[0];
+    let nb = info.inputs[2].shape[1];
+    let b = k / kb;
+    assert_eq!(n / nb, b);
+
+    let mut rng = Rng::new(11);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let mask = BlockMask::random(kb, nb, 0.5, &mut rng);
+
+    let out = rt
+        .execute(
+            "bspmm_pallas",
+            &[
+                HostValue::from_tensor(&x),
+                HostValue::from_tensor(&w),
+                HostValue::tensor(mask.to_tensor()),
+            ],
+        )
+        .unwrap();
+    let y_pallas = out[0].clone().into_tensor().unwrap();
+
+    let y_native = bspmm(&x, &Bcsc::from_dense(&w, &mask, b));
+    let diff = y_pallas.max_abs_diff(&y_native);
+    assert!(diff < 1e-2, "pallas vs native bspmm diff {diff}");
+}
+
+#[test]
+fn pallas_fused_mlp_artifact_matches_native_kernel() {
+    let rt = runtime();
+    let info = rt.manifest().entry("fused_mlp_pallas").unwrap().clone();
+    let m = info.inputs[0].shape[0];
+    let k = info.inputs[0].shape[1];
+    let f = info.inputs[1].shape[1];
+    let kb = info.inputs[4].shape[0];
+    let b = k / kb;
+
+    let mut rng = Rng::new(12);
+    let x = Tensor::randn(&[m, k], 0.5, &mut rng);
+    let w1 = Tensor::randn(&[k, f], 0.05, &mut rng);
+    let w2 = Tensor::randn(&[k, f], 0.05, &mut rng);
+    let w3 = Tensor::randn(&[f, k], 0.05, &mut rng);
+    let m1 = BlockMask::random(k / b, f / b, 0.4, &mut rng);
+    let m2 = BlockMask::random(k / b, f / b, 0.4, &mut rng);
+    let m3 = BlockMask::random(f / b, k / b, 0.4, &mut rng);
+
+    let out = rt
+        .execute(
+            "fused_mlp_pallas",
+            &[
+                HostValue::from_tensor(&x),
+                HostValue::from_tensor(&w1),
+                HostValue::from_tensor(&w2),
+                HostValue::from_tensor(&w3),
+                HostValue::tensor(m1.to_tensor()),
+                HostValue::tensor(m2.to_tensor()),
+                HostValue::tensor(m3.to_tensor()),
+            ],
+        )
+        .unwrap();
+    let y_pallas = out[0].clone().into_tensor().unwrap();
+
+    let y_native = fused_mlp_sparse(
+        &x,
+        &FusedMlpWeights {
+            w1: &Bcsc::from_dense(&w1, &m1, b),
+            w2: &Bcsc::from_dense(&w2, &m2, b),
+            w3: &Bcsc::from_dense(&w3, &m3, b),
+        },
+    );
+    let diff = y_pallas.max_abs_diff(&y_native);
+    assert!(diff < 1e-2, "pallas vs native fused MLP diff {diff}");
+}
+
+// ---------------------------------------------------------------------------
+// L2 → L3: training through PJRT
+// ---------------------------------------------------------------------------
+
+#[test]
+fn micro_training_reduces_loss_and_applies_sparsity() {
+    let rt = runtime();
+    let opts = PretrainOptions {
+        total_iters: 25,
+        s_max: 0.6,
+        step_size: 5,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(rt, "micro", opts).unwrap();
+    t.run(25).unwrap();
+    let first = t.log[0].loss;
+    let last = t.log.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    // schedule reached a meaningful sparsity and masks follow it
+    assert!(t.controller().mean_sparsity() > 0.3);
+    // perplexity is finite and below vocab size (the model learned)
+    let ppl = t.eval_perplexity(4).unwrap();
+    assert!(ppl.is_finite() && ppl < 256.0, "ppl {ppl}");
+}
+
+#[test]
+fn pallas_model_variant_matches_dense_variant_through_pjrt() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("micro-llama").unwrap().clone();
+    let params = ParamStore::init(&cfg, 5);
+    let mut rng = Rng::new(6);
+    let mut inputs = Vec::new();
+    for (_, t) in params.in_order() {
+        inputs.push(HostValue::from_tensor(t));
+    }
+    for (name, shape) in &cfg.masks {
+        let mask = BlockMask::random(shape[0], shape[1], 0.5, &mut rng);
+        let _ = name;
+        inputs.push(HostValue::tensor(mask.to_tensor()));
+    }
+    let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| (i * 31 % cfg.vocab) as i32)
+        .collect();
+    let tgts: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| (i * 17 % cfg.vocab) as i32)
+        .collect();
+    inputs.push(HostValue::i32s(&[cfg.batch, cfg.seq], toks));
+    inputs.push(HostValue::i32s(&[cfg.batch, cfg.seq], tgts));
+
+    let dense = rt.execute("micro-llama_eval_loss", &inputs).unwrap()[0]
+        .scalar()
+        .unwrap();
+    let pallas = rt.execute("micro-llama_eval_loss_pallas", &inputs).unwrap()[0]
+        .scalar()
+        .unwrap();
+    assert!(
+        (dense - pallas).abs() < 1e-3,
+        "dense {dense} vs pallas {pallas}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// native engine ↔ AOT prefill agreement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_engine_matches_aot_prefill_logits() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("micro-llama").unwrap().clone();
+    let params = ParamStore::init(&cfg, 9);
+    let mut rng = Rng::new(10);
+    let mut masks = BTreeMap::new();
+    let mut inputs = Vec::new();
+    for (_, t) in params.in_order() {
+        inputs.push(HostValue::from_tensor(t));
+    }
+    for (name, shape) in &cfg.masks {
+        let mask = BlockMask::random(shape[0], shape[1], 0.4, &mut rng);
+        inputs.push(HostValue::tensor(mask.to_tensor()));
+        masks.insert(name.clone(), mask);
+    }
+    let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| (i * 13 % cfg.vocab) as i32)
+        .collect();
+    inputs.push(HostValue::i32s(&[cfg.batch, cfg.seq], toks.clone()));
+
+    let out = rt.execute("micro-llama_prefill", &inputs).unwrap();
+    let logits_aot = out[0].clone().into_tensor().unwrap(); // (batch, vocab)
+
+    let native_cfg = NativeConfig::from_manifest(&cfg);
+    let engine = Engine::new(native_cfg, &params, &masks, MlpMode::Sparse).unwrap();
+    for row in 0..cfg.batch {
+        let prompt: Vec<u32> = toks[row * cfg.seq..(row + 1) * cfg.seq]
+            .iter()
+            .map(|&t| t as u32)
+            .collect();
+        let mut cache = engine.new_cache();
+        let logits_native = engine.prefill(&prompt, &mut cache).unwrap();
+        for v in 0..cfg.vocab {
+            let a = logits_aot.at2(row, v);
+            let b = logits_native[v];
+            assert!(
+                (a - b).abs() < 2e-2,
+                "row {row} vocab {v}: aot {a} vs native {b}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode path through PJRT
+// ---------------------------------------------------------------------------
+
+#[test]
+fn aot_prefill_decode_consistent_with_full_prefill() {
+    let rt = runtime();
+    let cfg = rt.manifest().config("micro-llama").unwrap().clone();
+    let params = ParamStore::init(&cfg, 13);
+    let mut base_inputs = Vec::new();
+    for (_, t) in params.in_order() {
+        base_inputs.push(HostValue::from_tensor(t));
+    }
+    for (_, shape) in &cfg.masks {
+        base_inputs.push(HostValue::tensor(BlockMask::ones(shape[0], shape[1]).to_tensor()));
+    }
+
+    // full prompt prefill
+    let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| (i * 7 % cfg.vocab) as i32)
+        .collect();
+    let mut full_in = base_inputs.clone();
+    full_in.push(HostValue::i32s(&[cfg.batch, cfg.seq], toks.clone()));
+    let full_out = rt.execute("micro-llama_prefill", &full_in).unwrap();
+    let logits_full = full_out[0].clone().into_tensor().unwrap();
+
+    // prefix prefill (prompt padded — AOT shape is fixed, so we re-prefill
+    // the full-but-one prompt and decode the final token)
+    let mut prefix = toks.clone();
+    // replace final position of each row with token 0 (it will be masked by
+    // decode at pos = seq-1 anyway, but prefill reads it — so instead
+    // prefill on a rolled prompt and check decode at the last position)
+    for row in 0..cfg.batch {
+        prefix[row * cfg.seq + cfg.seq - 1] = 0;
+    }
+    let mut pre_in = base_inputs.clone();
+    pre_in.push(HostValue::i32s(&[cfg.batch, cfg.seq], prefix));
+    let pre_out = rt.execute("micro-llama_prefill", &pre_in).unwrap();
+    let kc = pre_out[1].clone();
+    let vc = pre_out[2].clone();
+
+    // decode the true final token at position seq-1
+    let last_tokens: Vec<i32> = (0..cfg.batch)
+        .map(|row| toks[row * cfg.seq + cfg.seq - 1])
+        .collect();
+    let mut dec_in = base_inputs.clone();
+    dec_in.push(kc);
+    dec_in.push(vc);
+    dec_in.push(HostValue::i32s(&[cfg.batch], last_tokens));
+    dec_in.push(HostValue::scalar_i32(cfg.seq as i32 - 1));
+    let dec_out = rt.execute("micro-llama_decode_step", &dec_in).unwrap();
+    let logits_dec = dec_out[0].clone().into_tensor().unwrap();
+
+    // the decode logits must match the full prefill's last-position logits
+    let diff = logits_dec.max_abs_diff(&logits_full);
+    assert!(diff < 2e-2, "decode vs full prefill diff {diff}");
+}
