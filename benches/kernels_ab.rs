@@ -1,0 +1,8 @@
+//! Bench: seed-vs-packed kernel A/B; writes BENCH_kernels.json.
+//! `cargo bench --bench kernels_ab [-- --quick --out BENCH_kernels.json]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::kernel_exps::kernels(&args).unwrap();
+}

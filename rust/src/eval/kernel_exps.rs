@@ -8,16 +8,17 @@
 
 use anyhow::Result;
 
-use crate::kernels::bspmm::{bspmm, bspmm_flops};
+use crate::kernels::bspmm::{bspmm, bspmm_flops, bspmm_into, bspmm_into_ref};
 use crate::kernels::csr_spmm::csr_spmm;
-use crate::kernels::gemm::{gemm, gemm_flops};
+use crate::kernels::gemm::{gemm, gemm_flops, gemm_into, gemm_into_ref, gemm_naive};
 use crate::model::config::{paper_catalog, ModelKind, NativeConfig};
 use crate::model::engine::{Engine, MlpMode};
 use crate::model::params::ParamStore;
 use crate::sparse::{Bcsc, BlockMask, Csr};
 use crate::tensor::Tensor;
-use crate::testkit::bench::{bench_cfg, black_box, fmt_flops, Table};
+use crate::testkit::bench::{bench_cfg, black_box, fmt_flops, JsonReport, Table};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -29,6 +30,162 @@ fn meas<F: FnMut()>(name: &str, quick: bool, mut f: F) -> f64 {
         Duration::from_millis(400)
     };
     bench_cfg(name, budget, if quick { 3 } else { 5 }, &mut f).secs()
+}
+
+/// `blast exp kernels` — seed-vs-packed kernel A/B harness.
+///
+/// Measures the retained seed kernels (`gemm_into_ref`, `bspmm_into_ref`)
+/// against the packed micro-kernel engine on fig4-shaped operands, checks
+/// both against the naive/masked oracles, prints the table and writes the
+/// machine-readable `BENCH_kernels.json` (override with `--out`). This is
+/// the perf-trajectory baseline every future kernel PR is compared to;
+/// PR 1's acceptance gate is speedup ≥ 1.5× on dense GEMM and BSpMM.
+pub fn kernels(args: &Args) -> Result<()> {
+    let quick = args.get_bool("quick");
+    let out_path = args.get_str("out", "BENCH_kernels.json");
+    let m = args.get_usize("seq", 256);
+    let embs = args.get_usize_list("embs", if quick { &[256] } else { &[512, 1024] });
+    let blocks = args.get_usize_list("blocks", &[32, 64, 128]);
+    let sparsities = args.get_f64_list("sparsities", &[0.0, 0.8, 0.9, 0.95]);
+
+    let mut report = JsonReport::new("kernels");
+    report.meta(
+        "threads",
+        Json::num(crate::util::threadpool::global().workers() as f64),
+    );
+    report.meta("seq", Json::num(m as f64));
+    let mut table = Table::new(
+        "Seed vs packed kernel engine (PR1 gate: >= 1.5x on gemm & bspmm)",
+        &["kernel", "shape", "block", "sparsity", "seed", "packed", "speedup", "eff-GFLOP/s", "oracle-diff"],
+    );
+    let mut rng = Rng::new(0xB1A5);
+    for &emb in &embs {
+        let n = 4 * emb;
+        let x = Tensor::randn(&[m, emb], 1.0, &mut rng);
+        let wd = Tensor::randn(&[emb, n], 1.0, &mut rng);
+        // oracle check on the smallest shape only (naive is O(mkn) scalar)
+        let oracle_diff = if emb == embs[0] {
+            let fast = gemm(&x, &wd);
+            let slow = gemm_naive(&x, &wd);
+            fast.max_abs_diff(&slow)
+        } else {
+            f32::NAN
+        };
+        let mut c = vec![0.0f32; m * n];
+        let t_ref = meas("gemm-ref", quick, || {
+            gemm_into_ref(x.data(), wd.data(), &mut c, m, emb, n);
+            black_box(&c);
+        });
+        let t_new = meas("gemm-packed", quick, || {
+            gemm_into(x.data(), wd.data(), &mut c, m, emb, n);
+            black_box(&c);
+        });
+        let gflops = gemm_flops(m, emb, n) / t_new / 1e9;
+        push_ab_row(
+            &mut table,
+            &mut report,
+            "gemm",
+            m,
+            emb,
+            n,
+            0,
+            0.0,
+            t_ref,
+            t_new,
+            gflops,
+            oracle_diff,
+        );
+        for &b in &blocks {
+            for &s in &sparsities {
+                let mask = BlockMask::random(emb / b, n / b, s, &mut rng);
+                let w = Bcsc::from_dense(&wd, &mask, b);
+                let oracle_diff = if emb == embs[0] && b == blocks[0] {
+                    let got = bspmm(&x, &w);
+                    let mut masked = wd.clone();
+                    mask.apply_to(masked.data_mut(), b);
+                    got.max_abs_diff(&gemm_naive(&x, &masked))
+                } else {
+                    f32::NAN
+                };
+                let mut y = vec![0.0f32; m * n];
+                let t_ref = meas("bspmm-ref", quick, || {
+                    bspmm_into_ref(x.data(), &w, &mut y, m);
+                    black_box(&y);
+                });
+                let t_new = meas("bspmm-packed", quick, || {
+                    bspmm_into(x.data(), &w, &mut y, m);
+                    black_box(&y);
+                });
+                let gflops = bspmm_flops(m, &w) / t_new / 1e9;
+                push_ab_row(
+                    &mut table,
+                    &mut report,
+                    "bspmm",
+                    m,
+                    emb,
+                    n,
+                    b,
+                    s,
+                    t_ref,
+                    t_new,
+                    gflops,
+                    oracle_diff,
+                );
+            }
+        }
+    }
+    table.print();
+    report.write(std::path::Path::new(&out_path))?;
+    println!("\nwrote {} rows to {out_path}", report.len());
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_ab_row(
+    table: &mut Table,
+    report: &mut JsonReport,
+    kernel: &str,
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    sparsity: f64,
+    t_ref: f64,
+    t_new: f64,
+    gflops: f64,
+    oracle_diff: f32,
+) {
+    table.row(&[
+        kernel.to_string(),
+        format!("{m}x{k}x{n}"),
+        if block == 0 { "-".into() } else { block.to_string() },
+        format!("{:.0}%", sparsity * 100.0),
+        crate::testkit::bench::fmt_time(t_ref),
+        crate::testkit::bench::fmt_time(t_new),
+        format!("{:.2}x", t_ref / t_new),
+        format!("{gflops:.2}"),
+        if oracle_diff.is_nan() {
+            "-".into()
+        } else {
+            format!("{oracle_diff:.2e}")
+        },
+    ]);
+    let mut row = vec![
+        ("kernel", Json::str(kernel)),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("n", Json::num(n as f64)),
+        ("block", Json::num(block as f64)),
+        ("sparsity", Json::num(sparsity)),
+        ("seed_ns", Json::num(t_ref * 1e9)),
+        ("packed_ns", Json::num(t_new * 1e9)),
+        ("speedup", Json::num(t_ref / t_new)),
+        ("eff_gflops", Json::num(gflops)),
+    ];
+    if !oracle_diff.is_nan() {
+        row.push(("oracle_max_diff", Json::num(oracle_diff as f64)));
+    }
+    report.push(Json::obj(row));
 }
 
 /// Fig. 4: BSpMM speedup over the dense baseline across (emb, block,

@@ -6,8 +6,9 @@
 //! `--quick` and experiment-specific flags; defaults are sized for minutes,
 //! not hours.
 //!
-//! | id    | paper artifact                             | driver            |
-//! |-------|--------------------------------------------|-------------------|
+//! | id      | artifact                                  | driver            |
+//! |---------|-------------------------------------------|-------------------|
+//! | kernels | seed-vs-packed A/B → BENCH_kernels.json   | [`kernel_exps`]   |
 //! | fig4  | BSpMM kernel speedup sweep                 | [`kernel_exps`]   |
 //! | fig5  | Llama-family MLP speedup                   | [`kernel_exps`]   |
 //! | fig6  | end-to-end inference speedup               | [`kernel_exps`]   |
@@ -33,13 +34,14 @@ use anyhow::{bail, Result};
 use crate::util::cli::Args;
 
 pub const ALL: &[&str] = &[
-    "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "fig8", "tab3", "fig9",
-    "tab4", "fig10", "tab5", "tab6", "fig11",
+    "kernels", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "fig8", "tab3",
+    "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
 ];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, args: &Args) -> Result<()> {
     match id {
+        "kernels" => kernel_exps::kernels(args),
         "fig4" => kernel_exps::fig4(args),
         "fig5" => kernel_exps::fig5(args),
         "fig6" => kernel_exps::fig6(args),

@@ -1,27 +1,53 @@
-//! BLaST BSpMM — the paper's kernel (§3.3), CPU edition.
+//! BLaST BSpMM — the paper's kernel (§3.3), CPU edition, on the packed
+//! register-blocked micro-kernel engine.
 //!
 //! `Y = X @ W` with `W` in BCSC. The structure mirrors Listing 2 of the
-//! paper: for each output block column, stream the surviving blocks,
-//! resolve the dynamic `X` panel via the block-row index (the "pointer
-//! algebra on blk_col_ptr"), and run a dense micro-GEMM per block. Pruned
-//! blocks cost *nothing* — no FLOPs, no loads — which is where the
-//! `1/(1-s)`-shaped speedup over [`gemm`] comes from.
+//! paper — for each output block column, stream the surviving blocks and
+//! resolve the dynamic `X` panel via the block-row index — but the inner
+//! product is no longer a scalar axpy over strided gathers:
 //!
-//! `blk_M` (the paper's dense-operand tile height) maps to the `MR` row
-//! tile here: the loaded `W` block is reused for `MR` rows of `X`.
+//! 1. every `MR`-row tile of `X` is transposed **once** into a k-major
+//!    panel ([`crate::kernels::pack::pack_a_panel`]); a surviving block at
+//!    block-row `br` then reads its `b`-deep sub-panel contiguously
+//!    instead of gathering stride-`k` per element;
+//! 2. each `(row tile, block column)` item accumulates into a contiguous
+//!    `mr×b` C tile via [`crate::kernels::microkernel::microkernel`]
+//!    (register-tiled accumulators, unrolled for b ∈ {8, 16, 32}) and
+//!    writes `Y` back once;
+//! 3. items are scheduled **cost-aware** — weighted by surviving blocks
+//!    per block column ([`crate::util::threadpool::parallel_for_weighted`])
+//!    — so high-sparsity masks with a few dense columns don't serialize
+//!    behind uniform index chunking.
+//!
+//! Pruned blocks still cost *nothing* — no FLOPs, no loads — which is
+//! where the `1/(1-s)`-shaped speedup over [`crate::kernels::gemm::gemm`]
+//! comes from. `blk_M` (the paper's dense-operand tile height) maps to the
+//! `MR` row tile here.
 //!
 //! [`fused_mlp_sparse`] extends the kernel over the whole Llama-style MLP
 //! (paper §3.3.3): per row tile the gated hidden state is produced and
-//! consumed in cache — the memory-bound nonlinearity rides along the
-//! compute-bound contractions instead of round-tripping through memory.
+//! consumed in cache, with every tile buffer (packed X panel, h1, h2,
+//! packed h panel) drawn from the thread-local scratch arena
+//! ([`crate::util::scratch`]) — zero heap traffic after warmup, where the
+//! seed kernel paid two `vec![0.0; mr*f]` allocations per tile per call.
+//!
+//! The seed scalar kernel is retained as [`bspmm_into_ref`]: it is the
+//! baseline the `BENCH_kernels.json` A/B harness measures against and a
+//! second correctness oracle.
 
 use crate::kernels::gemm::axpy;
+use crate::kernels::microkernel::microkernel;
+use crate::kernels::pack::pack_a_panel;
 use crate::sparse::Bcsc;
 use crate::tensor::Tensor;
-use crate::util::threadpool;
+use crate::util::{scratch, threadpool};
 
-/// Rows of X/Y per task (the paper's blk_M role).
-const MR: usize = 8;
+/// Rows of X/Y per tile (the paper's blk_M role). Taller than the seed's 8:
+/// each loaded `W` block is now reused across 16 packed rows.
+const MR: usize = 16;
+
+/// Rows per task of the reference kernel (seed value).
+const REF_MR: usize = 8;
 
 /// `Y = X @ W_bcsc`; allocates the output.
 pub fn bspmm(x: &Tensor, w: &Bcsc) -> Tensor {
@@ -33,7 +59,7 @@ pub fn bspmm(x: &Tensor, w: &Bcsc) -> Tensor {
     y
 }
 
-/// `Y += X @ W_bcsc` over raw slices.
+/// `Y += X @ W_bcsc` over raw slices — packed micro-kernel path.
 pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
     let (k, n) = w.shape();
     assert_eq!(x.len(), m * k);
@@ -43,14 +69,85 @@ pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
     }
     let b = w.block;
     let n_row_tiles = m.div_ceil(MR);
-    // task grid: row tiles × block columns; output regions are disjoint
+    // Phase 1: transpose every X row tile to k-major, once. Tile t lives at
+    // xp[t*MR*k ..] with leading dimension = that tile's row count.
+    let mut xp = scratch::take_uninit(m * k);
+    threadpool::parallel_chunks_mut(&mut xp, MR * k, |t, chunk| {
+        let i0 = t * MR;
+        let mr = chunk.len() / k;
+        pack_a_panel(&x[i0 * k..(i0 + mr) * k], k, mr, k, chunk);
+    });
+    // Phase 2: (row tile × block column) items, weighted by surviving
+    // blocks per column so pruned columns ride along for free and dense
+    // columns spread across workers. Weights come straight from col_ptr —
+    // no per-call weight vector on the hot path.
+    let cb = w.cb;
+    let y_base = y.as_mut_ptr() as usize;
+    let xp_ref: &[f32] = &xp;
+    let n_items = n_row_tiles * cb;
+    let weight = |t: usize| w.col_ptr[t % cb + 1] - w.col_ptr[t % cb];
+    threadpool::parallel_for_weighted(n_items, weight, |t| {
+        let it = t / cb;
+        let bc = t % cb;
+        let lo = w.col_ptr[bc];
+        let hi = w.col_ptr[bc + 1];
+        if lo == hi {
+            return;
+        }
+        let i0 = it * MR;
+        let i1 = (i0 + MR).min(m);
+        let mr = i1 - i0;
+        let xt = &xp_ref[i0 * k..i0 * k + mr * k];
+        // contiguous mr×b C-tile accumulator, written back to Y once
+        let mut yt = scratch::take_zeroed(mr * b);
+        for idx in lo..hi {
+            let br = w.row_idx[idx];
+            microkernel(
+                &xt[br * b * mr..],
+                mr,
+                mr,
+                w.block_vals(idx),
+                b,
+                b,
+                b,
+                &mut yt,
+                b,
+            );
+        }
+        // SAFETY: each (row tile, block column) item owns the disjoint
+        // spans y[i0+i, bc*b .. bc*b+b]; the per-row slices of length b
+        // never overlap across items and parallel_for blocks until done.
+        let y_ptr = y_base as *mut f32;
+        for i in 0..mr {
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(y_ptr.add((i0 + i) * n + bc * b), b)
+            };
+            for (d, s) in dst.iter_mut().zip(&yt[i * b..(i + 1) * b]) {
+                *d += *s;
+            }
+        }
+    });
+}
+
+/// The seed kernel: per-row scalar axpy over strided X gathers, uniform
+/// (row tile × block column) task grid. Kept as the A/B baseline for
+/// `BENCH_kernels.json` and as a second oracle.
+pub fn bspmm_into_ref(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
+    let (k, n) = w.shape();
+    assert_eq!(x.len(), m * k);
+    assert_eq!(y.len(), m * n);
+    if m == 0 || w.nnzb() == 0 {
+        return;
+    }
+    let b = w.block;
+    let n_row_tiles = m.div_ceil(REF_MR);
     let tasks = n_row_tiles * w.cb;
     let y_base = y.as_mut_ptr() as usize;
     threadpool::parallel_for(tasks, |t| {
         let it = t / w.cb;
         let bc = t % w.cb;
-        let i0 = it * MR;
-        let i1 = (i0 + MR).min(m);
+        let i0 = it * REF_MR;
+        let i1 = (i0 + REF_MR).min(m);
         let lo = w.col_ptr[bc];
         let hi = w.col_ptr[bc + 1];
         if lo == hi {
@@ -67,7 +164,6 @@ pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
                 let yrow = unsafe {
                     std::slice::from_raw_parts_mut(y_ptr.add(i * n + bc * b), b)
                 };
-                // micro-GEMM row: y[b] += sum_kk x[kk] * blk[kk, :]
                 for (kk, &xv) in xrow.iter().enumerate() {
                     if xv != 0.0 {
                         axpy(xv, &blk[kk * b..kk * b + b], yrow);
@@ -92,8 +188,11 @@ fn silu(x: f32) -> f32 {
 
 /// Fused sparse MLP: `Y = (SiLU(X W1) ⊙ (X W2)) W3` (paper Eq. 1).
 ///
-/// Per `MR`-row tile the two gate contractions, the SiLU epilogue and the
-/// down-projection all happen on cache-resident tile buffers.
+/// Per `MR`-row tile: the X panel is packed once and shared by both gate
+/// contractions, the SiLU epilogue runs on the cache-resident hidden tile,
+/// and the down-projection consumes the repacked hidden panel — all four
+/// tile buffers come from the thread-local scratch arena, so the hot path
+/// is allocation-free after warmup.
 pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
     let (m, e) = (x.rows(), x.cols());
     let (e1, f) = w.w1.shape();
@@ -109,22 +208,25 @@ pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
         let i0 = t * MR;
         let i1 = (i0 + MR).min(m);
         let mr = i1 - i0;
-        // tile-local hidden buffers (thread stack): mr×f each
-        let mut h1 = vec![0.0f32; mr * f];
-        let mut h2 = vec![0.0f32; mr * f];
-        let xt = &xd[i0 * e..i1 * e];
-        tile_bspmm(xt, w.w1, &mut h1, mr);
-        tile_bspmm(xt, w.w2, &mut h2, mr);
+        // pack the X tile once; both gate contractions stream it
+        let mut xp = scratch::take_uninit(mr * e);
+        pack_a_panel(&xd[i0 * e..i1 * e], e, mr, e, &mut xp);
+        let mut h1 = scratch::take_zeroed(mr * f);
+        let mut h2 = scratch::take_zeroed(mr * f);
+        tile_bspmm_packed(&xp, mr, w.w1, &mut h1);
+        tile_bspmm_packed(&xp, mr, w.w2, &mut h2);
         // fused epilogue: h1 <- silu(h1) * h2, in cache
-        for (a, &b) in h1.iter_mut().zip(h2.iter()) {
-            *a = silu(*a) * b;
+        for (a, &g) in h1.iter_mut().zip(h2.iter()) {
+            *a = silu(*a) * g;
         }
         // down-projection into the tile's Y rows
+        let mut hp = scratch::take_uninit(mr * f);
+        pack_a_panel(&h1, f, mr, f, &mut hp);
         // SAFETY: tiles own disjoint Y row ranges.
         let yt = unsafe {
             std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * e), mr * e)
         };
-        tile_bspmm(&h1, w.w3, yt, mr);
+        tile_bspmm_packed(&hp, mr, w.w3, yt);
     });
     y
 }
@@ -132,7 +234,14 @@ pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
 /// GELU MLP variant (GPT-2/ViT): `Y = GELU(X W1) W3`.
 pub fn gelu_mlp_sparse(x: &Tensor, w1: &Bcsc, w3: &Bcsc) -> Tensor {
     let (m, e) = (x.rows(), x.cols());
-    let (_, f) = w1.shape();
+    let (e1, f) = w1.shape();
+    assert_eq!(e, e1, "gelu_mlp_sparse: x cols {e} vs w1 rows {e1}");
+    assert_eq!(
+        w3.shape(),
+        (f, e),
+        "gelu_mlp_sparse: w3 shape {:?} vs expected ({f}, {e})",
+        w3.shape()
+    );
     let mut y = Tensor::zeros(&[m, e]);
     let n_tiles = m.div_ceil(MR);
     let y_base = y.data_mut().as_mut_ptr() as usize;
@@ -141,39 +250,47 @@ pub fn gelu_mlp_sparse(x: &Tensor, w1: &Bcsc, w3: &Bcsc) -> Tensor {
         let i0 = t * MR;
         let i1 = (i0 + MR).min(m);
         let mr = i1 - i0;
-        let mut h = vec![0.0f32; mr * f];
-        tile_bspmm(&xd[i0 * e..i1 * e], w1, &mut h, mr);
+        let mut xp = scratch::take_uninit(mr * e);
+        pack_a_panel(&xd[i0 * e..i1 * e], e, mr, e, &mut xp);
+        let mut h = scratch::take_zeroed(mr * f);
+        tile_bspmm_packed(&xp, mr, w1, &mut h);
         for a in h.iter_mut() {
             *a = crate::kernels::ops::gelu(*a);
         }
+        let mut hp = scratch::take_uninit(mr * f);
+        pack_a_panel(&h, f, mr, f, &mut hp);
+        // SAFETY: tiles own disjoint Y row ranges.
         let yt = unsafe {
             std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * e), mr * e)
         };
-        tile_bspmm(&h, w3, yt, mr);
+        tile_bspmm_packed(&hp, mr, w3, yt);
     });
     y
 }
 
-/// Single-threaded BSpMM over one row tile (used inside fused kernels).
+/// Single-threaded BSpMM over one packed row tile (the fused-MLP inner
+/// contraction). `xp` is k-major with leading dimension `mr`; `y` is
+/// row-major `mr × n`.
 #[inline]
-fn tile_bspmm(x: &[f32], w: &Bcsc, y: &mut [f32], mr: usize) {
+fn tile_bspmm_packed(xp: &[f32], mr: usize, w: &Bcsc, y: &mut [f32]) {
     let (k, n) = w.shape();
-    debug_assert_eq!(x.len(), mr * k);
+    debug_assert_eq!(xp.len(), mr * k);
     debug_assert_eq!(y.len(), mr * n);
     let b = w.block;
     for bc in 0..w.cb {
         for idx in w.col_ptr[bc]..w.col_ptr[bc + 1] {
             let br = w.row_idx[idx];
-            let blk = w.block_vals(idx);
-            for i in 0..mr {
-                let xrow = &x[i * k + br * b..i * k + br * b + b];
-                let yrow = &mut y[i * n + bc * b..i * n + bc * b + b];
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    if xv != 0.0 {
-                        axpy(xv, &blk[kk * b..kk * b + b], yrow);
-                    }
-                }
-            }
+            microkernel(
+                &xp[br * b * mr..],
+                mr,
+                mr,
+                w.block_vals(idx),
+                b,
+                b,
+                b,
+                &mut y[bc * b..],
+                n,
+            );
         }
     }
 }
@@ -187,9 +304,9 @@ pub fn bspmm_flops(m: usize, w: &Bcsc) -> f64 {
 mod tests {
     use super::*;
     use crate::kernels::gemm::gemm_naive;
+    use crate::prop_assert;
     use crate::sparse::BlockMask;
     use crate::testkit::prop;
-    use crate::prop_assert;
     use crate::util::rng::Rng;
 
     fn masked_dense(w: &Tensor, mask: &BlockMask, b: usize) -> Tensor {
@@ -218,12 +335,51 @@ mod tests {
     }
 
     #[test]
+    fn ref_and_packed_kernels_agree_property() {
+        prop::check_default("bspmm-ref-vs-packed", |rng| {
+            // wide blocks force the 32-column chunking; m crosses MR
+            let b = *prop::pick(rng, &[8, 32, 64]);
+            let rb = prop::usize_in(rng, 1, 3);
+            let cb = prop::usize_in(rng, 1, 3);
+            let m = *prop::pick(rng, &[1, 7, MR, MR + 3, 2 * MR + 5]);
+            let x = Tensor::randn(&[m, rb * b], 1.0, rng);
+            let w = Tensor::randn(&[rb * b, cb * b], 1.0, rng);
+            let mask = BlockMask::random(rb, cb, rng.f64(), rng);
+            let sp = Bcsc::from_dense(&w, &mask, b);
+            let mut y_new = Tensor::zeros(&[m, cb * b]);
+            bspmm_into(x.data(), &sp, y_new.data_mut(), m);
+            let mut y_ref = Tensor::zeros(&[m, cb * b]);
+            bspmm_into_ref(x.data(), &sp, y_ref.data_mut(), m);
+            let diff = y_new.max_abs_diff(&y_ref);
+            prop_assert!(diff < 1e-3, "diff {diff} (b={b} rb={rb} cb={cb} m={m})");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn dense_mask_equals_gemm() {
         let mut rng = Rng::new(1);
         let x = Tensor::randn(&[10, 32], 1.0, &mut rng);
         let w = Tensor::randn(&[32, 48], 1.0, &mut rng);
         let sp = Bcsc::from_dense(&w, &BlockMask::ones(2, 3), 16);
         assert!(bspmm(&x, &sp).allclose(&gemm_naive(&x, &w), 1e-3));
+    }
+
+    #[test]
+    fn zero_rows_and_fully_pruned_masks() {
+        let mut rng = Rng::new(2);
+        // m == 0: all kernels must accept empty X/Y without touching them
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let sp = Bcsc::from_dense(&w, &BlockMask::ones(2, 2), 8);
+        bspmm_into(&[], &sp, &mut [], 0);
+        bspmm_into_ref(&[], &sp, &mut [], 0);
+        let x0 = Tensor::zeros(&[0, 16]);
+        assert_eq!(bspmm(&x0, &sp).shape(), &[0, 16]);
+        // fully-pruned W: output must be exactly zero, no block touched
+        let pruned = Bcsc::from_dense(&w, &BlockMask::zeros(2, 2), 8);
+        let x = Tensor::randn(&[9, 16], 1.0, &mut rng);
+        let y = bspmm(&x, &pruned);
+        assert!(y.allclose(&Tensor::zeros(&[9, 16]), 0.0));
     }
 
     #[test]
@@ -259,6 +415,64 @@ mod tests {
     }
 
     #[test]
+    fn fused_mlp_edge_rows() {
+        // m == 0, m < MR, m == MR, m just past a tile boundary — both
+        // fused variants, against the unfused oracle
+        let mut rng = Rng::new(3);
+        let (b, e, f) = (8, 16, 32);
+        let w1d = Tensor::randn(&[e, f], 0.3, &mut rng);
+        let w2d = Tensor::randn(&[e, f], 0.3, &mut rng);
+        let w3d = Tensor::randn(&[f, e], 0.3, &mut rng);
+        let m1 = BlockMask::random(e / b, f / b, 0.4, &mut rng);
+        let m2 = BlockMask::random(e / b, f / b, 0.4, &mut rng);
+        let m3 = BlockMask::random(f / b, e / b, 0.4, &mut rng);
+        let w1 = Bcsc::from_dense(&w1d, &m1, b);
+        let w2 = Bcsc::from_dense(&w2d, &m2, b);
+        let w3 = Bcsc::from_dense(&w3d, &m3, b);
+        for m in [0usize, 1, MR - 1, MR, MR + 1, 2 * MR + 5] {
+            let x = Tensor::randn(&[m, e], 1.0, &mut rng);
+            let got = fused_mlp_sparse(&x, &FusedMlpWeights { w1: &w1, w2: &w2, w3: &w3 });
+            assert_eq!(got.shape(), &[m, e], "swiglu m={m}");
+            let h1 = gemm_naive(&x, &masked_dense(&w1d, &m1, b)).map(silu);
+            let h2 = gemm_naive(&x, &masked_dense(&w2d, &m2, b));
+            let mut h = h1.clone();
+            for (a, &bb) in h.data_mut().iter_mut().zip(h2.data()) {
+                *a *= bb;
+            }
+            let want = gemm_naive(&h, &masked_dense(&w3d, &m3, b));
+            assert!(
+                got.allclose(&want, 1e-3),
+                "swiglu m={m} diff {}",
+                got.max_abs_diff(&want)
+            );
+            let got = gelu_mlp_sparse(&x, &w1, &w3);
+            assert_eq!(got.shape(), &[m, e], "gelu m={m}");
+            let hg = gemm_naive(&x, &masked_dense(&w1d, &m1, b))
+                .map(crate::kernels::ops::gelu);
+            let want = gemm_naive(&hg, &masked_dense(&w3d, &m3, b));
+            assert!(
+                got.allclose(&want, 1e-3),
+                "gelu m={m} diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn fused_mlp_fully_pruned_is_zero() {
+        let mut rng = Rng::new(4);
+        let (b, e, f, m) = (8, 16, 32, 11);
+        let x = Tensor::randn(&[m, e], 1.0, &mut rng);
+        let w1 = Bcsc::from_dense(&Tensor::randn(&[e, f], 0.3, &mut rng), &BlockMask::zeros(2, 4), b);
+        let w2 = Bcsc::from_dense(&Tensor::randn(&[e, f], 0.3, &mut rng), &BlockMask::zeros(2, 4), b);
+        let w3 = Bcsc::from_dense(&Tensor::randn(&[f, e], 0.3, &mut rng), &BlockMask::zeros(4, 2), b);
+        let got = fused_mlp_sparse(&x, &FusedMlpWeights { w1: &w1, w2: &w2, w3: &w3 });
+        assert!(got.allclose(&Tensor::zeros(&[m, e]), 0.0));
+        let got = gelu_mlp_sparse(&x, &w1, &w3);
+        assert!(got.allclose(&Tensor::zeros(&[m, e]), 0.0));
+    }
+
+    #[test]
     fn gelu_mlp_matches_unfused() {
         let mut rng = Rng::new(5);
         let (b, e, f, m) = (8, 16, 32, 9);
@@ -275,6 +489,29 @@ mod tests {
         let h = gemm_naive(&x, &masked_dense(&w1d, &m1, b)).map(crate::kernels::ops::gelu);
         let want = gemm_naive(&h, &masked_dense(&w3d, &m3, b));
         assert!(got.allclose(&want, 1e-3), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    #[should_panic(expected = "gelu_mlp_sparse: x cols")]
+    fn gelu_mlp_rejects_mismatched_w1_rows() {
+        let mut rng = Rng::new(6);
+        let b = 8;
+        let x = Tensor::randn(&[4, 16], 1.0, &mut rng); // e = 16
+        let w1 = Bcsc::from_dense(&Tensor::randn(&[24, 32], 0.3, &mut rng), &BlockMask::ones(3, 4), b);
+        let w3 = Bcsc::from_dense(&Tensor::randn(&[32, 16], 0.3, &mut rng), &BlockMask::ones(4, 2), b);
+        let _ = gelu_mlp_sparse(&x, &w1, &w3);
+    }
+
+    #[test]
+    #[should_panic(expected = "gelu_mlp_sparse: w3 shape")]
+    fn gelu_mlp_rejects_mismatched_w3_shape() {
+        let mut rng = Rng::new(7);
+        let b = 8;
+        let x = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let w1 = Bcsc::from_dense(&Tensor::randn(&[16, 32], 0.3, &mut rng), &BlockMask::ones(2, 4), b);
+        // wrong: (f, e) should be (32, 16)
+        let w3 = Bcsc::from_dense(&Tensor::randn(&[24, 16], 0.3, &mut rng), &BlockMask::ones(3, 2), b);
+        let _ = gelu_mlp_sparse(&x, &w1, &w3);
     }
 
     #[test]

@@ -1,24 +1,44 @@
-//! Dense GEMM baseline (cuBLAS/CUTLASS stand-in).
+//! Dense GEMM baseline (cuBLAS/CUTLASS stand-in), rebuilt on the packed
+//! register-blocked micro-kernel.
 //!
-//! `C = A @ B`, row-major f32. Blocking scheme (COSMA-style, sized for
-//! typical x86 cache hierarchy):
+//! `C = A @ B`, row-major f32. BLIS/COSMA-style decomposition:
 //!
-//! * parallel over `MR`-row tiles of `C` (threads never share output rows);
-//! * inside a tile, loop `n` in `NC` column panels so the `MR×NC` output
-//!   subtile stays L1/L2-resident;
-//! * innermost `k` loop broadcasts `A[i,k]` and FMAs the `B[k, jc..jc+NC]`
-//!   panel row — this axpy form autovectorizes to AVX FMA and reuses each
-//!   loaded `B` row `MR` times.
+//! * [`PackedB`] panels: `B` is repacked once into `NR`-wide k-major
+//!   column panels (weights: once per model load, via
+//!   [`gemm_packed_into`]; ad-hoc calls: once per multiply inside
+//!   [`gemm_into`]);
+//! * threads own disjoint `MR`-row tiles of `C`; each task transposes its
+//!   `A` tile into a k-major panel (scratch-arena backed, allocation-free
+//!   after warmup) and walks the B panels;
+//! * [`crate::kernels::microkernel`] runs 4×NR register tiles over the two
+//!   packed panels — contiguous loads only, accumulators in registers, `C`
+//!   written once per tile.
+//!
+//! The seed kernel (scalar axpy over strided operands) is retained as
+//! [`gemm_into_ref`]: it is the baseline the `BENCH_kernels.json` A/B
+//! harness measures against, and the better choice for very small `m`
+//! where packing `B` cannot amortize.
 //!
 //! The speedups in Figs. 4–6 are reported against *this* kernel, the same
 //! way the paper reports against `min(cuBLAS, CUTLASS)`.
 
+use crate::kernels::microkernel::microkernel;
+use crate::kernels::pack::{pack_a_panel, PackedB};
 use crate::tensor::Tensor;
-use crate::util::threadpool;
+use crate::util::{scratch, threadpool};
 
-/// Rows of C per task (amortizes B-panel loads).
-const MR: usize = 8;
-/// Columns per inner panel (NC * 4B * MR ≈ 16 KiB of C in L1).
+/// Rows of C per parallel task in the packed path (each task streams every
+/// B panel once, so taller tiles amortize B traffic).
+const MR: usize = 16;
+
+/// Below this row count the panel-packing overhead (O(k·n) moves) is not
+/// amortized and the reference kernel wins; decode-time GEMV (m = 1) and
+/// small prefill batches take this branch unless B is prepacked.
+const PACK_MIN_M: usize = 16;
+
+/// Rows per task of the reference kernel.
+const REF_MR: usize = 8;
+/// Columns per inner panel of the reference kernel (L1-resident C subtile).
 const NC: usize = 512;
 
 /// `C = A @ B`; allocates the output.
@@ -33,10 +53,29 @@ pub fn gemm(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// `C += A @ B` over raw row-major slices (C must be zeroed by the caller
 /// if plain assignment is wanted). This is the shared entry for the dense
-/// baseline and the engine's projection layers.
+/// baseline; it packs `B` on the fly when `m` is large enough to amortize
+/// the packing sweep and otherwise falls back to [`gemm_into_ref`].
 pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if m < PACK_MIN_M {
+        gemm_into_ref(a, b, c, m, k, n);
+        return;
+    }
+    let packed = PackedB::pack(b, k, n);
+    gemm_packed_into(a, &packed, c, m);
+}
+
+/// `C += A @ Bᵖ` against a prepacked right operand — the engine's
+/// projection path (weights packed once at model load, reused every
+/// prefill/decode step).
+pub fn gemm_packed_into(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize) {
+    let (k, n) = (bp.k, bp.n);
+    assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
     if m == 0 || n == 0 || k == 0 {
         return;
@@ -46,18 +85,59 @@ pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     threadpool::parallel_for(n_tiles, |t| {
         let i0 = t * MR;
         let i1 = (i0 + MR).min(m);
+        let mr = i1 - i0;
+        // k-major A tile (allocation-free after warmup)
+        let mut ap = scratch::take_uninit(mr * k);
+        pack_a_panel(&a[i0 * k..i1 * k], k, mr, k, &mut ap);
+        // SAFETY: tiles own disjoint row ranges of C; parallel_for blocks
+        // until all tasks finish, so the borrow outlives the tasks.
+        let c_tile = unsafe {
+            std::slice::from_raw_parts_mut((c_base as *mut f32).add(i0 * n), mr * n)
+        };
+        for p in 0..bp.panels() {
+            let cols = bp.panel_cols(p);
+            microkernel(
+                &ap,
+                mr,
+                mr,
+                bp.panel(p),
+                bp.nr,
+                cols,
+                k,
+                &mut c_tile[p * bp.nr..],
+                n,
+            );
+        }
+    });
+}
+
+/// The seed kernel: parallel row tiles, `NC`-column C panels, scalar-axpy
+/// inner loop over strided operands. Kept as the A/B baseline for
+/// `BENCH_kernels.json` and as the small-`m` fallback.
+pub fn gemm_into_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let n_tiles = m.div_ceil(REF_MR);
+    let c_base = c.as_mut_ptr() as usize;
+    threadpool::parallel_for(n_tiles, |t| {
+        let i0 = t * REF_MR;
+        let i1 = (i0 + REF_MR).min(m);
         // SAFETY: tiles own disjoint row ranges of C; parallel_for blocks
         // until all tasks finish, so the borrow outlives the tasks.
         let c_tile = unsafe {
             std::slice::from_raw_parts_mut((c_base as *mut f32).add(i0 * n), (i1 - i0) * n)
         };
-        gemm_tile(&a[i0 * k..i1 * k], b, c_tile, i1 - i0, k, n);
+        gemm_tile_ref(&a[i0 * k..i1 * k], b, c_tile, i1 - i0, k, n);
     });
 }
 
-/// Single-threaded tile kernel: C_tile (mr×n) += A_tile (mr×k) @ B (k×n).
+/// Single-threaded reference tile: C_tile (mr×n) += A_tile (mr×k) @ B (k×n).
 #[inline]
-fn gemm_tile(a: &[f32], b: &[f32], c: &mut [f32], mr: usize, k: usize, n: usize) {
+fn gemm_tile_ref(a: &[f32], b: &[f32], c: &mut [f32], mr: usize, k: usize, n: usize) {
     let mut jc = 0;
     while jc < n {
         let nc = NC.min(n - jc);
@@ -76,7 +156,7 @@ fn gemm_tile(a: &[f32], b: &[f32], c: &mut [f32], mr: usize, k: usize, n: usize)
     }
 }
 
-/// `y += a * x` — the vectorized inner loop shared with the sparse kernels.
+/// `y += a * x` — the vectorized inner loop of the reference kernels.
 #[inline(always)]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -120,14 +200,14 @@ pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testkit::prop;
     use crate::prop_assert;
+    use crate::testkit::prop;
     use crate::util::rng::Rng;
 
     #[test]
     fn matches_naive_property() {
         prop::check_default("gemm-vs-naive", |rng| {
-            let m = prop::usize_in(rng, 1, 40);
+            let m = prop::usize_in(rng, 1, 40); // crosses the PACK_MIN_M dispatch
             let k = prop::usize_in(rng, 1, 40);
             let n = prop::usize_in(rng, 1, 600); // crosses the NC boundary
             let a = Tensor::randn(&[m, k], 1.0, rng);
@@ -138,6 +218,44 @@ mod tests {
             prop_assert!(diff < 1e-3, "diff {diff} at m={m} k={k} n={n}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn packed_matches_naive_property() {
+        prop::check_default("gemm-packed-vs-naive", |rng| {
+            // force the packed path regardless of the dispatch threshold,
+            // including m = 1 (decode) and ragged tile/panel tails
+            let m = *prop::pick(rng, &[1, 2, 15, 16, 17, 33]);
+            let k = prop::usize_in(rng, 1, 48);
+            let n = prop::usize_in(rng, 1, 70);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let packed = PackedB::pack(b.data(), k, n);
+            let mut c = Tensor::zeros(&[m, n]);
+            gemm_packed_into(a.data(), &packed, c.data_mut(), m);
+            let slow = gemm_naive(&a, &b);
+            let diff = c.max_abs_diff(&slow);
+            prop_assert!(diff < 1e-3, "diff {diff} at m={m} k={k} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ref_and_packed_agree() {
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (37, 29, 83);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut c_ref = Tensor::zeros(&[m, n]);
+        gemm_into_ref(a.data(), b.data(), c_ref.data_mut(), m, k, n);
+        let packed = PackedB::pack(b.data(), k, n);
+        let mut c_new = Tensor::zeros(&[m, n]);
+        gemm_packed_into(a.data(), &packed, c_new.data_mut(), m);
+        assert!(
+            c_new.allclose(&c_ref, 1e-3),
+            "diff {}",
+            c_new.max_abs_diff(&c_ref)
+        );
     }
 
     #[test]
@@ -161,6 +279,30 @@ mod tests {
         let mut want = gemm_naive(&a, &b);
         want.add_inplace(&Tensor::full(&[4, 4], 1.0));
         assert!(c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn packed_accumulates_into_existing_c() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[20, 8], 1.0, &mut rng);
+        let b = Tensor::randn(&[8, 24], 1.0, &mut rng);
+        let packed = PackedB::pack(b.data(), 8, 24);
+        let mut c = Tensor::full(&[20, 24], 2.0);
+        gemm_packed_into(a.data(), &packed, c.data_mut(), 20);
+        let mut want = gemm_naive(&a, &b);
+        want.add_inplace(&Tensor::full(&[20, 24], 2.0));
+        assert!(c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        gemm_into(&[], &[], &mut [], 0, 0, 0);
+        let packed = PackedB::pack(&[], 0, 0);
+        gemm_packed_into(&[], &packed, &mut [], 0);
+        // k == 0 with nonzero m,n must leave C unchanged
+        let mut c = Tensor::full(&[2, 3], 3.0);
+        gemm_into(&[], &[], c.data_mut(), 2, 0, 3);
+        assert!(c.allclose(&Tensor::full(&[2, 3], 3.0), 0.0));
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Register-blocked f32 micro-GEMM — the one inner kernel shared by the
+//! dense GEMM, the BSpMM and the fused sparse MLPs.
+//!
+//! The BLIS/COSMA decomposition: outer code packs operands into panels
+//! ([`crate::kernels::pack`]) and tiles the output; this module computes
+//!
+//! ```text
+//! C[rows×cols] += Aᵖ · Bᵖ
+//! ```
+//!
+//! where `Aᵖ` is a *k-major* packed panel (`ap[kk*lda + i]`, so the `rows`
+//! values of one depth step are contiguous) and `Bᵖ` is row-major with
+//! leading dimension `ldb` (`bp[kk*ldb + j]` — either a packed NR-wide
+//! B panel or a raw BCSC block, which is already the right layout).
+//!
+//! The inner loop keeps a small accumulator array in registers, broadcasts
+//! one packed A value per row and FMAs an NR-wide B row chunk — no
+//! per-element branches, no strided gathers, C touched exactly once at the
+//! end. Unrolled specializations exist for the BCSC block widths 8/16/32
+//! (`NR` fixed at compile time so LLVM keeps the accumulators in vector
+//! registers); odd shapes fall back to a generic remainder kernel. The
+//! register tile is 4×8 / 4×16 (≤ 8 YMM of accumulators) but drops to
+//! 2×32 for the widest chunk: 4×32 f32 would consume all 16 YMM registers
+//! of an AVX2 file by itself and force per-iteration spills.
+
+/// Rows per register sub-tile for NR ≤ 16 (4×16 f32 = 8 YMM accumulators,
+/// leaving room for the A broadcast and B loads).
+const RB: usize = 4;
+
+/// Rows per register sub-tile for the 32-wide chunk (2×32 f32 = 8 YMM).
+const RB32: usize = 2;
+
+/// Max columns a remainder micro-tile handles at once (matches the widest
+/// specialization).
+const MAX_NR: usize = 32;
+
+/// `C[rows×cols] += Aᵖ · Bᵖ`.
+///
+/// * `ap` — k-major packed A panel: element `(kk, i)` at `ap[kk*lda + i]`,
+///   `i < rows ≤ lda`, `kk < k`.
+/// * `bp` — row-major B: element `(kk, j)` at `bp[kk*ldb + j]`, `j < cols ≤ ldb`.
+/// * `c` — row-major output region: element `(i, j)` at `c[i*ldc + j]`;
+///   `c.len()` must cover `(rows-1)*ldc + cols`.
+#[allow(clippy::too_many_arguments)] // a GEMM kernel ABI is what it is
+pub fn microkernel(
+    ap: &[f32],
+    lda: usize,
+    rows: usize,
+    bp: &[f32],
+    ldb: usize,
+    cols: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(rows <= lda || k == 0);
+    debug_assert!(cols <= ldb || k == 0);
+    debug_assert!(k == 0 || ap.len() >= (k - 1) * lda + rows);
+    debug_assert!(k == 0 || bp.len() >= (k - 1) * ldb + cols);
+    debug_assert!(rows == 0 || c.len() >= (rows - 1) * ldc + cols);
+    if rows == 0 || cols == 0 || k == 0 {
+        return;
+    }
+    let mut j0 = 0;
+    while j0 < cols {
+        let rem = cols - j0;
+        let take = if rem >= 32 {
+            32
+        } else if rem >= 16 {
+            16
+        } else if rem >= 8 {
+            8
+        } else {
+            rem
+        };
+        let bp_sub = &bp[j0..];
+        let rstep = if take == 32 { RB32 } else { RB };
+        let mut i0 = 0;
+        while i0 < rows {
+            let r = (rows - i0).min(rstep);
+            let ap_sub = &ap[i0..];
+            let c_sub = &mut c[i0 * ldc + j0..];
+            if r == RB32 && take == 32 {
+                mk2::<32>(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc);
+            } else if r == RB && take == 16 {
+                mk4::<16>(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc);
+            } else if r == RB && take == 8 {
+                mk4::<8>(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc);
+            } else {
+                mk_small(ap_sub, lda, r, bp_sub, ldb, take, k, c_sub, ldc);
+            }
+            i0 += r;
+        }
+        j0 += take;
+    }
+}
+
+/// 4×NR register tile, NR known at compile time. The `&[f32; NR]` reborrows
+/// let LLVM drop all interior bounds checks and vectorize the j-loop.
+#[inline(always)]
+fn mk4<const NR: usize>(
+    ap: &[f32],
+    lda: usize,
+    bp: &[f32],
+    ldb: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; RB];
+    for kk in 0..k {
+        let a: &[f32; RB] = ap[kk * lda..kk * lda + RB].try_into().unwrap();
+        let b: &[f32; NR] = bp[kk * ldb..kk * ldb + NR].try_into().unwrap();
+        for i in 0..RB {
+            let ai = a[i];
+            for j in 0..NR {
+                acc[i][j] += ai * b[j];
+            }
+        }
+    }
+    for i in 0..RB {
+        let crow: &mut [f32] = &mut c[i * ldc..i * ldc + NR];
+        for j in 0..NR {
+            crow[j] += acc[i][j];
+        }
+    }
+}
+
+/// 2×NR register tile for the widest chunk (see the module doc on
+/// register budgets).
+#[inline(always)]
+fn mk2<const NR: usize>(
+    ap: &[f32],
+    lda: usize,
+    bp: &[f32],
+    ldb: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; RB32];
+    for kk in 0..k {
+        let a: &[f32; RB32] = ap[kk * lda..kk * lda + RB32].try_into().unwrap();
+        let b: &[f32; NR] = bp[kk * ldb..kk * ldb + NR].try_into().unwrap();
+        for i in 0..RB32 {
+            let ai = a[i];
+            for j in 0..NR {
+                acc[i][j] += ai * b[j];
+            }
+        }
+    }
+    for i in 0..RB32 {
+        let crow: &mut [f32] = &mut c[i * ldc..i * ldc + NR];
+        for j in 0..NR {
+            crow[j] += acc[i][j];
+        }
+    }
+}
+
+/// Remainder tile: `rows ≤ 4`, `cols ≤ 32`, any combination.
+#[allow(clippy::too_many_arguments)]
+fn mk_small(
+    ap: &[f32],
+    lda: usize,
+    rows: usize,
+    bp: &[f32],
+    ldb: usize,
+    cols: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(rows <= RB && cols <= MAX_NR);
+    let mut acc = [[0.0f32; MAX_NR]; RB];
+    for kk in 0..k {
+        let b = &bp[kk * ldb..kk * ldb + cols];
+        for (i, accrow) in acc.iter_mut().enumerate().take(rows) {
+            let ai = ap[kk * lda + i];
+            for (j, &bv) in b.iter().enumerate() {
+                accrow[j] += ai * bv;
+            }
+        }
+    }
+    for (i, accrow) in acc.iter().enumerate().take(rows) {
+        let crow = &mut c[i * ldc..i * ldc + cols];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv += accrow[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::prop;
+
+    /// Oracle: straightforward triple loop over the same packed layouts.
+    fn naive(
+        ap: &[f32],
+        lda: usize,
+        rows: usize,
+        bp: &[f32],
+        ldb: usize,
+        cols: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        for i in 0..rows {
+            for j in 0..cols {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += ap[kk * lda + i] * bp[kk * ldb + j];
+                }
+                c[i * ldc + j] += s;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_property() {
+        prop::check_default("microkernel-vs-naive", |rng| {
+            let rows = prop::usize_in(rng, 1, 13);
+            let lda = rows + prop::usize_in(rng, 0, 3);
+            let cols = prop::usize_in(rng, 1, 70);
+            let ldb = cols + prop::usize_in(rng, 0, 5);
+            let ldc = cols + prop::usize_in(rng, 0, 5);
+            let k = prop::usize_in(rng, 1, 24);
+            let ap = prop::normal_vec(rng, k * lda);
+            let bp = prop::normal_vec(rng, k * ldb);
+            let mut c_fast = prop::normal_vec(rng, (rows - 1) * ldc + cols);
+            let mut c_slow = c_fast.clone();
+            microkernel(&ap, lda, rows, &bp, ldb, cols, k, &mut c_fast, ldc);
+            naive(&ap, lda, rows, &bp, ldb, cols, k, &mut c_slow, ldc);
+            for (idx, (a, b)) in c_fast.iter().zip(&c_slow).enumerate() {
+                prop_assert!(
+                    (a - b).abs() < 1e-3,
+                    "idx {idx}: {a} vs {b} (rows={rows} cols={cols} k={k})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn specialized_widths_exact_tiles() {
+        // hit mk4::<8|16|32> head-on: rows multiple of 4, cols = NR
+        for &nr in &[8usize, 16, 32] {
+            let (rows, k) = (8usize, 16usize);
+            let ap: Vec<f32> = (0..k * rows).map(|i| (i % 11) as f32 * 0.25).collect();
+            let bp: Vec<f32> = (0..k * nr).map(|i| (i % 7) as f32 * 0.5 - 1.0).collect();
+            let mut c_fast = vec![0.0f32; rows * nr];
+            let mut c_slow = vec![0.0f32; rows * nr];
+            microkernel(&ap, rows, rows, &bp, nr, nr, k, &mut c_fast, nr);
+            naive(&ap, rows, rows, &bp, nr, nr, k, &mut c_slow, nr);
+            assert_eq!(c_fast, c_slow, "nr={nr}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        let mut c = vec![1.0f32; 8];
+        microkernel(&[], 4, 0, &[], 8, 8, 0, &mut c, 8);
+        microkernel(&[1.0; 4], 4, 1, &[1.0; 8], 8, 0, 1, &mut c, 8);
+        microkernel(&[], 4, 1, &[1.0; 8], 8, 8, 0, &mut c, 8);
+        assert!(c.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn accumulates_into_existing_c() {
+        let (rows, cols, k) = (5usize, 9usize, 3usize);
+        let ap: Vec<f32> = (0..k * rows).map(|i| i as f32 * 0.1).collect();
+        let bp: Vec<f32> = (0..k * cols).map(|i| 1.0 - i as f32 * 0.05).collect();
+        let mut c = vec![2.0f32; rows * cols];
+        let mut want = vec![2.0f32; rows * cols];
+        microkernel(&ap, rows, rows, &bp, cols, cols, k, &mut c, cols);
+        naive(&ap, rows, rows, &bp, cols, cols, k, &mut want, cols);
+        assert_eq!(c, want);
+    }
+}

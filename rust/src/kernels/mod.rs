@@ -4,12 +4,26 @@
 //! block-sparse matmul that beats the best dense baseline once sparsity
 //! crosses ~50%, a fused sparse MLP, and the end-to-end inference speedup
 //! they produce. On this testbed the compute device is the CPU, so the
-//! whole kernel stack is implemented here and benchmarked directly:
+//! whole kernel stack is implemented here and benchmarked directly.
 //!
-//! * [`gemm`] — cache-blocked, multithreaded dense GEMM: the
-//!   cuBLAS/CUTLASS stand-in and the denominator of every speedup.
-//! * [`bspmm`] — the paper's kernel: stream surviving BCSC blocks, run a
-//!   dense micro-GEMM per block, fuse the epilogue.
+//! Since PR 1 every contraction funnels into one packed register-blocked
+//! micro-kernel (BLIS/COSMA architecture):
+//!
+//! * [`microkernel`] — the shared inner kernel: 4×NR register-tiled
+//!   `C += Aᵖ·Bᵖ` over k-major packed panels, unrolled for NR ∈ {8, 16, 32}
+//!   (the BCSC block widths) with a generic remainder path.
+//! * [`pack`] — operand packing: k-major A/X row-tile panels (packed once,
+//!   streamed by every block / B panel) and [`pack::PackedB`], the NR-wide
+//!   zero-padded B panels that weight matrices are packed into once at
+//!   model load.
+//! * [`gemm`] — cache-blocked, multithreaded dense GEMM on the packed
+//!   engine: the cuBLAS/CUTLASS stand-in and the denominator of every
+//!   speedup. The seed scalar kernel survives as `gemm_into_ref`, the
+//!   baseline of the `BENCH_kernels.json` A/B harness.
+//! * [`bspmm`] — the paper's kernel: stream surviving BCSC blocks through
+//!   the micro-kernel against the packed X tile, schedule block columns
+//!   cost-aware (weighted by surviving blocks), fuse the MLP epilogues on
+//!   thread-local scratch tiles.
 //! * [`csr_spmm`] — the unstructured-sparsity baseline (cuSPARSE role).
 //! * [`ops`] — softmax/norms/activations/rope for the native engine.
 //! * [`attention`] — dense causal attention + KV-cache decode.
@@ -18,8 +32,11 @@ pub mod attention;
 pub mod bspmm;
 pub mod csr_spmm;
 pub mod gemm;
+pub mod microkernel;
 pub mod ops;
+pub mod pack;
 
 pub use bspmm::{bspmm, fused_mlp_sparse, FusedMlpWeights};
 pub use csr_spmm::csr_spmm;
 pub use gemm::{gemm, gemm_into};
+pub use pack::PackedB;

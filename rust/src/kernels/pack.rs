@@ -1,0 +1,153 @@
+//! Operand packing for the register-blocked micro-kernel.
+//!
+//! Two layouts feed [`crate::kernels::microkernel::microkernel`]:
+//!
+//! * **A/X panels** ([`pack_a_panel`]) — a row tile of the dense operand
+//!   transposed to *k-major* order (`out[kk*rows + i]`), so the micro-kernel
+//!   broadcasts `rows` contiguous values per depth step instead of
+//!   gathering one value per row at stride `k`. For BSpMM the packed X
+//!   tile is built **once per row tile** and every surviving block reads
+//!   its `b`-deep sub-panel at `out[br*b*rows ..]` — the stride-`k`
+//!   gather that the seed kernel repeated per block disappears.
+//!
+//! * **B panels** ([`PackedB`]) — the right operand split into `NR`-wide
+//!   column panels, each stored k-major (`panel[kk*NR + j]`) and
+//!   zero-padded to `NR`, so the micro-kernel streams one contiguous
+//!   cache line run per depth step. Weight matrices are packed once at
+//!   engine build time and reused by every prefill/decode call.
+
+use crate::util::threadpool;
+
+/// Column width of one packed B panel (matches the 16-wide micro-kernel
+/// specialization: 2 AVX2 / 1 AVX-512 register per row chunk).
+pub const NR: usize = 16;
+
+/// Transpose `rows × k` (row-major, leading dim `lda`) into a k-major
+/// panel: `out[kk*rows + i] = a[i*lda + kk]`. `out.len()` must be ≥
+/// `rows * k`.
+pub fn pack_a_panel(a: &[f32], lda: usize, rows: usize, k: usize, out: &mut [f32]) {
+    debug_assert!(rows == 0 || a.len() >= (rows - 1) * lda + k);
+    debug_assert!(out.len() >= rows * k);
+    for i in 0..rows {
+        let row = &a[i * lda..i * lda + k];
+        for (kk, &v) in row.iter().enumerate() {
+            out[kk * rows + i] = v;
+        }
+    }
+}
+
+/// A `k × n` matrix packed into `NR`-wide, zero-padded, k-major column
+/// panels, ready for repeated multiplication (weights, notably).
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    /// Rows of the logical matrix (the GEMM depth).
+    pub k: usize,
+    /// Columns of the logical matrix.
+    pub n: usize,
+    /// Panel width (always [`NR`]; stored for self-description).
+    pub nr: usize,
+    /// `panels() * k * nr` values; panel `p` at `data[p*k*nr ..]`.
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a row-major `k × n` matrix. Parallelized over panels (packing
+    /// a large weight matrix is itself a bandwidth-bound sweep).
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        assert_eq!(b.len(), k * n, "PackedB::pack: {} != {k}x{n}", b.len());
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; panels * k * NR];
+        if n > 0 && k > 0 {
+            threadpool::parallel_chunks_mut(&mut data, k * NR, |p, chunk| {
+                let j0 = p * NR;
+                let cols = (n - j0).min(NR);
+                for kk in 0..k {
+                    let src = &b[kk * n + j0..kk * n + j0 + cols];
+                    chunk[kk * NR..kk * NR + cols].copy_from_slice(src);
+                }
+            });
+        }
+        PackedB { k, n, nr: NR, data }
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    /// Packed payload of panel `p` (`k * nr` values, zero-padded).
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[f32] {
+        let sz = self.k * self.nr;
+        &self.data[p * sz..(p + 1) * sz]
+    }
+
+    /// Valid (unpadded) columns of panel `p`.
+    #[inline]
+    pub fn panel_cols(&self, p: usize) -> usize {
+        (self.n - p * self.nr).min(self.nr)
+    }
+
+    /// Resident bytes of the packed representation (incl. padding).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::prop;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn a_panel_is_exact_transpose() {
+        let lda = 7;
+        let (rows, k) = (3usize, 5usize);
+        let a: Vec<f32> = (0..rows * lda).map(|i| i as f32).collect();
+        let mut out = vec![-1.0f32; rows * k];
+        pack_a_panel(&a, lda, rows, k, &mut out);
+        for i in 0..rows {
+            for kk in 0..k {
+                assert_eq!(out[kk * rows + i], a[i * lda + kk], "({i},{kk})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_b_roundtrip_property() {
+        prop::check_default("packedb-roundtrip", |rng| {
+            let k = prop::usize_in(rng, 1, 20);
+            let n = prop::usize_in(rng, 1, 3 * NR + 5);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let p = PackedB::pack(b.data(), k, n);
+            prop_assert!(p.panels() == n.div_ceil(NR), "panel count");
+            for pi in 0..p.panels() {
+                let cols = p.panel_cols(pi);
+                let panel = p.panel(pi);
+                for kk in 0..k {
+                    for j in 0..NR {
+                        let want = if j < cols { b.at2(kk, pi * NR + j) } else { 0.0 };
+                        prop_assert!(
+                            panel[kk * NR + j] == want,
+                            "panel {pi} ({kk},{j}): {} vs {want}",
+                            panel[kk * NR + j]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_sized_matrices() {
+        let p = PackedB::pack(&[], 0, 0);
+        assert_eq!(p.panels(), 0);
+        assert_eq!(p.bytes(), 0);
+        let p = PackedB::pack(&[], 4, 0);
+        assert_eq!(p.panels(), 0);
+        assert_eq!(p.bytes(), 0);
+    }
+}

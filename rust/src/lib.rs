@@ -14,9 +14,12 @@
 //! * **L3 (this crate, run time)** — the coordinator: the paper's blocked
 //!   prune-and-grow algorithm ([`sparsify`]), the pretraining orchestrator
 //!   ([`train`]), a batched inference server ([`coordinator`]), the PJRT
-//!   runtime bridge ([`runtime`]), and a native block-sparse kernel stack
-//!   ([`kernels`], [`sparse`], [`tensor`], [`model`]) that carries the
-//!   wall-clock reproduction of the paper's Figures 4–6.
+//!   runtime bridge ([`runtime`], behind the `pjrt` cargo feature; the
+//!   default build substitutes a stub so the crate has zero external
+//!   dependencies), and a native block-sparse kernel stack ([`kernels`],
+//!   [`sparse`], [`tensor`], [`model`]) — one packed register-blocked
+//!   micro-kernel under dense GEMM, BSpMM and the fused MLPs — that
+//!   carries the wall-clock reproduction of the paper's Figures 4–6.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, and the `blast` binary is self-contained afterwards.

@@ -8,6 +8,13 @@
 //!
 //! The engine is single-sequence; the serving coordinator multiplexes many
 //! engine sessions (each with its own KV cache) over the shared weights.
+//!
+//! All dense weight matrices (attention projections, LM head, dense-mode
+//! MLP weights) are packed into [`PackedB`] panel form **once at engine
+//! build time**, so every prefill and decode projection runs the packed
+//! micro-kernel without any per-call packing sweep; dense-MLP hidden
+//! buffers come from the thread-local scratch arena instead of per-call
+//! allocations.
 
 use std::collections::BTreeMap;
 
@@ -15,12 +22,14 @@ use anyhow::{bail, Result};
 
 use crate::kernels::attention::{causal_attention, decode_attention};
 use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
-use crate::kernels::gemm::gemm_into;
+use crate::kernels::gemm::gemm_packed_into;
 use crate::kernels::ops;
+use crate::kernels::pack::PackedB;
 use crate::model::config::{ModelKind, NativeConfig};
 use crate::model::params::ParamStore;
 use crate::sparse::{Bcsc, BlockMask};
 use crate::tensor::Tensor;
+use crate::util::scratch;
 
 /// MLP execution mode (the Fig. 6 switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,18 +43,18 @@ pub enum MlpMode {
 }
 
 enum MlpWeights {
-    DenseSwiglu { w1: Tensor, w2: Tensor, w3: Tensor },
-    DenseGelu { w1: Tensor, w3: Tensor },
+    DenseSwiglu { w1: PackedB, w2: PackedB, w3: PackedB },
+    DenseGelu { w1: PackedB, w3: PackedB },
     SparseSwiglu { w1: Bcsc, w2: Bcsc, w3: Bcsc },
     SparseGelu { w1: Bcsc, w3: Bcsc },
 }
 
 struct LayerWeights {
     ln1: Vec<f32>,
-    wq: Tensor,
-    wk: Tensor,
-    wv: Tensor,
-    wo: Tensor,
+    wq: PackedB,
+    wk: PackedB,
+    wv: PackedB,
+    wo: PackedB,
     ln2: Vec<f32>,
     mlp: MlpWeights,
 }
@@ -71,15 +80,27 @@ pub struct Engine {
     pos_emb: Option<Tensor>,
     layers: Vec<LayerWeights>,
     final_norm: Vec<f32>,
-    lm_head: Tensor,
+    lm_head: PackedB,
 }
 
-fn masked(params: &ParamStore, masks: &BTreeMap<String, BlockMask>, name: &str, block: usize) -> Tensor {
+/// Masked dense weight, packed once into micro-kernel panel form.
+fn masked_packed(
+    params: &ParamStore,
+    masks: &BTreeMap<String, BlockMask>,
+    name: &str,
+    block: usize,
+) -> PackedB {
     let mut t = params.req(name).clone();
     if let Some(m) = masks.get(name) {
         m.apply_to(t.data_mut(), block);
     }
-    t
+    PackedB::pack(t.data(), t.rows(), t.cols())
+}
+
+/// Unmasked dense weight (projections), packed once.
+fn packed(params: &ParamStore, name: &str) -> PackedB {
+    let t = params.req(name);
+    PackedB::pack(t.data(), t.rows(), t.cols())
 }
 
 fn bcsc_of(params: &ParamStore, masks: &BTreeMap<String, BlockMask>, name: &str, block: usize) -> Bcsc {
@@ -112,9 +133,9 @@ impl Engine {
             let p = |s: &str| format!("layer{i}.{s}");
             let mlp = match (cfg.kind, mode) {
                 (ModelKind::Llama, MlpMode::Dense) => MlpWeights::DenseSwiglu {
-                    w1: masked(params, masks, &p("mlp.w1"), b),
-                    w2: masked(params, masks, &p("mlp.w2"), b),
-                    w3: masked(params, masks, &p("mlp.w3"), b),
+                    w1: masked_packed(params, masks, &p("mlp.w1"), b),
+                    w2: masked_packed(params, masks, &p("mlp.w2"), b),
+                    w3: masked_packed(params, masks, &p("mlp.w3"), b),
                 },
                 (ModelKind::Llama, MlpMode::Sparse) => MlpWeights::SparseSwiglu {
                     w1: bcsc_of(params, masks, &p("mlp.w1"), b),
@@ -122,8 +143,8 @@ impl Engine {
                     w3: bcsc_of(params, masks, &p("mlp.w3"), b),
                 },
                 (_, MlpMode::Dense) => MlpWeights::DenseGelu {
-                    w1: masked(params, masks, &p("mlp.w1"), b),
-                    w3: masked(params, masks, &p("mlp.w3"), b),
+                    w1: masked_packed(params, masks, &p("mlp.w1"), b),
+                    w3: masked_packed(params, masks, &p("mlp.w3"), b),
                 },
                 (_, MlpMode::Sparse) => MlpWeights::SparseGelu {
                     w1: bcsc_of(params, masks, &p("mlp.w1"), b),
@@ -132,10 +153,10 @@ impl Engine {
             };
             layers.push(LayerWeights {
                 ln1: params.req(&p("ln1")).data().to_vec(),
-                wq: params.req(&p("attn.wq")).clone(),
-                wk: params.req(&p("attn.wk")).clone(),
-                wv: params.req(&p("attn.wv")).clone(),
-                wo: params.req(&p("attn.wo")).clone(),
+                wq: packed(params, &p("attn.wq")),
+                wk: packed(params, &p("attn.wk")),
+                wv: packed(params, &p("attn.wv")),
+                wo: packed(params, &p("attn.wo")),
                 ln2: params.req(&p("ln2")).data().to_vec(),
                 mlp,
             });
@@ -146,7 +167,7 @@ impl Engine {
             pos_emb: params.get("pos_emb").cloned(),
             layers,
             final_norm: params.req("final_norm").data().to_vec(),
-            lm_head: params.req("lm_head").clone(),
+            lm_head: packed(params, "lm_head"),
             cfg,
         })
     }
@@ -165,8 +186,8 @@ impl Engine {
         self.layers
             .iter()
             .map(|l| match &l.mlp {
-                MlpWeights::DenseSwiglu { w1, w2, w3 } => (w1.len() + w2.len() + w3.len()) * 4,
-                MlpWeights::DenseGelu { w1, w3 } => (w1.len() + w3.len()) * 4,
+                MlpWeights::DenseSwiglu { w1, w2, w3 } => w1.bytes() + w2.bytes() + w3.bytes(),
+                MlpWeights::DenseGelu { w1, w3 } => w1.bytes() + w3.bytes(),
                 MlpWeights::SparseSwiglu { w1, w2, w3 } => w1.bytes() + w2.bytes() + w3.bytes(),
                 MlpWeights::SparseGelu { w1, w3 } => w1.bytes() + w3.bytes(),
             })
@@ -197,28 +218,29 @@ impl Engine {
             MlpWeights::SparseGelu { w1, w3 } => gelu_mlp_sparse(x, w1, w3),
             MlpWeights::DenseSwiglu { w1, w2, w3 } => {
                 let m = x.rows();
-                let (e, f) = (w1.rows(), w1.cols());
-                let mut h1 = Tensor::zeros(&[m, f]);
-                let mut h2 = Tensor::zeros(&[m, f]);
-                gemm_into(x.data(), w1.data(), h1.data_mut(), m, e, f);
-                gemm_into(x.data(), w2.data(), h2.data_mut(), m, e, f);
-                for (a, &bb) in h1.data_mut().iter_mut().zip(h2.data()) {
+                let (e, f) = (w1.k, w1.n);
+                // scratch-arena hidden tiles: no per-call allocation
+                let mut h1 = scratch::take_zeroed(m * f);
+                let mut h2 = scratch::take_zeroed(m * f);
+                gemm_packed_into(x.data(), w1, &mut h1, m);
+                gemm_packed_into(x.data(), w2, &mut h2, m);
+                for (a, &bb) in h1.iter_mut().zip(h2.iter()) {
                     *a = ops::silu(*a) * bb;
                 }
                 let mut y = Tensor::zeros(&[m, e]);
-                gemm_into(h1.data(), w3.data(), y.data_mut(), m, f, e);
+                gemm_packed_into(&h1, w3, y.data_mut(), m);
                 y
             }
             MlpWeights::DenseGelu { w1, w3 } => {
                 let m = x.rows();
-                let (e, f) = (w1.rows(), w1.cols());
-                let mut h = Tensor::zeros(&[m, f]);
-                gemm_into(x.data(), w1.data(), h.data_mut(), m, e, f);
-                for a in h.data_mut() {
+                let (e, f) = (w1.k, w1.n);
+                let mut h = scratch::take_zeroed(m * f);
+                gemm_packed_into(x.data(), w1, &mut h, m);
+                for a in h.iter_mut() {
                     *a = ops::gelu(*a);
                 }
                 let mut y = Tensor::zeros(&[m, e]);
-                gemm_into(h.data(), w3.data(), y.data_mut(), m, f, e);
+                gemm_packed_into(&h, w3, y.data_mut(), m);
                 y
             }
         }
@@ -271,9 +293,9 @@ impl Engine {
             let mut q = Tensor::zeros(&[seq, e]);
             let mut k = Tensor::zeros(&[seq, e]);
             let mut v = Tensor::zeros(&[seq, e]);
-            gemm_into(xn.data(), l.wq.data(), q.data_mut(), seq, e, e);
-            gemm_into(xn.data(), l.wk.data(), k.data_mut(), seq, e, e);
-            gemm_into(xn.data(), l.wv.data(), v.data_mut(), seq, e, e);
+            gemm_packed_into(xn.data(), &l.wq, q.data_mut(), seq);
+            gemm_packed_into(xn.data(), &l.wk, k.data_mut(), seq);
+            gemm_packed_into(xn.data(), &l.wv, v.data_mut(), seq);
             let mut qh = self.split_heads(q.data(), seq);
             let mut kh = self.split_heads(k.data(), seq);
             let vh = self.split_heads(v.data(), seq);
@@ -297,7 +319,7 @@ impl Engine {
             }
             let att = causal_attention(&qh, &kh, &vh, h, seq, hd);
             let mut proj = Tensor::zeros(&[seq, e]);
-            gemm_into(&att, l.wo.data(), proj.data_mut(), seq, e, e);
+            gemm_packed_into(&att, &l.wo, proj.data_mut(), seq);
             x.add_inplace(&proj);
             // MLP
             for s in 0..seq {
@@ -312,7 +334,7 @@ impl Engine {
         let mut last = vec![0.0f32; e];
         self.norm(x.row(seq - 1), &self.final_norm, &mut last);
         let mut logits = vec![0.0f32; self.cfg.vocab];
-        gemm_into(&last, self.lm_head.data(), &mut logits, 1, e, self.cfg.vocab);
+        gemm_packed_into(&last, &self.lm_head, &mut logits, 1);
         Ok(logits)
     }
 
@@ -336,9 +358,9 @@ impl Engine {
             let mut q = vec![0.0f32; e];
             let mut k = vec![0.0f32; e];
             let mut v = vec![0.0f32; e];
-            gemm_into(&xn, l.wq.data(), &mut q, 1, e, e);
-            gemm_into(&xn, l.wk.data(), &mut k, 1, e, e);
-            gemm_into(&xn, l.wv.data(), &mut v, 1, e, e);
+            gemm_packed_into(&xn, &l.wq, &mut q, 1);
+            gemm_packed_into(&xn, &l.wk, &mut k, 1);
+            gemm_packed_into(&xn, &l.wv, &mut v, 1);
             if self.cfg.kind == ModelKind::Llama {
                 for hh in 0..h {
                     ops::rope_inplace(&mut q[hh * hd..(hh + 1) * hd], pos, 10000.0);
@@ -361,7 +383,7 @@ impl Engine {
                 pos,
             );
             let mut proj = vec![0.0f32; e];
-            gemm_into(&att, l.wo.data(), &mut proj, 1, e, e);
+            gemm_packed_into(&att, &l.wo, &mut proj, 1);
             for (a, b) in x.iter_mut().zip(&proj) {
                 *a += b;
             }
@@ -375,7 +397,7 @@ impl Engine {
         let mut last = vec![0.0f32; e];
         self.norm(&x, &self.final_norm, &mut last);
         let mut logits = vec![0.0f32; self.cfg.vocab];
-        gemm_into(&last, self.lm_head.data(), &mut logits, 1, e, self.cfg.vocab);
+        gemm_packed_into(&last, &self.lm_head, &mut logits, 1);
         Ok(logits)
     }
 

@@ -1,10 +1,12 @@
-//! The PJRT execution wrapper.
+//! The PJRT execution wrapper (compiled with the `pjrt` feature).
 //!
 //! One `Runtime` owns a CPU `PjRtClient`, the parsed manifest, and a cache
 //! of compiled executables (each HLO module is compiled exactly once per
 //! process). Calls are validated against the manifest's flat positional
 //! ABI before they reach PJRT, so shape bugs surface as readable errors
-//! instead of XLA aborts.
+//! instead of XLA aborts. The value type ([`HostValue`]) lives in
+//! [`crate::runtime::hostvalue`] so the rest of the crate is independent
+//! of the `xla` dependency.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -12,137 +14,45 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::hostvalue::HostValue;
 use crate::runtime::manifest::{EntryInfo, Manifest};
-use crate::tensor::Tensor;
 
-/// A host-side value crossing the PJRT boundary.
-#[derive(Clone, Debug)]
-pub enum HostValue {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+fn to_literal(v: &HostValue) -> Result<xla::Literal> {
+    let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match v {
+        HostValue::F32 { shape, data } => (
+            xla::ElementType::F32,
+            shape,
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) },
+        ),
+        HostValue::I32 { shape, data } => (
+            xla::ElementType::S32,
+            shape,
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) },
+        ),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("literal create: {e}"))
 }
 
-impl HostValue {
-    pub fn from_tensor(t: &Tensor) -> HostValue {
-        HostValue::F32 {
-            shape: t.shape().to_vec(),
-            data: t.data().to_vec(),
-        }
-    }
-
-    pub fn tensor(t: Tensor) -> HostValue {
-        HostValue::F32 {
-            shape: t.shape().to_vec(),
-            data: t.into_data(),
-        }
-    }
-
-    pub fn scalar_i32(v: i32) -> HostValue {
-        HostValue::I32 {
-            shape: vec![],
-            data: vec![v],
-        }
-    }
-
-    pub fn scalar_f32(v: f32) -> HostValue {
-        HostValue::F32 {
-            shape: vec![],
-            data: vec![v],
-        }
-    }
-
-    pub fn i32s(shape: &[usize], data: Vec<i32>) -> HostValue {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
-        HostValue::I32 {
-            shape: shape.to_vec(),
-            data,
-        }
-    }
-
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } => shape,
-        }
-    }
-
-    pub fn dtype(&self) -> &'static str {
-        match self {
-            HostValue::F32 { .. } => "float32",
-            HostValue::I32 { .. } => "int32",
-        }
-    }
-
-    /// Unwrap as an f32 tensor.
-    pub fn into_tensor(self) -> Result<Tensor> {
-        match self {
-            HostValue::F32 { shape, data } => Ok(Tensor::new(&shape, data)),
-            HostValue::I32 { .. } => bail!("expected f32 value, got i32"),
-        }
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            HostValue::F32 { data, .. } => Ok(data),
-            _ => bail!("expected f32 value"),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            HostValue::I32 { data, .. } => Ok(data),
-            _ => bail!("expected i32 value"),
-        }
-    }
-
-    /// Scalar f32 (loss values etc.).
-    pub fn scalar(&self) -> Result<f32> {
-        match self {
-            HostValue::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
-            other => bail!("expected scalar f32, got {:?} {:?}", other.dtype(), other.shape()),
-        }
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
-            HostValue::F32 { shape, data } => (
-                xla::ElementType::F32,
-                shape,
-                unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-                },
-            ),
-            HostValue::I32 { shape, data } => (
-                xla::ElementType::S32,
-                shape,
-                unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-                },
-            ),
-        };
-        xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
-            .map_err(|e| anyhow::anyhow!("literal create: {e}"))
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<HostValue> {
-        let shape = lit
-            .array_shape()
-            .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(HostValue::F32 {
-                shape: dims,
-                data: lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?,
-            }),
-            xla::ElementType::S32 => Ok(HostValue::I32 {
-                shape: dims,
-                data: lit
-                    .to_vec::<i32>()
-                    .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?,
-            }),
-            other => bail!("unsupported output element type {other:?}"),
-        }
+fn from_literal(lit: &xla::Literal) -> Result<HostValue> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostValue::F32 {
+            shape: dims,
+            data: lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?,
+        }),
+        xla::ElementType::S32 => Ok(HostValue::I32 {
+            shape: dims,
+            data: lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?,
+        }),
+        other => bail!("unsupported output element type {other:?}"),
     }
 }
 
@@ -252,7 +162,7 @@ impl Runtime {
         let exe = self.load(entry)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()
-            .map(|v| v.to_literal())
+            .map(to_literal)
             .collect::<Result<_>>()?;
         let result = exe
             .execute::<xla::Literal>(&literals)
@@ -270,7 +180,7 @@ impl Runtime {
                 parts.len()
             );
         }
-        parts.iter().map(HostValue::from_literal).collect()
+        parts.iter().map(from_literal).collect()
     }
 
     /// Map output name → value for an executed entry.
@@ -282,31 +192,5 @@ impl Runtime {
         let info = self.manifest.entry(entry)?.clone();
         let out = self.execute(entry, inputs)?;
         Ok(info.outputs.iter().cloned().zip(out).collect())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn hostvalue_roundtrip_shapes() {
-        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let v = HostValue::from_tensor(&t);
-        assert_eq!(v.shape(), &[2, 3]);
-        assert_eq!(v.dtype(), "float32");
-        assert_eq!(v.into_tensor().unwrap(), t);
-        let s = HostValue::scalar_i32(7);
-        assert_eq!(s.shape(), &[] as &[usize]);
-        assert_eq!(s.as_i32().unwrap(), &[7]);
-    }
-
-    #[test]
-    fn scalar_accessor_rejects_nonscalar() {
-        let v = HostValue::F32 {
-            shape: vec![2],
-            data: vec![1.0, 2.0],
-        };
-        assert!(v.scalar().is_err());
     }
 }

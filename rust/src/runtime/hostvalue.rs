@@ -1,0 +1,128 @@
+//! Host-side values crossing the runtime boundary.
+//!
+//! [`HostValue`] is the typed buffer exchanged with the PJRT executor (or
+//! its stub): shape + dtype + data, convertible to/from [`Tensor`]. It is
+//! independent of the `xla` crate so the serving/eval stack compiles with
+//! or without the `pjrt` feature.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn from_tensor(t: &Tensor) -> HostValue {
+        HostValue::F32 {
+            shape: t.shape().to_vec(),
+            data: t.data().to_vec(),
+        }
+    }
+
+    pub fn tensor(t: Tensor) -> HostValue {
+        HostValue::F32 {
+            shape: t.shape().to_vec(),
+            data: t.into_data(),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostValue {
+        HostValue::I32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostValue {
+        HostValue::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn i32s(shape: &[usize], data: Vec<i32>) -> HostValue {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostValue::F32 { .. } => "float32",
+            HostValue::I32 { .. } => "int32",
+        }
+    }
+
+    /// Unwrap as an f32 tensor.
+    pub fn into_tensor(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32 { shape, data } => Ok(Tensor::new(&shape, data)),
+            HostValue::I32 { .. } => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    /// Scalar f32 (loss values etc.).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostValue::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            other => bail!(
+                "expected scalar f32, got {:?} {:?}",
+                other.dtype(),
+                other.shape()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hostvalue_roundtrip_shapes() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let v = HostValue::from_tensor(&t);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), "float32");
+        assert_eq!(v.into_tensor().unwrap(), t);
+        let s = HostValue::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn scalar_accessor_rejects_nonscalar() {
+        let v = HostValue::F32 {
+            shape: vec![2],
+            data: vec![1.0, 2.0],
+        };
+        assert!(v.scalar().is_err());
+    }
+}

@@ -5,16 +5,29 @@
 //! ABI. This module is the Rust side of that contract:
 //!
 //! * [`manifest`] — parse `artifacts/manifest.json` into typed structs.
+//! * [`hostvalue`] — the typed host buffers crossing the boundary
+//!   (independent of the `xla` crate).
 //! * [`client`] — wrap `xla::PjRtClient`: compile each HLO module once
 //!   (cached), validate call shapes against the manifest, convert between
-//!   [`crate::tensor::Tensor`] / host buffers and `xla::Literal`.
+//!   [`crate::tensor::Tensor`] / host buffers and `xla::Literal`. Compiled
+//!   only with the `pjrt` cargo feature; the default build substitutes
+//!   [`stub`], whose `Runtime::open*` fails with a descriptive error so
+//!   the dependency-free native kernel stack remains fully usable.
 //!
 //! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+pub mod hostvalue;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
-pub use client::{HostValue, Runtime};
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
+pub use hostvalue::HostValue;
 pub use manifest::{ConfigInfo, EntryInfo, IoSpec, Manifest};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;

@@ -5,9 +5,15 @@
 //! report median + MAD (robust), never a bare mean. Each paper-figure bench
 //! builds a [`Table`] whose rows mirror the figure's series so
 //! `cargo bench` output can be diffed against the paper directly.
+//!
+//! [`JsonReport`] adds a machine-readable sink: benches append structured
+//! rows and write a `BENCH_<name>.json` file, so perf trajectories can be
+//! tracked across PRs (the kernel A/B harness writes `BENCH_kernels.json`).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Result of one measured case.
@@ -27,6 +33,16 @@ impl Measurement {
     /// FLOP/s given the per-iteration flop count.
     pub fn flops(&self, flop: f64) -> f64 {
         flop / self.secs()
+    }
+
+    /// Structured form for [`JsonReport`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("mad_ns", Json::num(self.mad_ns)),
+            ("reps", Json::num(self.reps as f64)),
+        ])
     }
 }
 
@@ -123,6 +139,57 @@ impl Table {
     }
 }
 
+/// Machine-readable bench report: structured rows + free-form metadata,
+/// serialized with the in-tree JSON writer to a `BENCH_<name>.json` file.
+pub struct JsonReport {
+    name: String,
+    meta: Vec<(String, Json)>,
+    results: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> JsonReport {
+        JsonReport {
+            name: name.to_string(),
+            meta: Vec::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Attach a top-level metadata field (host info, config, git rev …).
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Append one structured result row.
+    pub fn push(&mut self, row: Json) {
+        self.results.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("bench", Json::str(&self.name))];
+        for (k, v) in &self.meta {
+            fields.push((k.as_str(), v.clone()));
+        }
+        fields.push(("results", Json::Arr(self.results.clone())));
+        Json::obj(fields)
+    }
+
+    /// Write the report; errors surface to the caller (bench drivers treat
+    /// an unwritable report as a failure, not a silent skip).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+    }
+}
+
 /// Format seconds human-readably.
 pub fn fmt_time(secs: f64) -> String {
     if secs < 1e-6 {
@@ -178,5 +245,38 @@ mod tests {
         assert!(fmt_time(2e-5).ends_with("us"));
         assert!(fmt_time(2e-2).ends_with("ms"));
         assert!(fmt_flops(3e12).contains("TFLOP"));
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_parser() {
+        let mut r = JsonReport::new("kernels");
+        r.meta("threads", Json::num(8.0));
+        r.push(Json::obj(vec![
+            ("kernel", Json::str("gemm")),
+            ("speedup", Json::num(1.75)),
+        ]));
+        assert_eq!(r.len(), 1);
+        assert!(!r.is_empty());
+        let parsed = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(parsed.req("bench").as_str(), Some("kernels"));
+        assert_eq!(parsed.req("threads").as_f64(), Some(8.0));
+        let rows = parsed.req("results").as_arr().unwrap();
+        assert_eq!(rows[0].req("speedup").as_f64(), Some(1.75));
+
+        let path = std::env::temp_dir().join("blast_bench_report_test.json");
+        r.write(&path).unwrap();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&txt).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn measurement_to_json_fields() {
+        let m = bench_quick("spin2", || {
+            black_box(1 + 1);
+        });
+        let j = m.to_json();
+        assert_eq!(j.req("name").as_str(), Some("spin2"));
+        assert!(j.req("median_ns").as_f64().unwrap() >= 0.0);
     }
 }

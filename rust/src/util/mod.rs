@@ -2,15 +2,17 @@
 //!
 //! Only the `xla` crate's dependency closure exists in the vendored
 //! registry, so the usual ecosystem crates are re-implemented here at the
-//! scale this project needs: a scoped thread pool (rayon stand-in), a JSON
-//! parser/serializer (serde stand-in), a declarative CLI parser (clap
-//! stand-in), a deterministic PRNG with the samplers the data generators
-//! need, and timing/statistics helpers.
+//! scale this project needs: a scoped thread pool (rayon stand-in) with
+//! cost-aware scheduling, a thread-local scratch arena for kernel tile
+//! buffers, a JSON parser/serializer (serde stand-in), a declarative CLI
+//! parser (clap stand-in), a deterministic PRNG with the samplers the data
+//! generators need, and timing/statistics helpers.
 
 pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod scratch;
 pub mod stats;
 pub mod threadpool;
 

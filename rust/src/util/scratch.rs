@@ -1,0 +1,142 @@
+//! Thread-local scratch arena for kernel tile buffers.
+//!
+//! The fused-MLP and packed-GEMM hot paths need short-lived `mr×f` tile
+//! buffers *per task*. Allocating them with `vec![0.0; ..]` puts the
+//! allocator on the decode critical path (and its lock under the thread
+//! pool); this arena instead recycles buffers per worker thread, so after
+//! warmup the kernels run allocation-free.
+//!
+//! Usage: [`take_zeroed`] / [`take_uninit`] return a [`Scratch`] guard that
+//! derefs to `[f32]` and returns its backing `Vec` to the calling thread's
+//! pool on drop. Buffers taken on a pool worker stay cached on that worker,
+//! which is exactly the reuse pattern `threadpool::parallel_for` produces.
+
+use std::cell::RefCell;
+
+/// Max buffers cached per thread (fused MLP needs 4 live at once; a little
+/// headroom covers nested dense-MLP + projection usage).
+const POOL_CAP: usize = 8;
+
+/// Buffers whose capacity exceeds this many floats (16 MiB) are freed on
+/// drop instead of pooled: one giant prefill must not pin its tile buffers
+/// in every worker thread for the lifetime of a serving process.
+const MAX_POOLED_LEN: usize = 1 << 22;
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// An arena-backed f32 buffer; returns to the thread's pool on drop.
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl std::ops::Deref for Scratch {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.capacity() > MAX_POOLED_LEN {
+            return; // free oversized buffers instead of pinning them
+        }
+        POOL.with(|p| {
+            let mut p = p.borrow_mut();
+            if p.len() < POOL_CAP {
+                p.push(buf);
+            }
+        });
+    }
+}
+
+fn take_raw(len: usize) -> Vec<f32> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        // prefer the buffer with the largest capacity to minimize regrowth
+        let best = p
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        match best {
+            Some(i) => p.swap_remove(i),
+            None => Vec::new(),
+        }
+    })
+}
+
+/// A length-`len` buffer with every element set to 0.0.
+pub fn take_zeroed(len: usize) -> Scratch {
+    let mut buf = take_raw(len);
+    buf.clear();
+    buf.resize(len, 0.0);
+    Scratch { buf }
+}
+
+/// A length-`len` buffer with unspecified contents (recycled values); use
+/// when every element is overwritten before being read (e.g. pack targets).
+pub fn take_uninit(len: usize) -> Scratch {
+    let mut buf = take_raw(len);
+    buf.resize(len, 0.0);
+    Scratch { buf }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_really_zeroes_recycled_buffers() {
+        {
+            let mut a = take_uninit(64);
+            for v in a.iter_mut() {
+                *v = 7.0;
+            }
+        } // returns the dirty buffer to the pool
+        let b = take_zeroed(64);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lengths_are_exact() {
+        assert_eq!(take_zeroed(0).len(), 0);
+        assert_eq!(take_zeroed(13).len(), 13);
+        {
+            let _big = take_zeroed(1000);
+        }
+        // shrinking reuse must not keep the old length
+        assert_eq!(take_uninit(3).len(), 3);
+    }
+
+    #[test]
+    fn capacity_is_recycled() {
+        let cap = {
+            let s = take_zeroed(512);
+            s.buf.capacity()
+        };
+        // drop pushed it back; a smaller request should reuse that backing
+        let s = take_uninit(16);
+        assert!(s.buf.capacity() >= 16);
+        let _ = cap; // capacity reuse is best-effort; assert no panic only
+    }
+
+    #[test]
+    fn many_guards_alive_at_once() {
+        let a = take_zeroed(8);
+        let b = take_zeroed(8);
+        let c = take_zeroed(8);
+        let d = take_zeroed(8);
+        assert_eq!(a.len() + b.len() + c.len() + d.len(), 32);
+    }
+}

@@ -163,6 +163,55 @@ pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
     global().parallel_for(n, &f);
 }
 
+/// Cost-aware variant: run `f(i)` for `i in 0..n` where `weight(i)` is an
+/// estimate of item `i`'s cost (any unit). Items are grouped into
+/// *contiguous* index ranges of approximately equal total weight and the
+/// ranges are scheduled on the pool, so a few heavy items (e.g. dense
+/// block columns of a mostly-pruned BSpMM) cannot serialize the whole
+/// call the way uniform index chunking does.
+///
+/// Weights are supplied as a function, not a slice, so callers with
+/// structured costs (BSpMM: per-column block counts repeated per row
+/// tile) don't materialize an O(n) vector per call. Zero-weight items
+/// ride along with their neighbors for free; contiguity preserves
+/// whatever cache locality the item order encodes.
+pub fn parallel_for_weighted(
+    n: usize,
+    weight: impl Fn(usize) -> usize,
+    f: impl Fn(usize) + Sync,
+) {
+    if n == 0 {
+        return;
+    }
+    let workers = global().workers();
+    let total: usize = (0..n).map(&weight).sum();
+    if n == 1 || workers == 1 || total == 0 {
+        parallel_for(n, f);
+        return;
+    }
+    // ~4 ranges per worker: enough slack for work stealing via the shared
+    // counter without paying per-item dispatch.
+    let target = total.div_ceil(workers * 4).max(1);
+    let mut bounds = Vec::with_capacity(workers * 4 + 2);
+    bounds.push(0usize);
+    let mut acc = 0usize;
+    for i in 0..n {
+        acc += weight(i);
+        if acc >= target && i + 1 < n {
+            bounds.push(i + 1);
+            acc = 0;
+        }
+    }
+    bounds.push(n);
+    let f_ref = &f;
+    let bounds_ref = &bounds;
+    global().parallel_for(bounds.len() - 1, &move |ci| {
+        for i in bounds_ref[ci]..bounds_ref[ci + 1] {
+            f_ref(i);
+        }
+    });
+}
+
 /// Split `data` into `n_chunks` contiguous mutable chunks and process each on
 /// the pool. `f(chunk_index, chunk)`.
 pub fn parallel_chunks_mut<T: Send>(
@@ -231,5 +280,60 @@ mod tests {
             ran.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn weighted_covers_all_indices_once() {
+        // skewed weights incl. zeros — the BSpMM block-column profile
+        let weight = |i: usize| if i % 7 == 0 { 0 } else { (i * 37) % 23 };
+        let hits: Vec<AtomicU64> = (0..4096).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_weighted(4096, weight, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn weighted_extreme_profiles() {
+        // all-zero weights fall back to uniform chunking
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_weighted(100, |_| 0, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // one heavy item among zeros must not lose the light ones
+        let hits: Vec<AtomicU64> = (0..513).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_weighted(513, |i| if i == 200 { 1_000_000 } else { 0 }, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // empty + singleton
+        parallel_for_weighted(0, |_| 1, |_| panic!("should not run"));
+        let ran = AtomicU64::new(0);
+        parallel_for_weighted(1, |_| 42, |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn many_small_jobs_stress() {
+        // nested-free storm of tiny jobs: the decode-projection pattern.
+        // Guards the scheduler against lost wakeups / double dispatch.
+        for round in 0..300 {
+            let n = 1 + (round % 19);
+            let sum = AtomicU64::new(0);
+            if round % 2 == 0 {
+                parallel_for(n, |i| {
+                    sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                });
+            } else {
+                parallel_for_weighted(n, |i| i % 3, |i| {
+                    sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                });
+            }
+            let expect = (n as u64) * (n as u64 + 1) / 2;
+            assert_eq!(sum.load(Ordering::Relaxed), expect, "round {round}");
+        }
     }
 }

@@ -1,4 +1,5 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//! Integration tests over the real AOT artifacts (require `make artifacts`
+//! and a build with `--features pjrt`).
 //!
 //! These are the cross-layer proofs:
 //!  * L1→L3: the Pallas-lowered kernels execute through PJRT from Rust and
@@ -7,6 +8,10 @@
 //!    Pallas-MLP model variant agrees with the masked-dense variant.
 //!  * native engine ↔ AOT graphs: identical weights + masks produce the
 //!    same prefill logits in both stacks.
+//!
+//! When the runtime cannot open (default no-`pjrt` build, or artifacts not
+//! generated) every test here *skips* instead of failing: the native-stack
+//! guarantees are covered by the crate's unit tests and `serving_e2e.rs`.
 
 use std::collections::BTreeMap;
 use std::sync::OnceLock;
@@ -21,9 +26,26 @@ use blast::tensor::Tensor;
 use blast::train::pretrain::{PretrainOptions, Trainer};
 use blast::util::rng::Rng;
 
-fn runtime() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| Runtime::open_default().expect("run `make artifacts` first"))
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("AOT runtime unavailable, skipping integration test: {e:#}");
+            None
+        }
+    })
+    .as_ref()
+}
+
+/// Evaluates to the runtime or returns early (skip) when it is unavailable.
+macro_rules! require_runtime {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
 }
 
 // ---------------------------------------------------------------------------
@@ -32,7 +54,7 @@ fn runtime() -> &'static Runtime {
 
 #[test]
 fn pallas_bspmm_artifact_matches_native_kernel() {
-    let rt = runtime();
+    let rt = require_runtime!();
     let info = rt.manifest().entry("bspmm_pallas").unwrap().clone();
     // shapes from the manifest: x (m,k), w (k,n), mask (k/b, n/b)
     let m = info.inputs[0].shape[0];
@@ -67,7 +89,7 @@ fn pallas_bspmm_artifact_matches_native_kernel() {
 
 #[test]
 fn pallas_fused_mlp_artifact_matches_native_kernel() {
-    let rt = runtime();
+    let rt = require_runtime!();
     let info = rt.manifest().entry("fused_mlp_pallas").unwrap().clone();
     let m = info.inputs[0].shape[0];
     let k = info.inputs[0].shape[1];
@@ -118,7 +140,7 @@ fn pallas_fused_mlp_artifact_matches_native_kernel() {
 
 #[test]
 fn micro_training_reduces_loss_and_applies_sparsity() {
-    let rt = runtime();
+    let rt = require_runtime!();
     let opts = PretrainOptions {
         total_iters: 25,
         s_max: 0.6,
@@ -139,7 +161,7 @@ fn micro_training_reduces_loss_and_applies_sparsity() {
 
 #[test]
 fn pallas_model_variant_matches_dense_variant_through_pjrt() {
-    let rt = runtime();
+    let rt = require_runtime!();
     let cfg = rt.manifest().config("micro-llama").unwrap().clone();
     let params = ParamStore::init(&cfg, 5);
     let mut rng = Rng::new(6);
@@ -179,7 +201,7 @@ fn pallas_model_variant_matches_dense_variant_through_pjrt() {
 
 #[test]
 fn native_engine_matches_aot_prefill_logits() {
-    let rt = runtime();
+    let rt = require_runtime!();
     let cfg = rt.manifest().config("micro-llama").unwrap().clone();
     let params = ParamStore::init(&cfg, 9);
     let mut rng = Rng::new(10);
@@ -227,7 +249,7 @@ fn native_engine_matches_aot_prefill_logits() {
 
 #[test]
 fn aot_prefill_decode_consistent_with_full_prefill() {
-    let rt = runtime();
+    let rt = require_runtime!();
     let cfg = rt.manifest().config("micro-llama").unwrap().clone();
     let params = ParamStore::init(&cfg, 13);
     let mut base_inputs = Vec::new();

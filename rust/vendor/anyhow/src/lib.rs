@@ -1,0 +1,176 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! The offline build environment has no crates.io access, so the subset of
+//! anyhow this project actually uses — [`Error`], [`Result`], the
+//! [`Context`] extension trait and the [`anyhow!`]/[`bail!`] macros — is
+//! implemented here and wired in as a path dependency. Semantics match
+//! anyhow where call sites can observe them:
+//!
+//! * `{e}` prints the outermost message, `{e:#}` the full cause chain
+//!   joined with `": "`, `{e:?}` the chain as well;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` value
+//!   (capturing its `source()` chain);
+//! * `.context(..)` / `.with_context(..)` work on both `Result` and
+//!   `Option` and prepend a new outermost message.
+//!
+//! [`Error`] deliberately does **not** implement `std::error::Error`
+//! (exactly like the real crate) so that the blanket `From` impl does not
+//! collide with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// A lightweight error: an ordered cause chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend a new outermost message to the cause chain.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut cur: Option<&dyn std::error::Error> = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_prepends_outermost() {
+        let e = fails_io().context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        assert_eq!(format!("{e:?}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "k")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing k");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let v = 42;
+        let e = anyhow!("value {v} and {}", "arg");
+        assert_eq!(format!("{e}"), "value 42 and arg");
+        fn bails(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(format!("{}", bails(true).unwrap_err()), "flagged 7");
+        assert_eq!(bails(false).unwrap(), 1);
+    }
+}
