@@ -1,0 +1,8 @@
+//! Bench: batched-vs-sequential decode round A/B; writes BENCH_serve.json.
+//! `cargo bench --bench serve_ab [-- --quick --batches 1,4,8 --out BENCH_serve.json]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::serve_exps::serve(&args).unwrap();
+}

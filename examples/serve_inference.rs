@@ -5,7 +5,13 @@
 //!
 //! Run: cargo run --release --example serve_inference -- \
 //!          [--sparsity 0.9] [--block 128] [--requests 16] [--max-batch 4]
+//!          [--batched false]                      # sequential A/B baseline
 //!          [--ckpt path.bin --config llama-sim]   # serve trained weights
+//!
+//! Batched decode rounds (one `(B × d_model)` GEMM/BSpMM per projection via
+//! `Engine::decode_batch`) are **on by default**; `--batched false` serves
+//! the same load through per-session GEMV chains — greedy tokens are
+//! bit-identical, only the throughput differs.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -27,6 +33,7 @@ fn main() -> Result<()> {
     let block = args.get_usize("block", 128);
     let n_requests = args.get_usize("requests", 16);
     let max_new = args.get_usize("max-new", 12);
+    let batched = args.get_bool_or("batched", true);
 
     // weights: either a checkpoint trained by examples/pretrain_gpt2 /
     // `blast train --save`, or a synthetic model
@@ -48,7 +55,8 @@ fn main() -> Result<()> {
     for mode in [MlpMode::Dense, MlpMode::Sparse] {
         let engine = Arc::new(Engine::new(cfg.clone(), &params, &masks, mode)?);
         println!(
-            "\n=== mode {mode:?} — MLP bytes resident {} KiB ===",
+            "\n=== mode {mode:?} ({}) — MLP bytes resident {} KiB ===",
+            if batched { "batched rounds" } else { "sequential rounds" },
             engine.mlp_weight_bytes() / 1024
         );
         let mut coord = Coordinator::start(
@@ -56,6 +64,7 @@ fn main() -> Result<()> {
             BatcherConfig {
                 max_batch: args.get_usize("max-batch", 4),
                 max_queue: 64,
+                batched,
             },
         );
         let t0 = std::time::Instant::now();

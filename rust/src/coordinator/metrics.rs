@@ -1,11 +1,14 @@
 //! Serving metrics: TTFT / end-to-end latency distributions, decode
-//! throughput, queueing stats — the observables behind the Fig. 6
-//! end-to-end reproduction.
+//! throughput, queueing stats, and per-round continuous-batching
+//! observables (batch occupancy, tokens/s per round) — the numbers behind
+//! the Fig. 6 end-to-end reproduction and the batched-decode A/B.
 
 use std::time::Instant;
 
 use crate::util::stats::{percentile, Welford};
 
+/// Aggregated serving observables; one instance lives behind the
+/// coordinator's mutex and is updated by the scheduler thread.
 #[derive(Debug)]
 pub struct ServeMetrics {
     started: Instant,
@@ -14,9 +17,20 @@ pub struct ServeMetrics {
     queue_wait: Welford,
     ttft_samples: Vec<f64>,
     e2e_samples: Vec<f64>,
+    round_batch: Welford,
+    round_tok_rate: Welford,
+    /// Generated tokens across completed requests (the first of which is
+    /// produced by the prefill pass, the rest by decode rounds).
     pub tokens_generated: u64,
+    /// Prompt tokens consumed by prefill.
     pub prefill_tokens: u64,
+    /// Requests completed (successfully or not).
     pub requests_done: u64,
+    /// Decode rounds executed (each touches every active session once).
+    pub rounds: u64,
+    /// Batched rounds that errored and fell back to sequential decode —
+    /// should stay 0; a nonzero value means batching is silently off.
+    pub batched_fallbacks: u64,
 }
 
 impl Default for ServeMetrics {
@@ -26,6 +40,7 @@ impl Default for ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Fresh metrics; the throughput clock starts now.
     pub fn new() -> ServeMetrics {
         ServeMetrics {
             started: Instant::now(),
@@ -34,12 +49,17 @@ impl ServeMetrics {
             queue_wait: Welford::new(),
             ttft_samples: Vec::new(),
             e2e_samples: Vec::new(),
+            round_batch: Welford::new(),
+            round_tok_rate: Welford::new(),
             tokens_generated: 0,
             prefill_tokens: 0,
             requests_done: 0,
+            rounds: 0,
+            batched_fallbacks: 0,
         }
     }
 
+    /// Record one completed request (latencies in seconds).
     pub fn record_request(
         &mut self,
         queue_secs: f64,
@@ -58,37 +78,74 @@ impl ServeMetrics {
         self.requests_done += 1;
     }
 
+    /// Record one continuous-batching decode round: how many sessions took
+    /// a step, how long the round took, and how many tokens it produced.
+    /// Mean batch size is the occupancy of the `(B × d_model)` GEMMs; the
+    /// per-round token rate is the quantity the batched-vs-sequential A/B
+    /// (`blast exp serve`) gates on.
+    pub fn record_round(&mut self, batch_size: usize, secs: f64, new_tokens: usize) {
+        self.rounds += 1;
+        self.round_batch.push(batch_size as f64);
+        if secs > 0.0 {
+            self.round_tok_rate.push(new_tokens as f64 / secs);
+        }
+    }
+
     /// Decode throughput since startup (tokens/s).
     pub fn throughput(&self) -> f64 {
         self.tokens_generated as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// Mean time-to-first-token (seconds).
     pub fn ttft_mean(&self) -> f64 {
         self.ttft.mean()
     }
 
+    /// Median end-to-end request latency (seconds).
     pub fn e2e_p50(&self) -> f64 {
         percentile(&self.e2e_samples, 50.0)
     }
 
+    /// 99th-percentile end-to-end request latency (seconds).
     pub fn e2e_p99(&self) -> f64 {
         percentile(&self.e2e_samples, 99.0)
     }
 
+    /// Mean time spent in the admission queue (seconds).
     pub fn queue_wait_mean(&self) -> f64 {
         self.queue_wait.mean()
     }
 
+    /// Mean sessions per decode round (continuous-batch occupancy).
+    pub fn mean_round_batch(&self) -> f64 {
+        self.round_batch.mean()
+    }
+
+    /// Mean per-round decode rate (tokens/s measured within rounds, i.e.
+    /// excluding prefill and scheduling gaps).
+    pub fn round_tokens_per_s(&self) -> f64 {
+        self.round_tok_rate.mean()
+    }
+
+    /// One-line human-readable digest of everything above (the fallback
+    /// counter appears only when nonzero — it should never be).
     pub fn summary(&self) -> String {
-        format!(
-            "requests={} tokens={} throughput={:.1} tok/s ttft_mean={:.1}ms e2e_p50={:.1}ms e2e_p99={:.1}ms",
+        let mut s = format!(
+            "requests={} tokens={} throughput={:.1} tok/s ttft_mean={:.1}ms e2e_p50={:.1}ms e2e_p99={:.1}ms rounds={} mean_batch={:.2} round_tok/s={:.1}",
             self.requests_done,
             self.tokens_generated,
             self.throughput(),
             self.ttft_mean() * 1e3,
             self.e2e_p50() * 1e3,
             self.e2e_p99() * 1e3,
-        )
+            self.rounds,
+            self.mean_round_batch(),
+            self.round_tokens_per_s(),
+        );
+        if self.batched_fallbacks > 0 {
+            s.push_str(&format!(" batched_fallbacks={}", self.batched_fallbacks));
+        }
+        s
     }
 }
 
@@ -107,5 +164,17 @@ mod tests {
         assert!(m.e2e_p50() > 0.0);
         assert!(m.e2e_p99() >= m.e2e_p50());
         assert!(m.summary().contains("requests=10"));
+    }
+
+    #[test]
+    fn round_stats_track_occupancy_and_rate() {
+        let mut m = ServeMetrics::new();
+        m.record_round(4, 0.010, 4);
+        m.record_round(2, 0.005, 2);
+        m.record_round(0, 0.0, 0); // zero-duration round must not divide by 0
+        assert_eq!(m.rounds, 3);
+        assert!((m.mean_round_batch() - 2.0).abs() < 1e-9);
+        assert!((m.round_tokens_per_s() - 400.0).abs() < 1e-6);
+        assert!(m.summary().contains("rounds=3"));
     }
 }

@@ -6,6 +6,14 @@
 //! [`crate::model::Engine`], and latency/throughput metrics. All pure
 //! scheduling logic lives in [`router`] (deterministically unit- and
 //! property-tested); [`server`] adds the threads.
+//!
+//! By default every decode round is **batched**: the scheduler stacks all
+//! prefilled sessions into one `Engine::decode_batch` call, so the MR×NR
+//! register tiles of the packed kernels see a real `(B × d_model)` batch
+//! dimension instead of degenerate 1-row GEMVs ([`BatcherConfig::batched`]
+//! flips back to the sequential baseline; greedy outputs are bit-identical
+//! either way). [`metrics`] tracks per-round batch occupancy and tokens/s
+//! alongside the request-level latency distributions.
 
 pub mod metrics;
 pub mod router;

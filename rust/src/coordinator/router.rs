@@ -10,8 +10,11 @@ use std::collections::VecDeque;
 /// An inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Client-chosen id, echoed back in the [`crate::coordinator::Completion`].
     pub id: u64,
+    /// Prompt token ids (must fit the engine's `max_seq`).
     pub prompt: Vec<u32>,
+    /// Decode budget: at most this many new tokens are generated.
     pub max_new: usize,
     /// Optional stop token.
     pub eos: Option<u32>,
@@ -20,6 +23,8 @@ pub struct Request {
 /// One admitted, in-flight sequence.
 #[derive(Debug)]
 pub struct Session {
+    /// The originating request (its `max_new` may be lowered to force
+    /// retirement when the engine cannot continue the session).
     pub req: Request,
     /// Generated tokens so far.
     pub output: Vec<u32>,
@@ -30,6 +35,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// `true` once the decode budget is spent or EOS was emitted.
     pub fn finished(&self) -> bool {
         if self.output.len() >= self.req.max_new {
             return true;
@@ -41,6 +47,7 @@ impl Session {
     }
 }
 
+/// Scheduling knobs for the continuous batcher.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Max concurrently active sessions (continuous batch width).
@@ -48,6 +55,12 @@ pub struct BatcherConfig {
     /// Bounded waiting queue — enqueue beyond this is rejected
     /// (backpressure to the client).
     pub max_queue: usize,
+    /// Drive each decode round through one `Engine::decode_batch` call
+    /// (a single packed GEMM/BSpMM per projection over the whole batch)
+    /// instead of per-session `decode` GEMV chains. On by default; turn
+    /// off only for the sequential A/B baseline — greedy outputs are
+    /// bit-identical either way.
+    pub batched: bool,
 }
 
 impl Default for BatcherConfig {
@@ -55,6 +68,7 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 4,
             max_queue: 64,
+            batched: true,
         }
     }
 }
@@ -65,11 +79,14 @@ pub struct Batcher {
     waiting: VecDeque<Request>,
     active: Vec<Session>,
     round: u64,
+    /// Requests refused because the waiting queue was full.
     pub rejected: u64,
+    /// Sessions retired so far.
     pub completed: u64,
 }
 
 impl Batcher {
+    /// An empty batcher with the given limits.
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher {
             cfg,
@@ -81,14 +98,17 @@ impl Batcher {
         }
     }
 
+    /// Requests waiting for a batch slot.
     pub fn queue_len(&self) -> usize {
         self.waiting.len()
     }
 
+    /// Sessions currently in flight.
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
 
+    /// Decode rounds completed since start.
     pub fn round(&self) -> u64 {
         self.round
     }
@@ -146,8 +166,22 @@ impl Batcher {
         done
     }
 
+    /// `true` when there is nothing queued and nothing in flight.
     pub fn idle(&self) -> bool {
         self.waiting.is_empty() && self.active.is_empty()
+    }
+
+    /// Remove and return every waiting (queued-but-unadmitted) request —
+    /// the shutdown path, so the server can turn them into error
+    /// completions instead of silently dropping them.
+    pub fn drain_waiting(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// Remove and return every in-flight session (shutdown path); their
+    /// partial outputs travel with them.
+    pub fn take_active(&mut self) -> Vec<Session> {
+        std::mem::take(&mut self.active)
     }
 }
 
@@ -171,6 +205,7 @@ mod tests {
         let mut b = Batcher::new(BatcherConfig {
             max_batch: 2,
             max_queue: 3,
+            ..BatcherConfig::default()
         });
         for i in 0..3 {
             assert!(b.enqueue(req(i, 1)));
@@ -184,6 +219,7 @@ mod tests {
         let mut b = Batcher::new(BatcherConfig {
             max_batch: 2,
             max_queue: 10,
+            ..BatcherConfig::default()
         });
         for i in 0..5 {
             b.enqueue(req(i, 1));
@@ -200,6 +236,7 @@ mod tests {
         let mut b = Batcher::new(BatcherConfig {
             max_batch: 2,
             max_queue: 10,
+            ..BatcherConfig::default()
         });
         for i in 0..4 {
             b.enqueue(req(i, 1));
@@ -214,6 +251,25 @@ mod tests {
         let admitted = b.admit();
         assert_eq!(admitted.len(), 2);
         assert_eq!(b.active_mut()[0].req.id, 2);
+    }
+
+    #[test]
+    fn drain_and_take_empty_everything() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_queue: 10,
+            ..BatcherConfig::default()
+        });
+        for i in 0..5 {
+            b.enqueue(req(i, 3));
+        }
+        b.admit();
+        let waiting = b.drain_waiting();
+        assert_eq!(waiting.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+        let active = b.take_active();
+        assert_eq!(active.len(), 2);
+        assert!(b.idle());
+        assert_eq!(b.queue_len(), 0);
     }
 
     #[test]
@@ -245,6 +301,7 @@ mod tests {
             let mut b = Batcher::new(BatcherConfig {
                 max_batch,
                 max_queue: 64,
+                ..BatcherConfig::default()
             });
             for i in 0..n_reqs {
                 b.enqueue(Request {

@@ -7,6 +7,18 @@
 //! once (continuous batching), so short requests retire early and free
 //! their slot for waiting requests — the Orca/vLLM scheduling shape, with
 //! the paper's sparse MLP on the hot path.
+//!
+//! With [`BatcherConfig::batched`] (the default), each round makes **one**
+//! [`Engine::decode_batch`] call over all prefilled sessions, so every
+//! projection/MLP/LM-head multiply runs as a single `(B × d_model)` packed
+//! GEMM or BSpMM instead of B GEMV chains. Ragged batches (sessions
+//! finishing mid-round) simply shrink B the next round. Errors are
+//! isolated per session: a failed batched round falls back to per-session
+//! sequential decode so one bad session can't poison the others, and a
+//! session whose KV cache fills up retires with the tokens it has.
+//! On [`Coordinator::stop`], queued-but-unadmitted requests and in-flight
+//! sessions are drained into error completions — a client blocked on
+//! [`Coordinator::next_completion`] always gets an answer.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -23,11 +35,17 @@ use crate::model::engine::{Engine, KvCache};
 /// A finished request.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// The [`Request::id`] this completion answers.
     pub id: u64,
+    /// Generated tokens (possibly partial when `error` is set).
     pub tokens: Vec<u32>,
+    /// Seconds spent waiting for a batch slot.
     pub queue_secs: f64,
+    /// Seconds from submission to the first generated token.
     pub ttft_secs: f64,
+    /// Seconds from submission to completion.
     pub e2e_secs: f64,
+    /// Why the request failed (prefill error, shutdown); `None` = success.
     pub error: Option<String>,
 }
 
@@ -37,6 +55,8 @@ struct Timing {
     first_token: Option<Instant>,
 }
 
+/// Handle to a running serving coordinator: submit requests, receive
+/// completions, read metrics, stop the scheduler.
 pub struct Coordinator {
     tx: SyncSender<Request>,
     completions: Receiver<Completion>,
@@ -80,14 +100,23 @@ impl Coordinator {
         self.completions.recv_timeout(timeout).ok()
     }
 
+    /// One-line digest of the serving metrics so far.
     pub fn metrics_summary(&self) -> String {
         self.metrics.lock().unwrap().summary()
     }
 
+    /// Decode throughput since startup (tokens/s).
     pub fn throughput(&self) -> f64 {
         self.metrics.lock().unwrap().throughput()
     }
 
+    /// Mean sessions per decode round (continuous-batch occupancy).
+    pub fn mean_round_batch(&self) -> f64 {
+        self.metrics.lock().unwrap().mean_round_batch()
+    }
+
+    /// Stop the scheduler and wait for it to exit. Requests still queued
+    /// or in flight are answered with error completions, never dropped.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.worker.take() {
@@ -113,6 +142,9 @@ fn scheduler_loop(
     let mut batcher = Batcher::new(cfg);
     let mut caches: HashMap<u64, KvCache> = HashMap::new();
     let mut timing: HashMap<u64, Timing> = HashMap::new();
+    // ids answered with an error completion at prefill time; retirement
+    // must not send a second (bogus success) completion for them
+    let mut errored: std::collections::HashSet<u64> = std::collections::HashSet::new();
     while !stop.load(Ordering::Relaxed) {
         // drain the submission channel into the waiting queue
         loop {
@@ -122,8 +154,23 @@ fn scheduler_loop(
                 Duration::ZERO
             }) {
                 Ok(req) => {
+                    let id = req.id;
+                    // ids key the KV-cache and timing maps; a duplicate of
+                    // a live request would corrupt both — reject it
+                    if timing.contains_key(&id) {
+                        ctx.send(Completion {
+                            id,
+                            tokens: Vec::new(),
+                            queue_secs: 0.0,
+                            ttft_secs: 0.0,
+                            e2e_secs: 0.0,
+                            error: Some(format!("duplicate request id {id} still in flight")),
+                        })
+                        .ok();
+                        continue;
+                    }
                     timing.insert(
-                        req.id,
+                        id,
                         Timing {
                             submitted: Instant::now(),
                             admitted: None,
@@ -132,7 +179,18 @@ fn scheduler_loop(
                     );
                     if !batcher.enqueue(req) {
                         // bounded-queue overflow (should not happen: the
-                        // channel is the same size) — report as error
+                        // channel is the same size) — answer with an error
+                        // completion rather than dropping the request
+                        timing.remove(&id);
+                        ctx.send(Completion {
+                            id,
+                            tokens: Vec::new(),
+                            queue_secs: 0.0,
+                            ttft_secs: 0.0,
+                            e2e_secs: 0.0,
+                            error: Some("waiting queue full".into()),
+                        })
+                        .ok();
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => break,
@@ -177,33 +235,103 @@ fn scheduler_loop(
                         error: Some(e.to_string()),
                     })
                     .ok();
-                    s.output = vec![0; s.req.max_new]; // force retirement
+                    errored.insert(id);
+                    s.req.max_new = 0; // force retirement with no output
                     s.prefilled = true;
                 }
             }
         }
 
-        // one continuous-batching decode round
-        for s in batcher.active_mut() {
+        // one continuous-batching decode round: every prefilled, unfinished
+        // session with KV headroom takes exactly one step
+        let round_t0 = Instant::now();
+        let max_seq = engine.config().max_seq;
+        let mut round_ids: Vec<u64> = Vec::new();
+        let mut round_tokens: Vec<u32> = Vec::new();
+        for s in batcher.active_mut().iter_mut() {
             if !s.prefilled || s.finished() {
                 continue;
             }
-            let id = s.req.id;
-            let cache = caches.get_mut(&id).unwrap();
-            let last = *s.output.last().unwrap();
-            match engine.decode(last, cache) {
-                Ok(logits) => s.output.push(Engine::argmax(&logits)),
-                Err(_) => {
-                    // KV exhausted → finish what we have
-                    s.req.max_new = s.output.len();
+            if caches.get(&s.req.id).map(|c| c.len >= max_seq).unwrap_or(true) {
+                // KV exhausted → finish with the tokens we have
+                s.req.max_new = s.output.len();
+                continue;
+            }
+            round_ids.push(s.req.id);
+            round_tokens.push(*s.output.last().unwrap());
+        }
+        if !round_ids.is_empty() {
+            let mut decoded: Vec<Option<Vec<f32>>> = vec![None; round_ids.len()];
+            if cfg.batched {
+                // stack the round's sessions into one decode_batch call —
+                // a single (B × d_model) GEMM/BSpMM per projection
+                let mut round_caches: Vec<KvCache> =
+                    round_ids.iter().map(|id| caches.remove(id).unwrap()).collect();
+                match engine.decode_batch(&round_tokens, &mut round_caches) {
+                    Ok(all) => {
+                        for (slot, logits) in decoded.iter_mut().zip(all) {
+                            *slot = Some(logits);
+                        }
+                    }
+                    Err(e) => {
+                        // loud: a failing batched round silently costing a
+                        // sequential fallback every iteration is exactly the
+                        // regression the serve A/B exists to catch
+                        metrics.lock().unwrap().batched_fallbacks += 1;
+                        crate::log_warn!(
+                            "coordinator",
+                            "decode_batch failed ({} sessions), falling back to sequential: {e}",
+                            round_ids.len()
+                        );
+                    }
+                }
+                for (id, c) in round_ids.iter().zip(round_caches) {
+                    caches.insert(*id, c);
                 }
             }
+            // sequential path: the A/B baseline, and the per-session
+            // fallback after a failed batched round (error isolation — one
+            // bad session must not take down its batchmates)
+            for (j, id) in round_ids.iter().enumerate() {
+                if decoded[j].is_none() {
+                    if let Ok(logits) = engine.decode(round_tokens[j], caches.get_mut(id).unwrap())
+                    {
+                        decoded[j] = Some(logits);
+                    }
+                }
+            }
+            // apply results in active order (round_ids preserves it)
+            let mut produced = 0usize;
+            let mut j = 0;
+            for s in batcher.active_mut().iter_mut() {
+                if j < round_ids.len() && s.req.id == round_ids[j] {
+                    match decoded[j].take() {
+                        Some(logits) => {
+                            s.output.push(Engine::argmax(&logits));
+                            produced += 1;
+                        }
+                        // session failed even sequentially → retire with
+                        // whatever it has
+                        None => s.req.max_new = s.output.len(),
+                    }
+                    j += 1;
+                }
+            }
+            metrics.lock().unwrap().record_round(
+                round_ids.len(),
+                round_t0.elapsed().as_secs_f64(),
+                produced,
+            );
         }
 
         // retire finished sessions
         for s in batcher.end_round() {
             let id = s.req.id;
             caches.remove(&id);
+            if errored.remove(&id) {
+                timing.remove(&id);
+                continue; // already answered with an error completion
+            }
             let t = timing.remove(&id);
             let now = Instant::now();
             let (queue_secs, ttft_secs, e2e_secs) = match &t {
@@ -235,6 +363,31 @@ fn scheduler_loop(
             })
             .ok();
         }
+    }
+
+    // shutdown: drain everything still pending into error completions so a
+    // client blocked on next_completion can never hang on a stopped
+    // coordinator — requests sitting in the channel, queued-but-unadmitted
+    // requests, and in-flight sessions (which keep their partial tokens)
+    let stopped = |id: u64, tokens: Vec<u32>| Completion {
+        id,
+        tokens,
+        queue_secs: 0.0,
+        ttft_secs: 0.0,
+        e2e_secs: 0.0,
+        error: Some("coordinator stopped before completion".into()),
+    };
+    while let Ok(req) = rx.try_recv() {
+        ctx.send(stopped(req.id, Vec::new())).ok();
+    }
+    for req in batcher.drain_waiting() {
+        ctx.send(stopped(req.id, Vec::new())).ok();
+    }
+    for s in batcher.take_active() {
+        // end_round() retires finished sessions every iteration, so
+        // anything still active here is necessarily unfinished
+        caches.remove(&s.req.id);
+        ctx.send(stopped(s.req.id, s.output)).ok();
     }
 }
 
@@ -288,6 +441,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 3,
                 max_queue: 16,
+                ..BatcherConfig::default()
             },
         );
         let n = 8;
@@ -337,7 +491,7 @@ mod tests {
     }
 
     #[test]
-    fn overlong_prompt_reports_error() {
+    fn overlong_prompt_reports_error_exactly_once() {
         let engine = tiny_engine();
         let mut coord = Coordinator::start(engine, BatcherConfig::default());
         coord
@@ -350,6 +504,135 @@ mod tests {
             .unwrap();
         let c = coord.next_completion(Duration::from_secs(30)).unwrap();
         assert!(c.error.is_some());
+        // no spurious second completion for the same request
+        assert!(coord.next_completion(Duration::from_millis(300)).is_none());
         coord.stop();
+    }
+
+    #[test]
+    fn batched_and_sequential_rounds_serve_identical_tokens() {
+        let mut answers: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+        for batched in [true, false] {
+            let engine = tiny_engine();
+            let mut coord = Coordinator::start(
+                engine,
+                BatcherConfig {
+                    max_batch: 4,
+                    max_queue: 16,
+                    batched,
+                },
+            );
+            for i in 0..6u64 {
+                coord
+                    .submit(Request {
+                        id: i,
+                        prompt: (0..2 + i as usize % 3).map(|j| (3 + i as u32 + j as u32) % 32).collect(),
+                        max_new: 3 + i as usize % 4,
+                        eos: None,
+                    })
+                    .unwrap();
+            }
+            let mut done = Vec::new();
+            for _ in 0..6 {
+                let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+                assert!(c.error.is_none(), "{:?}", c.error);
+                done.push((c.id, c.tokens));
+            }
+            done.sort_by_key(|(id, _)| *id);
+            coord.stop();
+            answers.push(done);
+        }
+        assert_eq!(
+            answers[0], answers[1],
+            "batched and sequential decode rounds must serve bit-identical greedy streams"
+        );
+    }
+
+    #[test]
+    fn duplicate_live_id_is_rejected_with_error_completion() {
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 1,
+                max_queue: 8,
+                ..BatcherConfig::default()
+            },
+        );
+        // same id twice while the first is still live
+        for _ in 0..2 {
+            coord
+                .submit(Request {
+                    id: 42,
+                    prompt: vec![1, 2, 3],
+                    max_new: 6,
+                    eos: None,
+                })
+                .unwrap();
+        }
+        // both submissions must be answered — served, or rejected as a
+        // duplicate — and the scheduler must survive (no unwrap panic on
+        // the shared id in the batched round)
+        let mut oks = 0;
+        for _ in 0..2 {
+            let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+            assert_eq!(c.id, 42);
+            if c.error.is_none() {
+                assert_eq!(c.tokens.len(), 6);
+                oks += 1;
+            }
+        }
+        assert!(oks >= 1, "at least one of the duplicates must be served");
+        // scheduler still alive and serving
+        coord
+            .submit(Request {
+                id: 7,
+                prompt: vec![4, 5],
+                max_new: 2,
+                eos: None,
+            })
+            .unwrap();
+        let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+        assert_eq!((c.id, c.error), (7, None));
+        coord.stop();
+    }
+
+    #[test]
+    fn stop_drains_queued_requests_into_error_completions() {
+        let engine = tiny_engine();
+        let n = 12u64;
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 1,
+                max_queue: 32,
+                ..BatcherConfig::default()
+            },
+        );
+        for i in 0..n {
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt: vec![1, 2, 3],
+                    max_new: 8,
+                    eos: None,
+                })
+                .unwrap();
+        }
+        // stop immediately: most requests are still queued or in flight
+        coord.stop();
+        let mut seen = std::collections::HashSet::new();
+        while let Some(c) = coord.next_completion(Duration::from_millis(500)) {
+            assert!(seen.insert(c.id), "duplicate completion for {}", c.id);
+            if c.error.is_some() {
+                // drained requests carry the shutdown error
+                assert!(c.tokens.len() < 8);
+            }
+        }
+        assert_eq!(
+            seen.len() as u64,
+            n,
+            "every submitted request must receive exactly one completion"
+        );
     }
 }

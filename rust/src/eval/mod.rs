@@ -9,6 +9,7 @@
 //! | id      | artifact                                  | driver            |
 //! |---------|-------------------------------------------|-------------------|
 //! | kernels | seed-vs-packed A/B → BENCH_kernels.json   | [`kernel_exps`]   |
+//! | serve | batched-vs-seq decode → BENCH_serve.json   | [`serve_exps`]    |
 //! | fig4  | BSpMM kernel speedup sweep                 | [`kernel_exps`]   |
 //! | fig5  | Llama-family MLP speedup                   | [`kernel_exps`]   |
 //! | fig6  | end-to-end inference speedup               | [`kernel_exps`]   |
@@ -28,20 +29,22 @@ pub mod classify_exps;
 pub mod kernel_exps;
 pub mod memory_exps;
 pub mod pretrain_exps;
+pub mod serve_exps;
 
 use anyhow::{bail, Result};
 
 use crate::util::cli::Args;
 
 pub const ALL: &[&str] = &[
-    "kernels", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "fig8", "tab3",
-    "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
+    "kernels", "serve", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "fig8",
+    "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
 ];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, args: &Args) -> Result<()> {
     match id {
         "kernels" => kernel_exps::kernels(args),
+        "serve" => serve_exps::serve(args),
         "fig4" => kernel_exps::fig4(args),
         "fig5" => kernel_exps::fig5(args),
         "fig6" => kernel_exps::fig6(args),

@@ -1,0 +1,249 @@
+//! Serving-level experiments: the batched-vs-sequential decode A/B.
+//!
+//! `blast exp serve` (or `cargo bench --bench serve_ab`) measures one
+//! continuous-batching decode *round* both ways on the same engine and
+//! weights:
+//!
+//! * **sequential** — B calls to `Engine::decode`, each a chain of 1-row
+//!   GEMVs over the prepacked weights (the pre-batching coordinator);
+//! * **batched** — one `Engine::decode_batch` call whose projections, MLP
+//!   and LM head run as single `(B × d_model)` packed GEMM/BSpMM sweeps.
+//!
+//! Both paths produce bit-identical greedy streams (asserted here on every
+//! run), so the A/B isolates pure execution efficiency: how much weight
+//! panel / BCSC block streaming is amortized once the kernels see a real
+//! batch dimension. Results go to `BENCH_serve.json` via
+//! [`crate::testkit::bench::JsonReport`] — the serving-throughput
+//! trajectory file, next to `BENCH_kernels.json`. Gate: batched round
+//! throughput ≥ 1.5× sequential at batch ≥ 4, dense *and* sparse.
+
+use anyhow::{bail, Result};
+
+use crate::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
+use crate::model::engine::{Engine, KvCache, MlpMode};
+use crate::testkit::bench::{fmt_time, JsonReport, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Prompt lengths used by [`prefill_sessions`]: `MIN_PROMPT ..= MAX_PROMPT`
+/// tokens per session (MAX_PROMPT also bounds the `--rounds` KV check).
+const MIN_PROMPT: usize = 6;
+const MAX_PROMPT: usize = 10;
+
+/// Prefill `batch` sessions with distinct prompts; returns per-session
+/// caches and the first greedy token of each.
+fn prefill_sessions(engine: &Engine, batch: usize) -> Result<(Vec<KvCache>, Vec<u32>)> {
+    let vocab = engine.config().vocab;
+    let mut caches = Vec::with_capacity(batch);
+    let mut toks = Vec::with_capacity(batch);
+    for i in 0..batch {
+        let prompt: Vec<u32> = (0..MIN_PROMPT + i % (MAX_PROMPT - MIN_PROMPT + 1))
+            .map(|j| ((i * 131 + j * 37) % vocab) as u32)
+            .collect();
+        let mut cache = engine.new_cache();
+        let logits = engine.prefill(&prompt, &mut cache)?;
+        toks.push(Engine::argmax(&logits));
+        caches.push(cache);
+    }
+    Ok((caches, toks))
+}
+
+/// `rounds` sequential decode rounds (B GEMV chains per round); returns
+/// (wall seconds, greedy streams).
+fn run_sequential(
+    engine: &Engine,
+    caches: &mut [KvCache],
+    toks: &mut [u32],
+    rounds: usize,
+) -> Result<(f64, Vec<Vec<u32>>)> {
+    let mut streams: Vec<Vec<u32>> = toks.iter().map(|&t| vec![t]).collect();
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        for (i, cache) in caches.iter_mut().enumerate() {
+            let logits = engine.decode(toks[i], cache)?;
+            toks[i] = Engine::argmax(&logits);
+            streams[i].push(toks[i]);
+        }
+    }
+    Ok((t0.elapsed().as_secs_f64(), streams))
+}
+
+/// `rounds` batched decode rounds (one decode_batch call per round);
+/// returns (wall seconds, greedy streams).
+fn run_batched(
+    engine: &Engine,
+    caches: &mut [KvCache],
+    toks: &mut [u32],
+    rounds: usize,
+) -> Result<(f64, Vec<Vec<u32>>)> {
+    let mut streams: Vec<Vec<u32>> = toks.iter().map(|&t| vec![t]).collect();
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        let all = engine.decode_batch(toks, caches)?;
+        for (i, logits) in all.iter().enumerate() {
+            toks[i] = Engine::argmax(logits);
+            streams[i].push(toks[i]);
+        }
+    }
+    Ok((t0.elapsed().as_secs_f64(), streams))
+}
+
+/// `blast exp serve` — batched vs sequential decode-round A/B; writes
+/// `BENCH_serve.json` (override with `--out`). Flags: `--batches 1,4,8`,
+/// `--rounds N`, `--sparsity S`, `--block B`, `--quick`.
+pub fn serve(args: &Args) -> Result<()> {
+    let quick = args.get_bool("quick");
+    let out_path = args.get_str("out", "BENCH_serve.json");
+    let batches = args.get_usize_list("batches", if quick { &[1, 4] } else { &[1, 4, 8] });
+    let rounds = args.get_usize("rounds", if quick { 6 } else { 16 });
+    let sparsity = args.get_f64("sparsity", 0.9);
+    let block = args.get_usize("block", 128);
+
+    let cfg = fig6_config(block);
+    // every round appends one token per session — validate upfront so an
+    // oversized --rounds can't burn minutes of measurement and then die
+    // mid-run with "KV cache full" before the report is written
+    if MAX_PROMPT + rounds > cfg.max_seq {
+        bail!(
+            "--rounds {rounds} exceeds KV capacity: prompts up to {MAX_PROMPT} tokens + one \
+             token/round must fit max_seq={} (max --rounds {})",
+            cfg.max_seq,
+            cfg.max_seq - MAX_PROMPT
+        );
+    }
+    let params = fig6_params(&cfg, 42);
+    let masks = random_masks(&cfg, sparsity, 77);
+
+    let mut report = JsonReport::new("serve");
+    report.meta(
+        "threads",
+        Json::num(crate::util::threadpool::global().workers() as f64),
+    );
+    report.meta("rounds", Json::num(rounds as f64));
+    report.meta("sparsity", Json::num(sparsity));
+    report.meta("block", Json::num(block as f64));
+    let mut table = Table::new(
+        "Batched vs sequential decode rounds (gate: >= 1.5x at batch >= 4, both modes)",
+        &["mode", "batch", "rounds", "sequential", "batched", "speedup", "seq tok/s", "bat tok/s"],
+    );
+    let mut gate_ok = true;
+    let mut gated_rows = 0usize;
+    for mode in [MlpMode::Dense, MlpMode::Sparse] {
+        let engine = Engine::new(cfg.clone(), &params, &masks, mode)?;
+        for &b in &batches {
+            // warmup: one round each way on throwaway sessions
+            {
+                let (mut c, mut t) = prefill_sessions(&engine, b)?;
+                run_sequential(&engine, &mut c, &mut t, 1)?;
+                let (mut c, mut t) = prefill_sessions(&engine, b)?;
+                run_batched(&engine, &mut c, &mut t, 1)?;
+            }
+            let (mut c_seq, mut t_seq_tok) = prefill_sessions(&engine, b)?;
+            let (secs_seq, streams_seq) =
+                run_sequential(&engine, &mut c_seq, &mut t_seq_tok, rounds)?;
+            let (mut c_bat, mut t_bat_tok) = prefill_sessions(&engine, b)?;
+            let (secs_bat, streams_bat) = run_batched(&engine, &mut c_bat, &mut t_bat_tok, rounds)?;
+            if streams_seq != streams_bat {
+                bail!("batched decode diverged from sequential at mode={mode:?} batch={b}");
+            }
+            let tokens = (b * rounds) as f64;
+            let speedup = secs_seq / secs_bat;
+            if b >= 4 {
+                gated_rows += 1;
+                if speedup < 1.5 {
+                    gate_ok = false;
+                }
+            }
+            table.row(&[
+                format!("{mode:?}"),
+                b.to_string(),
+                rounds.to_string(),
+                fmt_time(secs_seq),
+                fmt_time(secs_bat),
+                format!("{speedup:.2}x"),
+                format!("{:.1}", tokens / secs_seq),
+                format!("{:.1}", tokens / secs_bat),
+            ]);
+            report.push(Json::obj(vec![
+                ("mode", Json::str(&format!("{mode:?}"))),
+                ("batch", Json::num(b as f64)),
+                ("rounds", Json::num(rounds as f64)),
+                ("sequential_ns", Json::num(secs_seq * 1e9)),
+                ("batched_ns", Json::num(secs_bat * 1e9)),
+                ("speedup", Json::num(speedup)),
+                ("seq_tok_s", Json::num(tokens / secs_seq)),
+                ("batched_tok_s", Json::num(tokens / secs_bat)),
+                ("identical_streams", Json::Bool(true)),
+            ]));
+        }
+    }
+    table.print();
+    report.write(std::path::Path::new(&out_path))?;
+    println!("\nwrote {} rows to {out_path}", report.len());
+    println!(
+        "gate (batched >= 1.5x sequential at batch >= 4, dense & sparse): {}",
+        if gated_rows == 0 {
+            "N/A — no batch >= 4 measured (pass --batches with a value >= 4)"
+        } else if gate_ok {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{ModelKind, NativeConfig};
+    use crate::model::params::ParamStore;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn tiny() -> (NativeConfig, ParamStore) {
+        let cfg = NativeConfig {
+            name: "serve-ab-test".into(),
+            kind: ModelKind::Llama,
+            vocab: 32,
+            emb: 16,
+            ffn: 32,
+            layers: 1,
+            heads: 2,
+            max_seq: 32,
+            block: 8,
+        };
+        let mut rng = Rng::new(9);
+        let mut s = ParamStore::new();
+        let e = cfg.emb;
+        s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.1, &mut rng));
+        for i in 0..cfg.layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+            for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                s.insert(p(w), Tensor::randn(&[e, e], 0.1, &mut rng));
+            }
+            s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+            for (n, r, c) in cfg.mlp_shapes() {
+                s.insert(p(n), Tensor::randn(&[r, c], 0.1, &mut rng));
+            }
+        }
+        s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+        s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
+        (cfg, s)
+    }
+
+    #[test]
+    fn harness_paths_agree_on_tiny_engine() {
+        let (cfg, params) = tiny();
+        let engine = Engine::new(cfg, &params, &BTreeMap::new(), MlpMode::Sparse).unwrap();
+        let (mut c1, mut t1) = prefill_sessions(&engine, 3).unwrap();
+        let (_, s_seq) = run_sequential(&engine, &mut c1, &mut t1, 4).unwrap();
+        let (mut c2, mut t2) = prefill_sessions(&engine, 3).unwrap();
+        let (_, s_bat) = run_batched(&engine, &mut c2, &mut t2, 4).unwrap();
+        assert_eq!(s_seq, s_bat);
+        assert_eq!(s_seq.len(), 3);
+        assert!(s_seq.iter().all(|s| s.len() == 5)); // prefill token + 4 rounds
+    }
+}

@@ -6,7 +6,7 @@
 //! cache. Layout is `(heads, seq, head_dim)` per layer, contiguous.
 
 use crate::kernels::ops::softmax_row;
-use crate::util::threadpool;
+use crate::util::{scratch, threadpool};
 
 /// Causal self-attention over a full sequence (prefill / training-eval).
 ///
@@ -69,29 +69,54 @@ pub fn decode_attention(
     pos: usize,
 ) -> Vec<f32> {
     assert!(pos < max_seq);
-    let scale = 1.0 / (hd as f32).sqrt();
     let mut out = vec![0.0f32; heads * hd];
     let out_base = out.as_mut_ptr() as usize;
     threadpool::parallel_for(heads, |h| {
-        let qh = &q[h * hd..(h + 1) * hd];
-        let kh = &kcache[h * max_seq * hd..];
-        let vh = &vcache[h * max_seq * hd..];
-        let mut scores = vec![0.0f32; pos + 1];
-        for (j, s) in scores.iter_mut().enumerate() {
-            *s = dot(qh, &kh[j * hd..(j + 1) * hd]) * scale;
-        }
-        softmax_row(&mut scores);
+        // SAFETY: each head writes a disjoint `hd`-wide stripe of `out`, and
+        // parallel_for blocks until every head is done.
         let orow = unsafe {
             std::slice::from_raw_parts_mut((out_base as *mut f32).add(h * hd), hd)
         };
-        for (j, &w) in scores.iter().enumerate() {
-            let vj = &vh[j * hd..(j + 1) * hd];
-            for d in 0..hd {
-                orow[d] += w * vj[d];
-            }
-        }
+        decode_head_into(
+            &q[h * hd..(h + 1) * hd],
+            &kcache[h * max_seq * hd..],
+            &vcache[h * max_seq * hd..],
+            hd,
+            pos,
+            orow,
+        );
     });
     out
+}
+
+/// One head of decode attention, single-threaded: softmax(q·Kᵀ)·V over
+/// positions `0..=pos`, written into `out` (length `hd`, overwritten).
+///
+/// `kh`/`vh` point at the head's stripe of the KV cache (`max_seq × hd`
+/// row-major, only `0..=pos` read). This is the shared inner body of
+/// [`decode_attention`] and of the engine's batched decode, which schedules
+/// `(session, head)` items on the thread pool directly — same arithmetic,
+/// same summation order, so batched and sequential decode produce
+/// bit-identical outputs.
+pub fn decode_head_into(q: &[f32], kh: &[f32], vh: &[f32], hd: usize, pos: usize, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), hd);
+    debug_assert_eq!(out.len(), hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    // scratch-arena scores: every element is written below before softmax
+    // reads it, and the buffer recycles per pool worker — the decode hot
+    // path stays allocation-free after warmup
+    let mut scores = scratch::take_uninit(pos + 1);
+    for (j, s) in scores.iter_mut().enumerate() {
+        *s = dot(q, &kh[j * hd..(j + 1) * hd]) * scale;
+    }
+    softmax_row(&mut scores);
+    out.fill(0.0);
+    for (j, &w) in scores.iter().enumerate() {
+        let vj = &vh[j * hd..(j + 1) * hd];
+        for d in 0..hd {
+            out[d] += w * vj[d];
+        }
+    }
 }
 
 #[inline(always)]
@@ -165,6 +190,28 @@ mod tests {
                 let want = full[(s - 1) * h * d + hh * d + dd];
                 assert!((got[hh * d + dd] - want).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn decode_head_matches_full_decode_bitwise() {
+        let (h, s, d) = (3, 5, 4);
+        let mut rng = Rng::new(4);
+        let q = rng.normal_vec(h * d, 1.0);
+        let k = rng.normal_vec(h * s * d, 1.0);
+        let v = rng.normal_vec(h * s * d, 1.0);
+        let full = decode_attention(&q, &k, &v, h, s, d, s - 1);
+        for hh in 0..h {
+            let mut out = vec![7.0f32; d]; // dirty buffer: must be overwritten
+            decode_head_into(
+                &q[hh * d..(hh + 1) * d],
+                &k[hh * s * d..],
+                &v[hh * s * d..],
+                d,
+                s - 1,
+                &mut out,
+            );
+            assert_eq!(out, full[hh * d..(hh + 1) * d].to_vec(), "head {hh}");
         }
     }
 

@@ -6,11 +6,14 @@
 //! * `blast train --config gpt2s-sim --steps 200 [--smax 0.8 ...]` —
 //!   pretrain a twin with blocked prune-and-grow; optionally save a
 //!   checkpoint.
-//! * `blast serve [--sparsity 0.9 --block 128 ...]` — run the batched
-//!   inference coordinator over the native sparse engine with a synthetic
-//!   client load, printing latency/throughput metrics.
-//! * `blast exp <fig4|fig5|fig6|fig7|tab1..tab6|fig8..fig11|all>` —
-//!   regenerate a paper table/figure (DESIGN.md §5).
+//! * `blast serve [--sparsity 0.9 --block 128 --batched false ...]` — run
+//!   the continuous-batching inference coordinator over the native sparse
+//!   engine with a synthetic client load, printing latency/throughput
+//!   metrics. Decode rounds are batched (`Engine::decode_batch`) unless
+//!   `--batched false` selects the sequential GEMV baseline.
+//! * `blast exp <kernels|serve|fig4..fig11|tab1..tab6|all>` — regenerate a
+//!   paper table/figure or an A/B harness (DESIGN.md §5); `kernels` and
+//!   `serve` write the BENCH_*.json perf-trajectory files.
 //!
 //! Python never runs here: all model graphs were AOT-compiled by
 //! `make artifacts`.
@@ -59,7 +62,7 @@ fn print_help() {
         "blast — BLock Sparse Transformers (paper reproduction)\n\n\
          USAGE:\n  blast info\n  blast train --config <name> [--steps N --smax S --step-size K \\\n\
          \x20            --decay D --dense-right L --block-mult M --save ckpt.bin]\n\
-         \x20 blast serve [--sparsity S --block B --requests N --max-batch K]\n\
+         \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false]\n\
          \x20 blast exp <id> [--steps N --quick ...]   ids: {:?} or 'all'\n\n\
          Artifacts must exist (run `make artifacts`).",
         eval::ALL
@@ -140,9 +143,10 @@ fn run_serve(args: &Args) -> Result<()> {
     } else {
         MlpMode::Sparse
     };
+    let batched = args.get_bool_or("batched", true);
     let engine = Arc::new(Engine::new(cfg.clone(), &params, &masks, mode)?);
     println!(
-        "serving {} (mode={mode:?}, sparsity={sparsity}, block={block}, mlp bytes={})",
+        "serving {} (mode={mode:?}, sparsity={sparsity}, block={block}, batched={batched}, mlp bytes={})",
         cfg.name,
         engine.mlp_weight_bytes()
     );
@@ -151,6 +155,7 @@ fn run_serve(args: &Args) -> Result<()> {
         BatcherConfig {
             max_batch: args.get_usize("max-batch", 4),
             max_queue: args.get_usize("max-queue", 64),
+            batched,
         },
     );
     for i in 0..n_requests {

@@ -6,8 +6,17 @@
 //! identical weights + masks, two execution modes, and the wall-clock gap
 //! between them is the end-to-end inference speedup of block sparsity.
 //!
-//! The engine is single-sequence; the serving coordinator multiplexes many
-//! engine sessions (each with its own KV cache) over the shared weights.
+//! Sessions are per-sequence (each owns a [`KvCache`]) over shared weights.
+//! The serving coordinator multiplexes many sessions and drives each decode
+//! round either one session at a time ([`Engine::decode`], a chain of
+//! 1-row GEMVs) or — the throughput path — as one [`Engine::decode_batch`]
+//! call that stacks the B active sessions' hidden states into a single
+//! `(B × d_model)` activation matrix, so every projection, MLP and the LM
+//! head run as one packed GEMM/BSpMM over the prepacked weights. Attention
+//! stays per-sequence (each session has its own cache and position) and is
+//! parallelized across `(session, head)` items on the thread pool. Both
+//! paths share per-row arithmetic and summation order, so greedy decode
+//! streams are **bit-identical** batched vs sequential.
 //!
 //! All dense weight matrices (attention projections, LM head, dense-mode
 //! MLP weights) are packed into [`PackedB`] panel form **once at engine
@@ -20,7 +29,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::attention::{causal_attention, decode_attention};
+use crate::kernels::attention::{causal_attention, decode_attention, decode_head_into};
 use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
 use crate::kernels::gemm::gemm_packed_into;
 use crate::kernels::ops;
@@ -29,7 +38,7 @@ use crate::model::config::{ModelKind, NativeConfig};
 use crate::model::params::ParamStore;
 use crate::sparse::{Bcsc, BlockMask};
 use crate::tensor::Tensor;
-use crate::util::scratch;
+use crate::util::{scratch, threadpool};
 
 /// MLP execution mode (the Fig. 6 switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,11 +77,15 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Resident bytes of the cache (both K and V, all layers).
     pub fn bytes(&self) -> usize {
         self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
     }
 }
 
+/// The native block-sparse inference engine: embeddings, prepacked
+/// projection/LM-head weights, and per-layer MLP weights in dense
+/// ([`PackedB`]) or sparse ([`Bcsc`]) form depending on [`MlpMode`].
 pub struct Engine {
     cfg: NativeConfig,
     mode: MlpMode,
@@ -172,10 +185,12 @@ impl Engine {
         })
     }
 
+    /// The geometry this engine was built for.
     pub fn config(&self) -> &NativeConfig {
         &self.cfg
     }
 
+    /// Dense or sparse MLP execution (fixed at build time).
     pub fn mode(&self) -> MlpMode {
         self.mode
     }
@@ -194,6 +209,7 @@ impl Engine {
             .sum()
     }
 
+    /// A zeroed KV cache sized for one `max_seq`-long session.
     pub fn new_cache(&self) -> KvCache {
         let per_layer = self.cfg.heads * self.cfg.max_seq * self.cfg.head_dim();
         KvCache {
@@ -401,6 +417,167 @@ impl Engine {
         Ok(logits)
     }
 
+    /// One batched decode step over `B` independent sessions: append
+    /// `tokens[i]` at position `caches[i].len` and return the next-token
+    /// logits of every session.
+    ///
+    /// The B hidden states are stacked into one `(B × d_model)` activation
+    /// matrix so the QKV/output projections, the dense/sparse/fused MLP and
+    /// the LM head each run as a **single** packed GEMM or BSpMM over the
+    /// prepacked weights — every streamed weight panel / BCSC block is
+    /// amortized over B rows instead of being re-read per session, which is
+    /// what turns the decode round from latency-bound GEMV chains into a
+    /// throughput-bound GEMM (the serving lever behind the paper's Fig. 6).
+    /// Attention stays per-sequence over each session's KV cache,
+    /// parallelized across `(session, head)` items on the thread pool.
+    ///
+    /// Outputs are bit-identical to calling [`Engine::decode`] once per
+    /// session: the packed micro-kernel accumulates every output element
+    /// serially over the depth dimension regardless of how many rows share
+    /// the tile, and the per-head attention body is the exact code the
+    /// sequential path runs.
+    ///
+    /// Validation is all-or-nothing: if any session's cache is full or any
+    /// token is out of vocab, an error is returned **before** any cache or
+    /// activation is touched, so the caller can retry with the offending
+    /// session removed. Ragged batches are the caller's concern — pass only
+    /// the still-active sessions each round; `B = 0` is a no-op.
+    ///
+    /// # Panics
+    /// If `tokens.len() != caches.len()`.
+    pub fn decode_batch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(
+            tokens.len(),
+            caches.len(),
+            "decode_batch: {} tokens vs {} caches",
+            tokens.len(),
+            caches.len()
+        );
+        let bsz = tokens.len();
+        if bsz == 0 {
+            return Ok(Vec::new());
+        }
+        let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
+        let max_seq = self.cfg.max_seq;
+        // all-or-nothing validation before any state is mutated
+        for (i, (&t, c)) in tokens.iter().zip(caches.iter()).enumerate() {
+            if c.len >= max_seq {
+                bail!("decode_batch session {i}: KV cache full ({max_seq} positions)");
+            }
+            if t as usize >= self.cfg.vocab {
+                bail!("decode_batch session {i}: token {t} out of vocab {}", self.cfg.vocab);
+            }
+        }
+        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        // embed the B new tokens into one (B, e) activation matrix
+        let mut x = Tensor::zeros(&[bsz, e]);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.tok_emb.row(t as usize));
+            if let Some(pe) = &self.pos_emb {
+                for (a, &b) in x.row_mut(i).iter_mut().zip(pe.row(positions[i])) {
+                    *a += b;
+                }
+            }
+        }
+        let mut xn = Tensor::zeros(&[bsz, e]);
+        // projection/attention activations come from the thread-local
+        // scratch arena, so the per-layer hot loop recycles its buffers
+        // after the first round (q/k/v/proj are re-zeroed per layer below;
+        // att is fully overwritten by the attention fan-out)
+        let mut q = scratch::take_uninit(bsz * e);
+        let mut k = scratch::take_uninit(bsz * e);
+        let mut v = scratch::take_uninit(bsz * e);
+        let mut att = scratch::take_uninit(bsz * e);
+        let mut proj = scratch::take_uninit(bsz * e);
+        for (li, l) in self.layers.iter().enumerate() {
+            // x and xn are distinct tensors, so the norm borrows directly —
+            // no per-row copies on the batched hot path
+            for i in 0..bsz {
+                self.norm(x.row(i), &l.ln1, xn.row_mut(i));
+            }
+            // one batched GEMM per projection (gemm accumulates: zero first)
+            q.fill(0.0);
+            k.fill(0.0);
+            v.fill(0.0);
+            gemm_packed_into(xn.data(), &l.wq, &mut q, bsz);
+            gemm_packed_into(xn.data(), &l.wk, &mut k, bsz);
+            gemm_packed_into(xn.data(), &l.wv, &mut v, bsz);
+            if self.cfg.kind == ModelKind::Llama {
+                for i in 0..bsz {
+                    let pos = positions[i];
+                    for hh in 0..h {
+                        let o = i * e + hh * hd;
+                        ops::rope_inplace(&mut q[o..o + hd], pos, 10000.0);
+                        ops::rope_inplace(&mut k[o..o + hd], pos, 10000.0);
+                    }
+                }
+            }
+            // write each session's K/V at its own position
+            for (i, cache) in caches.iter_mut().enumerate() {
+                let (kr, vr) = (&k[i * e..(i + 1) * e], &v[i * e..(i + 1) * e]);
+                for hh in 0..h {
+                    let dst = hh * max_seq * hd + positions[i] * hd;
+                    cache.k[li][dst..dst + hd].copy_from_slice(&kr[hh * hd..(hh + 1) * hd]);
+                    cache.v[li][dst..dst + hd].copy_from_slice(&vr[hh * hd..(hh + 1) * hd]);
+                }
+            }
+            // per-sequence attention, (session, head) items across the pool
+            {
+                let caches_ref: &[KvCache] = &*caches;
+                let positions_ref: &[usize] = &positions;
+                let qd: &[f32] = &q;
+                let att_base = att.as_mut_ptr() as usize;
+                threadpool::parallel_for(bsz * h, |t| {
+                    let (i, hh) = (t / h, t % h);
+                    let c = &caches_ref[i];
+                    // SAFETY: each (session, head) item owns the disjoint
+                    // span att[i, hh*hd..(hh+1)*hd]; parallel_for blocks
+                    // until all items finish.
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (att_base as *mut f32).add(i * e + hh * hd),
+                            hd,
+                        )
+                    };
+                    decode_head_into(
+                        &qd[i * e + hh * hd..i * e + (hh + 1) * hd],
+                        &c.k[li][hh * max_seq * hd..],
+                        &c.v[li][hh * max_seq * hd..],
+                        hd,
+                        positions_ref[i],
+                        orow,
+                    );
+                });
+            }
+            proj.fill(0.0);
+            gemm_packed_into(&att, &l.wo, &mut proj, bsz);
+            for (a, &b) in x.data_mut().iter_mut().zip(proj.iter()) {
+                *a += b;
+            }
+            for i in 0..bsz {
+                self.norm(x.row(i), &l.ln2, xn.row_mut(i));
+            }
+            let y = self.mlp(&xn, l);
+            x.add_inplace(&y);
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        // final norm + one batched LM-head GEMM (both scratch-backed)
+        let mut last = scratch::take_uninit(bsz * e);
+        for i in 0..bsz {
+            self.norm(x.row(i), &self.final_norm, &mut last[i * e..(i + 1) * e]);
+        }
+        let vocab = self.cfg.vocab;
+        let mut logits = scratch::take_zeroed(bsz * vocab);
+        gemm_packed_into(&last, &self.lm_head, &mut logits, bsz);
+        Ok(logits.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
     /// Greedy argmax over logits.
     pub fn argmax(logits: &[f32]) -> u32 {
         let mut best = 0usize;
@@ -524,6 +701,138 @@ mod tests {
         let dense = Engine::new(cfg.clone(), &params, &dense_masks, MlpMode::Sparse).unwrap();
         let sparse = Engine::new(cfg.clone(), &params, &sparse_masks, MlpMode::Sparse).unwrap();
         assert!(sparse.mlp_weight_bytes() < dense.mlp_weight_bytes() / 2);
+    }
+
+    /// The tentpole guarantee: batched decode is **bit-identical** to
+    /// sequential decode — same logits bit patterns, same greedy streams —
+    /// across ragged batch sizes (sessions finishing mid-round), both model
+    /// kinds and both MLP modes.
+    #[test]
+    fn decode_batch_bitwise_matches_sequential_ragged() {
+        for kind in [ModelKind::Gpt2, ModelKind::Llama] {
+            for mode in [MlpMode::Dense, MlpMode::Sparse] {
+                let cfg = test_cfg(kind);
+                let params = test_params(&cfg, 11);
+                let masks = random_masks(&cfg, 0.5, 12);
+                let eng = Engine::new(cfg.clone(), &params, &masks, mode).unwrap();
+                let prompts: Vec<Vec<u32>> = vec![vec![3, 7, 11], vec![2], vec![9, 4, 1, 5]];
+                // per-session decode budgets force sessions to retire
+                // mid-round: batch shrinks 3 -> 2 -> 1
+                let budgets = [6usize, 2, 4];
+                // sequential greedy reference
+                let mut seq_streams: Vec<Vec<u32>> = Vec::new();
+                let mut seq_logits: Vec<Vec<f32>> = Vec::new();
+                for (p, &n) in prompts.iter().zip(&budgets) {
+                    let mut cache = eng.new_cache();
+                    let logits = eng.prefill(p, &mut cache).unwrap();
+                    let mut tok = Engine::argmax(&logits);
+                    let mut stream = vec![tok];
+                    let mut last = Vec::new();
+                    for _ in 0..n {
+                        last = eng.decode(tok, &mut cache).unwrap();
+                        tok = Engine::argmax(&last);
+                        stream.push(tok);
+                    }
+                    seq_streams.push(stream);
+                    seq_logits.push(last);
+                }
+                // batched greedy over the shrinking active set
+                let mut caches: Vec<KvCache> = Vec::new();
+                let mut streams: Vec<Vec<u32>> = Vec::new();
+                for p in &prompts {
+                    let mut cache = eng.new_cache();
+                    let logits = eng.prefill(p, &mut cache).unwrap();
+                    streams.push(vec![Engine::argmax(&logits)]);
+                    caches.push(cache);
+                }
+                let mut slots: Vec<Option<KvCache>> = caches.into_iter().map(Some).collect();
+                let mut last_logits: Vec<Vec<f32>> = vec![Vec::new(); prompts.len()];
+                loop {
+                    let live: Vec<usize> = (0..prompts.len())
+                        .filter(|&i| streams[i].len() <= budgets[i])
+                        .collect();
+                    if live.is_empty() {
+                        break;
+                    }
+                    let toks: Vec<u32> = live.iter().map(|&i| *streams[i].last().unwrap()).collect();
+                    let mut round: Vec<KvCache> =
+                        live.iter().map(|&i| slots[i].take().unwrap()).collect();
+                    let logits = eng.decode_batch(&toks, &mut round).unwrap();
+                    for ((&i, cache), l) in live.iter().zip(round).zip(logits) {
+                        streams[i].push(Engine::argmax(&l));
+                        last_logits[i] = l;
+                        slots[i] = Some(cache);
+                    }
+                }
+                for i in 0..prompts.len() {
+                    assert_eq!(
+                        streams[i], seq_streams[i],
+                        "{kind:?}/{mode:?} session {i}: greedy streams diverged"
+                    );
+                    // bit-identical, not approximately equal
+                    let same_bits = last_logits[i]
+                        .iter()
+                        .zip(&seq_logits[i])
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same_bits, "{kind:?}/{mode:?} session {i}: logits bits differ");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_single_session_equals_decode() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 21);
+        let eng = Engine::new(cfg.clone(), &params, &BTreeMap::new(), MlpMode::Dense).unwrap();
+        let mut c1 = eng.new_cache();
+        let mut c2 = eng.new_cache();
+        eng.prefill(&[5, 9], &mut c1).unwrap();
+        eng.prefill(&[5, 9], &mut c2).unwrap();
+        let a = eng.decode(3, &mut c1).unwrap();
+        let b = eng.decode_batch(&[3], std::slice::from_mut(&mut c2)).unwrap();
+        assert!(a.iter().zip(&b[0]).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(c1.len, c2.len);
+    }
+
+    #[test]
+    fn decode_batch_empty_is_noop() {
+        let cfg = test_cfg(ModelKind::Gpt2);
+        let params = test_params(&cfg, 22);
+        let eng = Engine::new(cfg, &params, &BTreeMap::new(), MlpMode::Dense).unwrap();
+        assert!(eng.decode_batch(&[], &mut []).unwrap().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "decode_batch: 2 tokens vs 1 caches")]
+    fn decode_batch_panics_on_shape_mismatch() {
+        let cfg = test_cfg(ModelKind::Gpt2);
+        let params = test_params(&cfg, 23);
+        let eng = Engine::new(cfg, &params, &BTreeMap::new(), MlpMode::Dense).unwrap();
+        let mut cache = eng.new_cache();
+        eng.prefill(&[1], &mut cache).unwrap();
+        let _ = eng.decode_batch(&[1, 2], std::slice::from_mut(&mut cache));
+    }
+
+    #[test]
+    fn decode_batch_validates_before_mutating() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 24);
+        let eng = Engine::new(cfg.clone(), &params, &BTreeMap::new(), MlpMode::Dense).unwrap();
+        // session 0 healthy, session 1 with a full cache
+        let mut a = eng.new_cache();
+        eng.prefill(&[1, 2], &mut a).unwrap();
+        let mut b = eng.new_cache();
+        eng.prefill(&vec![1; cfg.max_seq], &mut b).unwrap();
+        let mut caches = vec![a, b];
+        assert!(eng.decode_batch(&[1, 1], &mut caches).is_err());
+        // all-or-nothing: the healthy session's cache must be untouched
+        assert_eq!(caches[0].len, 2);
+        assert_eq!(caches[1].len, cfg.max_seq);
+        // out-of-vocab token also rejected upfront
+        let err = eng.decode_batch(&[999], &mut caches[..1]).unwrap_err();
+        assert!(err.to_string().contains("out of vocab"), "{err}");
+        assert_eq!(caches[0].len, 2);
     }
 
     #[test]

@@ -74,6 +74,22 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Boolean with an explicit default — for on-by-default switches like
+    /// `--batched`: absent keys return `default`; `--key` alone means true;
+    /// `--key false` / `--key=false` (also `0`, `no`) turn it off. Any
+    /// other value panics (like the numeric getters), so a typo can't
+    /// silently select the wrong mode.
+    pub fn get_bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some(v) => match v {
+                "true" | "1" | "yes" => true,
+                "false" | "0" | "no" => false,
+                other => panic!("--{key} expects true/false, got {other:?}"),
+            },
+        }
+    }
+
     /// Comma-separated list of usize, e.g. `--blocks 32,64,128`.
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.get(key) {
@@ -130,5 +146,15 @@ mod tests {
     fn trailing_flag() {
         let a = Args::parse_from(argv("--flag"));
         assert!(a.get_bool("flag"));
+    }
+
+    #[test]
+    fn bool_with_default() {
+        let a = Args::parse_from(argv("--on --off false --also=no"));
+        assert!(a.get_bool_or("on", false));
+        assert!(!a.get_bool_or("off", true));
+        assert!(!a.get_bool_or("also", true));
+        assert!(a.get_bool_or("absent", true));
+        assert!(!a.get_bool_or("absent2", false));
     }
 }
