@@ -1,0 +1,9 @@
+//! Bench: tiled/paged-vs-seed attention A/B + paged-KV memory check;
+//! writes BENCH_attention.json.
+//! `cargo bench --bench attention_ab [-- --quick --seqs 128,256,512 --kv-page 64 --out BENCH_attention.json]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::attention_exps::attention(&args).unwrap();
+}

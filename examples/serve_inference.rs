@@ -6,6 +6,7 @@
 //! Run: cargo run --release --example serve_inference -- \
 //!          [--sparsity 0.9] [--block 128] [--requests 16] [--max-batch 4]
 //!          [--batched false]                      # sequential A/B baseline
+//!          [--kv-page 64] [--kv-pool-pages 0]     # KV paging (0 = unbounded)
 //!          [--ckpt path.bin --config llama-sim]   # serve trained weights
 //!
 //! Batched decode rounds (one `(B × d_model)` GEMM/BSpMM per projection via
@@ -22,6 +23,7 @@ use blast::coordinator::{BatcherConfig, Coordinator, Request};
 use blast::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
 use blast::model::config::NativeConfig;
 use blast::model::engine::{Engine, MlpMode};
+use blast::model::kv::{KvOptions, DEFAULT_KV_PAGE};
 use blast::model::params::ParamStore;
 use blast::runtime::Runtime;
 use blast::util::cli::Args;
@@ -34,6 +36,14 @@ fn main() -> Result<()> {
     let n_requests = args.get_usize("requests", 16);
     let max_new = args.get_usize("max-new", 12);
     let batched = args.get_bool_or("batched", true);
+    let kv = KvOptions {
+        page: args.get_usize("kv-page", DEFAULT_KV_PAGE),
+        // 0 = unbounded pool (no admission gating on KV memory)
+        pool_pages: match args.get_usize("kv-pool-pages", 0) {
+            0 => None,
+            n => Some(n),
+        },
+    };
 
     // weights: either a checkpoint trained by examples/pretrain_gpt2 /
     // `blast train --save`, or a synthetic model
@@ -53,10 +63,11 @@ fn main() -> Result<()> {
     let masks = random_masks(&cfg, sparsity, 77);
 
     for mode in [MlpMode::Dense, MlpMode::Sparse] {
-        let engine = Arc::new(Engine::new(cfg.clone(), &params, &masks, mode)?);
+        let engine = Arc::new(Engine::new_with_kv(cfg.clone(), &params, &masks, mode, kv)?);
         println!(
-            "\n=== mode {mode:?} ({}) — MLP bytes resident {} KiB ===",
+            "\n=== mode {mode:?} ({}, kv-page {}) — MLP bytes resident {} KiB ===",
             if batched { "batched rounds" } else { "sequential rounds" },
+            engine.kv_page(),
             engine.mlp_weight_bytes() / 1024
         );
         let mut coord = Coordinator::start(

@@ -29,8 +29,20 @@ pub struct ServeMetrics {
     /// Decode rounds executed (each touches every active session once).
     pub rounds: u64,
     /// Batched rounds that errored and fell back to sequential decode —
-    /// should stay 0; a nonzero value means batching is silently off.
+    /// should stay 0; a nonzero value means batching is silently off
+    /// (or the KV pool ran dry mid-stream and a session is retiring).
     pub batched_fallbacks: u64,
+    /// Requests refused at admission because their prompt could never fit
+    /// the KV page pool (answered with error completions).
+    pub kv_refused: u64,
+    /// KV pages held by live sessions, as of the last recorded round.
+    pub kv_pages_in_use: usize,
+    /// Peak concurrent KV pages since startup — the capacity-planning
+    /// number the round summaries surface.
+    pub kv_pages_peak: usize,
+    /// Resident KV bytes across live sessions, as of the last recorded
+    /// round (actual pages held, not the `max_seq` preallocation bound).
+    pub kv_resident_bytes: usize,
 }
 
 impl Default for ServeMetrics {
@@ -56,6 +68,10 @@ impl ServeMetrics {
             requests_done: 0,
             rounds: 0,
             batched_fallbacks: 0,
+            kv_refused: 0,
+            kv_pages_in_use: 0,
+            kv_pages_peak: 0,
+            kv_resident_bytes: 0,
         }
     }
 
@@ -89,6 +105,17 @@ impl ServeMetrics {
         if secs > 0.0 {
             self.round_tok_rate.push(new_tokens as f64 / secs);
         }
+    }
+
+    /// Record the KV page pool's state as observed after a round (or a
+    /// prefill batch): pages held by live sessions, the pool's own
+    /// high-water mark (the pool is the single source of truth for the
+    /// peak — pages allocated outside the scheduler loop count too), and
+    /// resident bytes.
+    pub fn record_kv(&mut self, pages_in_use: usize, pages_peak: usize, resident_bytes: usize) {
+        self.kv_pages_in_use = pages_in_use;
+        self.kv_pages_peak = self.kv_pages_peak.max(pages_peak).max(pages_in_use);
+        self.kv_resident_bytes = resident_bytes;
     }
 
     /// Decode throughput since startup (tokens/s).
@@ -127,11 +154,12 @@ impl ServeMetrics {
         self.round_tok_rate.mean()
     }
 
-    /// One-line human-readable digest of everything above (the fallback
-    /// counter appears only when nonzero — it should never be).
+    /// One-line human-readable digest of everything above, including the
+    /// KV pool residency + high-water mark (the fallback / refusal
+    /// counters appear only when nonzero — they should never be).
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "requests={} tokens={} throughput={:.1} tok/s ttft_mean={:.1}ms e2e_p50={:.1}ms e2e_p99={:.1}ms rounds={} mean_batch={:.2} round_tok/s={:.1}",
+            "requests={} tokens={} throughput={:.1} tok/s ttft_mean={:.1}ms e2e_p50={:.1}ms e2e_p99={:.1}ms rounds={} mean_batch={:.2} round_tok/s={:.1} kv_pages={} (peak {}) kv_resident={:.1}KiB",
             self.requests_done,
             self.tokens_generated,
             self.throughput(),
@@ -141,9 +169,15 @@ impl ServeMetrics {
             self.rounds,
             self.mean_round_batch(),
             self.round_tokens_per_s(),
+            self.kv_pages_in_use,
+            self.kv_pages_peak,
+            self.kv_resident_bytes as f64 / 1024.0,
         );
         if self.batched_fallbacks > 0 {
             s.push_str(&format!(" batched_fallbacks={}", self.batched_fallbacks));
+        }
+        if self.kv_refused > 0 {
+            s.push_str(&format!(" kv_refused={}", self.kv_refused));
         }
         s
     }
@@ -176,5 +210,24 @@ mod tests {
         assert!((m.mean_round_batch() - 2.0).abs() < 1e-9);
         assert!((m.round_tokens_per_s() - 400.0).abs() < 1e-6);
         assert!(m.summary().contains("rounds=3"));
+    }
+
+    #[test]
+    fn kv_gauges_track_current_and_peak() {
+        let mut m = ServeMetrics::new();
+        m.record_kv(5, 5, 5 * 4096);
+        m.record_kv(9, 9, 9 * 4096);
+        // current drops; the pool-reported peak sticks
+        m.record_kv(2, 9, 2 * 4096);
+        assert_eq!(m.kv_pages_in_use, 2);
+        assert_eq!(m.kv_pages_peak, 9);
+        assert_eq!(m.kv_resident_bytes, 2 * 4096);
+        let s = m.summary();
+        assert!(s.contains("kv_pages=2 (peak 9)"), "{s}");
+        assert!(s.contains("kv_resident=8.0KiB"), "{s}");
+        // refusal counter only appears when nonzero
+        assert!(!s.contains("kv_refused"));
+        m.kv_refused = 3;
+        assert!(m.summary().contains("kv_refused=3"));
     }
 }

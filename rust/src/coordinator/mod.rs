@@ -12,13 +12,21 @@
 //! register tiles of the packed kernels see a real `(B × d_model)` batch
 //! dimension instead of degenerate 1-row GEMVs ([`BatcherConfig::batched`]
 //! flips back to the sequential baseline; greedy outputs are bit-identical
-//! either way). [`metrics`] tracks per-round batch occupancy and tokens/s
-//! alongside the request-level latency distributions.
+//! either way). [`metrics`] tracks per-round batch occupancy, tokens/s and
+//! KV page-pool residency alongside the request-level latency
+//! distributions.
+//!
+//! Sessions are admitted **against KV pool capacity**: a request is
+//! granted a slot only when the engine's [`crate::model::KvPagePool`] has
+//! enough free pages for its prompt plus one decode step; otherwise it
+//! waits (FIFO — later requests don't jump a deferred head), and a prompt
+//! that could never fit the pool at all is answered with an error
+//! completion immediately.
 
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use metrics::ServeMetrics;
-pub use router::{Batcher, BatcherConfig, Request, Session};
+pub use router::{Admit, Batcher, BatcherConfig, Request, Session};
 pub use server::{Completion, Coordinator};

@@ -73,13 +73,30 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Admission verdict for one waiting request (see [`Batcher::admit_where`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Admit now.
+    Grant,
+    /// Cannot be admitted *yet* (e.g. the KV page pool lacks free pages);
+    /// stays at the front of the queue — admission stops here so FIFO
+    /// order (and the no-starvation property) is preserved.
+    Defer,
+    /// Can never be admitted (e.g. the prompt needs more KV pages than
+    /// the pool's total capacity); removed from the queue and handed back
+    /// to the caller to answer with an error completion.
+    Refuse,
+}
+
 /// Continuous batcher: FIFO waiting queue + bounded active set.
 pub struct Batcher {
     cfg: BatcherConfig,
     waiting: VecDeque<Request>,
     active: Vec<Session>,
     round: u64,
-    /// Requests refused because the waiting queue was full.
+    /// Requests refused — waiting-queue overflow at [`Batcher::enqueue`]
+    /// or an admission-time [`Admit::Refuse`] (e.g. a prompt that could
+    /// never fit the KV page pool) at [`Batcher::admit_where`].
     pub rejected: u64,
     /// Sessions retired so far.
     pub completed: u64,
@@ -126,11 +143,31 @@ impl Batcher {
     /// Admit FIFO-waiting requests into free batch slots. Returns indices
     /// of the newly admitted sessions (which still need prefill).
     pub fn admit(&mut self) -> Vec<usize> {
+        self.admit_where(|_| Admit::Grant).0
+    }
+
+    /// Admit FIFO-waiting requests into free batch slots, subject to a
+    /// per-request verdict (the coordinator's KV-pool capacity check).
+    /// Returns `(indices of newly admitted sessions, refused requests)`.
+    /// A [`Admit::Defer`] stops admission at the queue front — later
+    /// requests are *not* considered, so FIFO fairness holds; refused
+    /// requests count toward [`Batcher::rejected`].
+    pub fn admit_where(
+        &mut self,
+        mut decide: impl FnMut(&Request) -> Admit,
+    ) -> (Vec<usize>, Vec<Request>) {
         let mut new_idx = Vec::new();
+        let mut refused = Vec::new();
         while self.active.len() < self.cfg.max_batch {
-            match self.waiting.pop_front() {
-                None => break,
-                Some(req) => {
+            let Some(front) = self.waiting.front() else { break };
+            match decide(front) {
+                Admit::Defer => break,
+                Admit::Refuse => {
+                    self.rejected += 1;
+                    refused.push(self.waiting.pop_front().unwrap());
+                }
+                Admit::Grant => {
+                    let req = self.waiting.pop_front().unwrap();
                     self.active.push(Session {
                         req,
                         output: Vec::new(),
@@ -141,7 +178,7 @@ impl Batcher {
                 }
             }
         }
-        new_idx
+        (new_idx, refused)
     }
 
     /// Access the active sessions for one decode round.
@@ -251,6 +288,41 @@ mod tests {
         let admitted = b.admit();
         assert_eq!(admitted.len(), 2);
         assert_eq!(b.active_mut()[0].req.id, 2);
+    }
+
+    #[test]
+    fn admit_where_defer_preserves_fifo_and_refuse_removes() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_queue: 10,
+            ..BatcherConfig::default()
+        });
+        for i in 0..4 {
+            b.enqueue(req(i, 1));
+        }
+        // refuse id 0, grant id 1, defer at id 2 — id 3 must NOT be
+        // considered (FIFO: no skipping past a deferred head)
+        let mut seen = Vec::new();
+        let (admitted, refused) = b.admit_where(|r| {
+            seen.push(r.id);
+            match r.id {
+                0 => Admit::Refuse,
+                1 => Admit::Grant,
+                _ => Admit::Defer,
+            }
+        });
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(b.active_mut()[admitted[0]].req.id, 1);
+        assert_eq!(refused.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.rejected, 1);
+        // ids 2 and 3 still waiting, in order
+        assert_eq!(b.queue_len(), 2);
+        let (admitted, refused) = b.admit_where(|_| Admit::Grant);
+        assert_eq!(admitted.len(), 2);
+        assert!(refused.is_empty());
+        assert_eq!(b.active_mut()[1].req.id, 2);
+        assert_eq!(b.active_mut()[2].req.id, 3);
     }
 
     #[test]

@@ -2,11 +2,16 @@
 //! batcher over engine sessions; clients submit requests through a bounded
 //! channel and receive completions on another.
 //!
-//! Each active session owns a KV cache; the shared block-sparse weights
-//! live in one `Arc<Engine>`. Decode rounds touch every active session
-//! once (continuous batching), so short requests retire early and free
-//! their slot for waiting requests — the Orca/vLLM scheduling shape, with
-//! the paper's sparse MLP on the hot path.
+//! Each active session owns a paged KV cache drawing from the engine's
+//! shared page pool; the block-sparse weights live in one `Arc<Engine>`.
+//! Decode rounds touch every active session once (continuous batching),
+//! so short requests retire early and free their slot — and their KV
+//! pages — for waiting requests: the Orca/vLLM scheduling shape, with the
+//! paper's sparse MLP on the hot path. Admission is gated on pool
+//! capacity (prompt pages + one decode step); prompts that could never
+//! fit are answered with error completions immediately, and a session
+//! whose pool runs dry mid-stream retires cleanly with its partial
+//! output.
 //!
 //! With [`BatcherConfig::batched`] (the default), each round makes **one**
 //! [`Engine::decode_batch`] call over all prefilled sessions, so every
@@ -29,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::metrics::ServeMetrics;
-use crate::coordinator::router::{Batcher, BatcherConfig, Request};
+use crate::coordinator::router::{Admit, Batcher, BatcherConfig, Request};
 use crate::model::engine::{Engine, KvCache};
 
 /// A finished request.
@@ -207,8 +212,61 @@ fn scheduler_loop(
             continue;
         }
 
-        // admit + prefill new sessions
-        for idx in batcher.admit() {
+        // admit new sessions against KV pool capacity: a session needs
+        // pages for its prompt plus one decode step before it can make
+        // progress. While pages are merely busy the head of the queue
+        // *defers* (FIFO — later requests don't jump it); a prompt that
+        // could never fit the pool is *refused* and answered with an
+        // error completion right away. Pages the in-flight sessions need
+        // for *their* next decode step are reserved out of the admission
+        // budget first — otherwise a new prefill could grab the last free
+        // page at an in-flight session's page boundary and silently
+        // truncate it.
+        let kv_pool = engine.kv_pool();
+        let reserve: usize = caches
+            .values()
+            .map(|c| engine.kv_pages_for(c.len + 1).saturating_sub(c.pages_held()))
+            .sum();
+        let mut budget = kv_pool.available_pages().map(|a| a.saturating_sub(reserve));
+        let (admitted, refused) = batcher.admit_where(|req| {
+            let needed = engine.kv_pages_for(req.prompt.len().max(1) + 1);
+            if kv_pool.capacity_pages().is_some_and(|cap| needed > cap) {
+                return Admit::Refuse;
+            }
+            match budget {
+                None => Admit::Grant,
+                Some(avail) if needed <= avail => {
+                    budget = Some(avail - needed);
+                    Admit::Grant
+                }
+                Some(_) => Admit::Defer,
+            }
+        });
+        for req in refused {
+            let needed = engine.kv_pages_for(req.prompt.len().max(1) + 1);
+            // the request may have queued for a while before reaching the
+            // front and being refused — report that wait, not 0
+            let waited = timing
+                .remove(&req.id)
+                .map(|t| t.submitted.elapsed().as_secs_f64())
+                .unwrap_or(0.0);
+            metrics.lock().unwrap().kv_refused += 1;
+            ctx.send(Completion {
+                id: req.id,
+                tokens: Vec::new(),
+                queue_secs: waited,
+                ttft_secs: 0.0,
+                e2e_secs: waited,
+                error: Some(format!(
+                    "prompt needs {needed} KV pages but the pool capacity is {} pages",
+                    kv_pool.capacity_pages().unwrap_or(0)
+                )),
+            })
+            .ok();
+        }
+
+        // prefill the admitted sessions
+        for idx in admitted {
             let s = &mut batcher.active_mut()[idx];
             let id = s.req.id;
             if let Some(t) = timing.get_mut(&id) {
@@ -324,6 +382,14 @@ fn scheduler_loop(
             );
         }
 
+        // snapshot KV residency (pool high-water travels with it, so the
+        // peak the summary reports is the pool's own, not a re-derivation)
+        metrics.lock().unwrap().record_kv(
+            kv_pool.pages_in_use(),
+            kv_pool.high_water_pages(),
+            kv_pool.resident_bytes(),
+        );
+
         // retire finished sessions
         for s in batcher.end_round() {
             let id = s.req.id;
@@ -363,6 +429,14 @@ fn scheduler_loop(
             })
             .ok();
         }
+        // refresh the gauges after retirement freed caches, so an
+        // end-of-run summary shows the pages actually still held (the
+        // peak recorded above is unaffected)
+        metrics.lock().unwrap().record_kv(
+            kv_pool.pages_in_use(),
+            kv_pool.high_water_pages(),
+            kv_pool.resident_bytes(),
+        );
     }
 
     // shutdown: drain everything still pending into error completions so a
@@ -396,12 +470,17 @@ mod tests {
     use super::*;
     use crate::model::config::{ModelKind, NativeConfig};
     use crate::model::engine::MlpMode;
+    use crate::model::kv::KvOptions;
     use crate::model::params::ParamStore;
     use crate::tensor::Tensor;
     use crate::util::rng::Rng;
     use std::collections::BTreeMap;
 
     fn tiny_engine() -> Arc<Engine> {
+        tiny_engine_with_kv(KvOptions::default())
+    }
+
+    fn tiny_engine_with_kv(kv: KvOptions) -> Arc<Engine> {
         let cfg = NativeConfig {
             name: "t".into(),
             kind: ModelKind::Llama,
@@ -430,7 +509,7 @@ mod tests {
         }
         s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
         s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
-        Arc::new(Engine::new(cfg, &s, &BTreeMap::new(), MlpMode::Sparse).unwrap())
+        Arc::new(Engine::new_with_kv(cfg, &s, &BTreeMap::new(), MlpMode::Sparse, kv).unwrap())
     }
 
     #[test]
@@ -594,6 +673,99 @@ mod tests {
             .unwrap();
         let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
         assert_eq!((c.id, c.error), (7, None));
+        coord.stop();
+    }
+
+    /// A pool sized for ~2 concurrent sessions must still serve an
+    /// 8-request load: admission defers (FIFO) until retiring sessions
+    /// free pages, and every request completes without error.
+    #[test]
+    fn pool_constrained_serving_completes_all_requests() {
+        let engine = tiny_engine_with_kv(KvOptions {
+            page: 8,
+            // each session: 3-token prompt + 5 decodes = 8 positions = 1
+            // page; cap at 2 pages so at most 2 sessions hold KV at once
+            pool_pages: Some(2),
+        });
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 4, // batcher would admit 4; the pool says 2
+                max_queue: 16,
+                ..BatcherConfig::default()
+            },
+        );
+        let n = 8u64;
+        for i in 0..n {
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt: vec![1, 2, 3],
+                    max_new: 5,
+                    eos: None,
+                })
+                .unwrap();
+        }
+        let mut done = std::collections::HashSet::new();
+        for _ in 0..n {
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .expect("completion");
+            assert!(c.error.is_none(), "request {}: {:?}", c.id, c.error);
+            assert_eq!(c.tokens.len(), 5);
+            assert!(done.insert(c.id));
+        }
+        assert_eq!(done.len() as u64, n);
+        // the pool high-water mark is visible in the round summary
+        let s = coord.metrics_summary();
+        assert!(s.contains("peak 2"), "{s}");
+        coord.stop();
+    }
+
+    /// A prompt that could never fit the pool is refused at admission
+    /// with a clean error completion (the coordinator's error-isolation
+    /// path), and the scheduler keeps serving everyone else.
+    #[test]
+    fn impossible_prompt_refused_with_pool_error() {
+        let engine = tiny_engine_with_kv(KvOptions {
+            page: 4,
+            pool_pages: Some(2), // 8 positions total
+        });
+        let mut coord = Coordinator::start(engine, BatcherConfig::default());
+        coord
+            .submit(Request {
+                id: 0,
+                prompt: vec![1; 10], // needs 3 pages for prompt+1 > cap 2
+                max_new: 4,
+                eos: None,
+            })
+            .unwrap();
+        coord
+            .submit(Request {
+                id: 1,
+                prompt: vec![1, 2], // fits
+                max_new: 2,
+                eos: None,
+            })
+            .unwrap();
+        let mut errors = 0;
+        let mut served = 0;
+        for _ in 0..2 {
+            let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+            match (c.id, c.error) {
+                (0, Some(e)) => {
+                    assert!(e.contains("KV pages"), "{e}");
+                    errors += 1;
+                }
+                (1, None) => {
+                    assert_eq!(c.tokens.len(), 2);
+                    served += 1;
+                }
+                other => panic!("unexpected completion {other:?}"),
+            }
+        }
+        assert_eq!((errors, served), (1, 1));
+        assert!(coord.metrics_summary().contains("kv_refused=1"));
         coord.stop();
     }
 

@@ -10,6 +10,7 @@
 //! |---------|-------------------------------------------|-------------------|
 //! | kernels | seed-vs-packed A/B → BENCH_kernels.json   | [`kernel_exps`]   |
 //! | serve | batched-vs-seq decode → BENCH_serve.json   | [`serve_exps`]    |
+//! | attention | tiled/paged attention A/B + KV memory → BENCH_attention.json | [`attention_exps`] |
 //! | fig4  | BSpMM kernel speedup sweep                 | [`kernel_exps`]   |
 //! | fig5  | Llama-family MLP speedup                   | [`kernel_exps`]   |
 //! | fig6  | end-to-end inference speedup               | [`kernel_exps`]   |
@@ -25,6 +26,7 @@
 //! | tab6  | perplexity vs sparsity decay d             | [`pretrain_exps`] |
 //! | fig11 | dense-layer placement (left vs right)      | [`pretrain_exps`] |
 
+pub mod attention_exps;
 pub mod classify_exps;
 pub mod kernel_exps;
 pub mod memory_exps;
@@ -36,8 +38,8 @@ use anyhow::{bail, Result};
 use crate::util::cli::Args;
 
 pub const ALL: &[&str] = &[
-    "kernels", "serve", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "fig8",
-    "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
+    "kernels", "serve", "attention", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2",
+    "fig8", "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
 ];
 
 /// Dispatch one experiment by id.
@@ -45,6 +47,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
     match id {
         "kernels" => kernel_exps::kernels(args),
         "serve" => serve_exps::serve(args),
+        "attention" => attention_exps::attention(args),
         "fig4" => kernel_exps::fig4(args),
         "fig5" => kernel_exps::fig5(args),
         "fig6" => kernel_exps::fig6(args),

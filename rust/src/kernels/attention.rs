@@ -1,17 +1,191 @@
-//! Dense attention for the native inference engine.
+//! Attention kernels for the native inference engine: tiled prefill and
+//! paged decode.
 //!
-//! The paper leaves attention dense (its contribution is MLP sparsity), so
-//! this module provides exactly what the engine needs: a causal prefill
-//! pass over a whole prompt, and a single-position decode pass against a KV
-//! cache. Layout is `(heads, seq, head_dim)` per layer, contiguous.
+//! The paper leaves attention dense (its contribution is MLP sparsity),
+//! but PR 1/PR 2 made every projection and MLP a packed GEMM/BSpMM, so
+//! the scalar per-row attention of the seed became the remaining hot
+//! path. This module rebuilds it around position *blocks*:
+//!
+//! * [`causal_attention`] — prefill over a whole prompt as a q-tile ×
+//!   k-tile blocked kernel. Each tile pair runs **two small packed GEMMs**
+//!   through [`crate::kernels::microkernel`] (scores `Q·Kᵀ`, then
+//!   `P·V`), with online streaming-softmax rescaling across k-tiles
+//!   (the FlashAttention recurrence), so scores never materialize beyond
+//!   one `TQ × TK` tile and every buffer comes from the scratch arena.
+//! * [`decode_head_paged_into`] — one head of single-position decode
+//!   that walks fixed-size KV *pages* (see [`crate::model::kv`]) with an
+//!   unrolled multi-accumulator dot lane. Page size never changes the
+//!   position order or per-position arithmetic, so outputs are
+//!   **bit-identical across page sizes** (the flat cache is just
+//!   `page = max_seq`).
+//!
+//! The seed kernels survive as [`causal_attention_ref`] /
+//! [`decode_attention_ref`] / [`decode_head_into`]: they are the oracles
+//! the tiled/paged kernels are tolerance-gated against (≤ 1e-5 abs) and
+//! the baselines `blast exp attention` measures (`BENCH_attention.json`).
+//!
+//! Layout: `(heads, seq, hd)` per layer for prefill operands; merged
+//! `(seq, heads*hd)` outputs.
 
+use crate::kernels::microkernel::microkernel;
 use crate::kernels::ops::softmax_row;
+use crate::kernels::pack::pack_kt_panel;
 use crate::util::{scratch, threadpool};
 
-/// Causal self-attention over a full sequence (prefill / training-eval).
+/// Query rows per prefill tile (output rows of the per-tile GEMMs).
+pub const TQ: usize = 32;
+
+/// Key positions per prefill tile (score columns per streaming step).
+pub const TK: usize = 64;
+
+/// Causal self-attention over a full sequence (prefill / training-eval),
+/// tiled with streaming softmax.
 ///
-/// `q,k,v`: `(heads, seq, hd)` flattened; returns `(seq, heads*hd)` merged.
+/// `q,k,v`: `(heads, seq, hd)` flattened; returns `(seq, heads*hd)`
+/// merged. Matches [`causal_attention_ref`] within ~1e-6 (the online
+/// rescaling reorders the reductions; tests gate at 1e-5 abs).
+///
+/// Work is scheduled as `(head, q-tile)` items, cost-weighted by how many
+/// key positions each tile attends to (later q-tiles see more keys — the
+/// causal triangle — so uniform chunking would serialize on the tail).
 pub fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    seq: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * heads * hd];
+    if seq == 0 || heads == 0 || hd == 0 {
+        return out;
+    }
+    let n_qt = seq.div_ceil(TQ);
+    let out_base = out.as_mut_ptr() as usize;
+    threadpool::parallel_for_weighted(
+        heads * n_qt,
+        |t| ((t % n_qt) + 1) * TQ,
+        |t| {
+            let (h, qt) = (t / n_qt, t % n_qt);
+            let qh = &q[h * seq * hd..(h + 1) * seq * hd];
+            let kh = &k[h * seq * hd..(h + 1) * seq * hd];
+            let vh = &v[h * seq * hd..(h + 1) * seq * hd];
+            causal_tile(qh, kh, vh, seq, hd, heads, h, qt, out_base);
+        },
+    );
+    out
+}
+
+/// One `(head, q-tile)` item of the tiled prefill: stream k-tiles with
+/// online softmax, two packed micro-GEMMs per tile pair. `out_base` is
+/// the merged `(seq, heads*hd)` output buffer's base address; this item
+/// writes only rows `qt*TQ..` of column stripe `h*hd..(h+1)*hd`.
+#[allow(clippy::too_many_arguments)]
+fn causal_tile(
+    qh: &[f32],
+    kh: &[f32],
+    vh: &[f32],
+    seq: usize,
+    hd: usize,
+    heads: usize,
+    h: usize,
+    qt: usize,
+    out_base: usize,
+) {
+    let i0 = qt * TQ;
+    let i1 = (i0 + TQ).min(seq);
+    let tq = i1 - i0;
+    let scale = 1.0 / (hd as f32).sqrt();
+    // scratch-arena tile state — allocation-free after warmup
+    let mut qp = scratch::take_uninit(tq * hd); // Q tile, k-major
+    let mut kb = scratch::take_uninit(TK * hd); // K tile, k-major (= Kᵀ panel)
+    let mut s = scratch::take_uninit(tq * TK); // scores tile, row-major
+    let mut pp = scratch::take_uninit(tq * TK); // exp-scores, k-major
+    let mut acc = scratch::take_zeroed(tq * hd); // streaming O accumulator
+    let mut m = scratch::take_uninit(tq); // running row max
+    let mut l = scratch::take_uninit(tq); // running row sum
+    m.fill(f32::NEG_INFINITY);
+    l.fill(0.0);
+    pack_kt_panel(&qh[i0 * hd..i1 * hd], tq, hd, &mut qp);
+    let mut k0 = 0;
+    while k0 < i1 {
+        let k1 = (k0 + TK).min(i1);
+        let tk = k1 - k0;
+        pack_kt_panel(&kh[k0 * hd..k1 * hd], tk, hd, &mut kb);
+        // scores tile: S[tq × tk] = Qᵖ · (Kᵀ)ᵖ (microkernel accumulates,
+        // so zero the region first)
+        s[..tq * tk].fill(0.0);
+        microkernel(&qp, tq, tq, &kb, tk, tk, hd, &mut s[..tq * tk], tk);
+        // online softmax update per row: scale, causal mask, rescale the
+        // running accumulator, and build the packed P tile
+        for i in 0..tq {
+            let gi = i0 + i;
+            // columns this row may attend to within the tile
+            let valid = (gi + 1).saturating_sub(k0).min(tk);
+            let srow = &mut s[i * tk..i * tk + tk];
+            let mut row_max = f32::NEG_INFINITY;
+            for sv in srow.iter_mut().take(valid) {
+                *sv *= scale;
+                row_max = row_max.max(*sv);
+            }
+            let new_m = m[i].max(row_max);
+            // exp(-inf - finite) = 0, so the first tile's rescale is a
+            // no-op on the zeroed accumulator without a special case
+            let alpha = (m[i] - new_m).exp();
+            if alpha != 1.0 {
+                for a in acc[i * hd..(i + 1) * hd].iter_mut() {
+                    *a *= alpha;
+                }
+            }
+            let mut row_sum = 0.0f32;
+            for (j, &sv) in srow.iter().enumerate().take(valid) {
+                let p = (sv - new_m).exp();
+                row_sum += p;
+                pp[j * tq + i] = p;
+            }
+            for j in valid..tk {
+                pp[j * tq + i] = 0.0;
+            }
+            l[i] = l[i] * alpha + row_sum;
+            m[i] = new_m;
+        }
+        // O[tq × hd] += P · V_tile (V rows are already the row-major B
+        // operand the micro-kernel wants)
+        microkernel(
+            &pp,
+            tq,
+            tq,
+            &vh[k0 * hd..k1 * hd],
+            hd,
+            hd,
+            tk,
+            &mut acc,
+            hd,
+        );
+        k0 = k1;
+    }
+    // normalize and scatter into the merged (seq, heads*hd) output
+    for i in 0..tq {
+        let inv = 1.0 / l[i];
+        // SAFETY: each (head, q-tile) item owns the disjoint output span
+        // row (i0+i) × column stripe h*hd..(h+1)*hd, and the caller's
+        // parallel_for_weighted blocks until every item finishes.
+        let orow = unsafe {
+            std::slice::from_raw_parts_mut(
+                (out_base as *mut f32).add((i0 + i) * heads * hd + h * hd),
+                hd,
+            )
+        };
+        for (o, &a) in orow.iter_mut().zip(&acc[i * hd..(i + 1) * hd]) {
+            *o = a * inv;
+        }
+    }
+}
+
+/// Seed causal attention (scalar per-row dots, full softmax per row) —
+/// retained as the tiled kernel's oracle and the `blast exp attention`
+/// A/B baseline. Same signature and semantics as [`causal_attention`].
+pub fn causal_attention_ref(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -26,7 +200,10 @@ pub fn causal_attention(
         let qh = &q[h * seq * hd..(h + 1) * seq * hd];
         let kh = &k[h * seq * hd..(h + 1) * seq * hd];
         let vh = &v[h * seq * hd..(h + 1) * seq * hd];
-        let mut scores = vec![0.0f32; seq];
+        // scratch-arena scores (was a per-head `vec![0.0; seq]` on every
+        // closure invocation): every element of row `0..=i` is written
+        // before softmax reads it
+        let mut scores = scratch::take_uninit(seq);
         for i in 0..seq {
             let qi = &qh[i * hd..(i + 1) * hd];
             for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
@@ -54,12 +231,13 @@ pub fn causal_attention(
     out
 }
 
-/// Decode attention for one new position against a KV cache.
+/// Seed decode attention over a **flat** KV cache — retained as the paged
+/// kernel's oracle and A/B baseline.
 ///
 /// `q`: `(heads, hd)` for the new token. `kcache`/`vcache`:
 /// `(heads, max_seq, hd)`; positions `0..=pos` are valid. Returns
 /// `(heads*hd,)` merged.
-pub fn decode_attention(
+pub fn decode_attention_ref(
     q: &[f32],
     kcache: &[f32],
     vcache: &[f32],
@@ -72,8 +250,8 @@ pub fn decode_attention(
     let mut out = vec![0.0f32; heads * hd];
     let out_base = out.as_mut_ptr() as usize;
     threadpool::parallel_for(heads, |h| {
-        // SAFETY: each head writes a disjoint `hd`-wide stripe of `out`, and
-        // parallel_for blocks until every head is done.
+        // SAFETY: each head writes a disjoint `hd`-wide stripe of `out`,
+        // and parallel_for blocks until every head is done.
         let orow = unsafe {
             std::slice::from_raw_parts_mut((out_base as *mut f32).add(h * hd), hd)
         };
@@ -89,15 +267,9 @@ pub fn decode_attention(
     out
 }
 
-/// One head of decode attention, single-threaded: softmax(q·Kᵀ)·V over
-/// positions `0..=pos`, written into `out` (length `hd`, overwritten).
-///
-/// `kh`/`vh` point at the head's stripe of the KV cache (`max_seq × hd`
-/// row-major, only `0..=pos` read). This is the shared inner body of
-/// [`decode_attention`] and of the engine's batched decode, which schedules
-/// `(session, head)` items on the thread pool directly — same arithmetic,
-/// same summation order, so batched and sequential decode produce
-/// bit-identical outputs.
+/// One head of seed decode attention, single-threaded: softmax(q·Kᵀ)·V
+/// over positions `0..=pos` of a flat per-head stripe, written into `out`
+/// (length `hd`, overwritten). Oracle for [`decode_head_paged_into`].
 pub fn decode_head_into(q: &[f32], kh: &[f32], vh: &[f32], hd: usize, pos: usize, out: &mut [f32]) {
     debug_assert_eq!(q.len(), hd);
     debug_assert_eq!(out.len(), hd);
@@ -119,6 +291,84 @@ pub fn decode_head_into(q: &[f32], kh: &[f32], vh: &[f32], hd: usize, pos: usize
     }
 }
 
+/// One head of decode attention over a **paged** KV cache:
+/// softmax(q·Kᵀ)·V over positions `0..=pos`, written into `out` (length
+/// `hd`, overwritten).
+///
+/// `kv_page(pi)` returns the `(K, V)` stripes of page `pi` for this
+/// `(layer, head)` — each `page × hd` position-major floats (the layout
+/// [`crate::model::kv::KvCache::k_head`] serves; a flat buffer works too,
+/// sliced at `pi*page*hd`). Score dots run the unrolled multi-accumulator
+/// [`dot_lanes`]; the weighted-V accumulation is element-order preserving
+/// per position, so **page size never changes the result bits** — only
+/// where positions live.
+///
+/// This is the shared inner body of the engine's sequential *and* batched
+/// decode, which schedule `(session, head)` items on the thread pool
+/// cost-aware by `pos` — same arithmetic, same summation order, so the
+/// two paths stay bit-identical.
+pub fn decode_head_paged_into<'a>(
+    q: &[f32],
+    hd: usize,
+    page: usize,
+    pos: usize,
+    kv_page: impl Fn(usize) -> (&'a [f32], &'a [f32]),
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hd);
+    debug_assert_eq!(out.len(), hd);
+    debug_assert!(page > 0);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let n = pos + 1;
+    let n_pages = n.div_ceil(page);
+    let mut scores = scratch::take_uninit(n);
+    for pi in 0..n_pages {
+        let (kp, _) = kv_page(pi);
+        let base = pi * page;
+        let cnt = (n - base).min(page);
+        for j in 0..cnt {
+            scores[base + j] = dot_lanes(q, &kp[j * hd..(j + 1) * hd]) * scale;
+        }
+    }
+    softmax_row(&mut scores);
+    out.fill(0.0);
+    for pi in 0..n_pages {
+        let (_, vp) = kv_page(pi);
+        let base = pi * page;
+        let cnt = (n - base).min(page);
+        for j in 0..cnt {
+            let w = scores[base + j];
+            crate::kernels::gemm::axpy(w, &vp[j * hd..(j + 1) * hd], out);
+        }
+    }
+}
+
+/// Unrolled 8-lane dot product: eight independent accumulators FMA'd over
+/// 8-wide chunks (vectorizer-friendly without arch intrinsics), combined
+/// with a fixed reduction tree, scalar tail last. The lane split depends
+/// only on the vector length (`hd`), never on KV page size.
+#[inline(always)]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        // fixed-size reborrows drop interior bounds checks
+        let aa: &[f32; 8] = a[c * 8..c * 8 + 8].try_into().unwrap();
+        let bb: &[f32; 8] = b[c * 8..c * 8 + 8].try_into().unwrap();
+        for lane in 0..8 {
+            acc[lane] += aa[lane] * bb[lane];
+        }
+    }
+    let tree = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    tree + tail
+}
+
 #[inline(always)]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = 0.0f32;
@@ -133,7 +383,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    /// Naive single-threaded oracle.
+    /// Naive single-threaded oracle (independent of both shipped kernels).
     fn causal_naive(q: &[f32], k: &[f32], v: &[f32], h: usize, s: usize, d: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; s * h * d];
         for hh in 0..h {
@@ -157,34 +407,70 @@ mod tests {
     }
 
     #[test]
-    fn causal_matches_naive() {
+    fn seed_ref_matches_naive() {
         let (h, s, d) = (3, 7, 4);
         let mut rng = Rng::new(1);
         let q = rng.normal_vec(h * s * d, 1.0);
         let k = rng.normal_vec(h * s * d, 1.0);
         let v = rng.normal_vec(h * s * d, 1.0);
-        let got = causal_attention(&q, &k, &v, h, s, d);
+        let got = causal_attention_ref(&q, &k, &v, h, s, d);
         let want = causal_naive(&q, &k, &v, h, s, d);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4);
         }
     }
 
+    /// The tentpole tolerance gate: the tiled streaming-softmax kernel
+    /// matches the retained seed oracle within 1e-5 abs, across shapes
+    /// that straddle every tile boundary (TQ±1, TK±1, multi-tile, ragged
+    /// head dims that exercise the micro-kernel remainder paths).
     #[test]
-    fn decode_matches_last_row_of_causal() {
+    fn tiled_matches_seed_oracle_across_tile_boundaries() {
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 1, 4),
+            (2, 2, 8),
+            (2, TQ - 1, 16),
+            (2, TQ, 16),
+            (2, TQ + 1, 16),
+            (1, TK - 1, 12),
+            (1, TK, 12),
+            (1, TK + 1, 12),
+            (2, 100, 20),
+            (3, 2 * TK + 5, 8),
+        ];
+        for &(h, s, d) in shapes {
+            let mut rng = Rng::new(0x7157 + (h * 1000 + s * 10 + d) as u64);
+            let q = rng.normal_vec(h * s * d, 1.0);
+            let k = rng.normal_vec(h * s * d, 1.0);
+            let v = rng.normal_vec(h * s * d, 1.0);
+            let got = causal_attention(&q, &k, &v, h, s, d);
+            let want = causal_attention_ref(&q, &k, &v, h, s, d);
+            let mut max_diff = 0.0f32;
+            for (a, b) in got.iter().zip(&want) {
+                max_diff = max_diff.max((a - b).abs());
+            }
+            assert!(
+                max_diff < 1e-5,
+                "tiled vs seed diff {max_diff} at h={h} s={s} d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_ref_matches_last_row_of_causal() {
         let (h, s, d) = (2, 6, 4);
         let mut rng = Rng::new(2);
         let q = rng.normal_vec(h * s * d, 1.0);
         let k = rng.normal_vec(h * s * d, 1.0);
         let v = rng.normal_vec(h * s * d, 1.0);
-        let full = causal_attention(&q, &k, &v, h, s, d);
+        let full = causal_attention_ref(&q, &k, &v, h, s, d);
         // decode for position s-1 using q's last row per head
         let mut qlast = vec![0.0f32; h * d];
         for hh in 0..h {
             qlast[hh * d..(hh + 1) * d]
                 .copy_from_slice(&q[hh * s * d + (s - 1) * d..hh * s * d + s * d]);
         }
-        let got = decode_attention(&qlast, &k, &v, h, s, d, s - 1);
+        let got = decode_attention_ref(&qlast, &k, &v, h, s, d, s - 1);
         for hh in 0..h {
             for dd in 0..d {
                 let want = full[(s - 1) * h * d + hh * d + dd];
@@ -200,7 +486,7 @@ mod tests {
         let q = rng.normal_vec(h * d, 1.0);
         let k = rng.normal_vec(h * s * d, 1.0);
         let v = rng.normal_vec(h * s * d, 1.0);
-        let full = decode_attention(&q, &k, &v, h, s, d, s - 1);
+        let full = decode_attention_ref(&q, &k, &v, h, s, d, s - 1);
         for hh in 0..h {
             let mut out = vec![7.0f32; d]; // dirty buffer: must be overwritten
             decode_head_into(
@@ -215,6 +501,80 @@ mod tests {
         }
     }
 
+    /// Paged decode vs the seed oracle: within 1e-5 (the lane-split dot
+    /// reorders the reduction), at page sizes and positions straddling
+    /// every page boundary.
+    #[test]
+    fn paged_decode_matches_seed_oracle() {
+        let (s, d) = (11, 20); // d exercises the 8-lane tail
+        let mut rng = Rng::new(5);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(s * d, 1.0);
+        let v = rng.normal_vec(s * d, 1.0);
+        for page in [1usize, 3, 4, 16] {
+            for pos in [0usize, 2, 3, 4, 10] {
+                let mut want = vec![0.0f32; d];
+                decode_head_into(&q, &k, &v, d, pos, &mut want);
+                let mut got = vec![9.0f32; d]; // dirty: must be overwritten
+                decode_head_paged_into(
+                    &q,
+                    d,
+                    page,
+                    pos,
+                    |pi| (&k[pi * page * d..], &v[pi * page * d..]),
+                    &mut got,
+                );
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "page={page} pos={pos}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The tentpole layout guarantee at the kernel level: changing the
+    /// page size changes *where* positions live, never the result bits.
+    #[test]
+    fn paged_decode_bitwise_invariant_across_page_sizes() {
+        let (s, d) = (13, 12);
+        let mut rng = Rng::new(6);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(s * d, 1.0);
+        let v = rng.normal_vec(s * d, 1.0);
+        for pos in 0..s {
+            // page = s is the "flat" special case
+            let mut flat = vec![0.0f32; d];
+            decode_head_paged_into(&q, d, s, pos, |pi| (&k[pi * s * d..], &v[pi * s * d..]), &mut flat);
+            for page in [1usize, 2, 3, 5, 8] {
+                let mut paged = vec![0.0f32; d];
+                decode_head_paged_into(
+                    &q,
+                    d,
+                    page,
+                    pos,
+                    |pi| (&k[pi * page * d..], &v[pi * page * d..]),
+                    &mut paged,
+                );
+                let same = flat.iter().zip(&paged).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "page={page} pos={pos}: bits differ from flat layout");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_scalar_dot() {
+        let mut rng = Rng::new(7);
+        for n in [0usize, 1, 7, 8, 9, 16, 20, 64, 65] {
+            let a = rng.normal_vec(n, 1.0);
+            let b = rng.normal_vec(n, 1.0);
+            let want = dot(&a, &b);
+            let got = dot_lanes(&a, &b);
+            assert!((got - want).abs() < 1e-4 * (n as f32).max(1.0), "n={n}");
+        }
+    }
+
     #[test]
     fn first_position_attends_only_to_itself() {
         let (h, s, d) = (1, 3, 2);
@@ -222,8 +582,12 @@ mod tests {
         let q = rng.normal_vec(h * s * d, 1.0);
         let k = rng.normal_vec(h * s * d, 1.0);
         let v = rng.normal_vec(h * s * d, 1.0);
-        let out = causal_attention(&q, &k, &v, h, s, d);
-        assert!((out[0] - v[0]).abs() < 1e-5);
-        assert!((out[1] - v[1]).abs() < 1e-5);
+        for out in [
+            causal_attention(&q, &k, &v, h, s, d),
+            causal_attention_ref(&q, &k, &v, h, s, d),
+        ] {
+            assert!((out[0] - v[0]).abs() < 1e-5);
+            assert!((out[1] - v[1]).abs() < 1e-5);
+        }
     }
 }

@@ -26,7 +26,11 @@
 //!   thread-local scratch tiles.
 //! * [`csr_spmm`] — the unstructured-sparsity baseline (cuSPARSE role).
 //! * [`ops`] — softmax/norms/activations/rope for the native engine.
-//! * [`attention`] — dense causal attention + KV-cache decode.
+//! * [`attention`] — dense attention as position-blocked kernels: tiled
+//!   streaming-softmax prefill (two packed micro-GEMMs per q-tile ×
+//!   k-tile pair) and paged-KV decode with unrolled dot lanes; the seed
+//!   scalar kernels survive as `*_ref` oracles for the
+//!   `BENCH_attention.json` A/B harness.
 
 pub mod attention;
 pub mod bspmm;

@@ -36,6 +36,40 @@ pub fn pack_a_panel(a: &[f32], lda: usize, rows: usize, k: usize, out: &mut [f32
     }
 }
 
+/// Transpose a **contiguous** `rows × k` tile (leading dim == `k`) into a
+/// k-major panel: `out[kk*rows + r] = src[r*k + kk]`.
+///
+/// Same result as [`pack_a_panel`] with `lda == k`, but blocked four rows
+/// at a time so each depth step writes four consecutive outputs from four
+/// streamed source rows — the layout the tiled attention kernel uses for
+/// its Q, Kᵀ and P tiles (`rows` = tile positions, `k` = `hd` or `tk`),
+/// where tiles are always contiguous slices of a head's `(seq, hd)` block.
+pub fn pack_kt_panel(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
+    debug_assert!(src.len() >= rows * k);
+    debug_assert!(out.len() >= rows * k);
+    let mut r0 = 0;
+    while r0 + 4 <= rows {
+        let s0 = &src[r0 * k..(r0 + 1) * k];
+        let s1 = &src[(r0 + 1) * k..(r0 + 2) * k];
+        let s2 = &src[(r0 + 2) * k..(r0 + 3) * k];
+        let s3 = &src[(r0 + 3) * k..(r0 + 4) * k];
+        for kk in 0..k {
+            let o = &mut out[kk * rows + r0..kk * rows + r0 + 4];
+            o[0] = s0[kk];
+            o[1] = s1[kk];
+            o[2] = s2[kk];
+            o[3] = s3[kk];
+        }
+        r0 += 4;
+    }
+    for r in r0..rows {
+        let row = &src[r * k..(r + 1) * k];
+        for (kk, &v) in row.iter().enumerate() {
+            out[kk * rows + r] = v;
+        }
+    }
+}
+
 /// A `k × n` matrix packed into `NR`-wide, zero-padded, k-major column
 /// panels, ready for repeated multiplication (weights, notably).
 #[derive(Clone, Debug)]
@@ -111,6 +145,21 @@ mod tests {
         for i in 0..rows {
             for kk in 0..k {
                 assert_eq!(out[kk * rows + i], a[i * lda + kk], "({i},{kk})");
+            }
+        }
+    }
+
+    #[test]
+    fn kt_panel_matches_a_panel_contiguous() {
+        // covers the 4-row blocked body and the remainder rows
+        for rows in [1usize, 3, 4, 5, 8, 11] {
+            for k in [1usize, 2, 7, 16] {
+                let src: Vec<f32> = (0..rows * k).map(|i| i as f32 * 0.5 - 3.0).collect();
+                let mut a = vec![-1.0f32; rows * k];
+                let mut b = vec![-2.0f32; rows * k];
+                pack_a_panel(&src, k, rows, k, &mut a);
+                pack_kt_panel(&src, rows, k, &mut b);
+                assert_eq!(a, b, "rows={rows} k={k}");
             }
         }
     }

@@ -6,14 +6,18 @@
 //! * `blast train --config gpt2s-sim --steps 200 [--smax 0.8 ...]` —
 //!   pretrain a twin with blocked prune-and-grow; optionally save a
 //!   checkpoint.
-//! * `blast serve [--sparsity 0.9 --block 128 --batched false ...]` — run
-//!   the continuous-batching inference coordinator over the native sparse
-//!   engine with a synthetic client load, printing latency/throughput
-//!   metrics. Decode rounds are batched (`Engine::decode_batch`) unless
-//!   `--batched false` selects the sequential GEMV baseline.
-//! * `blast exp <kernels|serve|fig4..fig11|tab1..tab6|all>` — regenerate a
-//!   paper table/figure or an A/B harness (DESIGN.md §5); `kernels` and
-//!   `serve` write the BENCH_*.json perf-trajectory files.
+//! * `blast serve [--sparsity 0.9 --block 128 --batched false --kv-page 64
+//!   --kv-pool-pages 0 ...]` — run the continuous-batching inference
+//!   coordinator over the native sparse engine with a synthetic client
+//!   load, printing latency/throughput metrics. Decode rounds are batched
+//!   (`Engine::decode_batch`) unless `--batched false` selects the
+//!   sequential GEMV baseline; KV is paged (`--kv-page` positions per
+//!   page) from a shared pool (`--kv-pool-pages`, 0 = unbounded) that
+//!   admission is gated on.
+//! * `blast exp <kernels|serve|attention|fig4..fig11|tab1..tab6|all>` —
+//!   regenerate a paper table/figure or an A/B harness (DESIGN.md §5);
+//!   `kernels`, `serve` and `attention` write the BENCH_*.json
+//!   perf-trajectory files.
 //!
 //! Python never runs here: all model graphs were AOT-compiled by
 //! `make artifacts`.
@@ -62,7 +66,8 @@ fn print_help() {
         "blast — BLock Sparse Transformers (paper reproduction)\n\n\
          USAGE:\n  blast info\n  blast train --config <name> [--steps N --smax S --step-size K \\\n\
          \x20            --decay D --dense-right L --block-mult M --save ckpt.bin]\n\
-         \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false]\n\
+         \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
+         \x20             --kv-page P --kv-pool-pages M]\n\
          \x20 blast exp <id> [--steps N --quick ...]   ids: {:?} or 'all'\n\n\
          Artifacts must exist (run `make artifacts`).",
         eval::ALL
@@ -127,6 +132,7 @@ fn run_train(args: &Args) -> Result<()> {
 
 fn run_serve(args: &Args) -> Result<()> {
     use blast::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
+    use blast::model::kv::{KvOptions, DEFAULT_KV_PAGE};
     let block = args.get_usize("block", 128);
     let sparsity = args.get_f64("sparsity", 0.9);
     let n_requests = args.get_usize("requests", 24);
@@ -144,10 +150,24 @@ fn run_serve(args: &Args) -> Result<()> {
         MlpMode::Sparse
     };
     let batched = args.get_bool_or("batched", true);
-    let engine = Arc::new(Engine::new(cfg.clone(), &params, &masks, mode)?);
+    let kv_page = args.get_usize("kv-page", DEFAULT_KV_PAGE);
+    // 0 = unbounded (the default): no admission gating on KV memory
+    let kv_pool_pages = match args.get_usize("kv-pool-pages", 0) {
+        0 => None,
+        n => Some(n),
+    };
+    let engine = Arc::new(Engine::new_with_kv(
+        cfg.clone(),
+        &params,
+        &masks,
+        mode,
+        KvOptions { page: kv_page, pool_pages: kv_pool_pages },
+    )?);
     println!(
-        "serving {} (mode={mode:?}, sparsity={sparsity}, block={block}, batched={batched}, mlp bytes={})",
+        "serving {} (mode={mode:?}, sparsity={sparsity}, block={block}, batched={batched}, \
+         kv-page={kv_page}, kv-pool-pages={}, mlp bytes={})",
         cfg.name,
+        kv_pool_pages.map(|n| n.to_string()).unwrap_or_else(|| "unbounded".into()),
         engine.mlp_weight_bytes()
     );
     let mut coord = Coordinator::start(

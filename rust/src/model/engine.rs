@@ -6,17 +6,21 @@
 //! identical weights + masks, two execution modes, and the wall-clock gap
 //! between them is the end-to-end inference speedup of block sparsity.
 //!
-//! Sessions are per-sequence (each owns a [`KvCache`]) over shared weights.
-//! The serving coordinator multiplexes many sessions and drives each decode
-//! round either one session at a time ([`Engine::decode`], a chain of
-//! 1-row GEMVs) or — the throughput path — as one [`Engine::decode_batch`]
+//! Sessions are per-sequence (each owns a paged [`KvCache`] drawing from
+//! the engine's shared [`KvPagePool`]) over shared weights. The serving
+//! coordinator multiplexes many sessions and drives each decode round
+//! either one session at a time ([`Engine::decode`], a chain of 1-row
+//! GEMVs) or — the throughput path — as one [`Engine::decode_batch`]
 //! call that stacks the B active sessions' hidden states into a single
 //! `(B × d_model)` activation matrix, so every projection, MLP and the LM
 //! head run as one packed GEMM/BSpMM over the prepacked weights. Attention
 //! stays per-sequence (each session has its own cache and position) and is
-//! parallelized across `(session, head)` items on the thread pool. Both
-//! paths share per-row arithmetic and summation order, so greedy decode
-//! streams are **bit-identical** batched vs sequential.
+//! parallelized across `(session, head)` items on the thread pool,
+//! cost-weighted by each session's position (long sessions cost more per
+//! head). Both paths share per-row arithmetic and summation order, so
+//! greedy decode streams are **bit-identical** batched vs sequential —
+//! and KV page size is a pure layout knob, so they are also bit-identical
+//! across page sizes (the flat cache is `page = max_seq`).
 //!
 //! All dense weight matrices (attention projections, LM head, dense-mode
 //! MLP weights) are packed into [`PackedB`] panel form **once at engine
@@ -26,19 +30,23 @@
 //! allocations.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::attention::{causal_attention, decode_attention, decode_head_into};
+use crate::kernels::attention::{causal_attention, decode_head_paged_into};
 use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
 use crate::kernels::gemm::gemm_packed_into;
 use crate::kernels::ops;
 use crate::kernels::pack::PackedB;
 use crate::model::config::{ModelKind, NativeConfig};
+use crate::model::kv::{KvGeom, KvOptions, KvPagePool};
 use crate::model::params::ParamStore;
 use crate::sparse::{Bcsc, BlockMask};
 use crate::tensor::Tensor;
 use crate::util::{scratch, threadpool};
+
+pub use crate::model::kv::KvCache;
 
 /// MLP execution mode (the Fig. 6 switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,24 +76,10 @@ struct LayerWeights {
     mlp: MlpWeights,
 }
 
-/// Per-sequence KV cache: one `(heads * max_seq * hd)` buffer per layer.
-pub struct KvCache {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    /// Number of valid positions.
-    pub len: usize,
-}
-
-impl KvCache {
-    /// Resident bytes of the cache (both K and V, all layers).
-    pub fn bytes(&self) -> usize {
-        self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
-    }
-}
-
 /// The native block-sparse inference engine: embeddings, prepacked
-/// projection/LM-head weights, and per-layer MLP weights in dense
-/// ([`PackedB`]) or sparse ([`Bcsc`]) form depending on [`MlpMode`].
+/// projection/LM-head weights, per-layer MLP weights in dense
+/// ([`PackedB`]) or sparse ([`Bcsc`]) form depending on [`MlpMode`], and
+/// the shared [`KvPagePool`] every session's cache draws pages from.
 pub struct Engine {
     cfg: NativeConfig,
     mode: MlpMode,
@@ -94,6 +88,7 @@ pub struct Engine {
     layers: Vec<LayerWeights>,
     final_norm: Vec<f32>,
     lm_head: PackedB,
+    kv_pool: Arc<KvPagePool>,
 }
 
 /// Masked dense weight, packed once into micro-kernel panel form.
@@ -130,13 +125,32 @@ fn bcsc_of(params: &ParamStore, masks: &BTreeMap<String, BlockMask>, name: &str,
 }
 
 impl Engine {
-    /// Build an engine over trained parameters + masks.
+    /// Build an engine over trained parameters + masks, with the default
+    /// KV layout ([`KvOptions::default`]: 64-position pages, unbounded
+    /// pool).
     pub fn new(
         cfg: NativeConfig,
         params: &ParamStore,
         masks: &BTreeMap<String, BlockMask>,
         mode: MlpMode,
     ) -> Result<Engine> {
+        Engine::new_with_kv(cfg, params, masks, mode, KvOptions::default())
+    }
+
+    /// Build an engine with an explicit KV layout: `kv.page` positions
+    /// per page (clamped to `max_seq`) and an optional hard pool capacity
+    /// in pages. Page size is a pure layout knob — outputs are
+    /// bit-identical across page sizes.
+    pub fn new_with_kv(
+        cfg: NativeConfig,
+        params: &ParamStore,
+        masks: &BTreeMap<String, BlockMask>,
+        mode: MlpMode,
+        kv: KvOptions,
+    ) -> Result<Engine> {
+        if kv.page == 0 {
+            bail!("KV page size must be >= 1 position");
+        }
         if cfg.kind == ModelKind::Vit {
             bail!("the autoregressive engine serves LM configs; use the eval drivers for ViT");
         }
@@ -174,6 +188,12 @@ impl Engine {
                 mlp,
             });
         }
+        let geom = KvGeom {
+            layers: cfg.layers,
+            heads: cfg.heads,
+            head_dim: cfg.head_dim(),
+            page: kv.page.min(cfg.max_seq),
+        };
         Ok(Engine {
             mode,
             tok_emb: params.req("tok_emb").clone(),
@@ -181,6 +201,7 @@ impl Engine {
             layers,
             final_norm: params.req("final_norm").data().to_vec(),
             lm_head: packed(params, "lm_head"),
+            kv_pool: KvPagePool::new(geom, kv.pool_pages),
             cfg,
         })
     }
@@ -209,14 +230,35 @@ impl Engine {
             .sum()
     }
 
-    /// A zeroed KV cache sized for one `max_seq`-long session.
+    /// An empty paged KV cache over this engine's pool. Pages are
+    /// allocated as the session grows (prefill/decode), so a fresh cache
+    /// holds zero bytes; allocation failures surface as clean errors from
+    /// those calls, never from here.
     pub fn new_cache(&self) -> KvCache {
-        let per_layer = self.cfg.heads * self.cfg.max_seq * self.cfg.head_dim();
-        KvCache {
-            k: (0..self.cfg.layers).map(|_| vec![0.0; per_layer]).collect(),
-            v: (0..self.cfg.layers).map(|_| vec![0.0; per_layer]).collect(),
-            len: 0,
-        }
+        KvCache::new(self.kv_pool.clone())
+    }
+
+    /// The shared KV page pool (admission control, metrics).
+    pub fn kv_pool(&self) -> &Arc<KvPagePool> {
+        &self.kv_pool
+    }
+
+    /// Positions per KV page of this engine's layout.
+    pub fn kv_page(&self) -> usize {
+        self.kv_pool.geom().page
+    }
+
+    /// Pages one session needs to hold `positions` positions.
+    pub fn kv_pages_for(&self, positions: usize) -> usize {
+        self.kv_pool.geom().pages_for(positions)
+    }
+
+    /// Bytes the seed flat cache preallocated per session
+    /// (`2 × layers × heads × max_seq × hd × 4`) — the bound paged
+    /// residency is measured against in `BENCH_attention.json` and the
+    /// serve summaries.
+    pub fn flat_kv_bytes(&self) -> usize {
+        2 * self.cfg.layers * self.cfg.heads * self.cfg.max_seq * self.cfg.head_dim() * 4
     }
 
     fn norm(&self, x: &[f32], g: &[f32], out: &mut [f32]) {
@@ -276,12 +318,15 @@ impl Engine {
     }
 
     /// Prompt pass: fills `cache` for positions `0..tokens.len()` and
-    /// returns the logits of the last position.
+    /// returns the logits of the last position. Allocates the covering KV
+    /// pages up front, so pool exhaustion is a clean error before any
+    /// cache state changes.
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
         let seq = tokens.len();
         if seq == 0 || seq > self.cfg.max_seq {
             bail!("prompt length {seq} out of range 1..={}", self.cfg.max_seq);
         }
+        cache.ensure(seq)?;
         let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
         // embed
         let mut x = Tensor::zeros(&[seq, e]);
@@ -324,13 +369,11 @@ impl Engine {
                     }
                 }
             }
-            // stash K/V into the cache (head-major, max_seq stride)
+            // stash K/V into the cache pages (head-major within each page)
             for hh in 0..h {
                 for s in 0..seq {
                     let src = hh * seq * hd + s * hd;
-                    let dst = hh * self.cfg.max_seq * hd + s * hd;
-                    cache.k[li][dst..dst + hd].copy_from_slice(&kh[src..src + hd]);
-                    cache.v[li][dst..dst + hd].copy_from_slice(&vh[src..src + hd]);
+                    cache.write_pos(li, hh, s, &kh[src..src + hd], &vh[src..src + hd]);
                 }
             }
             let att = causal_attention(&qh, &kh, &vh, h, seq, hd);
@@ -355,12 +398,15 @@ impl Engine {
     }
 
     /// One decode step: append `token` at position `cache.len` and return
-    /// the next-token logits.
+    /// the next-token logits. Grows the cache by a pool page when `pos`
+    /// crosses a page boundary; pool exhaustion is a clean error before
+    /// any cache state changes.
     pub fn decode(&self, token: u32, cache: &mut KvCache) -> Result<Vec<f32>> {
         let pos = cache.len;
         if pos >= self.cfg.max_seq {
             bail!("KV cache full ({} positions)", self.cfg.max_seq);
         }
+        cache.ensure(pos + 1)?;
         let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
         let mut x = self.tok_emb.row(token as usize).to_vec();
         if let Some(pe) = &self.pos_emb {
@@ -385,19 +431,32 @@ impl Engine {
             }
             // write K/V at pos
             for hh in 0..h {
-                let dst = hh * self.cfg.max_seq * hd + pos * hd;
-                cache.k[li][dst..dst + hd].copy_from_slice(&k[hh * hd..(hh + 1) * hd]);
-                cache.v[li][dst..dst + hd].copy_from_slice(&v[hh * hd..(hh + 1) * hd]);
+                cache.write_pos(li, hh, pos, &k[hh * hd..(hh + 1) * hd], &v[hh * hd..(hh + 1) * hd]);
             }
-            let att = decode_attention(
-                &q,
-                &cache.k[li],
-                &cache.v[li],
-                h,
-                self.cfg.max_seq,
-                hd,
-                pos,
-            );
+            // per-head paged attention fan-out (same kernel + item body as
+            // decode_batch, so the two paths stay bit-identical)
+            let mut att = vec![0.0f32; e];
+            {
+                let att_base = att.as_mut_ptr() as usize;
+                let cache_ref: &KvCache = &*cache;
+                let qd: &[f32] = &q;
+                let page = self.kv_page();
+                threadpool::parallel_for(h, |hh| {
+                    // SAFETY: each head writes a disjoint `hd`-wide stripe
+                    // of `att`; parallel_for blocks until all heads finish.
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut((att_base as *mut f32).add(hh * hd), hd)
+                    };
+                    decode_head_paged_into(
+                        &qd[hh * hd..(hh + 1) * hd],
+                        hd,
+                        page,
+                        pos,
+                        |pi| (cache_ref.k_head(li, hh, pi), cache_ref.v_head(li, hh, pi)),
+                        orow,
+                    );
+                });
+            }
             let mut proj = vec![0.0f32; e];
             gemm_packed_into(&att, &l.wo, &mut proj, 1);
             for (a, b) in x.iter_mut().zip(&proj) {
@@ -437,11 +496,16 @@ impl Engine {
     /// the tile, and the per-head attention body is the exact code the
     /// sequential path runs.
     ///
-    /// Validation is all-or-nothing: if any session's cache is full or any
-    /// token is out of vocab, an error is returned **before** any cache or
-    /// activation is touched, so the caller can retry with the offending
-    /// session removed. Ragged batches are the caller's concern — pass only
-    /// the still-active sessions each round; `B = 0` is a no-op.
+    /// Validation is all-or-nothing over **token state**: if any session's
+    /// cache is full, any token is out of vocab, or any session cannot get
+    /// its next KV page from the pool, an error is returned before any K/V
+    /// value is written or any `len` advanced, so the caller can retry
+    /// with the offending session removed. Page *growth* is the one
+    /// side effect an error may leave behind: sessions validated before
+    /// the failing one keep the empty pages they acquired (they would need
+    /// them for any retry, including the caller's sequential fallback).
+    /// Ragged batches are the caller's concern — pass only the
+    /// still-active sessions each round; `B = 0` is a no-op.
     ///
     /// # Panics
     /// If `tokens.len() != caches.len()`.
@@ -463,7 +527,7 @@ impl Engine {
         }
         let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
         let max_seq = self.cfg.max_seq;
-        // all-or-nothing validation before any state is mutated
+        // all-or-nothing validation before any token state is mutated
         for (i, (&t, c)) in tokens.iter().zip(caches.iter()).enumerate() {
             if c.len >= max_seq {
                 bail!("decode_batch session {i}: KV cache full ({max_seq} positions)");
@@ -471,6 +535,13 @@ impl Engine {
             if t as usize >= self.cfg.vocab {
                 bail!("decode_batch session {i}: token {t} out of vocab {}", self.cfg.vocab);
             }
+        }
+        // page growth up front: pool exhaustion surfaces as a clean error
+        // before any K/V write or `len` bump (pages a session already
+        // acquired stay with it for the caller's sequential fallback)
+        for (i, c) in caches.iter_mut().enumerate() {
+            c.ensure(c.len + 1)
+                .map_err(|e| e.context(format!("decode_batch session {i}")))?;
         }
         let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
         // embed the B new tokens into one (B, e) activation matrix
@@ -520,38 +591,50 @@ impl Engine {
             for (i, cache) in caches.iter_mut().enumerate() {
                 let (kr, vr) = (&k[i * e..(i + 1) * e], &v[i * e..(i + 1) * e]);
                 for hh in 0..h {
-                    let dst = hh * max_seq * hd + positions[i] * hd;
-                    cache.k[li][dst..dst + hd].copy_from_slice(&kr[hh * hd..(hh + 1) * hd]);
-                    cache.v[li][dst..dst + hd].copy_from_slice(&vr[hh * hd..(hh + 1) * hd]);
+                    cache.write_pos(
+                        li,
+                        hh,
+                        positions[i],
+                        &kr[hh * hd..(hh + 1) * hd],
+                        &vr[hh * hd..(hh + 1) * hd],
+                    );
                 }
             }
-            // per-sequence attention, (session, head) items across the pool
+            // per-sequence paged attention, (session, head) items across
+            // the pool, cost-weighted by position: a session at pos 500
+            // walks ~8x the KV of one at pos 60, and uniform chunking
+            // would let one long session serialize the round
             {
                 let caches_ref: &[KvCache] = &*caches;
                 let positions_ref: &[usize] = &positions;
                 let qd: &[f32] = &q;
+                let page = self.kv_page();
                 let att_base = att.as_mut_ptr() as usize;
-                threadpool::parallel_for(bsz * h, |t| {
-                    let (i, hh) = (t / h, t % h);
-                    let c = &caches_ref[i];
-                    // SAFETY: each (session, head) item owns the disjoint
-                    // span att[i, hh*hd..(hh+1)*hd]; parallel_for blocks
-                    // until all items finish.
-                    let orow = unsafe {
-                        std::slice::from_raw_parts_mut(
-                            (att_base as *mut f32).add(i * e + hh * hd),
+                threadpool::parallel_for_weighted(
+                    bsz * h,
+                    |t| positions_ref[t / h] + 1,
+                    |t| {
+                        let (i, hh) = (t / h, t % h);
+                        let c = &caches_ref[i];
+                        // SAFETY: each (session, head) item owns the
+                        // disjoint span att[i, hh*hd..(hh+1)*hd]; the pool
+                        // call blocks until all items finish.
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (att_base as *mut f32).add(i * e + hh * hd),
+                                hd,
+                            )
+                        };
+                        decode_head_paged_into(
+                            &qd[i * e + hh * hd..i * e + (hh + 1) * hd],
                             hd,
-                        )
-                    };
-                    decode_head_into(
-                        &qd[i * e + hh * hd..i * e + (hh + 1) * hd],
-                        &c.k[li][hh * max_seq * hd..],
-                        &c.v[li][hh * max_seq * hd..],
-                        hd,
-                        positions_ref[i],
-                        orow,
-                    );
-                });
+                            page,
+                            positions_ref[i],
+                            |pi| (c.k_head(li, hh, pi), c.v_head(li, hh, pi)),
+                            orow,
+                        );
+                    },
+                );
             }
             proj.fill(0.0);
             gemm_packed_into(&att, &l.wo, &mut proj, bsz);
@@ -833,6 +916,194 @@ mod tests {
         let err = eng.decode_batch(&[999], &mut caches[..1]).unwrap_err();
         assert!(err.to_string().contains("out of vocab"), "{err}");
         assert_eq!(caches[0].len, 2);
+    }
+
+    /// The tentpole layout guarantee end-to-end: a paged cache (page 4)
+    /// and a "flat" cache (page = max_seq) produce **bit-identical**
+    /// logits through prefill and decode, at prompt lengths page−1, page,
+    /// page+1 and across decode steps that straddle page boundaries.
+    #[test]
+    fn paged_and_flat_layouts_bitwise_identical() {
+        for kind in [ModelKind::Gpt2, ModelKind::Llama] {
+            let cfg = test_cfg(kind); // max_seq 16
+            let params = test_params(&cfg, 31);
+            let masks = random_masks(&cfg, 0.5, 32);
+            let flat = Engine::new_with_kv(
+                cfg.clone(),
+                &params,
+                &masks,
+                MlpMode::Sparse,
+                KvOptions { page: cfg.max_seq, pool_pages: None },
+            )
+            .unwrap();
+            let paged = Engine::new_with_kv(
+                cfg.clone(),
+                &params,
+                &masks,
+                MlpMode::Sparse,
+                KvOptions { page: 4, pool_pages: None },
+            )
+            .unwrap();
+            for plen in [3usize, 4, 5] {
+                let prompt: Vec<u32> = (0..plen).map(|i| (i as u32 * 5 + 1) % 32).collect();
+                let mut cf = flat.new_cache();
+                let mut cp = paged.new_cache();
+                let lf = flat.prefill(&prompt, &mut cf).unwrap();
+                let lp = paged.prefill(&prompt, &mut cp).unwrap();
+                assert!(
+                    lf.iter().zip(&lp).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kind:?} plen={plen}: prefill logits bits differ"
+                );
+                // greedy decode across the next page boundary (positions
+                // plen..plen+6 cross page 1 → 2 for every plen here)
+                let mut tok = Engine::argmax(&lf);
+                for step in 0..6 {
+                    let a = flat.decode(tok, &mut cf).unwrap();
+                    let b = paged.decode(tok, &mut cp).unwrap();
+                    assert!(
+                        a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "{kind:?} plen={plen} step={step}: decode logits bits differ"
+                    );
+                    tok = Engine::argmax(&a);
+                }
+                assert_eq!(cf.len, cp.len);
+            }
+        }
+    }
+
+    /// Ragged batches straddling page boundaries: decode_batch over paged
+    /// caches is bitwise equal to decode_batch over flat caches, with
+    /// per-session lengths page−1 / page / page+1 diverging as they grow.
+    #[test]
+    fn decode_batch_paged_matches_flat_across_page_straddle() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 33);
+        let masks = random_masks(&cfg, 0.5, 34);
+        let mk = |page: usize| {
+            Engine::new_with_kv(
+                cfg.clone(),
+                &params,
+                &masks,
+                MlpMode::Dense,
+                KvOptions { page, pool_pages: None },
+            )
+            .unwrap()
+        };
+        let flat = mk(cfg.max_seq);
+        let paged = mk(4);
+        let prompts: Vec<Vec<u32>> = vec![
+            (0..3).map(|i| i as u32 + 2).collect(), // page − 1
+            (0..4).map(|i| i as u32 * 3 + 1).collect(), // page
+            (0..5).map(|i| i as u32 * 2 + 7).collect(), // page + 1
+        ];
+        let (mut cf, mut cp, mut toks) = (Vec::new(), Vec::new(), Vec::new());
+        for p in &prompts {
+            let mut a = flat.new_cache();
+            let mut b = paged.new_cache();
+            let la = flat.prefill(p, &mut a).unwrap();
+            let lb = paged.prefill(p, &mut b).unwrap();
+            assert_eq!(Engine::argmax(&la), Engine::argmax(&lb));
+            toks.push(Engine::argmax(&la));
+            cf.push(a);
+            cp.push(b);
+        }
+        // 8 rounds walk every session across at least two page boundaries
+        for round in 0..8 {
+            let la = flat.decode_batch(&toks, &mut cf).unwrap();
+            let lb = paged.decode_batch(&toks, &mut cp).unwrap();
+            for (i, (a, b)) in la.iter().zip(&lb).enumerate() {
+                assert!(
+                    a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "round {round} session {i}: logits bits differ paged vs flat"
+                );
+            }
+            toks = la.iter().map(|l| Engine::argmax(l)).collect();
+        }
+        for (a, b) in cf.iter().zip(&cp) {
+            assert_eq!(a.len, b.len);
+            // paged residency never exceeds the flat bound
+            assert!(b.bytes() <= a.bytes());
+        }
+    }
+
+    /// Pool exhaustion is a clean error through prefill, decode and
+    /// decode_batch — never a panic — and leaves token state untouched.
+    #[test]
+    fn pool_exhaustion_clean_errors() {
+        let cfg = test_cfg(ModelKind::Gpt2);
+        let params = test_params(&cfg, 35);
+        let eng = Engine::new_with_kv(
+            cfg.clone(),
+            &params,
+            &BTreeMap::new(),
+            MlpMode::Dense,
+            KvOptions { page: 4, pool_pages: Some(2) }, // 8 positions total
+        )
+        .unwrap();
+        // prefill needing 3 pages fails cleanly, len untouched
+        let mut c = eng.new_cache();
+        let err = eng.prefill(&vec![1u32; 9], &mut c).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        assert_eq!(c.len, 0);
+        // the pages it did acquire stay usable: an 8-token prefill fits
+        eng.prefill(&vec![1u32; 8], &mut c).unwrap();
+        assert_eq!(c.len, 8);
+        // decode would need page 3 of 2 → clean error, len unchanged
+        let err = eng.decode(1, &mut c).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        assert_eq!(c.len, 8);
+        // decode_batch surfaces the same error with the session index and
+        // without touching any session's len
+        let mut caches = vec![c];
+        let err = eng.decode_batch(&[1], &mut caches).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("session 0") && msg.contains("exhausted"), "{msg}");
+        assert_eq!(caches[0].len, 8);
+    }
+
+    /// `KvCache::bytes` reports resident pages, not the max_seq bound.
+    #[test]
+    fn cache_bytes_report_resident_pages() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 36);
+        let eng = Engine::new_with_kv(
+            cfg.clone(),
+            &params,
+            &BTreeMap::new(),
+            MlpMode::Dense,
+            KvOptions { page: 4, pool_pages: None },
+        )
+        .unwrap();
+        let page_bytes = eng.kv_pool().geom().page_bytes();
+        let mut c = eng.new_cache();
+        assert_eq!(c.bytes(), 0);
+        eng.prefill(&[1, 2, 3, 4, 5], &mut c).unwrap(); // 5 positions → 2 pages
+        assert_eq!(c.bytes(), 2 * page_bytes);
+        assert!(c.bytes() < eng.flat_kv_bytes());
+        // flat bound matches the seed preallocation formula
+        assert_eq!(
+            eng.flat_kv_bytes(),
+            2 * cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim() * 4
+        );
+        // pool accounting follows the live cache
+        assert_eq!(eng.kv_pool().pages_in_use(), 2);
+        drop(c);
+        assert_eq!(eng.kv_pool().pages_in_use(), 0);
+        assert_eq!(eng.kv_pool().high_water_pages(), 2);
+    }
+
+    #[test]
+    fn zero_page_size_rejected() {
+        let cfg = test_cfg(ModelKind::Gpt2);
+        let params = test_params(&cfg, 37);
+        assert!(Engine::new_with_kv(
+            cfg,
+            &params,
+            &BTreeMap::new(),
+            MlpMode::Dense,
+            KvOptions { page: 0, pool_pages: None },
+        )
+        .is_err());
     }
 
     #[test]

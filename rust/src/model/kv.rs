@@ -1,0 +1,400 @@
+//! Paged KV cache: fixed-size position pages from a shared pool.
+//!
+//! The seed engine preallocated one flat `(heads × max_seq × hd)` buffer
+//! per layer per session, so resident KV memory scaled with the
+//! *configured* context length rather than the tokens a session actually
+//! holds — directly against the paper's inference-memory-footprint
+//! headline. This module replaces that with the vLLM-shaped layout:
+//!
+//! * a **page** covers [`KvGeom::page`] consecutive positions for *all*
+//!   layers, both K and V, head-major within the page — one allocation
+//!   per position span per session, and each `(layer, head, K|V)` stripe
+//!   of a page is `page × hd` contiguous floats, exactly what the decode
+//!   kernel walks;
+//! * a [`KvPagePool`] shared by every session of an engine hands pages
+//!   out on demand (`KvCache::ensure`) and recycles them when a session
+//!   drops, with an optional hard capacity so the serving coordinator can
+//!   admit sessions against real memory instead of hoping;
+//! * [`KvCache::bytes`] reports **resident** bytes (pages actually held),
+//!   not the `max_seq` bound.
+//!
+//! The layout is a pure indexing change: positions are written and read
+//! in the same order as the flat cache, so engine outputs are
+//! **bit-identical** across page sizes (a flat cache is just the
+//! `page = max_seq` special case — asserted by the engine's
+//! page-boundary tests).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+/// Default positions per KV page (the block-granularity sweet spot the
+/// BLaST/BLASST line of work uses for position blocking).
+pub const DEFAULT_KV_PAGE: usize = 64;
+
+/// Engine-facing KV layout knobs: positions per page and optional pool
+/// capacity (pages). `blast serve --kv-page N --kv-pool-pages M` maps
+/// straight onto this.
+#[derive(Clone, Copy, Debug)]
+pub struct KvOptions {
+    /// Positions per page (clamped to the engine's `max_seq`).
+    pub page: usize,
+    /// Hard pool capacity in pages; `None` = unbounded.
+    pub pool_pages: Option<usize>,
+}
+
+impl Default for KvOptions {
+    fn default() -> Self {
+        KvOptions {
+            page: DEFAULT_KV_PAGE,
+            pool_pages: None,
+        }
+    }
+}
+
+/// Geometry of one cache: model shape + page size. Copied into every
+/// [`KvCache`] so kernels can index pages without touching the pool lock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvGeom {
+    /// Transformer layers cached.
+    pub layers: usize,
+    /// Attention heads per layer.
+    pub heads: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Positions per page.
+    pub page: usize,
+}
+
+impl KvGeom {
+    /// f32 values in one page: K and V, all layers, all heads, `page`
+    /// positions.
+    pub fn page_floats(&self) -> usize {
+        2 * self.layers * self.heads * self.page * self.head_dim
+    }
+
+    /// Bytes of one page.
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats() * 4
+    }
+
+    /// Pages needed to hold `positions` positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page)
+    }
+
+    /// Offset of the `(layer, K|V, head)` stripe inside a page
+    /// (`which` = 0 for K, 1 for V). The stripe is `page × head_dim`
+    /// contiguous floats, position-major.
+    #[inline]
+    fn stripe(&self, layer: usize, which: usize, head: usize) -> usize {
+        ((layer * 2 + which) * self.heads + head) * self.page * self.head_dim
+    }
+}
+
+struct PoolInner {
+    /// Recycled page buffers, ready for reuse without a fresh allocation.
+    free: Vec<Box<[f32]>>,
+    /// Pages currently held by live caches.
+    in_use: usize,
+    /// Peak of `in_use` since pool creation.
+    high_water: usize,
+}
+
+/// Shared page allocator: every session's [`KvCache`] draws from (and
+/// returns to) one pool, so resident KV memory is bounded and observable
+/// process-wide. Cloneable via `Arc`; all methods take `&self`.
+pub struct KvPagePool {
+    geom: KvGeom,
+    /// Hard capacity in pages; `None` = unbounded (tests, single-session
+    /// tools). The serving coordinator uses the bound for admission.
+    max_pages: Option<usize>,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPagePool {
+    /// A pool for the given geometry; `max_pages = None` is unbounded.
+    pub fn new(geom: KvGeom, max_pages: Option<usize>) -> Arc<KvPagePool> {
+        Arc::new(KvPagePool {
+            geom,
+            max_pages,
+            inner: Mutex::new(PoolInner {
+                free: Vec::new(),
+                in_use: 0,
+                high_water: 0,
+            }),
+        })
+    }
+
+    /// The geometry every page of this pool follows.
+    pub fn geom(&self) -> KvGeom {
+        self.geom
+    }
+
+    /// Hard capacity in pages (`None` = unbounded).
+    pub fn capacity_pages(&self) -> Option<usize> {
+        self.max_pages
+    }
+
+    /// Pages currently held by live caches.
+    pub fn pages_in_use(&self) -> usize {
+        self.inner.lock().unwrap().in_use
+    }
+
+    /// Pages still allocatable right now (`None` = unbounded).
+    pub fn available_pages(&self) -> Option<usize> {
+        self.max_pages
+            .map(|cap| cap.saturating_sub(self.inner.lock().unwrap().in_use))
+    }
+
+    /// Peak concurrent pages since pool creation — the number a capacity
+    /// planner actually needs.
+    pub fn high_water_pages(&self) -> usize {
+        self.inner.lock().unwrap().high_water
+    }
+
+    /// Bytes resident in live caches right now (in-use pages only; the
+    /// recycled free list is idle capacity, not session footprint).
+    pub fn resident_bytes(&self) -> usize {
+        self.pages_in_use() * self.geom.page_bytes()
+    }
+
+    /// Hand out one page, recycling a returned buffer when possible.
+    /// Clean error — never a panic — when the pool is at capacity.
+    fn alloc(&self) -> Result<Box<[f32]>> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(cap) = self.max_pages {
+            if inner.in_use >= cap {
+                bail!(
+                    "KV page pool exhausted: {} of {cap} pages in use",
+                    inner.in_use
+                );
+            }
+        }
+        inner.in_use += 1;
+        inner.high_water = inner.high_water.max(inner.in_use);
+        // Recycled pages keep stale values: every read is bounded by the
+        // owning cache's `len`, and every position is written before `len`
+        // covers it, so stale floats are never observed.
+        let page = inner
+            .free
+            .pop()
+            .unwrap_or_else(|| vec![0.0f32; self.geom.page_floats()].into_boxed_slice());
+        Ok(page)
+    }
+
+    /// Return a page to the free list (called by [`KvCache`] on drop).
+    fn release(&self, page: Box<[f32]>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.in_use -= 1;
+        inner.free.push(page);
+    }
+}
+
+/// Per-session KV cache backed by pool pages, allocated on demand as the
+/// sequence grows and returned to the pool on drop.
+pub struct KvCache {
+    pool: Arc<KvPagePool>,
+    geom: KvGeom,
+    pages: Vec<Box<[f32]>>,
+    /// Number of valid positions (same meaning as the seed flat cache).
+    pub len: usize,
+}
+
+impl KvCache {
+    /// An empty cache over `pool`; no pages are held until
+    /// [`KvCache::ensure`] is called.
+    pub fn new(pool: Arc<KvPagePool>) -> KvCache {
+        let geom = pool.geom();
+        KvCache {
+            pool,
+            geom,
+            pages: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Resident bytes of this cache — pages actually held, **not** the
+    /// `max_seq` preallocation bound the seed cache reported.
+    pub fn bytes(&self) -> usize {
+        self.pages.len() * self.geom.page_bytes()
+    }
+
+    /// Pages currently held.
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Positions per page of this cache's layout.
+    pub fn page_positions(&self) -> usize {
+        self.geom.page
+    }
+
+    /// Grow to cover `positions` positions, allocating pages from the
+    /// pool on demand. Clean error on pool exhaustion; the cache keeps
+    /// the pages it already acquired (its `len` and contents are
+    /// untouched either way).
+    pub fn ensure(&mut self, positions: usize) -> Result<()> {
+        let need = self.geom.pages_for(positions);
+        while self.pages.len() < need {
+            self.pages.push(self.pool.alloc()?);
+        }
+        Ok(())
+    }
+
+    /// The `(page × hd)` K stripe of `(layer, head)` in page `pi`
+    /// (position-major). Positions `pi*page ..` of the sequence.
+    #[inline]
+    pub fn k_head(&self, layer: usize, head: usize, pi: usize) -> &[f32] {
+        let o = self.geom.stripe(layer, 0, head);
+        &self.pages[pi][o..o + self.geom.page * self.geom.head_dim]
+    }
+
+    /// The `(page × hd)` V stripe of `(layer, head)` in page `pi`.
+    #[inline]
+    pub fn v_head(&self, layer: usize, head: usize, pi: usize) -> &[f32] {
+        let o = self.geom.stripe(layer, 1, head);
+        &self.pages[pi][o..o + self.geom.page * self.geom.head_dim]
+    }
+
+    /// Write one position's K and V rows for `(layer, head)`. The page
+    /// covering `pos` must already exist (see [`KvCache::ensure`]).
+    #[inline]
+    pub fn write_pos(&mut self, layer: usize, head: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let hd = self.geom.head_dim;
+        debug_assert_eq!(k.len(), hd);
+        debug_assert_eq!(v.len(), hd);
+        let (pi, off) = (pos / self.geom.page, pos % self.geom.page);
+        let ko = self.geom.stripe(layer, 0, head) + off * hd;
+        let vo = self.geom.stripe(layer, 1, head) + off * hd;
+        let page = &mut self.pages[pi];
+        page[ko..ko + hd].copy_from_slice(k);
+        page[vo..vo + hd].copy_from_slice(v);
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        for page in self.pages.drain(..) {
+            self.pool.release(page);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(page: usize) -> KvGeom {
+        KvGeom {
+            layers: 2,
+            heads: 3,
+            head_dim: 4,
+            page,
+        }
+    }
+
+    #[test]
+    fn geometry_math() {
+        let g = geom(8);
+        assert_eq!(g.page_floats(), 2 * 2 * 3 * 8 * 4);
+        assert_eq!(g.page_bytes(), g.page_floats() * 4);
+        assert_eq!(g.pages_for(0), 0);
+        assert_eq!(g.pages_for(1), 1);
+        assert_eq!(g.pages_for(8), 1);
+        assert_eq!(g.pages_for(9), 2);
+    }
+
+    #[test]
+    fn write_then_read_roundtrip_across_pages() {
+        let pool = KvPagePool::new(geom(2), None);
+        let mut c = KvCache::new(pool);
+        c.ensure(5).unwrap();
+        assert_eq!(c.pages_held(), 3);
+        // distinct values per (layer, head, pos, dim, k/v)
+        for li in 0..2 {
+            for hh in 0..3 {
+                for pos in 0..5 {
+                    let base = (li * 1000 + hh * 100 + pos * 10) as f32;
+                    let k: Vec<f32> = (0..4).map(|d| base + d as f32).collect();
+                    let v: Vec<f32> = (0..4).map(|d| -(base + d as f32)).collect();
+                    c.write_pos(li, hh, pos, &k, &v);
+                }
+            }
+        }
+        for li in 0..2 {
+            for hh in 0..3 {
+                for pos in 0..5 {
+                    let (pi, off) = (pos / 2, pos % 2);
+                    let k = &c.k_head(li, hh, pi)[off * 4..off * 4 + 4];
+                    let v = &c.v_head(li, hh, pi)[off * 4..off * 4 + 4];
+                    let base = (li * 1000 + hh * 100 + pos * 10) as f32;
+                    for d in 0..4 {
+                        assert_eq!(k[d], base + d as f32, "K l{li} h{hh} p{pos} d{d}");
+                        assert_eq!(v[d], -(base + d as f32), "V l{li} h{hh} p{pos} d{d}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_counts_and_high_water() {
+        let pool = KvPagePool::new(geom(4), Some(4));
+        assert_eq!(pool.available_pages(), Some(4));
+        let mut a = KvCache::new(pool.clone());
+        a.ensure(8).unwrap(); // 2 pages
+        let mut b = KvCache::new(pool.clone());
+        b.ensure(4).unwrap(); // 1 page
+        assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(pool.available_pages(), Some(1));
+        assert_eq!(pool.resident_bytes(), 3 * pool.geom().page_bytes());
+        drop(a);
+        assert_eq!(pool.pages_in_use(), 1);
+        // high water sticks at the peak
+        assert_eq!(pool.high_water_pages(), 3);
+        // released pages are recycled, not lost
+        let mut c2 = KvCache::new(pool.clone());
+        c2.ensure(12).unwrap();
+        assert_eq!(pool.pages_in_use(), 4);
+        assert_eq!(pool.high_water_pages(), 4);
+    }
+
+    #[test]
+    fn exhaustion_is_a_clean_error_and_keeps_acquired_pages() {
+        let pool = KvPagePool::new(geom(2), Some(2));
+        let mut c = KvCache::new(pool.clone());
+        let err = c.ensure(6).unwrap_err(); // needs 3 pages, cap 2
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        // the two acquired pages stay with the cache (len untouched)
+        assert_eq!(c.pages_held(), 2);
+        assert_eq!(c.len, 0);
+        // freeing makes the allocation succeed for others
+        drop(c);
+        let mut d = KvCache::new(pool.clone());
+        d.ensure(4).unwrap();
+        assert_eq!(pool.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn bytes_report_resident_pages_only() {
+        let pool = KvPagePool::new(geom(8), None);
+        let mut c = KvCache::new(pool.clone());
+        assert_eq!(c.bytes(), 0);
+        c.ensure(1).unwrap();
+        assert_eq!(c.bytes(), pool.geom().page_bytes());
+        c.ensure(9).unwrap();
+        assert_eq!(c.bytes(), 2 * pool.geom().page_bytes());
+        // ensure() never shrinks; bytes track pages held
+        c.ensure(3).unwrap();
+        assert_eq!(c.bytes(), 2 * pool.geom().page_bytes());
+    }
+
+    #[test]
+    fn zero_capacity_pool_rejects_first_page() {
+        let pool = KvPagePool::new(geom(2), Some(0));
+        let mut c = KvCache::new(pool);
+        assert!(c.ensure(1).is_err());
+        assert_eq!(c.pages_held(), 0);
+    }
+}

@@ -16,8 +16,10 @@
 
 pub mod config;
 pub mod engine;
+pub mod kv;
 pub mod params;
 
 pub use config::{paper_catalog, ModelKind, NativeConfig, PaperGeometry};
 pub use engine::{Engine, MlpMode};
+pub use kv::{KvCache, KvOptions, KvPagePool, DEFAULT_KV_PAGE};
 pub use params::ParamStore;

@@ -13,9 +13,11 @@
 
 use std::cell::RefCell;
 
-/// Max buffers cached per thread (fused MLP needs 4 live at once; a little
-/// headroom covers nested dense-MLP + projection usage).
-const POOL_CAP: usize = 8;
+/// Max buffers cached per thread. The tiled attention kernel holds 7 live
+/// at once per (head, q-tile) item (Q/K/P packs, score tile, accumulator,
+/// running max/sum); the fused MLP needs 4; the remaining headroom covers
+/// nested dense-MLP + projection usage without evicting warm buffers.
+const POOL_CAP: usize = 12;
 
 /// Buffers whose capacity exceeds this many floats (16 MiB) are freed on
 /// drop instead of pooled: one giant prefill must not pin its tile buffers

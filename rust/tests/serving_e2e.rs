@@ -9,6 +9,7 @@ use std::time::Duration;
 use blast::coordinator::{BatcherConfig, Coordinator, Request};
 use blast::model::config::{ModelKind, NativeConfig};
 use blast::model::engine::{Engine, MlpMode};
+use blast::model::kv::KvOptions;
 use blast::model::params::ParamStore;
 use blast::sparse::BlockMask;
 use blast::tensor::Tensor;
@@ -214,6 +215,112 @@ fn stop_answers_queued_requests() {
         assert!(seen.insert(done.id), "duplicate completion {}", done.id);
     }
     assert_eq!(seen.len() as u64, n, "every request must be answered on stop");
+}
+
+/// KV page size is a pure layout knob at the *service* level too: the
+/// same mixed load served through a small-page engine and a flat
+/// (page = max_seq) engine produces identical greedy streams.
+#[test]
+fn paged_and_flat_serving_agree_token_for_token() {
+    let c = cfg();
+    let p = params(&c, 11);
+    let m = masks(&c, 0.5, 12);
+    let mut answers: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for page in [3usize, c.max_seq] {
+        let engine = Arc::new(
+            Engine::new_with_kv(
+                c.clone(),
+                &p,
+                &m,
+                MlpMode::Sparse,
+                KvOptions { page, pool_pages: None },
+            )
+            .unwrap(),
+        );
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 3,
+                max_queue: 32,
+                ..BatcherConfig::default()
+            },
+        );
+        // prompt lengths 2..6 and budgets straddle the 3-position page
+        let plan: Vec<(u64, usize, usize)> =
+            (0..6).map(|i| (i, 2 + (i as usize % 5), 2 + (i as usize % 4))).collect();
+        for &(id, plen, max_new) in &plan {
+            coord
+                .submit(Request {
+                    id,
+                    prompt: (0..plen).map(|j| ((id as usize * 7 + j * 3) % 64) as u32).collect(),
+                    max_new,
+                    eos: None,
+                })
+                .unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..plan.len() {
+            let done = coord.next_completion(Duration::from_secs(60)).unwrap();
+            assert!(done.error.is_none(), "{:?}", done.error);
+            got.push((done.id, done.tokens));
+        }
+        got.sort_by_key(|(id, _)| *id);
+        coord.stop();
+        answers.push(got);
+    }
+    assert_eq!(
+        answers[0], answers[1],
+        "paged and flat KV layouts must serve identical greedy streams"
+    );
+}
+
+/// A session whose pool runs dry mid-stream retires cleanly with the
+/// tokens it already produced — the coordinator's error-isolation path,
+/// not a panic and not a hang.
+#[test]
+fn mid_stream_pool_exhaustion_retires_with_partial_output() {
+    let c = cfg();
+    let engine = Arc::new(
+        Engine::new_with_kv(
+            c.clone(),
+            &params(&c, 13),
+            &BTreeMap::new(),
+            MlpMode::Sparse,
+            // 2 pages × 4 positions = 8 positions total; the admission
+            // check (prompt 4 + 1 = 5 positions → 2 pages) passes, but the
+            // 10-token decode budget cannot: the pool dries up at pos 8
+            KvOptions { page: 4, pool_pages: Some(2) },
+        )
+        .unwrap(),
+    );
+    let mut coord = Coordinator::start(engine, BatcherConfig::default());
+    coord
+        .submit(Request {
+            id: 0,
+            prompt: vec![1, 2, 3, 4],
+            max_new: 10,
+            eos: None,
+        })
+        .unwrap();
+    let done = coord.next_completion(Duration::from_secs(60)).expect("completion");
+    // prefill token + decodes at positions 4..=7 = 5 tokens, then pos 8
+    // would need page 3 of 2 → the session retires with what it has
+    assert!(done.error.is_none(), "{:?}", done.error);
+    assert_eq!(done.tokens.len(), 5, "expected partial output at pool exhaustion");
+    // the scheduler survives and keeps serving new (fitting) requests
+    // once the retired session's pages are back in the pool
+    coord
+        .submit(Request {
+            id: 1,
+            prompt: vec![5, 6],
+            max_new: 3,
+            eos: None,
+        })
+        .unwrap();
+    let done = coord.next_completion(Duration::from_secs(60)).expect("completion");
+    assert_eq!((done.id, done.tokens.len()), (1, 3));
+    assert!(done.error.is_none());
+    coord.stop();
 }
 
 #[test]
