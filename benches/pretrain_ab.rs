@@ -1,0 +1,9 @@
+//! Bench: dense-vs-block-sparse native training step A/B; writes
+//! BENCH_pretrain.json.
+//! `cargo bench --bench pretrain_ab [-- --quick --config gpt2s-sim --sparsities 0.0,0.5,0.8,0.9 --out BENCH_pretrain.json]`
+use blast::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    blast::eval::pretrain_exps::pretrain_ab(&args).unwrap();
+}

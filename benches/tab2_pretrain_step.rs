@@ -1,8 +1,8 @@
-//! Bench: Table 2's wall-clock axis — time per training iteration through
-//! the AOT train_step at each Table 2 configuration, without the full-run
-//! perplexity (use `blast exp tab2` for the complete table).
-//! `cargo bench --bench tab2_pretrain_step [-- --steps 12]`
-use blast::runtime::Runtime;
+//! Bench: Table 2's wall-clock axis — time per training iteration at each
+//! Table 2 configuration, without the full-run perplexity (use `blast exp
+//! tab2` for the complete table). Runs the native train step by default;
+//! `-- --backend aot` drives the AOT executables instead.
+//! `cargo bench --bench tab2_pretrain_step [-- --steps 12 --backend native|aot]`
 use blast::testkit::bench::Table;
 use blast::train::pretrain::{PretrainOptions, Trainer};
 use blast::util::cli::Args;
@@ -11,7 +11,9 @@ use blast::util::stats;
 fn main() {
     let args = Args::parse();
     let steps = args.get_usize("steps", 12);
-    let rt = Runtime::open_default().expect("run `make artifacts`");
+    let rt = blast::train::pretrain::open_backend_runtime(&args.get_str("backend", "native"))
+        .expect("aot backend needs `make artifacts` + --features pjrt");
+    println!("backend: {}", if rt.is_some() { "aot" } else { "native" });
     let mut table = Table::new(
         "Tab.2 (time axis) — per-iteration wall-clock",
         &["config", "variant", "median ms/iter", "mask-update ms"],
@@ -25,7 +27,7 @@ fn main() {
                 block_mult: mult,
                 ..Default::default()
             };
-            let mut t = Trainer::new(&rt, config, opts).unwrap();
+            let mut t = Trainer::from_backend(rt.as_ref(), config, opts).unwrap();
             t.run(steps).unwrap();
             let plain: Vec<f64> = t.log.iter().filter(|l| !l.mask_update).map(|l| l.secs * 1e3).collect();
             let upd: Vec<f64> = t.log.iter().filter(|l| l.mask_update).map(|l| l.secs * 1e3).collect();

@@ -1,21 +1,23 @@
 //! End-to-end flagship driver (DESIGN.md deliverable (b) / the mandated
-//! end-to-end validation): pretrain a GPT-2-style Transformer twin through
-//! the full three-layer stack — Rust coordinator → AOT HLO `train_step`
-//! (JAX-lowered, Pallas-validated) → PJRT CPU — with blocked prune-and-grow
-//! sparsification live during training, logging the loss curve, the
-//! sparsity schedule, and final held-out perplexity vs a dense control run.
+//! end-to-end validation): pretrain a GPT-2-style Transformer twin with
+//! blocked prune-and-grow sparsification live during training, logging the
+//! loss curve, the sparsity schedule, and final held-out perplexity vs a
+//! dense control run. By default the whole step — forward, backward, Adam
+//! — runs on the **native** packed block-sparse kernel stack (no
+//! artifacts needed); `--backend aot` drives the AOT HLO `train_step`
+//! through PJRT instead (requires `make artifacts` + `--features pjrt`).
 //!
-//! Run (artifacts required):
+//! Run:
 //!   cargo run --release --example pretrain_gpt2 -- \
-//!       [--config e2e-small] [--steps 300] [--smax 0.8] [--dense-control]
+//!       [--config e2e-small] [--steps 300] [--smax 0.8] [--dense-control] \
+//!       [--backend native|aot]
 //!
-//! `--config e2e-small` is a ~29M-parameter 8-layer model (seq 256); the
-//! ~98M `e2e-100m` twin is available after `make artifacts-full`. Default
-//! uses `gpt2s-sim` (4.2M) so the example finishes in minutes on 1 CPU.
+//! `--config e2e-small` is a ~29M-parameter 8-layer model (seq 256).
+//! Default uses `gpt2s-sim` (4.2M) so the example finishes in minutes on
+//! 1 CPU.
 
 use anyhow::Result;
 
-use blast::runtime::Runtime;
 use blast::train::pretrain::{PretrainOptions, Trainer};
 use blast::util::cli::Args;
 
@@ -24,8 +26,8 @@ fn main() -> Result<()> {
     let args = Args::parse();
     let config = args.get_str("config", "gpt2s-sim");
     let steps = args.get_usize("steps", 300);
-    let rt = Runtime::open_default()?;
-
+    let backend = args.get_str("backend", "native");
+    let rt = blast::train::pretrain::open_backend_runtime(&backend)?;
     let opts = PretrainOptions {
         total_iters: steps,
         s_max: args.get_f64("smax", 0.8),
@@ -36,11 +38,11 @@ fn main() -> Result<()> {
         ..Default::default()
     };
     println!(
-        "pretraining {config} for {steps} steps (s_max={}, step_size={}, d={}, L={})",
+        "pretraining {config} for {steps} steps (backend={backend}, s_max={}, step_size={}, d={}, L={})",
         opts.s_max, opts.step_size, opts.decay, opts.dense_right
     );
 
-    let mut trainer = Trainer::new(&rt, &config, opts.clone())?;
+    let mut trainer = Trainer::from_backend(rt.as_ref(), &config, opts.clone())?;
     let t0 = std::time::Instant::now();
     let mut next_report = 0usize;
     for i in 0..steps {
@@ -83,7 +85,7 @@ fn main() -> Result<()> {
             s_max: 0.0,
             ..opts
         };
-        let mut dense = Trainer::new(&rt, &config, dense_opts)?;
+        let mut dense = Trainer::from_backend(rt.as_ref(), &config, dense_opts)?;
         let t1 = std::time::Instant::now();
         dense.run(steps)?;
         let dppl = dense.eval_perplexity(8)?;

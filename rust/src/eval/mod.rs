@@ -11,6 +11,7 @@
 //! | kernels | seed-vs-packed A/B → BENCH_kernels.json   | [`kernel_exps`]   |
 //! | serve | batched-vs-seq decode → BENCH_serve.json   | [`serve_exps`]    |
 //! | attention | tiled/paged attention A/B + KV memory → BENCH_attention.json | [`attention_exps`] |
+//! | pretrain | dense-vs-sparse train step A/B → BENCH_pretrain.json | [`pretrain_exps`] |
 //! | fig4  | BSpMM kernel speedup sweep                 | [`kernel_exps`]   |
 //! | fig5  | Llama-family MLP speedup                   | [`kernel_exps`]   |
 //! | fig6  | end-to-end inference speedup               | [`kernel_exps`]   |
@@ -38,8 +39,8 @@ use anyhow::{bail, Result};
 use crate::util::cli::Args;
 
 pub const ALL: &[&str] = &[
-    "kernels", "serve", "attention", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2",
-    "fig8", "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
+    "kernels", "serve", "attention", "pretrain", "fig4", "fig5", "fig6", "fig7", "tab1",
+    "tab2", "fig8", "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
 ];
 
 /// Dispatch one experiment by id.
@@ -48,6 +49,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "kernels" => kernel_exps::kernels(args),
         "serve" => serve_exps::serve(args),
         "attention" => attention_exps::attention(args),
+        "pretrain" => pretrain_exps::pretrain_ab(args),
         "fig4" => kernel_exps::fig4(args),
         "fig5" => kernel_exps::fig5(args),
         "fig6" => kernel_exps::fig6(args),

@@ -38,7 +38,7 @@
 use crate::kernels::gemm::axpy;
 use crate::kernels::microkernel::microkernel;
 use crate::kernels::pack::pack_a_panel;
-use crate::sparse::Bcsc;
+use crate::sparse::{Bcsc, BlockMask};
 use crate::tensor::Tensor;
 use crate::util::{scratch, threadpool};
 
@@ -169,6 +169,90 @@ pub fn bspmm_into_ref(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
                         axpy(xv, &blk[kk * b..kk * b + b], yrow);
                     }
                 }
+            }
+        }
+    });
+}
+
+/// Block-masked weight-gradient accumulator: `dW += Xᵀ · dY` restricted to
+/// the **resident** blocks of `mask` — the backward half of the paper's
+/// sparsity win. Pruned blocks cost nothing (no FLOPs, no loads, no
+/// writes), so the `1/(1-s)` speedup of the forward BSpMM carries over to
+/// `dW`; and because `W_eff = W ⊙ expand(M)`, the true gradient *is* zero
+/// outside resident blocks, so skipping them is exact, not approximate.
+///
+/// `x` is `(m × k)`, `dy` is `(m × n)` row-major; `dw` is the dense
+/// `(k × n)` gradient — only resident blocks are touched, everything else
+/// keeps its incoming value (zeros from the caller give exactly-masked
+/// gradients, the `G_i` the prune-and-grow controller consumes).
+///
+/// Layout: one depth-`m` k-major panel per block-row of `Xᵀ`
+/// (`xp[br][d*b + r] = x[d*k + br*b + r]` — contiguous per depth step) and
+/// one per block-column of `dY`, each packed once; every resident block
+/// then runs a single `b×b` micro-kernel over the full depth `m` and
+/// writes its `dW` tile back once. Resident blocks all cost the same
+/// (`2·m·b²` FLOPs), so a plain index grab over the resident list
+/// load-balances.
+pub fn bspmm_dw_masked_into(
+    x: &[f32],
+    dy: &[f32],
+    mask: &BlockMask,
+    block: usize,
+    dw: &mut [f32],
+    m: usize,
+) {
+    let b = block;
+    let (k, n) = (mask.rb * b, mask.cb * b);
+    assert_eq!(x.len(), m * k, "bspmm_dw: x {} != {m}x{k}", x.len());
+    assert_eq!(dy.len(), m * n, "bspmm_dw: dy {} != {m}x{n}", dy.len());
+    assert_eq!(dw.len(), k * n, "bspmm_dw: dw {} != {k}x{n}", dw.len());
+    if m == 0 || mask.nnzb() == 0 {
+        return;
+    }
+    // Phase 1: pack Xᵀ block-row panels and dY block-column panels, m-deep.
+    let mut xp = scratch::take_uninit(m * k);
+    threadpool::parallel_chunks_mut(&mut xp, m * b, |br, chunk| {
+        for d in 0..m {
+            chunk[d * b..(d + 1) * b].copy_from_slice(&x[d * k + br * b..d * k + (br + 1) * b]);
+        }
+    });
+    let mut dyp = scratch::take_uninit(m * n);
+    threadpool::parallel_chunks_mut(&mut dyp, m * b, |bc, chunk| {
+        for d in 0..m {
+            chunk[d * b..(d + 1) * b].copy_from_slice(&dy[d * n + bc * b..d * n + (bc + 1) * b]);
+        }
+    });
+    // Phase 2: one b×b micro-kernel per resident block, depth m.
+    let resident: Vec<(usize, usize)> = (0..mask.rb)
+        .flat_map(|br| (0..mask.cb).map(move |bc| (br, bc)))
+        .filter(|&(br, bc)| mask.get(br, bc))
+        .collect();
+    let dw_base = dw.as_mut_ptr() as usize;
+    let xp_ref: &[f32] = &xp;
+    let dyp_ref: &[f32] = &dyp;
+    threadpool::parallel_for(resident.len(), |t| {
+        let (br, bc) = resident[t];
+        let mut tile = scratch::take_zeroed(b * b);
+        microkernel(
+            &xp_ref[br * m * b..(br + 1) * m * b],
+            b,
+            b,
+            &dyp_ref[bc * m * b..(bc + 1) * m * b],
+            b,
+            b,
+            m,
+            &mut tile,
+            b,
+        );
+        // SAFETY: each resident block owns the disjoint dW span
+        // dw[br*b+i, bc*b..bc*b+b]; parallel_for blocks until done.
+        let dw_ptr = dw_base as *mut f32;
+        for i in 0..b {
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(dw_ptr.add((br * b + i) * n + bc * b), b)
+            };
+            for (d, s) in dst.iter_mut().zip(&tile[i * b..(i + 1) * b]) {
+                *d += *s;
             }
         }
     });
@@ -512,6 +596,75 @@ mod tests {
         // wrong: (f, e) should be (32, 16)
         let w3 = Bcsc::from_dense(&Tensor::randn(&[24, 16], 0.3, &mut rng), &BlockMask::ones(3, 2), b);
         let _ = gelu_mlp_sparse(&x, &w1, &w3);
+    }
+
+    #[test]
+    fn dw_masked_matches_masked_dense_oracle() {
+        prop::check_default("bspmm-dw-vs-masked-gemm", |rng| {
+            let b = *prop::pick(rng, &[4, 8, 16, 32]);
+            let rb = prop::usize_in(rng, 1, 4);
+            let cb = prop::usize_in(rng, 1, 4);
+            let m = prop::usize_in(rng, 1, 24);
+            let x = Tensor::randn(&[m, rb * b], 1.0, rng);
+            let dy = Tensor::randn(&[m, cb * b], 1.0, rng);
+            let mask = BlockMask::random(rb, cb, rng.f64(), rng);
+            let mut dw = Tensor::zeros(&[rb * b, cb * b]);
+            bspmm_dw_masked_into(x.data(), dy.data(), &mask, b, dw.data_mut(), m);
+            // oracle: dense Xᵀ·dY with the mask applied afterwards
+            let mut want = gemm_naive(&x.transpose2(), &dy);
+            mask.apply_to(want.data_mut(), b);
+            let diff = dw.max_abs_diff(&want);
+            prop_assert!(diff < 1e-3, "diff {diff} (b={b} rb={rb} cb={cb} m={m})");
+            // the acceptance-gate invariant: *exactly* zero outside residents
+            for br in 0..rb {
+                for bc in 0..cb {
+                    if !mask.get(br, bc) {
+                        for i in 0..b {
+                            for j in 0..b {
+                                prop_assert!(
+                                    dw.at2(br * b + i, bc * b + j) == 0.0,
+                                    "nonzero outside resident block ({br},{bc})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dw_masked_accumulates_and_handles_edges() {
+        let mut rng = Rng::new(8);
+        let (b, m) = (8, 11);
+        let x = Tensor::randn(&[m, 2 * b], 1.0, &mut rng);
+        let dy = Tensor::randn(&[m, 3 * b], 1.0, &mut rng);
+        let mask = BlockMask::random(2, 3, 0.4, &mut rng);
+        // accumulation: pre-filled resident entries gain the product
+        let mut dw = Tensor::full(&[2 * b, 3 * b], 1.0);
+        bspmm_dw_masked_into(x.data(), dy.data(), &mask, b, dw.data_mut(), m);
+        let mut prod = gemm_naive(&x.transpose2(), &dy);
+        mask.apply_to(prod.data_mut(), b);
+        for r in 0..2 * b {
+            for c in 0..3 * b {
+                let want = 1.0 + prod.at2(r, c);
+                assert!((dw.at2(r, c) - want).abs() < 1e-3, "({r},{c})");
+            }
+        }
+        // m == 0 and fully-pruned masks are no-ops
+        let mut dw0 = Tensor::zeros(&[2 * b, 3 * b]);
+        bspmm_dw_masked_into(&[], &[], &mask, b, dw0.data_mut(), 0);
+        assert!(dw0.allclose(&Tensor::zeros(&[2 * b, 3 * b]), 0.0));
+        bspmm_dw_masked_into(
+            x.data(),
+            dy.data(),
+            &BlockMask::zeros(2, 3),
+            b,
+            dw0.data_mut(),
+            m,
+        );
+        assert!(dw0.allclose(&Tensor::zeros(&[2 * b, 3 * b]), 0.0));
     }
 
     #[test]

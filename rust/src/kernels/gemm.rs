@@ -111,6 +111,76 @@ pub fn gemm_packed_into(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize) {
     });
 }
 
+/// `C += A · Bᵀ` over raw row-major slices — the backward-pass
+/// *data-gradient* GEMM (`dX = dY · Wᵀ` with `W` stored un-transposed).
+/// `a` is `(m × k)`, `b` is `(n × k)` row-major, `c` is `(m × n)`.
+///
+/// `B` is packed straight from its transposed layout
+/// ([`PackedB::pack_transposed`]: a blocked-transpose sweep, no
+/// materialized `Bᵀ`), then the packed micro-kernel path runs unchanged.
+pub fn gemm_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let packed = PackedB::pack_transposed(b, n, k);
+    gemm_packed_into(a, &packed, c, m);
+}
+
+/// `C += Aᵀ · B` over raw row-major slices — the backward-pass
+/// *weight-gradient* GEMM (`dW = Xᵀ · dY`). `a` is `(m × k)` (its
+/// transpose `(k × m)` is the left operand), `b` is `(m × n)`, `c` is
+/// `(k × n)`.
+///
+/// The trick that keeps this on the packed micro-kernel without a strided
+/// gather: a k-major panel of `Aᵀ` rows `i0..i1` is
+/// `ap[d*mr + r] = a[d*k + i0 + r]` — for each depth step `d` that is one
+/// **contiguous** slice of row `d` of `A`, so the pack is a clean blocked
+/// copy. `B` (depth `m`) packs once per call and is streamed by every row
+/// tile.
+pub fn gemm_tn_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let packed = PackedB::pack(b, m, n);
+    let n_tiles = k.div_ceil(MR);
+    let c_base = c.as_mut_ptr() as usize;
+    threadpool::parallel_for(n_tiles, |t| {
+        let i0 = t * MR;
+        let i1 = (i0 + MR).min(k);
+        let mr = i1 - i0;
+        // k-major Aᵀ tile: contiguous reads per depth step (see above)
+        let mut ap = scratch::take_uninit(mr * m);
+        for d in 0..m {
+            ap[d * mr..(d + 1) * mr].copy_from_slice(&a[d * k + i0..d * k + i1]);
+        }
+        // SAFETY: tiles own disjoint row ranges of C; parallel_for blocks
+        // until all tasks finish, so the borrow outlives the tasks.
+        let c_tile = unsafe {
+            std::slice::from_raw_parts_mut((c_base as *mut f32).add(i0 * n), mr * n)
+        };
+        for p in 0..packed.panels() {
+            let cols = packed.panel_cols(p);
+            microkernel(
+                &ap,
+                mr,
+                mr,
+                packed.panel(p),
+                packed.nr,
+                cols,
+                m,
+                &mut c_tile[p * packed.nr..],
+                n,
+            );
+        }
+    });
+}
+
 /// The seed kernel: parallel row tiles, `NC`-column C panels, scalar-axpy
 /// inner loop over strided operands. Kept as the A/B baseline for
 /// `BENCH_kernels.json` and as the small-`m` fallback.
@@ -238,6 +308,65 @@ mod tests {
             prop_assert!(diff < 1e-3, "diff {diff} at m={m} k={k} n={n}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn nt_matches_naive_on_explicit_transpose() {
+        prop::check_default("gemm-nt-vs-naive", |rng| {
+            let m = *prop::pick(rng, &[1, 2, 15, 16, 17, 33]);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 40);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[n, k], 1.0, rng);
+            let mut c = Tensor::zeros(&[m, n]);
+            gemm_nt_into(a.data(), b.data(), c.data_mut(), m, k, n);
+            let want = gemm_naive(&a, &b.transpose2());
+            let diff = c.max_abs_diff(&want);
+            prop_assert!(diff < 1e-3, "diff {diff} at m={m} k={k} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tn_matches_naive_on_explicit_transpose() {
+        prop::check_default("gemm-tn-vs-naive", |rng| {
+            // m is the contraction depth here; k crosses the MR tiling
+            let m = prop::usize_in(rng, 1, 40);
+            let k = *prop::pick(rng, &[1, 2, 15, 16, 17, 33]);
+            let n = prop::usize_in(rng, 1, 40);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[m, n], 1.0, rng);
+            let mut c = Tensor::zeros(&[k, n]);
+            gemm_tn_into(a.data(), b.data(), c.data_mut(), m, k, n);
+            let want = gemm_naive(&a.transpose2(), &b);
+            let diff = c.max_abs_diff(&want);
+            prop_assert!(diff < 1e-3, "diff {diff} at m={m} k={k} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nt_tn_accumulate_and_empty_dims() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let mut c = Tensor::full(&[6, 5], 1.0);
+        gemm_nt_into(a.data(), b.data(), c.data_mut(), 6, 4, 5);
+        let mut want = gemm_naive(&a, &b.transpose2());
+        want.add_inplace(&Tensor::full(&[6, 5], 1.0));
+        assert!(c.allclose(&want, 1e-4));
+        let b2 = Tensor::randn(&[6, 3], 1.0, &mut rng);
+        let mut c2 = Tensor::full(&[4, 3], 2.0);
+        gemm_tn_into(a.data(), b2.data(), c2.data_mut(), 6, 4, 3);
+        let mut want2 = gemm_naive(&a.transpose2(), &b2);
+        want2.add_inplace(&Tensor::full(&[4, 3], 2.0));
+        assert!(c2.allclose(&want2, 1e-4));
+        // empty dims are no-ops
+        gemm_nt_into(&[], &[], &mut [], 0, 0, 0);
+        gemm_tn_into(&[], &[], &mut [], 0, 0, 0);
+        let mut c3 = Tensor::full(&[2, 3], 5.0);
+        gemm_tn_into(&[], &[], c3.data_mut(), 0, 2, 3);
+        assert!(c3.allclose(&Tensor::full(&[2, 3], 5.0), 0.0));
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Element-wise and row-wise operators for the native engine: activations,
-//! softmax, RMSNorm/LayerNorm, RoPE. The fused variants live next to the
-//! contractions in [`super::bspmm`]; these standalone forms serve the
-//! attention path and the unfused baselines in the ablation benches.
+//! softmax, RMSNorm/LayerNorm, RoPE — forward *and* backward. The fused
+//! variants live next to the contractions in [`super::bspmm`]; these
+//! standalone forms serve the attention path, the unfused baselines in the
+//! ablation benches, and the native training backend
+//! ([`crate::train::native`]), whose backward pass chains the `*_bwd`
+//! operators here between the packed backward GEMMs.
 
 #[inline(always)]
 pub fn silu(x: f32) -> f32 {
@@ -13,6 +16,32 @@ pub fn gelu(x: f32) -> f32 {
     // tanh approximation — matches jax.nn.gelu(approximate=True) / ref.py
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Derivative of [`silu`]: `σ(x) · (1 + x · (1 − σ(x)))`.
+#[inline(always)]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Derivative of the tanh-approximated [`gelu`].
+#[inline(always)]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    const A: f32 = 0.044715;
+    let t = (C * (x + A * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
+}
+
+/// Fused GeLU backward over a hidden tile: `dh[i] *= gelu'(h[i])` — the
+/// epilogue of the MLP backward chain (`dh = dAct ∘ gelu'(h)`), applied in
+/// place on the cache-resident gradient tile.
+pub fn gelu_bwd_inplace(h: &[f32], dh: &mut [f32]) {
+    debug_assert_eq!(h.len(), dh.len());
+    for (d, &x) in dh.iter_mut().zip(h.iter()) {
+        *d *= gelu_grad(x);
+    }
 }
 
 /// In-place softmax over a row.
@@ -63,6 +92,69 @@ pub fn rope_inplace(x: &mut [f32], pos: usize, theta: f32) {
         let b = x[i + half];
         x[i] = a * cos - b * sin;
         x[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Transpose (inverse) rotation of [`rope_inplace`] — backprop through
+/// RoPE. The forward is an orthogonal per-pair rotation, so the Jacobian
+/// transpose is the rotation by `-angle`; applying this to the gradient of
+/// a post-RoPE vector yields the gradient of the pre-RoPE vector.
+pub fn rope_bwd_inplace(x: &mut [f32], pos: usize, theta: f32) {
+    let hd = x.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let a = x[i];
+        let b = x[i + half];
+        x[i] = a * cos + b * sin;
+        x[i + half] = -a * sin + b * cos;
+    }
+}
+
+/// LayerNorm backward for one row. Forward: `y = (x − μ)/σ · g` (see
+/// [`layernorm`]). Given `dy`, **accumulates** `dL/dx` into `dx` and
+/// `dL/dg` into `dg` (callers zero the buffers once per pass and sum over
+/// rows for the gain gradient).
+pub fn layernorm_bwd(x: &[f32], g: &[f32], dy: &[f32], dx: &mut [f32], dg: &mut [f32], eps: f32) {
+    let n = x.len() as f32;
+    let mu = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let r = 1.0 / (var + eps).sqrt();
+    // dyh = dy ∘ g; dx = r · (dyh − mean(dyh) − x̂ · mean(dyh ∘ x̂))
+    let mut mean_dyh = 0.0f32;
+    let mut mean_dyh_xhat = 0.0f32;
+    for i in 0..x.len() {
+        let xhat = (x[i] - mu) * r;
+        let dyh = dy[i] * g[i];
+        mean_dyh += dyh;
+        mean_dyh_xhat += dyh * xhat;
+        dg[i] += dy[i] * xhat;
+    }
+    mean_dyh /= n;
+    mean_dyh_xhat /= n;
+    for i in 0..x.len() {
+        let xhat = (x[i] - mu) * r;
+        dx[i] += r * (dy[i] * g[i] - mean_dyh - xhat * mean_dyh_xhat);
+    }
+}
+
+/// RMSNorm backward for one row. Forward: `y = x · rsqrt(mean(x²)+eps) · g`
+/// (see [`rmsnorm`]). Accumulates `dL/dx` into `dx` and `dL/dg` into `dg`.
+pub fn rmsnorm_bwd(x: &[f32], g: &[f32], dy: &[f32], dx: &mut [f32], dg: &mut [f32], eps: f32) {
+    let n = x.len() as f32;
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / n;
+    let r = 1.0 / (ms + eps).sqrt();
+    // dx_j = r·dy_j·g_j − (r³/n · Σ_i dy_i g_i x_i) · x_j
+    let mut dot = 0.0f32;
+    for i in 0..x.len() {
+        dot += dy[i] * g[i] * x[i];
+        dg[i] += dy[i] * x[i] * r;
+    }
+    let c = r * r * r / n * dot;
+    for i in 0..x.len() {
+        dx[i] += r * dy[i] * g[i] - c * x[i];
     }
 }
 
@@ -129,5 +221,101 @@ mod tests {
         assert!((silu(10.0) - 10.0).abs() < 1e-3);
         assert!((gelu(10.0) - 10.0).abs() < 1e-3);
         assert!(gelu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn activation_grads_match_finite_differences() {
+        let eps = 1e-3f32;
+        for i in -20..=20 {
+            let x = i as f32 * 0.25;
+            let fd_g = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!(
+                (fd_g - gelu_grad(x)).abs() < 1e-3,
+                "gelu'({x}): fd {fd_g} vs {}",
+                gelu_grad(x)
+            );
+            let fd_s = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!(
+                (fd_s - silu_grad(x)).abs() < 1e-3,
+                "silu'({x}): fd {fd_s} vs {}",
+                silu_grad(x)
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_bwd_inplace_applies_derivative() {
+        let h = vec![-2.0f32, -0.5, 0.0, 0.7, 3.0];
+        let mut dh = vec![1.0f32; 5];
+        gelu_bwd_inplace(&h, &mut dh);
+        for (i, &x) in h.iter().enumerate() {
+            assert!((dh[i] - gelu_grad(x)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn rope_bwd_is_inverse_rotation() {
+        let orig = vec![1.0f32, -2.0, 0.5, 3.0, -0.25, 1.5];
+        let mut x = orig.clone();
+        rope_inplace(&mut x, 23, 10000.0);
+        rope_bwd_inplace(&mut x, 23, 10000.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    /// Numeric check of both norm backward rules: perturb each input
+    /// coordinate and compare `⟨dy, Δy⟩/ε` against the analytic `dx`.
+    #[test]
+    fn norm_backward_matches_finite_differences() {
+        let x = vec![0.3f32, -1.2, 2.0, 0.05, -0.7, 1.4];
+        let g = vec![1.1f32, 0.9, -0.5, 1.3, 0.2, 1.0];
+        let dy = vec![0.25f32, -1.0, 0.5, 0.8, -0.3, 0.1];
+        let n = x.len();
+        let eps = 1e-3f32;
+        for kind in [0, 1] {
+            let fwd = |xx: &[f32], out: &mut [f32]| {
+                if kind == 0 {
+                    layernorm(xx, &g, out, 1e-5)
+                } else {
+                    rmsnorm(xx, &g, out, 1e-5)
+                }
+            };
+            let mut dx = vec![0.0f32; n];
+            let mut dg = vec![0.0f32; n];
+            if kind == 0 {
+                layernorm_bwd(&x, &g, &dy, &mut dx, &mut dg, 1e-5);
+            } else {
+                rmsnorm_bwd(&x, &g, &dy, &mut dx, &mut dg, 1e-5);
+            }
+            let mut yp = vec![0.0f32; n];
+            let mut ym = vec![0.0f32; n];
+            for j in 0..n {
+                let mut xp = x.clone();
+                xp[j] += eps;
+                let mut xm = x.clone();
+                xm[j] -= eps;
+                fwd(&xp, &mut yp);
+                fwd(&xm, &mut ym);
+                let fd: f32 = yp
+                    .iter()
+                    .zip(&ym)
+                    .zip(&dy)
+                    .map(|((a, b), d)| d * (a - b) / (2.0 * eps))
+                    .sum();
+                assert!(
+                    (fd - dx[j]).abs() < 2e-3,
+                    "kind {kind} dx[{j}]: fd {fd} vs {}",
+                    dx[j]
+                );
+            }
+            // gain gradient: dg[j] = dy[j] * normalized(x)[j]
+            let mut y1 = vec![0.0f32; n];
+            fwd(&x, &mut y1);
+            for j in 0..n {
+                let want = dy[j] * y1[j] / g[j];
+                assert!((dg[j] - want).abs() < 1e-4, "kind {kind} dg[{j}]");
+            }
+        }
     }
 }

@@ -104,6 +104,47 @@ impl PackedB {
         PackedB { k, n, nr: NR, data }
     }
 
+    /// Pack the **transpose** of a row-major `n × k` matrix without
+    /// materializing it: the panels describe the logical `k × n` matrix
+    /// `Bᵀ`, so `gemm_packed_into(A, ·)` computes `A · Bᵀ` — the
+    /// backward-pass data-gradient GEMM (`dX = dY · Wᵀ` with `W` stored
+    /// un-transposed). Blocked four source rows at a time (the
+    /// [`pack_kt_panel`] scheme): each depth step writes four consecutive
+    /// panel entries from four streamed rows of `b`.
+    pub fn pack_transposed(b: &[f32], n: usize, k: usize) -> PackedB {
+        assert_eq!(b.len(), n * k, "pack_transposed: {} != {n}x{k}", b.len());
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; panels * k * NR];
+        if n > 0 && k > 0 {
+            threadpool::parallel_chunks_mut(&mut data, k * NR, |p, chunk| {
+                let j0 = p * NR;
+                let cols = (n - j0).min(NR);
+                let mut j = 0;
+                while j + 4 <= cols {
+                    let s0 = &b[(j0 + j) * k..(j0 + j + 1) * k];
+                    let s1 = &b[(j0 + j + 1) * k..(j0 + j + 2) * k];
+                    let s2 = &b[(j0 + j + 2) * k..(j0 + j + 3) * k];
+                    let s3 = &b[(j0 + j + 3) * k..(j0 + j + 4) * k];
+                    for kk in 0..k {
+                        let o = &mut chunk[kk * NR + j..kk * NR + j + 4];
+                        o[0] = s0[kk];
+                        o[1] = s1[kk];
+                        o[2] = s2[kk];
+                        o[3] = s3[kk];
+                    }
+                    j += 4;
+                }
+                for jj in j..cols {
+                    let s = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
+                    for kk in 0..k {
+                        chunk[kk * NR + jj] = s[kk];
+                    }
+                }
+            });
+        }
+        PackedB { k, n, nr: NR, data }
+    }
+
     /// Number of column panels.
     pub fn panels(&self) -> usize {
         self.n.div_ceil(self.nr)
@@ -185,6 +226,27 @@ mod tests {
                         );
                     }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_transposed_matches_pack_of_explicit_transpose() {
+        prop::check_default("packedb-transposed", |rng| {
+            // n crosses the 4-row blocked body, the remainder and panel tails
+            let n = prop::usize_in(rng, 1, 2 * NR + 7);
+            let k = prop::usize_in(rng, 1, 24);
+            let b = Tensor::randn(&[n, k], 1.0, rng);
+            let via_t = PackedB::pack(b.transpose2().data(), k, n);
+            let direct = PackedB::pack_transposed(b.data(), n, k);
+            prop_assert!(direct.k == k && direct.n == n, "logical shape");
+            prop_assert!(direct.panels() == via_t.panels(), "panel count");
+            for p in 0..direct.panels() {
+                prop_assert!(
+                    direct.panel(p) == via_t.panel(p),
+                    "panel {p} differs (n={n} k={k})"
+                );
             }
             Ok(())
         });

@@ -3,9 +3,12 @@
 //! Subcommands:
 //!
 //! * `blast info` — show the artifact manifest (configs, entries).
-//! * `blast train --config gpt2s-sim --steps 200 [--smax 0.8 ...]` —
-//!   pretrain a twin with blocked prune-and-grow; optionally save a
-//!   checkpoint.
+//! * `blast train --config gpt2s-sim --steps 200 [--smax 0.8
+//!   --backend native|aot ...]` — pretrain a twin with blocked
+//!   prune-and-grow; optionally save a checkpoint. The default `native`
+//!   backend runs forward + backward + Adam on the packed kernel stack
+//!   (no artifacts needed); `aot` drives the PJRT `train_step`
+//!   executables.
 //! * `blast serve [--sparsity 0.9 --block 128 --batched false --kv-page 64
 //!   --kv-pool-pages 0 ...]` — run the continuous-batching inference
 //!   coordinator over the native sparse engine with a synthetic client
@@ -14,13 +17,15 @@
 //!   sequential GEMV baseline; KV is paged (`--kv-page` positions per
 //!   page) from a shared pool (`--kv-pool-pages`, 0 = unbounded) that
 //!   admission is gated on.
-//! * `blast exp <kernels|serve|attention|fig4..fig11|tab1..tab6|all>` —
-//!   regenerate a paper table/figure or an A/B harness (DESIGN.md §5);
-//!   `kernels`, `serve` and `attention` write the BENCH_*.json
-//!   perf-trajectory files.
+//! * `blast exp <kernels|serve|attention|pretrain|fig4..fig11|tab1..tab6|all>`
+//!   — regenerate a paper table/figure or an A/B harness (DESIGN.md §5);
+//!   `kernels`, `serve`, `attention` and `pretrain` write the
+//!   BENCH_*.json perf-trajectory files. The pretraining families
+//!   (tab2/fig8/tab4–6/fig10–11) run on the native backend by default and
+//!   accept `--backend aot`.
 //!
-//! Python never runs here: all model graphs were AOT-compiled by
-//! `make artifacts`.
+//! Python never runs on the request path; `make artifacts` is only needed
+//! for the optional AOT backend and the classifier experiments.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -65,11 +70,14 @@ fn print_help() {
     println!(
         "blast — BLock Sparse Transformers (paper reproduction)\n\n\
          USAGE:\n  blast info\n  blast train --config <name> [--steps N --smax S --step-size K \\\n\
-         \x20            --decay D --dense-right L --block-mult M --save ckpt.bin]\n\
+         \x20            --decay D --dense-right L --block-mult M --save ckpt.bin \\\n\
+         \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
          \x20             --kv-page P --kv-pool-pages M]\n\
-         \x20 blast exp <id> [--steps N --quick ...]   ids: {:?} or 'all'\n\n\
-         Artifacts must exist (run `make artifacts`).",
+         \x20 blast exp <id> [--steps N --quick --backend native|aot ...]   ids: {:?} or 'all'\n\n\
+         Training and the pretraining experiments run natively by default;\n\
+         `--backend aot` and the classifier experiments need `make artifacts`\n\
+         plus a `--features pjrt` build.",
         eval::ALL
     );
 }
@@ -99,7 +107,6 @@ fn run_info(_args: &Args) -> Result<()> {
 }
 
 fn run_train(args: &Args) -> Result<()> {
-    let rt = Runtime::open_default()?;
     let config = args.get_str("config", "gpt2s-sim");
     let steps = args.get_usize("steps", 200);
     let opts = PretrainOptions {
@@ -114,7 +121,11 @@ fn run_train(args: &Args) -> Result<()> {
         branching: args.get_usize("branching", 8),
         block_mult: args.get_usize("block-mult", 1),
     };
-    let mut trainer = Trainer::new(&rt, &config, opts)?;
+    // native (packed-kernel fwd+bwd+Adam) is the default; `--backend aot`
+    // selects the PJRT executables (pjrt feature + artifacts required)
+    let rt = blast::train::pretrain::open_backend_runtime(&args.get_str("backend", "native"))?;
+    let mut trainer = Trainer::from_backend(rt.as_ref(), &config, opts)?;
+    println!("backend: {}", trainer.backend_name());
     let t0 = std::time::Instant::now();
     trainer.run(steps)?;
     let ppl = trainer.eval_perplexity(args.get_usize("eval-batches", 8))?;

@@ -85,6 +85,126 @@ impl NativeConfig {
     }
 }
 
+/// Build the full [`ConfigInfo`] (positional parameter ABI, mask spec,
+/// MLP-weight list) of one LM twin — the Rust mirror of
+/// `python/compile/model.py::_lm_param_spec`, so the native training
+/// backend and the AOT graphs agree on names, shapes and order. Public so
+/// tests and benches can construct ad-hoc twins; the named catalog is
+/// [`sim_config`].
+#[allow(clippy::too_many_arguments)] // a geometry record, mirrored from aot.py
+pub fn lm_config_info(
+    name: &str,
+    kind: &str,
+    vocab: usize,
+    emb: usize,
+    ffn: usize,
+    layers: usize,
+    heads: usize,
+    seq: usize,
+    batch: usize,
+    block: usize,
+    lr: f64,
+    paper_equiv: &str,
+) -> ConfigInfo {
+    let (e, f, v) = (emb, ffn, vocab);
+    let mut params: Vec<(String, Vec<usize>)> = vec![("tok_emb".into(), vec![v, e])];
+    if kind == "gpt2" {
+        params.push(("pos_emb".into(), vec![seq, e]));
+    }
+    let mut mlp_weights = Vec::new();
+    for i in 0..layers {
+        let p = |s: &str| format!("layer{i}.{s}");
+        params.push((p("ln1"), vec![e]));
+        for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+            params.push((p(w), vec![e, e]));
+        }
+        params.push((p("ln2"), vec![e]));
+        params.push((p("mlp.w1"), vec![e, f]));
+        mlp_weights.push(p("mlp.w1"));
+        if kind == "llama" {
+            params.push((p("mlp.w2"), vec![e, f]));
+            mlp_weights.push(p("mlp.w2"));
+        }
+        params.push((p("mlp.w3"), vec![f, e]));
+        mlp_weights.push(p("mlp.w3"));
+    }
+    params.push(("final_norm".into(), vec![e]));
+    params.push(("lm_head".into(), vec![e, v]));
+    let masks = mlp_weights
+        .iter()
+        .map(|n| {
+            let shape = params.iter().find(|(pn, _)| pn == n).unwrap().1.clone();
+            assert!(shape[0] % block == 0 && shape[1] % block == 0);
+            (n.clone(), vec![shape[0] / block, shape[1] / block])
+        })
+        .collect();
+    let param_count = params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    ConfigInfo {
+        name: name.into(),
+        kind: kind.into(),
+        vocab,
+        emb,
+        ffn,
+        layers,
+        heads,
+        head_dim: emb / heads,
+        seq,
+        batch,
+        block,
+        num_classes: 0,
+        patch_dim: 0,
+        lr,
+        param_count,
+        paper_equiv: paper_equiv.into(),
+        params,
+        masks,
+        mlp_weights,
+    }
+}
+
+/// Names the built-in twin catalog answers to (see [`sim_config`]).
+pub const SIM_CONFIGS: &[&str] = &[
+    "micro",
+    "micro-llama",
+    "gpt2s-sim",
+    "gpt2s-sim-b1",
+    "gpt2s-sim-b16",
+    "llama-sim",
+    "e2e-small",
+];
+
+/// The built-in LM twin catalog — the same geometries
+/// `python/compile/aot.py` registers (`CONFIGS` + `LEARNING_RATES`),
+/// reproduced natively so the training path does not need `make
+/// artifacts`: `Trainer::new_native` resolves configs here instead of the
+/// AOT manifest. ViT/GLUE twins are manifest-only (the classifier trainer
+/// stays on the AOT backend).
+pub fn sim_config(name: &str) -> Option<ConfigInfo> {
+    let c = match name {
+        "micro" => lm_config_info("micro", "gpt2", 256, 64, 128, 2, 2, 32, 2, 32, 1e-3, "GPT2-small"),
+        "micro-llama" => {
+            lm_config_info("micro-llama", "llama", 256, 64, 128, 2, 2, 32, 2, 32, 1e-3, "Llama-3.2-1B")
+        }
+        "gpt2s-sim" => {
+            lm_config_info("gpt2s-sim", "gpt2", 2048, 256, 1024, 4, 4, 128, 8, 32, 6e-4, "GPT2-small")
+        }
+        "gpt2s-sim-b1" => {
+            lm_config_info("gpt2s-sim-b1", "gpt2", 2048, 256, 1024, 4, 4, 128, 8, 1, 6e-4, "GPT2-small")
+        }
+        "gpt2s-sim-b16" => {
+            lm_config_info("gpt2s-sim-b16", "gpt2", 2048, 256, 1024, 4, 4, 128, 8, 16, 6e-4, "GPT2-small")
+        }
+        "llama-sim" => {
+            lm_config_info("llama-sim", "llama", 2048, 256, 1024, 4, 4, 128, 8, 32, 6e-4, "Llama-3.2-1B")
+        }
+        "e2e-small" => {
+            lm_config_info("e2e-small", "gpt2", 4096, 512, 2048, 8, 8, 256, 4, 64, 3e-4, "GPT2-medium")
+        }
+        _ => return None,
+    };
+    Some(c)
+}
+
 /// A real model geometry from the paper's evaluation (Figs. 5/7).
 #[derive(Clone, Debug)]
 pub struct PaperGeometry {
@@ -158,6 +278,32 @@ mod tests {
         assert!(l405.mlp_params() as f64 > 0.7 * l405.total_params());
         let g = paper_geometry("GPT2-small");
         assert_eq!(g.mlp_params_per_layer(), 2 * 768 * 3072);
+    }
+
+    #[test]
+    fn sim_catalog_matches_aot_geometry() {
+        for name in SIM_CONFIGS {
+            let c = sim_config(name).unwrap();
+            assert_eq!(&c.name, name);
+            // every mask grid divides its weight and the mlp list is in
+            // ABI (layer) order
+            for (mname, shape) in &c.masks {
+                let w = c.param_shape(mname).unwrap();
+                assert_eq!(shape[0] * c.block, w[0], "{name}/{mname}");
+                assert_eq!(shape[1] * c.block, w[1], "{name}/{mname}");
+            }
+            let per_layer = if c.kind == "llama" { 3 } else { 2 };
+            assert_eq!(c.mlp_weights.len(), per_layer * c.layers, "{name}");
+            // ParamStore::init consumes this spec directly
+            let s = crate::model::params::ParamStore::init(&c, 1);
+            assert_eq!(s.len(), c.params.len());
+            assert_eq!(s.total_elements(), c.param_count);
+        }
+        // the micro twin's geometry is pinned (aot.py: 256/64/128/2/2/32/2/32)
+        let m = sim_config("micro").unwrap();
+        assert_eq!((m.vocab, m.emb, m.ffn), (256, 64, 128));
+        assert_eq!((m.layers, m.heads, m.seq, m.batch, m.block), (2, 2, 32, 2, 32));
+        assert!(sim_config("vit-sim").is_none());
     }
 
     #[test]

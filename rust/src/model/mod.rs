@@ -19,7 +19,9 @@ pub mod engine;
 pub mod kv;
 pub mod params;
 
-pub use config::{paper_catalog, ModelKind, NativeConfig, PaperGeometry};
+pub use config::{
+    lm_config_info, paper_catalog, sim_config, ModelKind, NativeConfig, PaperGeometry, SIM_CONFIGS,
+};
 pub use engine::{Engine, MlpMode};
 pub use kv::{KvCache, KvOptions, KvPagePool, DEFAULT_KV_PAGE};
 pub use params::ParamStore;

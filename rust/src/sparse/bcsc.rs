@@ -104,6 +104,105 @@ impl Bcsc {
         Tensor::new(&[k, n], out)
     }
 
+    /// The BCSC of `Wᵀ`: resident block `(br, bc)` of `W` becomes
+    /// `(bc, br)` with its payload transposed. The native training backend
+    /// runs its backward data-gradient BSpMM (`dX = dY · Wᵀ`) as a
+    /// *forward* BSpMM against this structure, so pruned blocks cost
+    /// nothing in the backward pass either.
+    pub fn transpose(&self) -> Bcsc {
+        let b = self.block;
+        let bb = b * b;
+        // counting sort by source block-row (= destination block-column)
+        let mut col_ptr = vec![0usize; self.rb + 1];
+        for &br in &self.row_idx {
+            col_ptr[br + 1] += 1;
+        }
+        for i in 0..self.rb {
+            col_ptr[i + 1] += col_ptr[i];
+        }
+        let mut row_idx = vec![0usize; self.nnzb()];
+        let mut vals = vec![0.0f32; self.vals.len()];
+        let mut cursor = col_ptr.clone();
+        for bc in 0..self.cb {
+            for idx in self.col_ptr[bc]..self.col_ptr[bc + 1] {
+                let br = self.row_idx[idx];
+                let dst = cursor[br];
+                cursor[br] += 1;
+                // bc ascending within each destination column keeps the
+                // row indices sorted, matching from_dense's invariant
+                row_idx[dst] = bc;
+                let src = &self.vals[idx * bb..(idx + 1) * bb];
+                let dvals = &mut vals[dst * bb..(dst + 1) * bb];
+                for i in 0..b {
+                    for j in 0..b {
+                        dvals[j * b + i] = src[i * b + j];
+                    }
+                }
+            }
+        }
+        Bcsc {
+            block: b,
+            rb: self.cb,
+            cb: self.rb,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    /// Refresh resident payloads from a dense `W` **without touching the
+    /// index structure** — the incremental re-pack the native trainer runs
+    /// between mask updates: the optimizer changed the values, the mask did
+    /// not, so only `nnzb · b²` floats move (no allocation, no re-index).
+    /// Pruned regions of `w` are ignored, so the dense master weights need
+    /// no masking sweep first.
+    pub fn refresh_from_dense(&mut self, w: &Tensor) {
+        let (k, n) = self.shape();
+        assert_eq!((w.rows(), w.cols()), (k, n), "refresh: shape mismatch");
+        let b = self.block;
+        let bb = b * b;
+        let data = w.data();
+        for bc in 0..self.cb {
+            for idx in self.col_ptr[bc]..self.col_ptr[bc + 1] {
+                let br = self.row_idx[idx];
+                let dst = &mut self.vals[idx * bb..(idx + 1) * bb];
+                for i in 0..b {
+                    let src = (br * b + i) * n + bc * b;
+                    dst[i * b..(i + 1) * b].copy_from_slice(&data[src..src + b]);
+                }
+            }
+        }
+    }
+
+    /// [`Bcsc::refresh_from_dense`] for a matrix that stores `Wᵀ` (built by
+    /// [`Bcsc::transpose`]): refresh the transposed payloads straight from
+    /// the **un-transposed** dense `W`, again structure-preserving.
+    pub fn refresh_from_dense_transposed(&mut self, w: &Tensor) {
+        let (kt, nt) = self.shape();
+        assert_eq!(
+            (w.rows(), w.cols()),
+            (nt, kt),
+            "refresh_transposed: shape mismatch"
+        );
+        let b = self.block;
+        let bb = b * b;
+        let n = w.cols();
+        let data = w.data();
+        for bc in 0..self.cb {
+            for idx in self.col_ptr[bc]..self.col_ptr[bc + 1] {
+                let br = self.row_idx[idx];
+                // self block (br, bc) holds Wᵀ[br*b+i, bc*b+j] = W[bc*b+j, br*b+i]
+                let dst = &mut self.vals[idx * bb..(idx + 1) * bb];
+                for j in 0..b {
+                    let src = (bc * b + j) * n + br * b;
+                    for i in 0..b {
+                        dst[i * b + j] = data[src + i];
+                    }
+                }
+            }
+        }
+    }
+
     /// The mask this matrix realizes.
     pub fn mask(&self) -> BlockMask {
         let mut m = BlockMask::zeros(self.rb, self.cb);
@@ -165,6 +264,70 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        prop::check_default("bcsc-transpose", |rng| {
+            let rb = prop::usize_in(rng, 1, 5);
+            let cb = prop::usize_in(rng, 1, 5);
+            let block = *prop::pick(rng, &[2, 4, 8]);
+            let w = Tensor::randn(&[rb * block, cb * block], 1.0, rng);
+            let mask = BlockMask::random(rb, cb, rng.f64(), rng);
+            let b = Bcsc::from_dense(&w, &mask, block);
+            let t = b.transpose();
+            prop_assert!(t.shape() == (cb * block, rb * block), "shape");
+            prop_assert!(t.nnzb() == b.nnzb(), "nnzb");
+            // structural invariant from_dense guarantees: sorted row ids
+            for bc in 0..t.cb {
+                let ids = &t.row_idx[t.col_ptr[bc]..t.col_ptr[bc + 1]];
+                prop_assert!(ids.windows(2).all(|w| w[0] < w[1]), "unsorted col {bc}");
+            }
+            let want = b.to_dense().transpose2();
+            prop_assert!(
+                t.to_dense().allclose(&want, 0.0),
+                "transpose payload mismatch"
+            );
+            // double transpose is the identity (same storage order too)
+            let tt = t.transpose();
+            prop_assert!(tt.col_ptr == b.col_ptr && tt.row_idx == b.row_idx, "index");
+            prop_assert!(tt.vals == b.vals, "vals");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn refresh_tracks_dense_values_without_reindexing() {
+        let mut rng = Rng::new(7);
+        let w0 = Tensor::randn(&[16, 24], 1.0, &mut rng);
+        let mask = BlockMask::random(2, 3, 0.4, &mut rng);
+        let mut b = Bcsc::from_dense(&w0, &mask, 8);
+        let mut t = b.transpose();
+        // an "optimizer step": all values change, structure does not
+        let w1 = w0.clone().map(|x| 1.5 * x - 0.25);
+        let (cp, ri) = (b.col_ptr.clone(), b.row_idx.clone());
+        b.refresh_from_dense(&w1);
+        t.refresh_from_dense_transposed(&w1);
+        assert_eq!(b.col_ptr, cp);
+        assert_eq!(b.row_idx, ri);
+        let fresh = Bcsc::from_dense(&w1, &mask, 8);
+        assert!(b.to_dense().allclose(&fresh.to_dense(), 0.0));
+        assert!(t.to_dense().allclose(&fresh.to_dense().transpose2(), 0.0));
+        // pruned regions of the dense master are ignored by the refresh
+        let mut dirty = w1.clone();
+        for br in 0..2 {
+            for bc in 0..3 {
+                if !mask.get(br, bc) {
+                    for i in 0..8 {
+                        for j in 0..8 {
+                            dirty.set2(br * 8 + i, bc * 8 + j, 999.0);
+                        }
+                    }
+                }
+            }
+        }
+        b.refresh_from_dense(&dirty);
+        assert!(b.to_dense().allclose(&fresh.to_dense(), 0.0));
     }
 
     #[test]

@@ -54,6 +54,54 @@ impl SparsitySchedule {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::testkit::prop;
+
+    /// Fuzzed `(s_init, s_max, m, d)`: the schedule is monotone
+    /// non-decreasing over `0..=m`, stays inside `[s_init, s_max]`, and
+    /// clamps exactly at `s_max` from iteration `m − d` onward.
+    #[test]
+    fn monotone_and_clamped_property() {
+        prop::check_default("sparsity-schedule", |rng| {
+            let s_init = rng.f64() * 0.5;
+            let s_max = s_init + rng.f64() * (1.0 - s_init);
+            let m = prop::usize_in(rng, 2, 400);
+            let d = prop::usize_in(rng, 0, m - 1);
+            let s = SparsitySchedule::new(s_init, s_max, m, d);
+            prop_assert!(
+                (s.sparsity_at(0) - s_init).abs() < 1e-12,
+                "s(0) {} != s_init {s_init}",
+                s.sparsity_at(0)
+            );
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..=m {
+                let v = s.sparsity_at(i);
+                prop_assert!(v >= prev - 1e-12, "decreased at {i}: {prev} -> {v}");
+                prop_assert!(
+                    v >= s_init - 1e-12 && v <= s_max + 1e-12,
+                    "out of range at {i}: {v}"
+                );
+                prev = v;
+            }
+            // exact clamp at and beyond the horizon m − d
+            for i in (m - d)..=(m + 5) {
+                prop_assert!(
+                    s.sparsity_at(i) == s_max,
+                    "not clamped at {i} (horizon {})",
+                    m - d
+                );
+            }
+            // first_iter_reaching is consistent with the pointwise values
+            if let Some(t) = s.first_iter_reaching(s_max) {
+                prop_assert!(s.sparsity_at(t) >= s_max - 1e-12, "reach point wrong");
+                prop_assert!(
+                    t == 0 || s.sparsity_at(t - 1) < s_max,
+                    "not the first reach point"
+                );
+            }
+            Ok(())
+        });
+    }
 
     #[test]
     fn endpoints() {

@@ -1,0 +1,200 @@
+//! The training-backend seam: one trait, two executors.
+//!
+//! [`Trainer`](crate::train::Trainer) owns the *algorithm* of the paper's
+//! Listing 1 — corpus batches, the prune-and-grow controller, mask
+//! bookkeeping, logging — and delegates the numerical step
+//! (forward + backward + Adam) to a [`TrainBackend`]:
+//!
+//! * [`NativeBackend`](crate::train::native::NativeBackend) — the default:
+//!   the full step on the packed micro-kernel stack (PR 1/PR 3 machinery),
+//!   with block-sparsity accelerating the backward pass too. Runs in every
+//!   build, no artifacts needed.
+//! * [`AotBackend`] — the original PJRT path: one fused `train_step` HLO
+//!   executable per config. Only *opens* with the `pjrt` cargo feature +
+//!   `make artifacts`; in default builds `Runtime::open` reports why.
+//!
+//! The ABI between trainer and backend is deliberately small: dense
+//! parameter/optimizer state in a [`TrainState`], fine-grid (ABI-block)
+//! masks, one corpus batch, and back come the loss and — when the
+//! controller is about to run — the masked MLP weight gradients `G_i`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::data::corpus::LmBatch;
+use crate::model::params::ParamStore;
+use crate::runtime::{ConfigInfo, HostValue, Runtime};
+use crate::sparse::BlockMask;
+use crate::tensor::Tensor;
+
+/// Dense host-side training state: parameters plus Adam first/second
+/// moments (all in manifest ABI order) and the shared step counter.
+pub struct TrainState {
+    pub params: ParamStore,
+    pub adam_m: ParamStore,
+    pub adam_v: ParamStore,
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Fresh optimizer state (zero moments, step 0) around `params`.
+    pub fn new(params: ParamStore) -> TrainState {
+        let mut adam_m = ParamStore::new();
+        let mut adam_v = ParamStore::new();
+        for (name, t) in params.in_order() {
+            adam_m.insert(name.clone(), Tensor::zeros(t.shape()));
+            adam_v.insert(name.clone(), Tensor::zeros(t.shape()));
+        }
+        TrainState {
+            params,
+            adam_m,
+            adam_v,
+            step: 0,
+        }
+    }
+}
+
+/// What one training step hands back to the trainer.
+pub struct StepOutput {
+    pub loss: f32,
+    /// Masked MLP weight gradients (`G_i`, zero outside resident blocks),
+    /// keyed by weight name. Populated only when the trainer requested
+    /// them (`want_mlp_grads` — i.e. on mask-update iterations).
+    pub mlp_grads: BTreeMap<String, Tensor>,
+}
+
+/// One executor of the fused train/eval step. Masks arrive on the fine
+/// (ABI-block) grid — the trainer expands coarse `block_mult` grids before
+/// calling — keyed by MLP weight name.
+pub trait TrainBackend {
+    /// Short tag for logs/CLI (`"native"` / `"aot"`).
+    fn name(&self) -> &'static str;
+
+    /// One fused step: forward + backward + Adam update, in place on
+    /// `state`. Returns the loss and, when `want_mlp_grads`, the masked
+    /// MLP gradients the prune-and-grow controller consumes.
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        masks: &BTreeMap<String, BlockMask>,
+        batch: &LmBatch,
+        want_mlp_grads: bool,
+    ) -> Result<StepOutput>;
+
+    /// Held-out loss of one batch (no state mutation beyond internal
+    /// caches).
+    fn eval_loss(
+        &mut self,
+        state: &TrainState,
+        masks: &BTreeMap<String, BlockMask>,
+        batch: &LmBatch,
+    ) -> Result<f32>;
+}
+
+/// The PJRT/AOT executor: drives the `<config>_train_step` /
+/// `<config>_eval_loss` HLO entries with the flat positional ABI the
+/// manifest records.
+pub struct AotBackend<'rt> {
+    rt: &'rt Runtime,
+    cfg: ConfigInfo,
+}
+
+impl<'rt> AotBackend<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: ConfigInfo) -> AotBackend<'rt> {
+        AotBackend { rt, cfg }
+    }
+
+    fn push_masks(&self, inputs: &mut Vec<HostValue>, masks: &BTreeMap<String, BlockMask>) {
+        for (name, _) in &self.cfg.masks {
+            inputs.push(HostValue::tensor(masks[name].to_tensor()));
+        }
+    }
+}
+
+impl TrainBackend for AotBackend<'_> {
+    fn name(&self) -> &'static str {
+        "aot"
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        masks: &BTreeMap<String, BlockMask>,
+        batch: &LmBatch,
+        want_mlp_grads: bool,
+    ) -> Result<StepOutput> {
+        let mut inputs =
+            Vec::with_capacity(3 * state.params.len() + self.cfg.masks.len() + 3);
+        for (_, t) in state.params.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        for (_, t) in state.adam_m.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        for (_, t) in state.adam_v.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        inputs.push(HostValue::scalar_i32(state.step));
+        self.push_masks(&mut inputs, masks);
+        inputs.push(HostValue::i32s(
+            &[batch.batch, batch.seq],
+            batch.tokens.clone(),
+        ));
+        inputs.push(HostValue::i32s(
+            &[batch.batch, batch.seq],
+            batch.targets.clone(),
+        ));
+
+        let entry = format!("{}_train_step", self.cfg.name);
+        let out = self.rt.execute(&entry, &inputs)?;
+
+        // unpack: P params, P m, P v, step, loss, G grads
+        let p = state.params.len();
+        let names: Vec<String> = state.params.names().to_vec();
+        for (i, name) in names.iter().enumerate() {
+            state
+                .params
+                .insert(name.clone(), out[i].clone().into_tensor()?);
+            state
+                .adam_m
+                .insert(name.clone(), out[p + i].clone().into_tensor()?);
+            state
+                .adam_v
+                .insert(name.clone(), out[2 * p + i].clone().into_tensor()?);
+        }
+        state.step = out[3 * p].as_i32().context("step")?[0];
+        let loss = out[3 * p + 1].scalar()?;
+        let mut mlp_grads = BTreeMap::new();
+        if want_mlp_grads {
+            for (gi, wname) in self.cfg.mlp_weights.iter().enumerate() {
+                mlp_grads.insert(wname.clone(), out[3 * p + 2 + gi].clone().into_tensor()?);
+            }
+        }
+        Ok(StepOutput { loss, mlp_grads })
+    }
+
+    fn eval_loss(
+        &mut self,
+        state: &TrainState,
+        masks: &BTreeMap<String, BlockMask>,
+        batch: &LmBatch,
+    ) -> Result<f32> {
+        let mut inputs = Vec::with_capacity(state.params.len() + self.cfg.masks.len() + 2);
+        for (_, t) in state.params.in_order() {
+            inputs.push(HostValue::from_tensor(t));
+        }
+        self.push_masks(&mut inputs, masks);
+        inputs.push(HostValue::i32s(
+            &[batch.batch, batch.seq],
+            batch.tokens.clone(),
+        ));
+        inputs.push(HostValue::i32s(
+            &[batch.batch, batch.seq],
+            batch.targets.clone(),
+        ));
+        let entry = format!("{}_eval_loss", self.cfg.name);
+        let out = self.rt.execute(&entry, &inputs)?;
+        out[0].scalar()
+    }
+}

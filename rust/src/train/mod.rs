@@ -1,15 +1,26 @@
-//! Training orchestration (L3): drive the AOT `train_step` executables,
-//! interleave the blocked prune-and-grow controller per the paper's
+//! Training orchestration (L3): drive one [`backend::TrainBackend`] per
+//! step, interleave the blocked prune-and-grow controller per the paper's
 //! Listing 1, and log the per-iteration series behind Tables 2/4/5/6 and
 //! Figs. 8/10.
 //!
-//! * [`pretrain`] — LM pretraining on the synthetic corpus.
+//! * [`backend`] — the trainer ↔ executor seam: [`backend::TrainState`],
+//!   [`backend::StepOutput`], the AOT/PJRT executor.
+//! * [`native`] — the default executor: forward + backward + AdamW on the
+//!   packed kernel stack, block sparsity accelerating both directions of
+//!   the MLP (no artifacts, runs in every build).
+//! * [`pretrain`] — LM pretraining on the synthetic corpus
+//!   (backend-generic; `Trainer::new_native` / `Trainer::new`).
 //! * [`classify`] — classification (ViT / GLUE twins) training +
 //!   fine-tuning, including the dense-checkpoint → sparsify-and-recover
-//!   pipeline of Table 1 / §5.2.
+//!   pipeline of Table 1 / §5.2 (AOT-only: the classifier entry points
+//!   exist only as HLO artifacts).
 
+pub mod backend;
 pub mod classify;
+pub mod native;
 pub mod pretrain;
 
+pub use backend::{AotBackend, StepOutput, TrainBackend, TrainState};
 pub use classify::{ClassifyTrainer, EvalScores};
-pub use pretrain::{IterLog, PretrainOptions, Trainer};
+pub use native::{MlpExec, NativeBackend, RepackStats};
+pub use pretrain::{open_backend_runtime, IterLog, PretrainOptions, Trainer};
