@@ -5,5 +5,6 @@ use blast::util::cli::Args;
 
 fn main() {
     let args = Args::parse();
+    blast::kernels::simd::set_simd_enabled(!args.get_bool("no-simd"));
     blast::eval::pretrain_exps::pretrain_ab(&args).unwrap();
 }

@@ -4,5 +4,6 @@ use blast::util::cli::Args;
 
 fn main() {
     let args = Args::parse();
+    blast::kernels::simd::set_simd_enabled(!args.get_bool("no-simd"));
     blast::eval::serve_exps::serve(&args).unwrap();
 }

@@ -31,6 +31,9 @@ use blast::util::cli::Args;
 fn main() -> Result<()> {
     blast::util::logging::init();
     let args = Args::parse();
+    // `--no-simd` pins the scalar kernel arm (same as BLAST_SIMD=off)
+    blast::kernels::simd::set_simd_enabled(!args.get_bool("no-simd"));
+    println!("kernel isa: {}", blast::kernels::simd::dispatch().isa.name());
     let sparsity = args.get_f64("sparsity", 0.9);
     let block = args.get_usize("block", 128);
     let n_requests = args.get_usize("requests", 16);

@@ -102,6 +102,7 @@ pub fn attention(args: &Args) -> Result<()> {
     }
 
     let mut report = JsonReport::new("attention");
+    report.meta("isa", Json::str(crate::kernels::simd::dispatch().isa.name()));
     report.meta(
         "threads",
         Json::num(crate::util::threadpool::global().workers() as f64),

@@ -49,6 +49,7 @@ pub fn kernels(args: &Args) -> Result<()> {
     let sparsities = args.get_f64_list("sparsities", &[0.0, 0.8, 0.9, 0.95]);
 
     let mut report = JsonReport::new("kernels");
+    report.meta("isa", Json::str(crate::kernels::simd::dispatch().isa.name()));
     report.meta(
         "threads",
         Json::num(crate::util::threadpool::global().workers() as f64),

@@ -475,6 +475,7 @@ pub fn pretrain_ab(args: &Args) -> Result<()> {
     }
 
     let mut report = JsonReport::new("pretrain");
+    report.meta("isa", Json::str(crate::kernels::simd::dispatch().isa.name()));
     report.meta(
         "threads",
         Json::num(crate::util::threadpool::global().workers() as f64),

@@ -115,6 +115,7 @@ pub fn serve(args: &Args) -> Result<()> {
     let masks = random_masks(&cfg, sparsity, 77);
 
     let mut report = JsonReport::new("serve");
+    report.meta("isa", Json::str(crate::kernels::simd::dispatch().isa.name()));
     report.meta(
         "threads",
         Json::num(crate::util::threadpool::global().workers() as f64),

@@ -27,9 +27,10 @@
 //! Layout: `(heads, seq, hd)` per layer for prefill operands; merged
 //! `(seq, heads*hd)` outputs.
 
-use crate::kernels::microkernel::microkernel;
-use crate::kernels::ops::softmax_row;
+use crate::kernels::microkernel::microkernel_d;
+use crate::kernels::ops::{softmax_row, softmax_row_scalar};
 use crate::kernels::pack::pack_kt_panel;
+use crate::kernels::simd::{self, Epilogue, KernelDispatch};
 use crate::util::{scratch, threadpool};
 
 /// Query rows per prefill tile (output rows of the per-tile GEMMs).
@@ -62,6 +63,7 @@ pub fn causal_attention(
     }
     let n_qt = seq.div_ceil(TQ);
     let out_base = out.as_mut_ptr() as usize;
+    let d = simd::dispatch();
     threadpool::parallel_for_weighted(
         heads * n_qt,
         |t| ((t % n_qt) + 1) * TQ,
@@ -70,7 +72,7 @@ pub fn causal_attention(
             let qh = &q[h * seq * hd..(h + 1) * seq * hd];
             let kh = &k[h * seq * hd..(h + 1) * seq * hd];
             let vh = &v[h * seq * hd..(h + 1) * seq * hd];
-            causal_tile(qh, kh, vh, seq, hd, heads, h, qt, out_base);
+            causal_tile(d, qh, kh, vh, seq, hd, heads, h, qt, out_base);
         },
     );
     out
@@ -79,9 +81,12 @@ pub fn causal_attention(
 /// One `(head, q-tile)` item of the tiled prefill: stream k-tiles with
 /// online softmax, two packed micro-GEMMs per tile pair. `out_base` is
 /// the merged `(seq, heads*hd)` output buffer's base address; this item
-/// writes only rows `qt*TQ..` of column stripe `h*hd..(h+1)*hd`.
+/// writes only rows `qt*TQ..` of column stripe `h*hd..(h+1)*hd`. The
+/// score scale+mask-max, shifted-exp+sum and streaming-rescale row passes
+/// all run on the dispatched SIMD lanes (`d` resolved once per prefill).
 #[allow(clippy::too_many_arguments)]
 fn causal_tile(
+    d: &KernelDispatch,
     qh: &[f32],
     kh: &[f32],
     vh: &[f32],
@@ -115,32 +120,25 @@ fn causal_tile(
         // scores tile: S[tq × tk] = Qᵖ · (Kᵀ)ᵖ (microkernel accumulates,
         // so zero the region first)
         s[..tq * tk].fill(0.0);
-        microkernel(&qp, tq, tq, &kb, tk, tk, hd, &mut s[..tq * tk], tk);
+        microkernel_d(d, &qp, tq, tq, &kb, tk, tk, hd, &mut s[..tq * tk], tk, Epilogue::None);
         // online softmax update per row: scale, causal mask, rescale the
-        // running accumulator, and build the packed P tile
+        // running accumulator, and build the packed P tile — the three row
+        // passes run on the dispatched lanes
         for i in 0..tq {
             let gi = i0 + i;
             // columns this row may attend to within the tile
             let valid = (gi + 1).saturating_sub(k0).min(tk);
             let srow = &mut s[i * tk..i * tk + tk];
-            let mut row_max = f32::NEG_INFINITY;
-            for sv in srow.iter_mut().take(valid) {
-                *sv *= scale;
-                row_max = row_max.max(*sv);
-            }
+            let row_max = (d.scale_max_slice)(&mut srow[..valid], scale);
             let new_m = m[i].max(row_max);
             // exp(-inf - finite) = 0, so the first tile's rescale is a
             // no-op on the zeroed accumulator without a special case
             let alpha = (m[i] - new_m).exp();
             if alpha != 1.0 {
-                for a in acc[i * hd..(i + 1) * hd].iter_mut() {
-                    *a *= alpha;
-                }
+                (d.scale_slice)(&mut acc[i * hd..(i + 1) * hd], alpha);
             }
-            let mut row_sum = 0.0f32;
-            for (j, &sv) in srow.iter().enumerate().take(valid) {
-                let p = (sv - new_m).exp();
-                row_sum += p;
+            let row_sum = (d.exp_shift_sum)(&mut srow[..valid], new_m);
+            for (j, &p) in srow.iter().enumerate().take(valid) {
                 pp[j * tq + i] = p;
             }
             for j in valid..tk {
@@ -151,7 +149,8 @@ fn causal_tile(
         }
         // O[tq × hd] += P · V_tile (V rows are already the row-major B
         // operand the micro-kernel wants)
-        microkernel(
+        microkernel_d(
+            d,
             &pp,
             tq,
             tq,
@@ -161,6 +160,7 @@ fn causal_tile(
             tk,
             &mut acc,
             hd,
+            Epilogue::None,
         );
         k0 = k1;
     }
@@ -210,7 +210,9 @@ pub fn causal_attention_ref(
                 let kj = &kh[j * hd..(j + 1) * hd];
                 *s = dot(qi, kj) * scale;
             }
-            softmax_row(&mut scores[..i + 1]);
+            // the ref kernels stay on the scalar softmax so the A/B
+            // baseline keeps measuring the true seed
+            softmax_row_scalar(&mut scores[..i + 1]);
             // out[i, h*hd..] = sum_j scores[j] * v[j]
             // SAFETY: each head writes a disjoint column stripe.
             let orow = unsafe {
@@ -281,7 +283,7 @@ pub fn decode_head_into(q: &[f32], kh: &[f32], vh: &[f32], hd: usize, pos: usize
     for (j, s) in scores.iter_mut().enumerate() {
         *s = dot(q, &kh[j * hd..(j + 1) * hd]) * scale;
     }
-    softmax_row(&mut scores);
+    softmax_row_scalar(&mut scores);
     out.fill(0.0);
     for (j, &w) in scores.iter().enumerate() {
         let vj = &vh[j * hd..(j + 1) * hd];
@@ -298,10 +300,11 @@ pub fn decode_head_into(q: &[f32], kh: &[f32], vh: &[f32], hd: usize, pos: usize
 /// `kv_page(pi)` returns the `(K, V)` stripes of page `pi` for this
 /// `(layer, head)` — each `page × hd` position-major floats (the layout
 /// [`crate::model::kv::KvCache::k_head`] serves; a flat buffer works too,
-/// sliced at `pi*page*hd`). Score dots run the unrolled multi-accumulator
-/// [`dot_lanes`]; the weighted-V accumulation is element-order preserving
-/// per position, so **page size never changes the result bits** — only
-/// where positions live.
+/// sliced at `pi*page*hd`). Score dots and the weighted-V accumulation run
+/// the dispatched `dot`/`axpy` lanes (AVX2/NEON FMA; the scalar arm is the
+/// unrolled multi-accumulator [`dot_lanes`]); each lane's summation order
+/// depends only on `hd`, never on the page geometry, so **page size never
+/// changes the result bits** — only where positions live.
 ///
 /// This is the shared inner body of the engine's sequential *and* batched
 /// decode, which schedule `(session, head)` items on the thread pool
@@ -318,6 +321,7 @@ pub fn decode_head_paged_into<'a>(
     debug_assert_eq!(q.len(), hd);
     debug_assert_eq!(out.len(), hd);
     debug_assert!(page > 0);
+    let d = simd::dispatch();
     let scale = 1.0 / (hd as f32).sqrt();
     let n = pos + 1;
     let n_pages = n.div_ceil(page);
@@ -327,7 +331,7 @@ pub fn decode_head_paged_into<'a>(
         let base = pi * page;
         let cnt = (n - base).min(page);
         for j in 0..cnt {
-            scores[base + j] = dot_lanes(q, &kp[j * hd..(j + 1) * hd]) * scale;
+            scores[base + j] = (d.dot)(q, &kp[j * hd..(j + 1) * hd]) * scale;
         }
     }
     softmax_row(&mut scores);
@@ -338,7 +342,7 @@ pub fn decode_head_paged_into<'a>(
         let cnt = (n - base).min(page);
         for j in 0..cnt {
             let w = scores[base + j];
-            crate::kernels::gemm::axpy(w, &vp[j * hd..(j + 1) * hd], out);
+            (d.axpy)(w, &vp[j * hd..(j + 1) * hd], out);
         }
     }
 }

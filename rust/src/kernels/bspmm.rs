@@ -36,8 +36,9 @@
 //! second correctness oracle.
 
 use crate::kernels::gemm::axpy;
-use crate::kernels::microkernel::microkernel;
+use crate::kernels::microkernel::microkernel_d;
 use crate::kernels::pack::pack_a_panel;
+use crate::kernels::simd::{self, Epilogue, KernelDispatch};
 use crate::sparse::{Bcsc, BlockMask};
 use crate::tensor::Tensor;
 use crate::util::{scratch, threadpool};
@@ -86,6 +87,7 @@ pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
     let xp_ref: &[f32] = &xp;
     let n_items = n_row_tiles * cb;
     let weight = |t: usize| w.col_ptr[t % cb + 1] - w.col_ptr[t % cb];
+    let d = simd::dispatch();
     threadpool::parallel_for_weighted(n_items, weight, |t| {
         let it = t / cb;
         let bc = t % cb;
@@ -102,7 +104,8 @@ pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
         let mut yt = scratch::take_zeroed(mr * b);
         for idx in lo..hi {
             let br = w.row_idx[idx];
-            microkernel(
+            microkernel_d(
+                d,
                 &xt[br * b * mr..],
                 mr,
                 mr,
@@ -112,6 +115,7 @@ pub fn bspmm_into(x: &[f32], w: &Bcsc, y: &mut [f32], m: usize) {
                 b,
                 &mut yt,
                 b,
+                Epilogue::None,
             );
         }
         // SAFETY: each (row tile, block column) item owns the disjoint
@@ -230,10 +234,12 @@ pub fn bspmm_dw_masked_into(
     let dw_base = dw.as_mut_ptr() as usize;
     let xp_ref: &[f32] = &xp;
     let dyp_ref: &[f32] = &dyp;
+    let d = simd::dispatch();
     threadpool::parallel_for(resident.len(), |t| {
         let (br, bc) = resident[t];
         let mut tile = scratch::take_zeroed(b * b);
-        microkernel(
+        microkernel_d(
+            d,
             &xp_ref[br * m * b..(br + 1) * m * b],
             b,
             b,
@@ -243,6 +249,7 @@ pub fn bspmm_dw_masked_into(
             m,
             &mut tile,
             b,
+            Epilogue::None,
         );
         // SAFETY: each resident block owns the disjoint dW span
         // dw[br*b+i, bc*b..bc*b+b]; parallel_for blocks until done.
@@ -265,16 +272,15 @@ pub struct FusedMlpWeights<'a> {
     pub w3: &'a Bcsc, // (f, e) down
 }
 
-#[inline(always)]
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
 /// Fused sparse MLP: `Y = (SiLU(X W1) ⊙ (X W2)) W3` (paper Eq. 1).
 ///
 /// Per `MR`-row tile: the X panel is packed once and shared by both gate
-/// contractions, the SiLU epilogue runs on the cache-resident hidden tile,
-/// and the down-projection consumes the repacked hidden panel — all four
+/// contractions, and the SwiGLU epilogue (`silu(h1) ⊙ h2`) is fused into
+/// the **W1 contraction's write-back** — the up-projection `h2` runs
+/// first, then the gate contraction carries
+/// [`Epilogue::SiluGate`], so the hidden tile is activated in registers as
+/// its last block lands and the old separate `mr×f` elementwise pass is
+/// gone. The down-projection consumes the repacked hidden panel — all four
 /// tile buffers come from the thread-local scratch arena, so the hot path
 /// is allocation-free after warmup.
 pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
@@ -288,6 +294,7 @@ pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
     let n_tiles = m.div_ceil(MR);
     let y_base = y.data_mut().as_mut_ptr() as usize;
     let xd = x.data();
+    let d = simd::dispatch();
     threadpool::parallel_for(n_tiles, |t| {
         let i0 = t * MR;
         let i1 = (i0 + MR).min(m);
@@ -297,12 +304,9 @@ pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
         pack_a_panel(&xd[i0 * e..i1 * e], e, mr, e, &mut xp);
         let mut h1 = scratch::take_zeroed(mr * f);
         let mut h2 = scratch::take_zeroed(mr * f);
-        tile_bspmm_packed(&xp, mr, w.w1, &mut h1);
-        tile_bspmm_packed(&xp, mr, w.w2, &mut h2);
-        // fused epilogue: h1 <- silu(h1) * h2, in cache
-        for (a, &g) in h1.iter_mut().zip(h2.iter()) {
-            *a = silu(*a) * g;
-        }
+        tile_bspmm_packed(d, &xp, mr, w.w2, &mut h2, Epilogue::None);
+        // gate contraction with the SwiGLU epilogue fused into write-back
+        tile_bspmm_packed(d, &xp, mr, w.w1, &mut h1, Epilogue::SiluGate { g: &h2, ldg: f });
         // down-projection into the tile's Y rows
         let mut hp = scratch::take_uninit(mr * f);
         pack_a_panel(&h1, f, mr, f, &mut hp);
@@ -310,12 +314,14 @@ pub fn fused_mlp_sparse(x: &Tensor, w: &FusedMlpWeights) -> Tensor {
         let yt = unsafe {
             std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * e), mr * e)
         };
-        tile_bspmm_packed(&hp, mr, w.w3, yt);
+        tile_bspmm_packed(d, &hp, mr, w.w3, yt, Epilogue::None);
     });
     y
 }
 
-/// GELU MLP variant (GPT-2/ViT): `Y = GELU(X W1) W3`.
+/// GELU MLP variant (GPT-2/ViT): `Y = GELU(X W1) W3`. The GeLU is fused
+/// into the up-projection's write-back ([`Epilogue::Gelu`]) — no separate
+/// pass over the hidden tile.
 pub fn gelu_mlp_sparse(x: &Tensor, w1: &Bcsc, w3: &Bcsc) -> Tensor {
     let (m, e) = (x.rows(), x.cols());
     let (e1, f) = w1.shape();
@@ -330,6 +336,7 @@ pub fn gelu_mlp_sparse(x: &Tensor, w1: &Bcsc, w3: &Bcsc) -> Tensor {
     let n_tiles = m.div_ceil(MR);
     let y_base = y.data_mut().as_mut_ptr() as usize;
     let xd = x.data();
+    let d = simd::dispatch();
     threadpool::parallel_for(n_tiles, |t| {
         let i0 = t * MR;
         let i1 = (i0 + MR).min(m);
@@ -337,34 +344,61 @@ pub fn gelu_mlp_sparse(x: &Tensor, w1: &Bcsc, w3: &Bcsc) -> Tensor {
         let mut xp = scratch::take_uninit(mr * e);
         pack_a_panel(&xd[i0 * e..i1 * e], e, mr, e, &mut xp);
         let mut h = scratch::take_zeroed(mr * f);
-        tile_bspmm_packed(&xp, mr, w1, &mut h);
-        for a in h.iter_mut() {
-            *a = crate::kernels::ops::gelu(*a);
-        }
+        tile_bspmm_packed(d, &xp, mr, w1, &mut h, Epilogue::Gelu);
         let mut hp = scratch::take_uninit(mr * f);
         pack_a_panel(&h, f, mr, f, &mut hp);
         // SAFETY: tiles own disjoint Y row ranges.
         let yt = unsafe {
             std::slice::from_raw_parts_mut((y_base as *mut f32).add(i0 * e), mr * e)
         };
-        tile_bspmm_packed(&hp, mr, w3, yt);
+        tile_bspmm_packed(d, &hp, mr, w3, yt, Epilogue::None);
     });
     y
 }
 
 /// Single-threaded BSpMM over one packed row tile (the fused-MLP inner
 /// contraction). `xp` is k-major with leading dimension `mr`; `y` is
-/// row-major `mr × n`.
+/// row-major `mr × n`; `ep` operands are relative to the full `mr × n`
+/// tile.
+///
+/// Epilogue placement is the kernel's half of the exactly-once contract: a
+/// block column's C stripe is complete after its **last resident block**,
+/// so only that micro-kernel call carries the (column-shifted) epilogue.
+/// Fully-pruned columns never run a micro-kernel, so a
+/// non-zero-preserving epilogue (bias) is applied to their zero stripe
+/// explicitly; zero-preserving ones (`gelu(0)=silu(0)=0`) are skipped —
+/// pruned blocks still cost nothing.
 #[inline]
-fn tile_bspmm_packed(xp: &[f32], mr: usize, w: &Bcsc, y: &mut [f32]) {
+fn tile_bspmm_packed(
+    d: &KernelDispatch,
+    xp: &[f32],
+    mr: usize,
+    w: &Bcsc,
+    y: &mut [f32],
+    ep: Epilogue<'_>,
+) {
     let (k, n) = w.shape();
     debug_assert_eq!(xp.len(), mr * k);
     debug_assert_eq!(y.len(), mr * n);
     let b = w.block;
     for bc in 0..w.cb {
-        for idx in w.col_ptr[bc]..w.col_ptr[bc + 1] {
+        let lo = w.col_ptr[bc];
+        let hi = w.col_ptr[bc + 1];
+        if lo == hi {
+            if !ep.zero_preserving() {
+                d.apply_epilogue_region(&mut y[bc * b..], n, mr, b, ep.shift(0, bc * b));
+            }
+            continue;
+        }
+        for idx in lo..hi {
             let br = w.row_idx[idx];
-            microkernel(
+            let ep_call = if idx + 1 == hi {
+                ep.shift(0, bc * b)
+            } else {
+                Epilogue::None
+            };
+            microkernel_d(
+                d,
                 &xp[br * b * mr..],
                 mr,
                 mr,
@@ -374,6 +408,7 @@ fn tile_bspmm_packed(xp: &[f32], mr: usize, w: &Bcsc, y: &mut [f32]) {
                 b,
                 &mut y[bc * b..],
                 n,
+                ep_call,
             );
         }
     }
@@ -388,6 +423,7 @@ pub fn bspmm_flops(m: usize, w: &Bcsc) -> f64 {
 mod tests {
     use super::*;
     use crate::kernels::gemm::gemm_naive;
+    use crate::kernels::ops::silu;
     use crate::prop_assert;
     use crate::sparse::BlockMask;
     use crate::testkit::prop;

@@ -22,8 +22,9 @@
 //! The speedups in Figs. 4–6 are reported against *this* kernel, the same
 //! way the paper reports against `min(cuBLAS, CUTLASS)`.
 
-use crate::kernels::microkernel::microkernel;
+use crate::kernels::microkernel::microkernel_d;
 use crate::kernels::pack::{pack_a_panel, PackedB};
+use crate::kernels::simd::{self, Epilogue};
 use crate::tensor::Tensor;
 use crate::util::{scratch, threadpool};
 
@@ -74,10 +75,31 @@ pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
 /// projection path (weights packed once at model load, reused every
 /// prefill/decode step).
 pub fn gemm_packed_into(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize) {
+    gemm_packed_ep_into(a, bp, c, m, Epilogue::None);
+}
+
+/// [`gemm_packed_into`] with a fused [`Epilogue`] applied during each
+/// panel's C write-back (each panel runs the full depth `k` in one
+/// micro-kernel call, so the write-back *is* the final accumulation —
+/// exactly the epilogue contract). `ep` operands are relative to the full
+/// `m × n` output: a bias covers all `n` columns, a `SiluGate` gate is a
+/// congruent `m × n` matrix. This is how the dense fused MLPs apply
+/// bias/GeLU/SiLU/SwiGLU without a second pass over the hidden tensor.
+pub fn gemm_packed_ep_into(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, ep: Epilogue<'_>) {
     let (k, n) = (bp.k, bp.n);
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
-    if m == 0 || n == 0 || k == 0 {
+    if m == 0 || n == 0 {
+        return;
+    }
+    ep.check_operands(m, n);
+    let d = simd::dispatch();
+    if k == 0 {
+        // nothing to accumulate, but a non-zero-preserving epilogue (bias)
+        // must still reach every element
+        if !matches!(ep, Epilogue::None) {
+            d.apply_epilogue_region(c, n, m, n, ep);
+        }
         return;
     }
     let n_tiles = m.div_ceil(MR);
@@ -94,9 +116,11 @@ pub fn gemm_packed_into(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize) {
         let c_tile = unsafe {
             std::slice::from_raw_parts_mut((c_base as *mut f32).add(i0 * n), mr * n)
         };
+        let ep_tile = ep.shift(i0, 0);
         for p in 0..bp.panels() {
             let cols = bp.panel_cols(p);
-            microkernel(
+            microkernel_d(
+                d,
                 &ap,
                 mr,
                 mr,
@@ -106,6 +130,7 @@ pub fn gemm_packed_into(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize) {
                 k,
                 &mut c_tile[p * bp.nr..],
                 n,
+                ep_tile.shift(0, p * bp.nr),
             );
         }
     });
@@ -150,6 +175,7 @@ pub fn gemm_tn_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: 
     let packed = PackedB::pack(b, m, n);
     let n_tiles = k.div_ceil(MR);
     let c_base = c.as_mut_ptr() as usize;
+    let disp = simd::dispatch();
     threadpool::parallel_for(n_tiles, |t| {
         let i0 = t * MR;
         let i1 = (i0 + MR).min(k);
@@ -166,7 +192,8 @@ pub fn gemm_tn_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: 
         };
         for p in 0..packed.panels() {
             let cols = packed.panel_cols(p);
-            microkernel(
+            microkernel_d(
+                disp,
                 &ap,
                 mr,
                 mr,
@@ -176,6 +203,7 @@ pub fn gemm_tn_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: 
                 m,
                 &mut c_tile[p * packed.nr..],
                 n,
+                Epilogue::None,
             );
         }
     });
@@ -421,6 +449,51 @@ mod tests {
         let mut want = gemm_naive(&a, &b);
         want.add_inplace(&Tensor::full(&[20, 24], 2.0));
         assert!(c.allclose(&want, 1e-4));
+    }
+
+    /// The dense fused-MLP path: epilogues applied during the panel
+    /// write-back must equal GEMM + a separate elementwise pass.
+    #[test]
+    fn packed_epilogue_matches_unfused() {
+        use crate::kernels::ops;
+        prop::check_default("gemm-packed-epilogue", |rng| {
+            let m = *prop::pick(rng, &[1, 2, 15, 16, 17, 33]);
+            let k = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 40);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let gate = Tensor::randn(&[m, n], 1.0, rng);
+            let bias = prop::normal_vec(rng, n);
+            let packed = PackedB::pack(b.data(), k, n);
+            let base = gemm_naive(&a, &b);
+            let cases: [(Epilogue<'_>, usize); 4] = [
+                (Epilogue::Gelu, 0),
+                (Epilogue::Silu, 1),
+                (Epilogue::SiluGate { g: gate.data(), ldg: n }, 2),
+                (Epilogue::BiasGelu(&bias), 3),
+            ];
+            for (ep, kind) in cases {
+                let mut c = Tensor::zeros(&[m, n]);
+                gemm_packed_ep_into(a.data(), &packed, c.data_mut(), m, ep);
+                for i in 0..m {
+                    for j in 0..n {
+                        let v = base.at2(i, j);
+                        let want = match kind {
+                            0 => ops::gelu(v),
+                            1 => ops::silu(v),
+                            2 => ops::silu(v) * gate.at2(i, j),
+                            _ => ops::gelu(v + bias[j]),
+                        };
+                        let got = c.at2(i, j);
+                        prop_assert!(
+                            (got - want).abs() <= 1e-3 + 1e-4 * want.abs(),
+                            "kind {kind} ({i},{j}): {got} vs {want} (m={m} k={k} n={n})"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! ([`crate::kernels::pack`]) and tiles the output; this module computes
 //!
 //! ```text
-//! C[rows×cols] += Aᵖ · Bᵖ
+//! C[rows×cols] (+)= Aᵖ · Bᵖ   then   C = epilogue(C)
 //! ```
 //!
 //! where `Aᵖ` is a *k-major* packed panel (`ap[kk*lda + i]`, so the `rows`
@@ -13,15 +13,27 @@
 //! leading dimension `ldb` (`bp[kk*ldb + j]` — either a packed NR-wide
 //! B panel or a raw BCSC block, which is already the right layout).
 //!
-//! The inner loop keeps a small accumulator array in registers, broadcasts
-//! one packed A value per row and FMAs an NR-wide B row chunk — no
-//! per-element branches, no strided gathers, C touched exactly once at the
-//! end. Unrolled specializations exist for the BCSC block widths 8/16/32
-//! (`NR` fixed at compile time so LLVM keeps the accumulators in vector
-//! registers); odd shapes fall back to a generic remainder kernel. The
-//! register tile is 4×8 / 4×16 (≤ 8 YMM of accumulators) but drops to
-//! 2×32 for the widest chunk: 4×32 f32 would consume all 16 YMM registers
-//! of an AVX2 file by itself and force per-iteration spills.
+//! Since PR 5 the register tiles are *dispatched*: this module owns the
+//! tiling loop and the portable scalar tiles, while
+//! [`crate::kernels::simd`] supplies hand-written AVX2+FMA / NEON
+//! implementations of the same four slots (`mk4x16`, `mk4x8`, `mk2x32`,
+//! tail) behind a function-pointer table resolved once per process. Outer
+//! kernels resolve the table once per call ([`microkernel_d`]) so the
+//! per-tile dispatch cost is a pointer read.
+//!
+//! The second PR-5 addition is the fused **epilogue**
+//! ([`crate::kernels::simd::Epilogue`]): bias/activation/SwiGLU-gate
+//! transforms applied during the C write-back while the accumulator tile
+//! is still in registers. A call may carry a non-`None` epilogue only when
+//! it performs the *final* accumulation into its C region — see the
+//! contract on [`Epilogue`].
+//!
+//! The scalar tiles keep the exact structure LLVM autovectorizes well
+//! (`&[f32; NR]` reborrows, 4×8/4×16/2×32 accumulator arrays ≤ 8 YMM), so
+//! the fallback arm costs nothing relative to PR 1–4, and every SIMD arm
+//! is parity-tested against it.
+
+use crate::kernels::simd::{self, Epilogue, KernelDispatch};
 
 /// Rows per register sub-tile for NR ≤ 16 (4×16 f32 = 8 YMM accumulators,
 /// leaving room for the A broadcast and B loads).
@@ -34,7 +46,8 @@ const RB32: usize = 2;
 /// specialization).
 const MAX_NR: usize = 32;
 
-/// `C[rows×cols] += Aᵖ · Bᵖ`.
+/// `C[rows×cols] += Aᵖ · Bᵖ` on the active dispatch table, no epilogue —
+/// the drop-in PR 1 entry point.
 ///
 /// * `ap` — k-major packed A panel: element `(kk, i)` at `ap[kk*lda + i]`,
 ///   `i < rows ≤ lda`, `kk < k`.
@@ -53,12 +66,44 @@ pub fn microkernel(
     c: &mut [f32],
     ldc: usize,
 ) {
-    debug_assert!(rows <= lda || k == 0);
-    debug_assert!(cols <= ldb || k == 0);
-    debug_assert!(k == 0 || ap.len() >= (k - 1) * lda + rows);
-    debug_assert!(k == 0 || bp.len() >= (k - 1) * ldb + cols);
-    debug_assert!(rows == 0 || c.len() >= (rows - 1) * ldc + cols);
-    if rows == 0 || cols == 0 || k == 0 {
+    microkernel_d(simd::dispatch(), ap, lda, rows, bp, ldb, cols, k, c, ldc, Epilogue::None);
+}
+
+/// [`microkernel`] with an explicit dispatch table and fused epilogue —
+/// the entry the outer kernels use (table resolved once per GEMM/BSpMM
+/// call, epilogue applied during the final C write-back).
+#[allow(clippy::too_many_arguments)]
+pub fn microkernel_d(
+    d: &KernelDispatch,
+    ap: &[f32],
+    lda: usize,
+    rows: usize,
+    bp: &[f32],
+    ldb: usize,
+    cols: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    ep: Epilogue<'_>,
+) {
+    // Hard asserts, not debug: the SIMD arms read these operands through
+    // raw vector loads, so a short slice must fail loudly in release too
+    // (the pre-SIMD scalar code would have hit a bounds check instead).
+    assert!(rows <= lda || k == 0);
+    assert!(cols <= ldb || k == 0);
+    assert!(k == 0 || ap.len() >= (k - 1) * lda + rows);
+    assert!(k == 0 || bp.len() >= (k - 1) * ldb + cols);
+    assert!(rows == 0 || c.len() >= (rows - 1) * ldc + cols);
+    ep.check_operands(rows, cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if k == 0 {
+        // Nothing to accumulate and `ap`/`bp` may be empty, so skip the
+        // tiling loop entirely (its operand sub-slicing would index past
+        // empty slices) — but the epilogue must still reach every element
+        // exactly once.
+        d.apply_epilogue_region(c, ldc, rows, cols, ep);
         return;
     }
     let mut j0 = 0;
@@ -80,14 +125,15 @@ pub fn microkernel(
             let r = (rows - i0).min(rstep);
             let ap_sub = &ap[i0..];
             let c_sub = &mut c[i0 * ldc + j0..];
+            let ep_sub = ep.shift(i0, j0);
             if r == RB32 && take == 32 {
-                mk2::<32>(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc);
+                (d.mk2x32)(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc, ep_sub);
             } else if r == RB && take == 16 {
-                mk4::<16>(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc);
+                (d.mk4x16)(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc, ep_sub);
             } else if r == RB && take == 8 {
-                mk4::<8>(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc);
+                (d.mk4x8)(ap_sub, lda, bp_sub, ldb, k, c_sub, ldc, ep_sub);
             } else {
-                mk_small(ap_sub, lda, r, bp_sub, ldb, take, k, c_sub, ldc);
+                (d.mk_tail)(ap_sub, lda, r, bp_sub, ldb, take, k, c_sub, ldc, ep_sub);
             }
             i0 += r;
         }
@@ -95,8 +141,59 @@ pub fn microkernel(
     }
 }
 
+// ---------------------------------------------------------------------
+// scalar register tiles — the fallback arm of the dispatch table and the
+// parity oracles for the SIMD arms
+// ---------------------------------------------------------------------
+
+/// Scalar 4×16 tile (dispatch-table slot `mk4x16`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mk4x16_scalar(
+    ap: &[f32],
+    lda: usize,
+    bp: &[f32],
+    ldb: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    ep: Epilogue<'_>,
+) {
+    mk4::<16>(ap, lda, bp, ldb, k, c, ldc, ep);
+}
+
+/// Scalar 4×8 tile (dispatch-table slot `mk4x8`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mk4x8_scalar(
+    ap: &[f32],
+    lda: usize,
+    bp: &[f32],
+    ldb: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    ep: Epilogue<'_>,
+) {
+    mk4::<8>(ap, lda, bp, ldb, k, c, ldc, ep);
+}
+
+/// Scalar 2×32 tile (dispatch-table slot `mk2x32`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mk2x32_scalar(
+    ap: &[f32],
+    lda: usize,
+    bp: &[f32],
+    ldb: usize,
+    k: usize,
+    c: &mut [f32],
+    ldc: usize,
+    ep: Epilogue<'_>,
+) {
+    mk2::<32>(ap, lda, bp, ldb, k, c, ldc, ep);
+}
+
 /// 4×NR register tile, NR known at compile time. The `&[f32; NR]` reborrows
 /// let LLVM drop all interior bounds checks and vectorize the j-loop.
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn mk4<const NR: usize>(
     ap: &[f32],
@@ -106,6 +203,7 @@ fn mk4<const NR: usize>(
     k: usize,
     c: &mut [f32],
     ldc: usize,
+    ep: Epilogue<'_>,
 ) {
     let mut acc = [[0.0f32; NR]; RB];
     for kk in 0..k {
@@ -121,13 +219,14 @@ fn mk4<const NR: usize>(
     for i in 0..RB {
         let crow: &mut [f32] = &mut c[i * ldc..i * ldc + NR];
         for j in 0..NR {
-            crow[j] += acc[i][j];
+            crow[j] = ep.apply(crow[j] + acc[i][j], i, j);
         }
     }
 }
 
 /// 2×NR register tile for the widest chunk (see the module doc on
 /// register budgets).
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn mk2<const NR: usize>(
     ap: &[f32],
@@ -137,6 +236,7 @@ fn mk2<const NR: usize>(
     k: usize,
     c: &mut [f32],
     ldc: usize,
+    ep: Epilogue<'_>,
 ) {
     let mut acc = [[0.0f32; NR]; RB32];
     for kk in 0..k {
@@ -152,14 +252,15 @@ fn mk2<const NR: usize>(
     for i in 0..RB32 {
         let crow: &mut [f32] = &mut c[i * ldc..i * ldc + NR];
         for j in 0..NR {
-            crow[j] += acc[i][j];
+            crow[j] = ep.apply(crow[j] + acc[i][j], i, j);
         }
     }
 }
 
-/// Remainder tile: `rows ≤ 4`, `cols ≤ 32`, any combination.
+/// Scalar remainder tile: `rows ≤ 4`, `cols ≤ 32`, any combination
+/// (dispatch-table slot `mk_tail`).
 #[allow(clippy::too_many_arguments)]
-fn mk_small(
+pub(crate) fn mk_tail_scalar(
     ap: &[f32],
     lda: usize,
     rows: usize,
@@ -169,6 +270,7 @@ fn mk_small(
     k: usize,
     c: &mut [f32],
     ldc: usize,
+    ep: Epilogue<'_>,
 ) {
     debug_assert!(rows <= RB && cols <= MAX_NR);
     let mut acc = [[0.0f32; MAX_NR]; RB];
@@ -184,7 +286,7 @@ fn mk_small(
     for (i, accrow) in acc.iter().enumerate().take(rows) {
         let crow = &mut c[i * ldc..i * ldc + cols];
         for (j, cv) in crow.iter_mut().enumerate() {
-            *cv += accrow[j];
+            *cv = ep.apply(*cv + accrow[j], i, j);
         }
     }
 }
@@ -192,10 +294,12 @@ fn mk_small(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::simd;
     use crate::prop_assert;
     use crate::testkit::prop;
 
     /// Oracle: straightforward triple loop over the same packed layouts.
+    #[allow(clippy::too_many_arguments)]
     fn naive(
         ap: &[f32],
         lda: usize,
@@ -243,16 +347,79 @@ mod tests {
         });
     }
 
+    /// The full tiling loop with every epilogue variant, on both the
+    /// scalar table (exact vs oracle+`Epilogue::apply`) and the native
+    /// table (tolerance-gated) — the "forced scalar" arm runs on every
+    /// host, not just scalar CI.
+    #[test]
+    fn epilogue_property_both_arms() {
+        for d in [simd::scalar(), simd::native()] {
+            prop::check_default("microkernel-epilogue", |rng| {
+                let rows = prop::usize_in(rng, 1, 13);
+                let lda = rows + prop::usize_in(rng, 0, 2);
+                let cols = prop::usize_in(rng, 1, 70);
+                let ldb = cols + prop::usize_in(rng, 0, 3);
+                let ldc = cols + prop::usize_in(rng, 0, 3);
+                let k = prop::usize_in(rng, 0, 16);
+                let ap = prop::normal_vec(rng, k.max(1) * lda);
+                let bp = prop::normal_vec(rng, k.max(1) * ldb);
+                let c0 = prop::normal_vec(rng, (rows - 1) * ldc + cols);
+                let bias = prop::normal_vec(rng, cols);
+                let ldg = cols + 1;
+                let gate = prop::normal_vec(rng, rows * ldg);
+                let eps: [simd::Epilogue<'_>; 7] = [
+                    simd::Epilogue::None,
+                    simd::Epilogue::Bias(&bias),
+                    simd::Epilogue::BiasGelu(&bias),
+                    simd::Epilogue::BiasSilu(&bias),
+                    simd::Epilogue::Gelu,
+                    simd::Epilogue::Silu,
+                    simd::Epilogue::SiluGate { g: &gate, ldg },
+                ];
+                for ep in eps {
+                    let mut c = c0.clone();
+                    microkernel_d(d, &ap, lda, rows, &bp, ldb, cols, k, &mut c, ldc, ep);
+                    let mut want = c0.clone();
+                    naive(&ap, lda, rows, &bp, ldb, cols, k, &mut want, ldc);
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            let w = ep.apply(want[i * ldc + j], i, j);
+                            let g = c[i * ldc + j];
+                            prop_assert!(
+                                (g - w).abs() <= 1e-4 + 1e-5 * w.abs(),
+                                "isa={} ({i},{j}): {g} vs {w} (rows={rows} cols={cols} k={k})",
+                                d.isa.name()
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
     #[test]
     fn specialized_widths_exact_tiles() {
-        // hit mk4::<8|16|32> head-on: rows multiple of 4, cols = NR
+        // hit the 4x8/4x16/2x32 slots head-on: rows multiple of 4, cols = NR
         for &nr in &[8usize, 16, 32] {
             let (rows, k) = (8usize, 16usize);
             let ap: Vec<f32> = (0..k * rows).map(|i| (i % 11) as f32 * 0.25).collect();
             let bp: Vec<f32> = (0..k * nr).map(|i| (i % 7) as f32 * 0.5 - 1.0).collect();
             let mut c_fast = vec![0.0f32; rows * nr];
             let mut c_slow = vec![0.0f32; rows * nr];
-            microkernel(&ap, rows, rows, &bp, nr, nr, k, &mut c_fast, nr);
+            microkernel_d(
+                simd::scalar(),
+                &ap,
+                rows,
+                rows,
+                &bp,
+                nr,
+                nr,
+                k,
+                &mut c_fast,
+                nr,
+                simd::Epilogue::None,
+            );
             naive(&ap, rows, rows, &bp, nr, nr, k, &mut c_slow, nr);
             assert_eq!(c_fast, c_slow, "nr={nr}");
         }
@@ -265,6 +432,35 @@ mod tests {
         microkernel(&[1.0; 4], 4, 1, &[1.0; 8], 8, 0, 1, &mut c, 8);
         microkernel(&[], 4, 1, &[1.0; 8], 8, 8, 0, &mut c, 8);
         assert!(c.iter().all(|&v| v == 1.0));
+        // k == 0 with a *multi-tile* shape and empty operands: must not
+        // slice past the empty ap/bp (regression: the tiling loop used to
+        // run and panic on `&bp[32..]`)
+        let mut c = vec![2.0f32; 8 * 64];
+        microkernel(&[], 8, 8, &[], 64, 64, 0, &mut c, 64);
+        assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn k_zero_still_applies_epilogue() {
+        // bias must land even when there is nothing to accumulate
+        let bias = [0.5f32; 8];
+        let mut c = vec![1.0f32; 8];
+        microkernel_d(
+            simd::dispatch(),
+            &[],
+            4,
+            1,
+            &[],
+            8,
+            8,
+            0,
+            &mut c,
+            8,
+            simd::Epilogue::Bias(&bias),
+        );
+        for v in &c {
+            assert!((v - 1.5).abs() < 1e-6);
+        }
     }
 
     #[test]
@@ -276,6 +472,8 @@ mod tests {
         let mut want = vec![2.0f32; rows * cols];
         microkernel(&ap, rows, rows, &bp, cols, cols, k, &mut c, cols);
         naive(&ap, rows, rows, &bp, cols, cols, k, &mut want, cols);
-        assert_eq!(c, want);
+        for (a, b) in c.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
     }
 }

@@ -32,6 +32,12 @@
 //!   scalar kernels survive as `*_ref` oracles for the
 //!   `BENCH_attention.json` A/B harness.
 
+//! * [`simd`] — the explicit-SIMD backend: a per-process
+//!   [`simd::KernelDispatch`] table (AVX2+FMA / NEON / scalar) supplying
+//!   the micro-kernel register tiles, pack transposes and hot element-wise
+//!   lanes, plus the fused [`simd::Epilogue`] applied during micro-kernel
+//!   write-back. `BLAST_SIMD=off` (or `--no-simd`) forces the scalar arm.
+
 pub mod attention;
 pub mod bspmm;
 pub mod csr_spmm;
@@ -39,8 +45,12 @@ pub mod gemm;
 pub mod microkernel;
 pub mod ops;
 pub mod pack;
+pub mod simd;
 
 pub use bspmm::{bspmm, fused_mlp_sparse, FusedMlpWeights};
 pub use csr_spmm::csr_spmm;
 pub use gemm::{gemm, gemm_into};
+// The single source of truth for the activation scalars (PR 5 deduped the
+// `bspmm.rs` copies): route all callers through these.
+pub use ops::{gelu, silu};
 pub use pack::PackedB;

@@ -5,6 +5,18 @@
 //! ablation benches, and the native training backend
 //! ([`crate::train::native`]), whose backward pass chains the `*_bwd`
 //! operators here between the packed backward GEMMs.
+//!
+//! Since PR 5 the slice-level operators route through the
+//! [`crate::kernels::simd`] dispatch table: softmax's max/exp/sum passes,
+//! the norm reductions and the activation forward/backward lanes all run
+//! on the detected AVX2/NEON arm (vector `exp` included) and fall back to
+//! the scalar arm under `BLAST_SIMD=off`. The per-element scalar functions
+//! ([`gelu`], [`silu`], [`gelu_grad`], [`silu_grad`]) remain the single
+//! source of truth for the math and the parity oracles for every arm —
+//! `bspmm.rs`'s former private copies were deduplicated into these
+//! (re-exported from [`crate::kernels`]).
+
+use crate::kernels::simd;
 
 #[inline(always)]
 pub fn silu(x: f32) -> f32 {
@@ -36,16 +48,59 @@ pub fn gelu_grad(x: f32) -> f32 {
 
 /// Fused GeLU backward over a hidden tile: `dh[i] *= gelu'(h[i])` — the
 /// epilogue of the MLP backward chain (`dh = dAct ∘ gelu'(h)`), applied in
-/// place on the cache-resident gradient tile.
+/// place on the cache-resident gradient tile. Dispatched.
 pub fn gelu_bwd_inplace(h: &[f32], dh: &mut [f32]) {
+    debug_assert_eq!(h.len(), dh.len());
+    (simd::dispatch().gelu_bwd_slice)(h, dh);
+}
+
+/// Scalar arm of [`gelu_bwd_inplace`] (dispatch-table slot
+/// `gelu_bwd_slice`; also the parity oracle).
+pub(crate) fn gelu_bwd_scalar(h: &[f32], dh: &mut [f32]) {
     debug_assert_eq!(h.len(), dh.len());
     for (d, &x) in dh.iter_mut().zip(h.iter()) {
         *d *= gelu_grad(x);
     }
 }
 
-/// In-place softmax over a row.
+/// `v[i] = gelu(v[i])` over a slice — dispatched (vector `exp` on SIMD
+/// arms). The unfused-MLP baselines and the native trainer use this.
+pub fn gelu_slice(v: &mut [f32]) {
+    (simd::dispatch().gelu_slice)(v);
+}
+
+/// `v[i] = silu(v[i])` over a slice — dispatched.
+pub fn silu_slice(v: &mut [f32]) {
+    (simd::dispatch().silu_slice)(v);
+}
+
+/// SwiGLU gate over a slice: `a[i] = silu(a[i]) * g[i]` — dispatched.
+pub fn silu_gate_slice(a: &mut [f32], g: &[f32]) {
+    debug_assert_eq!(a.len(), g.len());
+    (simd::dispatch().silu_gate_slice)(a, g);
+}
+
+/// SwiGLU backward over a hidden tile — dispatched:
+/// `dh1 = d_act ∘ h2 ∘ silu'(h1)`, `dh2 = d_act ∘ silu(h1)`.
+pub fn swiglu_bwd_slice(h1: &[f32], h2: &[f32], d_act: &[f32], dh1: &mut [f32], dh2: &mut [f32]) {
+    debug_assert!(h1.len() == h2.len() && h1.len() == d_act.len());
+    debug_assert!(h1.len() == dh1.len() && h1.len() == dh2.len());
+    (simd::dispatch().swiglu_bwd_slice)(h1, h2, d_act, dh1, dh2);
+}
+
+/// In-place softmax over a row — dispatched three-pass kernel (row max,
+/// shifted exp + sum, normalize), each pass on the active SIMD arm.
 pub fn softmax_row(row: &mut [f32]) {
+    let d = simd::dispatch();
+    let max = (d.row_max)(row);
+    let sum = (d.exp_shift_sum)(row, max);
+    (d.scale_slice)(row, 1.0 / sum);
+}
+
+/// Scalar reference softmax (the pre-dispatch implementation, fused
+/// single pass) — kept as the oracle the dispatched kernel is tested
+/// against.
+pub fn softmax_row_scalar(row: &mut [f32]) {
     let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let mut sum = 0.0;
     for v in row.iter_mut() {
@@ -58,21 +113,25 @@ pub fn softmax_row(row: &mut [f32]) {
     }
 }
 
-/// RMSNorm: `x * rsqrt(mean(x²) + eps) * g`, out-of-place.
+/// RMSNorm: `x * rsqrt(mean(x²) + eps) * g`, out-of-place. The
+/// mean-square reduction is dispatched; the normalize loop stays scalar
+/// (three-stream bandwidth-bound).
 pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32], eps: f32) {
     debug_assert_eq!(x.len(), g.len());
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let ms = (simd::dispatch().sumsq_shift_slice)(x, 0.0) / x.len() as f32;
     let r = 1.0 / (ms + eps).sqrt();
     for i in 0..x.len() {
         out[i] = x[i] * r * g[i];
     }
 }
 
-/// LayerNorm (no bias, matching the L2 model): `(x-μ)/σ * g`.
+/// LayerNorm (no bias, matching the L2 model): `(x-μ)/σ * g`. Both
+/// reductions (mean, shifted sum of squares) are dispatched.
 pub fn layernorm(x: &[f32], g: &[f32], out: &mut [f32], eps: f32) {
+    let d = simd::dispatch();
     let n = x.len() as f32;
-    let mu = x.iter().sum::<f32>() / n;
-    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let mu = (d.sum_slice)(x) / n;
+    let var = (d.sumsq_shift_slice)(x, mu) / n;
     let r = 1.0 / (var + eps).sqrt();
     for i in 0..x.len() {
         out[i] = (x[i] - mu) * r * g[i];
@@ -250,6 +309,59 @@ mod tests {
         gelu_bwd_inplace(&h, &mut dh);
         for (i, &x) in h.iter().enumerate() {
             assert!((dh[i] - gelu_grad(x)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn dispatched_softmax_matches_scalar_oracle() {
+        for n in [1usize, 2, 7, 8, 9, 31, 64, 65] {
+            let mut a: Vec<f32> = (0..n).map(|i| ((i * 37 % 11) as f32 - 5.0) * 0.7).collect();
+            let mut b = a.clone();
+            softmax_row(&mut a);
+            softmax_row_scalar(&mut b);
+            let mut sum = 0.0f32;
+            for i in 0..n {
+                assert!(
+                    (a[i] - b[i]).abs() < 2e-6,
+                    "n={n} [{i}]: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+                sum += a[i];
+            }
+            assert!((sum - 1.0).abs() < 1e-5, "n={n} sum {sum}");
+        }
+    }
+
+    #[test]
+    fn slice_helpers_match_scalar_formulas() {
+        let n = 21; // exercises vector body + tail on any arm
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 - 10.0) * 0.4).collect();
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut v = x.clone();
+        gelu_slice(&mut v);
+        for i in 0..n {
+            assert!((v[i] - gelu(x[i])).abs() < 2e-6, "gelu[{i}]");
+        }
+        let mut v = x.clone();
+        silu_slice(&mut v);
+        for i in 0..n {
+            assert!((v[i] - silu(x[i])).abs() < 2e-6, "silu[{i}]");
+        }
+        let mut v = x.clone();
+        silu_gate_slice(&mut v, &g);
+        for i in 0..n {
+            assert!((v[i] - silu(x[i]) * g[i]).abs() < 2e-6, "silu_gate[{i}]");
+        }
+        let da: Vec<f32> = (0..n).map(|i| 0.5 - (i % 5) as f32 * 0.2).collect();
+        let mut dh1 = vec![0.0f32; n];
+        let mut dh2 = vec![0.0f32; n];
+        swiglu_bwd_slice(&x, &g, &da, &mut dh1, &mut dh2);
+        for i in 0..n {
+            let w1 = da[i] * g[i] * silu_grad(x[i]);
+            let w2 = da[i] * silu(x[i]);
+            assert!((dh1[i] - w1).abs() < 2e-6, "swiglu dh1[{i}]");
+            assert!((dh2[i] - w2).abs() < 2e-6, "swiglu dh2[{i}]");
         }
     }
 

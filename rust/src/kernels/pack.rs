@@ -16,6 +16,7 @@
 //!   cache line run per depth step. Weight matrices are packed once at
 //!   engine build time and reused by every prefill/decode call.
 
+use crate::kernels::simd;
 use crate::util::threadpool;
 
 /// Column width of one packed B panel (matches the 16-wide micro-kernel
@@ -25,9 +26,17 @@ pub const NR: usize = 16;
 /// Transpose `rows × k` (row-major, leading dim `lda`) into a k-major
 /// panel: `out[kk*rows + i] = a[i*lda + kk]`. `out.len()` must be ≥
 /// `rows * k`.
+///
+/// The hot case (`lda == k`, i.e. a contiguous tile — every GEMM/BSpMM row
+/// tile and the fused-MLP hidden repack) routes through the dispatched
+/// [`pack_kt_panel`]; the strided general case stays scalar.
 pub fn pack_a_panel(a: &[f32], lda: usize, rows: usize, k: usize, out: &mut [f32]) {
     debug_assert!(rows == 0 || a.len() >= (rows - 1) * lda + k);
     debug_assert!(out.len() >= rows * k);
+    if lda == k {
+        pack_kt_panel(&a[..rows * k], rows, k, out);
+        return;
+    }
     for i in 0..rows {
         let row = &a[i * lda..i * lda + k];
         for (kk, &v) in row.iter().enumerate() {
@@ -39,12 +48,21 @@ pub fn pack_a_panel(a: &[f32], lda: usize, rows: usize, k: usize, out: &mut [f32
 /// Transpose a **contiguous** `rows × k` tile (leading dim == `k`) into a
 /// k-major panel: `out[kk*rows + r] = src[r*k + kk]`.
 ///
-/// Same result as [`pack_a_panel`] with `lda == k`, but blocked four rows
-/// at a time so each depth step writes four consecutive outputs from four
-/// streamed source rows — the layout the tiled attention kernel uses for
-/// its Q, Kᵀ and P tiles (`rows` = tile positions, `k` = `hd` or `tk`),
-/// where tiles are always contiguous slices of a head's `(seq, hd)` block.
+/// Same result as [`pack_a_panel`] with `lda == k` — the layout the tiled
+/// attention kernel uses for its Q, Kᵀ and P tiles (`rows` = tile
+/// positions, `k` = `hd` or `tk`), where tiles are always contiguous
+/// slices of a head's `(seq, hd)` block. Dispatched: the AVX2/NEON arms
+/// run in-register 8×8 / 4×4 transpose networks; the scalar arm is the
+/// PR-3 four-row blocked copy below. Packing is a pure permutation, so
+/// every arm is bit-identical.
 pub fn pack_kt_panel(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
+    (simd::dispatch().pack_kt)(src, rows, k, out);
+}
+
+/// Scalar arm of [`pack_kt_panel`]: blocked four rows at a time so each
+/// depth step writes four consecutive outputs from four streamed source
+/// rows.
+pub(crate) fn pack_kt_panel_scalar(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
     debug_assert!(src.len() >= rows * k);
     debug_assert!(out.len() >= rows * k);
     let mut r0 = 0;

@@ -1,0 +1,2540 @@
+//! Explicit-SIMD kernel backend with runtime CPU dispatch — the one place
+//! in the crate where vector code is *written*, not hoped for.
+//!
+//! PR 1–4 built every hot path on scalar Rust shaped so LLVM *can*
+//! autovectorize (fixed-size reborrows, unrolled lanes). This module makes
+//! the vector code deliberate: hand-written micro-kernel register tiles and
+//! element-wise lanes for **x86_64 AVX2+FMA** (8-lane `__m256`,
+//! `_mm256_fmadd_ps`) and **aarch64 NEON** (4-lane `float32x4_t`,
+//! `vfmaq_f32`), selected **once per process** into a [`KernelDispatch`]
+//! table of plain function pointers. The scalar implementations survive as
+//! the portable fallback arm of the same table *and* as parity oracles for
+//! the tests.
+//!
+//! # The dispatch seam
+//!
+//! [`dispatch`] resolves the active table: the SIMD arm detected at first
+//! use (`is_x86_feature_detected!("avx2")` + `"fma"` on x86_64; NEON is
+//! baseline on aarch64), unless the `BLAST_SIMD` environment variable
+//! (`off`/`0`/`false`/`scalar`/`no`) or [`set_simd_enabled`]`(false)` (the
+//! CLI's `--no-simd`) forces the scalar arm. Consumers resolve the table
+//! once per kernel invocation and pass it down (`microkernel_d`,
+//! `tile_bspmm_packed`, `causal_tile`), so the per-tile cost of dispatch is
+//! zero.
+//!
+//! # Fused epilogues
+//!
+//! [`Epilogue`] describes a transform applied to each output element of a
+//! micro-kernel call **during the C write-back**, while the accumulator
+//! tile is still in registers: bias add, GeLU/SiLU activation, bias +
+//! activation, or the SwiGLU gate (`silu(c) * g`). The contract is
+//! *exactly-once at final accumulation*: a call may carry an epilogue only
+//! if it performs the last accumulation into that C region (the packed
+//! GEMM runs full depth per panel; the BSpMM passes the epilogue on the
+//! last resident block of each block column). This is what lets
+//! `gelu_mlp_sparse` / `fused_mlp_sparse` / the engine's dense MLP drop
+//! their separate full-tensor activation passes.
+//!
+//! # Unsafe-boundary policy
+//!
+//! Every `unsafe` block of the SIMD backend lives in this file, in the
+//! arch-gated `avx2` / `neon` submodules. The function-pointer table is the
+//! boundary: the SIMD arms are only reachable through tables installed
+//! after feature detection, the wrappers are private, and everything above
+//! the seam (`microkernel.rs`, `pack.rs`, `ops.rs`, …) is safe code that
+//! works with any arm. Scratch buffers are 64-byte aligned
+//! ([`crate::util::scratch`]), but the lanes use unaligned load/store
+//! instructions throughout — alignment is a performance guarantee, never a
+//! soundness precondition, so ragged tails and caller-supplied slices are
+//! always legal.
+//!
+//! # Numerics
+//!
+//! The vector `exp` is the classic Cephes polynomial (used by
+//! sse_mathfun/SLEEF-style libraries): range-reduce by `log2(e)`, 6-term
+//! minimax polynomial, reconstruct with the exponent field. Relative error
+//! is ~2 ulp vs `f32::exp`, so SIMD and scalar arms agree to ≤ 1e-6 + 1e-6
+//! · |value| on every element-wise lane (the parity property tests pin
+//! this); pure-FMA contractions differ from scalar only by rounding of the
+//! fused multiply-add. Summation *order* within a lane never depends on
+//! input values, so results are deterministic per arm.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use crate::kernels::ops;
+
+/// Instruction set of a dispatch table arm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// x86_64 with AVX2 + FMA (8-lane f32, fused multiply-add).
+    Avx2Fma,
+    /// aarch64 NEON (4-lane f32, `vfmaq_f32`).
+    Neon,
+    /// Portable scalar Rust — the fallback arm and the parity oracle.
+    Scalar,
+}
+
+impl Isa {
+    /// Stable string recorded in `BENCH_*.json` metadata (`"avx2+fma"`,
+    /// `"neon"`, `"scalar"`), so perf-trajectory numbers are comparable
+    /// across machines.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// A transform fused into the micro-kernel C write-back.
+///
+/// Operand slices are relative to the C region of the call that carries the
+/// epilogue: `Bias`-family slices hold one value per C *column*;
+/// `SiluGate`'s `g` is a row-major matrix congruent with the C region
+/// (`g[i*ldg + j]` gates element `(i, j)`). [`Epilogue::shift`] re-bases
+/// the operands when a kernel tiles its C region.
+///
+/// Contract: the epilogue is applied **exactly once** per element, by the
+/// call that performs the **final** accumulation into that element — it
+/// transforms the fully-accumulated value `C_prev + ΣA·B`, so partial
+/// products must never pass through it.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum Epilogue<'a> {
+    /// Plain accumulate (`c += acc`), no transform.
+    #[default]
+    None,
+    /// `c = c + acc + bias[j]`.
+    Bias(&'a [f32]),
+    /// `c = gelu(c + acc + bias[j])`.
+    BiasGelu(&'a [f32]),
+    /// `c = silu(c + acc + bias[j])`.
+    BiasSilu(&'a [f32]),
+    /// `c = gelu(c + acc)` — the GPT-2 MLP hidden activation.
+    Gelu,
+    /// `c = silu(c + acc)`.
+    Silu,
+    /// `c = silu(c + acc) * g[i*ldg + j]` — the SwiGLU gate (paper Eq. 1).
+    SiluGate {
+        /// Gate operand, row-major, congruent with the C region.
+        g: &'a [f32],
+        /// Leading dimension (elements per row) of `g`.
+        ldg: usize,
+    },
+}
+
+impl<'a> Epilogue<'a> {
+    /// Re-base the operands for the sub-tile starting at `(i0, j0)` of the
+    /// region this epilogue was built for.
+    #[inline]
+    pub fn shift(&self, i0: usize, j0: usize) -> Epilogue<'a> {
+        match *self {
+            Epilogue::None => Epilogue::None,
+            Epilogue::Bias(b) => Epilogue::Bias(&b[j0..]),
+            Epilogue::BiasGelu(b) => Epilogue::BiasGelu(&b[j0..]),
+            Epilogue::BiasSilu(b) => Epilogue::BiasSilu(&b[j0..]),
+            Epilogue::Gelu => Epilogue::Gelu,
+            Epilogue::Silu => Epilogue::Silu,
+            Epilogue::SiluGate { g, ldg } => Epilogue::SiluGate { g: &g[i0 * ldg + j0..], ldg },
+        }
+    }
+
+    /// True when the transform maps 0 to 0, i.e. skipping it over a
+    /// never-accumulated (all-zero) region is exact. The `Bias` family is
+    /// not zero-preserving: a BSpMM with a fully-pruned block column must
+    /// still apply it there.
+    #[inline]
+    pub fn zero_preserving(&self) -> bool {
+        !matches!(
+            self,
+            Epilogue::Bias(_) | Epilogue::BiasGelu(_) | Epilogue::BiasSilu(_)
+        )
+    }
+
+    /// Scalar reference application to the fully-accumulated value `v` at
+    /// C coordinates `(i, j)` — the semantics every SIMD arm must match.
+    #[inline(always)]
+    pub fn apply(&self, v: f32, i: usize, j: usize) -> f32 {
+        match *self {
+            Epilogue::None => v,
+            Epilogue::Bias(b) => v + b[j],
+            Epilogue::BiasGelu(b) => ops::gelu(v + b[j]),
+            Epilogue::BiasSilu(b) => ops::silu(v + b[j]),
+            Epilogue::Gelu => ops::gelu(v),
+            Epilogue::Silu => ops::silu(v),
+            Epilogue::SiluGate { g, ldg } => ops::silu(v) * g[i * ldg + j],
+        }
+    }
+
+    /// Minimum operand coverage for a `rows × cols` C region, checked
+    /// (hard, not debug — the SIMD arms read the operands through raw
+    /// vector loads) at the `microkernel_d` / `apply_epilogue_region`
+    /// boundary, once per kernel call, so a short bias/gate slice fails
+    /// loudly instead of as an out-of-bounds vector read.
+    #[inline]
+    pub fn check_operands(&self, rows: usize, cols: usize) {
+        match *self {
+            Epilogue::Bias(b) | Epilogue::BiasGelu(b) | Epilogue::BiasSilu(b) => {
+                assert!(b.len() >= cols, "epilogue bias {} < cols {cols}", b.len());
+            }
+            Epilogue::SiluGate { g, ldg } => {
+                assert!(ldg >= cols, "epilogue gate ldg {ldg} < cols {cols}");
+                assert!(
+                    rows == 0 || g.len() >= (rows - 1) * ldg + cols,
+                    "epilogue gate {} too short for {rows}x{cols} (ldg {ldg})",
+                    g.len()
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Fixed-shape micro-kernel register tile: `C[R×NR] += Aᵖ·Bᵖ`, epilogue on
+/// write-back. `ap` is k-major with leading dim `lda`, `bp` row-major with
+/// leading dim `ldb`, `c` row-major with leading dim `ldc`; the tile shape
+/// (4×16, 4×8 or 2×32) is fixed by the table slot.
+pub type MkFn = fn(&[f32], usize, &[f32], usize, usize, &mut [f32], usize, Epilogue<'_>);
+
+/// Remainder micro-kernel: `rows ≤ 4`, `cols ≤ 32`, any combination
+/// (`(ap, lda, rows, bp, ldb, cols, k, c, ldc, ep)`).
+pub type MkTailFn =
+    fn(&[f32], usize, usize, &[f32], usize, usize, usize, &mut [f32], usize, Epilogue<'_>);
+
+/// The per-ISA kernel table. One `static` per arm; every field is a plain
+/// function pointer so the table is `Sync` and resolution is a pointer
+/// read. Scalar-arm entries are the exact legacy implementations, so
+/// forcing scalar reproduces pre-SIMD behavior bit-for-bit.
+pub struct KernelDispatch {
+    /// Which arm this table is.
+    pub isa: Isa,
+    /// 4×16 register tile (`C += Aᵖ·Bᵖ`, epilogue fused).
+    pub mk4x16: MkFn,
+    /// 4×8 register tile.
+    pub mk4x8: MkFn,
+    /// 2×32 register tile (see `microkernel.rs` on register budgets).
+    pub mk2x32: MkFn,
+    /// Remainder tile, `rows ≤ 4` × `cols ≤ 32`.
+    pub mk_tail: MkTailFn,
+    /// Blocked transpose pack: `out[kk*rows + r] = src[r*k + kk]`
+    /// (`(src, rows, k, out)` — the contiguous A/X/Kᵀ panel pack).
+    pub pack_kt: fn(&[f32], usize, usize, &mut [f32]),
+    /// `v[i] = gelu(v[i])` (tanh approximation).
+    pub gelu_slice: fn(&mut [f32]),
+    /// `v[i] = silu(v[i])`.
+    pub silu_slice: fn(&mut [f32]),
+    /// `a[i] = silu(a[i]) * g[i]` — the SwiGLU gate lane.
+    pub silu_gate_slice: fn(&mut [f32], &[f32]),
+    /// `dh[i] *= gelu'(h[i])` — GeLU backward lane.
+    pub gelu_bwd_slice: fn(&[f32], &mut [f32]),
+    /// SwiGLU backward lane: `(h1, h2, d_act, dh1, dh2)` with
+    /// `dh1 = d_act·h2·silu'(h1)`, `dh2 = d_act·silu(h1)`.
+    pub swiglu_bwd_slice: fn(&[f32], &[f32], &[f32], &mut [f32], &mut [f32]),
+    /// `y[i] += b[i]` — standalone bias lane (cold epilogue regions).
+    pub add_bias_slice: fn(&mut [f32], &[f32]),
+    /// Max over a row (`-inf` for an empty row) — softmax pass 1.
+    pub row_max: fn(&[f32]) -> f32,
+    /// `v[i] *= scale` returning the running max — the attention score
+    /// scale+mask-max fusion (`-inf` for an empty row).
+    pub scale_max_slice: fn(&mut [f32], f32) -> f32,
+    /// `v[i] = exp(v[i] - shift)` returning the sum — softmax pass 2.
+    pub exp_shift_sum: fn(&mut [f32], f32) -> f32,
+    /// `v[i] *= scale` — softmax normalize / streaming rescale.
+    pub scale_slice: fn(&mut [f32], f32),
+    /// Plain sum — layernorm mean reduction.
+    pub sum_slice: fn(&[f32]) -> f32,
+    /// `Σ (v[i] - shift)²` — layernorm variance / rmsnorm mean-square
+    /// (`shift = 0`) reduction.
+    pub sumsq_shift_slice: fn(&[f32], f32) -> f32,
+    /// Dot product — the decode attention score lane.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `y += a * x` — the decode attention value-accumulate lane.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+}
+
+impl KernelDispatch {
+    /// Apply `ep` to a `rows × cols` row-major region whose accumulation is
+    /// already complete — the cold path for C regions no micro-kernel call
+    /// finishes (fully-pruned BSpMM block columns, `k == 0` GEMMs).
+    pub fn apply_epilogue_region(
+        &self,
+        c: &mut [f32],
+        ldc: usize,
+        rows: usize,
+        cols: usize,
+        ep: Epilogue<'_>,
+    ) {
+        if rows == 0 || cols == 0 {
+            return;
+        }
+        ep.check_operands(rows, cols);
+        debug_assert!(c.len() >= (rows - 1) * ldc + cols);
+        for i in 0..rows {
+            let row = &mut c[i * ldc..i * ldc + cols];
+            match ep {
+                Epilogue::None => {}
+                Epilogue::Bias(b) => (self.add_bias_slice)(row, &b[..cols]),
+                Epilogue::BiasGelu(b) => {
+                    (self.add_bias_slice)(row, &b[..cols]);
+                    (self.gelu_slice)(row);
+                }
+                Epilogue::BiasSilu(b) => {
+                    (self.add_bias_slice)(row, &b[..cols]);
+                    (self.silu_slice)(row);
+                }
+                Epilogue::Gelu => (self.gelu_slice)(row),
+                Epilogue::Silu => (self.silu_slice)(row),
+                Epilogue::SiluGate { g, ldg } => {
+                    (self.silu_gate_slice)(row, &g[i * ldg..i * ldg + cols])
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// table resolution: detection + overrides
+// ---------------------------------------------------------------------
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static ENV_OFF: OnceLock<bool> = OnceLock::new();
+static NATIVE: OnceLock<&'static KernelDispatch> = OnceLock::new();
+
+/// Does a `BLAST_SIMD` value disable the SIMD arm? Case-insensitive, so
+/// `BLAST_SIMD=OFF` behaves like `off`.
+fn env_disables(val: Option<&str>) -> bool {
+    matches!(
+        val.map(|v| v.to_ascii_lowercase()).as_deref(),
+        Some("off" | "0" | "false" | "no" | "scalar")
+    )
+}
+
+/// Pure resolution rule `(env_off, forced_scalar) → table`; split out so
+/// tests can exercise every combination without racing global state.
+fn resolve(env_off: bool, forced_scalar: bool) -> &'static KernelDispatch {
+    if env_off || forced_scalar {
+        scalar()
+    } else {
+        native()
+    }
+}
+
+/// The active kernel table: the detected SIMD arm unless `BLAST_SIMD`
+/// or [`set_simd_enabled`]`(false)` forces scalar.
+#[inline]
+pub fn dispatch() -> &'static KernelDispatch {
+    let env_off = *ENV_OFF
+        .get_or_init(|| env_disables(std::env::var("BLAST_SIMD").ok().as_deref()));
+    resolve(env_off, FORCE_SCALAR.load(Ordering::Relaxed))
+}
+
+/// The portable scalar table (always available; the parity oracle).
+pub fn scalar() -> &'static KernelDispatch {
+    &SCALAR_TABLE
+}
+
+/// The best table this host supports (detection runs once). Equal to
+/// [`scalar`] when the host has no supported SIMD extension.
+pub fn native() -> &'static KernelDispatch {
+    NATIVE.get_or_init(detect)
+}
+
+/// Programmatic override behind the CLI's `--no-simd`: `false` forces the
+/// scalar arm for subsequent [`dispatch`] calls. Meant to be set once at
+/// process startup, before kernel work begins — flipping it mid-run is
+/// safe (all arms are correct) but changes rounding between calls, so
+/// bit-reproducibility comparisons must not straddle a flip. Tests that
+/// want a specific arm should pass [`scalar`]/[`native`] tables explicitly
+/// instead of toggling this.
+pub fn set_simd_enabled(on: bool) {
+    FORCE_SCALAR.store(!on, Ordering::Relaxed);
+}
+
+/// Detect the best arm for this host.
+#[allow(unreachable_code)] // the aarch64 arm returns unconditionally
+fn detect() -> &'static KernelDispatch {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return &AVX2_TABLE;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &NEON_TABLE;
+    }
+    &SCALAR_TABLE
+}
+
+// ---------------------------------------------------------------------
+// scalar arm — the legacy implementations, verbatim semantics
+// ---------------------------------------------------------------------
+
+static SCALAR_TABLE: KernelDispatch = KernelDispatch {
+    isa: Isa::Scalar,
+    mk4x16: crate::kernels::microkernel::mk4x16_scalar,
+    mk4x8: crate::kernels::microkernel::mk4x8_scalar,
+    mk2x32: crate::kernels::microkernel::mk2x32_scalar,
+    mk_tail: crate::kernels::microkernel::mk_tail_scalar,
+    pack_kt: crate::kernels::pack::pack_kt_panel_scalar,
+    gelu_slice: scalar_arm::gelu_slice,
+    silu_slice: scalar_arm::silu_slice,
+    silu_gate_slice: scalar_arm::silu_gate_slice,
+    gelu_bwd_slice: ops::gelu_bwd_scalar,
+    swiglu_bwd_slice: scalar_arm::swiglu_bwd_slice,
+    add_bias_slice: scalar_arm::add_bias_slice,
+    row_max: scalar_arm::row_max,
+    scale_max_slice: scalar_arm::scale_max_slice,
+    exp_shift_sum: scalar_arm::exp_shift_sum,
+    scale_slice: scalar_arm::scale_slice,
+    sum_slice: scalar_arm::sum_slice,
+    sumsq_shift_slice: scalar_arm::sumsq_shift_slice,
+    dot: crate::kernels::attention::dot_lanes,
+    axpy: crate::kernels::gemm::axpy,
+};
+
+/// Scalar lane bodies. Loop shapes deliberately mirror the pre-SIMD code
+/// (sequential folds, same association order), so the scalar arm is
+/// bit-identical to the seed kernels it replaced.
+mod scalar_arm {
+    use crate::kernels::ops;
+
+    pub fn gelu_slice(v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *x = ops::gelu(*x);
+        }
+    }
+
+    pub fn silu_slice(v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *x = ops::silu(*x);
+        }
+    }
+
+    pub fn silu_gate_slice(a: &mut [f32], g: &[f32]) {
+        debug_assert_eq!(a.len(), g.len());
+        for (x, &gg) in a.iter_mut().zip(g) {
+            *x = ops::silu(*x) * gg;
+        }
+    }
+
+    pub fn swiglu_bwd_slice(
+        h1: &[f32],
+        h2: &[f32],
+        d_act: &[f32],
+        dh1: &mut [f32],
+        dh2: &mut [f32],
+    ) {
+        debug_assert!(
+            h1.len() == h2.len()
+                && h1.len() == d_act.len()
+                && h1.len() == dh1.len()
+                && h1.len() == dh2.len()
+        );
+        for i in 0..h1.len() {
+            dh1[i] = d_act[i] * h2[i] * ops::silu_grad(h1[i]);
+            dh2[i] = d_act[i] * ops::silu(h1[i]);
+        }
+    }
+
+    pub fn add_bias_slice(y: &mut [f32], b: &[f32]) {
+        debug_assert_eq!(y.len(), b.len());
+        for (v, &bb) in y.iter_mut().zip(b) {
+            *v += bb;
+        }
+    }
+
+    pub fn row_max(v: &[f32]) -> f32 {
+        v.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+    }
+
+    pub fn scale_max_slice(v: &mut [f32], scale: f32) -> f32 {
+        let mut max = f32::NEG_INFINITY;
+        for x in v.iter_mut() {
+            *x *= scale;
+            max = max.max(*x);
+        }
+        max
+    }
+
+    pub fn exp_shift_sum(v: &mut [f32], shift: f32) -> f32 {
+        let mut sum = 0.0f32;
+        for x in v.iter_mut() {
+            *x = (*x - shift).exp();
+            sum += *x;
+        }
+        sum
+    }
+
+    pub fn scale_slice(v: &mut [f32], scale: f32) {
+        for x in v.iter_mut() {
+            *x *= scale;
+        }
+    }
+
+    pub fn sum_slice(v: &[f32]) -> f32 {
+        v.iter().sum()
+    }
+
+    pub fn sumsq_shift_slice(v: &[f32], shift: f32) -> f32 {
+        let mut acc = 0.0f32;
+        for &x in v {
+            let d = x - shift;
+            acc += d * d;
+        }
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 + FMA arm (x86_64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_TABLE: KernelDispatch = KernelDispatch {
+    isa: Isa::Avx2Fma,
+    mk4x16: avx2::mk4x16,
+    mk4x8: avx2::mk4x8,
+    mk2x32: avx2::mk2x32,
+    mk_tail: avx2::mk_tail,
+    pack_kt: avx2::pack_kt,
+    gelu_slice: avx2::gelu_slice,
+    silu_slice: avx2::silu_slice,
+    silu_gate_slice: avx2::silu_gate_slice,
+    gelu_bwd_slice: avx2::gelu_bwd_slice,
+    swiglu_bwd_slice: avx2::swiglu_bwd_slice,
+    add_bias_slice: avx2::add_bias_slice,
+    row_max: avx2::row_max,
+    scale_max_slice: avx2::scale_max_slice,
+    exp_shift_sum: avx2::exp_shift_sum,
+    scale_slice: avx2::scale_slice,
+    sum_slice: avx2::sum_slice,
+    sumsq_shift_slice: avx2::sumsq_shift_slice,
+    dot: avx2::dot,
+    axpy: avx2::axpy,
+};
+
+/// AVX2+FMA lane implementations. Layout per lane: a safe wrapper (the
+/// table entry — sound because the table is only installed after
+/// `is_x86_feature_detected!`) around a `#[target_feature]` body whose
+/// `unsafe` blocks are the crate's only vector-intrinsic code. All memory
+/// access is via unaligned load/store, so slice alignment is never a
+/// soundness requirement; scalar tails reuse the scalar-arm formulas.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)] // GEMM kernel ABIs are what they are
+mod avx2 {
+    use super::Epilogue;
+    use crate::kernels::ops;
+    use std::arch::x86_64::*;
+
+    // ---- helpers ----------------------------------------------------
+
+    /// Horizontal sum of all 8 lanes.
+    #[inline(always)]
+    unsafe fn hsum(v: __m256) -> f32 {
+        unsafe {
+            let q = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+            let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+            let s = _mm_add_ss(d, _mm_shuffle_ps::<0b01>(d, d));
+            _mm_cvtss_f32(s)
+        }
+    }
+
+    /// Horizontal max of all 8 lanes.
+    #[inline(always)]
+    unsafe fn hmax(v: __m256) -> f32 {
+        unsafe {
+            let q = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+            let d = _mm_max_ps(q, _mm_movehl_ps(q, q));
+            let s = _mm_max_ss(d, _mm_shuffle_ps::<0b01>(d, d));
+            _mm_cvtss_f32(s)
+        }
+    }
+
+    /// Vector `exp` — Cephes polynomial (see the module doc on numerics).
+    #[inline(always)]
+    unsafe fn exp_ps(x: __m256) -> __m256 {
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let x = _mm256_min_ps(x, _mm256_set1_ps(88.0));
+            let x = _mm256_max_ps(x, _mm256_set1_ps(-88.0));
+            // n = floor(x * log2(e) + 0.5)
+            let fx = _mm256_floor_ps(_mm256_fmadd_ps(
+                x,
+                _mm256_set1_ps(std::f32::consts::LOG2_E),
+                _mm256_set1_ps(0.5),
+            ));
+            // r = x - n*ln(2), split into hi/lo parts for precision
+            let r = _mm256_sub_ps(
+                _mm256_sub_ps(x, _mm256_mul_ps(fx, _mm256_set1_ps(0.693359375))),
+                _mm256_mul_ps(fx, _mm256_set1_ps(-2.121_944_4e-4)),
+            );
+            let r2 = _mm256_mul_ps(r, r);
+            let mut p = _mm256_set1_ps(1.987_569_1e-4);
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.398_2e-3));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(8.333_452e-3));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(4.166_579_6e-2));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.666_666_5e-1));
+            p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(5.000_000_3e-1));
+            let y = _mm256_fmadd_ps(p, r2, _mm256_add_ps(r, one));
+            // * 2^n via the exponent field (n is integral after floor)
+            let n = _mm256_cvttps_epi32(fx);
+            let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+                n,
+                _mm256_set1_epi32(127),
+            )));
+            _mm256_mul_ps(y, pow2n)
+        }
+    }
+
+    /// `silu(x) = x / (1 + exp(-x))`.
+    #[inline(always)]
+    unsafe fn silu_ps(x: __m256) -> __m256 {
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let neg = _mm256_sub_ps(_mm256_setzero_ps(), x);
+            _mm256_div_ps(x, _mm256_add_ps(one, exp_ps(neg)))
+        }
+    }
+
+    /// `sigmoid(x) = 1 / (1 + exp(-x))`.
+    #[inline(always)]
+    unsafe fn sigmoid_ps(x: __m256) -> __m256 {
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let neg = _mm256_sub_ps(_mm256_setzero_ps(), x);
+            _mm256_div_ps(one, _mm256_add_ps(one, exp_ps(neg)))
+        }
+    }
+
+    /// `tanh(u) = (e^{2u} - 1) / (e^{2u} + 1)` via the clamped `exp_ps`
+    /// (the clamp saturates the ratio to ±1 for large |u|).
+    #[inline(always)]
+    unsafe fn tanh_ps(u: __m256) -> __m256 {
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let e = exp_ps(_mm256_add_ps(u, u));
+            _mm256_div_ps(_mm256_sub_ps(e, one), _mm256_add_ps(e, one))
+        }
+    }
+
+    const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi), matches ops::gelu
+    const GELU_A: f32 = 0.044715;
+
+    /// `u(x) = C·(x + A·x³)` — the gelu tanh argument.
+    #[inline(always)]
+    unsafe fn gelu_u_ps(x: __m256) -> __m256 {
+        unsafe {
+            let x2 = _mm256_mul_ps(x, x);
+            let inner = _mm256_fmadd_ps(_mm256_mul_ps(_mm256_set1_ps(GELU_A), x2), x, x);
+            _mm256_mul_ps(_mm256_set1_ps(GELU_C), inner)
+        }
+    }
+
+    /// `gelu(x) = 0.5·x·(1 + tanh(u)) = x·e^{2u}/(e^{2u}+1)`.
+    #[inline(always)]
+    unsafe fn gelu_ps(x: __m256) -> __m256 {
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let u = gelu_u_ps(x);
+            let e = exp_ps(_mm256_add_ps(u, u));
+            _mm256_mul_ps(x, _mm256_div_ps(e, _mm256_add_ps(e, one)))
+        }
+    }
+
+    /// `gelu'(x) = 0.5(1+t) + 0.5·x·(1−t²)·C·(1+3A·x²)`, `t = tanh(u)`.
+    #[inline(always)]
+    unsafe fn gelu_grad_ps(x: __m256) -> __m256 {
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let half = _mm256_set1_ps(0.5);
+            let t = tanh_ps(gelu_u_ps(x));
+            let x2 = _mm256_mul_ps(x, x);
+            let du = _mm256_mul_ps(
+                _mm256_set1_ps(GELU_C),
+                _mm256_fmadd_ps(_mm256_set1_ps(3.0 * GELU_A), x2, one),
+            );
+            let sech2 = _mm256_sub_ps(one, _mm256_mul_ps(t, t));
+            let lhs = _mm256_mul_ps(half, _mm256_add_ps(one, t));
+            _mm256_fmadd_ps(_mm256_mul_ps(_mm256_mul_ps(half, x), sech2), du, lhs)
+        }
+    }
+
+    /// Apply the epilogue to one 8-wide writeback vector at C coordinates
+    /// `(i, j..j+8)`. SAFETY: caller guarantees the operand coverage
+    /// checked by `Epilogue::check_operands`.
+    #[inline(always)]
+    unsafe fn apply_ep(v: __m256, i: usize, j: usize, ep: &Epilogue<'_>) -> __m256 {
+        unsafe {
+            match *ep {
+                Epilogue::None => v,
+                Epilogue::Bias(b) => _mm256_add_ps(v, _mm256_loadu_ps(b.as_ptr().add(j))),
+                Epilogue::BiasGelu(b) => {
+                    gelu_ps(_mm256_add_ps(v, _mm256_loadu_ps(b.as_ptr().add(j))))
+                }
+                Epilogue::BiasSilu(b) => {
+                    silu_ps(_mm256_add_ps(v, _mm256_loadu_ps(b.as_ptr().add(j))))
+                }
+                Epilogue::Gelu => gelu_ps(v),
+                Epilogue::Silu => silu_ps(v),
+                Epilogue::SiluGate { g, ldg } => _mm256_mul_ps(
+                    silu_ps(v),
+                    _mm256_loadu_ps(g.as_ptr().add(i * ldg + j)),
+                ),
+            }
+        }
+    }
+
+    // ---- micro-kernel register tiles --------------------------------
+
+    pub fn mk4x16(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { mk4x16_tf(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn mk4x16_tf(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe { mk_rxw::<4, 2>(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    pub fn mk4x8(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: as above.
+        unsafe { mk4x8_tf(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn mk4x8_tf(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe { mk_rxw::<4, 1>(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    pub fn mk2x32(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: as above.
+        unsafe { mk2x32_tf(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn mk2x32_tf(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe { mk_rxw::<2, 4>(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    /// R rows × (W·8) columns register tile: R·W YMM accumulators, one
+    /// broadcast per (row, depth step), W row loads per depth step, C
+    /// touched exactly once with the epilogue fused into the store.
+    /// `inline(always)` without its own `target_feature`: the generic body
+    /// is only ever inlined into the concrete `_tf` entries above, so it
+    /// codegens with AVX2+FMA enabled (the standard helper pattern —
+    /// `target_feature` and `inline(always)` cannot be combined, and
+    /// keeping the generic free of the attribute sidesteps the generic-fn
+    /// restriction).
+    #[inline(always)]
+    unsafe fn mk_rxw<const R: usize, const W: usize>(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe {
+            debug_assert!(k == 0 || ap.len() >= (k - 1) * lda + R);
+            debug_assert!(k == 0 || bp.len() >= (k - 1) * ldb + W * 8);
+            debug_assert!(c.len() >= (R - 1) * ldc + W * 8);
+            let mut acc = [[_mm256_setzero_ps(); W]; R];
+            let a_ptr = ap.as_ptr();
+            let b_ptr = bp.as_ptr();
+            for kk in 0..k {
+                let brow = b_ptr.add(kk * ldb);
+                let mut bv = [_mm256_setzero_ps(); W];
+                for (w, bvw) in bv.iter_mut().enumerate() {
+                    *bvw = _mm256_loadu_ps(brow.add(w * 8));
+                }
+                let arow = a_ptr.add(kk * lda);
+                for (i, acci) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*arow.add(i));
+                    for (w, bvw) in bv.iter().enumerate() {
+                        acci[w] = _mm256_fmadd_ps(av, *bvw, acci[w]);
+                    }
+                }
+            }
+            for (i, acci) in acc.iter().enumerate() {
+                let crow = c.as_mut_ptr().add(i * ldc);
+                for (w, accw) in acci.iter().enumerate() {
+                    let v = _mm256_add_ps(_mm256_loadu_ps(crow.add(w * 8)), *accw);
+                    _mm256_storeu_ps(crow.add(w * 8), apply_ep(v, i, w * 8, &ep));
+                }
+            }
+        }
+    }
+
+    /// Remainder tile: `rows ≤ 4`, `cols ≤ 32`. Full 8-wide chunks run
+    /// vectorized; the last `cols % 8` columns accumulate in scalar lanes
+    /// (by construction of the tiling loop this remainder only coexists
+    /// with `cols < 8`, so register pressure stays within budget).
+    #[allow(clippy::too_many_arguments)]
+    pub fn mk_tail(
+        ap: &[f32],
+        lda: usize,
+        rows: usize,
+        bp: &[f32],
+        ldb: usize,
+        cols: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { mk_tail_impl(ap, lda, rows, bp, ldb, cols, k, c, ldc, ep) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn mk_tail_impl(
+        ap: &[f32],
+        lda: usize,
+        rows: usize,
+        bp: &[f32],
+        ldb: usize,
+        cols: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe {
+            debug_assert!(rows <= 4 && cols <= 32);
+            let chunks = cols / 8;
+            let rem = cols - chunks * 8;
+            let mut acc = [[_mm256_setzero_ps(); 4]; 4];
+            let mut racc = [[0.0f32; 8]; 4];
+            let a_ptr = ap.as_ptr();
+            let b_ptr = bp.as_ptr();
+            for kk in 0..k {
+                let brow = b_ptr.add(kk * ldb);
+                for i in 0..rows {
+                    let a = *a_ptr.add(kk * lda + i);
+                    let av = _mm256_set1_ps(a);
+                    for ch in 0..chunks {
+                        acc[i][ch] =
+                            _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(ch * 8)), acc[i][ch]);
+                    }
+                    for j in 0..rem {
+                        racc[i][j] += a * *brow.add(chunks * 8 + j);
+                    }
+                }
+            }
+            for i in 0..rows {
+                let crow = c.as_mut_ptr().add(i * ldc);
+                for ch in 0..chunks {
+                    let v = _mm256_add_ps(_mm256_loadu_ps(crow.add(ch * 8)), acc[i][ch]);
+                    _mm256_storeu_ps(crow.add(ch * 8), apply_ep(v, i, ch * 8, &ep));
+                }
+                for j in 0..rem {
+                    let col = chunks * 8 + j;
+                    let v = *crow.add(col) + racc[i][j];
+                    *crow.add(col) = ep.apply(v, i, col);
+                }
+            }
+        }
+    }
+
+    // ---- pack -------------------------------------------------------
+
+    /// In-register 8×8 transpose: rows `r0..r0+8` × depth `k0..k0+8` of a
+    /// row-major source land as 8 contiguous 8-wide stores in the k-major
+    /// panel. The unpack/shuffle/permute network is validated by numpy
+    /// emulation in `python/tests/simd_check.py`.
+    #[inline(always)]
+    unsafe fn transpose8x8(src: *const f32, src_stride: usize, dst: *mut f32, dst_stride: usize) {
+        unsafe {
+            let r0 = _mm256_loadu_ps(src);
+            let r1 = _mm256_loadu_ps(src.add(src_stride));
+            let r2 = _mm256_loadu_ps(src.add(2 * src_stride));
+            let r3 = _mm256_loadu_ps(src.add(3 * src_stride));
+            let r4 = _mm256_loadu_ps(src.add(4 * src_stride));
+            let r5 = _mm256_loadu_ps(src.add(5 * src_stride));
+            let r6 = _mm256_loadu_ps(src.add(6 * src_stride));
+            let r7 = _mm256_loadu_ps(src.add(7 * src_stride));
+            let t0 = _mm256_unpacklo_ps(r0, r1);
+            let t1 = _mm256_unpackhi_ps(r0, r1);
+            let t2 = _mm256_unpacklo_ps(r2, r3);
+            let t3 = _mm256_unpackhi_ps(r2, r3);
+            let t4 = _mm256_unpacklo_ps(r4, r5);
+            let t5 = _mm256_unpackhi_ps(r4, r5);
+            let t6 = _mm256_unpacklo_ps(r6, r7);
+            let t7 = _mm256_unpackhi_ps(r6, r7);
+            let s0 = _mm256_shuffle_ps::<0x44>(t0, t2);
+            let s1 = _mm256_shuffle_ps::<0xEE>(t0, t2);
+            let s2 = _mm256_shuffle_ps::<0x44>(t1, t3);
+            let s3 = _mm256_shuffle_ps::<0xEE>(t1, t3);
+            let s4 = _mm256_shuffle_ps::<0x44>(t4, t6);
+            let s5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+            let s6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+            let s7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+            _mm256_storeu_ps(dst, _mm256_permute2f128_ps::<0x20>(s0, s4));
+            _mm256_storeu_ps(dst.add(dst_stride), _mm256_permute2f128_ps::<0x20>(s1, s5));
+            _mm256_storeu_ps(dst.add(2 * dst_stride), _mm256_permute2f128_ps::<0x20>(s2, s6));
+            _mm256_storeu_ps(dst.add(3 * dst_stride), _mm256_permute2f128_ps::<0x20>(s3, s7));
+            _mm256_storeu_ps(dst.add(4 * dst_stride), _mm256_permute2f128_ps::<0x31>(s0, s4));
+            _mm256_storeu_ps(dst.add(5 * dst_stride), _mm256_permute2f128_ps::<0x31>(s1, s5));
+            _mm256_storeu_ps(dst.add(6 * dst_stride), _mm256_permute2f128_ps::<0x31>(s2, s6));
+            _mm256_storeu_ps(dst.add(7 * dst_stride), _mm256_permute2f128_ps::<0x31>(s3, s7));
+        }
+    }
+
+    pub fn pack_kt(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { pack_kt_impl(src, rows, k, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn pack_kt_impl(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
+        unsafe {
+            debug_assert!(src.len() >= rows * k);
+            debug_assert!(out.len() >= rows * k);
+            let sp = src.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut r0 = 0;
+            while r0 + 8 <= rows {
+                let mut k0 = 0;
+                while k0 + 8 <= k {
+                    transpose8x8(sp.add(r0 * k + k0), k, op.add(k0 * rows + r0), rows);
+                    k0 += 8;
+                }
+                for kk in k0..k {
+                    for i in 0..8 {
+                        *op.add(kk * rows + r0 + i) = *sp.add((r0 + i) * k + kk);
+                    }
+                }
+                r0 += 8;
+            }
+            for r in r0..rows {
+                for kk in 0..k {
+                    *op.add(kk * rows + r) = *sp.add(r * k + kk);
+                }
+            }
+        }
+    }
+
+    // ---- element-wise / reduction lanes -----------------------------
+
+    pub fn gelu_slice(v: &mut [f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { gelu_slice_impl(v) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gelu_slice_impl(v: &mut [f32]) {
+        unsafe {
+            let n = v.len();
+            let p = v.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                _mm256_storeu_ps(p.add(i), gelu_ps(_mm256_loadu_ps(p.add(i))));
+                i += 8;
+            }
+            for j in i..n {
+                *p.add(j) = ops::gelu(*p.add(j));
+            }
+        }
+    }
+
+    pub fn silu_slice(v: &mut [f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { silu_slice_impl(v) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn silu_slice_impl(v: &mut [f32]) {
+        unsafe {
+            let n = v.len();
+            let p = v.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                _mm256_storeu_ps(p.add(i), silu_ps(_mm256_loadu_ps(p.add(i))));
+                i += 8;
+            }
+            for j in i..n {
+                *p.add(j) = ops::silu(*p.add(j));
+            }
+        }
+    }
+
+    pub fn silu_gate_slice(a: &mut [f32], g: &[f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { silu_gate_impl(a, g) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn silu_gate_impl(a: &mut [f32], g: &[f32]) {
+        unsafe {
+            debug_assert_eq!(a.len(), g.len());
+            let n = a.len();
+            let ap = a.as_mut_ptr();
+            let gp = g.as_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                let x = _mm256_loadu_ps(ap.add(i));
+                let gg = _mm256_loadu_ps(gp.add(i));
+                _mm256_storeu_ps(ap.add(i), _mm256_mul_ps(silu_ps(x), gg));
+                i += 8;
+            }
+            for j in i..n {
+                *ap.add(j) = ops::silu(*ap.add(j)) * *gp.add(j);
+            }
+        }
+    }
+
+    pub fn gelu_bwd_slice(h: &[f32], dh: &mut [f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { gelu_bwd_impl(h, dh) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gelu_bwd_impl(h: &[f32], dh: &mut [f32]) {
+        unsafe {
+            debug_assert_eq!(h.len(), dh.len());
+            let n = h.len();
+            let hp = h.as_ptr();
+            let dp = dh.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                let x = _mm256_loadu_ps(hp.add(i));
+                let d = _mm256_loadu_ps(dp.add(i));
+                _mm256_storeu_ps(dp.add(i), _mm256_mul_ps(d, gelu_grad_ps(x)));
+                i += 8;
+            }
+            for j in i..n {
+                *dp.add(j) *= ops::gelu_grad(*hp.add(j));
+            }
+        }
+    }
+
+    pub fn swiglu_bwd_slice(
+        h1: &[f32],
+        h2: &[f32],
+        d_act: &[f32],
+        dh1: &mut [f32],
+        dh2: &mut [f32],
+    ) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { swiglu_bwd_impl(h1, h2, d_act, dh1, dh2) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn swiglu_bwd_impl(
+        h1: &[f32],
+        h2: &[f32],
+        d_act: &[f32],
+        dh1: &mut [f32],
+        dh2: &mut [f32],
+    ) {
+        unsafe {
+            let n = h1.len();
+            debug_assert!(h2.len() == n && d_act.len() == n && dh1.len() == n && dh2.len() == n);
+            let one = _mm256_set1_ps(1.0);
+            let mut i = 0;
+            while i + 8 <= n {
+                let x = _mm256_loadu_ps(h1.as_ptr().add(i));
+                let g = _mm256_loadu_ps(h2.as_ptr().add(i));
+                let d = _mm256_loadu_ps(d_act.as_ptr().add(i));
+                let s = sigmoid_ps(x);
+                let sil = _mm256_mul_ps(x, s);
+                // silu'(x) = s · (1 + x·(1−s))
+                let grad = _mm256_mul_ps(s, _mm256_fmadd_ps(x, _mm256_sub_ps(one, s), one));
+                _mm256_storeu_ps(dh1.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_mul_ps(d, g), grad));
+                _mm256_storeu_ps(dh2.as_mut_ptr().add(i), _mm256_mul_ps(d, sil));
+                i += 8;
+            }
+            for j in i..n {
+                dh1[j] = d_act[j] * h2[j] * ops::silu_grad(h1[j]);
+                dh2[j] = d_act[j] * ops::silu(h1[j]);
+            }
+        }
+    }
+
+    pub fn add_bias_slice(y: &mut [f32], b: &[f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { add_bias_impl(y, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_bias_impl(y: &mut [f32], b: &[f32]) {
+        unsafe {
+            debug_assert_eq!(y.len(), b.len());
+            let n = y.len();
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = _mm256_add_ps(
+                    _mm256_loadu_ps(y.as_ptr().add(i)),
+                    _mm256_loadu_ps(b.as_ptr().add(i)),
+                );
+                _mm256_storeu_ps(y.as_mut_ptr().add(i), v);
+                i += 8;
+            }
+            for j in i..n {
+                y[j] += b[j];
+            }
+        }
+    }
+
+    pub fn row_max(v: &[f32]) -> f32 {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { row_max_impl(v) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_max_impl(v: &[f32]) -> f32 {
+        unsafe {
+            let n = v.len();
+            let mut best = f32::NEG_INFINITY;
+            let mut i = 0;
+            if n >= 8 {
+                let mut m = _mm256_loadu_ps(v.as_ptr());
+                i = 8;
+                while i + 8 <= n {
+                    m = _mm256_max_ps(m, _mm256_loadu_ps(v.as_ptr().add(i)));
+                    i += 8;
+                }
+                best = hmax(m);
+            }
+            for &x in &v[i..] {
+                best = best.max(x);
+            }
+            best
+        }
+    }
+
+    pub fn scale_max_slice(v: &mut [f32], scale: f32) -> f32 {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { scale_max_impl(v, scale) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_max_impl(v: &mut [f32], scale: f32) -> f32 {
+        unsafe {
+            let n = v.len();
+            let sv = _mm256_set1_ps(scale);
+            let p = v.as_mut_ptr();
+            let mut best = f32::NEG_INFINITY;
+            let mut i = 0;
+            if n >= 8 {
+                let first = _mm256_mul_ps(_mm256_loadu_ps(p), sv);
+                _mm256_storeu_ps(p, first);
+                let mut m = first;
+                i = 8;
+                while i + 8 <= n {
+                    let x = _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), sv);
+                    _mm256_storeu_ps(p.add(i), x);
+                    m = _mm256_max_ps(m, x);
+                    i += 8;
+                }
+                best = hmax(m);
+            }
+            for j in i..n {
+                let x = *p.add(j) * scale;
+                *p.add(j) = x;
+                best = best.max(x);
+            }
+            best
+        }
+    }
+
+    pub fn exp_shift_sum(v: &mut [f32], shift: f32) -> f32 {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { exp_shift_sum_impl(v, shift) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp_shift_sum_impl(v: &mut [f32], shift: f32) -> f32 {
+        unsafe {
+            let n = v.len();
+            let sh = _mm256_set1_ps(shift);
+            let p = v.as_mut_ptr();
+            let mut accv = _mm256_setzero_ps();
+            let mut i = 0;
+            while i + 8 <= n {
+                let e = exp_ps(_mm256_sub_ps(_mm256_loadu_ps(p.add(i)), sh));
+                _mm256_storeu_ps(p.add(i), e);
+                accv = _mm256_add_ps(accv, e);
+                i += 8;
+            }
+            let mut sum = hsum(accv);
+            for j in i..n {
+                let e = (*p.add(j) - shift).exp();
+                *p.add(j) = e;
+                sum += e;
+            }
+            sum
+        }
+    }
+
+    pub fn scale_slice(v: &mut [f32], scale: f32) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { scale_slice_impl(v, scale) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_slice_impl(v: &mut [f32], scale: f32) {
+        unsafe {
+            let n = v.len();
+            let sv = _mm256_set1_ps(scale);
+            let p = v.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), sv));
+                i += 8;
+            }
+            for j in i..n {
+                *p.add(j) *= scale;
+            }
+        }
+    }
+
+    pub fn sum_slice(v: &[f32]) -> f32 {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { sum_slice_impl(v) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sum_slice_impl(v: &[f32]) -> f32 {
+        unsafe {
+            let n = v.len();
+            let mut accv = _mm256_setzero_ps();
+            let mut i = 0;
+            while i + 8 <= n {
+                accv = _mm256_add_ps(accv, _mm256_loadu_ps(v.as_ptr().add(i)));
+                i += 8;
+            }
+            let mut sum = hsum(accv);
+            for &x in &v[i..] {
+                sum += x;
+            }
+            sum
+        }
+    }
+
+    pub fn sumsq_shift_slice(v: &[f32], shift: f32) -> f32 {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { sumsq_shift_impl(v, shift) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn sumsq_shift_impl(v: &[f32], shift: f32) -> f32 {
+        unsafe {
+            let n = v.len();
+            let sh = _mm256_set1_ps(shift);
+            let mut accv = _mm256_setzero_ps();
+            let mut i = 0;
+            while i + 8 <= n {
+                let d = _mm256_sub_ps(_mm256_loadu_ps(v.as_ptr().add(i)), sh);
+                accv = _mm256_fmadd_ps(d, d, accv);
+                i += 8;
+            }
+            let mut acc = hsum(accv);
+            for &x in &v[i..] {
+                let d = x - shift;
+                acc += d * d;
+            }
+            acc
+        }
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { dot_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+        unsafe {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0;
+            while i + 16 <= n {
+                acc0 =
+                    _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+                acc1 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(ap.add(i + 8)),
+                    _mm256_loadu_ps(bp.add(i + 8)),
+                    acc1,
+                );
+                i += 16;
+            }
+            if i + 8 <= n {
+                acc0 =
+                    _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+                i += 8;
+            }
+            let mut sum = hsum(_mm256_add_ps(acc0, acc1));
+            for j in i..n {
+                sum += *ap.add(j) * *bp.add(j);
+            }
+            sum
+        }
+    }
+
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        // SAFETY: reachable only through the detected AVX2 table.
+        unsafe { axpy_impl(a, x, y) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_impl(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let av = _mm256_set1_ps(a);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+                _mm256_storeu_ps(yp.add(i), v);
+                i += 8;
+            }
+            for j in i..n {
+                *yp.add(j) += a * *xp.add(j);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON arm (aarch64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+static NEON_TABLE: KernelDispatch = KernelDispatch {
+    isa: Isa::Neon,
+    mk4x16: neon::mk4x16,
+    mk4x8: neon::mk4x8,
+    mk2x32: neon::mk2x32,
+    mk_tail: neon::mk_tail,
+    pack_kt: neon::pack_kt,
+    gelu_slice: neon::gelu_slice,
+    silu_slice: neon::silu_slice,
+    silu_gate_slice: neon::silu_gate_slice,
+    gelu_bwd_slice: neon::gelu_bwd_slice,
+    swiglu_bwd_slice: neon::swiglu_bwd_slice,
+    add_bias_slice: neon::add_bias_slice,
+    row_max: neon::row_max,
+    scale_max_slice: neon::scale_max_slice,
+    exp_shift_sum: neon::exp_shift_sum,
+    scale_slice: neon::scale_slice,
+    sum_slice: neon::sum_slice,
+    sumsq_shift_slice: neon::sumsq_shift_slice,
+    dot: neon::dot,
+    axpy: neon::axpy,
+};
+
+/// aarch64 NEON lane implementations — the 4-lane mirror of the AVX2 arm
+/// (`vfmaq_f32` fused multiply-add, `vaddvq`/`vmaxvq` horizontal
+/// reductions, `vtrn1q/vtrn2q` 4×4 transpose network). Same structure:
+/// safe table-entry wrappers around `#[target_feature(enable = "neon")]`
+/// bodies; NEON is baseline on aarch64 so the table is unconditionally
+/// sound there.
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)] // GEMM kernel ABIs are what they are
+mod neon {
+    use super::Epilogue;
+    use crate::kernels::ops;
+    use std::arch::aarch64::*;
+
+    /// Vector `exp` — same Cephes polynomial as the AVX2 arm.
+    /// `vfmaq_f32(c, a, b) = c + a·b` (accumulator first).
+    #[inline(always)]
+    unsafe fn exp_ps(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            let x = vminq_f32(x, vdupq_n_f32(88.0));
+            let x = vmaxq_f32(x, vdupq_n_f32(-88.0));
+            let fx = vrndmq_f32(vfmaq_f32(
+                vdupq_n_f32(0.5),
+                x,
+                vdupq_n_f32(std::f32::consts::LOG2_E),
+            ));
+            let r = vsubq_f32(
+                vsubq_f32(x, vmulq_f32(fx, vdupq_n_f32(0.693359375))),
+                vmulq_f32(fx, vdupq_n_f32(-2.121_944_4e-4)),
+            );
+            let r2 = vmulq_f32(r, r);
+            let mut p = vdupq_n_f32(1.987_569_1e-4);
+            p = vfmaq_f32(vdupq_n_f32(1.398_2e-3), p, r);
+            p = vfmaq_f32(vdupq_n_f32(8.333_452e-3), p, r);
+            p = vfmaq_f32(vdupq_n_f32(4.166_579_6e-2), p, r);
+            p = vfmaq_f32(vdupq_n_f32(1.666_666_5e-1), p, r);
+            p = vfmaq_f32(vdupq_n_f32(5.000_000_3e-1), p, r);
+            let y = vfmaq_f32(vaddq_f32(r, one), p, r2);
+            let n = vcvtq_s32_f32(fx); // truncation is exact: fx is integral
+            let pow2n = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(n, vdupq_n_s32(127))));
+            vmulq_f32(y, pow2n)
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn silu_ps(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            vdivq_f32(x, vaddq_f32(one, exp_ps(vnegq_f32(x))))
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn sigmoid_ps(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            vdivq_f32(one, vaddq_f32(one, exp_ps(vnegq_f32(x))))
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn tanh_ps(u: float32x4_t) -> float32x4_t {
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            let e = exp_ps(vaddq_f32(u, u));
+            vdivq_f32(vsubq_f32(e, one), vaddq_f32(e, one))
+        }
+    }
+
+    const GELU_C: f32 = 0.797_884_6;
+    const GELU_A: f32 = 0.044715;
+
+    #[inline(always)]
+    unsafe fn gelu_u_ps(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let x2 = vmulq_f32(x, x);
+            let inner = vfmaq_f32(x, vmulq_f32(vdupq_n_f32(GELU_A), x2), x);
+            vmulq_f32(vdupq_n_f32(GELU_C), inner)
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn gelu_ps(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            let u = gelu_u_ps(x);
+            let e = exp_ps(vaddq_f32(u, u));
+            vmulq_f32(x, vdivq_f32(e, vaddq_f32(e, one)))
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn gelu_grad_ps(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            let half = vdupq_n_f32(0.5);
+            let t = tanh_ps(gelu_u_ps(x));
+            let x2 = vmulq_f32(x, x);
+            let du = vmulq_f32(
+                vdupq_n_f32(GELU_C),
+                vfmaq_f32(one, vdupq_n_f32(3.0 * GELU_A), x2),
+            );
+            let sech2 = vsubq_f32(one, vmulq_f32(t, t));
+            let lhs = vmulq_f32(half, vaddq_f32(one, t));
+            vfmaq_f32(lhs, vmulq_f32(vmulq_f32(half, x), sech2), du)
+        }
+    }
+
+    /// Apply the epilogue to one 4-wide writeback vector at `(i, j..j+4)`.
+    #[inline(always)]
+    unsafe fn apply_ep(v: float32x4_t, i: usize, j: usize, ep: &Epilogue<'_>) -> float32x4_t {
+        unsafe {
+            match *ep {
+                Epilogue::None => v,
+                Epilogue::Bias(b) => vaddq_f32(v, vld1q_f32(b.as_ptr().add(j))),
+                Epilogue::BiasGelu(b) => gelu_ps(vaddq_f32(v, vld1q_f32(b.as_ptr().add(j)))),
+                Epilogue::BiasSilu(b) => silu_ps(vaddq_f32(v, vld1q_f32(b.as_ptr().add(j)))),
+                Epilogue::Gelu => gelu_ps(v),
+                Epilogue::Silu => silu_ps(v),
+                Epilogue::SiluGate { g, ldg } => {
+                    vmulq_f32(silu_ps(v), vld1q_f32(g.as_ptr().add(i * ldg + j)))
+                }
+            }
+        }
+    }
+
+    // ---- micro-kernel register tiles --------------------------------
+
+    pub fn mk4x16(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { mk4x16_tf(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn mk4x16_tf(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe { mk_rxw::<4, 4>(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    pub fn mk4x8(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: as above.
+        unsafe { mk4x8_tf(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn mk4x8_tf(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe { mk_rxw::<4, 2>(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    pub fn mk2x32(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: as above.
+        unsafe { mk2x32_tf(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn mk2x32_tf(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe { mk_rxw::<2, 8>(ap, lda, bp, ldb, k, c, ldc, ep) }
+    }
+
+    /// R rows × (W·4) columns register tile (R·W of the 32 q-registers as
+    /// accumulators). Generic helper inlined into the concrete `_tf`
+    /// entries (see the AVX2 twin for the pattern rationale).
+    #[inline(always)]
+    unsafe fn mk_rxw<const R: usize, const W: usize>(
+        ap: &[f32],
+        lda: usize,
+        bp: &[f32],
+        ldb: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe {
+            debug_assert!(k == 0 || ap.len() >= (k - 1) * lda + R);
+            debug_assert!(k == 0 || bp.len() >= (k - 1) * ldb + W * 4);
+            debug_assert!(c.len() >= (R - 1) * ldc + W * 4);
+            let mut acc = [[vdupq_n_f32(0.0); W]; R];
+            let a_ptr = ap.as_ptr();
+            let b_ptr = bp.as_ptr();
+            for kk in 0..k {
+                let brow = b_ptr.add(kk * ldb);
+                let mut bv = [vdupq_n_f32(0.0); W];
+                for (w, bvw) in bv.iter_mut().enumerate() {
+                    *bvw = vld1q_f32(brow.add(w * 4));
+                }
+                let arow = a_ptr.add(kk * lda);
+                for (i, acci) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f32(*arow.add(i));
+                    for (w, bvw) in bv.iter().enumerate() {
+                        acci[w] = vfmaq_f32(acci[w], av, *bvw);
+                    }
+                }
+            }
+            for (i, acci) in acc.iter().enumerate() {
+                let crow = c.as_mut_ptr().add(i * ldc);
+                for (w, accw) in acci.iter().enumerate() {
+                    let v = vaddq_f32(vld1q_f32(crow.add(w * 4)), *accw);
+                    vst1q_f32(crow.add(w * 4), apply_ep(v, i, w * 4, &ep));
+                }
+            }
+        }
+    }
+
+    /// Remainder tile: `rows ≤ 4`, `cols ≤ 32`; 4-wide chunks + scalar
+    /// remainder lanes.
+    pub fn mk_tail(
+        ap: &[f32],
+        lda: usize,
+        rows: usize,
+        bp: &[f32],
+        ldb: usize,
+        cols: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { mk_tail_impl(ap, lda, rows, bp, ldb, cols, k, c, ldc, ep) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn mk_tail_impl(
+        ap: &[f32],
+        lda: usize,
+        rows: usize,
+        bp: &[f32],
+        ldb: usize,
+        cols: usize,
+        k: usize,
+        c: &mut [f32],
+        ldc: usize,
+        ep: Epilogue<'_>,
+    ) {
+        unsafe {
+            debug_assert!(rows <= 4 && cols <= 32);
+            let chunks = cols / 4;
+            let rem = cols - chunks * 4;
+            let mut acc = [[vdupq_n_f32(0.0); 8]; 4];
+            let mut racc = [[0.0f32; 4]; 4];
+            let a_ptr = ap.as_ptr();
+            let b_ptr = bp.as_ptr();
+            for kk in 0..k {
+                let brow = b_ptr.add(kk * ldb);
+                for i in 0..rows {
+                    let a = *a_ptr.add(kk * lda + i);
+                    let av = vdupq_n_f32(a);
+                    for ch in 0..chunks {
+                        acc[i][ch] = vfmaq_f32(acc[i][ch], av, vld1q_f32(brow.add(ch * 4)));
+                    }
+                    for j in 0..rem {
+                        racc[i][j] += a * *brow.add(chunks * 4 + j);
+                    }
+                }
+            }
+            for i in 0..rows {
+                let crow = c.as_mut_ptr().add(i * ldc);
+                for ch in 0..chunks {
+                    let v = vaddq_f32(vld1q_f32(crow.add(ch * 4)), acc[i][ch]);
+                    vst1q_f32(crow.add(ch * 4), apply_ep(v, i, ch * 4, &ep));
+                }
+                for j in 0..rem {
+                    let col = chunks * 4 + j;
+                    let v = *crow.add(col) + racc[i][j];
+                    *crow.add(col) = ep.apply(v, i, col);
+                }
+            }
+        }
+    }
+
+    // ---- pack -------------------------------------------------------
+
+    /// 4×4 in-register transpose via the trn1/trn2 f32→f64 network
+    /// (validated by numpy emulation in `python/tests/simd_check.py`).
+    #[inline(always)]
+    unsafe fn transpose4x4(src: *const f32, src_stride: usize, dst: *mut f32, dst_stride: usize) {
+        unsafe {
+            let r0 = vld1q_f32(src);
+            let r1 = vld1q_f32(src.add(src_stride));
+            let r2 = vld1q_f32(src.add(2 * src_stride));
+            let r3 = vld1q_f32(src.add(3 * src_stride));
+            let t0 = vtrn1q_f32(r0, r1);
+            let t1 = vtrn2q_f32(r0, r1);
+            let t2 = vtrn1q_f32(r2, r3);
+            let t3 = vtrn2q_f32(r2, r3);
+            let o0 = vreinterpretq_f32_f64(vtrn1q_f64(
+                vreinterpretq_f64_f32(t0),
+                vreinterpretq_f64_f32(t2),
+            ));
+            let o1 = vreinterpretq_f32_f64(vtrn1q_f64(
+                vreinterpretq_f64_f32(t1),
+                vreinterpretq_f64_f32(t3),
+            ));
+            let o2 = vreinterpretq_f32_f64(vtrn2q_f64(
+                vreinterpretq_f64_f32(t0),
+                vreinterpretq_f64_f32(t2),
+            ));
+            let o3 = vreinterpretq_f32_f64(vtrn2q_f64(
+                vreinterpretq_f64_f32(t1),
+                vreinterpretq_f64_f32(t3),
+            ));
+            vst1q_f32(dst, o0);
+            vst1q_f32(dst.add(dst_stride), o1);
+            vst1q_f32(dst.add(2 * dst_stride), o2);
+            vst1q_f32(dst.add(3 * dst_stride), o3);
+        }
+    }
+
+    pub fn pack_kt(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { pack_kt_impl(src, rows, k, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn pack_kt_impl(src: &[f32], rows: usize, k: usize, out: &mut [f32]) {
+        unsafe {
+            debug_assert!(src.len() >= rows * k);
+            debug_assert!(out.len() >= rows * k);
+            let sp = src.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut r0 = 0;
+            while r0 + 4 <= rows {
+                let mut k0 = 0;
+                while k0 + 4 <= k {
+                    transpose4x4(sp.add(r0 * k + k0), k, op.add(k0 * rows + r0), rows);
+                    k0 += 4;
+                }
+                for kk in k0..k {
+                    for i in 0..4 {
+                        *op.add(kk * rows + r0 + i) = *sp.add((r0 + i) * k + kk);
+                    }
+                }
+                r0 += 4;
+            }
+            for r in r0..rows {
+                for kk in 0..k {
+                    *op.add(kk * rows + r) = *sp.add(r * k + kk);
+                }
+            }
+        }
+    }
+
+    // ---- element-wise / reduction lanes -----------------------------
+
+    pub fn gelu_slice(v: &mut [f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { gelu_slice_impl(v) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn gelu_slice_impl(v: &mut [f32]) {
+        unsafe {
+            let n = v.len();
+            let p = v.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                vst1q_f32(p.add(i), gelu_ps(vld1q_f32(p.add(i))));
+                i += 4;
+            }
+            for j in i..n {
+                *p.add(j) = ops::gelu(*p.add(j));
+            }
+        }
+    }
+
+    pub fn silu_slice(v: &mut [f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { silu_slice_impl(v) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn silu_slice_impl(v: &mut [f32]) {
+        unsafe {
+            let n = v.len();
+            let p = v.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                vst1q_f32(p.add(i), silu_ps(vld1q_f32(p.add(i))));
+                i += 4;
+            }
+            for j in i..n {
+                *p.add(j) = ops::silu(*p.add(j));
+            }
+        }
+    }
+
+    pub fn silu_gate_slice(a: &mut [f32], g: &[f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { silu_gate_impl(a, g) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn silu_gate_impl(a: &mut [f32], g: &[f32]) {
+        unsafe {
+            debug_assert_eq!(a.len(), g.len());
+            let n = a.len();
+            let ap = a.as_mut_ptr();
+            let gp = g.as_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = vld1q_f32(ap.add(i));
+                vst1q_f32(ap.add(i), vmulq_f32(silu_ps(x), vld1q_f32(gp.add(i))));
+                i += 4;
+            }
+            for j in i..n {
+                *ap.add(j) = ops::silu(*ap.add(j)) * *gp.add(j);
+            }
+        }
+    }
+
+    pub fn gelu_bwd_slice(h: &[f32], dh: &mut [f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { gelu_bwd_impl(h, dh) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn gelu_bwd_impl(h: &[f32], dh: &mut [f32]) {
+        unsafe {
+            debug_assert_eq!(h.len(), dh.len());
+            let n = h.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = vld1q_f32(h.as_ptr().add(i));
+                let d = vld1q_f32(dh.as_ptr().add(i));
+                vst1q_f32(dh.as_mut_ptr().add(i), vmulq_f32(d, gelu_grad_ps(x)));
+                i += 4;
+            }
+            for j in i..n {
+                dh[j] *= ops::gelu_grad(h[j]);
+            }
+        }
+    }
+
+    pub fn swiglu_bwd_slice(
+        h1: &[f32],
+        h2: &[f32],
+        d_act: &[f32],
+        dh1: &mut [f32],
+        dh2: &mut [f32],
+    ) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { swiglu_bwd_impl(h1, h2, d_act, dh1, dh2) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn swiglu_bwd_impl(
+        h1: &[f32],
+        h2: &[f32],
+        d_act: &[f32],
+        dh1: &mut [f32],
+        dh2: &mut [f32],
+    ) {
+        unsafe {
+            let n = h1.len();
+            debug_assert!(h2.len() == n && d_act.len() == n && dh1.len() == n && dh2.len() == n);
+            let one = vdupq_n_f32(1.0);
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = vld1q_f32(h1.as_ptr().add(i));
+                let g = vld1q_f32(h2.as_ptr().add(i));
+                let d = vld1q_f32(d_act.as_ptr().add(i));
+                let s = sigmoid_ps(x);
+                let sil = vmulq_f32(x, s);
+                let grad = vmulq_f32(s, vfmaq_f32(one, x, vsubq_f32(one, s)));
+                vst1q_f32(dh1.as_mut_ptr().add(i), vmulq_f32(vmulq_f32(d, g), grad));
+                vst1q_f32(dh2.as_mut_ptr().add(i), vmulq_f32(d, sil));
+                i += 4;
+            }
+            for j in i..n {
+                dh1[j] = d_act[j] * h2[j] * ops::silu_grad(h1[j]);
+                dh2[j] = d_act[j] * ops::silu(h1[j]);
+            }
+        }
+    }
+
+    pub fn add_bias_slice(y: &mut [f32], b: &[f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { add_bias_impl(y, b) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn add_bias_impl(y: &mut [f32], b: &[f32]) {
+        unsafe {
+            debug_assert_eq!(y.len(), b.len());
+            let n = y.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let v = vaddq_f32(vld1q_f32(y.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+                vst1q_f32(y.as_mut_ptr().add(i), v);
+                i += 4;
+            }
+            for j in i..n {
+                y[j] += b[j];
+            }
+        }
+    }
+
+    pub fn row_max(v: &[f32]) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { row_max_impl(v) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn row_max_impl(v: &[f32]) -> f32 {
+        unsafe {
+            let n = v.len();
+            let mut best = f32::NEG_INFINITY;
+            let mut i = 0;
+            if n >= 4 {
+                let mut m = vld1q_f32(v.as_ptr());
+                i = 4;
+                while i + 4 <= n {
+                    m = vmaxq_f32(m, vld1q_f32(v.as_ptr().add(i)));
+                    i += 4;
+                }
+                best = vmaxvq_f32(m);
+            }
+            for &x in &v[i..] {
+                best = best.max(x);
+            }
+            best
+        }
+    }
+
+    pub fn scale_max_slice(v: &mut [f32], scale: f32) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { scale_max_impl(v, scale) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scale_max_impl(v: &mut [f32], scale: f32) -> f32 {
+        unsafe {
+            let n = v.len();
+            let sv = vdupq_n_f32(scale);
+            let p = v.as_mut_ptr();
+            let mut best = f32::NEG_INFINITY;
+            let mut i = 0;
+            if n >= 4 {
+                let first = vmulq_f32(vld1q_f32(p), sv);
+                vst1q_f32(p, first);
+                let mut m = first;
+                i = 4;
+                while i + 4 <= n {
+                    let x = vmulq_f32(vld1q_f32(p.add(i)), sv);
+                    vst1q_f32(p.add(i), x);
+                    m = vmaxq_f32(m, x);
+                    i += 4;
+                }
+                best = vmaxvq_f32(m);
+            }
+            for j in i..n {
+                let x = *p.add(j) * scale;
+                *p.add(j) = x;
+                best = best.max(x);
+            }
+            best
+        }
+    }
+
+    pub fn exp_shift_sum(v: &mut [f32], shift: f32) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { exp_shift_sum_impl(v, shift) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn exp_shift_sum_impl(v: &mut [f32], shift: f32) -> f32 {
+        unsafe {
+            let n = v.len();
+            let sh = vdupq_n_f32(shift);
+            let p = v.as_mut_ptr();
+            let mut accv = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 4 <= n {
+                let e = exp_ps(vsubq_f32(vld1q_f32(p.add(i)), sh));
+                vst1q_f32(p.add(i), e);
+                accv = vaddq_f32(accv, e);
+                i += 4;
+            }
+            let mut sum = vaddvq_f32(accv);
+            for j in i..n {
+                let e = (*p.add(j) - shift).exp();
+                *p.add(j) = e;
+                sum += e;
+            }
+            sum
+        }
+    }
+
+    pub fn scale_slice(v: &mut [f32], scale: f32) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { scale_slice_impl(v, scale) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scale_slice_impl(v: &mut [f32], scale: f32) {
+        unsafe {
+            let n = v.len();
+            let sv = vdupq_n_f32(scale);
+            let p = v.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                vst1q_f32(p.add(i), vmulq_f32(vld1q_f32(p.add(i)), sv));
+                i += 4;
+            }
+            for j in i..n {
+                *p.add(j) *= scale;
+            }
+        }
+    }
+
+    pub fn sum_slice(v: &[f32]) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { sum_slice_impl(v) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sum_slice_impl(v: &[f32]) -> f32 {
+        unsafe {
+            let n = v.len();
+            let mut accv = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 4 <= n {
+                accv = vaddq_f32(accv, vld1q_f32(v.as_ptr().add(i)));
+                i += 4;
+            }
+            let mut sum = vaddvq_f32(accv);
+            for &x in &v[i..] {
+                sum += x;
+            }
+            sum
+        }
+    }
+
+    pub fn sumsq_shift_slice(v: &[f32], shift: f32) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { sumsq_shift_impl(v, shift) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sumsq_shift_impl(v: &[f32], shift: f32) -> f32 {
+        unsafe {
+            let n = v.len();
+            let sh = vdupq_n_f32(shift);
+            let mut accv = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 4 <= n {
+                let d = vsubq_f32(vld1q_f32(v.as_ptr().add(i)), sh);
+                accv = vfmaq_f32(accv, d, d);
+                i += 4;
+            }
+            let mut acc = vaddvq_f32(accv);
+            for &x in &v[i..] {
+                let d = x - shift;
+                acc += d * d;
+            }
+            acc
+        }
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { dot_impl(a, b) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+        unsafe {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 8 <= n {
+                acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+                acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+                i += 8;
+            }
+            if i + 4 <= n {
+                acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+                i += 4;
+            }
+            let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+            for j in i..n {
+                sum += *ap.add(j) * *bp.add(j);
+            }
+            sum
+        }
+    }
+
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { axpy_impl(a, x, y) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_impl(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let av = vdupq_n_f32(a);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                let v = vfmaq_f32(vld1q_f32(yp.add(i)), av, vld1q_f32(xp.add(i)));
+                vst1q_f32(yp.add(i), v);
+                i += 4;
+            }
+            for j in i..n {
+                *yp.add(j) += a * *xp.add(j);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::prop;
+
+    /// The arms testable on this host: scalar always; the native table too
+    /// when it differs (i.e. on an AVX2 or NEON machine). On a scalar-only
+    /// host SIMD-vs-scalar parity degenerates to bitwise self-agreement,
+    /// and the CI `BLAST_SIMD=off` lane covers the scalar arm everywhere.
+    fn tables() -> Vec<&'static KernelDispatch> {
+        let n = native();
+        if std::ptr::eq(n, scalar()) {
+            vec![scalar()]
+        } else {
+            vec![scalar(), n]
+        }
+    }
+
+    /// Mixed abs+rel gate for exp-based lanes (see module doc: the vector
+    /// exp is ~2 ulp off `f32::exp`).
+    fn close(got: f32, want: f32, tol: f32) -> bool {
+        (got - want).abs() <= tol + tol * want.abs()
+    }
+
+    #[test]
+    fn resolution_rules_and_names() {
+        assert!(std::ptr::eq(resolve(true, false), scalar()));
+        assert!(std::ptr::eq(resolve(false, true), scalar()));
+        assert!(std::ptr::eq(resolve(true, true), scalar()));
+        assert!(std::ptr::eq(resolve(false, false), native()));
+        for off in ["off", "0", "false", "no", "scalar", "OFF", "False", "SCALAR"] {
+            assert!(env_disables(Some(off)), "{off}");
+        }
+        assert!(!env_disables(None));
+        assert!(!env_disables(Some("on")));
+        assert!(!env_disables(Some("1")));
+        assert_eq!(Isa::Avx2Fma.name(), "avx2+fma");
+        assert_eq!(Isa::Neon.name(), "neon");
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        // the dispatch entry point returns one of the two tables
+        let d = dispatch();
+        assert!(std::ptr::eq(d, scalar()) || std::ptr::eq(d, native()));
+    }
+
+    #[test]
+    fn elementwise_lane_parity() {
+        for d in tables() {
+            prop::check_default("simd-elementwise-parity", |rng| {
+                let n = prop::usize_in(rng, 0, 67); // ragged: tails of every width
+                let x = prop::normal_vec(rng, n);
+                let scalar_is = d.isa == Isa::Scalar;
+                let tol = if scalar_is { 0.0 } else { 1e-6 };
+
+                let mut v = x.clone();
+                (d.gelu_slice)(&mut v);
+                for i in 0..n {
+                    let want = ops::gelu(x[i]);
+                    prop_assert!(close(v[i], want, tol), "gelu[{i}] {} vs {want}", v[i]);
+                }
+                let mut v = x.clone();
+                (d.silu_slice)(&mut v);
+                for i in 0..n {
+                    let want = ops::silu(x[i]);
+                    prop_assert!(close(v[i], want, tol), "silu[{i}] {} vs {want}", v[i]);
+                }
+                let g = prop::normal_vec(rng, n);
+                let mut v = x.clone();
+                (d.silu_gate_slice)(&mut v, &g);
+                for i in 0..n {
+                    let want = ops::silu(x[i]) * g[i];
+                    prop_assert!(close(v[i], want, tol), "silu_gate[{i}]");
+                }
+                let mut dh = g.clone();
+                (d.gelu_bwd_slice)(&x, &mut dh);
+                for i in 0..n {
+                    let want = g[i] * ops::gelu_grad(x[i]);
+                    prop_assert!(close(dh[i], want, 2.0 * tol), "gelu_bwd[{i}]");
+                }
+                let h2 = prop::normal_vec(rng, n);
+                let da = prop::normal_vec(rng, n);
+                let mut dh1 = vec![0.0f32; n];
+                let mut dh2 = vec![0.0f32; n];
+                (d.swiglu_bwd_slice)(&x, &h2, &da, &mut dh1, &mut dh2);
+                for i in 0..n {
+                    let w1 = da[i] * h2[i] * ops::silu_grad(x[i]);
+                    let w2 = da[i] * ops::silu(x[i]);
+                    prop_assert!(close(dh1[i], w1, 2.0 * tol), "swiglu dh1[{i}]");
+                    prop_assert!(close(dh2[i], w2, 2.0 * tol), "swiglu dh2[{i}]");
+                }
+                let mut y = x.clone();
+                (d.add_bias_slice)(&mut y, &g);
+                for i in 0..n {
+                    prop_assert!(y[i] == x[i] + g[i], "add_bias[{i}]");
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn reduction_lane_parity() {
+        for d in tables() {
+            prop::check_default("simd-reduction-parity", |rng| {
+                let n = prop::usize_in(rng, 0, 67);
+                let x = prop::normal_vec(rng, n);
+                // max is order-invariant: exact across arms
+                let want_max = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                prop_assert!((d.row_max)(&x) == want_max, "row_max");
+                let mut v = x.clone();
+                let m = (d.scale_max_slice)(&mut v, 0.37);
+                let mut want_m = f32::NEG_INFINITY;
+                for i in 0..n {
+                    let s = x[i] * 0.37;
+                    prop_assert!(v[i] == s, "scale_max elem [{i}]");
+                    want_m = want_m.max(s);
+                }
+                prop_assert!(m == want_m, "scale_max max {m} vs {want_m}");
+                let mut v = x.clone();
+                (d.scale_slice)(&mut v, -1.25);
+                for i in 0..n {
+                    prop_assert!(v[i] == x[i] * -1.25, "scale[{i}]");
+                }
+                // sums: gate against an f64 reference (association differs
+                // across arms by design)
+                let sum64: f64 = x.iter().map(|&v| v as f64).sum();
+                let got = (d.sum_slice)(&x);
+                prop_assert!(
+                    (got as f64 - sum64).abs() < 1e-4,
+                    "sum {got} vs {sum64}"
+                );
+                let shift = 0.3f32;
+                let ssq64: f64 = x.iter().map(|&v| (v as f64 - shift as f64).powi(2)).sum();
+                let got = (d.sumsq_shift_slice)(&x, shift);
+                prop_assert!(
+                    (got as f64 - ssq64).abs() < 1e-3,
+                    "sumsq {got} vs {ssq64}"
+                );
+                // exp_shift_sum: elementwise + sum
+                let mut v = x.clone();
+                let shift = (d.row_max)(&x);
+                let s = (d.exp_shift_sum)(&mut v, shift);
+                let mut want_s = 0.0f64;
+                for i in 0..n {
+                    let want = ((x[i] - shift) as f64).exp();
+                    want_s += want;
+                    prop_assert!(
+                        (v[i] as f64 - want).abs() < 2e-6,
+                        "exp[{i}] {} vs {want}",
+                        v[i]
+                    );
+                }
+                prop_assert!((s as f64 - want_s).abs() < 1e-4 * want_s.max(1.0), "exp sum");
+                // dot / axpy
+                let y = prop::normal_vec(rng, n);
+                let dot64: f64 = x.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+                let got = (d.dot)(&x, &y);
+                prop_assert!(
+                    (got as f64 - dot64).abs() < 1e-4 * (1.0 + dot64.abs()),
+                    "dot {got} vs {dot64}"
+                );
+                let mut acc = y.clone();
+                (d.axpy)(0.73, &x, &mut acc);
+                for i in 0..n {
+                    let want = y[i] as f64 + 0.73f64 * x[i] as f64;
+                    prop_assert!((acc[i] as f64 - want).abs() < 1e-6, "axpy[{i}]");
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        for d in tables() {
+            assert_eq!((d.row_max)(&[]), f32::NEG_INFINITY);
+            assert_eq!((d.scale_max_slice)(&mut [], 2.0), f32::NEG_INFINITY);
+            assert_eq!((d.sum_slice)(&[]), 0.0);
+            assert_eq!((d.sumsq_shift_slice)(&[], 1.0), 0.0);
+            assert_eq!((d.dot)(&[], &[]), 0.0);
+            assert_eq!((d.exp_shift_sum)(&mut [], 0.0), 0.0);
+            (d.gelu_slice)(&mut []);
+            (d.axpy)(1.0, &[], &mut []);
+        }
+    }
+
+    #[test]
+    fn pack_kt_lane_is_exact_transpose() {
+        for d in tables() {
+            // crosses the 8x8 / 4x4 blocked bodies and every remainder
+            for rows in [1usize, 3, 4, 5, 7, 8, 9, 12, 16, 17] {
+                for k in [1usize, 2, 4, 7, 8, 9, 16, 19] {
+                    let src: Vec<f32> = (0..rows * k).map(|i| i as f32 * 0.5 - 3.0).collect();
+                    let mut out = vec![-1.0f32; rows * k];
+                    (d.pack_kt)(&src, rows, k, &mut out);
+                    for r in 0..rows {
+                        for kk in 0..k {
+                            assert_eq!(
+                                out[kk * rows + r],
+                                src[r * k + kk],
+                                "isa={} rows={rows} k={k} ({r},{kk})",
+                                d.isa.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exp accuracy across the useful range: the vector exp must track
+    /// `f64::exp` to ~1e-6 relative (scalar arm trivially does).
+    #[test]
+    fn exp_lane_accuracy_over_range() {
+        for d in tables() {
+            let mut v: Vec<f32> = (-870..=80).map(|i| i as f32 * 0.1).collect();
+            let orig = v.clone();
+            let _ = (d.exp_shift_sum)(&mut v, 0.0);
+            for (i, &x) in orig.iter().enumerate() {
+                let want = (x as f64).exp();
+                let got = v[i] as f64;
+                assert!(
+                    (got - want).abs() <= 2e-6 * want.max(1e-30),
+                    "isa={} exp({x}) = {got} vs {want}",
+                    d.isa.name()
+                );
+            }
+        }
+    }
+
+    /// The micro-kernel register tiles against a sequential f32 oracle —
+    /// the scalar arm must match it bitwise (identical association order),
+    /// the SIMD arms within FMA-rounding tolerance — for every epilogue
+    /// variant, on ~50+ random shapes per slot.
+    #[test]
+    fn mk_lane_parity_with_epilogues() {
+        for d in tables() {
+            prop::check_default("simd-mk-parity", |rng| {
+                // slot: (rows, cols, fn)
+                let slot = prop::usize_in(rng, 0, 3);
+                let (rows, cols) = [(4, 16), (4, 8), (2, 32), (0, 0)][slot];
+                let (rows, cols) = if slot == 3 {
+                    (prop::usize_in(rng, 1, 4), prop::usize_in(rng, 1, 32))
+                } else {
+                    (rows, cols)
+                };
+                let k = prop::usize_in(rng, 0, 24);
+                let lda = rows + prop::usize_in(rng, 0, 3);
+                let ldb = cols + prop::usize_in(rng, 0, 5);
+                let ldc = cols + prop::usize_in(rng, 0, 5);
+                let ap = prop::normal_vec(rng, k.max(1) * lda);
+                let bp = prop::normal_vec(rng, k.max(1) * ldb);
+                let c0 = prop::normal_vec(rng, (rows - 1) * ldc + cols);
+                let bias = prop::normal_vec(rng, cols);
+                let ldg = cols + 2;
+                let gate = prop::normal_vec(rng, rows * ldg);
+                let eps: [Epilogue<'_>; 7] = [
+                    Epilogue::None,
+                    Epilogue::Bias(&bias),
+                    Epilogue::BiasGelu(&bias),
+                    Epilogue::BiasSilu(&bias),
+                    Epilogue::Gelu,
+                    Epilogue::Silu,
+                    Epilogue::SiluGate { g: &gate, ldg },
+                ];
+                for (ei, ep) in eps.iter().enumerate() {
+                    let mut c = c0.clone();
+                    match slot {
+                        0 => (d.mk4x16)(&ap, lda, &bp, ldb, k, &mut c, ldc, *ep),
+                        1 => (d.mk4x8)(&ap, lda, &bp, ldb, k, &mut c, ldc, *ep),
+                        2 => (d.mk2x32)(&ap, lda, &bp, ldb, k, &mut c, ldc, *ep),
+                        _ => (d.mk_tail)(&ap, lda, rows, &bp, ldb, cols, k, &mut c, ldc, *ep),
+                    }
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            // sequential-order f32 oracle + scalar epilogue
+                            let mut s = c0[i * ldc + j];
+                            for kk in 0..k {
+                                s += ap[kk * lda + i] * bp[kk * ldb + j];
+                            }
+                            let want = ep.apply(s, i, j);
+                            let got = c[i * ldc + j];
+                            let ok = if d.isa == Isa::Scalar {
+                                got == want || (got.is_nan() && want.is_nan())
+                            } else {
+                                // FMA keeps one rounding per step the scalar
+                                // oracle doesn't; bound the drift over k steps
+                                (got - want).abs() <= 1e-4 + 1e-5 * want.abs()
+                            };
+                            prop_assert!(
+                                ok,
+                                "isa={} slot={slot} ep={ei} ({i},{j}): {got} vs {want} \
+                                 (rows={rows} cols={cols} k={k})",
+                                d.isa.name()
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn epilogue_shift_rebases_operands() {
+        let bias: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let ldg = 16;
+        let gate: Vec<f32> = (0..8 * ldg).map(|i| i as f32 * 0.25).collect();
+        let ep = Epilogue::Bias(&bias);
+        assert_eq!(ep.shift(2, 5).apply(1.0, 0, 0), 1.0 + bias[5]);
+        let ep = Epilogue::SiluGate { g: &gate, ldg };
+        let direct = ep.apply(0.7, 3, 4);
+        let shifted = ep.shift(1, 2).apply(0.7, 2, 2);
+        assert_eq!(direct, shifted);
+        assert!(matches!(Epilogue::Gelu.shift(5, 9), Epilogue::Gelu));
+    }
+
+    #[test]
+    fn epilogue_zero_preserving_classification() {
+        let b = [1.0f32; 4];
+        let g = [1.0f32; 8];
+        assert!(Epilogue::None.zero_preserving());
+        assert!(Epilogue::Gelu.zero_preserving());
+        assert!(Epilogue::Silu.zero_preserving());
+        assert!(Epilogue::SiluGate { g: &g, ldg: 4 }.zero_preserving());
+        assert!(!Epilogue::Bias(&b).zero_preserving());
+        assert!(!Epilogue::BiasGelu(&b).zero_preserving());
+        assert!(!Epilogue::BiasSilu(&b).zero_preserving());
+        // the zero-preserving ones really do map 0 -> 0
+        for ep in [
+            Epilogue::None,
+            Epilogue::Gelu,
+            Epilogue::Silu,
+            Epilogue::SiluGate { g: &g, ldg: 4 },
+        ] {
+            assert_eq!(ep.apply(0.0, 1, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn apply_epilogue_region_matches_scalar_apply() {
+        for d in tables() {
+            let (rows, cols, ldc) = (3usize, 11usize, 13usize);
+            let base: Vec<f32> = (0..rows * ldc).map(|i| (i as f32 * 0.37).sin()).collect();
+            let bias: Vec<f32> = (0..cols).map(|i| i as f32 * 0.1 - 0.5).collect();
+            let ldg = cols + 3;
+            let gate: Vec<f32> = (0..rows * ldg).map(|i| (i as f32 * 0.21).cos()).collect();
+            let eps: [Epilogue<'_>; 7] = [
+                Epilogue::None,
+                Epilogue::Bias(&bias),
+                Epilogue::BiasGelu(&bias),
+                Epilogue::BiasSilu(&bias),
+                Epilogue::Gelu,
+                Epilogue::Silu,
+                Epilogue::SiluGate { g: &gate, ldg },
+            ];
+            for ep in eps {
+                let mut c = base.clone();
+                d.apply_epilogue_region(&mut c, ldc, rows, cols, ep);
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let want = ep.apply(base[i * ldc + j], i, j);
+                        let tol = if d.isa == Isa::Scalar { 0.0 } else { 1e-6 };
+                        assert!(
+                            close(c[i * ldc + j], want, tol),
+                            "isa={} ({i},{j})",
+                            d.isa.name()
+                        );
+                    }
+                    // outside cols untouched
+                    for j in cols..ldc.min(cols + 2) {
+                        assert_eq!(c[i * ldc + j], base[i * ldc + j]);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -44,6 +44,10 @@ use blast::util::cli::Args;
 fn main() {
     blast::util::logging::init();
     let args = Args::parse();
+    // `--no-simd` forces the scalar kernel arm (same effect as
+    // BLAST_SIMD=off) — set before any kernel work so the choice is
+    // process-wide and bit-stable.
+    blast::kernels::simd::set_simd_enabled(!args.get_bool("no-simd"));
     let cmd = args.pos(0).unwrap_or("help").to_string();
     let code = match cmd.as_str() {
         "info" => run_info(&args),
@@ -51,6 +55,7 @@ fn main() {
         "serve" => run_serve(&args),
         "exp" => {
             let id = args.pos(1).unwrap_or("all").to_string();
+            println!("kernel isa: {}", blast::kernels::simd::dispatch().isa.name());
             eval::run(&id, &args)
         }
         _ => {
@@ -73,7 +78,7 @@ fn print_help() {
          \x20            --decay D --dense-right L --block-mult M --save ckpt.bin \\\n\
          \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
-         \x20             --kv-page P --kv-pool-pages M]\n\
+         \x20             --kv-page P --kv-pool-pages M --no-simd]\n\
          \x20 blast exp <id> [--steps N --quick --backend native|aot ...]   ids: {:?} or 'all'\n\n\
          Training and the pretraining experiments run natively by default;\n\
          `--backend aot` and the classifier experiments need `make artifacts`\n\
@@ -175,9 +180,10 @@ fn run_serve(args: &Args) -> Result<()> {
         KvOptions { page: kv_page, pool_pages: kv_pool_pages },
     )?);
     println!(
-        "serving {} (mode={mode:?}, sparsity={sparsity}, block={block}, batched={batched}, \
+        "serving {} (mode={mode:?}, isa={}, sparsity={sparsity}, block={block}, batched={batched}, \
          kv-page={kv_page}, kv-pool-pages={}, mlp bytes={})",
         cfg.name,
+        blast::kernels::simd::dispatch().isa.name(),
         kv_pool_pages.map(|n| n.to_string()).unwrap_or_else(|| "unbounded".into()),
         engine.mlp_weight_bytes()
     );

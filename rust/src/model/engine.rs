@@ -36,9 +36,10 @@ use anyhow::{bail, Result};
 
 use crate::kernels::attention::{causal_attention, decode_head_paged_into};
 use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
-use crate::kernels::gemm::gemm_packed_into;
+use crate::kernels::gemm::{gemm_packed_ep_into, gemm_packed_into};
 use crate::kernels::ops;
 use crate::kernels::pack::PackedB;
+use crate::kernels::simd::Epilogue;
 use crate::model::config::{ModelKind, NativeConfig};
 use crate::model::kv::{KvGeom, KvOptions, KvPagePool};
 use crate::model::params::ParamStore;
@@ -277,14 +278,20 @@ impl Engine {
             MlpWeights::DenseSwiglu { w1, w2, w3 } => {
                 let m = x.rows();
                 let (e, f) = (w1.k, w1.n);
-                // scratch-arena hidden tiles: no per-call allocation
+                // scratch-arena hidden tiles: no per-call allocation. The
+                // up-projection runs first; the gate projection then
+                // carries the SwiGLU epilogue in its write-back, so the
+                // old full-tensor `silu(h1)*h2` pass is gone.
                 let mut h1 = scratch::take_zeroed(m * f);
                 let mut h2 = scratch::take_zeroed(m * f);
-                gemm_packed_into(x.data(), w1, &mut h1, m);
                 gemm_packed_into(x.data(), w2, &mut h2, m);
-                for (a, &bb) in h1.iter_mut().zip(h2.iter()) {
-                    *a = ops::silu(*a) * bb;
-                }
+                gemm_packed_ep_into(
+                    x.data(),
+                    w1,
+                    &mut h1,
+                    m,
+                    Epilogue::SiluGate { g: &h2, ldg: f },
+                );
                 let mut y = Tensor::zeros(&[m, e]);
                 gemm_packed_into(&h1, w3, y.data_mut(), m);
                 y
@@ -293,10 +300,8 @@ impl Engine {
                 let m = x.rows();
                 let (e, f) = (w1.k, w1.n);
                 let mut h = scratch::take_zeroed(m * f);
-                gemm_packed_into(x.data(), w1, &mut h, m);
-                for a in h.iter_mut() {
-                    *a = ops::gelu(*a);
-                }
+                // GeLU fused into the up-projection write-back
+                gemm_packed_ep_into(x.data(), w1, &mut h, m, Epilogue::Gelu);
                 let mut y = Tensor::zeros(&[m, e]);
                 gemm_packed_into(&h, w3, y.data_mut(), m);
                 y

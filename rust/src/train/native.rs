@@ -452,18 +452,12 @@ impl NativeBackend {
                     }
                 }
             }
-            let mut act = vec![0.0f32; m * f];
+            // h1 stays pre-activation (the backward pass needs it); the
+            // activation runs on the dispatched SIMD lanes
+            let mut act = h1.clone();
             match self.kind {
-                ModelKind::Llama => {
-                    for i in 0..m * f {
-                        act[i] = ops::silu(h1[i]) * h2[i];
-                    }
-                }
-                _ => {
-                    for i in 0..m * f {
-                        act[i] = ops::gelu(h1[i]);
-                    }
-                }
+                ModelKind::Llama => ops::silu_gate_slice(&mut act, &h2),
+                _ => ops::gelu_slice(&mut act),
             }
             let mut y = vec![0.0f32; m * e];
             match &mlps[li] {
@@ -609,10 +603,8 @@ impl NativeBackend {
                 ModelKind::Llama => {
                     let mut dh1 = vec![0.0f32; m * f];
                     let mut dh2 = vec![0.0f32; m * f];
-                    for i in 0..m * f {
-                        dh1[i] = d_act[i] * a.h2[i] * ops::silu_grad(a.h1[i]);
-                        dh2[i] = d_act[i] * ops::silu(a.h1[i]);
-                    }
+                    // dispatched SwiGLU backward lane
+                    ops::swiglu_bwd_slice(&a.h1, &a.h2, &d_act, &mut dh1, &mut dh2);
                     (dh1, Some(dh2))
                 }
                 _ => {

@@ -10,6 +10,13 @@
 //! derefs to `[f32]` and returns its backing `Vec` to the calling thread's
 //! pool on drop. Buffers taken on a pool worker stay cached on that worker,
 //! which is exactly the reuse pattern `threadpool::parallel_for` produces.
+//!
+//! Since PR 5 the handed-out slice is **64-byte aligned**: the guard
+//! over-allocates by up to 15 floats and derefs to an aligned window, so
+//! packed panels built in scratch start on a cache-line/vector boundary
+//! and the SIMD arms' (unaligned-encoded) loads run at aligned speed.
+//! Alignment is a performance guarantee only — the SIMD lanes never
+//! require it for soundness (see `kernels/simd.rs`).
 
 use std::cell::RefCell;
 
@@ -24,26 +31,37 @@ const POOL_CAP: usize = 12;
 /// in every worker thread for the lifetime of a serving process.
 const MAX_POOLED_LEN: usize = 1 << 22;
 
+/// Alignment of the handed-out window, in bytes (one cache line; covers
+/// AVX-512-width loads too).
+const ALIGN: usize = 64;
+
+/// Worst-case f32 padding needed to reach [`ALIGN`] from a 4-byte-aligned
+/// `Vec` allocation.
+const ALIGN_PAD: usize = ALIGN / 4 - 1;
+
 thread_local! {
     static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
 }
 
-/// An arena-backed f32 buffer; returns to the thread's pool on drop.
+/// An arena-backed f32 buffer; derefs to a 64-byte-aligned window and
+/// returns its backing `Vec` to the thread's pool on drop.
 pub struct Scratch {
     buf: Vec<f32>,
+    off: usize,
+    len: usize,
 }
 
 impl std::ops::Deref for Scratch {
     type Target = [f32];
 
     fn deref(&self) -> &[f32] {
-        &self.buf
+        &self.buf[self.off..self.off + self.len]
     }
 }
 
 impl std::ops::DerefMut for Scratch {
     fn deref_mut(&mut self) -> &mut [f32] {
-        &mut self.buf
+        &mut self.buf[self.off..self.off + self.len]
     }
 }
 
@@ -78,20 +96,31 @@ fn take_raw(len: usize) -> Vec<f32> {
     })
 }
 
+/// Build the guard: size the backing store for `len` plus alignment slack
+/// and compute the aligned window offset. `align_offset` is in elements
+/// (f32 size divides [`ALIGN`], so it is always reachable and ≤
+/// [`ALIGN_PAD`]); a defensive clamp keeps a pathological allocator
+/// answer from walking past the slack.
+fn window(buf: Vec<f32>, len: usize) -> Scratch {
+    let off = buf.as_ptr().align_offset(ALIGN).min(ALIGN_PAD);
+    debug_assert!(off + len <= buf.len());
+    Scratch { buf, off, len }
+}
+
 /// A length-`len` buffer with every element set to 0.0.
 pub fn take_zeroed(len: usize) -> Scratch {
     let mut buf = take_raw(len);
     buf.clear();
-    buf.resize(len, 0.0);
-    Scratch { buf }
+    buf.resize(len + ALIGN_PAD, 0.0);
+    window(buf, len)
 }
 
 /// A length-`len` buffer with unspecified contents (recycled values); use
 /// when every element is overwritten before being read (e.g. pack targets).
 pub fn take_uninit(len: usize) -> Scratch {
     let mut buf = take_raw(len);
-    buf.resize(len, 0.0);
-    Scratch { buf }
+    buf.resize(len + ALIGN_PAD, 0.0);
+    window(buf, len)
 }
 
 #[cfg(test)]
@@ -119,6 +148,16 @@ mod tests {
         }
         // shrinking reuse must not keep the old length
         assert_eq!(take_uninit(3).len(), 3);
+    }
+
+    #[test]
+    fn windows_are_64_byte_aligned() {
+        for len in [1usize, 7, 16, 64, 1000] {
+            let s = take_zeroed(len);
+            assert_eq!(s.as_ptr() as usize % ALIGN, 0, "len={len}");
+            let s = take_uninit(len);
+            assert_eq!(s.as_ptr() as usize % ALIGN, 0, "len={len}");
+        }
     }
 
     #[test]

@@ -1,0 +1,47 @@
+//! `BLAST_SIMD` environment override, exercised end-to-end in its own test
+//! binary (integration tests run as separate processes, so this is the one
+//! place the lazily-cached env read can be pinned before any kernel call).
+//!
+//! This file must stay a single test: the env var is read once at first
+//! `dispatch()`, so another test in this binary touching the kernels first
+//! would defeat the point.
+
+use blast::kernels::simd::{self, Isa};
+use blast::kernels::{gemm, ops, PackedB};
+use blast::tensor::Tensor;
+use blast::util::rng::Rng;
+
+#[test]
+fn env_off_forces_scalar_arm_end_to_end() {
+    // Set before the first dispatch() in this process.
+    std::env::set_var("BLAST_SIMD", "off");
+    assert_eq!(simd::dispatch().isa, Isa::Scalar, "BLAST_SIMD=off must pin scalar");
+
+    // A real kernel pass on the forced arm: packed GEMM + fused epilogue
+    // against the unfused scalar oracle must now be *bitwise* identical,
+    // because the scalar arm is the oracle.
+    let mut rng = Rng::new(0x51D);
+    let (m, k, n) = (19usize, 12usize, 23usize);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let packed = PackedB::pack(b.data(), k, n);
+    let mut fused = Tensor::zeros(&[m, n]);
+    gemm::gemm_packed_ep_into(
+        a.data(),
+        &packed,
+        fused.data_mut(),
+        m,
+        blast::kernels::simd::Epilogue::Gelu,
+    );
+    let mut unfused = Tensor::zeros(&[m, n]);
+    gemm::gemm_packed_into(a.data(), &packed, unfused.data_mut(), m);
+    for v in unfused.data_mut().iter_mut() {
+        *v = ops::gelu(*v);
+    }
+    assert_eq!(fused.data(), unfused.data(), "scalar arm must be bit-exact");
+
+    // The programmatic override composes: turning SIMD back on cannot
+    // un-force the env (env wins, by design — a CI lane sets it).
+    simd::set_simd_enabled(true);
+    assert_eq!(simd::dispatch().isa, Isa::Scalar);
+}
