@@ -79,6 +79,7 @@ fn main() -> Result<()> {
                 max_batch: args.get_usize("max-batch", 4),
                 max_queue: 64,
                 batched,
+                ..BatcherConfig::default()
             },
         );
         let t0 = std::time::Instant::now();
@@ -90,11 +91,13 @@ fn main() -> Result<()> {
                     .collect(),
                 max_new,
                 eos: None,
+                ..Default::default()
             })?;
         }
         for _ in 0..n_requests {
             let c = coord
                 .next_completion(Duration::from_secs(300))
+                .ready()
                 .expect("completion");
             if let Some(e) = c.error {
                 println!("request {} error: {e}", c.id);

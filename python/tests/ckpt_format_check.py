@@ -1,0 +1,187 @@
+"""Transliteration of the BLST1 checkpoint format (model/params.rs).
+
+No Rust toolchain ships in this container, so the v2 byte layout and its
+CRC32 are pinned here in pure python/numpy, independently of the Rust
+writer. Mirrors:
+
+  * util/crc.rs           — IEEE reflected CRC32 == zlib.crc32 (canonical
+                            check value crc32(b"123456789") == 0xCBF43926)
+  * ParamStore::save_with_meta — magic b"BLST1" + u64 LE header length +
+                            JSON header {"version": 2, "meta": {...},
+                            "tensors": [{name, shape, crc}, ...]} + raw
+                            little-endian f32 payloads in header order
+  * ParamStore::load_with_meta — magic/version/shape/CRC verification,
+                            truncation + bit-flip rejection, legacy v1
+                            bare-array headers (no meta, no CRCs)
+
+Any change to the Rust format that breaks these checks is a format break
+and needs a version bump, not a silent re-interpretation.
+"""
+import io
+import json
+import struct
+import zlib
+
+import numpy as np
+
+f32 = np.float32
+ok_count = 0
+
+def check(name, cond):
+    global ok_count
+    assert cond, f"FAIL: {name}"
+    ok_count += 1
+    print(f"  ok: {name}")
+
+# ---------------------------------------------------------------------------
+# 1. CRC32: the Rust table-driven implementation is IEEE reflected
+#    (poly 0xEDB88320), i.e. exactly zlib.crc32
+# ---------------------------------------------------------------------------
+
+def crc32_rust(data):
+    """Literal transliteration of util/crc.rs (bitwise, no table)."""
+    crc = 0xFFFF_FFFF
+    for byte in data:
+        crc ^= byte
+        for _ in range(8):
+            if crc & 1:
+                crc = (crc >> 1) ^ 0xEDB8_8320
+            else:
+                crc >>= 1
+    return crc ^ 0xFFFF_FFFF
+
+check("crc32 canonical check value", crc32_rust(b"123456789") == 0xCBF43926)
+check("crc32 empty", crc32_rust(b"") == 0 == zlib.crc32(b""))
+rng = np.random.default_rng(0)
+for n in [1, 7, 64, 1000]:
+    buf = rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+    check(f"crc32 == zlib.crc32 ({n} bytes)",
+          crc32_rust(buf) == zlib.crc32(buf) & 0xFFFFFFFF)
+
+# ---------------------------------------------------------------------------
+# 2. v2 writer/reader — independent implementation of the byte layout
+# ---------------------------------------------------------------------------
+MAGIC = b"BLST1"
+HLEN_CAP = 1 << 30
+
+def save_v2(tensors, meta):
+    """tensors: list of (name, np.ndarray f32). Mirrors save_with_meta
+    (minus the tmp+rename dance, which is filesystem protocol, not
+    byte layout)."""
+    items = []
+    payload = b""
+    for name, arr in tensors:
+        raw = np.ascontiguousarray(arr, f32).tobytes()  # little-endian f32
+        items.append({"name": name,
+                      "shape": list(arr.shape),
+                      "crc": zlib.crc32(raw) & 0xFFFFFFFF})
+        payload += raw
+    header = json.dumps({"version": 2, "meta": meta, "tensors": items})
+    return (MAGIC + struct.pack("<Q", len(header))
+            + header.encode() + payload)
+
+def load(blob):
+    """Mirrors load_with_meta: v2 (verify CRCs) or legacy v1 bare array."""
+    f = io.BytesIO(blob)
+    if f.read(5) != MAGIC:
+        raise ValueError("not a BLST1 checkpoint")
+    (hlen,) = struct.unpack("<Q", f.read(8))
+    if hlen > HLEN_CAP:
+        raise ValueError(f"implausible header length {hlen}")
+    hbuf = f.read(hlen)
+    if len(hbuf) != hlen:
+        raise ValueError("truncated header")
+    header = json.loads(hbuf)
+    if isinstance(header, list):
+        meta, items = {}, header          # legacy v1: header IS the list
+    else:
+        if header["version"] != 2:
+            raise ValueError(f"unsupported version {header['version']}")
+        meta, items = header.get("meta", {}), header["tensors"]
+    out = []
+    for item in items:
+        n = int(np.prod(item["shape"])) if item["shape"] else 1
+        raw = f.read(n * 4)
+        if len(raw) != n * 4:
+            raise ValueError(f"tensor {item['name']}: torn write / truncated")
+        if "crc" in item and zlib.crc32(raw) & 0xFFFFFFFF != item["crc"]:
+            raise ValueError(f"CRC mismatch for tensor {item['name']}")
+        out.append((item["name"],
+                    np.frombuffer(raw, dtype="<f4").reshape(item["shape"])))
+    return out, meta
+
+tensors = [("tok_emb", rng.standard_normal((8, 4)).astype(f32)),
+           ("layer0.ln1", np.ones(4, f32)),
+           ("layer0.mlp.w1", rng.standard_normal((4, 8)).astype(f32)),
+           ("layer0.mlp.w3", rng.standard_normal((8, 4)).astype(f32))]
+meta = {"kind": "trainer", "iter": 42, "seed": "12345678901234567890"}
+blob = save_v2(tensors, meta)
+
+# layout invariants, byte for byte
+check("magic is 5 bytes BLST1", blob[:5] == b"BLST1")
+hlen = struct.unpack("<Q", blob[5:13])[0]
+check("u64 LE header length", blob[13:13 + hlen].decode().startswith('{"version": 2'))
+payload_off = 13 + hlen
+first = tensors[0][1].tobytes()
+check("payload starts at 13+hlen, first tensor LE f32",
+      blob[payload_off:payload_off + len(first)] == first)
+check("total size = 13 + hlen + 4*elements",
+      len(blob) == 13 + hlen + 4 * sum(t.size for _, t in tensors))
+
+back, m = load(blob)
+check("meta roundtrips (u64 seed as string survives)", m == meta)
+check("names + order roundtrip", [n for n, _ in back] == [n for n, _ in tensors])
+check("payloads bit-identical",
+      all(np.array_equal(a, b) for (_, a), (_, b) in zip(back, tensors)))
+
+# ---------------------------------------------------------------------------
+# 3. corruption rejection — the crash-safety contract
+# ---------------------------------------------------------------------------
+
+def rejects(name, blob, needle):
+    try:
+        load(blob)
+    except ValueError as e:
+        check(name, needle in str(e))
+    else:
+        check(name, False)
+
+rejects("wrong magic rejected", b"XLST1" + blob[5:], "not a BLST1")
+rejects("truncated payload rejected (torn write)", blob[:-7], "torn write")
+rejects("half-written first tensor rejected",
+        blob[:payload_off + len(first) // 2], "torn write")
+flipped = bytearray(blob)
+flipped[-2] ^= 0x40                       # inside the final tensor's payload
+rejects("bit flip fails CRC", bytes(flipped), "CRC mismatch")
+huge = bytearray(blob)
+huge[5:13] = struct.pack("<Q", (1 << 30) + 1)
+rejects("implausible header length rejected", bytes(huge), "implausible")
+v3 = json.dumps({"version": 3, "meta": {}, "tensors": []}).encode()
+rejects("unknown version rejected",
+        MAGIC + struct.pack("<Q", len(v3)) + v3, "unsupported version")
+
+# ---------------------------------------------------------------------------
+# 4. legacy v1: bare-array header, no meta, no CRCs — still loads
+# ---------------------------------------------------------------------------
+w = np.array([[1.0, -2.5], [3.25, 0.0]], f32)
+v1_header = json.dumps([{"name": "w", "shape": [2, 2]}]).encode()
+v1 = MAGIC + struct.pack("<Q", len(v1_header)) + v1_header + w.tobytes()
+back, m = load(v1)
+check("v1 loads with empty meta", m == {})
+check("v1 payload intact", np.array_equal(back[0][1], w))
+# v1 has no checksums: a bit flip goes undetected (why v2 exists)
+v1_flip = bytearray(v1)
+v1_flip[-2] ^= 0x40
+back, _ = load(bytes(v1_flip))
+check("v1 silently accepts corruption (motivates v2 CRCs)",
+      not np.array_equal(back[0][1], w))
+
+# ---------------------------------------------------------------------------
+# 5. crc as a JSON number is safe: every u32 is exact in f64 (the Rust
+#    Json::num carrier) — no precision loss for any possible checksum
+# ---------------------------------------------------------------------------
+for v in [0, 1, 0xCBF43926, 0xFFFFFFFF]:
+    check(f"u32 crc {v:#010x} exact through f64",
+          int(float(v)) == v and json.loads(json.dumps({"crc": v}))["crc"] == v)
+
+print(f"\nALL OK ({ok_count} checks)")

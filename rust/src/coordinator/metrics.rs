@@ -35,6 +35,26 @@ pub struct ServeMetrics {
     /// Requests refused at admission because their prompt could never fit
     /// the KV page pool (answered with error completions).
     pub kv_refused: u64,
+    /// Injected faults observed by the scheduler (fault-injection runs
+    /// only; 0 in production).
+    pub faults_injected: u64,
+    /// Transient batched-round failures answered with a retry (bounded,
+    /// jittered backoff) rather than a sequential fallback.
+    pub round_retries: u64,
+    /// Batched decode rounds that panicked and were isolated by
+    /// `catch_unwind` (the round fell back to per-session decode).
+    pub round_panics: u64,
+    /// Individual sessions that panicked during sequential decode and were
+    /// retired with an error completion.
+    pub session_panics: u64,
+    /// Requests that exceeded their deadline — expired in the queue or
+    /// retired mid-stream with partial output and a deadline error.
+    pub deadline_misses: u64,
+    /// Requests shed at admission while the coordinator was Degraded.
+    pub shed: u64,
+    /// Scheduler-thread deaths caught by the watchdog (pending requests
+    /// were failed instead of hanging their clients).
+    pub watchdog_trips: u64,
     /// KV pages held by live sessions, as of the last recorded round.
     pub kv_pages_in_use: usize,
     /// Peak concurrent KV pages since startup — the capacity-planning
@@ -69,6 +89,13 @@ impl ServeMetrics {
             rounds: 0,
             batched_fallbacks: 0,
             kv_refused: 0,
+            faults_injected: 0,
+            round_retries: 0,
+            round_panics: 0,
+            session_panics: 0,
+            deadline_misses: 0,
+            shed: 0,
+            watchdog_trips: 0,
             kv_pages_in_use: 0,
             kv_pages_peak: 0,
             kv_resident_bytes: 0,
@@ -173,11 +200,20 @@ impl ServeMetrics {
             self.kv_pages_peak,
             self.kv_resident_bytes as f64 / 1024.0,
         );
-        if self.batched_fallbacks > 0 {
-            s.push_str(&format!(" batched_fallbacks={}", self.batched_fallbacks));
-        }
-        if self.kv_refused > 0 {
-            s.push_str(&format!(" kv_refused={}", self.kv_refused));
+        for (name, v) in [
+            ("batched_fallbacks", self.batched_fallbacks),
+            ("kv_refused", self.kv_refused),
+            ("faults_injected", self.faults_injected),
+            ("round_retries", self.round_retries),
+            ("round_panics", self.round_panics),
+            ("session_panics", self.session_panics),
+            ("deadline_misses", self.deadline_misses),
+            ("shed", self.shed),
+            ("watchdog_trips", self.watchdog_trips),
+        ] {
+            if v > 0 {
+                s.push_str(&format!(" {name}={v}"));
+            }
         }
         s
     }
@@ -229,5 +265,30 @@ mod tests {
         assert!(!s.contains("kv_refused"));
         m.kv_refused = 3;
         assert!(m.summary().contains("kv_refused=3"));
+    }
+
+    #[test]
+    fn fault_counters_appear_only_when_nonzero() {
+        let mut m = ServeMetrics::new();
+        let clean = m.summary();
+        for name in [
+            "faults_injected",
+            "round_retries",
+            "round_panics",
+            "session_panics",
+            "deadline_misses",
+            "shed",
+            "watchdog_trips",
+        ] {
+            assert!(!clean.contains(name), "{clean}");
+        }
+        m.round_panics = 2;
+        m.deadline_misses = 1;
+        m.shed = 4;
+        m.watchdog_trips = 1;
+        let s = m.summary();
+        for want in ["round_panics=2", "deadline_misses=1", "shed=4", "watchdog_trips=1"] {
+            assert!(s.contains(want), "{s}");
+        }
     }
 }

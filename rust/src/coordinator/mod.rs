@@ -29,4 +29,4 @@ pub mod server;
 
 pub use metrics::ServeMetrics;
 pub use router::{Admit, Batcher, BatcherConfig, Request, Session};
-pub use server::{Completion, Coordinator};
+pub use server::{Completion, CompletionWait, Coordinator, HealthState};

@@ -18,6 +18,24 @@ pub struct Request {
     pub max_new: usize,
     /// Optional stop token.
     pub eos: Option<u32>,
+    /// Optional deadline in milliseconds from submission. A request still
+    /// queued past its deadline is expired with an error completion; an
+    /// in-flight session past it retires at the next round boundary with
+    /// its partial output and a deadline error (so a client never waits
+    /// more than one round beyond the deadline).
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            prompt: Vec::new(),
+            max_new: 0,
+            eos: None,
+            deadline_ms: None,
+        }
+    }
 }
 
 /// One admitted, in-flight sequence.
@@ -61,6 +79,10 @@ pub struct BatcherConfig {
     /// off only for the sequential A/B baseline — greedy outputs are
     /// bit-identical either way.
     pub batched: bool,
+    /// Bounded retries (with jittered backoff) for a *transient* batched
+    /// decode-round failure before falling back to per-session sequential
+    /// decode. Panics and pool-exhaustion errors are never retried.
+    pub round_retries: usize,
 }
 
 impl Default for BatcherConfig {
@@ -69,6 +91,7 @@ impl Default for BatcherConfig {
             max_batch: 4,
             max_queue: 64,
             batched: true,
+            round_retries: 2,
         }
     }
 }
@@ -208,6 +231,23 @@ impl Batcher {
         self.waiting.is_empty() && self.active.is_empty()
     }
 
+    /// Remove and return the waiting requests matching `expired` (the
+    /// coordinator's queued-past-deadline sweep), preserving the FIFO
+    /// order of everything else. Expired requests count as rejected.
+    pub fn expire_where(&mut self, mut expired: impl FnMut(&Request) -> bool) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if expired(&self.waiting[i]) {
+                out.push(self.waiting.remove(i).unwrap());
+                self.rejected += 1;
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     /// Remove and return every waiting (queued-but-unadmitted) request —
     /// the shutdown path, so the server can turn them into error
     /// completions instead of silently dropping them.
@@ -233,7 +273,7 @@ mod tests {
             id,
             prompt: vec![1, 2],
             max_new,
-            eos: None,
+            ..Default::default()
         }
     }
 
@@ -326,6 +366,26 @@ mod tests {
     }
 
     #[test]
+    fn expire_where_removes_matches_and_keeps_fifo_order() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_queue: 10,
+            ..BatcherConfig::default()
+        });
+        for i in 0..5 {
+            b.enqueue(req(i, 1));
+        }
+        let expired = b.expire_where(|r| r.id % 2 == 1);
+        assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.rejected, 2);
+        assert_eq!(b.queue_len(), 3);
+        let (admitted, _) = b.admit_where(|_| Admit::Grant);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(b.active_mut()[0].req.id, 0);
+        assert_eq!(b.active_mut()[1].req.id, 2);
+    }
+
+    #[test]
     fn drain_and_take_empty_everything() {
         let mut b = Batcher::new(BatcherConfig {
             max_batch: 2,
@@ -352,6 +412,7 @@ mod tests {
                 prompt: vec![1],
                 max_new: 100,
                 eos: Some(5),
+                ..Default::default()
             },
             output: vec![3, 5],
             prefilled: true,
@@ -380,7 +441,7 @@ mod tests {
                     id: i as u64,
                     prompt: vec![1],
                     max_new: prop::usize_in(rng, 1, 5),
-                    eos: None,
+                    ..Default::default()
                 });
             }
             let mut completion_order = Vec::new();

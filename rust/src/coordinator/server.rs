@@ -17,18 +17,46 @@
 //! [`Engine::decode_batch`] call over all prefilled sessions, so every
 //! projection/MLP/LM-head multiply runs as a single `(B × d_model)` packed
 //! GEMM or BSpMM instead of B GEMV chains. Ragged batches (sessions
-//! finishing mid-round) simply shrink B the next round. Errors are
-//! isolated per session: a failed batched round falls back to per-session
-//! sequential decode so one bad session can't poison the others, and a
-//! session whose KV cache fills up retires with the tokens it has.
+//! finishing mid-round) simply shrink B the next round.
+//!
+//! # Supervision (see ARCHITECTURE.md "Failure domains & recovery")
+//!
+//! The scheduler is a *supervised* runtime with three nested failure
+//! domains, each isolated from the next:
+//!
+//! 1. **Round**: every batched decode round runs under `catch_unwind`. A
+//!    panicking or failing round falls back to per-session sequential
+//!    decode; a *transient* round error is first retried a bounded number
+//!    of times with jittered backoff ([`BatcherConfig::round_retries`]).
+//! 2. **Session**: each sequential decode step runs under its own
+//!    `catch_unwind`. A panicking session retires with an error completion
+//!    (partial tokens attached) — it cannot take down its batchmates.
+//! 3. **Scheduler**: the whole loop runs under a watchdog `catch_unwind`
+//!    in the worker thread. If the scheduler itself dies, the watchdog
+//!    fails every queued and in-flight request with an error completion
+//!    instead of hanging clients, then drops the completion channel so
+//!    [`Coordinator::next_completion`] reports
+//!    [`CompletionWait::Disconnected`].
+//!
+//! Per-request deadlines ([`Request::deadline_ms`]) are enforced at the
+//! admission sweep (queued past deadline → expired) and at every round
+//! boundary (in-flight past deadline → retired with partial output), so a
+//! client waits at most one round past its deadline. A [`HealthState`]
+//! gauge flips to Degraded under sustained round failures (hysteresis on
+//! a strain counter) and sheds new arrivals at admission until rounds run
+//! clean again. All of this is driven deterministically in tests by the
+//! seeded fault injector ([`crate::util::faults::Faults`]); with no fault
+//! plan armed every injection site is a single null-pointer check.
+//!
 //! On [`Coordinator::stop`], queued-but-unadmitted requests and in-flight
 //! sessions are drained into error completions — a client blocked on
 //! [`Coordinator::next_completion`] always gets an answer.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -36,6 +64,8 @@ use anyhow::Result;
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::router::{Admit, Batcher, BatcherConfig, Request};
 use crate::model::engine::{Engine, KvCache};
+use crate::util::faults::{FaultSite, Faults};
+use crate::util::rng::Rng;
 
 /// A finished request.
 #[derive(Clone, Debug)]
@@ -50,8 +80,61 @@ pub struct Completion {
     pub ttft_secs: f64,
     /// Seconds from submission to completion.
     pub e2e_secs: f64,
-    /// Why the request failed (prefill error, shutdown); `None` = success.
+    /// Why the request failed (prefill error, deadline, shutdown);
+    /// `None` = success.
     pub error: Option<String>,
+}
+
+/// Outcome of waiting for a completion — a timeout (the coordinator is
+/// alive, just slow; wait again) is a different situation from a dead
+/// coordinator (every completion that will ever arrive has arrived), and
+/// conflating them as `None` made clients poll a corpse.
+#[derive(Debug)]
+pub enum CompletionWait {
+    /// A completion arrived.
+    Ready(Completion),
+    /// Nothing arrived within the timeout; the scheduler is still running.
+    TimedOut,
+    /// The scheduler has exited (stop or watchdog) and the completion
+    /// stream is fully drained — no further completions will ever arrive.
+    Disconnected,
+}
+
+impl CompletionWait {
+    /// The completion, if one arrived (`TimedOut`/`Disconnected` → `None`).
+    pub fn ready(self) -> Option<Completion> {
+        match self {
+            CompletionWait::Ready(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// `true` when the coordinator is gone for good.
+    pub fn is_disconnected(&self) -> bool {
+        matches!(self, CompletionWait::Disconnected)
+    }
+}
+
+/// Coordinator health, exposed on [`Coordinator::health`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy = 0,
+    /// Sustained round failures/panics — new arrivals are shed at
+    /// admission until rounds run clean again.
+    Degraded = 1,
+    /// Shutting down (stop requested or watchdog tripped); no new work.
+    Draining = 2,
+}
+
+impl HealthState {
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            _ => HealthState::Draining,
+        }
+    }
 }
 
 struct Timing {
@@ -60,33 +143,92 @@ struct Timing {
     first_token: Option<Instant>,
 }
 
+/// Lock the metrics even if a caught panic poisoned the mutex — the
+/// counters stay meaningful (a panic can at worst lose its own increment).
+fn mlock(m: &Mutex<ServeMetrics>) -> MutexGuard<'_, ServeMetrics> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Handle to a running serving coordinator: submit requests, receive
-/// completions, read metrics, stop the scheduler.
+/// completions, read metrics and health, stop the scheduler.
 pub struct Coordinator {
     tx: SyncSender<Request>,
     completions: Receiver<Completion>,
     stop: Arc<AtomicBool>,
     metrics: Arc<Mutex<ServeMetrics>>,
+    health: Arc<AtomicU8>,
+    faults: Faults,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Spawn the scheduler over an engine.
+    /// Spawn the scheduler over an engine (no fault injection).
     pub fn start(engine: Arc<Engine>, cfg: BatcherConfig) -> Coordinator {
+        Coordinator::start_with_faults(engine, cfg, Faults::disabled())
+    }
+
+    /// Spawn the scheduler with a fault plan armed (chaos harness entry
+    /// point; [`Faults::disabled`] makes this identical to
+    /// [`Coordinator::start`]).
+    pub fn start_with_faults(engine: Arc<Engine>, cfg: BatcherConfig, faults: Faults) -> Coordinator {
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
         let (ctx, crx) = mpsc::channel::<Completion>();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
+        let health = Arc::new(AtomicU8::new(HealthState::Healthy as u8));
+        // ids received but not yet answered — the watchdog's drain list
+        let inflight = Arc::new(Mutex::new(HashSet::<u64>::new()));
         let stop2 = stop.clone();
         let metrics2 = metrics.clone();
+        let health2 = health.clone();
+        let faults2 = faults.clone();
         let worker = std::thread::spawn(move || {
-            scheduler_loop(engine, cfg, rx, ctx, stop2, metrics2);
+            let crashed = catch_unwind(AssertUnwindSafe(|| {
+                scheduler_loop(
+                    &engine, cfg, &rx, &ctx, &stop2, &metrics2, &health2, &inflight, &faults2,
+                );
+            }))
+            .is_err();
+            if crashed {
+                // watchdog: the scheduler died outside round/session
+                // isolation. Fail everything pending so no client hangs,
+                // then let ctx drop → clients see Disconnected.
+                health2.store(HealthState::Draining as u8, Ordering::Relaxed);
+                mlock(&metrics2).watchdog_trips += 1;
+                let dead = |id: u64| Completion {
+                    id,
+                    tokens: Vec::new(),
+                    queue_secs: 0.0,
+                    ttft_secs: 0.0,
+                    e2e_secs: 0.0,
+                    error: Some("scheduler thread panicked; request abandoned".into()),
+                };
+                let mut failed = 0usize;
+                while let Ok(req) = rx.try_recv() {
+                    ctx.send(dead(req.id)).ok();
+                    failed += 1;
+                }
+                let ids: Vec<u64> = {
+                    let mut g = inflight.lock().unwrap_or_else(|e| e.into_inner());
+                    g.drain().collect()
+                };
+                for id in ids {
+                    ctx.send(dead(id)).ok();
+                    failed += 1;
+                }
+                crate::log_warn!(
+                    "coordinator",
+                    "watchdog: scheduler thread panicked; failed {failed} pending request(s)"
+                );
+            }
         });
         Coordinator {
             tx,
             completions: crx,
             stop,
             metrics,
+            health,
+            faults,
             worker: Some(worker),
         }
     }
@@ -100,24 +242,40 @@ impl Coordinator {
         }
     }
 
-    /// Block for the next completion.
-    pub fn next_completion(&self, timeout: Duration) -> Option<Completion> {
-        self.completions.recv_timeout(timeout).ok()
+    /// Wait for the next completion, distinguishing "nothing yet" from
+    /// "the coordinator is gone and the stream is drained".
+    pub fn next_completion(&self, timeout: Duration) -> CompletionWait {
+        match self.completions.recv_timeout(timeout) {
+            Ok(c) => CompletionWait::Ready(c),
+            Err(RecvTimeoutError::Timeout) => CompletionWait::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => CompletionWait::Disconnected,
+        }
+    }
+
+    /// Current health of the scheduler.
+    pub fn health(&self) -> HealthState {
+        HealthState::from_u8(self.health.load(Ordering::Relaxed))
+    }
+
+    /// The fault plan this coordinator was started with (fired/checked
+    /// counters update live — the chaos harness reads them).
+    pub fn faults(&self) -> &Faults {
+        &self.faults
     }
 
     /// One-line digest of the serving metrics so far.
     pub fn metrics_summary(&self) -> String {
-        self.metrics.lock().unwrap().summary()
+        mlock(&self.metrics).summary()
     }
 
     /// Decode throughput since startup (tokens/s).
     pub fn throughput(&self) -> f64 {
-        self.metrics.lock().unwrap().throughput()
+        mlock(&self.metrics).throughput()
     }
 
     /// Mean sessions per decode round (continuous-batch occupancy).
     pub fn mean_round_batch(&self) -> f64 {
-        self.metrics.lock().unwrap().mean_round_batch()
+        mlock(&self.metrics).mean_round_batch()
     }
 
     /// Stop the scheduler and wait for it to exit. Requests still queued
@@ -127,6 +285,7 @@ impl Coordinator {
         if let Some(h) = self.worker.take() {
             h.join().ok();
         }
+        self.health.store(HealthState::Draining as u8, Ordering::Relaxed);
     }
 }
 
@@ -136,21 +295,48 @@ impl Drop for Coordinator {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
-    engine: Arc<Engine>,
+    engine: &Engine,
     cfg: BatcherConfig,
-    rx: Receiver<Request>,
-    ctx: Sender<Completion>,
-    stop: Arc<AtomicBool>,
-    metrics: Arc<Mutex<ServeMetrics>>,
+    rx: &Receiver<Request>,
+    ctx: &Sender<Completion>,
+    stop: &AtomicBool,
+    metrics: &Mutex<ServeMetrics>,
+    health: &AtomicU8,
+    inflight: &Mutex<HashSet<u64>>,
+    faults: &Faults,
 ) {
     let mut batcher = Batcher::new(cfg);
     let mut caches: HashMap<u64, KvCache> = HashMap::new();
     let mut timing: HashMap<u64, Timing> = HashMap::new();
-    // ids answered with an error completion at prefill time; retirement
-    // must not send a second (bogus success) completion for them
-    let mut errored: std::collections::HashSet<u64> = std::collections::HashSet::new();
-    while !stop.load(Ordering::Relaxed) {
+    // ids answered with an error completion before retirement (prefill
+    // error, session panic, deadline); retirement must not send a second
+    // (bogus success) completion for them
+    let mut errored: HashSet<u64> = HashSet::new();
+    // deterministic jitter for transient-round-failure backoff
+    let mut retry_rng = Rng::new(0xB0FF);
+    // consecutive-bad-round pressure driving the health gauge: +1 per bad
+    // round, -1 per clean one; Degraded at >= STRAIN_DEGRADED
+    const STRAIN_DEGRADED: u32 = 3;
+    const STRAIN_CAP: u32 = 6;
+    let mut strain: u32 = 0;
+    // answer a request and release its watchdog registration
+    let send = |c: Completion| {
+        inflight.lock().unwrap_or_else(|e| e.into_inner()).remove(&c.id);
+        ctx.send(c).ok();
+    };
+    let deadline_passed = |t: &Timing, req: &Request| -> bool {
+        req.deadline_ms
+            .is_some_and(|d| t.submitted.elapsed() >= Duration::from_millis(d))
+    };
+    'serve: while !stop.load(Ordering::Relaxed) {
+        // injected scheduler death: outside every catch_unwind below, so
+        // only the watchdog in the worker thread can catch it
+        if faults.fire(FaultSite::SchedulerPanic) {
+            mlock(metrics).faults_injected += 1;
+            panic!("injected scheduler_panic");
+        }
         // drain the submission channel into the waiting queue
         loop {
             match rx.recv_timeout(if batcher.idle() {
@@ -161,7 +347,8 @@ fn scheduler_loop(
                 Ok(req) => {
                     let id = req.id;
                     // ids key the KV-cache and timing maps; a duplicate of
-                    // a live request would corrupt both — reject it
+                    // a live request would corrupt both — reject it (raw
+                    // send: the live copy keeps its watchdog registration)
                     if timing.contains_key(&id) {
                         ctx.send(Completion {
                             id,
@@ -174,6 +361,23 @@ fn scheduler_loop(
                         .ok();
                         continue;
                     }
+                    // load shedding: while Degraded, answering a request
+                    // now with a cheap error beats queueing it behind a
+                    // failing batch
+                    if health.load(Ordering::Relaxed) == HealthState::Degraded as u8 {
+                        mlock(metrics).shed += 1;
+                        ctx.send(Completion {
+                            id,
+                            tokens: Vec::new(),
+                            queue_secs: 0.0,
+                            ttft_secs: 0.0,
+                            e2e_secs: 0.0,
+                            error: Some("coordinator degraded, shedding load".into()),
+                        })
+                        .ok();
+                        continue;
+                    }
+                    inflight.lock().unwrap_or_else(|e| e.into_inner()).insert(id);
                     timing.insert(
                         id,
                         Timing {
@@ -187,21 +391,20 @@ fn scheduler_loop(
                         // channel is the same size) — answer with an error
                         // completion rather than dropping the request
                         timing.remove(&id);
-                        ctx.send(Completion {
+                        send(Completion {
                             id,
                             tokens: Vec::new(),
                             queue_secs: 0.0,
                             ttft_secs: 0.0,
                             e2e_secs: 0.0,
                             error: Some("waiting queue full".into()),
-                        })
-                        .ok();
+                        });
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
                     if batcher.idle() {
-                        return;
+                        break 'serve;
                     }
                     break;
                 }
@@ -210,6 +413,29 @@ fn scheduler_loop(
 
         if batcher.idle() {
             continue;
+        }
+
+        // expire queued requests already past their deadline — cheaper to
+        // answer now than to prefill work nobody is waiting for
+        for req in batcher.expire_where(|r| {
+            timing.get(&r.id).map(|t| deadline_passed(t, r)).unwrap_or(false)
+        }) {
+            let waited = timing
+                .remove(&req.id)
+                .map(|t| t.submitted.elapsed().as_secs_f64())
+                .unwrap_or(0.0);
+            mlock(metrics).deadline_misses += 1;
+            send(Completion {
+                id: req.id,
+                tokens: Vec::new(),
+                queue_secs: waited,
+                ttft_secs: 0.0,
+                e2e_secs: waited,
+                error: Some(format!(
+                    "deadline of {}ms exceeded while queued",
+                    req.deadline_ms.unwrap_or(0)
+                )),
+            });
         }
 
         // admit new sessions against KV pool capacity: a session needs
@@ -250,8 +476,8 @@ fn scheduler_loop(
                 .remove(&req.id)
                 .map(|t| t.submitted.elapsed().as_secs_f64())
                 .unwrap_or(0.0);
-            metrics.lock().unwrap().kv_refused += 1;
-            ctx.send(Completion {
+            mlock(metrics).kv_refused += 1;
+            send(Completion {
                 id: req.id,
                 tokens: Vec::new(),
                 queue_secs: waited,
@@ -261,8 +487,7 @@ fn scheduler_loop(
                     "prompt needs {needed} KV pages but the pool capacity is {} pages",
                     kv_pool.capacity_pages().unwrap_or(0)
                 )),
-            })
-            .ok();
+            });
         }
 
         // prefill the admitted sessions
@@ -273,7 +498,13 @@ fn scheduler_loop(
                 t.admitted = Some(Instant::now());
             }
             let mut cache = engine.new_cache();
-            match engine.prefill(&s.req.prompt, &mut cache) {
+            let prefilled = if faults.fire(FaultSite::PrefillError) {
+                mlock(metrics).faults_injected += 1;
+                Err(anyhow::anyhow!("injected prefill_error"))
+            } else {
+                engine.prefill(&s.req.prompt, &mut cache)
+            };
+            match prefilled {
                 Ok(logits) => {
                     let tok = Engine::argmax(&logits);
                     s.output.push(tok);
@@ -284,15 +515,14 @@ fn scheduler_loop(
                     caches.insert(id, cache);
                 }
                 Err(e) => {
-                    ctx.send(Completion {
+                    send(Completion {
                         id,
                         tokens: vec![],
                         queue_secs: 0.0,
                         ttft_secs: 0.0,
                         e2e_secs: 0.0,
                         error: Some(e.to_string()),
-                    })
-                    .ok();
+                    });
                     errored.insert(id);
                     s.req.max_new = 0; // force retirement with no output
                     s.prefilled = true;
@@ -318,29 +548,83 @@ fn scheduler_loop(
             round_ids.push(s.req.id);
             round_tokens.push(*s.output.last().unwrap());
         }
+        let mut round_bad = false;
         if !round_ids.is_empty() {
+            // injected stall: models a slow round (deadline coverage)
+            if let Some(d) = faults.stall(FaultSite::DecodeStallMs) {
+                mlock(metrics).faults_injected += 1;
+                std::thread::sleep(d);
+            }
             let mut decoded: Vec<Option<Vec<f32>>> = vec![None; round_ids.len()];
+            // sessions that panicked during sequential decode this round
+            let mut panicked: HashSet<u64> = HashSet::new();
             if cfg.batched {
                 // stack the round's sessions into one decode_batch call —
-                // a single (B × d_model) GEMM/BSpMM per projection
+                // a single (B × d_model) GEMM/BSpMM per projection. The
+                // whole round runs under catch_unwind: one poisoned
+                // session must not kill the scheduler.
                 let mut round_caches: Vec<KvCache> =
                     round_ids.iter().map(|id| caches.remove(id).unwrap()).collect();
-                match engine.decode_batch(&round_tokens, &mut round_caches) {
-                    Ok(all) => {
-                        for (slot, logits) in decoded.iter_mut().zip(all) {
-                            *slot = Some(logits);
+                let mut attempt = 0usize;
+                loop {
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        if faults.fire(FaultSite::DecodeRoundPanic) {
+                            mlock(metrics).faults_injected += 1;
+                            panic!("injected decode_round_panic");
                         }
-                    }
-                    Err(e) => {
-                        // loud: a failing batched round silently costing a
-                        // sequential fallback every iteration is exactly the
-                        // regression the serve A/B exists to catch
-                        metrics.lock().unwrap().batched_fallbacks += 1;
-                        crate::log_warn!(
-                            "coordinator",
-                            "decode_batch failed ({} sessions), falling back to sequential: {e}",
-                            round_ids.len()
-                        );
+                        if faults.fire(FaultSite::DecodeRoundError) {
+                            mlock(metrics).faults_injected += 1;
+                            anyhow::bail!("injected transient decode fault");
+                        }
+                        if faults.fire(FaultSite::KvPoolExhausted) {
+                            mlock(metrics).faults_injected += 1;
+                            anyhow::bail!("KV page pool exhausted (injected fault)");
+                        }
+                        engine.decode_batch(&round_tokens, &mut round_caches)
+                    }));
+                    match outcome {
+                        Ok(Ok(all)) => {
+                            for (slot, logits) in decoded.iter_mut().zip(all) {
+                                *slot = Some(logits);
+                            }
+                            break;
+                        }
+                        Ok(Err(e)) => {
+                            // pool exhaustion is deterministic — retrying
+                            // cannot help; anything else gets a bounded
+                            // retry with jittered backoff before we pay
+                            // for a sequential fallback
+                            let transient = !e.to_string().contains("exhausted");
+                            if transient && attempt < cfg.round_retries {
+                                attempt += 1;
+                                mlock(metrics).round_retries += 1;
+                                let backoff = (100u64 << attempt.min(4)) + retry_rng.below(200) as u64;
+                                std::thread::sleep(Duration::from_micros(backoff));
+                                continue;
+                            }
+                            round_bad = true;
+                            // loud: a failing batched round silently
+                            // costing a sequential fallback every iteration
+                            // is exactly the regression the serve A/B
+                            // exists to catch
+                            mlock(metrics).batched_fallbacks += 1;
+                            crate::log_warn!(
+                                "coordinator",
+                                "decode_batch failed ({} sessions), falling back to sequential: {e}",
+                                round_ids.len()
+                            );
+                            break;
+                        }
+                        Err(_) => {
+                            round_bad = true;
+                            mlock(metrics).round_panics += 1;
+                            crate::log_warn!(
+                                "coordinator",
+                                "decode round panicked ({} sessions); isolating per session",
+                                round_ids.len()
+                            );
+                            break;
+                        }
                     }
                 }
                 for (id, c) in round_ids.iter().zip(round_caches) {
@@ -349,42 +633,144 @@ fn scheduler_loop(
             }
             // sequential path: the A/B baseline, and the per-session
             // fallback after a failed batched round (error isolation — one
-            // bad session must not take down its batchmates)
+            // bad session must not take down its batchmates). Each step is
+            // individually unwind-isolated: a panicking session retires
+            // with an error completion below.
             for (j, id) in round_ids.iter().enumerate() {
-                if decoded[j].is_none() {
-                    if let Ok(logits) = engine.decode(round_tokens[j], caches.get_mut(id).unwrap())
-                    {
-                        decoded[j] = Some(logits);
+                if decoded[j].is_some() {
+                    continue;
+                }
+                let cache = caches.get_mut(id).unwrap();
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if faults.fire(FaultSite::DecodeRoundPanic) {
+                        mlock(metrics).faults_injected += 1;
+                        panic!("injected session panic");
+                    }
+                    if faults.fire(FaultSite::KvPoolExhausted) {
+                        mlock(metrics).faults_injected += 1;
+                        anyhow::bail!("KV page pool exhausted (injected fault)");
+                    }
+                    engine.decode(round_tokens[j], cache)
+                }));
+                match outcome {
+                    Ok(Ok(logits)) => decoded[j] = Some(logits),
+                    // session failed cleanly → retires below with its
+                    // partial output (success-with-partial semantics)
+                    Ok(Err(_)) => {}
+                    Err(_) => {
+                        mlock(metrics).session_panics += 1;
+                        panicked.insert(*id);
                     }
                 }
+            }
+            if !panicked.is_empty() {
+                round_bad = true;
             }
             // apply results in active order (round_ids preserves it)
             let mut produced = 0usize;
             let mut j = 0;
             for s in batcher.active_mut().iter_mut() {
                 if j < round_ids.len() && s.req.id == round_ids[j] {
-                    match decoded[j].take() {
-                        Some(logits) => {
-                            s.output.push(Engine::argmax(&logits));
-                            produced += 1;
+                    if panicked.contains(&s.req.id) {
+                        // a panicking session retires NOW with an error
+                        // completion carrying its partial tokens
+                        let id = s.req.id;
+                        let tokens = std::mem::take(&mut s.output);
+                        s.req.max_new = 0; // finished() → retired below
+                        errored.insert(id);
+                        decoded[j] = None;
+                        let (queue_secs, ttft_secs, e2e_secs) = timing
+                            .get(&id)
+                            .map(|t| {
+                                (
+                                    t.admitted
+                                        .map(|a| (a - t.submitted).as_secs_f64())
+                                        .unwrap_or(0.0),
+                                    t.first_token
+                                        .map(|f| (f - t.submitted).as_secs_f64())
+                                        .unwrap_or(0.0),
+                                    t.submitted.elapsed().as_secs_f64(),
+                                )
+                            })
+                            .unwrap_or((0.0, 0.0, 0.0));
+                        send(Completion {
+                            id,
+                            tokens,
+                            queue_secs,
+                            ttft_secs,
+                            e2e_secs,
+                            error: Some("session panicked during decode".into()),
+                        });
+                    } else {
+                        match decoded[j].take() {
+                            Some(logits) => {
+                                s.output.push(Engine::argmax(&logits));
+                                produced += 1;
+                            }
+                            // session failed even sequentially → retire
+                            // with whatever it has
+                            None => s.req.max_new = s.output.len(),
                         }
-                        // session failed even sequentially → retire with
-                        // whatever it has
-                        None => s.req.max_new = s.output.len(),
                     }
                     j += 1;
                 }
             }
-            metrics.lock().unwrap().record_round(
+            mlock(metrics).record_round(
                 round_ids.len(),
                 round_t0.elapsed().as_secs_f64(),
                 produced,
             );
+            // health hysteresis: sustained bad rounds flip Degraded (shed
+            // at admission); clean rounds walk it back to Healthy. Pool
+            // pressure alone is NOT strain — deferral is normal operation.
+            if round_bad {
+                strain = (strain + 1).min(STRAIN_CAP);
+            } else {
+                strain = strain.saturating_sub(1);
+            }
+            let h = if strain >= STRAIN_DEGRADED {
+                HealthState::Degraded
+            } else {
+                HealthState::Healthy
+            };
+            health.store(h as u8, Ordering::Relaxed);
+        }
+
+        // deadline enforcement at the round boundary: an in-flight session
+        // past its deadline retires with partial output and a deadline
+        // error — a client waits at most one round past the deadline
+        for s in batcher.active_mut().iter_mut() {
+            let id = s.req.id;
+            if errored.contains(&id) || s.finished() {
+                continue;
+            }
+            let Some(t) = timing.get(&id) else { continue };
+            if deadline_passed(t, &s.req) {
+                mlock(metrics).deadline_misses += 1;
+                errored.insert(id);
+                let tokens = std::mem::take(&mut s.output);
+                let deadline = s.req.deadline_ms.unwrap_or(0);
+                s.req.max_new = 0; // finished() → retired below
+                send(Completion {
+                    id,
+                    tokens,
+                    queue_secs: t
+                        .admitted
+                        .map(|a| (a - t.submitted).as_secs_f64())
+                        .unwrap_or(0.0),
+                    ttft_secs: t
+                        .first_token
+                        .map(|f| (f - t.submitted).as_secs_f64())
+                        .unwrap_or(0.0),
+                    e2e_secs: t.submitted.elapsed().as_secs_f64(),
+                    error: Some(format!("deadline of {deadline}ms exceeded")),
+                });
+            }
         }
 
         // snapshot KV residency (pool high-water travels with it, so the
         // peak the summary reports is the pool's own, not a re-derivation)
-        metrics.lock().unwrap().record_kv(
+        mlock(metrics).record_kv(
             kv_pool.pages_in_use(),
             kv_pool.high_water_pages(),
             kv_pool.resident_bytes(),
@@ -412,27 +798,26 @@ fn scheduler_loop(
                 ),
                 None => (0.0, 0.0, 0.0),
             };
-            metrics.lock().unwrap().record_request(
+            mlock(metrics).record_request(
                 queue_secs,
                 ttft_secs,
                 e2e_secs,
                 s.req.prompt.len(),
                 s.output.len(),
             );
-            ctx.send(Completion {
+            send(Completion {
                 id,
                 tokens: s.output,
                 queue_secs,
                 ttft_secs,
                 e2e_secs,
                 error: None,
-            })
-            .ok();
+            });
         }
         // refresh the gauges after retirement freed caches, so an
         // end-of-run summary shows the pages actually still held (the
         // peak recorded above is unaffected)
-        metrics.lock().unwrap().record_kv(
+        mlock(metrics).record_kv(
             kv_pool.pages_in_use(),
             kv_pool.high_water_pages(),
             kv_pool.resident_bytes(),
@@ -443,6 +828,7 @@ fn scheduler_loop(
     // client blocked on next_completion can never hang on a stopped
     // coordinator — requests sitting in the channel, queued-but-unadmitted
     // requests, and in-flight sessions (which keep their partial tokens)
+    health.store(HealthState::Draining as u8, Ordering::Relaxed);
     let stopped = |id: u64, tokens: Vec<u32>| Completion {
         id,
         tokens,
@@ -452,16 +838,16 @@ fn scheduler_loop(
         error: Some("coordinator stopped before completion".into()),
     };
     while let Ok(req) = rx.try_recv() {
-        ctx.send(stopped(req.id, Vec::new())).ok();
+        send(stopped(req.id, Vec::new()));
     }
     for req in batcher.drain_waiting() {
-        ctx.send(stopped(req.id, Vec::new())).ok();
+        send(stopped(req.id, Vec::new()));
     }
     for s in batcher.take_active() {
         // end_round() retires finished sessions every iteration, so
         // anything still active here is necessarily unfinished
         caches.remove(&s.req.id);
-        ctx.send(stopped(s.req.id, s.output)).ok();
+        send(stopped(s.req.id, s.output));
     }
 }
 
@@ -523,6 +909,7 @@ mod tests {
                 ..BatcherConfig::default()
             },
         );
+        assert_eq!(coord.health(), HealthState::Healthy);
         let n = 8;
         for i in 0..n {
             coord
@@ -530,7 +917,7 @@ mod tests {
                     id: i,
                     prompt: vec![1, 2, 3],
                     max_new: 5,
-                    eos: None,
+                    ..Default::default()
                 })
                 .unwrap();
         }
@@ -538,6 +925,7 @@ mod tests {
         for _ in 0..n {
             let c = coord
                 .next_completion(Duration::from_secs(30))
+                .ready()
                 .expect("completion");
             assert!(c.error.is_none(), "{:?}", c.error);
             assert_eq!(c.tokens.len(), 5);
@@ -547,6 +935,7 @@ mod tests {
         done.sort_unstable();
         assert_eq!(done, (0..n).collect::<Vec<_>>());
         coord.stop();
+        assert_eq!(coord.health(), HealthState::Draining);
     }
 
     #[test]
@@ -559,12 +948,12 @@ mod tests {
                     id: i,
                     prompt: vec![4, 4, 4],
                     max_new: 6,
-                    eos: None,
+                    ..Default::default()
                 })
                 .unwrap();
         }
-        let a = coord.next_completion(Duration::from_secs(30)).unwrap();
-        let b = coord.next_completion(Duration::from_secs(30)).unwrap();
+        let a = coord.next_completion(Duration::from_secs(30)).ready().unwrap();
+        let b = coord.next_completion(Duration::from_secs(30)).ready().unwrap();
         assert_eq!(a.tokens, b.tokens, "greedy decode must be deterministic");
         coord.stop();
     }
@@ -578,13 +967,17 @@ mod tests {
                 id: 0,
                 prompt: vec![1; 100],
                 max_new: 4,
-                eos: None,
+                ..Default::default()
             })
             .unwrap();
-        let c = coord.next_completion(Duration::from_secs(30)).unwrap();
+        let c = coord.next_completion(Duration::from_secs(30)).ready().unwrap();
         assert!(c.error.is_some());
-        // no spurious second completion for the same request
-        assert!(coord.next_completion(Duration::from_millis(300)).is_none());
+        // no spurious second completion for the same request — and a
+        // quiet-but-alive coordinator reports TimedOut, not Disconnected
+        assert!(matches!(
+            coord.next_completion(Duration::from_millis(300)),
+            CompletionWait::TimedOut
+        ));
         coord.stop();
     }
 
@@ -599,6 +992,7 @@ mod tests {
                     max_batch: 4,
                     max_queue: 16,
                     batched,
+                    ..BatcherConfig::default()
                 },
             );
             for i in 0..6u64 {
@@ -607,13 +1001,16 @@ mod tests {
                         id: i,
                         prompt: (0..2 + i as usize % 3).map(|j| (3 + i as u32 + j as u32) % 32).collect(),
                         max_new: 3 + i as usize % 4,
-                        eos: None,
+                        ..Default::default()
                     })
                     .unwrap();
             }
             let mut done = Vec::new();
             for _ in 0..6 {
-                let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+                let c = coord
+                    .next_completion(Duration::from_secs(30))
+                    .ready()
+                    .expect("completion");
                 assert!(c.error.is_none(), "{:?}", c.error);
                 done.push((c.id, c.tokens));
             }
@@ -645,7 +1042,7 @@ mod tests {
                     id: 42,
                     prompt: vec![1, 2, 3],
                     max_new: 6,
-                    eos: None,
+                    ..Default::default()
                 })
                 .unwrap();
         }
@@ -654,7 +1051,10 @@ mod tests {
         // the shared id in the batched round)
         let mut oks = 0;
         for _ in 0..2 {
-            let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .ready()
+                .expect("completion");
             assert_eq!(c.id, 42);
             if c.error.is_none() {
                 assert_eq!(c.tokens.len(), 6);
@@ -668,10 +1068,13 @@ mod tests {
                 id: 7,
                 prompt: vec![4, 5],
                 max_new: 2,
-                eos: None,
+                ..Default::default()
             })
             .unwrap();
-        let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+        let c = coord
+            .next_completion(Duration::from_secs(30))
+            .ready()
+            .expect("completion");
         assert_eq!((c.id, c.error), (7, None));
         coord.stop();
     }
@@ -702,7 +1105,7 @@ mod tests {
                     id: i,
                     prompt: vec![1, 2, 3],
                     max_new: 5,
-                    eos: None,
+                    ..Default::default()
                 })
                 .unwrap();
         }
@@ -710,6 +1113,7 @@ mod tests {
         for _ in 0..n {
             let c = coord
                 .next_completion(Duration::from_secs(30))
+                .ready()
                 .expect("completion");
             assert!(c.error.is_none(), "request {}: {:?}", c.id, c.error);
             assert_eq!(c.tokens.len(), 5);
@@ -737,7 +1141,7 @@ mod tests {
                 id: 0,
                 prompt: vec![1; 10], // needs 3 pages for prompt+1 > cap 2
                 max_new: 4,
-                eos: None,
+                ..Default::default()
             })
             .unwrap();
         coord
@@ -745,13 +1149,16 @@ mod tests {
                 id: 1,
                 prompt: vec![1, 2], // fits
                 max_new: 2,
-                eos: None,
+                ..Default::default()
             })
             .unwrap();
         let mut errors = 0;
         let mut served = 0;
         for _ in 0..2 {
-            let c = coord.next_completion(Duration::from_secs(30)).expect("completion");
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .ready()
+                .expect("completion");
             match (c.id, c.error) {
                 (0, Some(e)) => {
                     assert!(e.contains("KV pages"), "{e}");
@@ -787,18 +1194,26 @@ mod tests {
                     id: i,
                     prompt: vec![1, 2, 3],
                     max_new: 8,
-                    eos: None,
+                    ..Default::default()
                 })
                 .unwrap();
         }
         // stop immediately: most requests are still queued or in flight
         coord.stop();
         let mut seen = std::collections::HashSet::new();
-        while let Some(c) = coord.next_completion(Duration::from_millis(500)) {
-            assert!(seen.insert(c.id), "duplicate completion for {}", c.id);
-            if c.error.is_some() {
-                // drained requests carry the shutdown error
-                assert!(c.tokens.len() < 8);
+        loop {
+            match coord.next_completion(Duration::from_millis(500)) {
+                CompletionWait::Ready(c) => {
+                    assert!(seen.insert(c.id), "duplicate completion for {}", c.id);
+                    if c.error.is_some() {
+                        // drained requests carry the shutdown error
+                        assert!(c.tokens.len() < 8);
+                    }
+                }
+                // a stopped coordinator's stream ends with Disconnected,
+                // never a silent timeout
+                CompletionWait::Disconnected => break,
+                CompletionWait::TimedOut => panic!("stream must end with Disconnected after stop"),
             }
         }
         assert_eq!(
@@ -806,5 +1221,53 @@ mod tests {
             n,
             "every submitted request must receive exactly one completion"
         );
+    }
+
+    /// A request whose deadline already passed while it sat in the queue
+    /// is expired with a deadline error; a generous deadline is met.
+    #[test]
+    fn queued_past_deadline_expires_with_error() {
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start(engine, BatcherConfig::default());
+        coord
+            .submit(Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new: 3,
+                deadline_ms: Some(0), // already expired at admission sweep
+                ..Default::default()
+            })
+            .unwrap();
+        coord
+            .submit(Request {
+                id: 1,
+                prompt: vec![1, 2],
+                max_new: 3,
+                deadline_ms: Some(60_000), // easily met
+                ..Default::default()
+            })
+            .unwrap();
+        let mut expired = 0;
+        let mut served = 0;
+        for _ in 0..2 {
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .ready()
+                .expect("completion");
+            match (c.id, &c.error) {
+                (0, Some(e)) => {
+                    assert!(e.contains("deadline"), "{e}");
+                    expired += 1;
+                }
+                (1, None) => {
+                    assert_eq!(c.tokens.len(), 3);
+                    served += 1;
+                }
+                other => panic!("unexpected completion {other:?}"),
+            }
+        }
+        assert_eq!((expired, served), (1, 1));
+        assert!(coord.metrics_summary().contains("deadline_misses=1"));
+        coord.stop();
     }
 }

@@ -12,6 +12,7 @@
 //! | serve | batched-vs-seq decode → BENCH_serve.json   | [`serve_exps`]    |
 //! | attention | tiled/paged attention A/B + KV memory → BENCH_attention.json | [`attention_exps`] |
 //! | pretrain | dense-vs-sparse train step A/B → BENCH_pretrain.json | [`pretrain_exps`] |
+//! | chaos | seeded fault-injection serving sweep (liveness invariants) | [`chaos_exps`] |
 //! | fig4  | BSpMM kernel speedup sweep                 | [`kernel_exps`]   |
 //! | fig5  | Llama-family MLP speedup                   | [`kernel_exps`]   |
 //! | fig6  | end-to-end inference speedup               | [`kernel_exps`]   |
@@ -28,6 +29,7 @@
 //! | fig11 | dense-layer placement (left vs right)      | [`pretrain_exps`] |
 
 pub mod attention_exps;
+pub mod chaos_exps;
 pub mod classify_exps;
 pub mod kernel_exps;
 pub mod memory_exps;
@@ -39,8 +41,8 @@ use anyhow::{bail, Result};
 use crate::util::cli::Args;
 
 pub const ALL: &[&str] = &[
-    "kernels", "serve", "attention", "pretrain", "fig4", "fig5", "fig6", "fig7", "tab1",
-    "tab2", "fig8", "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
+    "kernels", "serve", "attention", "pretrain", "chaos", "fig4", "fig5", "fig6", "fig7",
+    "tab1", "tab2", "fig8", "tab3", "fig9", "tab4", "fig10", "tab5", "tab6", "fig11",
 ];
 
 /// Dispatch one experiment by id.
@@ -50,6 +52,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "serve" => serve_exps::serve(args),
         "attention" => attention_exps::attention(args),
         "pretrain" => pretrain_exps::pretrain_ab(args),
+        "chaos" => chaos_exps::chaos(args),
         "fig4" => kernel_exps::fig4(args),
         "fig5" => kernel_exps::fig5(args),
         "fig6" => kernel_exps::fig6(args),

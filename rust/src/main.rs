@@ -33,13 +33,24 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use blast::coordinator::{BatcherConfig, Coordinator, Request};
+use blast::coordinator::{BatcherConfig, CompletionWait, Coordinator, Request};
 use blast::eval;
 use blast::model::engine::{Engine, MlpMode};
 use blast::model::params::ParamStore;
 use blast::runtime::Runtime;
 use blast::train::pretrain::{PretrainOptions, Trainer};
 use blast::util::cli::Args;
+use blast::util::faults::Faults;
+
+/// `--faults site:prob:seed[:value],…` wins over the `BLAST_FAULTS`
+/// environment variable; neither present → injection compiled out of the
+/// hot path (a single null check).
+fn faults_from_args(args: &Args) -> Result<Faults> {
+    match args.get("faults") {
+        Some(spec) => Faults::parse(spec),
+        None => Faults::from_env(),
+    }
+}
 
 fn main() {
     blast::util::logging::init();
@@ -76,10 +87,16 @@ fn print_help() {
         "blast — BLock Sparse Transformers (paper reproduction)\n\n\
          USAGE:\n  blast info\n  blast train --config <name> [--steps N --smax S --step-size K \\\n\
          \x20            --decay D --dense-right L --block-mult M --save ckpt.bin \\\n\
+         \x20            --save-ckpt full.blst --resume full.blst \\\n\
+         \x20            --ckpt-dir dir --ckpt-every N --ckpt-keep K \\\n\
          \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
-         \x20             --kv-page P --kv-pool-pages M --no-simd]\n\
+         \x20             --kv-page P --kv-pool-pages M --deadline-ms D \\\n\
+         \x20             --faults site:prob:seed[,..] --no-simd]\n\
          \x20 blast exp <id> [--steps N --quick --backend native|aot ...]   ids: {:?} or 'all'\n\n\
+         Fault sites for --faults / BLAST_FAULTS: decode_round_panic,\n\
+         decode_round_error, prefill_error, kv_pool_exhausted,\n\
+         decode_stall_ms, ckpt_torn_write, scheduler_panic.\n\n\
          Training and the pretraining experiments run natively by default;\n\
          `--backend aot` and the classifier experiments need `make artifacts`\n\
          plus a `--features pjrt` build.",
@@ -112,27 +129,53 @@ fn run_info(_args: &Args) -> Result<()> {
 }
 
 fn run_train(args: &Args) -> Result<()> {
-    let config = args.get_str("config", "gpt2s-sim");
     let steps = args.get_usize("steps", 200);
-    let opts = PretrainOptions {
-        total_iters: steps,
-        s_init: args.get_f64("sinit", 0.0),
-        s_max: args.get_f64("smax", 0.8),
-        decay: args.get_usize("decay", 0),
-        step_size: args.get_usize("step-size", 10),
-        dense_right: args.get_usize("dense-right", 0),
-        dense_left: args.get_usize("dense-left", 0),
-        seed: args.get_usize("seed", 0xB1A57) as u64,
-        branching: args.get_usize("branching", 8),
-        block_mult: args.get_usize("block-mult", 1),
-    };
+    let faults = faults_from_args(args)?;
     // native (packed-kernel fwd+bwd+Adam) is the default; `--backend aot`
     // selects the PJRT executables (pjrt feature + artifacts required)
     let rt = blast::train::pretrain::open_backend_runtime(&args.get_str("backend", "native"))?;
-    let mut trainer = Trainer::from_backend(rt.as_ref(), &config, opts)?;
+    let mut trainer = if let Some(ckpt) = args.get("resume") {
+        // full-state resume: params + Adam moments + masks + corpus
+        // position come from the checkpoint, continuing bit-identically
+        let t = Trainer::resume_from(Path::new(ckpt))?;
+        println!(
+            "resumed {} from {ckpt} at iter {} (optimizer step {})",
+            t.config().name,
+            t.done_iters(),
+            t.state().step
+        );
+        t
+    } else {
+        let config = args.get_str("config", "gpt2s-sim");
+        let opts = PretrainOptions {
+            total_iters: steps,
+            s_init: args.get_f64("sinit", 0.0),
+            s_max: args.get_f64("smax", 0.8),
+            decay: args.get_usize("decay", 0),
+            step_size: args.get_usize("step-size", 10),
+            dense_right: args.get_usize("dense-right", 0),
+            dense_left: args.get_usize("dense-left", 0),
+            seed: args.get_usize("seed", 0xB1A57) as u64,
+            branching: args.get_usize("branching", 8),
+            block_mult: args.get_usize("block-mult", 1),
+        };
+        Trainer::from_backend(rt.as_ref(), &config, opts)?
+    };
+    let config = trainer.config().name.clone();
     println!("backend: {}", trainer.backend_name());
     let t0 = std::time::Instant::now();
-    trainer.run(steps)?;
+    match args.get("ckpt-dir") {
+        // crash-safe autosaves: atomic writes, CRC-verified on load,
+        // newest `--ckpt-keep` retained; `--resume <newest>` continues
+        Some(dir) => trainer.run_with_autosave(
+            steps,
+            Path::new(dir),
+            args.get_usize("ckpt-every", 50),
+            args.get_usize("ckpt-keep", 3),
+            &faults,
+        )?,
+        None => trainer.run(steps)?,
+    }
     let ppl = trainer.eval_perplexity(args.get_usize("eval-batches", 8))?;
     println!(
         "trained {config} for {steps} iters in {:.1}s — final sparsity {:.2}, eval ppl {ppl:.3}",
@@ -142,6 +185,10 @@ fn run_train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("save") {
         trainer.params().save(Path::new(path))?;
         println!("checkpoint saved to {path}");
+    }
+    if let Some(path) = args.get("save-ckpt") {
+        trainer.save_checkpoint(Path::new(path))?;
+        println!("full training checkpoint (resumable) saved to {path}");
     }
     Ok(())
 }
@@ -187,13 +234,24 @@ fn run_serve(args: &Args) -> Result<()> {
         kv_pool_pages.map(|n| n.to_string()).unwrap_or_else(|| "unbounded".into()),
         engine.mlp_weight_bytes()
     );
-    let mut coord = Coordinator::start(
+    let faults = faults_from_args(args)?;
+    if faults.enabled() {
+        println!("fault injection active: {}", faults.spec());
+    }
+    // 0 = no deadline: requests wait/decode as long as they need
+    let deadline_ms = match args.get_usize("deadline-ms", 0) {
+        0 => None,
+        ms => Some(ms as u64),
+    };
+    let mut coord = Coordinator::start_with_faults(
         engine,
         BatcherConfig {
             max_batch: args.get_usize("max-batch", 4),
             max_queue: args.get_usize("max-queue", 64),
             batched,
+            ..BatcherConfig::default()
         },
+        faults,
     );
     for i in 0..n_requests {
         let len = 8 + (i % 8);
@@ -202,12 +260,13 @@ fn run_serve(args: &Args) -> Result<()> {
             prompt: (0..len).map(|j| ((i * 131 + j * 17) % cfg.vocab) as u32).collect(),
             max_new,
             eos: None,
+            deadline_ms,
         })?;
     }
     let mut done = 0;
     while done < n_requests {
         match coord.next_completion(Duration::from_secs(120)) {
-            Some(c) => {
+            CompletionWait::Ready(c) => {
                 done += 1;
                 if let Some(e) = c.error {
                     println!("request {} failed: {e}", c.id);
@@ -221,10 +280,19 @@ fn run_serve(args: &Args) -> Result<()> {
                     );
                 }
             }
-            None => anyhow::bail!("timed out waiting for completions"),
+            CompletionWait::TimedOut => anyhow::bail!("timed out waiting for completions"),
+            CompletionWait::Disconnected => anyhow::bail!(
+                "coordinator scheduler died; the watchdog answered all pending \
+                 requests with errors (health {:?})",
+                coord.health()
+            ),
         }
     }
     println!("\n{}", coord.metrics_summary());
+    if coord.faults().enabled() {
+        println!("fault injector: {}", coord.faults().summary());
+    }
+    println!("final health: {:?}", coord.health());
     coord.stop();
     Ok(())
 }

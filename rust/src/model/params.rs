@@ -2,8 +2,31 @@
 //!
 //! Checkpoints are the bridge between pipeline stages (pretrain → finetune
 //! → serve): a tiny self-describing binary format (`BLST1` magic, JSON
-//! header with names/shapes, raw little-endian f32 payload) so no external
-//! serialization crate is needed.
+//! header, raw little-endian f32 payload) so no external serialization
+//! crate is needed.
+//!
+//! # Crash safety (v2 format)
+//!
+//! A checkpoint is often the *only* copy of a long training run, so writes
+//! are atomic and reads are verified:
+//!
+//! * **Atomic replace** — the file is written to a `.tmp` sibling, fsynced,
+//!   then renamed over the destination (plus a best-effort parent-directory
+//!   fsync). A crash mid-save leaves the previous checkpoint untouched.
+//! * **Per-tensor CRC32** — the v2 header is a JSON object
+//!   `{"version": 2, "meta": {...}, "tensors": [{name, shape, crc}, ...]}`;
+//!   every tensor's payload CRC is verified on load, so a torn or
+//!   bit-flipped file is rejected instead of silently corrupting a run.
+//!   Legacy v1 headers (a bare JSON array, no checksums) still load.
+//! * **`meta`** — an arbitrary JSON object for callers
+//!   ([`crate::train::Trainer`] stores optimizer step, iteration, masks and
+//!   hyper-parameters there so a killed run resumes bit-identically).
+//!
+//! The `ckpt_torn_write` fault site simulates a crash mid-payload: the
+//! `.tmp` file is abandoned half-written and the save returns an error —
+//! the destination is never touched, which is exactly the protocol's
+//! guarantee. The Python transliteration (`python/tests/ckpt_format_check.py`)
+//! pins the byte layout and the CRC against `zlib.crc32`.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -13,8 +36,16 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::ConfigInfo;
 use crate::tensor::Tensor;
+use crate::util::crc::crc32;
+use crate::util::faults::{FaultSite, Faults};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// A tensor's payload as raw little-endian bytes (f32, native LE layout).
+fn tensor_bytes(t: &Tensor) -> &[u8] {
+    let data = t.data();
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
 
 /// Named parameter collection (insertion order = manifest ABI order).
 #[derive(Clone, Debug, Default)]
@@ -131,8 +162,18 @@ impl ParamStore {
 
     // ---- checkpoint I/O ---------------------------------------------------
 
+    /// Atomic, checksummed checkpoint write (no caller metadata).
     pub fn save(&self, path: &Path) -> Result<()> {
-        let header = Json::arr(self.order.iter().map(|n| {
+        self.save_with_meta(path, &Json::obj(vec![]), &Faults::disabled())
+    }
+
+    /// Atomic, checksummed checkpoint write with a caller-supplied JSON
+    /// `meta` object embedded in the header (v2 format). The bytes go to a
+    /// `.tmp` sibling first (fsynced), then rename over `path` — a crash
+    /// (or an injected `ckpt_torn_write` fault) mid-write leaves any
+    /// previous checkpoint at `path` untouched and returns an error.
+    pub fn save_with_meta(&self, path: &Path, meta: &Json, faults: &Faults) -> Result<()> {
+        let tensors = Json::arr(self.order.iter().map(|n| {
             let t = &self.map[n];
             Json::obj(vec![
                 ("name", Json::str(n)),
@@ -140,40 +181,106 @@ impl ParamStore {
                     "shape",
                     Json::arr(t.shape().iter().map(|&d| Json::num(d as f64))),
                 ),
+                ("crc", Json::num(crc32(tensor_bytes(t)) as f64)),
             ])
-        }))
+        }));
+        let header = Json::obj(vec![
+            ("version", Json::num(2.0)),
+            ("meta", meta.clone()),
+            ("tensors", tensors),
+        ])
         .dump();
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating checkpoint {path:?}"))?;
-        f.write_all(b"BLST1")?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for n in &self.order {
-            let data = self.map[n].data();
-            let bytes =
-                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-            f.write_all(bytes)?;
+        let file_name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("checkpoint");
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        let torn = faults.fire(FaultSite::CkptTornWrite);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating checkpoint {tmp:?}"))?;
+            f.write_all(b"BLST1")?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            if torn {
+                // simulate the crash: half of the first tensor reaches the
+                // disk, then the writer dies — no rename, no cleanup, the
+                // destination keeps its previous (valid) contents
+                if let Some(n) = self.order.first() {
+                    let b = tensor_bytes(&self.map[n]);
+                    f.write_all(&b[..b.len() / 2])?;
+                }
+                f.sync_all().ok();
+            } else {
+                for n in &self.order {
+                    f.write_all(tensor_bytes(&self.map[n]))?;
+                }
+                f.sync_all()
+                    .with_context(|| format!("fsyncing checkpoint {tmp:?}"))?;
+            }
+        }
+        if torn {
+            bail!("injected ckpt_torn_write: save to {path:?} died mid-payload (tmp file abandoned)");
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} into place"))?;
+        // best-effort parent-directory fsync so the rename itself survives
+        // a power cut (not all filesystems allow dir fsync — ignore errors)
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                d.sync_all().ok();
+            }
         }
         Ok(())
     }
 
+    /// Load a checkpoint, discarding the header metadata.
     pub fn load(path: &Path) -> Result<ParamStore> {
+        Ok(ParamStore::load_with_meta(path)?.0)
+    }
+
+    /// Load a checkpoint and its header `meta` object. v2 headers verify
+    /// every tensor's CRC32 — a truncated or bit-flipped file is rejected
+    /// with an error naming the damaged tensor. Legacy v1 headers (bare
+    /// JSON array, written before checksums existed) load with an empty
+    /// meta and no verification.
+    pub fn load_with_meta(path: &Path) -> Result<(ParamStore, Json)> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {path:?}"))?;
         let mut magic = [0u8; 5];
-        f.read_exact(&mut magic)?;
+        f.read_exact(&mut magic)
+            .with_context(|| format!("reading magic of {path:?}"))?;
         if &magic != b"BLST1" {
             bail!("{path:?} is not a BLST1 checkpoint");
         }
         let mut lenb = [0u8; 8];
         f.read_exact(&mut lenb)?;
         let hlen = u64::from_le_bytes(lenb) as usize;
+        if hlen > (1 << 30) {
+            bail!("{path:?}: implausible header length {hlen} (corrupt checkpoint)");
+        }
         let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
+        f.read_exact(&mut hbuf)
+            .with_context(|| format!("reading header of {path:?} (truncated?)"))?;
         let header = Json::parse(std::str::from_utf8(&hbuf)?)
             .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let (meta, items) = if header.as_arr().is_some() {
+            // legacy v1: the header IS the tensor list; no meta, no CRCs
+            (Json::obj(vec![]), header.as_arr().unwrap())
+        } else {
+            let version = header.usize_or("version", 0);
+            if version != 2 {
+                bail!("{path:?}: unsupported checkpoint version {version}");
+            }
+            let tensors = header
+                .get("tensors")
+                .and_then(|t| t.as_arr())
+                .context("v2 header missing tensors array")?;
+            let meta = header.get("meta").cloned().unwrap_or_else(|| Json::obj(vec![]));
+            (meta, tensors)
+        };
         let mut store = ParamStore::new();
-        for item in header.as_arr().context("header array")? {
+        for item in items {
             let name = item.str_or("name", "");
             let shape: Vec<usize> = item
                 .req("shape")
@@ -184,14 +291,25 @@ impl ParamStore {
                 .collect();
             let n: usize = shape.iter().product();
             let mut bytes = vec![0u8; n * 4];
-            f.read_exact(&mut bytes)?;
+            f.read_exact(&mut bytes).with_context(|| {
+                format!("reading tensor {name:?} of {path:?} (torn write / truncated?)")
+            })?;
+            if let Some(want) = item.get("crc").and_then(|c| c.as_usize()) {
+                let got = crc32(&bytes) as usize;
+                if got != want {
+                    bail!(
+                        "{path:?}: CRC mismatch for tensor {name:?} \
+                         (stored {want:#010x}, computed {got:#010x}) — torn or corrupt checkpoint"
+                    );
+                }
+            }
             let data: Vec<f32> = bytes
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             store.insert(name, Tensor::new(&shape, data));
         }
-        Ok(store)
+        Ok((store, meta))
     }
 }
 
@@ -270,6 +388,96 @@ mod tests {
         let p = std::env::temp_dir().join("blast_test_garbage.bin");
         std::fs::write(&p, b"not a checkpoint").unwrap();
         assert!(ParamStore::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn meta_roundtrips_through_v2_header() {
+        let s = ParamStore::init(&mini_config(), 5);
+        let p = std::env::temp_dir().join("blast_test_meta.blst");
+        let meta = Json::obj(vec![
+            ("iter", Json::num(42.0)),
+            ("config", Json::str("micro")),
+        ]);
+        s.save_with_meta(&p, &meta, &Faults::disabled()).unwrap();
+        let (back, m) = ParamStore::load_with_meta(&p).unwrap();
+        assert_eq!(back.names(), s.names());
+        assert_eq!(m.usize_or("iter", 0), 42);
+        assert_eq!(m.str_or("config", ""), "micro");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_rejected() {
+        let s = ParamStore::init(&mini_config(), 6);
+        let p = std::env::temp_dir().join("blast_test_trunc.blst");
+        s.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 7]).unwrap();
+        let err = ParamStore::load(&p).unwrap_err().to_string();
+        assert!(err.contains("torn") || err.contains("truncated"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bit_flip_in_payload_fails_crc() {
+        let s = ParamStore::init(&mini_config(), 7);
+        let p = std::env::temp_dir().join("blast_test_flip.blst");
+        s.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 2; // inside the final tensor's payload
+        bytes[last] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = ParamStore::load(&p).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn torn_write_fault_leaves_previous_checkpoint_intact() {
+        let good = ParamStore::init(&mini_config(), 8);
+        let p = std::env::temp_dir().join("blast_test_torn.blst");
+        good.save(&p).unwrap();
+        // second save dies mid-payload (injected) — must error out and
+        // must NOT disturb the existing file
+        let newer = ParamStore::init(&mini_config(), 9);
+        let faults = Faults::parse("ckpt_torn_write:1:1").unwrap();
+        let err = newer.save_with_meta(&p, &Json::obj(vec![]), &faults).unwrap_err();
+        assert!(err.to_string().contains("ckpt_torn_write"), "{err}");
+        let back = ParamStore::load(&p).unwrap();
+        assert!(back.req("tok_emb").allclose(good.req("tok_emb"), 0.0));
+        // the abandoned tmp file is real crash debris: present and torn
+        let tmp = p.with_file_name("blast_test_torn.blst.tmp");
+        assert!(tmp.exists());
+        assert!(ParamStore::load(&tmp).is_err(), "torn tmp must not load");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn legacy_v1_array_header_still_loads() {
+        // hand-build a v1 checkpoint: magic + bare-array header + payload
+        let data: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0];
+        let header = Json::arr(vec![Json::obj(vec![
+            ("name", Json::str("w")),
+            (
+                "shape",
+                Json::arr(vec![Json::num(2.0), Json::num(2.0)]),
+            ),
+        ])])
+        .dump();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"BLST1");
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for v in &data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = std::env::temp_dir().join("blast_test_v1.blst");
+        std::fs::write(&p, &bytes).unwrap();
+        let (store, meta) = ParamStore::load_with_meta(&p).unwrap();
+        assert_eq!(store.req("w").data(), &data[..]);
+        assert!(meta.get("anything").is_none());
         std::fs::remove_file(&p).ok();
     }
 }

@@ -98,6 +98,32 @@ impl PruneGrowController {
         &self.masks
     }
 
+    /// Replace the live masks with checkpointed ones (the trainer's
+    /// resume path). Every tracked weight must be present with its spec's
+    /// grid shape; update history is not restored — it is diagnostics
+    /// only, and the schedule is a pure function of config + iteration.
+    pub fn restore_masks(
+        &mut self,
+        masks: BTreeMap<String, BlockMask>,
+    ) -> anyhow::Result<()> {
+        for spec in &self.specs {
+            let m = masks.get(&spec.name).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint is missing mask for {:?}", spec.name)
+            })?;
+            anyhow::ensure!(
+                m.rb == spec.rb && m.cb == spec.cb,
+                "mask {:?} has grid {}x{}, expected {}x{}",
+                spec.name,
+                m.rb,
+                m.cb,
+                spec.rb,
+                spec.cb
+            );
+        }
+        self.masks = masks;
+        Ok(())
+    }
+
     pub fn history(&self) -> &[MaskUpdate] {
         &self.history
     }

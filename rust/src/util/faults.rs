@@ -1,0 +1,365 @@
+//! Deterministic, seed-driven fault injection.
+//!
+//! The supervised serving/training runtime is only trustworthy if its
+//! failure paths are exercised on every CI run, not once a quarter in an
+//! outage. This module provides the lever: a [`FaultPlan`] parsed from
+//! `BLAST_FAULTS=site:prob:seed[,site:prob:seed...]` (or the `--faults`
+//! flag, same grammar) arms named fault sites threaded through the hot
+//! paths — each site draws from its *own* seeded [`Rng`] stream, so a
+//! chaos run is reproducible from the spec string alone.
+//!
+//! Sites (see ARCHITECTURE.md "Failure domains & recovery"):
+//!
+//! | site                | effect at the injection point                   |
+//! |---------------------|-------------------------------------------------|
+//! | `decode_round_panic`| panic inside a batched decode round / a session's sequential fallback |
+//! | `decode_round_error`| batched round returns a *transient* error (exercises bounded retry) |
+//! | `prefill_error`     | `Engine::prefill` result replaced with an error |
+//! | `kv_pool_exhausted` | batched round fails as if the KV pool ran dry   |
+//! | `decode_stall_ms`   | decode round sleeps `value` ms (deadline tests) |
+//! | `ckpt_torn_write`   | checkpoint write stops mid-payload (simulated crash) |
+//! | `scheduler_panic`   | scheduler thread dies *outside* round isolation (watchdog tests) |
+//!
+//! An optional fourth field sets a per-site magnitude
+//! (`decode_stall_ms:1:7:40` = 40 ms stalls); other sites ignore it.
+//!
+//! **Zero overhead when disabled**: [`Faults`] is an `Option<Arc<..>>`;
+//! with no plan armed every [`Faults::fire`] call is a single pointer
+//! null-check — no lock, no RNG draw, no counter traffic — so the
+//! serving/training hot paths compile to the existing code. The no-faults
+//! parity test in `tests/chaos_serving.rs` pins bit-identical outputs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// A named injection point. Keep [`FaultSite::ALL`] in sync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic inside the batched decode round (and, redrawn per session,
+    /// inside the sequential fallback — a "session panic").
+    DecodeRoundPanic,
+    /// The batched round returns a transient error — the one failure class
+    /// the coordinator answers with retry-plus-jittered-backoff rather
+    /// than an immediate sequential fallback.
+    DecodeRoundError,
+    /// Prefill returns an injected error instead of running.
+    PrefillError,
+    /// The batched round fails with a pool-exhausted error (classified
+    /// non-transient: no retry, straight to the sequential fallback).
+    KvPoolExhausted,
+    /// The decode round stalls for `value` milliseconds.
+    DecodeStallMs,
+    /// A checkpoint write stops after half the payload (crash simulation);
+    /// the atomic tmp+rename protocol must leave the old file intact.
+    CkptTornWrite,
+    /// The scheduler thread panics outside per-round isolation; the
+    /// watchdog must fail pending requests instead of hanging clients.
+    SchedulerPanic,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::DecodeRoundPanic,
+        FaultSite::DecodeRoundError,
+        FaultSite::PrefillError,
+        FaultSite::KvPoolExhausted,
+        FaultSite::DecodeStallMs,
+        FaultSite::CkptTornWrite,
+        FaultSite::SchedulerPanic,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::DecodeRoundPanic => "decode_round_panic",
+            FaultSite::DecodeRoundError => "decode_round_error",
+            FaultSite::PrefillError => "prefill_error",
+            FaultSite::KvPoolExhausted => "kv_pool_exhausted",
+            FaultSite::DecodeStallMs => "decode_stall_ms",
+            FaultSite::CkptTornWrite => "ckpt_torn_write",
+            FaultSite::SchedulerPanic => "scheduler_panic",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Default magnitude when the spec omits the fourth field.
+    fn default_value(self) -> u64 {
+        match self {
+            FaultSite::DecodeStallMs => 25,
+            _ => 0,
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+struct SiteState {
+    prob: f64,
+    value: u64,
+    rng: Mutex<Rng>,
+    checked: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// The armed plan: per-site probability, magnitude and RNG stream.
+pub struct FaultPlan {
+    sites: [Option<SiteState>; 7],
+    spec: String,
+}
+
+/// Cheap cloneable handle to an optional [`FaultPlan`].
+///
+/// `Faults::disabled()` (the default) is a `None` — every query is one
+/// branch. All clones share the same per-site RNG streams and counters,
+/// so the fire sequence is globally deterministic for a given spec.
+#[derive(Clone, Default)]
+pub struct Faults(Option<Arc<FaultPlan>>);
+
+impl std::fmt::Debug for Faults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "Faults(disabled)"),
+            Some(p) => write!(f, "Faults({:?})", p.spec),
+        }
+    }
+}
+
+impl Faults {
+    /// No faults: every site is a no-op null-check.
+    pub fn disabled() -> Faults {
+        Faults(None)
+    }
+
+    /// Parse a `site:prob:seed[:value][,...]` spec. Empty/whitespace input
+    /// yields a disabled handle. Probabilities are clamped to `[0, 1]`.
+    pub fn parse(spec: &str) -> Result<Faults> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(Faults::disabled());
+        }
+        let mut sites: [Option<SiteState>; 7] = Default::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                bail!("fault spec {part:?}: want site:prob:seed[:value]");
+            }
+            let site = FaultSite::from_name(fields[0]).ok_or_else(|| {
+                let names: Vec<&str> = FaultSite::ALL.iter().map(|f| f.name()).collect();
+                anyhow::anyhow!("unknown fault site {:?}; known sites: {names:?}", fields[0])
+            })?;
+            let prob: f64 = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault spec {part:?}: bad probability {:?}", fields[1]))?;
+            let seed: u64 = fields[2]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault spec {part:?}: bad seed {:?}", fields[2]))?;
+            let value: u64 = match fields.get(3) {
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault spec {part:?}: bad value {v:?}"))?,
+                None => site.default_value(),
+            };
+            sites[site.index()] = Some(SiteState {
+                prob: prob.clamp(0.0, 1.0),
+                value,
+                // fork per site from the site name so two sites with the
+                // same seed still draw independent streams
+                rng: Mutex::new(Rng::new(seed ^ crate::util::crc::crc32(site.name().as_bytes()) as u64)),
+                checked: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+            });
+        }
+        Ok(Faults(Some(Arc::new(FaultPlan {
+            sites,
+            spec: spec.to_string(),
+        }))))
+    }
+
+    /// Arm from the `BLAST_FAULTS` environment variable. A malformed spec
+    /// is a configuration error worth failing loudly on — chaos runs must
+    /// not silently become no-fault runs.
+    pub fn from_env() -> Result<Faults> {
+        match std::env::var("BLAST_FAULTS") {
+            Ok(v) => Faults::parse(&v),
+            Err(_) => Ok(Faults::disabled()),
+        }
+    }
+
+    /// `true` when a plan is armed (any site).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The spec string the plan was parsed from (empty when disabled).
+    pub fn spec(&self) -> &str {
+        self.0.as_ref().map(|p| p.spec.as_str()).unwrap_or("")
+    }
+
+    /// Should `site` fire now? One deterministic draw from the site's
+    /// stream; always `false` (and free) when disabled or the site is
+    /// not armed.
+    #[inline]
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let Some(plan) = &self.0 else { return false };
+        plan.fire(site)
+    }
+
+    /// [`Faults::fire`] for `decode_stall_ms`-style sites: the stall
+    /// duration when the site fires.
+    pub fn stall(&self, site: FaultSite) -> Option<Duration> {
+        let plan = self.0.as_ref()?;
+        if plan.fire(site) {
+            let ms = plan.sites[site.index()].as_ref().map(|s| s.value).unwrap_or(0);
+            Some(Duration::from_millis(ms))
+        } else {
+            None
+        }
+    }
+
+    /// Times `site` has fired so far.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.0
+            .as_ref()
+            .and_then(|p| p.sites[site.index()].as_ref())
+            .map(|s| s.fired.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Total injections across all sites.
+    pub fn total_fired(&self) -> u64 {
+        FaultSite::ALL.iter().map(|&s| self.fired(s)).sum()
+    }
+
+    /// One-line `site=fired/checked` digest for logs and the chaos driver.
+    pub fn summary(&self) -> String {
+        let Some(plan) = &self.0 else {
+            return "faults disabled".into();
+        };
+        let mut parts = Vec::new();
+        for site in FaultSite::ALL {
+            if let Some(s) = &plan.sites[site.index()] {
+                parts.push(format!(
+                    "{}={}/{}",
+                    site.name(),
+                    s.fired.load(Ordering::Relaxed),
+                    s.checked.load(Ordering::Relaxed)
+                ));
+            }
+        }
+        parts.join(" ")
+    }
+}
+
+impl FaultPlan {
+    fn fire(&self, site: FaultSite) -> bool {
+        let Some(s) = &self.sites[site.index()] else {
+            return false;
+        };
+        s.checked.fetch_add(1, Ordering::Relaxed);
+        if s.prob <= 0.0 {
+            return false;
+        }
+        let hit = s.prob >= 1.0 || s.rng.lock().unwrap().f64() < s.prob;
+        if hit {
+            s.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_disabled_and_free() {
+        let f = Faults::parse("").unwrap();
+        assert!(!f.enabled());
+        for site in FaultSite::ALL {
+            assert!(!f.fire(site));
+        }
+        assert_eq!(f.total_fired(), 0);
+        assert_eq!(Faults::parse("   ").unwrap().enabled(), false);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Faults::parse("bogus_site:1:2").is_err());
+        assert!(Faults::parse("prefill_error:x:2").is_err());
+        assert!(Faults::parse("prefill_error:0.5").is_err());
+        assert!(Faults::parse("prefill_error:0.5:1:2:3").is_err());
+    }
+
+    #[test]
+    fn deterministic_fire_sequence() {
+        let spec = "decode_round_panic:0.3:42,prefill_error:0.7:7";
+        let a = Faults::parse(spec).unwrap();
+        let b = Faults::parse(spec).unwrap();
+        for _ in 0..200 {
+            assert_eq!(
+                a.fire(FaultSite::DecodeRoundPanic),
+                b.fire(FaultSite::DecodeRoundPanic)
+            );
+            assert_eq!(a.fire(FaultSite::PrefillError), b.fire(FaultSite::PrefillError));
+        }
+        assert_eq!(
+            a.fired(FaultSite::DecodeRoundPanic),
+            b.fired(FaultSite::DecodeRoundPanic)
+        );
+        assert!(a.total_fired() > 0);
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let f = Faults::parse("prefill_error:1:1,kv_pool_exhausted:0:1").unwrap();
+        for _ in 0..50 {
+            assert!(f.fire(FaultSite::PrefillError));
+            assert!(!f.fire(FaultSite::KvPoolExhausted));
+        }
+        // unarmed site never fires even with a plan present
+        assert!(!f.fire(FaultSite::DecodeRoundPanic));
+    }
+
+    #[test]
+    fn site_streams_are_independent() {
+        // same seed, different sites → different draw sequences
+        let f = Faults::parse("decode_round_panic:0.5:9,prefill_error:0.5:9").unwrap();
+        let a: Vec<bool> = (0..64).map(|_| f.fire(FaultSite::DecodeRoundPanic)).collect();
+        let b: Vec<bool> = (0..64).map(|_| f.fire(FaultSite::PrefillError)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn stall_returns_configured_duration() {
+        let f = Faults::parse("decode_stall_ms:1:3:40").unwrap();
+        assert_eq!(f.stall(FaultSite::DecodeStallMs), Some(Duration::from_millis(40)));
+        // default value when the field is omitted
+        let g = Faults::parse("decode_stall_ms:1:3").unwrap();
+        assert_eq!(g.stall(FaultSite::DecodeStallMs), Some(Duration::from_millis(25)));
+        // disabled → None, and no counter movement
+        assert_eq!(Faults::disabled().stall(FaultSite::DecodeStallMs), None);
+    }
+
+    #[test]
+    fn summary_reports_counters() {
+        let f = Faults::parse("prefill_error:1:1").unwrap();
+        f.fire(FaultSite::PrefillError);
+        f.fire(FaultSite::PrefillError);
+        assert_eq!(f.summary(), "prefill_error=2/2");
+        assert_eq!(Faults::disabled().summary(), "faults disabled");
+    }
+}

@@ -9,6 +9,8 @@
 //! generators need, and timing/statistics helpers.
 
 pub mod cli;
+pub mod crc;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -12,10 +12,11 @@
 //! `std::thread::scope` pattern) costs more than some of the GEMMs
 //! themselves.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Job = Arc<JobInner>;
+type PanicPayload = Box<dyn std::any::Any + Send>;
 
 struct JobInner {
     // type-erased `&(dyn Fn(usize) + Sync)` valid until `done` is signaled
@@ -24,6 +25,13 @@ struct JobInner {
     n: usize,
     chunk: usize,
     pending: AtomicUsize,
+    /// Set when a chunk panicked: remaining chunks are skipped (claimed and
+    /// accounted, not executed) so the completion barrier still opens.
+    aborted: AtomicBool,
+    /// First panic payload, re-thrown on the calling thread. Without this
+    /// a worker panic would leave `pending` above zero forever and park
+    /// `parallel_for` in the barrier — a deadlock, not a crash.
+    panic: Mutex<Option<PanicPayload>>,
 }
 
 unsafe impl Send for JobInner {}
@@ -106,6 +114,8 @@ impl ThreadPool {
             n,
             chunk,
             pending: AtomicUsize::new(n),
+            aborted: AtomicBool::new(false),
+            panic: Mutex::new(None),
         });
         {
             let mut q = self.shared.queue.lock().unwrap();
@@ -127,6 +137,16 @@ impl ThreadPool {
                 g = g2;
             }
         }
+        // Re-throw a worker panic on the caller — only after the barrier,
+        // so no thread still holds the type-erased `f` when we unwind.
+        let payload = job
+            .panic
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
     }
 }
 
@@ -139,9 +159,22 @@ fn run_job(job: &JobInner) {
             break;
         }
         let end = (start + job.chunk).min(job.n);
-        for i in start..end {
-            f(i);
+        if !job.aborted.load(Ordering::Acquire) {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for i in start..end {
+                    f(i);
+                }
+            }));
+            if let Err(p) = r {
+                job.aborted.store(true, Ordering::Release);
+                let mut slot = job.panic.lock().unwrap_or_else(|e| e.into_inner());
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
         }
+        // claimed indices are ALWAYS accounted — panicked or skipped — so
+        // the barrier opens and the pool stays usable for the next call
         job.pending.fetch_sub(end - start, Ordering::AcqRel);
     }
 }
@@ -314,6 +347,50 @@ mod tests {
             ran.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom at 97")]
+    fn panics_propagate_to_caller() {
+        parallel_for(256, |i| {
+            if i == 97 {
+                panic!("boom at 97");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_panics_and_stays_correct() {
+        for round in 0..10 {
+            let r = std::panic::catch_unwind(|| {
+                parallel_for(512, |i| {
+                    if i % 100 == 3 {
+                        panic!("injected worker panic (round {round})");
+                    }
+                });
+            });
+            assert!(r.is_err(), "panic must reach the caller");
+            // the pool is immediately reusable and exact
+            let sum = AtomicU64::new(0);
+            parallel_for(128, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 128 * 127 / 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn weighted_panics_propagate_too() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_for_weighted(300, |i| i % 5, |i| {
+                if i == 250 {
+                    panic!("weighted boom");
+                }
+            });
+        });
+        let p = r.expect_err("panic must propagate through the weighted wrapper");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("weighted boom"), "payload was {msg:?}");
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Chaos-serving integration suite: the coordinator under seeded fault
+//! injection (see `util::faults`). Every test drives a real engine and
+//! asserts the liveness invariants of the supervised runtime:
+//!
+//! 1. exactly one completion per submitted request — success or error,
+//!    never a duplicate, never a drop;
+//! 2. no deadlock (bounded waits everywhere);
+//! 3. KV page accounting returns to zero once the load drains;
+//! 4. with no fault plan armed, behavior is bit-identical to the plain
+//!    coordinator (zero-overhead guarantee).
+//!
+//! Seeds are fixed for reproducibility; `BLAST_CHAOS_SEED` reruns the
+//! whole matrix elsewhere in seed space (the CI chaos lane uses this).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use blast::coordinator::{BatcherConfig, CompletionWait, Coordinator, Request};
+use blast::model::config::{ModelKind, NativeConfig};
+use blast::model::engine::{Engine, MlpMode};
+use blast::model::kv::KvOptions;
+use blast::model::params::ParamStore;
+use blast::sparse::BlockMask;
+use blast::tensor::Tensor;
+use blast::util::faults::{FaultSite, Faults};
+use blast::util::rng::Rng;
+
+fn cfg() -> NativeConfig {
+    NativeConfig {
+        name: "chaos-test".into(),
+        kind: ModelKind::Llama,
+        vocab: 64,
+        emb: 32,
+        ffn: 64,
+        layers: 2,
+        heads: 4,
+        max_seq: 64,
+        block: 8,
+    }
+}
+
+fn params(cfg: &NativeConfig, seed: u64) -> ParamStore {
+    let mut rng = Rng::new(seed);
+    let mut s = ParamStore::new();
+    let e = cfg.emb;
+    s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.1, &mut rng));
+    for i in 0..cfg.layers {
+        let p = |n: &str| format!("layer{i}.{n}");
+        s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+        for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+            s.insert(p(w), Tensor::randn(&[e, e], 0.1, &mut rng));
+        }
+        s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+        for (n, r, c) in cfg.mlp_shapes() {
+            s.insert(p(n), Tensor::randn(&[r, c], 0.1, &mut rng));
+        }
+    }
+    s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+    s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
+    s
+}
+
+fn masks(cfg: &NativeConfig, sparsity: f64, seed: u64) -> BTreeMap<String, BlockMask> {
+    let mut rng = Rng::new(seed);
+    let mut m = BTreeMap::new();
+    for i in 0..cfg.layers {
+        for (n, r, c) in cfg.mlp_shapes() {
+            m.insert(
+                format!("layer{i}.{n}"),
+                BlockMask::random(r / cfg.block, c / cfg.block, sparsity, &mut rng),
+            );
+        }
+    }
+    m
+}
+
+fn engine(kv: KvOptions) -> Arc<Engine> {
+    let c = cfg();
+    Arc::new(
+        Engine::new_with_kv(c.clone(), &params(&c, 1), &masks(&c, 0.5, 2), MlpMode::Sparse, kv)
+            .unwrap(),
+    )
+}
+
+/// Base seed for the fault-plan matrix; `BLAST_CHAOS_SEED` moves the whole
+/// suite to a different (still deterministic) point in seed space.
+fn chaos_seed() -> u64 {
+    std::env::var("BLAST_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Outcome of one drained load.
+struct Drained {
+    /// id → (tokens, error) — exactly one entry per answered request.
+    completions: HashMap<u64, (Vec<u32>, Option<String>)>,
+    disconnected: bool,
+}
+
+/// Submit `plan` (id, prompt_len, max_new) and drain every completion,
+/// enforcing invariant 1 (exactly-one) and 2 (no deadlock: 30 s bound).
+fn serve_and_drain(
+    coord: &mut Coordinator,
+    plan: &[(u64, usize, usize)],
+    deadline_ms: Option<u64>,
+) -> Drained {
+    let mut accepted = HashSet::new();
+    for &(id, plen, max_new) in plan {
+        let ok = coord
+            .submit(Request {
+                id,
+                prompt: (0..plen).map(|j| ((id as usize * 7 + j * 3) % 64) as u32).collect(),
+                max_new,
+                eos: None,
+                deadline_ms,
+            })
+            .is_ok();
+        if ok {
+            accepted.insert(id);
+        } else {
+            // only a dead coordinator may refuse: the queue is sized for
+            // the whole plan
+            break;
+        }
+    }
+    let mut completions = HashMap::new();
+    let mut disconnected = false;
+    while completions.len() < accepted.len() {
+        match coord.next_completion(Duration::from_secs(30)) {
+            CompletionWait::Ready(c) => {
+                assert!(
+                    accepted.contains(&c.id),
+                    "completion for an id that was never accepted: {}",
+                    c.id
+                );
+                assert!(
+                    completions.insert(c.id, (c.tokens, c.error)).is_none(),
+                    "duplicate completion for request {}",
+                    c.id
+                );
+            }
+            CompletionWait::Disconnected => {
+                disconnected = true;
+                break;
+            }
+            CompletionWait::TimedOut => panic!(
+                "deadlock: {}/{} completions after 30s",
+                completions.len(),
+                accepted.len()
+            ),
+        }
+    }
+    // if submissions were refused, the only legitimate cause is a dead
+    // coordinator — confirm the stream is closed rather than silently
+    // under-reporting
+    if accepted.len() < plan.len() && !disconnected {
+        disconnected = coord.next_completion(Duration::from_secs(5)).is_disconnected();
+    }
+    Drained { completions, disconnected }
+}
+
+fn std_plan(n: u64) -> Vec<(u64, usize, usize)> {
+    (0..n).map(|i| (i, 2 + (i as usize % 5), 1 + (i as usize % 6))).collect()
+}
+
+/// One full chaos run: bounded pool, fault plan, invariant checks 1–3.
+fn chaos_run(spec: &str, deadline_ms: Option<u64>) -> Drained {
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64) });
+    let pool = eng.kv_pool().clone();
+    let faults = Faults::parse(spec).unwrap();
+    let mut coord = Coordinator::start_with_faults(
+        eng,
+        BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+        faults,
+    );
+    let drained = serve_and_drain(&mut coord, &std_plan(24), deadline_ms);
+    coord.stop();
+    assert_eq!(
+        pool.pages_in_use(),
+        0,
+        "KV pages leaked after drain under plan {spec:?}"
+    );
+    drained
+}
+
+#[test]
+fn round_panics_cannot_kill_or_wedge_the_coordinator() {
+    let s = chaos_seed();
+    let d = chaos_run(&format!("decode_round_panic:0.15:{s}"), None);
+    assert!(!d.disconnected, "round panics must stay inside round isolation");
+    assert_eq!(d.completions.len(), 24);
+    // under round isolation most requests still succeed via the
+    // sequential fallback; a session-level redraw may error some
+    let ok = d.completions.values().filter(|(_, e)| e.is_none()).count();
+    assert!(ok > 0, "no request succeeded under round panics");
+}
+
+#[test]
+fn transient_round_errors_are_retried_and_absorbed() {
+    let s = chaos_seed();
+    let d = chaos_run(&format!("decode_round_error:0.2:{}", s + 1), None);
+    assert!(!d.disconnected);
+    assert_eq!(d.completions.len(), 24);
+    // transient errors are retried at round level and, at worst, fall
+    // back to per-session decode — they never fail a request on their own
+    for (id, (_, err)) in &d.completions {
+        assert!(err.is_none(), "request {id} failed on a transient fault: {err:?}");
+    }
+}
+
+#[test]
+fn prefill_errors_fail_only_their_own_request() {
+    let s = chaos_seed();
+    let d = chaos_run(&format!("prefill_error:0.25:{}", s + 2), None);
+    assert!(!d.disconnected);
+    assert_eq!(d.completions.len(), 24);
+    let failed = d.completions.values().filter(|(_, e)| e.is_some()).count();
+    let ok = 24 - failed;
+    assert!(ok > 0, "prefill faults must not take down unaffected requests");
+    for (tokens, err) in d.completions.values() {
+        if let Some(e) = err {
+            assert!(e.contains("prefill"), "unexpected error class: {e}");
+            assert!(tokens.is_empty(), "a failed prefill cannot have produced tokens");
+        }
+    }
+}
+
+#[test]
+fn injected_pool_exhaustion_retires_sessions_cleanly() {
+    let s = chaos_seed();
+    let d = chaos_run(&format!("kv_pool_exhausted:0.15:{}", s + 3), None);
+    assert!(!d.disconnected);
+    assert_eq!(d.completions.len(), 24);
+    // exhaustion is non-transient: the batched round falls back to
+    // sequential, where re-injection retires sessions with partial
+    // output — still a *successful* completion, never a wedge
+    for (id, (_, err)) in &d.completions {
+        assert!(err.is_none(), "request {id}: {err:?}");
+    }
+}
+
+#[test]
+fn everything_at_once_still_answers_every_request() {
+    let s = chaos_seed() + 4;
+    let spec = format!(
+        "decode_round_panic:0.05:{s},decode_round_error:0.1:{s},prefill_error:0.1:{s},\
+         kv_pool_exhausted:0.05:{s},decode_stall_ms:0.1:{s}:5"
+    );
+    let d = chaos_run(&spec, None);
+    assert!(!d.disconnected);
+    assert_eq!(d.completions.len(), 24, "every request answered exactly once");
+}
+
+#[test]
+fn stalled_rounds_trip_deadlines_with_partial_output() {
+    let s = chaos_seed();
+    // every round stalls 60 ms; a 100 ms deadline must cut streams short
+    let d = chaos_run(&format!("decode_stall_ms:1:{}:60", s + 5), Some(100));
+    assert!(!d.disconnected);
+    assert_eq!(d.completions.len(), 24);
+    let missed = d
+        .completions
+        .values()
+        .filter(|(_, e)| e.as_deref().is_some_and(|e| e.contains("deadline")))
+        .count();
+    assert!(missed > 0, "stalls of 60ms against a 100ms deadline must miss some");
+}
+
+#[test]
+fn watchdog_fails_pending_requests_when_scheduler_dies() {
+    let s = chaos_seed();
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64) });
+    let pool = eng.kv_pool().clone();
+    let faults = Faults::parse(&format!("scheduler_panic:1:{}", s + 6)).unwrap();
+    let mut coord = Coordinator::start_with_faults(
+        eng,
+        BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+        faults.clone(),
+    );
+    let drained = serve_and_drain(&mut coord, &std_plan(12), None);
+    // the scheduler died on its first pass: the stream must end with
+    // Disconnected (never a hang), anything answered carries an error
+    assert!(drained.disconnected, "a dead scheduler must close the stream");
+    for (id, (_, err)) in &drained.completions {
+        assert!(err.is_some(), "request {id} cannot succeed under scheduler_panic:1");
+    }
+    assert!(faults.fired(FaultSite::SchedulerPanic) >= 1);
+    assert!(coord.metrics_summary().contains("watchdog_trips=1"));
+    coord.stop();
+    assert_eq!(pool.pages_in_use(), 0);
+}
+
+/// The zero-overhead guarantee, observable form: a disabled injector and a
+/// zero-probability plan serve bit-identical token streams to the plain
+/// coordinator.
+#[test]
+fn no_faults_parity_with_plain_coordinator() {
+    let mut all: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for variant in 0..3 {
+        let eng = engine(KvOptions { page: 4, pool_pages: Some(64) });
+        let faults = match variant {
+            0 => None, // plain Coordinator::start
+            1 => Some(Faults::disabled()),
+            _ => Some(Faults::parse("decode_round_panic:0:1,prefill_error:0:1").unwrap()),
+        };
+        let bc = BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() };
+        let mut coord = match faults {
+            None => Coordinator::start(eng, bc),
+            Some(f) => Coordinator::start_with_faults(eng, bc, f),
+        };
+        let d = serve_and_drain(&mut coord, &std_plan(16), None);
+        assert!(!d.disconnected);
+        let mut got: Vec<(u64, Vec<u32>)> = d
+            .completions
+            .into_iter()
+            .map(|(id, (tokens, err))| {
+                assert!(err.is_none(), "request {id}: {err:?}");
+                (id, tokens)
+            })
+            .collect();
+        got.sort_by_key(|(id, _)| *id);
+        coord.stop();
+        all.push(got);
+    }
+    assert_eq!(all[0], all[1], "disabled injector must be bit-identical to plain");
+    assert_eq!(all[0], all[2], "zero-probability plan must be bit-identical to plain");
+}
+
+/// Satellite: KV page accounting under *every* retirement path. Randomized
+/// scenarios mix fault sites, deadlines, tight pools and load shapes; after
+/// each drain the pool must be exactly empty — no leak, and (checked by the
+/// pool's own accounting) no double-free.
+#[test]
+fn kv_pages_never_leak_across_randomized_retirement_paths() {
+    let mut rng = Rng::new(chaos_seed() ^ 0xC4A0);
+    for case in 0..12 {
+        let tight_pool = rng.below(2) == 0;
+        let kv = KvOptions {
+            page: [3, 4, 8][rng.below(3)],
+            pool_pages: Some(if tight_pool { 6 + rng.below(6) } else { 64 }),
+        };
+        let site = [
+            "decode_round_panic",
+            "decode_round_error",
+            "prefill_error",
+            "kv_pool_exhausted",
+            "decode_stall_ms",
+        ][rng.below(5)];
+        let spec = format!("{site}:0.2:{}", 100 + case);
+        let deadline = if rng.below(3) == 0 { Some(50 + rng.below(100) as u64) } else { None };
+        let eng = engine(kv);
+        let pool = eng.kv_pool().clone();
+        let mut coord = Coordinator::start_with_faults(
+            eng,
+            BatcherConfig {
+                max_batch: 1 + rng.below(4),
+                max_queue: 64,
+                ..BatcherConfig::default()
+            },
+            Faults::parse(&spec).unwrap(),
+        );
+        let n = 6 + rng.below(10) as u64;
+        let plan: Vec<(u64, usize, usize)> = (0..n)
+            .map(|i| (i, 1 + rng.below(8), 1 + rng.below(8)))
+            .collect();
+        let d = serve_and_drain(&mut coord, &plan, deadline);
+        assert!(!d.disconnected, "case {case} ({spec}): unexpected worker death");
+        assert_eq!(
+            d.completions.len(),
+            plan.len(),
+            "case {case} ({spec}): request lost"
+        );
+        coord.stop();
+        assert_eq!(
+            pool.pages_in_use(),
+            0,
+            "case {case} ({spec}, deadline {deadline:?}): KV pages leaked"
+        );
+    }
+}

@@ -86,12 +86,13 @@ fn mixed_length_load_completes_with_correct_token_counts() {
                 prompt: (0..plen).map(|j| (j * 3 % 64) as u32).collect(),
                 max_new,
                 eos: None,
+                ..Default::default()
             })
             .unwrap();
     }
     let mut seen = std::collections::HashMap::new();
     for _ in 0..plan.len() {
-        let done = coord.next_completion(Duration::from_secs(60)).unwrap();
+        let done = coord.next_completion(Duration::from_secs(60)).ready().unwrap();
         assert!(done.error.is_none());
         seen.insert(done.id, done.tokens.len());
     }
@@ -117,9 +118,10 @@ fn sparse_and_dense_serving_agree_token_for_token() {
                 prompt: vec![5, 9, 13],
                 max_new: 8,
                 eos: None,
+                ..Default::default()
             })
             .unwrap();
-        let done = coord.next_completion(Duration::from_secs(60)).unwrap();
+        let done = coord.next_completion(Duration::from_secs(60)).ready().unwrap();
         answers.push(done.tokens);
         coord.stop();
     }
@@ -149,6 +151,7 @@ fn batched_rounds_match_sequential_across_modes() {
                     max_batch: 3,
                     max_queue: 32,
                     batched,
+                    ..BatcherConfig::default()
                 },
             );
             for &(id, plen, max_new) in &plan {
@@ -163,7 +166,7 @@ fn batched_rounds_match_sequential_across_modes() {
             }
             let mut got = Vec::new();
             for _ in 0..plan.len() {
-                let done = coord.next_completion(Duration::from_secs(60)).unwrap();
+                let done = coord.next_completion(Duration::from_secs(60)).ready().unwrap();
                 assert!(done.error.is_none(), "{:?}", done.error);
                 got.push((done.id, done.tokens));
             }
@@ -206,12 +209,13 @@ fn stop_answers_queued_requests() {
                 prompt: vec![1, 2, 3, 4],
                 max_new: 6,
                 eos: None,
+                ..Default::default()
             })
             .unwrap();
     }
     coord.stop();
     let mut seen = std::collections::HashSet::new();
-    while let Some(done) = coord.next_completion(Duration::from_millis(500)) {
+    while let Some(done) = coord.next_completion(Duration::from_millis(500)).ready() {
         assert!(seen.insert(done.id), "duplicate completion {}", done.id);
     }
     assert_eq!(seen.len() as u64, n, "every request must be answered on stop");
@@ -260,7 +264,7 @@ fn paged_and_flat_serving_agree_token_for_token() {
         }
         let mut got = Vec::new();
         for _ in 0..plan.len() {
-            let done = coord.next_completion(Duration::from_secs(60)).unwrap();
+            let done = coord.next_completion(Duration::from_secs(60)).ready().unwrap();
             assert!(done.error.is_none(), "{:?}", done.error);
             got.push((done.id, done.tokens));
         }
@@ -302,7 +306,7 @@ fn mid_stream_pool_exhaustion_retires_with_partial_output() {
             eos: None,
         })
         .unwrap();
-    let done = coord.next_completion(Duration::from_secs(60)).expect("completion");
+    let done = coord.next_completion(Duration::from_secs(60)).ready().expect("completion");
     // prefill token + decodes at positions 4..=7 = 5 tokens, then pos 8
     // would need page 3 of 2 → the session retires with what it has
     assert!(done.error.is_none(), "{:?}", done.error);
@@ -317,7 +321,7 @@ fn mid_stream_pool_exhaustion_retires_with_partial_output() {
             eos: None,
         })
         .unwrap();
-    let done = coord.next_completion(Duration::from_secs(60)).expect("completion");
+    let done = coord.next_completion(Duration::from_secs(60)).ready().expect("completion");
     assert_eq!((done.id, done.tokens.len()), (1, 3));
     assert!(done.error.is_none());
     coord.stop();
@@ -346,6 +350,7 @@ fn backpressure_rejects_when_queue_full() {
                 prompt: vec![1, 2, 3, 4, 5, 6, 7, 8],
                 max_new: 8,
                 eos: None,
+                ..Default::default()
             })
             .is_err()
         {
@@ -353,7 +358,7 @@ fn backpressure_rejects_when_queue_full() {
         }
     }
     // drain whatever was accepted (short timeout once the queue is idle)
-    while coord.next_completion(Duration::from_secs(2)).is_some() {}
+    while coord.next_completion(Duration::from_secs(2)).ready().is_some() {}
     assert!(rejected > 0, "expected backpressure rejections");
     coord.stop();
 }
