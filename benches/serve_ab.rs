@@ -1,4 +1,6 @@
-//! Bench: batched-vs-sequential decode round A/B; writes BENCH_serve.json.
+//! Bench: batched-vs-sequential decode round A/B plus the shared-prefix
+//! KV-cache arm (prefix cache on vs off, bitwise-identical streams);
+//! writes BENCH_serve.json.
 //! `cargo bench --bench serve_ab [-- --quick --batches 1,4,8 --out BENCH_serve.json]`
 use blast::util::cli::Args;
 

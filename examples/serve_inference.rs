@@ -7,6 +7,7 @@
 //!          [--sparsity 0.9] [--block 128] [--requests 16] [--max-batch 4]
 //!          [--batched false]                      # sequential A/B baseline
 //!          [--kv-page 64] [--kv-pool-pages 0]     # KV paging (0 = unbounded)
+//!          [--prefix-cache false]                 # disable CoW prefix sharing
 //!          [--ckpt path.bin --config llama-sim]   # serve trained weights
 //!
 //! Batched decode rounds (one `(B × d_model)` GEMM/BSpMM per projection via
@@ -46,6 +47,8 @@ fn main() -> Result<()> {
             0 => None,
             n => Some(n),
         },
+        // default on; off restores the unshared pool byte-for-byte
+        prefix_cache: args.get_bool_or("prefix-cache", true),
     };
 
     // weights: either a checkpoint trained by examples/pretrain_gpt2 /

@@ -1,0 +1,689 @@
+"""Pure-python/numpy transliteration of PR 7's copy-on-write KV prefix
+sharing (rust/src/model/kv.rs, the engine resume path, and the tail-only
+admission charge in rust/src/coordinator/server.rs).
+
+No Rust toolchain ships in this container (same as PRs 1-6), so the new
+sharing logic is pinned here against independent oracles:
+
+  1. the chained FNV-1a prefix hash (fnv1a_token over each token's four
+     little-endian bytes, offset basis 0xcbf29ce484222325): per-page chain
+     values vs a one-shot byte-stream FNV-1a oracle, the extension
+     property (a longer prompt's key chain extends the shorter's without
+     rehashing), and divergence (the first differing page changes every
+     key from that page on);
+  2. page-table math: pages_for = ceil-div, page_floats, and the
+     head-major stripe layout ((layer*2 + which)*heads + head)*page*hd
+     tiling a page's floats exactly once (a partition check), plus
+     write_pos / k_head index arithmetic vs a dense
+     [layer][k|v][head][pos] oracle store;
+  3. the prefill_resume gather (rows = min(seq - base, page),
+     dst = h*seq*hd + base*hd) reassembling paged K/V into the flat
+     (heads, seq, hd) attention operand == a never-paged fill;
+  4. a reference-counted pool simulation (attach / probe / register /
+     make_private / drop with the exact-token verification,
+     skip-live-donor, single-key-per-page and purge-on-last-drop rules)
+     driven by randomized session mixes: logical >= physical always, CoW
+     is logical-neutral and +1 physical, canary writes never reach the
+     donor page, hash collisions are rejected by token comparison, and
+     pages, mappings and index entries all drain to zero at retirement;
+  5. the tail-only admission charge (full = pages_for(len+1), charge =
+     full - probe, probe discounting the page a full hit copy-on-writes):
+     fuzzed across page-1/page/page+1 boundaries, never negative, and
+     always >= the physical pages the resumed prefill + one decode step
+     actually draw;
+  6. the deferred-retry accounting property: a deferred request is
+     re-probed fresh each admission sweep (it holds no reservation while
+     queued), so a request deferred before its donor registered admits on
+     the tail-only charge afterwards and peak physical stays <= capacity
+     -- the double-count the fuzz extension guards against;
+  7. the offset-attention tiling schedule (k-tile boundaries at absolute
+     multiples of TK, kend = offset + i1, valid = clamp(gi+1-k0, 0, tk)):
+     for every global row the resume-path (k0, valid) schedule restricted
+     to contributing tiles equals the full-prefill schedule -- identical
+     float ops, hence the bitwise-identical resume the Rust tests gate --
+     and valid == 0 tiles arise only when offset > 0.
+
+Run: python3 python/tests/prefix_share_check.py   (prints ALL OK on success)
+"""
+
+import random
+
+import numpy as np
+
+checks = []
+
+
+def check(name, ok):
+    checks.append((name, bool(ok)))
+    print(("PASS" if ok else "FAIL"), name)
+    assert ok, name
+
+
+# ---------------------------------------------------------------------
+# 1. chained FNV-1a prefix hash
+# ---------------------------------------------------------------------
+
+FNV_OFFSET = 0xCBF2_9CE4_8422_2325
+FNV_PRIME = 0x100_0000_01B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a_token(h, token):
+    """rust/src/model/kv.rs fnv1a_token: fold the token's 4 LE bytes."""
+    for b in int(token).to_bytes(4, "little"):
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def fnv1a_bytes(data):
+    """Independent oracle: textbook FNV-1a over a raw byte stream."""
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def chain_keys(tokens, page):
+    """Index key per full page: chain value after page pi's tokens keys
+    the (pi+1)*page-token prefix. Only full pages are keyed."""
+    keys = []
+    h = FNV_OFFSET
+    for pi in range(len(tokens) // page):
+        for t in tokens[pi * page : (pi + 1) * page]:
+            h = fnv1a_token(h, t)
+        keys.append(h)
+    return keys
+
+
+rng = random.Random(0xB1A57)
+
+toks = [rng.randrange(1 << 32) for _ in range(48)]
+for page in (1, 3, 4, 16):
+    keys = chain_keys(toks, page)
+    oracle = [
+        fnv1a_bytes(b"".join(int(t).to_bytes(4, "little") for t in toks[: (pi + 1) * page]))
+        for pi in range(len(toks) // page)
+    ]
+    check(f"hash chain == byte-stream FNV-1a oracle (page {page})", keys == oracle)
+
+# extension property: a longer prompt's chain extends the shorter's
+short, long_ = toks[:16], toks[:32]
+check(
+    "extending a prompt extends its key chain without rehashing",
+    chain_keys(long_, 4)[:4] == chain_keys(short, 4),
+)
+# divergence: first differing page changes every key from that page on
+div = list(toks)
+div[9] ^= 1  # inside page 2 of page=4
+ka, kb = chain_keys(toks, 4), chain_keys(div, 4)
+check(
+    "divergent token changes keys from its page onward, not before",
+    ka[:2] == kb[:2] and all(a != b for a, b in zip(ka[2:], kb[2:])),
+)
+# partial pages are never keyed
+check("only full pages are keyed", len(chain_keys(toks[:11], 4)) == 2)
+
+
+# ---------------------------------------------------------------------
+# 2. page-table / stripe math
+# ---------------------------------------------------------------------
+
+
+class Geom:
+    """KvGeom transliteration: layers/heads/head_dim/page + layout math."""
+
+    def __init__(self, layers, heads, head_dim, page):
+        self.layers, self.heads, self.head_dim, self.page = layers, heads, head_dim, page
+
+    def stripe(self, layer, which, head):
+        return ((layer * 2 + which) * self.heads + head) * self.page * self.head_dim
+
+    def page_floats(self):
+        return 2 * self.layers * self.heads * self.page * self.head_dim
+
+    def pages_for(self, n):
+        return -(-n // self.page)  # ceil div, matches usize::div_ceil
+
+
+g = Geom(layers=3, heads=5, head_dim=4, page=7)
+check(
+    "pages_for is ceil-div (0..3 pages at the boundaries)",
+    [g.pages_for(n) for n in (0, 1, 6, 7, 8, 13, 14, 15)] == [0, 1, 1, 1, 2, 2, 2, 3],
+)
+check("page_floats = 2*layers*heads*page*hd", g.page_floats() == 2 * 3 * 5 * 7 * 4)
+
+# the stripes partition the page's floats exactly once
+covered = []
+for l in range(g.layers):
+    for w in (0, 1):
+        for h in range(g.heads):
+            o = g.stripe(l, w, h)
+            covered.append((o, o + g.page * g.head_dim))
+covered.sort()
+flat = [x for r in covered for x in r]
+check(
+    "K/V head stripes tile the page exactly once (no gap, no overlap)",
+    flat[0] == 0 and flat[-1] == g.page_floats() and all(
+        covered[i][1] == covered[i + 1][0] for i in range(len(covered) - 1)
+    ),
+)
+
+
+def kv_value(l, which, h, pos, d):
+    """Deterministic fill pattern, distinct per coordinate."""
+    base = float(l * 10007 + which * 5003 + h * 331 + pos * 17 + d)
+    return base if which == 0 else -base
+
+
+def paged_store(g, seq):
+    """Simulated page store filled through write_pos arithmetic."""
+    pages = [np.zeros(g.page_floats(), dtype=np.float32) for _ in range(g.pages_for(seq))]
+    for l in range(g.layers):
+        for h in range(g.heads):
+            for pos in range(seq):
+                pi, po = pos // g.page, pos % g.page
+                for which in (0, 1):
+                    o = g.stripe(l, which, h) + po * g.head_dim
+                    pages[pi][o : o + g.head_dim] = [
+                        kv_value(l, which, h, pos, d) for d in range(g.head_dim)
+                    ]
+    return pages
+
+
+seq = 2 * g.page + 3  # ragged tail page
+pages = paged_store(g, seq)
+ok = True
+for l in range(g.layers):
+    for h in range(g.heads):
+        for pos in range(seq):
+            pi, po = pos // g.page, pos % g.page
+            k_stripe = pages[pi][g.stripe(l, 0, h) : g.stripe(l, 0, h) + g.page * g.head_dim]
+            got = k_stripe[po * g.head_dim : (po + 1) * g.head_dim]
+            want = [kv_value(l, 0, h, pos, d) for d in range(g.head_dim)]
+            ok &= list(got) == want
+check("write_pos/k_head round-trip vs dense oracle (ragged tail page)", ok)
+
+
+# ---------------------------------------------------------------------
+# 3. prefill_resume gather: paged pages -> flat (heads, seq, hd)
+# ---------------------------------------------------------------------
+
+for seq in (g.page - 1, g.page, g.page + 1, 3 * g.page + 2):
+    pages = paged_store(g, seq)
+    l = 1
+    hd = g.head_dim
+    # engine gather: rows = min(seq - base, page), dst = h*seq*hd + base*hd
+    kf = np.zeros(g.heads * seq * hd, dtype=np.float32)
+    for h in range(g.heads):
+        for pi in range(g.pages_for(seq)):
+            base = pi * g.page
+            rows = min(seq - base, g.page)
+            dst = h * seq * hd + base * hd
+            src = pages[pi][g.stripe(l, 0, h) : g.stripe(l, 0, h) + g.page * hd]
+            kf[dst : dst + rows * hd] = src[: rows * hd]
+    # never-paged oracle
+    oracle = np.array(
+        [
+            kv_value(l, 0, h, pos, d)
+            for h in range(g.heads)
+            for pos in range(seq)
+            for d in range(hd)
+        ],
+        dtype=np.float32,
+    )
+    check(f"resume gather == flat fill (seq {seq}, page {g.page})", np.array_equal(kf, oracle))
+
+
+# ---------------------------------------------------------------------
+# 4. refcounted pool simulation: attach/probe/register/CoW/drop
+# ---------------------------------------------------------------------
+
+
+class Pool:
+    """Python model of KvPagePool. Pages are dict ids; the index holds a
+    page id (the Rust Weak) that counts as a reference only for CoW
+    purposes, never for liveness."""
+
+    def __init__(self, page, max_pages=None, prefix_cache=True):
+        self.page, self.max_pages, self.prefix_cache = page, max_pages, prefix_cache
+        self.next_id = 0
+        self.pages = {}  # id -> {refs, data, key}
+        self.index = {}  # key -> {page, tokens, len}
+        self.in_use = self.logical = 0
+        self.lookups = self.hits = self.pages_shared = self.cow_copies = 0
+
+    def alloc(self):
+        if self.max_pages is not None and self.in_use >= self.max_pages:
+            raise MemoryError("kv page pool exhausted")
+        pid = self.next_id
+        self.next_id += 1
+        self.pages[pid] = {"refs": 1, "data": np.zeros(4, dtype=np.float32), "key": None}
+        self.in_use += 1
+        self.logical += 1
+        return pid
+
+    def drop_ref(self, pid):
+        """One Arc clone dropped. Logical accounting is the caller's job
+        (KvCache::Drop / make_private do unmap_logical explicitly)."""
+        p = self.pages[pid]
+        p["refs"] -= 1
+        if p["refs"] == 0:
+            self.in_use -= 1
+            k = p["key"]
+            # Drop purges the entry only if it still points at this page
+            if k is not None and self.index.get(k, {}).get("page") == pid:
+                del self.index[k]
+            del self.pages[pid]
+
+    def entry_live(self, e):
+        return e["page"] in self.pages
+
+    def attach(self, tokens):
+        if not self.prefix_cache or self.page == 0 or len(tokens) < self.page:
+            return []
+        self.lookups += 1
+        out = []
+        h = FNV_OFFSET
+        for pi in range(len(tokens) // self.page):
+            for t in tokens[pi * self.page : (pi + 1) * self.page]:
+                h = fnv1a_token(h, t)
+            plen = (pi + 1) * self.page
+            e = self.index.get(h)
+            if e is None or e["len"] != plen or len(e["tokens"]) < plen:
+                break
+            if e["tokens"][:plen] != tuple(tokens[:plen]) or not self.entry_live(e):
+                break
+            self.pages[e["page"]]["refs"] += 1
+            out.append(e["page"])
+        if out:
+            self.hits += 1
+            self.pages_shared += len(out)
+            self.logical += len(out)
+        return out
+
+    def probe(self, tokens):
+        if not self.prefix_cache or self.page == 0 or len(tokens) < self.page:
+            return 0
+        m = 0
+        h = FNV_OFFSET
+        for pi in range(len(tokens) // self.page):
+            for t in tokens[pi * self.page : (pi + 1) * self.page]:
+                h = fnv1a_token(h, t)
+            plen = (pi + 1) * self.page
+            e = self.index.get(h)
+            ok = (
+                e is not None
+                and e["len"] == plen
+                and len(e["tokens"]) >= plen
+                and e["tokens"][:plen] == tuple(tokens[:plen])
+                and self.entry_live(e)
+            )
+            if not ok:
+                break
+            m += 1
+        return m - 1 if m > 0 and m * self.page == len(tokens) else m
+
+    def register(self, tokens, pages):
+        if not self.prefix_cache or self.page == 0 or len(tokens) < self.page:
+            return
+        m = min(len(tokens) // self.page, len(pages))
+        toks = tuple(tokens)
+        h = FNV_OFFSET
+        for pi in range(m):
+            for t in tokens[pi * self.page : (pi + 1) * self.page]:
+                h = fnv1a_token(h, t)
+            e = self.index.get(h)
+            if e is not None and self.entry_live(e):
+                continue  # a live donor already publishes this prefix
+            p = self.pages[pages[pi]]
+            if p["key"] is None:
+                p["key"] = h  # OnceLock: set before the index points here
+            elif p["key"] != h:
+                continue  # a page registers under exactly one key
+            self.index[h] = {"page": pages[pi], "tokens": toks, "len": (pi + 1) * self.page}
+
+
+class Cache:
+    """Python model of KvCache over the Pool above."""
+
+    def __init__(self, pool):
+        self.pool, self.pages, self.len = pool, [], 0
+
+    def attach_prefix(self, tokens):
+        if self.len != 0 or self.pages:
+            return 0
+        got = self.pool.attach(tokens)
+        self.pages.extend(got)
+        return len(got)
+
+    def ensure(self, positions):
+        need = -(-positions // self.pool.page)
+        while len(self.pages) < need:
+            self.pages.append(self.pool.alloc())
+
+    def page_is_private(self, pi):
+        # Arc::get_mut: one strong ref and no index weak ref
+        p = self.pool.pages[self.pages[pi]]
+        registered = (
+            p["key"] is not None
+            and self.pool.index.get(p["key"], {}).get("page") == self.pages[pi]
+        )
+        return p["refs"] == 1 and not registered
+
+    def make_private(self, pi):
+        if self.page_is_private(pi):
+            return
+        fresh = self.pool.alloc()
+        self.pool.pages[fresh]["data"] = self.pool.pages[self.pages[pi]]["data"].copy()
+        self.pool.cow_copies += 1
+        old = self.pages[pi]
+        self.pages[pi] = fresh
+        self.pool.logical -= 1  # alloc counted the copy; swap is neutral
+        self.pool.drop_ref(old)
+
+    def ensure_writable(self, positions):
+        self.ensure(positions)
+        if positions > 0:
+            self.make_private((positions - 1) // self.pool.page)
+
+    def drop(self):
+        self.pool.logical -= len(self.pages)
+        for pid in self.pages:
+            self.pool.drop_ref(pid)
+        self.pages, self.len = [], 0
+
+
+def sim_prefill(pool, cache, tokens):
+    """Engine prefill dispatcher: attach, resume point, CoW of the first
+    written page, register. Returns pages attached."""
+    m = cache.attach_prefix(tokens)
+    seq = len(tokens)
+    r0 = seq - 1 if m > 0 and m * pool.page == seq else m * pool.page
+    cache.ensure(seq)
+    if seq > 0:
+        cache.make_private(r0 // pool.page)
+    cache.len = seq
+    pool.register(tokens, cache.pages)
+    return m
+
+
+# -- canary isolation, the core CoW property --
+pool = Pool(page=4)
+prefix = toks[:8]
+donor = Cache(pool)
+sim_prefill(pool, donor, prefix)
+for pi, pid in enumerate(donor.pages):
+    pool.pages[pid]["data"][:] = [100.0 * pi + d for d in range(4)]
+donor_snapshot = [pool.pages[pid]["data"].copy() for pid in donor.pages]
+
+follower = Cache(pool)
+m = follower.attach_prefix(prefix + [7, 7])
+check("attach maps both full prefix pages, none of the tail", m == 2)
+check("sharing is logical: 2 physical pages serve 4 mappings", (pool.in_use, pool.logical) == (2, 4))
+before = pool.in_use
+follower.make_private(0)
+check(
+    "CoW is +1 physical, logical-neutral, counted once",
+    (pool.in_use, pool.logical, pool.cow_copies) == (before + 1, 4, 1),
+)
+check("CoW copy is a different page id", follower.pages[0] != donor.pages[0])
+check(
+    "CoW copy carries the donor's bits",
+    np.array_equal(pool.pages[follower.pages[0]]["data"], donor_snapshot[0]),
+)
+pool.pages[follower.pages[0]]["data"][:] = 9e6  # canary
+check(
+    "canary write never reaches the donor page",
+    all(
+        np.array_equal(pool.pages[pid]["data"], snap)
+        for pid, snap in zip(donor.pages, donor_snapshot)
+    ),
+)
+# registered pages CoW even at refcount 1: drop the follower, then ask the
+# donor to write its own published page
+follower.drop()
+check("donor page 0 still index-published => not private", not donor.page_is_private(0))
+donor.make_private(0)
+check("registered page CoWs even at refcount 1", pool.cow_copies == 2)
+donor.drop()
+check(
+    "pages, mappings and index entries drain to zero",
+    (pool.in_use, pool.logical, len(pool.pages), len(pool.index)) == (0, 0, 0, 0),
+)
+
+# -- hash collision is rejected by exact token verification --
+pool = Pool(page=4)
+donor = Cache(pool)
+sim_prefill(pool, donor, toks[:8])
+other = [t ^ 3 for t in toks[:8]]
+key = chain_keys(other, 4)[0]
+pool.index[key] = {"page": donor.pages[0], "tokens": tuple(toks[:8]), "len": 4}
+f = Cache(pool)
+check("colliding entry with wrong tokens attaches nothing", f.attach_prefix(other) == 0)
+f.drop()
+donor.drop()
+
+# -- randomized chaos mix: invariants hold at every step --
+for case in range(30):
+    crng = random.Random(0xC0FFEE + case)
+    page = crng.choice([2, 3, 4, 8])
+    pool = Pool(page=page, max_pages=None)
+    family = [crng.randrange(64) for _ in range(page * crng.randrange(1, 4))]
+    live = []
+    ok = True
+    for i in range(crng.randrange(4, 12)):
+        kind = crng.randrange(4)
+        if kind == 0:
+            prompt = list(family)  # exact clone: full hit, CoW resume
+        elif kind == 3:
+            prompt = [crng.randrange(64) for _ in range(crng.randrange(1, 2 * page))]
+        else:
+            prompt = family + [crng.randrange(64) for _ in range(crng.randrange(1, page + 2))]
+        c = Cache(pool)
+        sim_prefill(pool, c, prompt)
+        for _ in range(crng.randrange(0, 4)):  # decode steps
+            c.ensure_writable(c.len + 1)
+            c.len += 1
+        live.append(c)
+        ok &= pool.logical >= pool.in_use
+        ok &= pool.logical == sum(len(s.pages) for s in live)
+        if crng.random() < 0.4 and live:
+            live.pop(crng.randrange(len(live))).drop()
+            ok &= pool.logical >= pool.in_use
+    while live:
+        live.pop(crng.randrange(len(live))).drop()
+    ok &= (pool.in_use, pool.logical, len(pool.pages), len(pool.index)) == (0, 0, 0, 0)
+    if not ok:
+        check(f"chaos mix case {case} invariants", False)
+check("30 randomized session mixes: logical>=physical, exact mapping counts, drain to zero", True)
+
+
+# ---------------------------------------------------------------------
+# 5. tail-only admission charge vs actual draw
+# ---------------------------------------------------------------------
+
+
+def pages_for(n, page):
+    return -(-n // page)
+
+
+ok = True
+worst = None
+for case in range(200):
+    crng = random.Random(0xAD317 + case)
+    page = crng.choice([2, 3, 4, 8])
+    pool = Pool(page=page)
+    family = [crng.randrange(64) for _ in range(page * crng.randrange(1, 4))]
+    donor = Cache(pool)
+    sim_prefill(pool, donor, family)
+    # boundary-heavy follower lengths: page-1, page, page+1 around the
+    # shared prefix, plus a random tail
+    tail = crng.choice([-1, 0, 1, crng.randrange(0, 2 * page)])
+    plen = max(1, len(family) + tail)
+    prompt = (family + [crng.randrange(64) for _ in range(max(0, tail))])[:plen]
+    full = pages_for(plen + 1, page)
+    probe = pool.probe(prompt)
+    charge = full - probe
+    ok &= 0 <= probe <= full  # never negative, never underflows
+    f = Cache(pool)
+    before = pool.in_use
+    sim_prefill(pool, f, prompt)
+    f.ensure_writable(f.len + 1)  # first decode step the charge reserves
+    drawn = pool.in_use - before
+    if not (charge >= drawn):
+        ok, worst = False, (case, page, plen, probe, charge, drawn)
+    f.drop()
+    donor.drop()
+    ok &= (pool.in_use, pool.logical) == (0, 0)
+check(f"200 fuzzed admissions: charge = full - probe covers the actual draw {worst or ''}", ok)
+
+# pinned boundary cases, page = 4, donor holds an 8-token prefix
+pool = Pool(page=4)
+donor = Cache(pool)
+sim_prefill(pool, donor, toks[:8])
+probes = [pool.probe(toks[:n]) for n in (3, 4, 5, 7, 8, 9, 12)]
+check(
+    "probe at page-1/page/page+1 boundaries (full hit discounts the CoW page)",
+    probes == [0, 0, 1, 1, 1, 2, 2],
+)
+# n=4: the 4-token prefix's key is in the index (donor len 8 => entry len
+# is 4 for page 0) — m=1, full cover => probe 0 pays for the CoW copy.
+# n=8: full hit on both pages => probe 2-1=1. n=9/12: partial, probe 2.
+donor.drop()
+
+
+# ---------------------------------------------------------------------
+# 6. deferred retry re-probes fresh: no double-count
+# ---------------------------------------------------------------------
+
+# Sweep 0: an unrelated blocker and the donor each admit at full charge
+# (3 pages: 2-page prefill + the reserved decode step), eating all 6 free
+# pages, so the follower -- despite its tail-only charge of 1 -- defers.
+# The deferral must hold NO reservation: when the blocker retires, sweep 1
+# re-probes the follower fresh and admits it for charge 1. A stale sweep-0
+# charge kept on the books (the double-count the fuzz extension guards
+# against) would either wedge the queue or over-admit past capacity.
+page, cap = 4, 6
+pool = Pool(page=page, max_pages=cap)
+prefix = toks[:8]
+blocker_prompt = [t ^ 9 for t in toks[8:16]]  # unrelated, same length
+donor_prompt = list(prefix)
+follower_prompt = prefix + [toks[20]]
+max_new = {tuple(blocker_prompt): 1, tuple(donor_prompt): 4, tuple(follower_prompt): 2}
+
+
+def reserve(sessions):
+    """Server sweep reserve: one decode step per in-flight session."""
+    return sum(pages_for(s.len + 1, page) - len(s.pages) for s in sessions)
+
+
+inflight = []  # (cache, rounds_left)
+queued = [blocker_prompt, donor_prompt, follower_prompt]
+admitted_at = {}
+peak = 0
+for sweep in range(4):
+    free = cap - pool.in_use - reserve([c for c, _ in inflight])
+    still = []
+    for prompt in queued:
+        # fresh probe every sweep -- deferred requests carry nothing over
+        charge = pages_for(len(prompt) + 1, page) - pool.probe(prompt)
+        if charge <= free:
+            c = Cache(pool)
+            sim_prefill(pool, c, prompt)  # prefill runs within the sweep
+            inflight.append((c, max_new[tuple(prompt)]))
+            free -= charge
+            admitted_at[tuple(prompt)] = (sweep, charge)
+        else:
+            still.append(prompt)  # deferred: holds NO reservation
+    queued = still
+    peak = max(peak, pool.in_use)
+    nxt = []
+    for c, left in inflight:  # one decode round, retire at max_new
+        c.ensure_writable(c.len + 1)
+        c.len += 1
+        peak = max(peak, pool.in_use)
+        if left > 1:
+            nxt.append((c, left - 1))
+        else:
+            c.drop()
+    inflight = nxt
+
+check(
+    "blocker and donor admit at full charge in sweep 0, follower defers",
+    admitted_at[tuple(blocker_prompt)] == (0, 3)
+    and admitted_at[tuple(donor_prompt)] == (0, 3)
+    and admitted_at[tuple(follower_prompt)][0] == 1,
+)
+check(
+    "deferred follower re-probes fresh and admits on the tail-only charge",
+    admitted_at[tuple(follower_prompt)][1] == pages_for(10, page) - 2,  # 3 - 2 = 1
+)
+check("no queued request left behind", not queued)
+check("no double-count: peak physical never exceeds capacity", peak <= cap)
+for c, _ in inflight:
+    c.drop()
+check("admission sim drains clean", (pool.in_use, pool.logical) == (0, 0))
+
+
+# ---------------------------------------------------------------------
+# 7. offset-attention tiling schedule == full-prefill schedule
+# ---------------------------------------------------------------------
+
+TQ, TK = 32, 64
+
+
+def schedule(offset, q_rows):
+    """Per global row: the (k0, k1, valid) k-tile walk of causal_tile.
+    kend = offset + i1; tile boundaries at absolute multiples of TK."""
+    sched = {}
+    for qt in range(-(-q_rows // TQ)):
+        i0, i1 = qt * TQ, min(qt * TQ + TQ, q_rows)
+        kend = offset + i1
+        k0 = 0
+        while k0 < kend:
+            k1 = min(k0 + TK, kend)
+            for i in range(i0, i1):
+                gi = offset + i
+                valid = min(max(gi + 1 - k0, 0), k1 - k0)
+                sched.setdefault(gi, []).append((k0, k1, valid))
+            k0 = k1
+    return sched
+
+
+ok = True
+zero_seen_with_offset = False
+zero_seen_full = False
+shapes = [
+    (s, rn)
+    for s in (1, 31, 32, 33, 63, 64, 65, 96, 100, 127, 128, 130, 200)
+    for rn in (1, 2, s // 2 or 1, s - 1 or 1, s)
+    if 0 < rn <= s
+]
+for seq, rn in shapes:
+    offset = seq - rn
+    full = schedule(0, seq)
+    res = schedule(offset, rn)
+    zero_seen_full |= any(v == 0 for row in full.values() for (_, _, v) in row)
+    if offset > 0:
+        zero_seen_with_offset |= any(v == 0 for row in res.values() for (_, _, v) in row)
+    for gidx in range(offset, seq):
+        # contributing tiles: valid > 0. A valid==0 tile zeroes its P
+        # column and skips the row stats, so it adds nothing — only the
+        # contributing walks must coincide for bitwise identity. k1 may
+        # legitimately differ past the row's causal limit gi+1 (the tail
+        # is zero-padded P columns), so compare (k0, valid) with valid
+        # truncated to the row's limit — identical nonzero work.
+        a = [(k0, v) for (k0, _, v) in full[gidx] if v > 0]
+        b = [(k0, v) for (k0, _, v) in res[gidx] if v > 0]
+        if a != b:
+            ok = False
+check(f"{len(shapes)} resume shapes: contributing (k0, valid) walks match full prefill", ok)
+check("valid == 0 tiles never occur at offset 0 (TQ divides TK)", not zero_seen_full)
+check("valid == 0 tiles do occur with offset > 0 (guard is live)", zero_seen_with_offset)
+
+
+# ---------------------------------------------------------------------
+
+failed = [n for n, ok in checks if not ok]
+assert not failed, failed
+print(f"ALL OK ({len(checks)} checks)")

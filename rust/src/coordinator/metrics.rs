@@ -5,6 +5,7 @@
 
 use std::time::Instant;
 
+use crate::model::kv::PrefixStats;
 use crate::util::stats::{percentile, Welford};
 
 /// Aggregated serving observables; one instance lives behind the
@@ -63,6 +64,25 @@ pub struct ServeMetrics {
     /// Resident KV bytes across live sessions, as of the last recorded
     /// round (actual pages held, not the `max_seq` preallocation bound).
     pub kv_resident_bytes: usize,
+    /// Prefix-index lookups (prefills with at least one full prompt page,
+    /// prefix cache on). 0 means sharing never engaged — the prefix
+    /// fields stay out of the summary so sharing-off output is
+    /// byte-identical to the unshared coordinator.
+    pub prefix_lookups: u64,
+    /// Prefix lookups that mapped at least one shared KV page.
+    pub prefix_hits: u64,
+    /// KV pages mapped from the prefix index instead of recomputed
+    /// (cumulative).
+    pub prefix_pages_shared: u64,
+    /// Copy-on-write page copies (cumulative).
+    pub cow_copies: u64,
+    /// Logical page mappings across live sessions (each shared page
+    /// counts once per session), as of the last recorded round.
+    pub kv_logical_pages: usize,
+    /// Peak *effective* pool capacity in pages: the physical capacity
+    /// multiplied by the logical/physical sharing ratio at its best
+    /// observed moment — what the pool would have needed without sharing.
+    pub kv_effective_capacity: f64,
 }
 
 impl Default for ServeMetrics {
@@ -99,6 +119,12 @@ impl ServeMetrics {
             kv_pages_in_use: 0,
             kv_pages_peak: 0,
             kv_resident_bytes: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_pages_shared: 0,
+            cow_copies: 0,
+            kv_logical_pages: 0,
+            kv_effective_capacity: 0.0,
         }
     }
 
@@ -143,6 +169,27 @@ impl ServeMetrics {
         self.kv_pages_in_use = pages_in_use;
         self.kv_pages_peak = self.kv_pages_peak.max(pages_peak).max(pages_in_use);
         self.kv_resident_bytes = resident_bytes;
+    }
+
+    /// Mirror the pool's prefix-sharing counters (see
+    /// [`crate::model::kv::KvPagePool::prefix_stats`]) and fold the
+    /// current sharing ratio into the peak effective capacity:
+    /// `capacity × logical/physical` pages (an unbounded pool uses its
+    /// physical residency as the base). With the prefix cache off every
+    /// counter stays 0 and the summary is unchanged.
+    pub fn record_prefix(&mut self, stats: &PrefixStats, capacity_pages: Option<usize>) {
+        self.prefix_lookups = stats.lookups;
+        self.prefix_hits = stats.hits;
+        self.prefix_pages_shared = stats.pages_shared;
+        self.cow_copies = stats.cow_copies;
+        self.kv_logical_pages = stats.logical_pages;
+        let ratio = if stats.physical_pages > 0 {
+            stats.logical_pages as f64 / stats.physical_pages as f64
+        } else {
+            1.0
+        };
+        let base = capacity_pages.unwrap_or(stats.physical_pages) as f64;
+        self.kv_effective_capacity = self.kv_effective_capacity.max(base * ratio);
     }
 
     /// Decode throughput since startup (tokens/s).
@@ -215,6 +262,19 @@ impl ServeMetrics {
                 s.push_str(&format!(" {name}={v}"));
             }
         }
+        // prefix-sharing digest appears only once the index has been
+        // consulted, so a sharing-off (or never-sharing) run's summary is
+        // byte-identical to the unshared coordinator's
+        if self.prefix_lookups > 0 {
+            s.push_str(&format!(
+                " prefix_hits={}/{} prefix_pages_shared={} cow_copies={} effective_capacity={:.1}",
+                self.prefix_hits,
+                self.prefix_lookups,
+                self.prefix_pages_shared,
+                self.cow_copies,
+                self.kv_effective_capacity,
+            ));
+        }
         s
     }
 }
@@ -265,6 +325,44 @@ mod tests {
         assert!(!s.contains("kv_refused"));
         m.kv_refused = 3;
         assert!(m.summary().contains("kv_refused=3"));
+    }
+
+    #[test]
+    fn prefix_fields_appear_only_after_a_lookup() {
+        let mut m = ServeMetrics::new();
+        // no lookups → summary byte-identical to the unshared path
+        assert!(!m.summary().contains("prefix_hits"), "{}", m.summary());
+        assert!(!m.summary().contains("effective_capacity"), "{}", m.summary());
+        // sharing-off pools report all-zero stats; recording them must
+        // keep the summary clean
+        m.record_prefix(&PrefixStats::default(), Some(64));
+        assert!(!m.summary().contains("prefix_hits"), "{}", m.summary());
+        // 12 logical mappings on 4 physical pages = 3× multiplier over a
+        // 64-page pool
+        let stats = PrefixStats {
+            lookups: 5,
+            hits: 4,
+            pages_shared: 9,
+            cow_copies: 2,
+            logical_pages: 12,
+            physical_pages: 4,
+        };
+        m.record_prefix(&stats, Some(64));
+        assert_eq!(m.prefix_hits, 4);
+        assert_eq!(m.kv_logical_pages, 12);
+        assert!((m.kv_effective_capacity - 192.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("prefix_hits=4/5"), "{s}");
+        assert!(s.contains("prefix_pages_shared=9"), "{s}");
+        assert!(s.contains("cow_copies=2"), "{s}");
+        assert!(s.contains("effective_capacity=192.0"), "{s}");
+        // the effective-capacity peak sticks when sharing later drops
+        m.record_prefix(&PrefixStats { lookups: 6, logical_pages: 2, physical_pages: 2, ..stats }, Some(64));
+        assert!((m.kv_effective_capacity - 192.0).abs() < 1e-9);
+        // unbounded pools fall back to physical residency as the base
+        let mut u = ServeMetrics::new();
+        u.record_prefix(&PrefixStats { lookups: 1, hits: 1, pages_shared: 2, cow_copies: 0, logical_pages: 6, physical_pages: 3 }, None);
+        assert!((u.kv_effective_capacity - 6.0).abs() < 1e-9);
     }
 
     #[test]

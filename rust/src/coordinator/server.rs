@@ -455,10 +455,23 @@ fn scheduler_loop(
             .sum();
         let mut budget = kv_pool.available_pages().map(|a| a.saturating_sub(reserve));
         let (admitted, refused) = batcher.admit_where(|req| {
-            let needed = engine.kv_pages_for(req.prompt.len().max(1) + 1);
-            if kv_pool.capacity_pages().is_some_and(|cap| needed > cap) {
+            let full = engine.kv_pages_for(req.prompt.len().max(1) + 1);
+            if kv_pool.capacity_pages().is_some_and(|cap| full > cap) {
+                // refusal stays on the *unshared* cost: a donor can retire
+                // at any moment, and a request admitted only by grace of
+                // someone else's pages would then be stuck forever
                 return Admit::Refuse;
             }
+            // a cache-hit prompt charges only its unshared tail: pages the
+            // prefix index already holds are mapped, not allocated. The
+            // probe runs fresh on every sweep, against the index as it is
+            // *now* — so a Deferred request retried next round charges its
+            // current tail, never re-charging pages that are already
+            // resident (and, symmetrically, paying full price again if the
+            // donor retired in between). If the donor vanishes between this
+            // probe and the prefill, the prefill allocates the difference
+            // or retires on clean pool exhaustion like any other session.
+            let needed = full - kv_pool.probe_prefix(&req.prompt);
             match budget {
                 None => Admit::Grant,
                 Some(avail) if needed <= avail => {
@@ -770,11 +783,17 @@ fn scheduler_loop(
 
         // snapshot KV residency (pool high-water travels with it, so the
         // peak the summary reports is the pool's own, not a re-derivation)
-        mlock(metrics).record_kv(
-            kv_pool.pages_in_use(),
-            kv_pool.high_water_pages(),
-            kv_pool.resident_bytes(),
-        );
+        // and the prefix-sharing counters (all-zero with sharing off, so
+        // the summary stays byte-identical to the unshared path)
+        {
+            let mut m = mlock(metrics);
+            m.record_kv(
+                kv_pool.pages_in_use(),
+                kv_pool.high_water_pages(),
+                kv_pool.resident_bytes(),
+            );
+            m.record_prefix(&kv_pool.prefix_stats(), kv_pool.capacity_pages());
+        }
 
         // retire finished sessions
         for s in batcher.end_round() {
@@ -817,11 +836,15 @@ fn scheduler_loop(
         // refresh the gauges after retirement freed caches, so an
         // end-of-run summary shows the pages actually still held (the
         // peak recorded above is unaffected)
-        mlock(metrics).record_kv(
-            kv_pool.pages_in_use(),
-            kv_pool.high_water_pages(),
-            kv_pool.resident_bytes(),
-        );
+        {
+            let mut m = mlock(metrics);
+            m.record_kv(
+                kv_pool.pages_in_use(),
+                kv_pool.high_water_pages(),
+                kv_pool.resident_bytes(),
+            );
+            m.record_prefix(&kv_pool.prefix_stats(), kv_pool.capacity_pages());
+        }
     }
 
     // shutdown: drain everything still pending into error completions so a
@@ -1089,6 +1112,7 @@ mod tests {
             // each session: 3-token prompt + 5 decodes = 8 positions = 1
             // page; cap at 2 pages so at most 2 sessions hold KV at once
             pool_pages: Some(2),
+            prefix_cache: true,
         });
         let mut coord = Coordinator::start(
             engine,
@@ -1134,6 +1158,7 @@ mod tests {
         let engine = tiny_engine_with_kv(KvOptions {
             page: 4,
             pool_pages: Some(2), // 8 positions total
+            prefix_cache: true,
         });
         let mut coord = Coordinator::start(engine, BatcherConfig::default());
         coord
@@ -1174,6 +1199,127 @@ mod tests {
         assert_eq!((errors, served), (1, 1));
         assert!(coord.metrics_summary().contains("kv_refused=1"));
         coord.stop();
+    }
+
+    /// Sharing-aware admission: a follower whose prompt extends a live
+    /// donor's registered prefix charges only its unshared tail. The
+    /// pool is sized so the follower's *full* cost never fits while the
+    /// donor is resident — a hit recorded in the prefix stats therefore
+    /// proves the tail-only charge admitted it (had admission waited for
+    /// the donor to retire, the donor's pages — and their index entries —
+    /// would already be gone, and the follower's attach would miss).
+    #[test]
+    fn cache_hit_prompt_charges_only_its_tail() {
+        let engine = tiny_engine_with_kv(KvOptions {
+            page: 4,
+            // donor: 8-token prompt + 8 decodes = 16 positions = 4 pages;
+            // follower shares the donor's 2 prompt pages and needs 1
+            // private tail page → 5 pages peak. At the follower's full
+            // cost of 3 pages, available (at most 2 while the donor
+            // lives) never suffices.
+            pool_pages: Some(5),
+            prefix_cache: true,
+        });
+        let pool = engine.kv_pool().clone();
+        let mut coord = Coordinator::start(engine, BatcherConfig::default());
+        let prefix: Vec<u32> = (0..8).map(|i| (i * 3 + 1) % 32).collect();
+        coord
+            .submit(Request {
+                id: 0,
+                prompt: prefix.clone(),
+                max_new: 8, // keeps the donor alive for many sweeps
+                ..Default::default()
+            })
+            .unwrap();
+        let mut follower = prefix.clone();
+        follower.push(29);
+        coord
+            .submit(Request {
+                id: 1,
+                prompt: follower,
+                max_new: 2,
+                ..Default::default()
+            })
+            .unwrap();
+        for _ in 0..2 {
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .ready()
+                .expect("completion");
+            assert!(c.error.is_none(), "request {}: {:?}", c.id, c.error);
+        }
+        let s = coord.metrics_summary();
+        // donor's lookup missed the empty index, follower's hit it
+        assert!(s.contains("prefix_hits=1/2"), "{s}");
+        assert!(s.contains("prefix_pages_shared=2"), "{s}");
+        coord.stop();
+        let stats = pool.prefix_stats();
+        assert_eq!((stats.hits, stats.pages_shared), (1, 2), "{stats:?}");
+        assert_eq!(
+            (pool.pages_in_use(), pool.logical_pages()),
+            (0, 0),
+            "pool must drain physically and logically"
+        );
+    }
+
+    /// Sharing-aware admission fuzz: a stream of sessions over a common
+    /// two-page prefix — varied tails, a few exact-prefix prompts — is
+    /// pushed through a pool too tight to hold them all at full cost.
+    /// Deferred requests re-probe the index on every sweep, so a retry
+    /// charges only its *current* unshared tail and never re-charges
+    /// pages already resident. The whole mix must complete without
+    /// error and drain the pool to zero physical and logical pages.
+    #[test]
+    fn shared_prefix_admission_fuzz_drains_clean() {
+        let engine = tiny_engine_with_kv(KvOptions {
+            page: 4,
+            pool_pages: Some(8),
+            prefix_cache: true,
+        });
+        let pool = engine.kv_pool().clone();
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 3,
+                max_queue: 32,
+                ..BatcherConfig::default()
+            },
+        );
+        let prefix: Vec<u32> = (0..8).map(|i| (i * 3 + 1) % 32).collect();
+        let n = 10u64;
+        for i in 0..n {
+            let mut prompt = prefix.clone();
+            let tail = (i % 4) as usize; // 0 = exact-prefix (full-hit CoW path)
+            prompt.extend((0..tail).map(|j| ((i as usize * 5 + j + 11) % 32) as u32));
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt,
+                    max_new: 3,
+                    ..Default::default()
+                })
+                .unwrap();
+        }
+        let mut done = std::collections::HashSet::new();
+        for _ in 0..n {
+            let c = coord
+                .next_completion(Duration::from_secs(30))
+                .ready()
+                .expect("completion");
+            assert!(c.error.is_none(), "request {}: {:?}", c.id, c.error);
+            assert_eq!(c.tokens.len(), 3);
+            assert!(done.insert(c.id));
+        }
+        assert_eq!(done.len() as u64, n);
+        coord.stop();
+        let stats = pool.prefix_stats();
+        assert!(stats.hits >= 1, "shared prefixes must hit the index: {stats:?}");
+        assert!(stats.pages_shared >= 2, "{stats:?}");
+        assert_eq!(
+            (pool.pages_in_use(), pool.logical_pages()),
+            (0, 0),
+            "pool must drain physically and logically"
+        );
     }
 
     #[test]

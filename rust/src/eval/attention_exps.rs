@@ -230,7 +230,7 @@ pub fn attention(args: &Args) -> Result<()> {
         &params,
         &BTreeMap::new(),
         MlpMode::Dense,
-        KvOptions { page, pool_pages: None },
+        KvOptions { page, pool_pages: None, prefix_cache: true },
     )?;
     let tokens = 64usize;
     let prompt: Vec<u32> = (0..tokens).map(|i| (i * 37 % cfg.vocab) as u32).collect();

@@ -102,7 +102,7 @@ fn run_one(faults: Faults, n: usize, deadline_ms: Option<u64>) -> Result<RunRepo
         &chaos_masks(&cfg, 0.5, 2),
         MlpMode::Sparse,
         // bounded pool: admission gating and retirement accounting are on
-        KvOptions { page: 4, pool_pages: Some(64) },
+        KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true },
     )?);
     let pool = engine.kv_pool().clone();
     let mut coord = Coordinator::start_with_faults(

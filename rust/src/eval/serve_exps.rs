@@ -16,11 +16,19 @@
 //! [`crate::testkit::bench::JsonReport`] — the serving-throughput
 //! trajectory file, next to `BENCH_kernels.json`. Gate: batched round
 //! throughput ≥ 1.5× sequential at batch ≥ 4, dense *and* sparse.
+//!
+//! A second arm measures the KV prefix cache: B sessions repeating one
+//! page-aligned prompt prefix with distinct tails, prefilled once with
+//! sharing on and once with it off. Streams must again be bitwise
+//! identical; the arm reports prefill speedup, hit rate, pages shared,
+//! and physical-vs-logical page residency as `"arm": "shared_prefix"`
+//! rows in the same report.
 
 use anyhow::{bail, Result};
 
 use crate::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
 use crate::model::engine::{Engine, KvCache, MlpMode};
+use crate::model::kv::KvOptions;
 use crate::testkit::bench::{fmt_time, JsonReport, Table};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -29,6 +37,14 @@ use crate::util::json::Json;
 /// tokens per session (MAX_PROMPT also bounds the `--rounds` KV check).
 const MIN_PROMPT: usize = 6;
 const MAX_PROMPT: usize = 10;
+
+/// Shared-prefix arm geometry: every session repeats a PREFIX_LEN-token
+/// prompt head and appends a distinct TAIL_LEN-token tail. PREFIX_LEN is
+/// a multiple of PREFIX_PAGE so the whole prefix lands on full KV pages
+/// and the prefix cache can map all of it.
+const PREFIX_LEN: usize = 48;
+const TAIL_LEN: usize = 4;
+const PREFIX_PAGE: usize = 16;
 
 /// Prefill `batch` sessions with distinct prompts; returns per-session
 /// caches and the first greedy token of each.
@@ -46,6 +62,29 @@ fn prefill_sessions(engine: &Engine, batch: usize) -> Result<(Vec<KvCache>, Vec<
         caches.push(cache);
     }
     Ok((caches, toks))
+}
+
+/// Prefill `batch` sessions that share a common [`PREFIX_LEN`]-token
+/// prefix and differ only in a [`TAIL_LEN`]-token tail; returns
+/// per-session caches, first greedy tokens, and the prefill wall time.
+fn prefill_shared_sessions(
+    engine: &Engine,
+    batch: usize,
+) -> Result<(Vec<KvCache>, Vec<u32>, f64)> {
+    let vocab = engine.config().vocab;
+    let prefix: Vec<u32> = (0..PREFIX_LEN).map(|j| ((j * 97 + 13) % vocab) as u32).collect();
+    let mut caches = Vec::with_capacity(batch);
+    let mut toks = Vec::with_capacity(batch);
+    let t0 = std::time::Instant::now();
+    for i in 0..batch {
+        let mut prompt = prefix.clone();
+        prompt.extend((0..TAIL_LEN).map(|j| ((i * 131 + j * 37 + 7) % vocab) as u32));
+        let mut cache = engine.new_cache();
+        let logits = engine.prefill(&prompt, &mut cache)?;
+        toks.push(Engine::argmax(&logits));
+        caches.push(cache);
+    }
+    Ok((caches, toks, t0.elapsed().as_secs_f64()))
 }
 
 /// `rounds` sequential decode rounds (B GEMV chains per round); returns
@@ -109,6 +148,15 @@ pub fn serve(args: &Args) -> Result<()> {
              token/round must fit max_seq={} (max --rounds {})",
             cfg.max_seq,
             cfg.max_seq - MAX_PROMPT
+        );
+    }
+    if PREFIX_LEN + TAIL_LEN + rounds > cfg.max_seq {
+        bail!(
+            "--rounds {rounds} exceeds KV capacity for the shared-prefix arm: \
+             {PREFIX_LEN}+{TAIL_LEN} prompt tokens + one token/round must fit max_seq={} \
+             (max --rounds {})",
+            cfg.max_seq,
+            cfg.max_seq - PREFIX_LEN - TAIL_LEN
         );
     }
     let params = fig6_params(&cfg, 42);
@@ -178,7 +226,83 @@ pub fn serve(args: &Args) -> Result<()> {
             ]));
         }
     }
+    // ---- shared-prefix workload arm ------------------------------------
+    // B sessions repeat one page-aligned prefix with distinct tails. The
+    // prefix-cache engine maps the shared pages and resumes prefill at
+    // the tail; the sharing-off engine recomputes every prompt in full.
+    // Greedy streams must stay bitwise identical either way, so the A/B
+    // isolates the prefill compute and KV residency sharing removes.
+    let pb = batches.iter().copied().max().unwrap_or(4).max(2);
+    let mut ptable = Table::new(
+        "Shared-prefix workload (prefix cache on vs off, bitwise-identical streams)",
+        &["mode", "batch", "prefix", "prefill off", "prefill on", "speedup", "hit rate", "pages shared", "phys/logical"],
+    );
+    for mode in [MlpMode::Dense, MlpMode::Sparse] {
+        let kv_on = KvOptions {
+            page: PREFIX_PAGE,
+            pool_pages: None,
+            prefix_cache: true,
+        };
+        let kv_off = KvOptions {
+            prefix_cache: false,
+            ..kv_on
+        };
+        let shared = Engine::new_with_kv(cfg.clone(), &params, &masks, mode, kv_on)?;
+        let unshared = Engine::new_with_kv(cfg.clone(), &params, &masks, mode, kv_off)?;
+        let (mut c_on, mut t_on, secs_on) = prefill_shared_sessions(&shared, pb)?;
+        let (mut c_off, mut t_off, secs_off) = prefill_shared_sessions(&unshared, pb)?;
+        if t_on != t_off {
+            bail!("shared-prefix prefill diverged from the sharing-off engine at mode={mode:?}");
+        }
+        // capture residency at peak prefill sharing, before decode grows
+        // every session's private tail
+        let stats = shared.kv_pool().prefix_stats();
+        if stats.hits as usize != pb - 1 || stats.lookups as usize != pb {
+            bail!(
+                "prefix cache missed: expected {} hits of {} lookups, got {stats:?}",
+                pb - 1,
+                pb
+            );
+        }
+        let (_, s_on) = run_batched(&shared, &mut c_on, &mut t_on, rounds)?;
+        let (_, s_off) = run_batched(&unshared, &mut c_off, &mut t_off, rounds)?;
+        if s_on != s_off {
+            bail!("shared-prefix decode diverged from the sharing-off engine at mode={mode:?}");
+        }
+        let hit_rate = stats.hits as f64 / stats.lookups as f64;
+        let speedup = secs_off / secs_on;
+        ptable.row(&[
+            format!("{mode:?}"),
+            pb.to_string(),
+            format!("{PREFIX_LEN}+{TAIL_LEN}"),
+            fmt_time(secs_off),
+            fmt_time(secs_on),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", hit_rate * 100.0),
+            stats.pages_shared.to_string(),
+            format!("{}/{}", stats.physical_pages, stats.logical_pages),
+        ]);
+        report.push(Json::obj(vec![
+            ("arm", Json::str("shared_prefix")),
+            ("mode", Json::str(&format!("{mode:?}"))),
+            ("batch", Json::num(pb as f64)),
+            ("prefix_len", Json::num(PREFIX_LEN as f64)),
+            ("tail_len", Json::num(TAIL_LEN as f64)),
+            ("unshared_prefill_ns", Json::num(secs_off * 1e9)),
+            ("shared_prefill_ns", Json::num(secs_on * 1e9)),
+            ("prefill_speedup", Json::num(speedup)),
+            ("prefix_hits", Json::num(stats.hits as f64)),
+            ("prefix_lookups", Json::num(stats.lookups as f64)),
+            ("prefix_pages_shared", Json::num(stats.pages_shared as f64)),
+            ("physical_pages", Json::num(stats.physical_pages as f64)),
+            ("logical_pages", Json::num(stats.logical_pages as f64)),
+            ("identical_streams", Json::Bool(true)),
+        ]));
+    }
+
     table.print();
+    println!();
+    ptable.print();
     report.write(std::path::Path::new(&out_path))?;
     println!("\nwrote {} rows to {out_path}", report.len());
     println!(
@@ -246,5 +370,15 @@ mod tests {
         assert_eq!(s_seq, s_bat);
         assert_eq!(s_seq.len(), 3);
         assert!(s_seq.iter().all(|s| s.len() == 5)); // prefill token + 4 rounds
+    }
+
+    /// The shared-prefix arm only shares what lands on *full* pages, so
+    /// its prefix must stay page-aligned and its prompts must fit the
+    /// fig6 serving config alongside the default round counts.
+    #[test]
+    fn prefix_arm_geometry_is_page_aligned_and_fits() {
+        assert_eq!(PREFIX_LEN % PREFIX_PAGE, 0);
+        assert!(TAIL_LEN > 0, "tails must diverge after the shared prefix");
+        assert!(PREFIX_LEN + TAIL_LEN + 16 <= fig6_config(128).max_seq);
     }
 }

@@ -46,9 +46,12 @@ pub const TK: usize = 64;
 /// merged. Matches [`causal_attention_ref`] within ~1e-6 (the online
 /// rescaling reorders the reductions; tests gate at 1e-5 abs).
 ///
-/// Work is scheduled as `(head, q-tile)` items, cost-weighted by how many
-/// key positions each tile attends to (later q-tiles see more keys — the
-/// causal triangle — so uniform chunking would serialize on the tail).
+/// This is exactly [`causal_attention_offset`] with every key position
+/// also a query position (`q_rows == kv_len`); the delegation keeps one
+/// code path, and the offset kernel's extra masking branch is provably
+/// dead at offset 0 (k-tiles start at multiples of [`TK`], q-tiles at
+/// multiples of [`TQ`], so a tile's first key never exceeds its first
+/// query) — same loop, same bits.
 pub fn causal_attention(
     q: &[f32],
     k: &[f32],
@@ -57,31 +60,73 @@ pub fn causal_attention(
     seq: usize,
     hd: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; seq * heads * hd];
-    if seq == 0 || heads == 0 || hd == 0 {
+    causal_attention_offset(q, k, v, heads, seq, seq, hd)
+}
+
+/// Causal self-attention for the **last `q_rows` positions** of a
+/// `kv_len`-position sequence — the resume-prefill kernel behind KV
+/// prefix sharing: when the leading pages of a prompt are mapped from the
+/// prefix cache, only the unshared tail's queries need computing, against
+/// the *full* key/value sequence.
+///
+/// `q`: `(heads, q_rows, hd)` — queries for global positions
+/// `offset..kv_len` where `offset = kv_len − q_rows`. `k,v`:
+/// `(heads, kv_len, hd)` — the whole sequence (shared prefix gathered
+/// from cache pages + freshly computed tail). Returns
+/// `(q_rows, heads*hd)` merged, row `i` being global position
+/// `offset + i`.
+///
+/// **Bit-identity:** row `offset + i` here is bitwise identical to row
+/// `offset + i` of [`causal_attention`] over the full sequence. Every
+/// per-row quantity is preserved exactly: scores come one element at a
+/// time from the micro-kernel (serial over `hd` regardless of tile
+/// shape), k-tile boundaries are absolute multiples of [`TK`] in both
+/// tilings, so each row sees the same score slices, the same running
+/// max/sum chain, and the same `P·V` accumulation order. k-tiles lying
+/// wholly beyond a row's causal limit (reachable only when `offset > 0`)
+/// contribute a zeroed `P` column — nothing — to that row.
+///
+/// Work is scheduled as `(head, q-tile)` items, cost-weighted by how many
+/// key positions each tile attends to (later q-tiles see more keys — the
+/// causal triangle — so uniform chunking would serialize on the tail).
+pub fn causal_attention_offset(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    q_rows: usize,
+    kv_len: usize,
+    hd: usize,
+) -> Vec<f32> {
+    assert!(q_rows <= kv_len, "more query rows than key positions");
+    let mut out = vec![0.0f32; q_rows * heads * hd];
+    if q_rows == 0 || heads == 0 || hd == 0 {
         return out;
     }
-    let n_qt = seq.div_ceil(TQ);
+    let offset = kv_len - q_rows;
+    let n_qt = q_rows.div_ceil(TQ);
     let out_base = out.as_mut_ptr() as usize;
     let d = simd::dispatch();
     threadpool::parallel_for_weighted(
         heads * n_qt,
-        |t| ((t % n_qt) + 1) * TQ,
+        |t| offset + ((t % n_qt) + 1) * TQ,
         |t| {
             let (h, qt) = (t / n_qt, t % n_qt);
-            let qh = &q[h * seq * hd..(h + 1) * seq * hd];
-            let kh = &k[h * seq * hd..(h + 1) * seq * hd];
-            let vh = &v[h * seq * hd..(h + 1) * seq * hd];
-            causal_tile(d, qh, kh, vh, seq, hd, heads, h, qt, out_base);
+            let qh = &q[h * q_rows * hd..(h + 1) * q_rows * hd];
+            let kh = &k[h * kv_len * hd..(h + 1) * kv_len * hd];
+            let vh = &v[h * kv_len * hd..(h + 1) * kv_len * hd];
+            causal_tile(d, qh, kh, vh, offset, q_rows, hd, heads, h, qt, out_base);
         },
     );
     out
 }
 
 /// One `(head, q-tile)` item of the tiled prefill: stream k-tiles with
-/// online softmax, two packed micro-GEMMs per tile pair. `out_base` is
-/// the merged `(seq, heads*hd)` output buffer's base address; this item
-/// writes only rows `qt*TQ..` of column stripe `h*hd..(h+1)*hd`. The
+/// online softmax, two packed micro-GEMMs per tile pair. Query row `i` of
+/// this head attends global positions `0..=offset + i` (`offset = 0` is
+/// full prefill; `offset > 0` is prefix-sharing resume). `out_base` is
+/// the merged `(q_rows, heads*hd)` output buffer's base address; this
+/// item writes only rows `qt*TQ..` of column stripe `h*hd..(h+1)*hd`. The
 /// score scale+mask-max, shifted-exp+sum and streaming-rescale row passes
 /// all run on the dispatched SIMD lanes (`d` resolved once per prefill).
 #[allow(clippy::too_many_arguments)]
@@ -90,7 +135,8 @@ fn causal_tile(
     qh: &[f32],
     kh: &[f32],
     vh: &[f32],
-    seq: usize,
+    offset: usize,
+    q_rows: usize,
     hd: usize,
     heads: usize,
     h: usize,
@@ -98,7 +144,7 @@ fn causal_tile(
     out_base: usize,
 ) {
     let i0 = qt * TQ;
-    let i1 = (i0 + TQ).min(seq);
+    let i1 = (i0 + TQ).min(q_rows);
     let tq = i1 - i0;
     let scale = 1.0 / (hd as f32).sqrt();
     // scratch-arena tile state — allocation-free after warmup
@@ -112,9 +158,12 @@ fn causal_tile(
     m.fill(f32::NEG_INFINITY);
     l.fill(0.0);
     pack_kt_panel(&qh[i0 * hd..i1 * hd], tq, hd, &mut qp);
+    // k-tiles stream over the full key range this tile's rows attend to;
+    // tile boundaries are absolute multiples of TK, independent of offset
+    let kend = offset + i1;
     let mut k0 = 0;
-    while k0 < i1 {
-        let k1 = (k0 + TK).min(i1);
+    while k0 < kend {
+        let k1 = (k0 + TK).min(kend);
         let tk = k1 - k0;
         pack_kt_panel(&kh[k0 * hd..k1 * hd], tk, hd, &mut kb);
         // scores tile: S[tq × tk] = Qᵖ · (Kᵀ)ᵖ (microkernel accumulates,
@@ -125,9 +174,20 @@ fn causal_tile(
         // running accumulator, and build the packed P tile — the three row
         // passes run on the dispatched lanes
         for i in 0..tq {
-            let gi = i0 + i;
+            let gi = offset + i0 + i;
             // columns this row may attend to within the tile
             let valid = (gi + 1).saturating_sub(k0).min(tk);
+            if valid == 0 {
+                // the whole k-tile is beyond this row's causal limit
+                // (only reachable when offset > 0: an aligned full
+                // prefill never visits such a tile) — zero its P column
+                // so the P·V micro-GEMM adds nothing, and leave the
+                // running max/sum untouched
+                for j in 0..tk {
+                    pp[j * tq + i] = 0.0;
+                }
+                continue;
+            }
             let srow = &mut s[i * tk..i * tk + tk];
             let row_max = (d.scale_max_slice)(&mut srow[..valid], scale);
             let new_m = m[i].max(row_max);
@@ -164,7 +224,7 @@ fn causal_tile(
         );
         k0 = k1;
     }
-    // normalize and scatter into the merged (seq, heads*hd) output
+    // normalize and scatter into the merged (q_rows, heads*hd) output
     for i in 0..tq {
         let inv = 1.0 / l[i];
         // SAFETY: each (head, q-tile) item owns the disjoint output span
@@ -577,6 +637,53 @@ mod tests {
             let got = dot_lanes(&a, &b);
             assert!((got - want).abs() < 1e-4 * (n as f32).max(1.0), "n={n}");
         }
+    }
+
+    /// The prefix-sharing resume guarantee at the kernel level: computing
+    /// only the tail rows against the full K/V reproduces the full
+    /// prefill's rows **bit for bit**, at offsets straddling every TQ/TK
+    /// tile boundary (including offsets that make whole k-tiles fall
+    /// beyond a row's causal limit — the masking branch dead at offset 0).
+    #[test]
+    fn offset_rows_bitwise_match_full_prefill() {
+        for &(h, s, d) in &[(2usize, 7usize, 4usize), (2, TQ + 3, 8), (1, TK + 9, 12), (2, 2 * TK + 5, 8)] {
+            let mut rng = Rng::new(0x0FF5E7 + (h * 1000 + s * 10 + d) as u64);
+            let q = rng.normal_vec(h * s * d, 1.0);
+            let k = rng.normal_vec(h * s * d, 1.0);
+            let v = rng.normal_vec(h * s * d, 1.0);
+            let full = causal_attention(&q, &k, &v, h, s, d);
+            for off in [1usize, 2, TQ - 1, TQ, TQ + 1, TK - 1, TK, TK + 1, s - 1] {
+                if off >= s {
+                    continue;
+                }
+                let rows = s - off;
+                // gather the tail query rows per head: (h, rows, d)
+                let mut qt = vec![0.0f32; h * rows * d];
+                for hh in 0..h {
+                    qt[hh * rows * d..(hh + 1) * rows * d]
+                        .copy_from_slice(&q[hh * s * d + off * d..(hh + 1) * s * d]);
+                }
+                let got = causal_attention_offset(&qt, &k, &v, h, rows, s, d);
+                for i in 0..rows {
+                    let a = &got[i * h * d..(i + 1) * h * d];
+                    let b = &full[(off + i) * h * d..(off + i + 1) * h * d];
+                    let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "h={h} s={s} d={d} off={off}: row {i} bits differ");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offset_zero_is_full_prefill() {
+        let (h, s, d) = (2, 41, 8);
+        let mut rng = Rng::new(0x0FF0);
+        let q = rng.normal_vec(h * s * d, 1.0);
+        let k = rng.normal_vec(h * s * d, 1.0);
+        let v = rng.normal_vec(h * s * d, 1.0);
+        let a = causal_attention(&q, &k, &v, h, s, d);
+        let b = causal_attention_offset(&q, &k, &v, h, s, s, d);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -10,13 +10,16 @@
 //!   (no artifacts needed); `aot` drives the PJRT `train_step`
 //!   executables.
 //! * `blast serve [--sparsity 0.9 --block 128 --batched false --kv-page 64
-//!   --kv-pool-pages 0 ...]` — run the continuous-batching inference
-//!   coordinator over the native sparse engine with a synthetic client
-//!   load, printing latency/throughput metrics. Decode rounds are batched
-//!   (`Engine::decode_batch`) unless `--batched false` selects the
-//!   sequential GEMV baseline; KV is paged (`--kv-page` positions per
-//!   page) from a shared pool (`--kv-pool-pages`, 0 = unbounded) that
-//!   admission is gated on.
+//!   --kv-pool-pages 0 --prefix-cache false ...]` — run the
+//!   continuous-batching inference coordinator over the native sparse
+//!   engine with a synthetic client load, printing latency/throughput
+//!   metrics. Decode rounds are batched (`Engine::decode_batch`) unless
+//!   `--batched false` selects the sequential GEMV baseline; KV is paged
+//!   (`--kv-page` positions per page) from a shared pool
+//!   (`--kv-pool-pages`, 0 = unbounded) that admission is gated on.
+//!   Prompt prefixes landing on full pages are deduplicated copy-on-write
+//!   across sessions unless `--prefix-cache false` restores the unshared
+//!   pool byte-for-byte.
 //! * `blast exp <kernels|serve|attention|pretrain|fig4..fig11|tab1..tab6|all>`
 //!   — regenerate a paper table/figure or an A/B harness (DESIGN.md §5);
 //!   `kernels`, `serve`, `attention` and `pretrain` write the
@@ -91,7 +94,7 @@ fn print_help() {
          \x20            --ckpt-dir dir --ckpt-every N --ckpt-keep K \\\n\
          \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
-         \x20             --kv-page P --kv-pool-pages M --deadline-ms D \\\n\
+         \x20             --kv-page P --kv-pool-pages M --prefix-cache false --deadline-ms D \\\n\
          \x20             --faults site:prob:seed[,..] --no-simd]\n\
          \x20 blast exp <id> [--steps N --quick --backend native|aot ...]   ids: {:?} or 'all'\n\n\
          Fault sites for --faults / BLAST_FAULTS: decode_round_panic,\n\
@@ -219,12 +222,15 @@ fn run_serve(args: &Args) -> Result<()> {
         0 => None,
         n => Some(n),
     };
+    // default on; `--prefix-cache false` restores the unshared pool
+    // byte-for-byte (same serving output, same metrics summary)
+    let prefix_cache = args.get_bool_or("prefix-cache", true);
     let engine = Arc::new(Engine::new_with_kv(
         cfg.clone(),
         &params,
         &masks,
         mode,
-        KvOptions { page: kv_page, pool_pages: kv_pool_pages },
+        KvOptions { page: kv_page, pool_pages: kv_pool_pages, prefix_cache },
     )?);
     println!(
         "serving {} (mode={mode:?}, isa={}, sparsity={sparsity}, block={block}, batched={batched}, \
@@ -234,6 +240,11 @@ fn run_serve(args: &Args) -> Result<()> {
         kv_pool_pages.map(|n| n.to_string()).unwrap_or_else(|| "unbounded".into()),
         engine.mlp_weight_bytes()
     );
+    if prefix_cache {
+        // printed only when sharing is on so the off path stays
+        // byte-identical to the pre-sharing coordinator
+        println!("kv prefix cache: on (copy-on-write page sharing, --prefix-cache false to disable)");
+    }
     let faults = faults_from_args(args)?;
     if faults.enabled() {
         println!("fault injection active: {}", faults.spec());

@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::attention::{causal_attention, decode_head_paged_into};
+use crate::kernels::attention::{causal_attention, causal_attention_offset, decode_head_paged_into};
 use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
 use crate::kernels::gemm::{gemm_packed_ep_into, gemm_packed_into};
 use crate::kernels::ops;
@@ -202,7 +202,7 @@ impl Engine {
             layers,
             final_norm: params.req("final_norm").data().to_vec(),
             lm_head: packed(params, "lm_head"),
-            kv_pool: KvPagePool::new(geom, kv.pool_pages),
+            kv_pool: KvPagePool::new(geom, kv.pool_pages, kv.prefix_cache),
             cfg,
         })
     }
@@ -326,12 +326,51 @@ impl Engine {
     /// returns the logits of the last position. Allocates the covering KV
     /// pages up front, so pool exhaustion is a clean error before any
     /// cache state changes.
+    ///
+    /// With the pool's prefix cache armed (see
+    /// [`KvOptions::prefix_cache`]), an empty cache first maps every
+    /// prompt page already resident in the pool's prefix index
+    /// ([`KvCache::attach_prefix`]) and resumes the pass from the first
+    /// unshared position — a cache-hit prompt computes only its tail.
+    /// When the *whole* prompt is resident, the last position is
+    /// recomputed (into a private copy-on-write page) so the returned
+    /// logits always come from a full forward of at least one row. Either
+    /// way the logits are **bit-identical** to the unshared pass, and a
+    /// successful prefill publishes its own full prompt pages back into
+    /// the index. With the prefix cache off this is byte-for-byte the
+    /// plain pass.
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
         let seq = tokens.len();
         if seq == 0 || seq > self.cfg.max_seq {
             bail!("prompt length {seq} out of range 1..={}", self.cfg.max_seq);
         }
+        let matched = cache.attach_prefix(tokens);
+        let logits = if matched == 0 {
+            self.prefill_full(tokens, cache)?
+        } else {
+            let mut r0 = matched * self.kv_page();
+            if r0 == seq {
+                // full hit: recompute the last position so the forward
+                // still produces logits; its write lands in a CoW copy
+                r0 = seq - 1;
+            }
+            self.prefill_resume(tokens, cache, r0)?
+        };
+        cache.register_prefix(tokens);
+        Ok(logits)
+    }
+
+    /// The unshared prompt pass (every position computed). Pages the
+    /// cache may still hold from an earlier pass are copy-on-written
+    /// before the K/V stores if anything else references them — a no-op
+    /// on the fresh caches every production caller passes, and always a
+    /// no-op with the prefix cache off.
+    fn prefill_full(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        let seq = tokens.len();
         cache.ensure(seq)?;
+        for pi in 0..self.kv_pages_for(seq) {
+            cache.make_private(pi)?;
+        }
         let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
         // embed
         let mut x = Tensor::zeros(&[seq, e]);
@@ -402,6 +441,112 @@ impl Engine {
         Ok(logits)
     }
 
+    /// Resume a prompt pass from position `r0`: positions `0..r0` are
+    /// already resident in `cache` (pages mapped from the prefix index),
+    /// so only rows `r0..seq` are embedded and pushed through the layers,
+    /// attending over the full K/V gathered from the cache pages.
+    ///
+    /// Bit-identity with [`Engine::prefill_full`] holds row by row: every
+    /// non-attention op (norms, projections, RoPE, MLP, residual) is
+    /// per-row with a summation order independent of how many rows share
+    /// the call, shared K/V bits equal what this session would have
+    /// computed (same tokens, same weights, deterministic kernels), and
+    /// [`causal_attention_offset`] reproduces the full tiling's bits (see
+    /// its docs). `r0` must be page-aligned or `seq − 1` (the full-hit
+    /// recompute), so at most the page covering `r0` needs a
+    /// copy-on-write before the K/V stores.
+    fn prefill_resume(&self, tokens: &[u32], cache: &mut KvCache, r0: usize) -> Result<Vec<f32>> {
+        let seq = tokens.len();
+        let rn = seq - r0;
+        cache.ensure(seq)?;
+        // first written page may be shared (always is on a full hit);
+        // later written pages are freshly allocated, hence private
+        cache.make_private(r0 / self.kv_page())?;
+        let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
+        let page = self.kv_page();
+        let n_pages = self.kv_pages_for(seq);
+        // embed the tail rows at their global positions
+        let mut x = Tensor::zeros(&[rn, e]);
+        for (s, &t) in tokens[r0..].iter().enumerate() {
+            let t = t as usize;
+            if t >= self.cfg.vocab {
+                bail!("token {t} out of vocab {}", self.cfg.vocab);
+            }
+            x.row_mut(s).copy_from_slice(self.tok_emb.row(t));
+            if let Some(pe) = &self.pos_emb {
+                for (a, &b) in x.row_mut(s).iter_mut().zip(pe.row(r0 + s)) {
+                    *a += b;
+                }
+            }
+        }
+
+        let mut xn = Tensor::zeros(&[rn, e]);
+        for (li, l) in self.layers.iter().enumerate() {
+            // pre-norm
+            for s in 0..rn {
+                let (xr, nr) = (x.row(s).to_vec(), xn.row_mut(s));
+                self.norm(&xr, &l.ln1, nr);
+            }
+            // projections over the tail rows only
+            let mut q = Tensor::zeros(&[rn, e]);
+            let mut k = Tensor::zeros(&[rn, e]);
+            let mut v = Tensor::zeros(&[rn, e]);
+            gemm_packed_into(xn.data(), &l.wq, q.data_mut(), rn);
+            gemm_packed_into(xn.data(), &l.wk, k.data_mut(), rn);
+            gemm_packed_into(xn.data(), &l.wv, v.data_mut(), rn);
+            let mut qh = self.split_heads(q.data(), rn);
+            let mut kh = self.split_heads(k.data(), rn);
+            let vh = self.split_heads(v.data(), rn);
+            if self.cfg.kind == ModelKind::Llama {
+                for hh in 0..h {
+                    for s in 0..rn {
+                        let o = hh * rn * hd + s * hd;
+                        ops::rope_inplace(&mut qh[o..o + hd], r0 + s, 10000.0);
+                        ops::rope_inplace(&mut kh[o..o + hd], r0 + s, 10000.0);
+                    }
+                }
+            }
+            // stash the tail K/V into the cache pages
+            for hh in 0..h {
+                for s in 0..rn {
+                    let src = hh * rn * hd + s * hd;
+                    cache.write_pos(li, hh, r0 + s, &kh[src..src + hd], &vh[src..src + hd]);
+                }
+            }
+            // gather the full (heads, seq, hd) K/V — shared prefix pages
+            // plus the tail just written — for the offset attention
+            let mut kf = scratch::take_uninit(h * seq * hd);
+            let mut vf = scratch::take_uninit(h * seq * hd);
+            for hh in 0..h {
+                for pi in 0..n_pages {
+                    let base = pi * page;
+                    let rows = (seq - base).min(page);
+                    let dst = hh * seq * hd + base * hd;
+                    kf[dst..dst + rows * hd].copy_from_slice(&cache.k_head(li, hh, pi)[..rows * hd]);
+                    vf[dst..dst + rows * hd].copy_from_slice(&cache.v_head(li, hh, pi)[..rows * hd]);
+                }
+            }
+            let att = causal_attention_offset(&qh, &kf, &vf, h, rn, seq, hd);
+            let mut proj = Tensor::zeros(&[rn, e]);
+            gemm_packed_into(&att, &l.wo, proj.data_mut(), rn);
+            x.add_inplace(&proj);
+            // MLP
+            for s in 0..rn {
+                let (xr, nr) = (x.row(s).to_vec(), xn.row_mut(s));
+                self.norm(&xr, &l.ln2, nr);
+            }
+            let y = self.mlp(&xn, l);
+            x.add_inplace(&y);
+        }
+        cache.len = seq;
+        // final norm + head for the last position only
+        let mut last = vec![0.0f32; e];
+        self.norm(x.row(rn - 1), &self.final_norm, &mut last);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        gemm_packed_into(&last, &self.lm_head, &mut logits, 1);
+        Ok(logits)
+    }
+
     /// One decode step: append `token` at position `cache.len` and return
     /// the next-token logits. Grows the cache by a pool page when `pos`
     /// crosses a page boundary; pool exhaustion is a clean error before
@@ -411,7 +556,11 @@ impl Engine {
         if pos >= self.cfg.max_seq {
             bail!("KV cache full ({} positions)", self.cfg.max_seq);
         }
-        cache.ensure(pos + 1)?;
+        // decode's written page is structurally never a *shared* mapping
+        // (only full prompt pages are ever shared, and `pos` lies past
+        // them), so the writability pass is a cheap no-op check — it
+        // exists to keep the write-path contract in one place
+        cache.ensure_writable(pos + 1)?;
         let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
         let mut x = self.tok_emb.row(token as usize).to_vec();
         if let Some(pe) = &self.pos_emb {
@@ -545,7 +694,7 @@ impl Engine {
         // before any K/V write or `len` bump (pages a session already
         // acquired stay with it for the caller's sequential fallback)
         for (i, c) in caches.iter_mut().enumerate() {
-            c.ensure(c.len + 1)
+            c.ensure_writable(c.len + 1)
                 .map_err(|e| e.context(format!("decode_batch session {i}")))?;
         }
         let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
@@ -938,7 +1087,7 @@ mod tests {
                 &params,
                 &masks,
                 MlpMode::Sparse,
-                KvOptions { page: cfg.max_seq, pool_pages: None },
+                KvOptions { page: cfg.max_seq, pool_pages: None, prefix_cache: true },
             )
             .unwrap();
             let paged = Engine::new_with_kv(
@@ -946,7 +1095,7 @@ mod tests {
                 &params,
                 &masks,
                 MlpMode::Sparse,
-                KvOptions { page: 4, pool_pages: None },
+                KvOptions { page: 4, pool_pages: None, prefix_cache: true },
             )
             .unwrap();
             for plen in [3usize, 4, 5] {
@@ -990,7 +1139,7 @@ mod tests {
                 &params,
                 &masks,
                 MlpMode::Dense,
-                KvOptions { page, pool_pages: None },
+                KvOptions { page, pool_pages: None, prefix_cache: true },
             )
             .unwrap()
         };
@@ -1042,7 +1191,7 @@ mod tests {
             &params,
             &BTreeMap::new(),
             MlpMode::Dense,
-            KvOptions { page: 4, pool_pages: Some(2) }, // 8 positions total
+            KvOptions { page: 4, pool_pages: Some(2), prefix_cache: true }, // 8 positions total
         )
         .unwrap();
         // prefill needing 3 pages fails cleanly, len untouched
@@ -1076,7 +1225,7 @@ mod tests {
             &params,
             &BTreeMap::new(),
             MlpMode::Dense,
-            KvOptions { page: 4, pool_pages: None },
+            KvOptions { page: 4, pool_pages: None, prefix_cache: true },
         )
         .unwrap();
         let page_bytes = eng.kv_pool().geom().page_bytes();
@@ -1106,9 +1255,117 @@ mod tests {
             &params,
             &BTreeMap::new(),
             MlpMode::Dense,
-            KvOptions { page: 0, pool_pages: None },
+            KvOptions { page: 0, pool_pages: None, prefix_cache: true },
         )
         .is_err());
+    }
+
+    /// The prefix-sharing acceptance gate: N sessions sharing a prefix
+    /// through the prefix cache produce **bit-identical** logits — at
+    /// prefill and through ragged decode batches — to N independent
+    /// sessions replaying the prefix on a sharing-disabled engine, at
+    /// prefix lengths page−1 / page / page+1 (page 4). The empty tail
+    /// exercises the full-hit path (last position recomputed into a CoW
+    /// page).
+    #[test]
+    fn shared_prefix_bitwise_matches_independent_replay() {
+        for mode in [MlpMode::Dense, MlpMode::Sparse] {
+            let cfg = test_cfg(ModelKind::Llama); // max_seq 16
+            let params = test_params(&cfg, 41);
+            let masks = random_masks(&cfg, 0.5, 42);
+            let mk = |prefix_cache: bool| {
+                Engine::new_with_kv(
+                    cfg.clone(),
+                    &params,
+                    &masks,
+                    mode,
+                    KvOptions { page: 4, pool_pages: None, prefix_cache },
+                )
+                .unwrap()
+            };
+            let shared = mk(true);
+            let plain = mk(false);
+            for pfx_len in [3usize, 4, 5] {
+                let prefix: Vec<u32> = (0..pfx_len).map(|i| (i as u32 * 3 + 2) % 32).collect();
+                // empty tail = prompt == prefix (full hit for followers)
+                let tails: Vec<Vec<u32>> = vec![vec![9, 1], vec![], vec![25, 30, 4], vec![17]];
+                let prompts: Vec<Vec<u32>> = tails
+                    .iter()
+                    .map(|t| prefix.iter().chain(t).copied().collect())
+                    .collect();
+                let stats0 = shared.kv_pool().prefix_stats();
+                // shared engine: sessions prefilled in order, kept alive
+                // together so followers map the donor's pages
+                let mut sc: Vec<KvCache> = Vec::new();
+                let mut sl: Vec<Vec<f32>> = Vec::new();
+                for p in &prompts {
+                    let mut c = shared.new_cache();
+                    sl.push(shared.prefill(p, &mut c).unwrap());
+                    sc.push(c);
+                }
+                // plain engine: every session replays its full prompt
+                let mut pc: Vec<KvCache> = Vec::new();
+                for (i, p) in prompts.iter().enumerate() {
+                    let mut c = plain.new_cache();
+                    let l = plain.prefill(p, &mut c).unwrap();
+                    assert!(
+                        l.iter().zip(&sl[i]).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{mode:?} pfx={pfx_len} session {i}: prefill logits bits differ"
+                    );
+                    pc.push(c);
+                }
+                // sharing must actually engage once the prefix fills a page:
+                // session 1's prompt is exactly the prefix, so with
+                // pfx_len == 4 every follower hits and the full-hit
+                // session copy-on-writes
+                let stats = shared.kv_pool().prefix_stats();
+                if pfx_len >= 4 {
+                    assert!(
+                        stats.pages_shared > stats0.pages_shared,
+                        "{mode:?} pfx={pfx_len}: no pages were shared"
+                    );
+                    assert!(
+                        stats.cow_copies > stats0.cow_copies,
+                        "{mode:?} pfx={pfx_len}: the full hit never copy-on-wrote"
+                    );
+                }
+                // ragged decode: session i retires after i+2 steps, so the
+                // batch shrinks while page boundaries are straddled
+                let mut toks: Vec<u32> = sl.iter().map(|l| Engine::argmax(l)).collect();
+                let mut ptoks = toks.clone();
+                for round in 0..5 {
+                    let live: Vec<usize> =
+                        (0..prompts.len()).filter(|&i| round < i + 2).collect();
+                    if live.is_empty() {
+                        break;
+                    }
+                    let lt: Vec<u32> = live.iter().map(|&i| toks[i]).collect();
+                    let mut lc: Vec<KvCache> = Vec::new();
+                    for &i in live.iter().rev() {
+                        lc.insert(0, sc.remove(i));
+                    }
+                    let sout = shared.decode_batch(&lt, &mut lc).unwrap();
+                    for (j, &i) in live.iter().enumerate() {
+                        // plain side decodes sequentially (its batched and
+                        // sequential paths are already proven bit-equal)
+                        let pout = plain.decode(ptoks[i], &mut pc[i]).unwrap();
+                        assert!(
+                            sout[j].iter().zip(&pout).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "{mode:?} pfx={pfx_len} round {round} session {i}: decode bits differ"
+                        );
+                        toks[i] = Engine::argmax(&sout[j]);
+                        ptoks[i] = Engine::argmax(&pout);
+                    }
+                    for (&i, c) in live.iter().zip(lc) {
+                        sc.insert(i, c);
+                    }
+                }
+                drop(sc);
+                drop(pc);
+                assert_eq!(shared.kv_pool().pages_in_use(), 0);
+                assert_eq!(shared.kv_pool().logical_pages(), 0);
+            }
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Paged KV cache: fixed-size position pages from a shared pool.
+//! Paged KV cache: fixed-size position pages from a shared pool, with
+//! copy-on-write prefix sharing.
 //!
 //! The seed engine preallocated one flat `(heads × max_seq × hd)` buffer
 //! per layer per session, so resident KV memory scaled with the
@@ -23,8 +24,41 @@
 //! **bit-identical** across page sizes (a flat cache is just the
 //! `page = max_seq` special case — asserted by the engine's
 //! page-boundary tests).
+//!
+//! # Prefix sharing & copy-on-write
+//!
+//! At serving scale, thousands of sessions repeat the same system-prompt
+//! / few-shot prefix, and the page is the natural dedup unit. When
+//! [`KvOptions::prefix_cache`] is on (the default):
+//!
+//! * pages are refcounted (`Arc<KvPage>`) and the pool keeps a **prefix
+//!   index**: a chained FNV-1a hash over page-aligned prompt-token runs
+//!   maps each *full* prefix page to a [`Weak`] reference plus the exact
+//!   tokens it was filled from (so a match is verified token-for-token —
+//!   a hash collision can never alias wrong KV);
+//! * a new session's prefill first walks the index
+//!   ([`KvCache::attach_prefix`]) and maps every matching read-only page
+//!   by bumping its refcount instead of recomputing it — the engine then
+//!   resumes prefill from the first unshared position;
+//! * any write to a shared (or index-registered) page goes through
+//!   [`KvCache::make_private`]: **copy-on-write** — a fresh page is
+//!   allocated, the stripes copied, and only this session's mapping is
+//!   repointed. Decode always writes the private tail page, so steady
+//!   decode never copies;
+//! * the index holds only `Weak` refs, so it never pins a page: when the
+//!   last mapping drops, the page's buffer returns to the free list and
+//!   its index entry is purged ([`KvPage`]'s `Drop`). A drained pool is
+//!   therefore exactly empty — physical *and* logical — which the chaos
+//!   suite asserts.
+//!
+//! The pool tracks **logical** mappings (what sessions see) separately
+//! from **physical** pages (what memory holds); their ratio is the
+//! sharing multiplier that `ServeMetrics` surfaces as effective
+//! capacity. With `prefix_cache` off every sharing path is compiled down
+//! to a no-op branch and behavior is byte-for-byte the unshared pool.
 
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, Weak};
 
 use anyhow::{bail, Result};
 
@@ -32,15 +66,18 @@ use anyhow::{bail, Result};
 /// BLaST/BLASST line of work uses for position blocking).
 pub const DEFAULT_KV_PAGE: usize = 64;
 
-/// Engine-facing KV layout knobs: positions per page and optional pool
-/// capacity (pages). `blast serve --kv-page N --kv-pool-pages M` maps
-/// straight onto this.
+/// Engine-facing KV layout knobs: positions per page, optional pool
+/// capacity (pages), and prefix sharing. `blast serve --kv-page N
+/// --kv-pool-pages M --prefix-cache false` maps straight onto this.
 #[derive(Clone, Copy, Debug)]
 pub struct KvOptions {
     /// Positions per page (clamped to the engine's `max_seq`).
     pub page: usize,
     /// Hard pool capacity in pages; `None` = unbounded.
     pub pool_pages: Option<usize>,
+    /// Copy-on-write prefix sharing (default on). Off is byte-for-byte
+    /// the unshared pool: no index, no refcount sharing, no CoW.
+    pub prefix_cache: bool,
 }
 
 impl Default for KvOptions {
@@ -48,6 +85,7 @@ impl Default for KvOptions {
         KvOptions {
             page: DEFAULT_KV_PAGE,
             pool_pages: None,
+            prefix_cache: true,
         }
     }
 }
@@ -92,13 +130,90 @@ impl KvGeom {
     }
 }
 
+/// 64-bit FNV-1a over a token's little-endian bytes, continuing `h` — the
+/// step function of the pool's chained prefix hash. The chain value after
+/// page `p`'s tokens is the index key of the `(p+1)·page`-token prefix,
+/// so extending a prompt extends its key chain without rehashing.
+#[inline]
+fn fnv1a_token(mut h: u64, token: u32) -> u64 {
+    const FNV_PRIME: u64 = 0x100_0000_01b3;
+    for b in token.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a offset basis — the chain's starting value.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One refcounted KV page. Sessions map pages as `Arc<KvPage>`; the pool's
+/// prefix index holds at most a [`Weak`] reference, so a page lives
+/// exactly as long as some session maps it. Dropping the last mapping
+/// returns the buffer to the pool's free list and purges the page's index
+/// entry — refcounts structurally return to zero at drain.
+pub struct KvPage {
+    pool: Arc<KvPagePool>,
+    /// Page payload; taken back by the pool on drop (`Box<[f32]>::default`
+    /// is an empty box, so no unsafe is needed to move it out).
+    data: Box<[f32]>,
+    /// Prefix-index key, set once at registration (before the index takes
+    /// its weak reference) so `Drop` can purge the entry.
+    key: OnceLock<u64>,
+}
+
+impl Drop for KvPage {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.data);
+        self.pool.release(buf, self.key.get().copied());
+    }
+}
+
+/// A live prefix-index entry: the page holding positions
+/// `[len − page, len)` of a prompt whose first `len` tokens are
+/// `tokens[..len]`. Matches are verified against the stored tokens, never
+/// trusted to the hash.
+struct PrefixEntry {
+    page: Weak<KvPage>,
+    tokens: Arc<[u32]>,
+    len: usize,
+}
+
+/// Cumulative + gauge sharing counters, snapshot under one pool lock so
+/// the ratio is self-consistent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Prefix-index lookups (one per prefill with ≥ 1 full prompt page).
+    pub lookups: u64,
+    /// Lookups that mapped at least one shared page.
+    pub hits: u64,
+    /// Pages mapped from the index instead of being recomputed
+    /// (cumulative).
+    pub pages_shared: u64,
+    /// Copy-on-write page copies performed (cumulative).
+    pub cow_copies: u64,
+    /// Current page mappings across all caches (logical pages).
+    pub logical_pages: usize,
+    /// Current physical pages held (== logical when nothing is shared).
+    pub physical_pages: usize,
+}
+
 struct PoolInner {
     /// Recycled page buffers, ready for reuse without a fresh allocation.
     free: Vec<Box<[f32]>>,
-    /// Pages currently held by live caches.
+    /// Physical pages currently held by live caches.
     in_use: usize,
     /// Peak of `in_use` since pool creation.
     high_water: usize,
+    /// Page *mappings* across live caches: shared pages count once per
+    /// mapping. `logical >= in_use`, equal when nothing is shared, and
+    /// both must be zero once every cache drops.
+    logical: usize,
+    /// Prefix index: chained-hash key → weakly-held page + exact tokens.
+    index: HashMap<u64, PrefixEntry>,
+    lookups: u64,
+    hits: u64,
+    pages_shared: u64,
+    cow_copies: u64,
 }
 
 /// Shared page allocator: every session's [`KvCache`] draws from (and
@@ -109,21 +224,38 @@ pub struct KvPagePool {
     /// Hard capacity in pages; `None` = unbounded (tests, single-session
     /// tools). The serving coordinator uses the bound for admission.
     max_pages: Option<usize>,
+    /// Prefix sharing armed at build time ([`KvOptions::prefix_cache`]).
+    prefix_cache: bool,
     inner: Mutex<PoolInner>,
 }
 
 impl KvPagePool {
-    /// A pool for the given geometry; `max_pages = None` is unbounded.
-    pub fn new(geom: KvGeom, max_pages: Option<usize>) -> Arc<KvPagePool> {
+    /// A pool for the given geometry; `max_pages = None` is unbounded,
+    /// `prefix_cache` arms the sharing index.
+    pub fn new(geom: KvGeom, max_pages: Option<usize>, prefix_cache: bool) -> Arc<KvPagePool> {
         Arc::new(KvPagePool {
             geom,
             max_pages,
+            prefix_cache,
             inner: Mutex::new(PoolInner {
                 free: Vec::new(),
                 in_use: 0,
                 high_water: 0,
+                logical: 0,
+                index: HashMap::new(),
+                lookups: 0,
+                hits: 0,
+                pages_shared: 0,
+                cow_copies: 0,
             }),
         })
+    }
+
+    /// The pool lock. Page release runs from `Drop`, which may execute
+    /// while a scheduler thread is unwinding — recover the data instead of
+    /// compounding a poisoned mutex into an abort.
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// The geometry every page of this pool follows.
@@ -136,21 +268,32 @@ impl KvPagePool {
         self.max_pages
     }
 
-    /// Pages currently held by live caches.
+    /// Whether copy-on-write prefix sharing is armed.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix_cache
+    }
+
+    /// Physical pages currently held by live caches.
     pub fn pages_in_use(&self) -> usize {
-        self.inner.lock().unwrap().in_use
+        self.lock().in_use
+    }
+
+    /// Current page mappings across caches (each shared page counts once
+    /// per session mapping it). Must drain to zero together with
+    /// [`KvPagePool::pages_in_use`].
+    pub fn logical_pages(&self) -> usize {
+        self.lock().logical
     }
 
     /// Pages still allocatable right now (`None` = unbounded).
     pub fn available_pages(&self) -> Option<usize> {
-        self.max_pages
-            .map(|cap| cap.saturating_sub(self.inner.lock().unwrap().in_use))
+        self.max_pages.map(|cap| cap.saturating_sub(self.lock().in_use))
     }
 
     /// Peak concurrent pages since pool creation — the number a capacity
     /// planner actually needs.
     pub fn high_water_pages(&self) -> usize {
-        self.inner.lock().unwrap().high_water
+        self.lock().high_water
     }
 
     /// Bytes resident in live caches right now (in-use pages only; the
@@ -159,44 +302,206 @@ impl KvPagePool {
         self.pages_in_use() * self.geom.page_bytes()
     }
 
-    /// Hand out one page, recycling a returned buffer when possible.
-    /// Clean error — never a panic — when the pool is at capacity.
-    fn alloc(&self) -> Result<Box<[f32]>> {
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(cap) = self.max_pages {
-            if inner.in_use >= cap {
-                bail!(
-                    "KV page pool exhausted: {} of {cap} pages in use",
-                    inner.in_use
-                );
-            }
+    /// One self-consistent snapshot of the sharing counters.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        let inner = self.lock();
+        PrefixStats {
+            lookups: inner.lookups,
+            hits: inner.hits,
+            pages_shared: inner.pages_shared,
+            cow_copies: inner.cow_copies,
+            logical_pages: inner.logical,
+            physical_pages: inner.in_use,
         }
-        inner.in_use += 1;
-        inner.high_water = inner.high_water.max(inner.in_use);
-        // Recycled pages keep stale values: every read is bounded by the
-        // owning cache's `len`, and every position is written before `len`
-        // covers it, so stale floats are never observed.
-        let page = inner
-            .free
-            .pop()
-            .unwrap_or_else(|| vec![0.0f32; self.geom.page_floats()].into_boxed_slice());
-        Ok(page)
     }
 
-    /// Return a page to the free list (called by [`KvCache`] on drop).
-    fn release(&self, page: Box<[f32]>) {
-        let mut inner = self.inner.lock().unwrap();
+    /// Hand out one freshly mapped page, recycling a returned buffer when
+    /// possible. Clean error — never a panic — when the pool is at
+    /// capacity. Counts one physical page and one logical mapping.
+    fn alloc(pool: &Arc<KvPagePool>) -> Result<Arc<KvPage>> {
+        let data = {
+            let mut inner = pool.lock();
+            if let Some(cap) = pool.max_pages {
+                if inner.in_use >= cap {
+                    bail!(
+                        "KV page pool exhausted: {} of {cap} pages in use",
+                        inner.in_use
+                    );
+                }
+            }
+            inner.in_use += 1;
+            inner.high_water = inner.high_water.max(inner.in_use);
+            inner.logical += 1;
+            // Recycled pages keep stale values: every read is bounded by
+            // the owning cache's `len`, and every position is written
+            // before `len` covers it, so stale floats are never observed.
+            inner
+                .free
+                .pop()
+                .unwrap_or_else(|| vec![0.0f32; pool.geom.page_floats()].into_boxed_slice())
+        };
+        Ok(Arc::new(KvPage {
+            pool: pool.clone(),
+            data,
+            key: OnceLock::new(),
+        }))
+    }
+
+    /// Return a page buffer to the free list (called by [`KvPage`] on its
+    /// final drop) and purge the page's index entry — unless the entry was
+    /// already repointed at a newer live page.
+    fn release(&self, buf: Box<[f32]>, key: Option<u64>) {
+        let mut inner = self.lock();
         inner.in_use -= 1;
-        inner.free.push(page);
+        inner.free.push(buf);
+        if let Some(k) = key {
+            if inner
+                .index
+                .get(&k)
+                .is_some_and(|e| e.page.strong_count() == 0)
+            {
+                inner.index.remove(&k);
+            }
+        }
+    }
+
+    /// Drop `n` logical mappings (cache drop / CoW repoint). The physical
+    /// side is handled by each page's own final drop.
+    fn unmap_logical(&self, n: usize) {
+        self.lock().logical -= n;
+    }
+
+    /// Map every index page matching a prefix of `tokens`, bumping
+    /// refcounts — read path of prefix sharing. Returns the mapped pages
+    /// in position order; stops at the first divergent or missing page.
+    /// Only *full* pages are ever indexed, so the tail stays private.
+    fn attach(&self, tokens: &[u32]) -> Vec<Arc<KvPage>> {
+        let page = self.geom.page;
+        if !self.prefix_cache || page == 0 || tokens.len() < page {
+            return Vec::new();
+        }
+        let mut inner = self.lock();
+        inner.lookups += 1;
+        let mut out: Vec<Arc<KvPage>> = Vec::new();
+        let mut h = FNV_OFFSET;
+        for pi in 0..tokens.len() / page {
+            for &t in &tokens[pi * page..(pi + 1) * page] {
+                h = fnv1a_token(h, t);
+            }
+            let plen = (pi + 1) * page;
+            let Some(e) = inner.index.get(&h) else { break };
+            // exact verification: same prefix length and the same tokens —
+            // the hash only narrows the candidate, it never decides
+            if e.len != plen || e.tokens.len() < plen || e.tokens[..plen] != tokens[..plen] {
+                break;
+            }
+            let Some(p) = e.page.upgrade() else { break };
+            out.push(p);
+        }
+        if !out.is_empty() {
+            inner.hits += 1;
+            inner.pages_shared += out.len() as u64;
+            inner.logical += out.len();
+        }
+        out
+    }
+
+    /// Read-only admission probe: how many pages a prefill of `tokens`
+    /// would *not* need to allocate from the pool. This is the page count
+    /// [`KvPagePool::attach`] would map, minus one when the prompt is
+    /// fully covered by the index (the engine then rewrites the last
+    /// position, which copy-on-writes one page). No refcounts move; if a
+    /// donor session retires between probe and prefill the prefill simply
+    /// allocates (or cleanly errors) like any other.
+    pub fn probe_prefix(&self, tokens: &[u32]) -> usize {
+        let page = self.geom.page;
+        if !self.prefix_cache || page == 0 || tokens.len() < page {
+            return 0;
+        }
+        let inner = self.lock();
+        let mut m = 0usize;
+        let mut h = FNV_OFFSET;
+        for pi in 0..tokens.len() / page {
+            for &t in &tokens[pi * page..(pi + 1) * page] {
+                h = fnv1a_token(h, t);
+            }
+            let plen = (pi + 1) * page;
+            let ok = inner.index.get(&h).is_some_and(|e| {
+                e.len == plen
+                    && e.tokens.len() >= plen
+                    && e.tokens[..plen] == tokens[..plen]
+                    && e.page.strong_count() > 0
+            });
+            if !ok {
+                break;
+            }
+            m += 1;
+        }
+        if m > 0 && m * page == tokens.len() {
+            m - 1
+        } else {
+            m
+        }
+    }
+
+    /// Publish the full prompt pages of `tokens` into the prefix index
+    /// (write path; called after a successful prefill). Live entries are
+    /// never displaced — the first session to fill a prefix stays its
+    /// donor until it retires; dead entries are repointed.
+    fn register(&self, tokens: &[u32], pages: &[Arc<KvPage>]) {
+        let page = self.geom.page;
+        if !self.prefix_cache || page == 0 || tokens.len() < page {
+            return;
+        }
+        let m = (tokens.len() / page).min(pages.len());
+        let toks: Arc<[u32]> = tokens.into();
+        let mut inner = self.lock();
+        let mut h = FNV_OFFSET;
+        for (pi, p) in pages.iter().enumerate().take(m) {
+            for &t in &tokens[pi * page..(pi + 1) * page] {
+                h = fnv1a_token(h, t);
+            }
+            if inner
+                .index
+                .get(&h)
+                .is_some_and(|e| e.page.strong_count() > 0)
+            {
+                continue; // a live donor already publishes this prefix
+            }
+            // a page registers under exactly one key, set before the index
+            // takes its weak ref so Drop can purge the entry
+            match p.key.get() {
+                None => {
+                    let _ = p.key.set(h);
+                }
+                Some(&k) if k == h => {}
+                Some(_) => continue,
+            }
+            inner.index.insert(
+                h,
+                PrefixEntry {
+                    page: Arc::downgrade(p),
+                    tokens: toks.clone(),
+                    len: (pi + 1) * page,
+                },
+            );
+        }
+    }
+
+    /// Record one copy-on-write page copy.
+    fn note_cow(&self) {
+        self.lock().cow_copies += 1;
     }
 }
 
 /// Per-session KV cache backed by pool pages, allocated on demand as the
-/// sequence grows and returned to the pool on drop.
+/// sequence grows and returned to the pool on drop. With prefix sharing
+/// on, leading pages may be shared mappings (see [`KvCache::attach_prefix`]);
+/// writes to them go through [`KvCache::make_private`] first.
 pub struct KvCache {
     pool: Arc<KvPagePool>,
     geom: KvGeom,
-    pages: Vec<Box<[f32]>>,
+    pages: Vec<Arc<KvPage>>,
     /// Number of valid positions (same meaning as the seed flat cache).
     pub len: usize,
 }
@@ -215,12 +520,14 @@ impl KvCache {
     }
 
     /// Resident bytes of this cache — pages actually held, **not** the
-    /// `max_seq` preallocation bound the seed cache reported.
+    /// `max_seq` preallocation bound the seed cache reported. Shared
+    /// mappings count here (they are this session's working set); the
+    /// pool's physical residency is the deduplicated truth.
     pub fn bytes(&self) -> usize {
         self.pages.len() * self.geom.page_bytes()
     }
 
-    /// Pages currently held.
+    /// Pages currently mapped (shared + private).
     pub fn pages_held(&self) -> usize {
         self.pages.len()
     }
@@ -230,6 +537,28 @@ impl KvCache {
         self.geom.page
     }
 
+    /// Map every prefix-index page matching a leading run of `tokens`
+    /// (refcount bump, no compute, no copy). Returns how many pages were
+    /// mapped; the engine resumes prefill after them. Only an empty cache
+    /// attaches — a retried session re-prefills into pages it already
+    /// owns, where remapping would alias someone else's positions.
+    pub fn attach_prefix(&mut self, tokens: &[u32]) -> usize {
+        if self.len != 0 || !self.pages.is_empty() {
+            return 0;
+        }
+        let got = self.pool.attach(tokens);
+        let n = got.len();
+        self.pages.extend(got);
+        n
+    }
+
+    /// Publish this cache's full prompt pages into the pool's prefix
+    /// index so later sessions can map them (no-op when sharing is off).
+    /// Call after a successful prefill of `tokens`.
+    pub fn register_prefix(&self, tokens: &[u32]) {
+        self.pool.register(tokens, &self.pages);
+    }
+
     /// Grow to cover `positions` positions, allocating pages from the
     /// pool on demand. Clean error on pool exhaustion; the cache keeps
     /// the pages it already acquired (its `len` and contents are
@@ -237,7 +566,50 @@ impl KvCache {
     pub fn ensure(&mut self, positions: usize) -> Result<()> {
         let need = self.geom.pages_for(positions);
         while self.pages.len() < need {
-            self.pages.push(self.pool.alloc()?);
+            self.pages.push(KvPagePool::alloc(&self.pool)?);
+        }
+        Ok(())
+    }
+
+    /// Whether page `pi` is exclusively this cache's: no other session
+    /// maps it and the prefix index holds no reference to it.
+    pub fn page_is_private(&mut self, pi: usize) -> bool {
+        Arc::get_mut(&mut self.pages[pi]).is_some()
+    }
+
+    /// Copy-on-write: make page `pi` exclusively writable. A page shared
+    /// with another session — or published in the prefix index, whose weak
+    /// ref must keep serving the *donor's* bits — is replaced by a fresh
+    /// pool page carrying a copy of its stripes; only this cache's mapping
+    /// is repointed. Already-private pages are a no-op. Clean error on
+    /// pool exhaustion (the shared mapping stays usable).
+    pub fn make_private(&mut self, pi: usize) -> Result<()> {
+        if self.page_is_private(pi) {
+            return Ok(());
+        }
+        let mut fresh = KvPagePool::alloc(&self.pool)?;
+        Arc::get_mut(&mut fresh)
+            .expect("freshly allocated page is unshared")
+            .data
+            .copy_from_slice(&self.pages[pi].data);
+        self.pool.note_cow();
+        // repoint: one logical mapping moves from the shared page to the
+        // copy (alloc counted the copy, so drop this mapping's old count)
+        let old = std::mem::replace(&mut self.pages[pi], fresh);
+        self.pool.unmap_logical(1);
+        drop(old);
+        Ok(())
+    }
+
+    /// [`KvCache::ensure`] plus copy-on-write of the page covering the
+    /// last position — the write-path growth call: after it, position
+    /// `positions − 1` is writable without touching any shared page.
+    /// (Pages past the first written one are freshly allocated, hence
+    /// already private.)
+    pub fn ensure_writable(&mut self, positions: usize) -> Result<()> {
+        self.ensure(positions)?;
+        if positions > 0 {
+            self.make_private((positions - 1) / self.geom.page)?;
         }
         Ok(())
     }
@@ -247,18 +619,24 @@ impl KvCache {
     #[inline]
     pub fn k_head(&self, layer: usize, head: usize, pi: usize) -> &[f32] {
         let o = self.geom.stripe(layer, 0, head);
-        &self.pages[pi][o..o + self.geom.page * self.geom.head_dim]
+        &self.pages[pi].data[o..o + self.geom.page * self.geom.head_dim]
     }
 
     /// The `(page × hd)` V stripe of `(layer, head)` in page `pi`.
     #[inline]
     pub fn v_head(&self, layer: usize, head: usize, pi: usize) -> &[f32] {
         let o = self.geom.stripe(layer, 1, head);
-        &self.pages[pi][o..o + self.geom.page * self.geom.head_dim]
+        &self.pages[pi].data[o..o + self.geom.page * self.geom.head_dim]
     }
 
     /// Write one position's K and V rows for `(layer, head)`. The page
-    /// covering `pos` must already exist (see [`KvCache::ensure`]).
+    /// covering `pos` must already exist **and be private** — growth goes
+    /// through [`KvCache::ensure_writable`] (or plain [`KvCache::ensure`]
+    /// for pages that were never shared), which copy-on-writes first.
+    ///
+    /// # Panics
+    /// If the covering page is still shared or index-registered: writing
+    /// through it would corrupt other sessions' KV.
     #[inline]
     pub fn write_pos(&mut self, layer: usize, head: usize, pos: usize, k: &[f32], v: &[f32]) {
         let hd = self.geom.head_dim;
@@ -267,7 +645,9 @@ impl KvCache {
         let (pi, off) = (pos / self.geom.page, pos % self.geom.page);
         let ko = self.geom.stripe(layer, 0, head) + off * hd;
         let vo = self.geom.stripe(layer, 1, head) + off * hd;
-        let page = &mut self.pages[pi];
+        let page = &mut Arc::get_mut(&mut self.pages[pi])
+            .expect("KV write to a shared page (copy-on-write was skipped)")
+            .data;
         page[ko..ko + hd].copy_from_slice(k);
         page[vo..vo + hd].copy_from_slice(v);
     }
@@ -275,9 +655,10 @@ impl KvCache {
 
 impl Drop for KvCache {
     fn drop(&mut self) {
-        for page in self.pages.drain(..) {
-            self.pool.release(page);
-        }
+        // logical mappings go first (one pool lock), then each page whose
+        // last mapping this was returns its buffer via its own Drop
+        self.pool.unmap_logical(self.pages.len());
+        self.pages.clear();
     }
 }
 
@@ -294,6 +675,27 @@ mod tests {
         }
     }
 
+    fn pool(page: usize, cap: Option<usize>) -> Arc<KvPagePool> {
+        KvPagePool::new(geom(page), cap, true)
+    }
+
+    /// Fill positions `0..n` of `c` with a per-(layer, head, pos, dim)
+    /// pattern offset by `salt`, and set `len`.
+    fn fill(c: &mut KvCache, n: usize, salt: f32) {
+        c.ensure(n).unwrap();
+        for li in 0..2 {
+            for hh in 0..3 {
+                for pos in 0..n {
+                    let base = (li * 1000 + hh * 100 + pos * 10) as f32 + salt;
+                    let k: Vec<f32> = (0..4).map(|d| base + d as f32).collect();
+                    let v: Vec<f32> = (0..4).map(|d| -(base + d as f32)).collect();
+                    c.write_pos(li, hh, pos, &k, &v);
+                }
+            }
+        }
+        c.len = n;
+    }
+
     #[test]
     fn geometry_math() {
         let g = geom(8);
@@ -307,21 +709,11 @@ mod tests {
 
     #[test]
     fn write_then_read_roundtrip_across_pages() {
-        let pool = KvPagePool::new(geom(2), None);
+        let pool = pool(2, None);
         let mut c = KvCache::new(pool);
         c.ensure(5).unwrap();
         assert_eq!(c.pages_held(), 3);
-        // distinct values per (layer, head, pos, dim, k/v)
-        for li in 0..2 {
-            for hh in 0..3 {
-                for pos in 0..5 {
-                    let base = (li * 1000 + hh * 100 + pos * 10) as f32;
-                    let k: Vec<f32> = (0..4).map(|d| base + d as f32).collect();
-                    let v: Vec<f32> = (0..4).map(|d| -(base + d as f32)).collect();
-                    c.write_pos(li, hh, pos, &k, &v);
-                }
-            }
-        }
+        fill(&mut c, 5, 0.0);
         for li in 0..2 {
             for hh in 0..3 {
                 for pos in 0..5 {
@@ -340,17 +732,19 @@ mod tests {
 
     #[test]
     fn pool_counts_and_high_water() {
-        let pool = KvPagePool::new(geom(4), Some(4));
+        let pool = pool(4, Some(4));
         assert_eq!(pool.available_pages(), Some(4));
         let mut a = KvCache::new(pool.clone());
         a.ensure(8).unwrap(); // 2 pages
         let mut b = KvCache::new(pool.clone());
         b.ensure(4).unwrap(); // 1 page
         assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(pool.logical_pages(), 3);
         assert_eq!(pool.available_pages(), Some(1));
         assert_eq!(pool.resident_bytes(), 3 * pool.geom().page_bytes());
         drop(a);
         assert_eq!(pool.pages_in_use(), 1);
+        assert_eq!(pool.logical_pages(), 1);
         // high water sticks at the peak
         assert_eq!(pool.high_water_pages(), 3);
         // released pages are recycled, not lost
@@ -362,7 +756,7 @@ mod tests {
 
     #[test]
     fn exhaustion_is_a_clean_error_and_keeps_acquired_pages() {
-        let pool = KvPagePool::new(geom(2), Some(2));
+        let pool = pool(2, Some(2));
         let mut c = KvCache::new(pool.clone());
         let err = c.ensure(6).unwrap_err(); // needs 3 pages, cap 2
         assert!(err.to_string().contains("exhausted"), "{err}");
@@ -378,7 +772,7 @@ mod tests {
 
     #[test]
     fn bytes_report_resident_pages_only() {
-        let pool = KvPagePool::new(geom(8), None);
+        let pool = pool(8, None);
         let mut c = KvCache::new(pool.clone());
         assert_eq!(c.bytes(), 0);
         c.ensure(1).unwrap();
@@ -392,9 +786,211 @@ mod tests {
 
     #[test]
     fn zero_capacity_pool_rejects_first_page() {
-        let pool = KvPagePool::new(geom(2), Some(0));
+        let pool = pool(2, Some(0));
         let mut c = KvCache::new(pool);
         assert!(c.ensure(1).is_err());
         assert_eq!(c.pages_held(), 0);
+    }
+
+    #[test]
+    fn hash_chain_extends_per_page() {
+        // the chain value after p pages is a pure function of those
+        // tokens: same prefix → same keys, one differing token → a
+        // different key from that page on
+        let chain = |toks: &[u32]| {
+            let mut h = FNV_OFFSET;
+            let mut keys = Vec::new();
+            for (i, &t) in toks.iter().enumerate() {
+                h = fnv1a_token(h, t);
+                if (i + 1) % 4 == 0 {
+                    keys.push(h);
+                }
+            }
+            keys
+        };
+        let a = chain(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = chain(&[1, 2, 3, 4, 5, 6, 7, 9]);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0], b[0], "shared first page must share its key");
+        assert_ne!(a[1], b[1], "divergent page must change its key");
+    }
+
+    #[test]
+    fn attach_maps_matching_full_pages_only() {
+        let pool = pool(4, None);
+        let prompt: Vec<u32> = (0..10).collect(); // 2 full pages + tail 2
+        let mut donor = KvCache::new(pool.clone());
+        fill(&mut donor, 10, 0.0);
+        donor.register_prefix(&prompt);
+        assert_eq!(pool.pages_in_use(), 3);
+
+        // exact prefix: both full pages map; the tail page never does
+        let mut c = KvCache::new(pool.clone());
+        assert_eq!(c.attach_prefix(&prompt), 2);
+        assert_eq!(c.pages_held(), 2);
+        // physically the same pages — pointer-equal stripes
+        assert!(std::ptr::eq(c.k_head(0, 0, 0).as_ptr(), donor.k_head(0, 0, 0).as_ptr()));
+        assert_eq!(pool.pages_in_use(), 3, "sharing allocates nothing");
+        assert_eq!(pool.logical_pages(), 5);
+
+        // divergence inside page 1 → only page 0 maps
+        let mut div: Vec<u32> = prompt.clone();
+        div[5] = 99;
+        let mut d = KvCache::new(pool.clone());
+        assert_eq!(d.attach_prefix(&div), 1);
+
+        // shorter-than-a-page prompts never look up
+        let mut e = KvCache::new(pool.clone());
+        assert_eq!(e.attach_prefix(&[0, 1, 2]), 0);
+
+        let stats = pool.prefix_stats();
+        assert_eq!(stats.lookups, 2, "sub-page prompt must not count a lookup");
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.pages_shared, 3);
+    }
+
+    #[test]
+    fn cow_copy_never_aliases_the_shared_page() {
+        let pool = pool(4, None);
+        let prompt: Vec<u32> = (0..8).collect();
+        let mut donor = KvCache::new(pool.clone());
+        fill(&mut donor, 8, 0.0);
+        donor.register_prefix(&prompt);
+
+        let mut c = KvCache::new(pool.clone());
+        assert_eq!(c.attach_prefix(&prompt), 2);
+        assert!(!c.page_is_private(1), "attached pages are shared");
+        let before: Vec<f32> = donor.k_head(1, 2, 1).to_vec();
+
+        // CoW page 1, then write a canary into the copy
+        c.make_private(1).unwrap();
+        assert!(c.page_is_private(1));
+        assert!(
+            !std::ptr::eq(c.k_head(1, 2, 1).as_ptr(), donor.k_head(1, 2, 1).as_ptr()),
+            "the copy must live in different memory"
+        );
+        c.write_pos(1, 2, 5, &[9e9; 4], &[-9e9; 4]);
+        // re-read the original: bit-for-bit untouched
+        assert_eq!(donor.k_head(1, 2, 1), &before[..], "canary leaked into the shared page");
+        assert_eq!(c.k_head(1, 2, 1)[4..8], [9e9; 4]);
+        // page 0 stays shared — CoW is per-page, not per-cache
+        assert!(std::ptr::eq(c.k_head(0, 0, 0).as_ptr(), donor.k_head(0, 0, 0).as_ptr()));
+
+        let stats = pool.prefix_stats();
+        assert_eq!(stats.cow_copies, 1);
+        // 2 donor + 2 attached mappings; the CoW swap is logical-neutral
+        assert_eq!(stats.logical_pages, 4);
+        // 2 donor pages + the copy
+        assert_eq!(stats.physical_pages, 3);
+    }
+
+    #[test]
+    fn registered_pages_cow_even_when_refcount_is_one() {
+        // the index holds a weak ref serving the donor's bits to future
+        // sessions; a write through a registered page must copy first even
+        // if no other session currently maps it
+        let pool = pool(4, None);
+        let prompt: Vec<u32> = (0..4).collect();
+        let mut c = KvCache::new(pool.clone());
+        fill(&mut c, 4, 0.0);
+        c.register_prefix(&prompt);
+        assert!(!c.page_is_private(0), "registration pins writability");
+        c.ensure_writable(4).unwrap();
+        assert!(c.page_is_private(0));
+        assert_eq!(pool.prefix_stats().cow_copies, 1);
+        // the index entry still serves the original page's content until
+        // its last mapping (the CoW drop above was the last) releases it —
+        // here the original died, so the entry purged and a fresh prompt
+        // recomputes
+        let mut d = KvCache::new(pool.clone());
+        assert_eq!(d.attach_prefix(&prompt), 0);
+    }
+
+    #[test]
+    fn refcounts_and_mappings_drain_to_zero() {
+        let pool = pool(4, Some(16));
+        let prompt: Vec<u32> = (0..12).collect();
+        {
+            let mut donor = KvCache::new(pool.clone());
+            fill(&mut donor, 12, 0.0);
+            donor.register_prefix(&prompt);
+            let mut sharers: Vec<KvCache> = Vec::new();
+            for _ in 0..4 {
+                let mut c = KvCache::new(pool.clone());
+                assert_eq!(c.attach_prefix(&prompt), 3);
+                sharers.push(c);
+            }
+            assert_eq!(pool.pages_in_use(), 3);
+            assert_eq!(pool.logical_pages(), 3 + 4 * 3);
+            // one sharer copy-on-writes, another drops early
+            sharers[0].make_private(2).unwrap();
+            sharers.pop();
+            assert_eq!(pool.pages_in_use(), 4);
+            assert_eq!(pool.logical_pages(), 3 + 3 * 3);
+        }
+        // every cache gone: physical, logical and the index all empty
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.logical_pages(), 0);
+        assert_eq!(pool.lock().index.len(), 0, "dead index entries must purge");
+        // buffers were recycled, and a fresh prompt finds no stale match
+        let mut c = KvCache::new(pool.clone());
+        assert_eq!(c.attach_prefix(&prompt), 0);
+        c.ensure(4).unwrap();
+    }
+
+    #[test]
+    fn probe_matches_attach_and_charges_the_cow_page() {
+        let pool = pool(4, None);
+        let prompt: Vec<u32> = (0..12).collect();
+        let mut donor = KvCache::new(pool.clone());
+        fill(&mut donor, 12, 0.0);
+        donor.register_prefix(&prompt);
+
+        // partial coverage: probe == pages attach would map
+        let longer: Vec<u32> = (0..14).collect();
+        assert_eq!(pool.probe_prefix(&longer), 3);
+        // full coverage: the engine rewrites the last position → one CoW
+        // allocation, so the probe discounts one page
+        assert_eq!(pool.probe_prefix(&prompt), 2);
+        // no coverage
+        assert_eq!(pool.probe_prefix(&[7, 7, 7, 7, 7]), 0);
+        // probing moves no refcounts and no stats
+        let stats = pool.prefix_stats();
+        assert_eq!((stats.lookups, stats.hits, stats.pages_shared), (0, 0, 0));
+        assert_eq!(pool.logical_pages(), 3);
+    }
+
+    #[test]
+    fn prefix_cache_off_is_the_unshared_pool() {
+        let pool = KvPagePool::new(geom(4), None, false);
+        let prompt: Vec<u32> = (0..8).collect();
+        let mut donor = KvCache::new(pool.clone());
+        fill(&mut donor, 8, 0.0);
+        donor.register_prefix(&prompt);
+        let mut c = KvCache::new(pool.clone());
+        assert_eq!(c.attach_prefix(&prompt), 0);
+        assert_eq!(pool.probe_prefix(&prompt), 0);
+        assert_eq!(pool.prefix_stats(), PrefixStats {
+            logical_pages: 2,
+            physical_pages: 2,
+            ..PrefixStats::default()
+        });
+        // writes stay in place — no CoW ever
+        donor.ensure_writable(8).unwrap();
+        assert_eq!(pool.prefix_stats().cow_copies, 0);
+    }
+
+    #[test]
+    fn a_retried_nonempty_cache_never_attaches() {
+        let pool = pool(4, None);
+        let prompt: Vec<u32> = (0..8).collect();
+        let mut donor = KvCache::new(pool.clone());
+        fill(&mut donor, 8, 0.0);
+        donor.register_prefix(&prompt);
+        // a cache that already holds pages (failed prefill retry path)
+        // must re-fill in place, not remap
+        let mut c = KvCache::new(pool.clone());
+        c.ensure(4).unwrap();
+        assert_eq!(c.attach_prefix(&prompt), 0);
     }
 }

@@ -5,7 +5,8 @@
 //! 1. exactly one completion per submitted request — success or error,
 //!    never a duplicate, never a drop;
 //! 2. no deadlock (bounded waits everywhere);
-//! 3. KV page accounting returns to zero once the load drains;
+//! 3. KV page accounting returns to zero once the load drains — physical
+//!    pages *and* (with the prefix cache on) logical shared mappings;
 //! 4. with no fault plan armed, behavior is bit-identical to the plain
 //!    coordinator (zero-overhead guarantee).
 //!
@@ -19,7 +20,7 @@ use std::time::Duration;
 use blast::coordinator::{BatcherConfig, CompletionWait, Coordinator, Request};
 use blast::model::config::{ModelKind, NativeConfig};
 use blast::model::engine::{Engine, MlpMode};
-use blast::model::kv::KvOptions;
+use blast::model::kv::{KvCache, KvGeom, KvOptions, KvPagePool};
 use blast::model::params::ParamStore;
 use blast::sparse::BlockMask;
 use blast::tensor::Tensor;
@@ -106,12 +107,30 @@ fn serve_and_drain(
     plan: &[(u64, usize, usize)],
     deadline_ms: Option<u64>,
 ) -> Drained {
+    let with_prompts: Vec<(u64, Vec<u32>, usize)> = plan
+        .iter()
+        .map(|&(id, plen, max_new)| {
+            let prompt = (0..plen).map(|j| ((id as usize * 7 + j * 3) % 64) as u32).collect();
+            (id, prompt, max_new)
+        })
+        .collect();
+    serve_prompts_and_drain(coord, &with_prompts, deadline_ms)
+}
+
+/// Like [`serve_and_drain`] but with explicit per-session prompts, so
+/// loads can share token prefixes (the CoW sharing matrix needs that).
+fn serve_prompts_and_drain(
+    coord: &mut Coordinator,
+    plan: &[(u64, Vec<u32>, usize)],
+    deadline_ms: Option<u64>,
+) -> Drained {
     let mut accepted = HashSet::new();
-    for &(id, plen, max_new) in plan {
+    for (id, prompt, max_new) in plan {
+        let (id, max_new) = (*id, *max_new);
         let ok = coord
             .submit(Request {
                 id,
-                prompt: (0..plen).map(|j| ((id as usize * 7 + j * 3) % 64) as u32).collect(),
+                prompt: prompt.clone(),
                 max_new,
                 eos: None,
                 deadline_ms,
@@ -167,7 +186,7 @@ fn std_plan(n: u64) -> Vec<(u64, usize, usize)> {
 
 /// One full chaos run: bounded pool, fault plan, invariant checks 1–3.
 fn chaos_run(spec: &str, deadline_ms: Option<u64>) -> Drained {
-    let eng = engine(KvOptions { page: 4, pool_pages: Some(64) });
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
     let pool = eng.kv_pool().clone();
     let faults = Faults::parse(spec).unwrap();
     let mut coord = Coordinator::start_with_faults(
@@ -271,7 +290,7 @@ fn stalled_rounds_trip_deadlines_with_partial_output() {
 #[test]
 fn watchdog_fails_pending_requests_when_scheduler_dies() {
     let s = chaos_seed();
-    let eng = engine(KvOptions { page: 4, pool_pages: Some(64) });
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
     let pool = eng.kv_pool().clone();
     let faults = Faults::parse(&format!("scheduler_panic:1:{}", s + 6)).unwrap();
     let mut coord = Coordinator::start_with_faults(
@@ -299,7 +318,7 @@ fn watchdog_fails_pending_requests_when_scheduler_dies() {
 fn no_faults_parity_with_plain_coordinator() {
     let mut all: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
     for variant in 0..3 {
-        let eng = engine(KvOptions { page: 4, pool_pages: Some(64) });
+        let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
         let faults = match variant {
             0 => None, // plain Coordinator::start
             1 => Some(Faults::disabled()),
@@ -340,6 +359,7 @@ fn kv_pages_never_leak_across_randomized_retirement_paths() {
         let kv = KvOptions {
             page: [3, 4, 8][rng.below(3)],
             pool_pages: Some(if tight_pool { 6 + rng.below(6) } else { 64 }),
+            prefix_cache: true,
         };
         let site = [
             "decode_round_panic",
@@ -377,6 +397,169 @@ fn kv_pages_never_leak_across_randomized_retirement_paths() {
             pool.pages_in_use(),
             0,
             "case {case} ({spec}, deadline {deadline:?}): KV pages leaked"
+        );
+    }
+}
+
+/// Satellite: the CoW refcount/leak property under chaos. Randomized
+/// session mixes share one page-aligned hot prefix per case — most extend
+/// it with a distinct tail, some repeat it exactly (the full-hit CoW
+/// path), some are unrelated — crossed with the fault×deadline×batch
+/// matrix. After every drain the pool must be empty *twice over*: zero
+/// physical pages in use (all refcounts returned to zero) and zero
+/// logical mappings (no shared-page bookkeeping survived its sessions).
+#[test]
+fn shared_prefix_mix_never_leaks_pages_or_mappings() {
+    let mut rng = Rng::new(chaos_seed() ^ 0x51A2);
+    for case in 0..12usize {
+        let page = [3, 4, 8][rng.below(3)];
+        let tight_pool = rng.below(2) == 0;
+        let kv = KvOptions {
+            page,
+            pool_pages: Some(if tight_pool { 8 + rng.below(8) } else { 64 }),
+            prefix_cache: true,
+        };
+        let site = [
+            "decode_round_panic",
+            "decode_round_error",
+            "prefill_error",
+            "kv_pool_exhausted",
+            "decode_stall_ms",
+        ][rng.below(5)];
+        let spec = format!("{site}:0.2:{}", 500 + case);
+        let deadline = if rng.below(3) == 0 { Some(60 + rng.below(120) as u64) } else { None };
+        let eng = engine(kv);
+        let pool = eng.kv_pool().clone();
+        let mut coord = Coordinator::start_with_faults(
+            eng,
+            BatcherConfig {
+                max_batch: 1 + rng.below(4),
+                max_queue: 64,
+                ..BatcherConfig::default()
+            },
+            Faults::parse(&spec).unwrap(),
+        );
+        let prefix: Vec<u32> = (0..page * (1 + rng.below(2)))
+            .map(|j| ((case * 11 + j * 5) % 64) as u32)
+            .collect();
+        let n = 8 + rng.below(8) as u64;
+        let plan: Vec<(u64, Vec<u32>, usize)> = (0..n)
+            .map(|i| {
+                let prompt = match rng.below(4) {
+                    // exact repeat: attach maps every page, CoW recomputes
+                    // only the last position
+                    0 => prefix.clone(),
+                    // unrelated prompt: no sharing, keeps the index honest
+                    3 => (0..2 + rng.below(6))
+                        .map(|j| ((i as usize * 13 + j * 7 + 1) % 64) as u32)
+                        .collect(),
+                    // the hot path: shared prefix + distinct private tail
+                    _ => {
+                        let mut p = prefix.clone();
+                        p.extend(
+                            (0..1 + rng.below(4)).map(|j| ((i as usize * 17 + j * 3) % 64) as u32),
+                        );
+                        p
+                    }
+                };
+                (i, prompt, 1 + rng.below(6))
+            })
+            .collect();
+        let d = serve_prompts_and_drain(&mut coord, &plan, deadline);
+        assert!(!d.disconnected, "case {case} ({spec}): unexpected worker death");
+        assert_eq!(d.completions.len(), plan.len(), "case {case} ({spec}): request lost");
+        coord.stop();
+        assert_eq!(
+            (pool.pages_in_use(), pool.logical_pages()),
+            (0, 0),
+            "case {case} ({spec}, deadline {deadline:?}): KV pages or shared mappings leaked"
+        );
+        let stats = pool.prefix_stats();
+        assert_eq!(
+            (stats.logical_pages, stats.physical_pages),
+            (0, 0),
+            "case {case} ({spec}): prefix-stats gauges must drain with the pool"
+        );
+    }
+}
+
+/// Satellite: a CoW copy never aliases a still-shared page. Randomized
+/// donor/follower pairs on a bare pool: the follower attaches the donor's
+/// registered prefix, copies-on-write a random shared page, then writes a
+/// canary into the copy — the donor's bits must re-read unchanged, the
+/// copy must live at a different address, and either drop order must
+/// drain the pool to zero pages and zero mappings.
+#[test]
+fn cow_copies_never_alias_their_donor_under_randomized_lifetimes() {
+    let mut rng = Rng::new(chaos_seed() ^ 0x0C0A);
+    for case in 0..16usize {
+        let page = [2, 3, 4][rng.below(3)];
+        let geom = KvGeom { layers: 2, heads: 3, head_dim: 4, page };
+        let hd = geom.head_dim;
+        let pool = KvPagePool::new(geom, None, true);
+        let pfx_pages = 1 + rng.below(3);
+        let len = page * pfx_pages;
+        let tokens: Vec<u32> = (0..len).map(|j| ((case * 29 + j * 13 + 3) % 64) as u32).collect();
+
+        let mut donor = KvCache::new(pool.clone());
+        donor.ensure(len).unwrap();
+        for pos in 0..len {
+            for l in 0..geom.layers {
+                for h in 0..geom.heads {
+                    let base = (l * 997 + h * 131 + pos * 17 + case) as f32;
+                    let k: Vec<f32> = (0..hd).map(|d| base + d as f32).collect();
+                    let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                    donor.write_pos(l, h, pos, &k, &v);
+                }
+            }
+        }
+        donor.len = len;
+        donor.register_prefix(&tokens);
+
+        let mut follower = KvCache::new(pool.clone());
+        assert_eq!(follower.attach_prefix(&tokens), pfx_pages, "case {case}");
+        assert_eq!(pool.pages_in_use(), pfx_pages, "case {case}: attach must not allocate");
+        assert_eq!(pool.logical_pages(), 2 * pfx_pages, "case {case}");
+
+        let (pi, l, h) = (rng.below(pfx_pages), rng.below(geom.layers), rng.below(geom.heads));
+        let donor_k = donor.k_head(l, h, pi).to_vec();
+        let donor_v = donor.v_head(l, h, pi).to_vec();
+        follower.make_private(pi).unwrap();
+        // the copy carries the donor's bits but lives elsewhere, and the
+        // swap is logical-neutral: one mapping moved, one page allocated
+        assert_eq!(follower.k_head(l, h, pi), &donor_k[..], "case {case}: copy must be faithful");
+        assert!(
+            !std::ptr::eq(donor.k_head(l, h, pi).as_ptr(), follower.k_head(l, h, pi).as_ptr()),
+            "case {case}: CoW copy aliases the shared page"
+        );
+        assert_eq!(pool.pages_in_use(), pfx_pages + 1, "case {case}");
+        assert_eq!(pool.logical_pages(), 2 * pfx_pages, "case {case}");
+        assert_eq!(pool.prefix_stats().cow_copies, 1, "case {case}");
+
+        // canary write into the copy; the donor must re-read unchanged
+        let canary: Vec<f32> = (0..hd).map(|d| 9e6 + (case * hd + d) as f32).collect();
+        let pos = pi * page + rng.below(page);
+        follower.write_pos(l, h, pos, &canary, &canary);
+        assert_eq!(donor.k_head(l, h, pi), &donor_k[..], "case {case}: donor K corrupted");
+        assert_eq!(donor.v_head(l, h, pi), &donor_v[..], "case {case}: donor V corrupted");
+        assert_ne!(follower.k_head(l, h, pi), &donor_k[..], "case {case}: canary not written");
+
+        // either drop order must return every page and mapping
+        if rng.below(2) == 0 {
+            // the donor's CoW-replaced original frees with it; the pages
+            // the follower still shares (plus its copy) stay resident
+            drop(donor);
+            assert_eq!(pool.pages_in_use(), pfx_pages, "case {case}: follower still maps");
+            drop(follower);
+        } else {
+            drop(follower);
+            assert_eq!(pool.pages_in_use(), pfx_pages, "case {case}: donor still maps");
+            drop(donor);
+        }
+        assert_eq!(
+            (pool.pages_in_use(), pool.logical_pages()),
+            (0, 0),
+            "case {case}: pool must drain to zero pages and zero mappings"
         );
     }
 }

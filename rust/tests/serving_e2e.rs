@@ -9,7 +9,7 @@ use std::time::Duration;
 use blast::coordinator::{BatcherConfig, Coordinator, Request};
 use blast::model::config::{ModelKind, NativeConfig};
 use blast::model::engine::{Engine, MlpMode};
-use blast::model::kv::KvOptions;
+use blast::model::kv::{KvOptions, PrefixStats};
 use blast::model::params::ParamStore;
 use blast::sparse::BlockMask;
 use blast::tensor::Tensor;
@@ -237,7 +237,7 @@ fn paged_and_flat_serving_agree_token_for_token() {
                 &p,
                 &m,
                 MlpMode::Sparse,
-                KvOptions { page, pool_pages: None },
+                KvOptions { page, pool_pages: None, prefix_cache: true },
             )
             .unwrap(),
         );
@@ -278,6 +278,134 @@ fn paged_and_flat_serving_agree_token_for_token() {
     );
 }
 
+/// The `--prefix-cache` service-level guarantee: the same shared-prefix
+/// load serves bitwise-identical token streams with sharing on and off.
+/// On the sharing engine the prefix index must actually engage (≥ 1 hit);
+/// on the off engine every sharing counter must stay zero — it *is* the
+/// unshared pool, not a sharing pool that happens not to share.
+#[test]
+fn prefix_cache_on_and_off_serve_identical_streams() {
+    let c = cfg();
+    let p = params(&c, 21);
+    let m = masks(&c, 0.5, 22);
+    let prefix: Vec<u32> = (0..8).map(|j| ((j * 3 + 2) % 64) as u32).collect();
+    let mut answers: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for prefix_cache in [true, false] {
+        let engine = Arc::new(
+            Engine::new_with_kv(
+                c.clone(),
+                &p,
+                &m,
+                MlpMode::Sparse,
+                KvOptions { page: 4, pool_pages: None, prefix_cache },
+            )
+            .unwrap(),
+        );
+        let pool = engine.kv_pool().clone();
+        let mut coord = Coordinator::start(
+            engine,
+            BatcherConfig {
+                max_batch: 3,
+                max_queue: 32,
+                ..BatcherConfig::default()
+            },
+        );
+        for i in 0..6u64 {
+            let mut prompt = prefix.clone();
+            prompt.extend((0..i % 3).map(|j| ((i * 11 + j * 5 + 1) % 64) as u32));
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt,
+                    max_new: 2 + (i as usize % 4),
+                    eos: None,
+                    ..Default::default()
+                })
+                .unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            let done = coord.next_completion(Duration::from_secs(60)).ready().unwrap();
+            assert!(done.error.is_none(), "{:?}", done.error);
+            got.push((done.id, done.tokens));
+        }
+        got.sort_by_key(|(id, _)| *id);
+        coord.stop();
+        let stats = pool.prefix_stats();
+        if prefix_cache {
+            assert!(stats.hits >= 1, "prefix sharing never engaged: {stats:?}");
+        } else {
+            assert_eq!(stats, PrefixStats::default(), "sharing-off pool must stay inert");
+        }
+        assert_eq!((pool.pages_in_use(), pool.logical_pages()), (0, 0));
+        answers.push(got);
+    }
+    assert_eq!(
+        answers[0], answers[1],
+        "prefix sharing must not change a single served token"
+    );
+}
+
+/// Sharing raises effective capacity: five sessions over one hot prefix
+/// run through a pool that could never hold five *unshared* sessions
+/// concurrently (5 × 4 pages = 20 > 10). With CoW sharing the prefix is
+/// resident once (2 pages) and each session adds only its private tail,
+/// so the whole load completes in full — and the prefix stats prove every
+/// follower mapped the donor's pages instead of recomputing them.
+#[test]
+fn shared_prefix_load_outgrows_unshared_pool_capacity() {
+    let c = cfg();
+    let engine = Arc::new(
+        Engine::new_with_kv(
+            c.clone(),
+            &params(&c, 31),
+            &masks(&c, 0.5, 32),
+            MlpMode::Sparse,
+            KvOptions { page: 4, pool_pages: Some(10), prefix_cache: true },
+        )
+        .unwrap(),
+    );
+    let pool = engine.kv_pool().clone();
+    let mut coord = Coordinator::start(
+        engine,
+        BatcherConfig {
+            max_batch: 4,
+            max_queue: 16,
+            ..BatcherConfig::default()
+        },
+    );
+    let prefix: Vec<u32> = (0..8).map(|j| ((j * 5 + 3) % 64) as u32).collect();
+    let n = 5u64;
+    for i in 0..n {
+        let mut prompt = prefix.clone();
+        prompt.extend([(20 + 2 * i) as u32, (21 + 2 * i) as u32]); // distinct 2-token tails
+        coord
+            .submit(Request {
+                id: i,
+                prompt,
+                max_new: 4,
+                eos: None,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..n {
+        let done = coord.next_completion(Duration::from_secs(60)).ready().unwrap();
+        assert!(done.error.is_none(), "request {}: {:?}", done.id, done.error);
+        assert_eq!(done.tokens.len(), 4, "request {} was cut short", done.id);
+        assert!(seen.insert(done.id));
+    }
+    coord.stop();
+    let stats = pool.prefix_stats();
+    assert!(
+        stats.hits >= n - 1,
+        "every follower must map the shared prefix: {stats:?}"
+    );
+    assert!(stats.pages_shared >= 2 * (n - 1), "{stats:?}");
+    assert_eq!((pool.pages_in_use(), pool.logical_pages()), (0, 0));
+}
+
 /// A session whose pool runs dry mid-stream retires cleanly with the
 /// tokens it already produced — the coordinator's error-isolation path,
 /// not a panic and not a hang.
@@ -293,7 +421,7 @@ fn mid_stream_pool_exhaustion_retires_with_partial_output() {
             // 2 pages × 4 positions = 8 positions total; the admission
             // check (prompt 4 + 1 = 5 positions → 2 pages) passes, but the
             // 10-token decode budget cannot: the pool dries up at pos 8
-            KvOptions { page: 4, pool_pages: Some(2) },
+            KvOptions { page: 4, pool_pages: Some(2), prefix_cache: true },
         )
         .unwrap(),
     );
