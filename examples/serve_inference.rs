@@ -8,6 +8,7 @@
 //!          [--batched false]                      # sequential A/B baseline
 //!          [--kv-page 64] [--kv-pool-pages 0]     # KV paging (0 = unbounded)
 //!          [--prefix-cache false]                 # disable CoW prefix sharing
+//!          [--replicas 3]                         # replicated fleet tier
 //!          [--ckpt path.bin --config llama-sim]   # serve trained weights
 //!
 //! Batched decode rounds (one `(B × d_model)` GEMM/BSpMM per projection via
@@ -20,7 +21,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use blast::coordinator::{BatcherConfig, Coordinator, Request};
+use blast::coordinator::{BatcherConfig, Coordinator, Fleet, FleetConfig, Request};
 use blast::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
 use blast::model::config::NativeConfig;
 use blast::model::engine::{Engine, MlpMode};
@@ -68,26 +69,43 @@ fn main() -> Result<()> {
     };
     let masks = random_masks(&cfg, sparsity, 77);
 
+    // `--replicas R` (R > 1) serves each mode through the replicated fleet
+    // tier instead of a single coordinator — same tokens, plus placement
+    // spread, supervision and zero-downtime restarts
+    let replicas = args.get_usize("replicas", 1);
     for mode in [MlpMode::Dense, MlpMode::Sparse] {
         let engine = Arc::new(Engine::new_with_kv(cfg.clone(), &params, &masks, mode, kv)?);
         println!(
-            "\n=== mode {mode:?} ({}, kv-page {}) — MLP bytes resident {} KiB ===",
+            "\n=== mode {mode:?} ({}, kv-page {}, replicas {}) — MLP bytes resident {} KiB ===",
             if batched { "batched rounds" } else { "sequential rounds" },
             engine.kv_page(),
+            replicas.max(1),
             engine.mlp_weight_bytes() / 1024
         );
-        let mut coord = Coordinator::start(
-            engine,
-            BatcherConfig {
-                max_batch: args.get_usize("max-batch", 4),
-                max_queue: 64,
-                batched,
-                ..BatcherConfig::default()
-            },
-        );
+        let bcfg = BatcherConfig {
+            max_batch: args.get_usize("max-batch", 4),
+            max_queue: 64,
+            batched,
+            ..BatcherConfig::default()
+        };
+        let mut coord = None;
+        let mut fleet = None;
+        if replicas > 1 {
+            fleet = Some(Fleet::start(
+                &engine,
+                FleetConfig { replicas, batcher: bcfg, ..FleetConfig::default() },
+            ));
+        } else {
+            coord = Some(Coordinator::start(engine, bcfg));
+        }
+        let submit = |req: Request| match (&coord, &fleet) {
+            (Some(c), _) => c.submit(req),
+            (_, Some(f)) => f.submit(req),
+            _ => unreachable!(),
+        };
         let t0 = std::time::Instant::now();
         for i in 0..n_requests {
-            coord.submit(Request {
+            submit(Request {
                 id: i as u64,
                 prompt: (0..8 + i % 8)
                     .map(|j| ((i * 131 + j * 17) % cfg.vocab) as u32)
@@ -98,21 +116,33 @@ fn main() -> Result<()> {
             })?;
         }
         for _ in 0..n_requests {
-            let c = coord
-                .next_completion(Duration::from_secs(300))
-                .ready()
-                .expect("completion");
+            let c = match (&coord, &fleet) {
+                (Some(c), _) => c.next_completion(Duration::from_secs(300)),
+                (_, Some(f)) => f.next_completion(Duration::from_secs(300)),
+                _ => unreachable!(),
+            }
+            .ready()
+            .expect("completion");
             if let Some(e) = c.error {
                 println!("request {} error: {e}", c.id);
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        println!("{}", coord.metrics_summary());
+        match (&mut coord, &mut fleet) {
+            (Some(c), _) => {
+                println!("{}", c.metrics_summary());
+                c.stop();
+            }
+            (_, Some(f)) => {
+                println!("{}", f.metrics_summary());
+                f.stop();
+            }
+            _ => unreachable!(),
+        }
         println!(
             "wall {wall:.2}s → {:.1} generated tokens/s",
             (n_requests * max_new) as f64 / wall
         );
-        coord.stop();
     }
     println!("\ncompare the two blocks above: the sparse engine serves the same greedy tokens faster.");
     Ok(())

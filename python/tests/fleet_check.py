@@ -1,0 +1,412 @@
+"""Pure-python transliteration of PR 8's replicated serving fleet
+(rust/src/coordinator/fleet.rs, replica.rs, and the deterministic jitter
+plumbing in util/faults.rs + coordinator/server.rs).
+
+No Rust toolchain ships in this container, so the fleet's deterministic
+surfaces are pinned here against independent oracles:
+
+  1. the RNG substrate: splitmix64 (published reference vector) seeding
+     xoshiro256**, and the Lemire multiply-shift `below(n)` sampler;
+  2. seed derivations: `Faults::fork_rng` (armed and disabled forms,
+     salt-0 root-plan identity), per-site `stream_seed`, and the crc32
+     label hashing (== zlib.crc32, the equivalence the checkpoint check
+     already pins);
+  3. backoff schedules: the round-retry schedule `retry_backoff_us`
+     (exponential, capped shift, jitter < 200 us) and the replica restart
+     schedule `restart_backoff_ms` (base clamp, shift cap at 4, jitter in
+     [0, base)), both replaying bit-for-bit from their forked streams;
+  4. placement: `placement_mix` (splitmix64 finalizer, pinned values
+     including mix(0,0) == 0), and the `Placer` policy — least-loaded
+     among healthy non-draining replicas, seeded-hash tie-break, no
+     arrival consumed when nothing is eligible, pure replay of a recorded
+     view sequence, and the 1-replica identity path;
+  5. failover replay accounting: `prompt ++ emitted` budget conservation,
+     the survivor's admission charge `pages_for(len + 1)` equal to the
+     continuation the dead replica would have run (page-boundary fuzz),
+     and saturating deadline reduction;
+  6. drain/restart bookkeeping: a discrete-event simulation of the
+     router's rules (draining slots take no placements, acks fire only at
+     zero outstanding, cycled replicas rejoin, nothing is dropped) and
+     the heartbeat stall detector (a <= 20 ms idle bump cadence never
+     false-deposes at the 250 ms default; a frozen heartbeat always
+     does).
+
+Run: python3 python/tests/fleet_check.py   (prints ALL OK on success)
+"""
+
+import zlib
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+checks = []
+
+
+def check(name, ok):
+    checks.append((name, bool(ok)))
+    print(("PASS" if ok else "FAIL"), name)
+    assert ok, name
+
+
+# ---------------------------------------------------------------------
+# 1. RNG substrate (util/rng.rs)
+# ---------------------------------------------------------------------
+
+def splitmix64_next(state):
+    state = (state + GOLDEN) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded through splitmix64 — util/rng.rs verbatim."""
+
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = splitmix64_next(s)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        assert n > 0
+        return (self.next_u64() * n) >> 64
+
+
+# the published splitmix64 reference vector for state 0
+_, first = splitmix64_next(0)
+check("splitmix64 reference vector: next(0) == 0xE220A8397B1DCDAF",
+      first == 0xE220A8397B1DCDAF)
+
+a, b = Rng(42), Rng(42)
+check("xoshiro256**: same seed, same stream",
+      [a.next_u64() for _ in range(8)] == [b.next_u64() for _ in range(8)])
+check("xoshiro256**: different seeds diverge",
+      Rng(1).next_u64() != Rng(2).next_u64())
+
+r = Rng(7)
+draws = [r.below(5) for _ in range(500)]
+check("below(n): always < n and every residue reachable",
+      all(0 <= d < 5 for d in draws) and set(draws) == set(range(5)))
+
+
+# ---------------------------------------------------------------------
+# 2. Seed derivations (util/faults.rs)
+# ---------------------------------------------------------------------
+
+def crc32(s):
+    return zlib.crc32(s.encode()) & 0xFFFFFFFF
+
+
+def fork_rng_seed(spec, label, salt, armed):
+    """Faults::fork_rng — the jitter stream every backoff draws from."""
+    l = crc32(label)
+    if not armed:
+        return (0xB0FF ^ l) & MASK
+    return (((crc32(spec) << 32) ^ l ^ ((salt * GOLDEN) & MASK)) ^ 0xB0FF) & MASK
+
+
+def stream_seed(seed, site, salt):
+    """SiteState::stream_seed — the per-site fault draw stream."""
+    return (seed ^ crc32(site) ^ ((salt * GOLDEN) & MASK)) & MASK
+
+
+SITES = [
+    "decode_round_panic", "decode_round_error", "prefill_error",
+    "kv_pool_exhausted", "decode_stall_ms", "ckpt_torn_write",
+    "scheduler_panic", "replica_crash", "replica_stall_ms",
+    "heartbeat_drop",
+]
+
+spec = "replica_crash:0.02:1,replica_stall_ms:0.05:1:60,heartbeat_drop:0.3:1"
+check("fork_rng: disabled form is 0xB0FF ^ crc32(label)",
+      fork_rng_seed("", "round_retry", 0, False) == 0xB0FF ^ crc32("round_retry"))
+check("fork_rng: salt 0 keeps the root-plan identity (no salt term)",
+      fork_rng_seed(spec, "round_retry", 0, True)
+      == ((crc32(spec) << 32) ^ crc32("round_retry") ^ 0xB0FF))
+check("fork_rng: labels separate streams",
+      fork_rng_seed(spec, "round_retry", 0, True)
+      != fork_rng_seed(spec, "replica_restart:0", 0, True))
+check("fork_rng: replica salts separate streams",
+      len({fork_rng_seed(spec, "replica_restart", s, True) for s in range(8)}) == 8)
+check("stream_seed: salt 0 is seed ^ crc32(site)",
+      all(stream_seed(9, s, 0) == 9 ^ crc32(s) for s in SITES))
+check("stream_seed: the 10 sites draw 10 distinct streams",
+      len({stream_seed(9, s, 0) for s in SITES}) == len(SITES))
+
+
+# ---------------------------------------------------------------------
+# 3. Backoff schedules (coordinator/server.rs, coordinator/fleet.rs)
+# ---------------------------------------------------------------------
+
+def retry_backoff_us(attempt, rng):
+    return (100 << min(attempt, 4)) + rng.below(200)
+
+
+def restart_backoff_ms(base, attempt, rng):
+    base = max(base, 1)
+    return (base << min(attempt, 4)) + rng.below(base)
+
+
+r = Rng(fork_rng_seed(spec, "round_retry", 0, True))
+sched = [retry_backoff_us(a, r) for a in range(1, 9)]
+bases = [100 << min(a, 4) for a in range(1, 9)]
+check("retry_backoff_us: exponential base, shift capped at 4, jitter < 200",
+      all(b <= v < b + 200 for b, v in zip(bases, sched))
+      and bases[3:] == [1600] * 5)
+r2 = Rng(fork_rng_seed(spec, "round_retry", 0, True))
+check("retry_backoff_us: schedule replays bit-for-bit from the spec",
+      sched == [retry_backoff_us(a, r2) for a in range(1, 9)])
+
+r = Rng(fork_rng_seed(spec, "replica_restart:0", 3, True))
+vals = [restart_backoff_ms(250, a, r) for a in range(8)]
+check("restart_backoff_ms: value in [base<<min(a,4), base<<min(a,4) + base)",
+      all((250 << min(a, 4)) <= v < (250 << min(a, 4)) + 250
+          for a, v in enumerate(vals)))
+check("restart_backoff_ms: shift cap — attempts 4.. share the 16x base",
+      all((250 << 4) <= v < (250 << 4) + 250 for v in vals[4:]))
+r2 = Rng(fork_rng_seed(spec, "replica_restart:0", 3, True))
+check("restart_backoff_ms: chaos restart schedule replays bit-for-bit",
+      vals == [restart_backoff_ms(250, a, r2) for a in range(8)])
+check("restart_backoff_ms: base clamp makes base=0 behave as base=1",
+      all((1 << min(a, 4)) <= restart_backoff_ms(0, a, Rng(a)) < (1 << min(a, 4)) + 1
+          for a in range(8)))
+
+
+# ---------------------------------------------------------------------
+# 4. Placement (coordinator/fleet.rs: placement_mix + Placer)
+# ---------------------------------------------------------------------
+
+def placement_mix(seed, arrival):
+    z = (seed ^ ((arrival * GOLDEN) & MASK)) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+class Placer:
+    """Least-loaded healthy non-draining, seeded-hash tie-break."""
+
+    def __init__(self, seed):
+        self.seed = seed
+        self.arrivals = 0
+
+    def place(self, views):
+        """views: list of (id, healthy, draining, load)."""
+        elig = [v for v in views if v[1] and not v[2]]
+        if not elig:
+            return None  # no arrival consumed
+        best = min(v[3] for v in elig)
+        ties = [v[0] for v in elig if v[3] == best]
+        arrival = self.arrivals
+        self.arrivals += 1
+        return arrival, ties[placement_mix(self.seed, arrival) % len(ties)]
+
+
+check("placement_mix(0, 0) == 0 (finalizer fixed point, pinned)",
+      placement_mix(0, 0) == 0)
+check("placement_mix(seed, 0) is the bare splitmix64 finalizer of seed",
+      placement_mix(0xDEAD, 0)
+      == (lambda z: (z ^ (z >> 31)))(
+          ((((0xDEAD ^ (0xDEAD >> 30)) * 0xBF58476D1CE4E5B9) & MASK) ^
+           (((((0xDEAD ^ (0xDEAD >> 30)) * 0xBF58476D1CE4E5B9) & MASK)) >> 27))
+          * 0x94D049BB133111EB & MASK))
+bitflips = [bin(placement_mix(3, a) ^ placement_mix(3, a + 1)).count("1")
+            for a in range(64)]
+check("placement_mix: consecutive arrivals decorrelate (avalanche > 16 bits avg)",
+      sum(bitflips) / len(bitflips) > 16)
+
+p = Placer(3)
+got = p.place([(0, True, False, 4), (1, True, False, 2), (2, False, False, 0),
+               (3, True, True, 0)])
+check("placer: least-loaded among eligible (unhealthy + draining skipped)",
+      got == (0, 1))
+check("placer: no eligible replica consumes no arrival",
+      Placer(3).place([(0, False, False, 0), (1, True, True, 0)]) is None)
+p = Placer(5)
+before = p.arrivals
+p.place([(0, False, False, 0)])
+check("placer: arrivals counter untouched on a failed placement",
+      p.arrivals == before)
+
+p = Placer(1)
+picks = {p.place([(0, True, False, 0), (1, True, False, 0),
+                  (2, True, False, 0)])[1] for _ in range(32)}
+check("placer: 3-way ties rotate across all replicas (no starvation)",
+      picks == {0, 1, 2})
+
+# purity oracle: replay a recorded (views, chosen) log through a fresh
+# placer — the fleet's PlacedEvent invariant
+log = []
+p = Placer(11)
+rng = Rng(99)
+loads = [0, 0, 0]
+for i in range(40):
+    views = [(j, rng.below(10) > 0, rng.below(10) == 0, loads[j])
+             for j in range(3)]
+    got = p.place(views)
+    if got is None:
+        continue
+    arrival, chosen = got
+    log.append((arrival, views, chosen))
+    loads[chosen] += 1
+    if rng.below(3) == 0 and loads[chosen] > 0:
+        loads[chosen] -= 1
+replay = Placer(11)
+check("placer: a recorded decision log replays bit-for-bit (purity)",
+      all(replay.place(v) == (a, c) for a, v, c in log) and len(log) > 10)
+check("placer: one-replica fleet is the identity path (always slot 0)",
+      all(Placer(s).place([(0, True, False, l)]) == (0, 0)
+          for s in range(5) for l in range(3)))
+
+
+# ---------------------------------------------------------------------
+# 5. Failover replay accounting (fleet.rs replay_request + kv pages_for)
+# ---------------------------------------------------------------------
+
+def pages_for(positions, page):
+    return -(-positions // page)  # ceil-div, kv.rs KvGeom::pages_for
+
+
+def replay(prompt_len, emitted, max_new, deadline, elapsed):
+    """replay_request: prompt ++ emitted, budget and deadline reduced."""
+    new_len = prompt_len + len(emitted)
+    new_max = max(0, max_new - len(emitted))
+    new_deadline = None if deadline is None else max(0, deadline - elapsed)
+    return new_len, new_max, new_deadline
+
+
+check("pages_for: ceil-div identity on the boundary lattice",
+      all(pages_for(n, pg) == (n + pg - 1) // pg
+          for pg in (3, 4, 8, 64) for n in range(1, 200)))
+
+ok = True
+rng = Rng(4242)
+for _ in range(400):
+    page = [3, 4, 8, 16][rng.below(4)]
+    plen = 1 + rng.below(40)
+    max_new = 1 + rng.below(12)
+    e = rng.below(max_new)  # tokens emitted before the crash
+    emitted = list(range(e))
+    new_len, new_max, _ = replay(plen, emitted, max_new, None, 0)
+    # budget conservation: emitted + remaining == original
+    if e + new_max != max_new:
+        ok = False
+    # the survivor's admission charge equals the continuation the dead
+    # replica would have run: one decode step past prompt+emitted
+    if pages_for(new_len + 1, page) != pages_for(plen + e + 1, page):
+        ok = False
+    # and the dead incarnation frees at least that many pages minus the
+    # one growth page the next decode step may add
+    if pages_for(plen + e + 1, page) - pages_for(plen + e, page) not in (0, 1):
+        ok = False
+check("failover replay: budget conserved, survivor charge == continuation, "
+      "one growth page max (400-case fuzz)", ok)
+check("failover replay: deadline reduction saturates at 0, None passes through",
+      replay(4, [1, 2], 8, 100, 250)[2] == 0
+      and replay(4, [1, 2], 8, 100, 30)[2] == 70
+      and replay(4, [1, 2], 8, None, 30)[2] is None)
+check("failover replay: an exhausted budget means serve-from-emitted, not replay",
+      replay(4, [1, 2, 3], 3, None, 0)[1] == 0)
+
+
+# ---------------------------------------------------------------------
+# 6. Drain/restart bookkeeping + stall detection (router_loop rules)
+# ---------------------------------------------------------------------
+
+# discrete-event simulation of the router's drain ladder: submit work,
+# drain a slot mid-load, verify no placement lands on it, ack only at
+# zero outstanding, cycle it, verify it rejoins — and nothing is dropped
+placer = Placer(2)
+outstanding = {0: set(), 1: set(), 2: set()}
+draining = {0: False, 1: False, 2: False}
+drains = planned_restarts = 0
+completed = set()
+drain_acked_at = None
+events = []
+for step in range(60):
+    if step == 10:
+        draining[1] = True  # Fleet::drain(1) lands while slot 1 is busy
+        drains += 1
+    # replicas serve concurrently: each busy slot retires one session
+    # every other step; retirements start after the drain lands so the
+    # ack is gated on real in-flight work
+    if step % 2 == 1 and step > 10:
+        for s in outstanding:
+            if outstanding[s]:
+                completed.add(outstanding[s].pop())
+    if draining[1] and not outstanding[1] and drain_acked_at is None:
+        drain_acked_at = step  # ack fires only now
+        planned_restarts += 1  # restart_replica: cycle + rejoin
+        draining[1] = False
+    views = [(s, True, draining[s], len(outstanding[s])) for s in (0, 1, 2)]
+    got = placer.place(views)
+    if got is not None:
+        _, chosen = got
+        outstanding[chosen].add(("req", step))
+        events.append((step, chosen))
+while any(outstanding.values()):
+    loaded = max(outstanding, key=lambda s: len(outstanding[s]))
+    completed.add(outstanding[loaded].pop())
+
+placed_on_1_while_draining = [s for s, c in events
+                              if c == 1 and 10 <= s < drain_acked_at]
+check("drain: a draining slot receives zero placements", not placed_on_1_while_draining)
+check("drain: the ack fires only once outstanding hits zero",
+      drain_acked_at is not None and drain_acked_at > 10)
+check("drain: the cycled replica rejoins placement after its restart",
+      any(c == 1 and s >= drain_acked_at for s, c in events))
+check("drain: bookkeeping counts one drain and one planned restart, nothing dropped",
+      (drains, planned_restarts) == (1, 1) and len(completed) == len(events))
+
+# heartbeat stall ladder: the scheduler bumps every <= 20 ms when idle, so
+# the 250 ms default threshold can never false-depose; a frozen counter
+# always trips it within stall_ms + one poll tick
+def stall_detector(bumps_at, stall_ms, horizon_ms, tick_ms=2):
+    """bumps_at: sorted ms timestamps of heartbeat bumps; returns depose time."""
+    last_bump_seen, last_change = 0, 0
+    hb = 0
+    for now in range(0, horizon_ms, tick_ms):
+        while hb < len(bumps_at) and bumps_at[hb] <= now:
+            hb += 1
+        if hb != last_bump_seen:
+            last_bump_seen, last_change = hb, now
+        elif now - last_change > stall_ms:
+            return now
+    return None
+
+
+idle_bumps = list(range(0, 2000, 20))  # worst-case idle cadence
+check("stall detector: a live idle scheduler (20 ms bumps) never trips 250 ms",
+      stall_detector(idle_bumps, 250, 2000) is None)
+frozen = list(range(0, 500, 5))  # healthy, then frozen after t=495
+t = stall_detector(frozen, 250, 2000)
+check("stall detector: a frozen heartbeat deposes within stall_ms + two ticks",
+      t is not None and 495 + 250 < t <= 495 + 250 + 4)
+check("stall detector: heartbeat_drop noise (one skipped bump) stays below 250 ms",
+      stall_detector([b for b in idle_bumps if b != 200], 250, 2000) is None)
+
+
+# ---------------------------------------------------------------------
+
+failed = [n for n, ok in checks if not ok]
+assert not failed, failed
+print(f"ALL OK ({len(checks)} checks)")

@@ -1,0 +1,1277 @@
+//! Replicated serving fleet (L4): a front-end router that owns global
+//! admission and places sessions across N supervised [`Replica`]s.
+//!
+//! The fleet is the outermost failure domain, above the coordinator's
+//! round → session → scheduler ladder. Its router thread:
+//!
+//! * **places** each request on the least-loaded healthy, non-draining
+//!   replica ([`Placer`] — a pure function of the fleet seed and arrival
+//!   order, with a seeded hash breaking load ties, so placement replays
+//!   bit-for-bit and is pinned by `fleet_check.py`);
+//! * **detects** crashed replicas (completion channel disconnects after
+//!   the watchdog drains) and stalled ones (the scheduler heartbeat stops
+//!   advancing past [`FleetConfig::stall_ms`]) and deposes them with a
+//!   non-joining stop — a stalled scheduler must never block the router;
+//! * **fails over** in-flight sessions: greedy decode is deterministic,
+//!   so replaying `prompt ++ already-emitted-tokens` as a fresh prompt on
+//!   a survivor (with the decode budget reduced by what was already
+//!   emitted) continues the stream **bitwise-identically** — prefill
+//!   pushes the argmax as the first output token, i.e. exactly the token
+//!   the dead replica would have produced next;
+//! * **restarts** dead replicas after a jittered, bounded exponential
+//!   backoff ([`restart_backoff_ms`], jitter from the fault-plan-forked
+//!   RNG so chaos schedules replay). A replica that exhausts
+//!   [`FleetConfig::max_restarts`] is marked Lost and never placed again;
+//! * **drains** on request ([`Fleet::drain`]): the replica stops taking
+//!   placements, finishes its in-flight sessions, then acks — which is
+//!   what makes [`Fleet::rolling_restart`] drop zero requests.
+//!
+//! Every request submitted to the fleet is answered **exactly once**: by
+//! a success, by a terminal error, or — at shutdown — by a synthetic
+//! "fleet stopped" error. Duplicated work from a deposed-but-live replica
+//! is fenced at the router: a completion whose id is not in that
+//! replica's outstanding set is counted stale and dropped.
+//!
+//! A one-replica fleet is byte-identical to a bare
+//! [`Coordinator`]: replica 0's first incarnation forks the fault plan
+//! with salt 0 (the root plan), placement is a no-op, and completions
+//! pass through verbatim.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::replica::Replica;
+use crate::coordinator::router::{BatcherConfig, Request};
+use crate::coordinator::server::{Completion, CompletionWait, Coordinator, HealthState};
+use crate::model::engine::Engine;
+use crate::model::kv::KvPagePool;
+use crate::util::faults::Faults;
+use crate::util::rng::Rng;
+
+/// Fleet shape and supervision knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Number of replicas (clamped to >= 1).
+    pub replicas: usize,
+    /// Per-replica scheduler configuration.
+    pub batcher: BatcherConfig,
+    /// Placement seed: with the arrival order, fully determines which
+    /// replica every session lands on.
+    pub seed: u64,
+    /// Depose a replica whose scheduler heartbeat has not advanced for
+    /// this long. Must sit well above both the idle poll period (20 ms)
+    /// and a decode round, and below the latency budget of failover.
+    pub stall_ms: u64,
+    /// Base of the jittered exponential restart backoff, in milliseconds.
+    pub restart_backoff_ms: u64,
+    /// A replica restarted this many times is marked Lost for good.
+    pub max_restarts: u64,
+    /// A request failed over this many times is answered with its last
+    /// error instead of being replayed again.
+    pub max_failovers: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 1,
+            batcher: BatcherConfig::default(),
+            seed: 0,
+            stall_ms: 250,
+            restart_backoff_ms: 5,
+            max_restarts: 8,
+            max_failovers: 4,
+        }
+    }
+}
+
+/// What the placer sees of one replica at placement time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicaView {
+    /// Fixed fleet slot.
+    pub id: usize,
+    /// Up and reporting [`HealthState::Healthy`] (Degraded replicas shed
+    /// at their own admission gate; the fleet routes around them).
+    pub healthy: bool,
+    /// Draining: finishes in-flight work, receives no new placements.
+    pub draining: bool,
+    /// Sessions currently outstanding on this replica.
+    pub load: usize,
+}
+
+/// One placement decision, recorded for the purity oracle: replaying the
+/// event's `views` through a fresh [`Placer`] must re-derive `chosen`.
+#[derive(Clone, Debug)]
+pub struct PlacedEvent {
+    /// Arrival index consumed by this decision.
+    pub arrival: u64,
+    /// Request placed.
+    pub id: u64,
+    /// Fleet snapshot the decision was made against.
+    pub views: Vec<ReplicaView>,
+    /// Replica chosen.
+    pub chosen: usize,
+}
+
+/// splitmix64 finalizer over `(seed, arrival)` — the tie-break hash.
+/// Pinned (and transliterated in `fleet_check.py`): do not change.
+pub fn placement_mix(seed: u64, arrival: u64) -> u64 {
+    let mut z = seed ^ arrival.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Jittered exponential backoff before restart `attempt` (0-based), in
+/// milliseconds. Pinned by `fleet_check.py` — the jitter RNG is forked
+/// from the fault plan so chaos restart schedules replay bit-for-bit.
+pub fn restart_backoff_ms(base: u64, attempt: u64, rng: &mut Rng) -> u64 {
+    let base = base.max(1);
+    (base << attempt.min(4)) + rng.below(base as usize) as u64
+}
+
+/// Pure placement policy: least-loaded among healthy, non-draining
+/// replicas, ties broken by [`placement_mix`] over the arrival index.
+/// Given the same seed and the same sequence of view snapshots, a
+/// `Placer` makes the same decisions — no wall clock, no thread state.
+pub struct Placer {
+    seed: u64,
+    arrivals: u64,
+}
+
+impl Placer {
+    /// A placer for one fleet lifetime.
+    pub fn new(seed: u64) -> Placer {
+        Placer { seed, arrivals: 0 }
+    }
+
+    /// Arrival indices consumed so far.
+    pub fn arrivals(&self) -> u64 {
+        self.arrivals
+    }
+
+    /// Choose a replica, or `None` when no replica is eligible — in which
+    /// case **no arrival index is consumed** (the decision never
+    /// happened; the caller requeues and retries later).
+    pub fn place(&mut self, views: &[ReplicaView]) -> Option<(u64, usize)> {
+        let best = views
+            .iter()
+            .filter(|v| v.healthy && !v.draining)
+            .map(|v| v.load)
+            .min()?;
+        let ties: Vec<usize> = views
+            .iter()
+            .filter(|v| v.healthy && !v.draining && v.load == best)
+            .map(|v| v.id)
+            .collect();
+        let arrival = self.arrivals;
+        self.arrivals += 1;
+        let pick = (placement_mix(self.seed, arrival) % ties.len() as u64) as usize;
+        Some((arrival, ties[pick]))
+    }
+}
+
+/// Router-level counters, aggregated across replicas and incarnations.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    /// Placement decisions that reached a replica's queue.
+    pub placed: u64,
+    /// Sessions replayed onto a survivor after their replica failed.
+    pub failovers: u64,
+    /// Replica restarts, crash-driven and planned together.
+    pub restarts: u64,
+    /// Restarts that were graceful (drain → stop → fresh incarnation).
+    pub planned_restarts: u64,
+    /// Deposals triggered by a frozen heartbeat.
+    pub deposed_stalls: u64,
+    /// Deposals triggered by a disconnected completion channel.
+    pub replica_deaths: u64,
+    /// Drain requests honoured.
+    pub drains: u64,
+    /// Requests answered with a terminal error.
+    pub failed: u64,
+    /// Completions fenced off because their replica had been deposed.
+    pub stale_completions: u64,
+    /// Replicas abandoned after exhausting their restart budget.
+    pub replicas_lost: u64,
+    /// Placement event log (the purity oracle's input).
+    pub events: Vec<PlacedEvent>,
+}
+
+impl FleetMetrics {
+    /// One-line counter digest (timing-independent).
+    pub fn summary(&self) -> String {
+        format!(
+            "placed={} failovers={} restarts={} (planned {}) stalls={} deaths={} \
+             drains={} lost={} failed={} stale={}",
+            self.placed,
+            self.failovers,
+            self.restarts,
+            self.planned_restarts,
+            self.deposed_stalls,
+            self.replica_deaths,
+            self.drains,
+            self.replicas_lost,
+            self.failed,
+            self.stale_completions,
+        )
+    }
+}
+
+/// Externally visible state of one replica slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaStatus {
+    /// Up and taking placements.
+    Healthy,
+    /// Up but shedding at its own admission gate; not placed on.
+    Degraded,
+    /// Finishing in-flight work; not placed on.
+    Draining,
+    /// Deposed, waiting out its restart backoff.
+    Down,
+    /// Restart budget exhausted; never coming back.
+    Lost,
+}
+
+enum FleetMsg {
+    Submit(Request),
+    Drain(usize, Sender<()>),
+    Restart(usize, Sender<()>),
+    Stop,
+}
+
+/// Handle to a running fleet: submit requests, receive completions,
+/// drain/restart replicas, read metrics. Mirrors the [`Coordinator`]
+/// surface so `--replicas 1` is a drop-in.
+pub struct Fleet {
+    cmd_tx: Option<Sender<FleetMsg>>,
+    done_rx: Receiver<Completion>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Mutex<FleetMetrics>>,
+    statuses: Arc<Mutex<Vec<ReplicaStatus>>>,
+    serve_handles: Arc<Mutex<Vec<Arc<Mutex<ServeMetrics>>>>>,
+    pools: Arc<Mutex<Vec<Arc<KvPagePool>>>>,
+    replicas: usize,
+}
+
+fn flock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Fleet {
+    /// Start a fleet over forks of `base` (no fault injection).
+    pub fn start(base: &Engine, cfg: FleetConfig) -> Fleet {
+        Fleet::start_with_faults(base, cfg, Faults::disabled())
+    }
+
+    /// Start a fleet with a fault plan armed. Each replica incarnation
+    /// forks the plan with its own salt, so every scheduler draws
+    /// deterministic, independent fault streams.
+    pub fn start_with_faults(base: &Engine, cfg: FleetConfig, faults: Faults) -> Fleet {
+        let n = cfg.replicas.max(1);
+        let mut slots = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        let mut pools = Vec::with_capacity(n);
+        for id in 0..n {
+            let rep = Replica::start(id, base, cfg.batcher, faults.clone());
+            handles.push(rep.coord().metrics_arc());
+            pools.push(rep.pool());
+            slots.push(Slot::new(rep));
+        }
+        let (cmd_tx, cmd_rx) = mpsc::channel::<FleetMsg>();
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let metrics = Arc::new(Mutex::new(FleetMetrics::default()));
+        let statuses = Arc::new(Mutex::new(vec![ReplicaStatus::Healthy; n]));
+        let serve_handles = Arc::new(Mutex::new(handles));
+        let pools = Arc::new(Mutex::new(pools));
+        let m2 = metrics.clone();
+        let st2 = statuses.clone();
+        let h2 = serve_handles.clone();
+        let p2 = pools.clone();
+        let worker = std::thread::spawn(move || {
+            router_loop(slots, cmd_rx, done_tx, cfg, faults, m2, st2, h2, p2);
+        });
+        Fleet {
+            cmd_tx: Some(cmd_tx),
+            done_rx,
+            worker: Some(worker),
+            metrics,
+            statuses,
+            serve_handles,
+            pools,
+            replicas: n,
+        }
+    }
+
+    fn send(&self, msg: FleetMsg) -> Result<()> {
+        match &self.cmd_tx {
+            Some(tx) => tx.send(msg).map_err(|_| anyhow::anyhow!("fleet stopped")),
+            None => anyhow::bail!("fleet stopped"),
+        }
+    }
+
+    /// Submit a request; the router tracks it until it is answered
+    /// exactly once on the completion stream.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.send(FleetMsg::Submit(req))
+    }
+
+    /// Wait for the next completion (same semantics as
+    /// [`Coordinator::next_completion`]).
+    pub fn next_completion(&self, timeout: Duration) -> CompletionWait {
+        match self.done_rx.recv_timeout(timeout) {
+            Ok(c) => CompletionWait::Ready(c),
+            Err(RecvTimeoutError::Timeout) => CompletionWait::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => CompletionWait::Disconnected,
+        }
+    }
+
+    /// Drain replica `r`: stop placing on it, block until its in-flight
+    /// sessions have all completed. The replica stays draining (use
+    /// [`Fleet::restart_replica`] to cycle it back in).
+    pub fn drain(&self, r: usize) -> Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.send(FleetMsg::Drain(r, ack_tx))?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("drain of replica {r} never acknowledged"))
+    }
+
+    /// Gracefully cycle replica `r`: drain it, stop its scheduler, bring
+    /// up a fresh incarnation, resume placements. Blocks until done; no
+    /// request is dropped at any point.
+    pub fn restart_replica(&self, r: usize) -> Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.send(FleetMsg::Restart(r, ack_tx))?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("restart of replica {r} never acknowledged"))
+    }
+
+    /// Restart every replica in turn — a zero-downtime rolling restart
+    /// (each replica drains before it cycles; the rest keep serving).
+    pub fn rolling_restart(&self) -> Result<()> {
+        for r in 0..self.replicas {
+            self.restart_replica(r)?;
+        }
+        Ok(())
+    }
+
+    /// Current status of every replica slot.
+    pub fn statuses(&self) -> Vec<ReplicaStatus> {
+        flock(&self.statuses).clone()
+    }
+
+    /// Snapshot of the router counters and placement event log.
+    pub fn metrics(&self) -> FleetMetrics {
+        flock(&self.metrics).clone()
+    }
+
+    /// Every KV pool the fleet has ever built — one per replica
+    /// incarnation. After [`Fleet::stop`] all of them must be fully
+    /// drained; the chaos harness asserts exactly that.
+    pub fn pools(&self) -> Vec<Arc<KvPagePool>> {
+        flock(&self.pools).clone()
+    }
+
+    /// Timing-independent per-replica counter digests (current
+    /// incarnations, in slot order).
+    pub fn replica_digests(&self) -> Vec<String> {
+        flock(&self.serve_handles)
+            .iter()
+            .map(|h| flock(h).invariant_digest())
+            .collect()
+    }
+
+    /// Human-readable fleet summary. A one-replica fleet that never saw a
+    /// fleet-level event reports its replica's serving summary verbatim —
+    /// byte-identical to running the bare coordinator.
+    pub fn metrics_summary(&self) -> String {
+        let fm = flock(&self.metrics).clone();
+        let handles = flock(&self.serve_handles).clone();
+        let quiet = fm.failovers == 0
+            && fm.restarts == 0
+            && fm.deposed_stalls == 0
+            && fm.replica_deaths == 0
+            && fm.drains == 0
+            && fm.replicas_lost == 0
+            && fm.stale_completions == 0;
+        if self.replicas == 1 && quiet {
+            return flock(&handles[0]).summary();
+        }
+        let mut out = format!("fleet replicas={} {}", self.replicas, fm.summary());
+        for (r, h) in handles.iter().enumerate() {
+            out.push_str(&format!("\n  replica {r}: {}", flock(h).summary()));
+        }
+        out
+    }
+
+    /// Stop the fleet: every replica stops, every tracked request is
+    /// answered (with an error if it could not finish), the completion
+    /// stream drains then disconnects.
+    pub fn stop(&mut self) {
+        if let Some(tx) = self.cmd_tx.take() {
+            tx.send(FleetMsg::Stop).ok();
+        }
+        if let Some(h) = self.worker.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Errors worth replaying on a survivor: the replica failed, not the
+/// request. Deadline misses, pool-capacity refusals and duplicate ids
+/// would fail identically anywhere — those stay terminal.
+fn failover_eligible(err: &str) -> bool {
+    err.contains("scheduler thread panicked")
+        || err.contains("coordinator stopped")
+        || err.contains("shedding load")
+        || err.contains("session panicked")
+        || err.contains("replica deposed")
+}
+
+struct Slot {
+    rep: Replica,
+    outstanding: HashSet<u64>,
+    draining: bool,
+    drain_acks: Vec<Sender<()>>,
+    restart_ack: Option<Sender<()>>,
+    hb_last: u64,
+    hb_at: Instant,
+    down_until: Option<Instant>,
+    lost: bool,
+}
+
+impl Slot {
+    fn new(rep: Replica) -> Slot {
+        Slot {
+            rep,
+            outstanding: HashSet::new(),
+            draining: false,
+            drain_acks: Vec::new(),
+            restart_ack: None,
+            hb_last: 0,
+            hb_at: Instant::now(),
+            down_until: None,
+            lost: false,
+        }
+    }
+
+    fn up(&self) -> bool {
+        !self.lost && self.down_until.is_none()
+    }
+
+    fn view(&self) -> ReplicaView {
+        ReplicaView {
+            id: self.rep.id(),
+            healthy: self.up() && self.rep.health() == HealthState::Healthy,
+            draining: self.draining,
+            load: self.outstanding.len(),
+        }
+    }
+
+    fn status(&self) -> ReplicaStatus {
+        if self.lost {
+            ReplicaStatus::Lost
+        } else if self.down_until.is_some() {
+            ReplicaStatus::Down
+        } else if self.draining {
+            ReplicaStatus::Draining
+        } else {
+            match self.rep.health() {
+                HealthState::Healthy => ReplicaStatus::Healthy,
+                HealthState::Degraded => ReplicaStatus::Degraded,
+                // the scheduler has exited; the next poll deposes it
+                HealthState::Draining => ReplicaStatus::Down,
+            }
+        }
+    }
+}
+
+struct Tracked {
+    req: Request,
+    emitted: Vec<u32>,
+    failovers: usize,
+    submitted: Instant,
+}
+
+/// The replayed request for a failed-over session: original prompt plus
+/// everything already emitted, decode budget and deadline reduced by what
+/// has already happened. Greedy determinism makes the survivor's first
+/// prefill argmax exactly the token the dead replica would have produced.
+fn replay_request(t: &Tracked) -> Request {
+    let mut prompt = t.req.prompt.clone();
+    prompt.extend_from_slice(&t.emitted);
+    Request {
+        id: t.req.id,
+        prompt,
+        max_new: t.req.max_new.saturating_sub(t.emitted.len()),
+        eos: t.req.eos,
+        deadline_ms: t
+            .req
+            .deadline_ms
+            .map(|d| d.saturating_sub(t.submitted.elapsed().as_millis() as u64)),
+    }
+}
+
+fn error_completion(id: u64, tokens: Vec<u32>, err: String) -> Completion {
+    Completion {
+        id,
+        tokens,
+        queue_secs: 0.0,
+        ttft_secs: 0.0,
+        e2e_secs: 0.0,
+        error: Some(err),
+    }
+}
+
+/// A replica failed a request for a replica-shaped reason: absorb any
+/// partial tokens it produced, then either finish the request from what
+/// has been emitted (budget or eos already reached), answer terminally
+/// (failover budget exhausted), or queue it for replacement.
+#[allow(clippy::too_many_arguments)]
+fn route_failover(
+    id: u64,
+    extra: &[u32],
+    err: &str,
+    tracked: &mut HashMap<u64, Tracked>,
+    place_queue: &mut VecDeque<u64>,
+    done_tx: &Sender<Completion>,
+    metrics: &Mutex<FleetMetrics>,
+    max_failovers: usize,
+) {
+    let Some(t) = tracked.get_mut(&id) else { return };
+    t.emitted.extend_from_slice(extra);
+    let finished = t.emitted.len() >= t.req.max_new
+        || t.req.eos.is_some_and(|e| t.emitted.last() == Some(&e));
+    if finished {
+        let t = tracked.remove(&id).unwrap();
+        done_tx
+            .send(Completion {
+                id,
+                tokens: t.emitted,
+                queue_secs: 0.0,
+                ttft_secs: 0.0,
+                e2e_secs: t.submitted.elapsed().as_secs_f64(),
+                error: None,
+            })
+            .ok();
+        return;
+    }
+    if t.failovers >= max_failovers {
+        let t = tracked.remove(&id).unwrap();
+        flock(metrics).failed += 1;
+        done_tx
+            .send(error_completion(
+                id,
+                t.emitted,
+                format!("request {id} exhausted failovers: {err}"),
+            ))
+            .ok();
+        return;
+    }
+    t.failovers += 1;
+    flock(metrics).failovers += 1;
+    place_queue.push_back(id);
+}
+
+/// Depose one replica: stop it without joining, fail its outstanding
+/// sessions over, schedule a backed-off restart.
+#[allow(clippy::too_many_arguments)]
+fn depose_slot(
+    slot: &mut Slot,
+    rng: &mut Rng,
+    now: Instant,
+    cfg: &FleetConfig,
+    tracked: &mut HashMap<u64, Tracked>,
+    place_queue: &mut VecDeque<u64>,
+    done_tx: &Sender<Completion>,
+    metrics: &Mutex<FleetMetrics>,
+) {
+    slot.rep.coord().request_stop();
+    let mut ids: Vec<u64> = slot.outstanding.drain().collect();
+    ids.sort_unstable();
+    for id in ids {
+        route_failover(
+            id,
+            &[],
+            "replica deposed",
+            tracked,
+            place_queue,
+            done_tx,
+            metrics,
+            cfg.max_failovers,
+        );
+    }
+    let delay = restart_backoff_ms(cfg.restart_backoff_ms, slot.rep.restarts(), rng);
+    slot.down_until = Some(now + Duration::from_millis(delay));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn router_loop(
+    mut slots: Vec<Slot>,
+    cmd_rx: Receiver<FleetMsg>,
+    done_tx: Sender<Completion>,
+    cfg: FleetConfig,
+    faults: Faults,
+    metrics: Arc<Mutex<FleetMetrics>>,
+    statuses: Arc<Mutex<Vec<ReplicaStatus>>>,
+    serve_handles: Arc<Mutex<Vec<Arc<Mutex<ServeMetrics>>>>>,
+    pools: Arc<Mutex<Vec<Arc<KvPagePool>>>>,
+) {
+    let mut tracked: HashMap<u64, Tracked> = HashMap::new();
+    let mut place_queue: VecDeque<u64> = VecDeque::new();
+    let mut placer = Placer::new(cfg.seed);
+    // deposed coordinators whose schedulers may still be mid-stall; their
+    // joins are deferred to shutdown so the router never blocks on them
+    let mut graveyard: Vec<Coordinator> = Vec::new();
+    let mut backoff_rngs: Vec<Rng> = (0..slots.len())
+        .map(|r| faults.fork_rng(&format!("replica_restart:{r}")))
+        .collect();
+    let stall = Duration::from_millis(cfg.stall_ms.max(1));
+    let mut stopping = false;
+
+    'router: loop {
+        // -- commands ---------------------------------------------------
+        let busy = !tracked.is_empty()
+            || slots.iter().any(|s| {
+                s.down_until.is_some() || s.restart_ack.is_some() || !s.drain_acks.is_empty()
+            });
+        let tick = if busy {
+            Duration::from_micros(200)
+        } else {
+            Duration::from_millis(2)
+        };
+        let first = match cmd_rx.recv_timeout(tick) {
+            Ok(msg) => Some(msg),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                stopping = true;
+                None
+            }
+        };
+        for msg in first.into_iter().chain(std::iter::from_fn(|| cmd_rx.try_recv().ok())) {
+            match msg {
+                FleetMsg::Submit(req) => {
+                    let id = req.id;
+                    if tracked.contains_key(&id) {
+                        done_tx
+                            .send(error_completion(
+                                id,
+                                Vec::new(),
+                                format!("duplicate request id {id} still in flight"),
+                            ))
+                            .ok();
+                        continue;
+                    }
+                    tracked.insert(
+                        id,
+                        Tracked {
+                            req,
+                            emitted: Vec::new(),
+                            failovers: 0,
+                            submitted: Instant::now(),
+                        },
+                    );
+                    place_queue.push_back(id);
+                }
+                FleetMsg::Drain(r, ack) => {
+                    if r < slots.len() && !slots[r].lost {
+                        slots[r].draining = true;
+                        slots[r].drain_acks.push(ack);
+                        flock(&metrics).drains += 1;
+                    } // else: ack dropped -> caller sees an error
+                }
+                FleetMsg::Restart(r, ack) => {
+                    if r < slots.len() && !slots[r].lost {
+                        slots[r].draining = true;
+                        slots[r].restart_ack = Some(ack);
+                    }
+                }
+                FleetMsg::Stop => stopping = true,
+            }
+        }
+        if stopping {
+            break 'router;
+        }
+        let now = Instant::now();
+
+        // -- crash restarts due ------------------------------------------
+        for r in 0..slots.len() {
+            let due = slots[r].down_until.is_some_and(|t| now >= t);
+            if !due {
+                continue;
+            }
+            slots[r].down_until = None;
+            if slots[r].rep.restarts() >= cfg.max_restarts {
+                slots[r].lost = true;
+                flock(&metrics).replicas_lost += 1;
+                crate::log_warn!(
+                    "fleet",
+                    "replica {r} exhausted its restart budget; marking it lost"
+                );
+                continue;
+            }
+            let old = slots[r].rep.restart();
+            graveyard.push(old);
+            flock(&pools).push(slots[r].rep.pool());
+            flock(&serve_handles)[r] = slots[r].rep.coord().metrics_arc();
+            slots[r].hb_last = slots[r].rep.heartbeat();
+            slots[r].hb_at = now;
+            flock(&metrics).restarts += 1;
+        }
+
+        // -- planned (drain-gated) restarts ------------------------------
+        for r in 0..slots.len() {
+            if slots[r].restart_ack.is_none() || !slots[r].up() || !slots[r].outstanding.is_empty()
+            {
+                continue;
+            }
+            // idle and healthy: a joining stop is quick and drains nothing
+            slots[r].rep.coord_mut().stop();
+            drop(slots[r].rep.restart()); // old incarnation already joined
+            flock(&pools).push(slots[r].rep.pool());
+            flock(&serve_handles)[r] = slots[r].rep.coord().metrics_arc();
+            slots[r].hb_last = slots[r].rep.heartbeat();
+            slots[r].hb_at = now;
+            slots[r].draining = false;
+            {
+                let mut m = flock(&metrics);
+                m.restarts += 1;
+                m.planned_restarts += 1;
+            }
+            // publish the new status before the ack so a caller blocked on
+            // restart_replica() never reads the pre-restart state
+            flock(&statuses)[r] = slots[r].status();
+            if let Some(ack) = slots[r].restart_ack.take() {
+                ack.send(()).ok();
+            }
+        }
+
+        // -- place queued work -------------------------------------------
+        let mut requeue: VecDeque<u64> = VecDeque::new();
+        while let Some(id) = place_queue.pop_front() {
+            if !tracked.contains_key(&id) {
+                continue;
+            }
+            let views: Vec<ReplicaView> = slots.iter().map(Slot::view).collect();
+            let Some((arrival, chosen)) = placer.place(&views) else {
+                if slots.iter().all(|s| s.lost) {
+                    let t = tracked.remove(&id).unwrap();
+                    flock(&metrics).failed += 1;
+                    done_tx
+                        .send(error_completion(
+                            id,
+                            t.emitted,
+                            "all replicas lost; request abandoned".into(),
+                        ))
+                        .ok();
+                    continue;
+                }
+                // nothing eligible right now (restarting / draining /
+                // degraded): nothing else will place this tick either
+                requeue.push_back(id);
+                requeue.extend(place_queue.drain(..));
+                break;
+            };
+            flock(&metrics).events.push(PlacedEvent {
+                arrival,
+                id,
+                views,
+                chosen,
+            });
+            let rr = replay_request(&tracked[&id]);
+            match slots[chosen].rep.coord().submit(rr) {
+                Ok(()) => {
+                    slots[chosen].outstanding.insert(id);
+                    flock(&metrics).placed += 1;
+                }
+                Err(e) if e.to_string().contains("queue full") => {
+                    // backpressure: retry next tick (the arrival index is
+                    // spent; the event log records the refused attempt)
+                    requeue.push_back(id);
+                }
+                Err(_) => {
+                    // dead underneath us; depose now, requeue the request
+                    flock(&metrics).replica_deaths += 1;
+                    depose_slot(
+                        &mut slots[chosen],
+                        &mut backoff_rngs[chosen],
+                        now,
+                        &cfg,
+                        &mut tracked,
+                        &mut place_queue,
+                        &done_tx,
+                        &metrics,
+                    );
+                    requeue.push_back(id);
+                }
+            }
+        }
+        place_queue = requeue;
+
+        // -- poll completions; a disconnect is a dead replica ------------
+        let mut dead: Vec<usize> = Vec::new();
+        for r in 0..slots.len() {
+            if !slots[r].up() {
+                continue;
+            }
+            loop {
+                match slots[r].rep.coord().next_completion(Duration::ZERO) {
+                    CompletionWait::Ready(c) => {
+                        if !slots[r].outstanding.remove(&c.id) {
+                            // fencing: a deposed incarnation's duplicate
+                            flock(&metrics).stale_completions += 1;
+                            continue;
+                        }
+                        forward_completion(
+                            c,
+                            &mut tracked,
+                            &mut place_queue,
+                            &done_tx,
+                            &metrics,
+                            cfg.max_failovers,
+                            false,
+                        );
+                    }
+                    CompletionWait::TimedOut => break,
+                    CompletionWait::Disconnected => {
+                        dead.push(r);
+                        break;
+                    }
+                }
+            }
+        }
+        for r in dead {
+            flock(&metrics).replica_deaths += 1;
+            depose_slot(
+                &mut slots[r],
+                &mut backoff_rngs[r],
+                now,
+                &cfg,
+                &mut tracked,
+                &mut place_queue,
+                &done_tx,
+                &metrics,
+            );
+        }
+
+        // -- stall detection ---------------------------------------------
+        for r in 0..slots.len() {
+            if !slots[r].up() {
+                continue;
+            }
+            let hb = slots[r].rep.heartbeat();
+            if hb != slots[r].hb_last {
+                slots[r].hb_last = hb;
+                slots[r].hb_at = now;
+            } else if now.duration_since(slots[r].hb_at) > stall {
+                flock(&metrics).deposed_stalls += 1;
+                depose_slot(
+                    &mut slots[r],
+                    &mut backoff_rngs[r],
+                    now,
+                    &cfg,
+                    &mut tracked,
+                    &mut place_queue,
+                    &done_tx,
+                    &metrics,
+                );
+            }
+        }
+
+        // -- publish statuses, then drain acknowledgements (a caller
+        // -- unblocked by an ack must observe the draining status) -------
+        {
+            let mut st = flock(&statuses);
+            for (r, slot) in slots.iter().enumerate() {
+                st[r] = slot.status();
+            }
+        }
+        for slot in &mut slots {
+            if slot.draining && slot.outstanding.is_empty() && !slot.drain_acks.is_empty() {
+                for ack in slot.drain_acks.drain(..) {
+                    ack.send(()).ok();
+                }
+            }
+        }
+    }
+
+    // -- shutdown: answer everything, then let the stream disconnect -----
+    for slot in &mut slots {
+        slot.rep.coord_mut().stop();
+    }
+    for r in 0..slots.len() {
+        while let CompletionWait::Ready(c) =
+            slots[r].rep.coord().next_completion(Duration::ZERO)
+        {
+            if !slots[r].outstanding.remove(&c.id) {
+                flock(&metrics).stale_completions += 1;
+                continue;
+            }
+            forward_completion(
+                c,
+                &mut tracked,
+                &mut place_queue,
+                &done_tx,
+                &metrics,
+                cfg.max_failovers,
+                true,
+            );
+        }
+    }
+    let mut ids: Vec<u64> = tracked.keys().copied().collect();
+    ids.sort_unstable();
+    for id in ids {
+        let t = tracked.remove(&id).unwrap();
+        flock(&metrics).failed += 1;
+        done_tx
+            .send(error_completion(
+                id,
+                t.emitted,
+                "fleet stopped before completion".into(),
+            ))
+            .ok();
+    }
+    for slot in &mut slots {
+        for ack in slot.drain_acks.drain(..) {
+            ack.send(()).ok();
+        }
+        if let Some(ack) = slot.restart_ack.take() {
+            ack.send(()).ok();
+        }
+    }
+    {
+        let mut st = flock(&statuses);
+        for (r, slot) in slots.iter().enumerate() {
+            st[r] = slot.status();
+        }
+    }
+    // deferred joins of deposed schedulers (bounded by their stalls)
+    drop(graveyard);
+}
+
+/// Deliver a replica completion to the client — verbatim when the session
+/// never failed over (the `--replicas 1` byte-identity path), stitched
+/// onto the emitted prefix otherwise — or route it into failover.
+fn forward_completion(
+    c: Completion,
+    tracked: &mut HashMap<u64, Tracked>,
+    place_queue: &mut VecDeque<u64>,
+    done_tx: &Sender<Completion>,
+    metrics: &Mutex<FleetMetrics>,
+    max_failovers: usize,
+    terminal: bool,
+) {
+    match &c.error {
+        Some(e) if !terminal && failover_eligible(e) => {
+            let id = c.id;
+            route_failover(
+                id,
+                &c.tokens,
+                e,
+                tracked,
+                place_queue,
+                done_tx,
+                metrics,
+                max_failovers,
+            );
+        }
+        Some(_) => {
+            let Some(t) = tracked.remove(&c.id) else { return };
+            flock(metrics).failed += 1;
+            if t.emitted.is_empty() {
+                done_tx.send(c).ok();
+            } else {
+                let mut tokens = t.emitted;
+                tokens.extend_from_slice(&c.tokens);
+                done_tx
+                    .send(Completion {
+                        id: c.id,
+                        tokens,
+                        queue_secs: c.queue_secs,
+                        ttft_secs: c.ttft_secs,
+                        e2e_secs: t.submitted.elapsed().as_secs_f64(),
+                        error: c.error,
+                    })
+                    .ok();
+            }
+        }
+        None => {
+            let Some(t) = tracked.remove(&c.id) else { return };
+            if t.emitted.is_empty() {
+                done_tx.send(c).ok();
+            } else {
+                let mut tokens = t.emitted;
+                tokens.extend_from_slice(&c.tokens);
+                done_tx
+                    .send(Completion {
+                        id: c.id,
+                        tokens,
+                        queue_secs: c.queue_secs,
+                        ttft_secs: c.ttft_secs,
+                        e2e_secs: t.submitted.elapsed().as_secs_f64(),
+                        error: None,
+                    })
+                    .ok();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{ModelKind, NativeConfig};
+    use crate::model::engine::MlpMode;
+    use crate::model::kv::KvOptions;
+    use crate::model::params::ParamStore;
+    use crate::tensor::Tensor;
+    use std::collections::BTreeMap;
+
+    fn tiny_engine() -> Engine {
+        let cfg = NativeConfig {
+            name: "t".into(),
+            kind: ModelKind::Llama,
+            vocab: 48,
+            emb: 16,
+            ffn: 32,
+            layers: 1,
+            heads: 2,
+            max_seq: 48,
+            block: 8,
+        };
+        let mut rng = Rng::new(7);
+        let mut s = ParamStore::new();
+        let e = cfg.emb;
+        s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.1, &mut rng));
+        for i in 0..cfg.layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+            for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                s.insert(p(w), Tensor::randn(&[e, e], 0.1, &mut rng));
+            }
+            s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+            for (n, r, c) in cfg.mlp_shapes() {
+                s.insert(p(n), Tensor::randn(&[r, c], 0.1, &mut rng));
+            }
+        }
+        s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+        s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
+        Engine::new_with_kv(
+            cfg,
+            &s,
+            &BTreeMap::new(),
+            MlpMode::Sparse,
+            KvOptions { page: 4, pool_pages: Some(32), prefix_cache: true },
+        )
+        .unwrap()
+    }
+
+    fn view(id: usize, healthy: bool, draining: bool, load: usize) -> ReplicaView {
+        ReplicaView { id, healthy, draining, load }
+    }
+
+    #[test]
+    fn placer_picks_least_loaded_and_skips_ineligible() {
+        let mut p = Placer::new(42);
+        // unique minimum wins regardless of the tie-break hash
+        let (a0, c) = p
+            .place(&[view(0, true, false, 3), view(1, true, false, 1), view(2, true, false, 2)])
+            .unwrap();
+        assert_eq!((a0, c), (0, 1));
+        // draining and unhealthy replicas are never chosen
+        let (_, c) = p
+            .place(&[view(0, true, true, 0), view(1, false, false, 0), view(2, true, false, 9)])
+            .unwrap();
+        assert_eq!(c, 2);
+        // nothing eligible: no decision, no arrival consumed
+        let before = p.arrivals();
+        assert!(p.place(&[view(0, false, false, 0), view(1, true, true, 0)]).is_none());
+        assert_eq!(p.arrivals(), before);
+    }
+
+    #[test]
+    fn placer_tiebreak_is_a_pure_function_of_seed_and_arrival() {
+        let ties = [view(0, true, false, 2), view(1, true, false, 2), view(2, true, false, 2)];
+        let mut a = Placer::new(9);
+        let mut b = Placer::new(9);
+        let seq_a: Vec<_> = (0..32).map(|_| a.place(&ties).unwrap()).collect();
+        let seq_b: Vec<_> = (0..32).map(|_| b.place(&ties).unwrap()).collect();
+        assert_eq!(seq_a, seq_b, "same seed, same arrivals, same choices");
+        // pinned against the transliterated hash
+        for (arrival, chosen) in &seq_a {
+            assert_eq!(*chosen, (placement_mix(9, *arrival) % 3) as usize);
+        }
+        // a different seed must disagree somewhere over 32 draws
+        let mut c = Placer::new(10);
+        let seq_c: Vec<_> = (0..32).map(|_| c.place(&ties).unwrap()).collect();
+        assert_ne!(seq_a, seq_c);
+    }
+
+    #[test]
+    fn restart_backoff_is_exponential_bounded_and_jittered() {
+        let faults = crate::util::faults::Faults::parse("replica_crash:0.1:5").unwrap();
+        let mut r1 = faults.fork_rng("replica_restart:0");
+        let mut r2 = faults.fork_rng("replica_restart:0");
+        for attempt in 0..10 {
+            let d1 = restart_backoff_ms(5, attempt, &mut r1);
+            let d2 = restart_backoff_ms(5, attempt, &mut r2);
+            assert_eq!(d1, d2, "same fork, same schedule");
+            let base = 5u64 << attempt.min(4);
+            assert!(d1 >= base && d1 < base + 5, "attempt {attempt}: {d1} vs base {base}");
+        }
+    }
+
+    /// A two-replica fleet serves a burst exactly once, spreads load per
+    /// the placer, and every placement event replays through a fresh
+    /// oracle `Placer` — placement is a pure function of (seed, arrival
+    /// order, health snapshots).
+    #[test]
+    fn fleet_serves_exactly_once_and_placement_replays() {
+        let base = tiny_engine();
+        let cfg = FleetConfig { replicas: 2, seed: 3, ..FleetConfig::default() };
+        let mut fleet = Fleet::start(&base, cfg);
+        let n = 10u64;
+        for i in 0..n {
+            fleet
+                .submit(Request {
+                    id: i,
+                    prompt: vec![1 + i as u32 % 4, 2, 3],
+                    max_new: 4,
+                    ..Default::default()
+                })
+                .unwrap();
+        }
+        let mut seen = HashSet::new();
+        while seen.len() < n as usize {
+            match fleet.next_completion(Duration::from_secs(30)) {
+                CompletionWait::Ready(c) => {
+                    assert!(c.error.is_none(), "request {} failed: {:?}", c.id, c.error);
+                    assert!(!c.tokens.is_empty());
+                    assert!(seen.insert(c.id), "request {} answered twice", c.id);
+                }
+                other => panic!("stream ended early: {other:?}"),
+            }
+        }
+        let m = fleet.metrics();
+        assert_eq!(m.placed, n);
+        assert_eq!(m.failovers + m.restarts + m.replica_deaths + m.deposed_stalls, 0);
+        // both replicas actually served
+        let used: HashSet<usize> = m.events.iter().map(|e| e.chosen).collect();
+        assert_eq!(used.len(), 2, "least-loaded placement must use both replicas");
+        // purity: replay the event log through a fresh placer
+        let mut oracle = Placer::new(cfg.seed);
+        for ev in &m.events {
+            let (arrival, chosen) = oracle.place(&ev.views).expect("oracle found no replica");
+            assert_eq!((arrival, chosen), (ev.arrival, ev.chosen), "event {ev:?}");
+        }
+        fleet.stop();
+        for p in fleet.pools() {
+            assert_eq!(p.pages_in_use(), 0, "a pool kept pages after stop");
+        }
+        assert!(matches!(
+            fleet.next_completion(Duration::from_millis(10)),
+            CompletionWait::Disconnected
+        ));
+    }
+
+    /// Draining stops placements without dropping anything; a planned
+    /// restart brings the replica back with a fresh incarnation that
+    /// resumes taking load.
+    #[test]
+    fn drain_and_planned_restart_drop_nothing() {
+        let base = tiny_engine();
+        let cfg = FleetConfig { replicas: 2, seed: 1, ..FleetConfig::default() };
+        let mut fleet = Fleet::start(&base, cfg);
+        for i in 0..4u64 {
+            fleet
+                .submit(Request { id: i, prompt: vec![1, 2, 3], max_new: 3, ..Default::default() })
+                .unwrap();
+        }
+        fleet.drain(0).unwrap();
+        assert_eq!(fleet.statuses()[0], ReplicaStatus::Draining);
+        let before = fleet.metrics().events.len();
+        for i in 4..8u64 {
+            fleet
+                .submit(Request { id: i, prompt: vec![2, 3, 4], max_new: 3, ..Default::default() })
+                .unwrap();
+        }
+        let mut seen = HashSet::new();
+        while seen.len() < 8 {
+            match fleet.next_completion(Duration::from_secs(30)) {
+                CompletionWait::Ready(c) => {
+                    assert!(c.error.is_none(), "{:?}", c.error);
+                    assert!(seen.insert(c.id));
+                }
+                other => panic!("stream ended early: {other:?}"),
+            }
+        }
+        let m = fleet.metrics();
+        assert!(
+            m.events[before..].iter().all(|e| e.chosen == 1),
+            "placements after drain(0) must all land on replica 1"
+        );
+        fleet.restart_replica(0).unwrap();
+        assert_eq!(fleet.statuses()[0], ReplicaStatus::Healthy);
+        let m = fleet.metrics();
+        assert_eq!((m.planned_restarts, m.drains), (1, 1));
+        assert_eq!(m.failed, 0, "drain/restart must drop nothing");
+        // the cycled replica takes load again: a solo drain of 1 forces it
+        fleet.drain(1).unwrap();
+        fleet
+            .submit(Request { id: 100, prompt: vec![3, 2, 1], max_new: 3, ..Default::default() })
+            .unwrap();
+        match fleet.next_completion(Duration::from_secs(30)) {
+            CompletionWait::Ready(c) => assert!(c.error.is_none(), "{:?}", c.error),
+            other => panic!("stream ended early: {other:?}"),
+        }
+        assert_eq!(fleet.metrics().events.last().unwrap().chosen, 0);
+        fleet.stop();
+        for p in fleet.pools() {
+            assert_eq!(p.pages_in_use(), 0);
+        }
+    }
+
+    /// Stopping a fleet with work still queued answers every request —
+    /// success or explicit error, never silence.
+    #[test]
+    fn stop_answers_everything_tracked() {
+        let base = tiny_engine();
+        let mut fleet = Fleet::start(
+            &base,
+            FleetConfig { replicas: 2, seed: 5, ..FleetConfig::default() },
+        );
+        for i in 0..6u64 {
+            fleet
+                .submit(Request { id: i, prompt: vec![1, 2], max_new: 30, ..Default::default() })
+                .unwrap();
+        }
+        fleet.stop();
+        let mut seen = HashSet::new();
+        loop {
+            match fleet.next_completion(Duration::from_millis(100)) {
+                CompletionWait::Ready(c) => {
+                    assert!(seen.insert(c.id), "request {} answered twice", c.id);
+                }
+                CompletionWait::Disconnected => break,
+                CompletionWait::TimedOut => panic!("stream neither drained nor closed"),
+            }
+        }
+        assert_eq!(seen.len(), 6, "every submitted request must be answered");
+        for p in fleet.pools() {
+            assert_eq!(p.pages_in_use(), 0);
+        }
+    }
+}

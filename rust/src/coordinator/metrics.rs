@@ -277,6 +277,25 @@ impl ServeMetrics {
         }
         s
     }
+
+    /// The **timing-independent** counters only — the subset two runs of
+    /// the same deterministic workload must agree on byte-for-byte. The
+    /// full [`ServeMetrics::summary`] includes wall-clock-derived fields
+    /// (throughput, latency percentiles, round structure) that legitimately
+    /// differ across runs; equivalence tests (fleet `--replicas 1` vs the
+    /// single coordinator) compare this digest instead.
+    pub fn invariant_digest(&self) -> String {
+        format!(
+            "requests={} tokens={} prefill_tokens={} kv_refused={} deadline_misses={} shed={} watchdog_trips={}",
+            self.requests_done,
+            self.tokens_generated,
+            self.prefill_tokens,
+            self.kv_refused,
+            self.deadline_misses,
+            self.shed,
+            self.watchdog_trips,
+        )
+    }
 }
 
 #[cfg(test)]

@@ -22,11 +22,23 @@
 //! waits (FIFO — later requests don't jump a deferred head), and a prompt
 //! that could never fit the pool at all is answered with an error
 //! completion immediately.
+//!
+//! Above the single coordinator sits the replicated tier (L4): [`replica`]
+//! wraps one engine fork + scheduler as a supervised [`replica::Replica`],
+//! and [`fleet`] routes sessions across N of them with deterministic
+//! placement, heartbeat-based crash/stall detection, bitwise-identical
+//! in-flight failover, jittered restarts and graceful drains.
 
+pub mod fleet;
 pub mod metrics;
+pub mod replica;
 pub mod router;
 pub mod server;
 
+pub use fleet::{
+    Fleet, FleetConfig, FleetMetrics, PlacedEvent, Placer, ReplicaStatus, ReplicaView,
+};
 pub use metrics::ServeMetrics;
+pub use replica::Replica;
 pub use router::{Admit, Batcher, BatcherConfig, Request, Session};
 pub use server::{Completion, CompletionWait, Coordinator, HealthState};

@@ -1,0 +1,236 @@
+//! One supervised serving replica: an [`Engine`] fork (own
+//! [`crate::model::KvPagePool`], shared prepacked weights), a
+//! [`Coordinator`] scheduler thread, a heartbeat counter and per-replica
+//! [`crate::coordinator::ServeMetrics`] — the unit the fleet tier places
+//! sessions on, deposes when it stalls, and restarts when it dies.
+//!
+//! A replica is identified by `(id, incarnation)`: the id is its fixed
+//! slot in the fleet, the incarnation bumps on every restart. Each
+//! incarnation gets
+//!
+//! * a **fresh engine fork** ([`Engine::fork_with_fresh_kv`]): the packed
+//!   weights are shared through one `Arc` (restart never re-packs), the
+//!   KV pool — pages, prefix index, high-water marks — starts empty;
+//! * a **forked fault plan** ([`Faults::fork`] with salt
+//!   `(id << 32) | incarnation`): every incarnation draws its own
+//!   deterministic per-site RNG streams, so a chaos run's kill schedule
+//!   replays bit-for-bit regardless of thread interleaving. Replica 0's
+//!   first incarnation uses salt 0, i.e. exactly the root plan — which is
+//!   what makes a 1-replica fleet behave byte-identically to a bare
+//!   [`Coordinator`].
+
+use std::sync::Arc;
+
+use crate::coordinator::router::BatcherConfig;
+use crate::coordinator::server::{Coordinator, HealthState};
+use crate::model::engine::Engine;
+use crate::model::kv::KvPagePool;
+use crate::util::faults::Faults;
+
+/// Fault/jitter stream salt for `(replica id, incarnation)`. Salt 0 —
+/// replica 0, incarnation 0 — reproduces the root plan exactly.
+pub fn replica_salt(id: usize, incarnation: u64) -> u64 {
+    ((id as u64) << 32) | (incarnation & 0xFFFF_FFFF)
+}
+
+/// A supervised replica: the current [`Coordinator`] incarnation plus the
+/// bookkeeping to build the next one.
+pub struct Replica {
+    id: usize,
+    incarnation: u64,
+    restarts: u64,
+    cfg: BatcherConfig,
+    faults_root: Faults,
+    engine: Arc<Engine>,
+    coord: Coordinator,
+}
+
+impl Replica {
+    /// Start incarnation 0 of replica `id`: fork `base` (fresh pool, shared
+    /// weights) and spawn its scheduler with the per-replica fault fork.
+    pub fn start(id: usize, base: &Engine, cfg: BatcherConfig, faults_root: Faults) -> Replica {
+        let engine = Arc::new(base.fork_with_fresh_kv());
+        let coord = Coordinator::start_with_faults(
+            engine.clone(),
+            cfg,
+            faults_root.fork(replica_salt(id, 0)),
+        );
+        Replica {
+            id,
+            incarnation: 0,
+            restarts: 0,
+            cfg,
+            faults_root,
+            engine,
+            coord,
+        }
+    }
+
+    /// Replace the current incarnation with a fresh one — new engine fork
+    /// (empty pool), new scheduler thread, next fault-fork salt — and
+    /// return the **old** coordinator so the caller can keep it in a
+    /// graveyard until it is safe to join (a deposed-but-stalled scheduler
+    /// must not block the fleet router on its sleep).
+    pub fn restart(&mut self) -> Coordinator {
+        self.incarnation += 1;
+        self.restarts += 1;
+        let engine = Arc::new(self.engine.fork_with_fresh_kv());
+        let coord = Coordinator::start_with_faults(
+            engine.clone(),
+            self.cfg,
+            self.faults_root.fork(replica_salt(self.id, self.incarnation)),
+        );
+        self.engine = engine;
+        std::mem::replace(&mut self.coord, coord)
+    }
+
+    /// Fixed fleet slot of this replica.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Restart generation (0 = the original incarnation).
+    pub fn incarnation(&self) -> u64 {
+        self.incarnation
+    }
+
+    /// Times this replica has been restarted.
+    pub fn restarts(&self) -> u64 {
+        self.restarts
+    }
+
+    /// The current incarnation's coordinator.
+    pub fn coord(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// The current incarnation's coordinator, mutably (stop/join).
+    pub fn coord_mut(&mut self) -> &mut Coordinator {
+        &mut self.coord
+    }
+
+    /// The current incarnation's KV pool (drain accounting).
+    pub fn pool(&self) -> Arc<KvPagePool> {
+        self.engine.kv_pool().clone()
+    }
+
+    /// Health of the current incarnation's scheduler.
+    pub fn health(&self) -> HealthState {
+        self.coord.health()
+    }
+
+    /// Heartbeat of the current incarnation's scheduler.
+    pub fn heartbeat(&self) -> u64 {
+        self.coord.heartbeat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Request;
+    use crate::coordinator::server::CompletionWait;
+    use crate::model::config::{ModelKind, NativeConfig};
+    use crate::model::engine::MlpMode;
+    use crate::model::kv::KvOptions;
+    use crate::model::params::ParamStore;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    fn tiny_engine() -> Engine {
+        let cfg = NativeConfig {
+            name: "t".into(),
+            kind: ModelKind::Llama,
+            vocab: 32,
+            emb: 16,
+            ffn: 32,
+            layers: 1,
+            heads: 2,
+            max_seq: 32,
+            block: 8,
+        };
+        let mut rng = Rng::new(1);
+        let mut s = ParamStore::new();
+        let e = cfg.emb;
+        s.insert("tok_emb".into(), Tensor::randn(&[cfg.vocab, e], 0.1, &mut rng));
+        for i in 0..cfg.layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            s.insert(p("ln1"), Tensor::full(&[e], 1.0));
+            for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                s.insert(p(w), Tensor::randn(&[e, e], 0.1, &mut rng));
+            }
+            s.insert(p("ln2"), Tensor::full(&[e], 1.0));
+            for (n, r, c) in cfg.mlp_shapes() {
+                s.insert(p(n), Tensor::randn(&[r, c], 0.1, &mut rng));
+            }
+        }
+        s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
+        s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
+        Engine::new_with_kv(
+            cfg,
+            &s,
+            &BTreeMap::new(),
+            MlpMode::Sparse,
+            KvOptions { page: 4, pool_pages: Some(16), prefix_cache: true },
+        )
+        .unwrap()
+    }
+
+    fn serve_one(r: &Replica, id: u64) -> Vec<u32> {
+        r.coord()
+            .submit(Request {
+                id,
+                prompt: vec![1, 2, 3],
+                max_new: 4,
+                ..Default::default()
+            })
+            .unwrap();
+        match r.coord().next_completion(Duration::from_secs(30)) {
+            CompletionWait::Ready(c) => {
+                assert!(c.error.is_none(), "{:?}", c.error);
+                c.tokens
+            }
+            other => panic!("no completion: {other:?}"),
+        }
+    }
+
+    /// Restart rebuilds the scheduler on a fresh pool over shared weights:
+    /// the incarnation bumps, the old incarnation's pool drains, the new
+    /// one serves the same streams from a cold cache.
+    #[test]
+    fn restart_serves_identical_streams_on_fresh_pool() {
+        let base = tiny_engine();
+        let mut rep = Replica::start(3, &base, BatcherConfig::default(), Faults::disabled());
+        assert_eq!((rep.id(), rep.incarnation(), rep.restarts()), (3, 0, 0));
+        let first = serve_one(&rep, 0);
+        let old_pool = rep.pool();
+        let mut old = rep.restart();
+        assert_eq!((rep.incarnation(), rep.restarts()), (1, 1));
+        old.stop();
+        assert_eq!(old_pool.pages_in_use(), 0, "old incarnation's pool must drain");
+        // same request on the new incarnation: bit-identical stream
+        let second = serve_one(&rep, 1);
+        assert_eq!(first, second);
+        assert!(!Arc::ptr_eq(&old_pool, &rep.pool()), "restart must not reuse the pool");
+        rep.coord_mut().stop();
+        assert_eq!(rep.pool().pages_in_use(), 0);
+    }
+
+    /// Each `(id, incarnation)` draws its own deterministic fault stream:
+    /// the salt layout is pinned so chaos runs replay across processes.
+    #[test]
+    fn replica_salts_are_unique_and_pinned() {
+        assert_eq!(replica_salt(0, 0), 0, "replica 0 inc 0 must be the root plan");
+        assert_eq!(replica_salt(1, 0), 1 << 32);
+        assert_eq!(replica_salt(0, 1), 1);
+        assert_eq!(replica_salt(2, 3), (2u64 << 32) | 3);
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..8 {
+            for inc in 0..8 {
+                assert!(seen.insert(replica_salt(id, inc)));
+            }
+        }
+    }
+}

@@ -54,7 +54,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -157,6 +157,7 @@ pub struct Coordinator {
     stop: Arc<AtomicBool>,
     metrics: Arc<Mutex<ServeMetrics>>,
     health: Arc<AtomicU8>,
+    heartbeat: Arc<AtomicU64>,
     faults: Faults,
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -176,16 +177,21 @@ impl Coordinator {
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
         let health = Arc::new(AtomicU8::new(HealthState::Healthy as u8));
+        // liveness counter: bumped once per scheduler iteration, read by
+        // the fleet's stall detector (a frozen counter = a stuck replica)
+        let heartbeat = Arc::new(AtomicU64::new(0));
         // ids received but not yet answered — the watchdog's drain list
         let inflight = Arc::new(Mutex::new(HashSet::<u64>::new()));
         let stop2 = stop.clone();
         let metrics2 = metrics.clone();
         let health2 = health.clone();
+        let heartbeat2 = heartbeat.clone();
         let faults2 = faults.clone();
         let worker = std::thread::spawn(move || {
             let crashed = catch_unwind(AssertUnwindSafe(|| {
                 scheduler_loop(
-                    &engine, cfg, &rx, &ctx, &stop2, &metrics2, &health2, &inflight, &faults2,
+                    &engine, cfg, &rx, &ctx, &stop2, &metrics2, &health2, &heartbeat2,
+                    &inflight, &faults2,
                 );
             }))
             .is_err();
@@ -228,6 +234,7 @@ impl Coordinator {
             stop,
             metrics,
             health,
+            heartbeat,
             faults,
             worker: Some(worker),
         }
@@ -257,6 +264,23 @@ impl Coordinator {
         HealthState::from_u8(self.health.load(Ordering::Relaxed))
     }
 
+    /// Scheduler liveness counter: bumps once per loop iteration while the
+    /// scheduler runs (an injected `heartbeat_drop` skips single bumps; an
+    /// injected `replica_stall_ms` freezes it for the stall). A fleet's
+    /// stall detector deposes a replica whose counter stops advancing.
+    pub fn heartbeat(&self) -> u64 {
+        self.heartbeat.load(Ordering::Relaxed)
+    }
+
+    /// Ask the scheduler to stop **without joining it** — the depose path
+    /// for a stalled replica, where joining would block the fleet router
+    /// for the length of the stall. The scheduler drains pending requests
+    /// into error completions when it next wakes; [`Coordinator::stop`]
+    /// (or drop) still joins eventually.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
     /// The fault plan this coordinator was started with (fired/checked
     /// counters update live — the chaos harness reads them).
     pub fn faults(&self) -> &Faults {
@@ -266,6 +290,16 @@ impl Coordinator {
     /// One-line digest of the serving metrics so far.
     pub fn metrics_summary(&self) -> String {
         mlock(&self.metrics).summary()
+    }
+
+    /// Timing-independent counter digest ([`ServeMetrics::invariant_digest`]).
+    pub fn metrics_digest(&self) -> String {
+        mlock(&self.metrics).invariant_digest()
+    }
+
+    /// Shared handle to the live metrics (fleet aggregation).
+    pub(crate) fn metrics_arc(&self) -> Arc<Mutex<ServeMetrics>> {
+        self.metrics.clone()
     }
 
     /// Decode throughput since startup (tokens/s).
@@ -295,6 +329,14 @@ impl Drop for Coordinator {
     }
 }
 
+/// Backoff before retry `attempt` (1-based) of a failed decode round, in
+/// microseconds: exponential in the attempt with a jitter draw from the
+/// plan-forked RNG. Public so the schedule is pinned by tests and the
+/// Python transliteration (`fleet_check.py`) byte-for-byte.
+pub fn retry_backoff_us(attempt: usize, rng: &mut Rng) -> u64 {
+    (100u64 << attempt.min(4)) + rng.below(200) as u64
+}
+
 #[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
     engine: &Engine,
@@ -304,6 +346,7 @@ fn scheduler_loop(
     stop: &AtomicBool,
     metrics: &Mutex<ServeMetrics>,
     health: &AtomicU8,
+    heartbeat: &AtomicU64,
     inflight: &Mutex<HashSet<u64>>,
     faults: &Faults,
 ) {
@@ -314,8 +357,10 @@ fn scheduler_loop(
     // error, session panic, deadline); retirement must not send a second
     // (bogus success) completion for them
     let mut errored: HashSet<u64> = HashSet::new();
-    // deterministic jitter for transient-round-failure backoff
-    let mut retry_rng = Rng::new(0xB0FF);
+    // deterministic jitter for transient-round-failure backoff, forked
+    // from the fault plan so retry schedules replay bit-for-bit under
+    // BLAST_CHAOS_SEED (and per replica under Faults::fork)
+    let mut retry_rng = faults.fork_rng("round_retry");
     // consecutive-bad-round pressure driving the health gauge: +1 per bad
     // round, -1 per clean one; Degraded at >= STRAIN_DEGRADED
     const STRAIN_DEGRADED: u32 = 3;
@@ -331,11 +376,32 @@ fn scheduler_loop(
             .is_some_and(|d| t.submitted.elapsed() >= Duration::from_millis(d))
     };
     'serve: while !stop.load(Ordering::Relaxed) {
+        // liveness heartbeat: one bump per iteration. An injected
+        // heartbeat_drop skips this bump only — the scheduler is fine,
+        // the counter just looks momentarily quiet (stall-detector noise).
+        if !faults.fire(FaultSite::HeartbeatDrop) {
+            heartbeat.fetch_add(1, Ordering::Relaxed);
+        }
         // injected scheduler death: outside every catch_unwind below, so
         // only the watchdog in the worker thread can catch it
         if faults.fire(FaultSite::SchedulerPanic) {
             mlock(metrics).faults_injected += 1;
             panic!("injected scheduler_panic");
+        }
+        // injected replica death: identical mechanics, separate site so a
+        // fleet chaos plan can kill replicas without also arming the
+        // single-coordinator watchdog storm
+        if faults.fire(FaultSite::ReplicaCrash) {
+            mlock(metrics).faults_injected += 1;
+            panic!("injected replica_crash");
+        }
+        // injected whole-scheduler freeze: the heartbeat stops advancing
+        // for the stall — the straggler signature the fleet's stall
+        // detector keys on (unlike decode_stall_ms, which only slows one
+        // round and still bumps the heartbeat each iteration)
+        if let Some(d) = faults.stall(FaultSite::ReplicaStallMs) {
+            mlock(metrics).faults_injected += 1;
+            std::thread::sleep(d);
         }
         // drain the submission channel into the waiting queue
         loop {
@@ -611,7 +677,7 @@ fn scheduler_loop(
                             if transient && attempt < cfg.round_retries {
                                 attempt += 1;
                                 mlock(metrics).round_retries += 1;
-                                let backoff = (100u64 << attempt.min(4)) + retry_rng.below(200) as u64;
+                                let backoff = retry_backoff_us(attempt, &mut retry_rng);
                                 std::thread::sleep(Duration::from_micros(backoff));
                                 continue;
                             }
@@ -1367,6 +1433,84 @@ mod tests {
             n,
             "every submitted request must receive exactly one completion"
         );
+    }
+
+    /// Satellite: the round-retry backoff schedule is a pure function of
+    /// the fault spec (and replica salt) — two schedulers armed with the
+    /// same plan draw bit-identical jitter, so a chaos run's retry timing
+    /// replays exactly from `BLAST_CHAOS_SEED`. Also pins the schedule's
+    /// shape: exponential base doubling up to attempt 4, jitter < 200µs.
+    #[test]
+    fn retry_backoff_schedule_replays_from_fault_spec() {
+        let spec = "decode_round_error:0.4:23";
+        let schedule = |f: &Faults| -> Vec<u64> {
+            let mut rng = f.fork_rng("round_retry");
+            (1..=6).map(|a| retry_backoff_us(a, &mut rng)).collect()
+        };
+        let a = schedule(&Faults::parse(spec).unwrap());
+        let b = schedule(&Faults::parse(spec).unwrap());
+        assert_eq!(a, b, "same spec must yield the same retry schedule");
+        let c = schedule(&Faults::parse("decode_round_error:0.4:24").unwrap());
+        assert_ne!(a, c, "different seeds must jitter differently");
+        // per-replica forks of one plan draw distinct (but deterministic)
+        // schedules — replicas must not retry in lockstep
+        let r1 = schedule(&Faults::parse(spec).unwrap().fork(1));
+        let r2 = schedule(&Faults::parse(spec).unwrap().fork(2));
+        assert_ne!(r1, r2);
+        assert_eq!(r1, schedule(&Faults::parse(spec).unwrap().fork(1)));
+        // shape: base 100µs << min(attempt,4) plus sub-200µs jitter
+        for (i, &us) in a.iter().enumerate() {
+            let base = 100u64 << (i as u64 + 1).min(4);
+            assert!(us >= base && us < base + 200, "attempt {}: {us}µs", i + 1);
+        }
+        // the disabled plan also has a fixed schedule (parity across runs)
+        assert_eq!(schedule(&Faults::disabled()), schedule(&Faults::disabled()));
+    }
+
+    /// The heartbeat counter advances while the scheduler runs and freezes
+    /// after stop; an armed heartbeat_drop plan suppresses bumps without
+    /// affecting service.
+    #[test]
+    fn heartbeat_advances_while_scheduler_lives() {
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start(engine, BatcherConfig::default());
+        coord
+            .submit(Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new: 3,
+                ..Default::default()
+            })
+            .unwrap();
+        let c = coord.next_completion(Duration::from_secs(30)).ready().unwrap();
+        assert!(c.error.is_none());
+        // the loop has run at least once per round; the counter moved
+        assert!(coord.heartbeat() > 0);
+        coord.stop();
+        let frozen = coord.heartbeat();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(coord.heartbeat(), frozen, "a stopped scheduler's heartbeat is frozen");
+
+        // with heartbeat_drop always firing, the counter never advances —
+        // but requests still complete (the drop is observational only)
+        let engine = tiny_engine();
+        let mut coord = Coordinator::start_with_faults(
+            engine,
+            BatcherConfig::default(),
+            Faults::parse("heartbeat_drop:1:5").unwrap(),
+        );
+        coord
+            .submit(Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new: 2,
+                ..Default::default()
+            })
+            .unwrap();
+        let c = coord.next_completion(Duration::from_secs(30)).ready().unwrap();
+        assert!(c.error.is_none());
+        assert_eq!(coord.heartbeat(), 0, "every bump was dropped");
+        coord.stop();
     }
 
     /// A request whose deadline already passed while it sat in the queue

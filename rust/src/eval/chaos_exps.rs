@@ -14,6 +14,13 @@
 //!
 //! Everything is deterministic: the fault plans' RNG streams are forked
 //! from `--seed`, so a failing row reproduces bit-for-bit.
+//!
+//! With `--replicas N` (N > 1) the sweep appends a **fleet storm** matrix:
+//! the same load served through the replicated fleet tier under the
+//! replica-level sites (`replica_crash`, `replica_stall_ms`,
+//! `heartbeat_drop`), checking the same three invariants plus one more —
+//! every KV pool of every replica *incarnation* (including the ones that
+//! were deposed and restarted mid-run) drains back to zero pages.
 
 use std::collections::BTreeMap;
 use std::collections::HashSet;
@@ -22,7 +29,9 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{BatcherConfig, CompletionWait, Coordinator, Request};
+use crate::coordinator::{
+    BatcherConfig, CompletionWait, Coordinator, Fleet, FleetConfig, Request,
+};
 use crate::model::config::{ModelKind, NativeConfig};
 use crate::model::engine::{Engine, MlpMode};
 use crate::model::kv::KvOptions;
@@ -184,7 +193,100 @@ fn run_one(faults: Faults, n: usize, deadline_ms: Option<u64>) -> Result<RunRepo
     Ok(RunReport { pool_leak: leak, ..report })
 }
 
-/// `blast exp chaos [--requests N --seed S --deadline-ms D]`.
+struct FleetReport {
+    ok: usize,
+    errored: usize,
+    pool_leak: usize,
+    metrics: String,
+    statuses: String,
+}
+
+/// One fleet storm run: serve `n` requests (a shared-prefix mix, so
+/// failover replays also exercise the CoW prefix cache) through a
+/// `replicas`-wide fleet under `faults`, then enforce the chaos invariants
+/// across **every replica incarnation** — including pools owned by replicas
+/// that were deposed and restarted mid-run.
+fn run_fleet_storm(
+    faults: Faults,
+    n: usize,
+    replicas: usize,
+    stall_ms: u64,
+) -> Result<FleetReport> {
+    let cfg = chaos_config();
+    let engine = Engine::new_with_kv(
+        cfg.clone(),
+        &chaos_params(&cfg, 1),
+        &chaos_masks(&cfg, 0.5, 2),
+        MlpMode::Sparse,
+        KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true },
+    )?;
+    let mut fleet = Fleet::start_with_faults(
+        &engine,
+        FleetConfig {
+            replicas,
+            batcher: BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+            seed: 7,
+            stall_ms,
+            ..FleetConfig::default()
+        },
+        faults,
+    );
+    for i in 0..n as u64 {
+        // every third request reuses one 4-token prefix
+        let mut prompt: Vec<u32> = if i % 3 == 0 { vec![5, 9, 13, 17] } else { Vec::new() };
+        prompt.extend((0..2 + (i as usize % 5)).map(|j| ((i as usize * 7 + j * 3) % 64) as u32));
+        fleet.submit(Request {
+            id: i,
+            prompt,
+            max_new: 1 + (i as usize % 6),
+            eos: None,
+            deadline_ms: None,
+        })?;
+    }
+    let mut seen = HashSet::new();
+    let (mut ok, mut errored) = (0usize, 0usize);
+    while seen.len() < n {
+        match fleet.next_completion(Duration::from_secs(30)) {
+            CompletionWait::Ready(c) => {
+                if !seen.insert(c.id) {
+                    bail!("invariant violated: duplicate completion for request {}", c.id);
+                }
+                if c.error.is_some() {
+                    errored += 1;
+                } else {
+                    ok += 1;
+                }
+            }
+            CompletionWait::Disconnected => {
+                bail!(
+                    "invariant violated: fleet router died with {}/{n} completions",
+                    seen.len()
+                );
+            }
+            CompletionWait::TimedOut => {
+                bail!(
+                    "invariant violated: deadlock — {}/{n} fleet completions after 30s",
+                    seen.len()
+                );
+            }
+        }
+    }
+    let metrics = fleet.metrics_summary();
+    let statuses = format!("{:?}", fleet.statuses());
+    let pools = fleet.pools();
+    fleet.stop();
+    // after stop() every session on every incarnation has retired
+    let leak: usize = pools.iter().map(|p| p.pages_in_use()).sum();
+    if leak != 0 {
+        bail!(
+            "invariant violated: {leak} KV pages still held across {} replica pools after drain",
+            pools.len()
+        );
+    }
+    Ok(FleetReport { ok, errored, pool_leak: leak, metrics, statuses })
+}
+
+/// `blast exp chaos [--requests N --seed S --deadline-ms D --replicas R]`.
 pub fn chaos(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", if args.get_bool("quick") { 8 } else { 24 });
     let seed = args.get_usize("seed", 1) as u64;
@@ -225,5 +327,40 @@ pub fn chaos(args: &Args) -> Result<()> {
         println!("  faults: {}\n", r.fault_summary);
     }
     println!("all chaos invariants held: one completion per request, no deadlock, pool drained");
+    // `--replicas N` appends the fleet storm matrix: the replica-level
+    // sites against the replicated tier, same invariants + per-incarnation
+    // pool drain
+    let replicas = args.get_usize("replicas", 1);
+    if replicas > 1 {
+        let storms: Vec<(&str, String)> = vec![
+            ("fleet baseline", String::new()),
+            ("replica crash storm", format!("replica_crash:0.05:{}", seed + 7)),
+            (
+                "replica kill storm (all sites)",
+                format!(
+                    "replica_crash:0.03:{s},replica_stall_ms:0.04:{s}:60,heartbeat_drop:0.3:{s}",
+                    s = seed + 8
+                ),
+            ),
+        ];
+        println!("fleet storm matrix: {replicas} replicas, {n} requests/run\n");
+        for (label, spec) in &storms {
+            let faults = if spec.is_empty() { Faults::disabled() } else { Faults::parse(spec)? };
+            // armed runs tighten the stall detector so injected 60ms
+            // freezes are actually deposed
+            let stall_ms = if spec.is_empty() { 250 } else { 40 };
+            let r = run_fleet_storm(faults, n, replicas, stall_ms)?;
+            println!(
+                "[{label}] ok {} / errored {}  pool leak {}",
+                r.ok, r.errored, r.pool_leak
+            );
+            println!("  {}", r.metrics);
+            println!("  statuses: {}\n", r.statuses);
+        }
+        println!(
+            "all fleet storm invariants held: exactly-once completion, no deadlock, \
+             every incarnation's pool drained"
+        );
+    }
     Ok(())
 }

@@ -23,14 +23,25 @@
 //! identical; the arm reports prefill speedup, hit rate, pages shared,
 //! and physical-vs-logical page residency as `"arm": "shared_prefix"`
 //! rows in the same report.
+//!
+//! A third arm exercises the replicated fleet tier: the same request load
+//! through 1/2/4-replica fleets (`"arm": "fleet"` rows — replica scaling)
+//! plus a chaos run with `replica_crash`/`replica_stall_ms` armed that
+//! reports failover counts and worst-case end-to-end latency. Every
+//! successful stream must be bitwise identical to the 1-replica clean run
+//! — the failover-replay guarantee, asserted on every bench invocation.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::{BatcherConfig, CompletionWait, Fleet, FleetConfig, Request};
 use crate::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
 use crate::model::engine::{Engine, KvCache, MlpMode};
 use crate::model::kv::KvOptions;
 use crate::testkit::bench::{fmt_time, JsonReport, Table};
 use crate::util::cli::Args;
+use crate::util::faults::Faults;
 use crate::util::json::Json;
 
 /// Prompt lengths used by [`prefill_sessions`]: `MIN_PROMPT ..= MAX_PROMPT`
@@ -300,9 +311,125 @@ pub fn serve(args: &Args) -> Result<()> {
         ]));
     }
 
+    // ---- fleet arm: replica scaling + failover latency -----------------
+    // The same synthetic load through fleets of growing width, then once
+    // more with replica-kill/stall faults armed. Exactly-once delivery
+    // and bitwise-identical successful streams (vs the 1-replica clean
+    // run) are asserted; the chaos row additionally reports failover and
+    // restart counts and the worst-case end-to-end latency — the price of
+    // a failover under this engine.
+    let fleet_requests = if quick { 8 } else { 16 };
+    let fleet_max_new = 8usize;
+    let chaos_spec = "replica_crash:0.04:11,replica_stall_ms:0.02:12:60,heartbeat_drop:0.2:13";
+    let fleet_arms: &[(usize, &str)] = if quick {
+        &[(1, ""), (2, ""), (2, chaos_spec)]
+    } else {
+        &[(1, ""), (2, ""), (4, ""), (3, chaos_spec)]
+    };
+    let mut ftable = Table::new(
+        "Fleet scaling + failover (exactly-once; successes bitwise == 1-replica run)",
+        &["replicas", "faults", "wall", "tok/s", "failovers", "restarts", "failed", "max e2e"],
+    );
+    let fleet_engine = Engine::new_with_kv(
+        cfg.clone(),
+        &params,
+        &masks,
+        MlpMode::Sparse,
+        KvOptions { page: PREFIX_PAGE, pool_pages: Some(256), prefix_cache: true },
+    )?;
+    let mut expected: Option<BTreeMap<u64, Vec<u32>>> = None;
+    for &(replicas, spec) in fleet_arms {
+        let faults = Faults::parse(spec)?;
+        let chaotic = faults.enabled();
+        let fcfg = FleetConfig {
+            replicas,
+            batcher: BatcherConfig { max_batch: 4, max_queue: 64, ..BatcherConfig::default() },
+            seed: 7,
+            // tight stall threshold while stalls are injected so deposal
+            // actually triggers; generous otherwise
+            stall_ms: if chaotic { 50 } else { 250 },
+            ..FleetConfig::default()
+        };
+        let mut fleet = Fleet::start_with_faults(&fleet_engine, fcfg, faults);
+        let t0 = std::time::Instant::now();
+        for i in 0..fleet_requests {
+            fleet.submit(Request {
+                id: i as u64,
+                prompt: (0..8 + i % 8)
+                    .map(|j| ((i * 131 + j * 17) % cfg.vocab) as u32)
+                    .collect(),
+                max_new: fleet_max_new,
+                ..Request::default()
+            })?;
+        }
+        let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        let mut failed = 0usize;
+        let mut max_e2e = 0f64;
+        for _ in 0..fleet_requests {
+            match fleet.next_completion(std::time::Duration::from_secs(120)) {
+                CompletionWait::Ready(c) => {
+                    max_e2e = max_e2e.max(c.e2e_secs);
+                    if c.error.is_some() {
+                        failed += 1;
+                    } else if streams.insert(c.id, c.tokens).is_some() {
+                        bail!("fleet arm: request {} answered twice", c.id);
+                    }
+                }
+                other => bail!("fleet arm ended early: {other:?}"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        match &expected {
+            None => expected = Some(streams.clone()),
+            Some(exp) => {
+                for (id, toks) in &streams {
+                    if exp.get(id) != Some(toks) {
+                        bail!(
+                            "fleet arm (replicas={replicas}, faults={spec:?}): stream of \
+                             request {id} diverged from the 1-replica run"
+                        );
+                    }
+                }
+            }
+        }
+        let fm = fleet.metrics();
+        fleet.stop();
+        let undrained: usize = fleet.pools().iter().map(|p| p.pages_in_use()).sum();
+        if undrained > 0 {
+            bail!("fleet arm (replicas={replicas}): {undrained} KV pages resident after stop");
+        }
+        let tokens: usize = streams.values().map(|s| s.len()).sum();
+        ftable.row(&[
+            replicas.to_string(),
+            if chaotic { "armed" } else { "-" }.to_string(),
+            fmt_time(wall),
+            format!("{:.1}", tokens as f64 / wall),
+            fm.failovers.to_string(),
+            fm.restarts.to_string(),
+            failed.to_string(),
+            format!("{:.1}ms", max_e2e * 1e3),
+        ]);
+        report.push(Json::obj(vec![
+            ("arm", Json::str("fleet")),
+            ("replicas", Json::num(replicas as f64)),
+            ("faults", Json::str(spec)),
+            ("requests", Json::num(fleet_requests as f64)),
+            ("wall_ns", Json::num(wall * 1e9)),
+            ("tok_s", Json::num(tokens as f64 / wall)),
+            ("failovers", Json::num(fm.failovers as f64)),
+            ("restarts", Json::num(fm.restarts as f64)),
+            ("deposed_stalls", Json::num(fm.deposed_stalls as f64)),
+            ("failed", Json::num(failed as f64)),
+            ("max_e2e_ms", Json::num(max_e2e * 1e3)),
+            ("identical_streams", Json::Bool(true)),
+        ]));
+    }
+
     table.print();
     println!();
     ptable.print();
+    println!();
+    ftable.print();
     report.write(std::path::Path::new(&out_path))?;
     println!("\nwrote {} rows to {out_path}", report.len());
     println!(

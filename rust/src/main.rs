@@ -95,11 +95,17 @@ fn print_help() {
          \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
          \x20             --kv-page P --kv-pool-pages M --prefix-cache false --deadline-ms D \\\n\
+         \x20             --replicas R --fleet-seed S --stall-ms T \\\n\
          \x20             --faults site:prob:seed[,..] --no-simd]\n\
          \x20 blast exp <id> [--steps N --quick --backend native|aot ...]   ids: {:?} or 'all'\n\n\
          Fault sites for --faults / BLAST_FAULTS: decode_round_panic,\n\
          decode_round_error, prefill_error, kv_pool_exhausted,\n\
-         decode_stall_ms, ckpt_torn_write, scheduler_panic.\n\n\
+         decode_stall_ms, ckpt_torn_write, scheduler_panic,\n\
+         replica_crash, replica_stall_ms, heartbeat_drop.\n\n\
+         `--replicas R` (R > 1) serves through the replicated fleet tier:\n\
+         deterministic least-loaded placement, heartbeat crash/stall\n\
+         detection, bitwise-identical in-flight failover, jittered\n\
+         restarts. `--replicas 1` (default) is the bare coordinator.\n\n\
          Training and the pretraining experiments run natively by default;\n\
          `--backend aot` and the classifier experiments need `make artifacts`\n\
          plus a `--features pjrt` build.",
@@ -254,16 +260,19 @@ fn run_serve(args: &Args) -> Result<()> {
         0 => None,
         ms => Some(ms as u64),
     };
-    let mut coord = Coordinator::start_with_faults(
-        engine,
-        BatcherConfig {
-            max_batch: args.get_usize("max-batch", 4),
-            max_queue: args.get_usize("max-queue", 64),
-            batched,
-            ..BatcherConfig::default()
-        },
-        faults,
-    );
+    let batcher = BatcherConfig {
+        max_batch: args.get_usize("max-batch", 4),
+        max_queue: args.get_usize("max-queue", 64),
+        batched,
+        ..BatcherConfig::default()
+    };
+    let replicas = args.get_usize("replicas", 1);
+    if replicas > 1 {
+        return serve_fleet(
+            args, &engine, batcher, faults, replicas, n_requests, max_new, deadline_ms, cfg.vocab,
+        );
+    }
+    let mut coord = Coordinator::start_with_faults(engine, batcher, faults);
     for i in 0..n_requests {
         let len = 8 + (i % 8);
         coord.submit(Request {
@@ -305,6 +314,82 @@ fn run_serve(args: &Args) -> Result<()> {
     }
     println!("final health: {:?}", coord.health());
     coord.stop();
+    Ok(())
+}
+
+/// `blast serve --replicas R` (R > 1): the same synthetic load, served
+/// through the replicated fleet tier. Completions arrive exactly once no
+/// matter which replicas crash, stall or get rolled mid-run.
+#[allow(clippy::too_many_arguments)]
+fn serve_fleet(
+    args: &Args,
+    engine: &Engine,
+    batcher: BatcherConfig,
+    faults: Faults,
+    replicas: usize,
+    n_requests: usize,
+    max_new: usize,
+    deadline_ms: Option<u64>,
+    vocab: usize,
+) -> Result<()> {
+    use blast::coordinator::{Fleet, FleetConfig};
+    let fcfg = FleetConfig {
+        replicas,
+        batcher,
+        seed: args.get_usize("fleet-seed", 0) as u64,
+        stall_ms: args.get_usize("stall-ms", 250) as u64,
+        ..FleetConfig::default()
+    };
+    println!(
+        "fleet: {replicas} replicas (seed {}, stall threshold {}ms)",
+        fcfg.seed, fcfg.stall_ms
+    );
+    let mut fleet = Fleet::start_with_faults(engine, fcfg, faults);
+    for i in 0..n_requests {
+        let len = 8 + (i % 8);
+        fleet.submit(Request {
+            id: i as u64,
+            prompt: (0..len).map(|j| ((i * 131 + j * 17) % vocab) as u32).collect(),
+            max_new,
+            eos: None,
+            deadline_ms,
+        })?;
+    }
+    // optional mid-run zero-downtime roll of every replica
+    if args.get_bool("rolling-restart") {
+        fleet.rolling_restart()?;
+        println!("rolling restart completed with requests in flight");
+    }
+    let mut done = 0;
+    while done < n_requests {
+        match fleet.next_completion(Duration::from_secs(120)) {
+            CompletionWait::Ready(c) => {
+                done += 1;
+                if let Some(e) = c.error {
+                    println!("request {} failed: {e}", c.id);
+                } else {
+                    println!(
+                        "request {:3} done: {} tokens, ttft {:.1}ms, e2e {:.1}ms",
+                        c.id,
+                        c.tokens.len(),
+                        c.ttft_secs * 1e3,
+                        c.e2e_secs * 1e3
+                    );
+                }
+            }
+            CompletionWait::TimedOut => anyhow::bail!("timed out waiting for completions"),
+            CompletionWait::Disconnected => {
+                anyhow::bail!("fleet router exited before all completions arrived")
+            }
+        }
+    }
+    println!("\n{}", fleet.metrics_summary());
+    println!("replica status: {:?}", fleet.statuses());
+    fleet.stop();
+    let undrained: usize = fleet.pools().iter().map(|p| p.pages_in_use()).sum();
+    if undrained > 0 {
+        anyhow::bail!("{undrained} KV pages still resident after fleet stop");
+    }
     Ok(())
 }
 

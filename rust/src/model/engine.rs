@@ -77,18 +77,28 @@ struct LayerWeights {
     mlp: MlpWeights,
 }
 
-/// The native block-sparse inference engine: embeddings, prepacked
-/// projection/LM-head weights, per-layer MLP weights in dense
-/// ([`PackedB`]) or sparse ([`Bcsc`]) form depending on [`MlpMode`], and
-/// the shared [`KvPagePool`] every session's cache draws pages from.
-pub struct Engine {
-    cfg: NativeConfig,
+/// The immutable, prepacked half of an engine: embeddings, packed
+/// projection/LM-head panels and per-layer MLP weights. Packing runs once
+/// at build time; every engine forked from the same build shares this
+/// through one `Arc`, so a fleet replica restart ([`Engine::fork_with_fresh_kv`])
+/// costs a pool allocation, not a re-pack of the whole model.
+struct EngineWeights {
     mode: MlpMode,
     tok_emb: Tensor,
     pos_emb: Option<Tensor>,
     layers: Vec<LayerWeights>,
     final_norm: Vec<f32>,
     lm_head: PackedB,
+}
+
+/// The native block-sparse inference engine: shared prepacked weights
+/// ([`EngineWeights`], per-layer MLP weights in dense [`PackedB`] or
+/// sparse [`Bcsc`] form depending on [`MlpMode`]) plus the
+/// [`KvPagePool`] every session's cache draws pages from. The pool is
+/// per-engine state: forked engines share weights but never pages.
+pub struct Engine {
+    cfg: NativeConfig,
+    w: Arc<EngineWeights>,
     kv_pool: Arc<KvPagePool>,
 }
 
@@ -196,15 +206,35 @@ impl Engine {
             page: kv.page.min(cfg.max_seq),
         };
         Ok(Engine {
-            mode,
-            tok_emb: params.req("tok_emb").clone(),
-            pos_emb: params.get("pos_emb").cloned(),
-            layers,
-            final_norm: params.req("final_norm").data().to_vec(),
-            lm_head: packed(params, "lm_head"),
+            w: Arc::new(EngineWeights {
+                mode,
+                tok_emb: params.req("tok_emb").clone(),
+                pos_emb: params.get("pos_emb").cloned(),
+                layers,
+                final_norm: params.req("final_norm").data().to_vec(),
+                lm_head: packed(params, "lm_head"),
+            }),
             kv_pool: KvPagePool::new(geom, kv.pool_pages, kv.prefix_cache),
             cfg,
         })
+    }
+
+    /// A new engine over the **same prepacked weights** but a fresh, empty
+    /// [`KvPagePool`] with the original geometry, capacity and
+    /// prefix-cache setting. This is the replica-restart path: weights are
+    /// shared through the `Arc` (no re-pack, no copy), while KV state —
+    /// pages, prefix index, high-water marks — starts from zero, exactly
+    /// as if the process had restarted with warm weights.
+    pub fn fork_with_fresh_kv(&self) -> Engine {
+        Engine {
+            cfg: self.cfg.clone(),
+            w: self.w.clone(),
+            kv_pool: KvPagePool::new(
+                self.kv_pool.geom(),
+                self.kv_pool.capacity_pages(),
+                self.kv_pool.prefix_enabled(),
+            ),
+        }
     }
 
     /// The geometry this engine was built for.
@@ -214,13 +244,13 @@ impl Engine {
 
     /// Dense or sparse MLP execution (fixed at build time).
     pub fn mode(&self) -> MlpMode {
-        self.mode
+        self.w.mode
     }
 
     /// Weight bytes resident for the MLP blocks in the current mode — the
     /// per-model input to the Fig. 7 memory model.
     pub fn mlp_weight_bytes(&self) -> usize {
-        self.layers
+        self.w.layers
             .iter()
             .map(|l| match &l.mlp {
                 MlpWeights::DenseSwiglu { w1, w2, w3 } => w1.bytes() + w2.bytes() + w3.bytes(),
@@ -379,8 +409,8 @@ impl Engine {
             if t >= self.cfg.vocab {
                 bail!("token {t} out of vocab {}", self.cfg.vocab);
             }
-            x.row_mut(s).copy_from_slice(self.tok_emb.row(t));
-            if let Some(pe) = &self.pos_emb {
+            x.row_mut(s).copy_from_slice(self.w.tok_emb.row(t));
+            if let Some(pe) = &self.w.pos_emb {
                 for (a, &b) in x.row_mut(s).iter_mut().zip(pe.row(s)) {
                     *a += b;
                 }
@@ -388,7 +418,7 @@ impl Engine {
         }
 
         let mut xn = Tensor::zeros(&[seq, e]);
-        for (li, l) in self.layers.iter().enumerate() {
+        for (li, l) in self.w.layers.iter().enumerate() {
             // pre-norm
             for s in 0..seq {
                 let (xr, nr) = (x.row(s).to_vec(), xn.row_mut(s));
@@ -435,9 +465,9 @@ impl Engine {
         cache.len = seq;
         // final norm + head for the last position only
         let mut last = vec![0.0f32; e];
-        self.norm(x.row(seq - 1), &self.final_norm, &mut last);
+        self.norm(x.row(seq - 1), &self.w.final_norm, &mut last);
         let mut logits = vec![0.0f32; self.cfg.vocab];
-        gemm_packed_into(&last, &self.lm_head, &mut logits, 1);
+        gemm_packed_into(&last, &self.w.lm_head, &mut logits, 1);
         Ok(logits)
     }
 
@@ -472,8 +502,8 @@ impl Engine {
             if t >= self.cfg.vocab {
                 bail!("token {t} out of vocab {}", self.cfg.vocab);
             }
-            x.row_mut(s).copy_from_slice(self.tok_emb.row(t));
-            if let Some(pe) = &self.pos_emb {
+            x.row_mut(s).copy_from_slice(self.w.tok_emb.row(t));
+            if let Some(pe) = &self.w.pos_emb {
                 for (a, &b) in x.row_mut(s).iter_mut().zip(pe.row(r0 + s)) {
                     *a += b;
                 }
@@ -481,7 +511,7 @@ impl Engine {
         }
 
         let mut xn = Tensor::zeros(&[rn, e]);
-        for (li, l) in self.layers.iter().enumerate() {
+        for (li, l) in self.w.layers.iter().enumerate() {
             // pre-norm
             for s in 0..rn {
                 let (xr, nr) = (x.row(s).to_vec(), xn.row_mut(s));
@@ -541,9 +571,9 @@ impl Engine {
         cache.len = seq;
         // final norm + head for the last position only
         let mut last = vec![0.0f32; e];
-        self.norm(x.row(rn - 1), &self.final_norm, &mut last);
+        self.norm(x.row(rn - 1), &self.w.final_norm, &mut last);
         let mut logits = vec![0.0f32; self.cfg.vocab];
-        gemm_packed_into(&last, &self.lm_head, &mut logits, 1);
+        gemm_packed_into(&last, &self.w.lm_head, &mut logits, 1);
         Ok(logits)
     }
 
@@ -562,14 +592,14 @@ impl Engine {
         // exists to keep the write-path contract in one place
         cache.ensure_writable(pos + 1)?;
         let (e, h, hd) = (self.cfg.emb, self.cfg.heads, self.cfg.head_dim());
-        let mut x = self.tok_emb.row(token as usize).to_vec();
-        if let Some(pe) = &self.pos_emb {
+        let mut x = self.w.tok_emb.row(token as usize).to_vec();
+        if let Some(pe) = &self.w.pos_emb {
             for (a, &b) in x.iter_mut().zip(pe.row(pos)) {
                 *a += b;
             }
         }
         let mut xn = vec![0.0f32; e];
-        for (li, l) in self.layers.iter().enumerate() {
+        for (li, l) in self.w.layers.iter().enumerate() {
             self.norm(&x, &l.ln1, &mut xn);
             let mut q = vec![0.0f32; e];
             let mut k = vec![0.0f32; e];
@@ -624,9 +654,9 @@ impl Engine {
         }
         cache.len = pos + 1;
         let mut last = vec![0.0f32; e];
-        self.norm(&x, &self.final_norm, &mut last);
+        self.norm(&x, &self.w.final_norm, &mut last);
         let mut logits = vec![0.0f32; self.cfg.vocab];
-        gemm_packed_into(&last, &self.lm_head, &mut logits, 1);
+        gemm_packed_into(&last, &self.w.lm_head, &mut logits, 1);
         Ok(logits)
     }
 
@@ -701,8 +731,8 @@ impl Engine {
         // embed the B new tokens into one (B, e) activation matrix
         let mut x = Tensor::zeros(&[bsz, e]);
         for (i, &t) in tokens.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.tok_emb.row(t as usize));
-            if let Some(pe) = &self.pos_emb {
+            x.row_mut(i).copy_from_slice(self.w.tok_emb.row(t as usize));
+            if let Some(pe) = &self.w.pos_emb {
                 for (a, &b) in x.row_mut(i).iter_mut().zip(pe.row(positions[i])) {
                     *a += b;
                 }
@@ -718,7 +748,7 @@ impl Engine {
         let mut v = scratch::take_uninit(bsz * e);
         let mut att = scratch::take_uninit(bsz * e);
         let mut proj = scratch::take_uninit(bsz * e);
-        for (li, l) in self.layers.iter().enumerate() {
+        for (li, l) in self.w.layers.iter().enumerate() {
             // x and xn are distinct tensors, so the norm borrows directly —
             // no per-row copies on the batched hot path
             for i in 0..bsz {
@@ -807,11 +837,11 @@ impl Engine {
         // final norm + one batched LM-head GEMM (both scratch-backed)
         let mut last = scratch::take_uninit(bsz * e);
         for i in 0..bsz {
-            self.norm(x.row(i), &self.final_norm, &mut last[i * e..(i + 1) * e]);
+            self.norm(x.row(i), &self.w.final_norm, &mut last[i * e..(i + 1) * e]);
         }
         let vocab = self.cfg.vocab;
         let mut logits = scratch::take_zeroed(bsz * vocab);
-        gemm_packed_into(&last, &self.lm_head, &mut logits, bsz);
+        gemm_packed_into(&last, &self.w.lm_head, &mut logits, bsz);
         Ok(logits.chunks(vocab).map(|c| c.to_vec()).collect())
     }
 
@@ -927,6 +957,42 @@ mod tests {
                 assert!((a - b).abs() < 1e-3, "{kind:?} decode: {a} vs {b}");
             }
         }
+    }
+
+    /// `fork_with_fresh_kv` shares the prepacked weights (same `Arc`, no
+    /// re-pack) but gives the fork its own empty pool with the original
+    /// geometry/capacity/prefix setting — and the forked engine's streams
+    /// are bit-identical to the original's.
+    #[test]
+    fn forked_engine_shares_weights_but_not_kv() {
+        use crate::model::kv::KvOptions;
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 9);
+        let masks = random_masks(&cfg, 0.4, 10);
+        let eng = Engine::new_with_kv(
+            cfg.clone(),
+            &params,
+            &masks,
+            MlpMode::Sparse,
+            KvOptions { page: 4, pool_pages: Some(16), prefix_cache: true },
+        )
+        .unwrap();
+        let fork = eng.fork_with_fresh_kv();
+        assert!(Arc::ptr_eq(&eng.w, &fork.w), "weights must be shared, not copied");
+        assert!(!Arc::ptr_eq(&eng.kv_pool, &fork.kv_pool), "pools must be distinct");
+        assert_eq!(fork.kv_pool.geom(), eng.kv_pool.geom());
+        assert_eq!(fork.kv_pool.capacity_pages(), Some(16));
+        assert!(fork.kv_pool.prefix_enabled());
+        let tokens: Vec<u32> = vec![3, 1, 4, 1, 5];
+        let mut ca = eng.new_cache();
+        let mut cb = fork.new_cache();
+        let la = eng.prefill(&tokens, &mut ca).unwrap();
+        let lb = fork.prefill(&tokens, &mut cb).unwrap();
+        assert_eq!(la, lb, "forked engine must serve bit-identical logits");
+        // the original's pages live in its own pool only
+        assert!(eng.kv_pool.pages_in_use() > 0);
+        drop(cb);
+        assert_eq!(fork.kv_pool.pages_in_use(), 0, "fork pool drains independently");
     }
 
     #[test]

@@ -311,6 +311,61 @@ impl ParamStore {
         }
         Ok((store, meta))
     }
+
+    /// Cheap structural validity check: magic, parseable header, and a
+    /// file exactly as long as the header's tensor shapes demand. Catches
+    /// torn/truncated writes without reading (or CRC-checking) the
+    /// payload — the retention sweep uses it to count only checkpoints
+    /// that are actually restorable. Legacy v1 headers carry no shape
+    /// list we can trust cheaply, so they only get the magic/header check.
+    pub fn quick_verify(path: &Path) -> Result<()> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut magic = [0u8; 5];
+        f.read_exact(&mut magic)
+            .with_context(|| format!("reading magic of {path:?}"))?;
+        if &magic != b"BLST1" {
+            bail!("{path:?} is not a BLST1 checkpoint");
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb);
+        if hlen > (1 << 30) {
+            bail!("{path:?}: implausible header length {hlen} (corrupt checkpoint)");
+        }
+        let mut hbuf = vec![0u8; hlen as usize];
+        f.read_exact(&mut hbuf)
+            .with_context(|| format!("reading header of {path:?} (truncated?)"))?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let items = match header.as_arr() {
+            Some(_) => return Ok(()), // legacy v1: nothing cheap to verify
+            None => header
+                .get("tensors")
+                .and_then(|t| t.as_arr())
+                .context("v2 header missing tensors array")?,
+        };
+        let mut payload: u64 = 0;
+        for item in items {
+            let n: usize = item
+                .req("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .product();
+            payload += 4 * n as u64;
+        }
+        let want = 5 + 8 + hlen + payload;
+        let got = f.metadata()?.len();
+        if got != want {
+            bail!(
+                "{path:?}: {got} bytes on disk, header demands {want} — torn or \
+                 truncated checkpoint"
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -157,22 +157,46 @@ fn tensor_to_mask(t: &Tensor) -> BlockMask {
 }
 
 /// Newest-first retention sweep over `ckpt-*.blst` in `dir` (zero-padded
-/// iteration numbers make lexicographic order chronological).
+/// iteration numbers make lexicographic order chronological). Only
+/// checkpoints that pass [`ParamStore::quick_verify`] count toward
+/// `keep` — an unrestorable file must never crowd a good one out of the
+/// retention window, so under injected `ckpt_torn_write` storms the
+/// directory always holds at least `keep` valid checkpoints (as long as
+/// that many were ever written). Invalid `.blst` files and stale
+/// `.blst.tmp` debris abandoned by torn writers are swept as junk, and
+/// any deletion is followed by a best-effort directory fsync so the
+/// prune is durable no later than the rename that triggered it.
 fn prune_checkpoints(dir: &Path, keep: usize) {
     let Ok(rd) = std::fs::read_dir(dir) else { return };
-    let mut ckpts: Vec<_> = rd
-        .filter_map(|e| e.ok())
-        .map(|e| e.path())
-        .filter(|p| {
-            p.file_name()
-                .and_then(|s| s.to_str())
-                .is_some_and(|s| s.starts_with("ckpt-") && s.ends_with(".blst"))
-        })
-        .collect();
-    ckpts.sort();
-    while ckpts.len() > keep.max(1) {
-        let victim = ckpts.remove(0);
-        std::fs::remove_file(&victim).ok();
+    let mut valid: Vec<std::path::PathBuf> = Vec::new();
+    let mut junk: Vec<std::path::PathBuf> = Vec::new();
+    for p in rd.filter_map(|e| e.ok()).map(|e| e.path()) {
+        let Some(name) = p.file_name().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        if name.starts_with("ckpt-") && name.ends_with(".blst.tmp") {
+            junk.push(p);
+        } else if name.starts_with("ckpt-") && name.ends_with(".blst") {
+            match ParamStore::quick_verify(&p) {
+                Ok(()) => valid.push(p),
+                Err(_) => junk.push(p),
+            }
+        }
+    }
+    valid.sort();
+    let mut removed = false;
+    while valid.len() > keep.max(1) {
+        std::fs::remove_file(valid.remove(0)).ok();
+        removed = true;
+    }
+    for p in junk {
+        std::fs::remove_file(&p).ok();
+        removed = true;
+    }
+    if removed {
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
     }
 }
 
@@ -446,7 +470,19 @@ impl<'rt> Trainer<'rt> {
             if every > 0 && (i + 1) % every == 0 {
                 let path = dir.join(format!("ckpt-{:06}.blst", i + 1));
                 match self.save_checkpoint_faulted(&path, faults) {
-                    Ok(()) => prune_checkpoints(dir, keep),
+                    // retention may only run once the new checkpoint is
+                    // provably on disk and restorable: a save that claimed
+                    // success but left an invalid file must not trigger
+                    // deletion of the older good checkpoints
+                    Ok(()) => match ParamStore::quick_verify(&path) {
+                        Ok(()) => prune_checkpoints(dir, keep),
+                        Err(e) => crate::log_warn!(
+                            "train",
+                            "autosave at iter {} is not restorable ({e}); \
+                             retention sweep skipped",
+                            i + 1
+                        ),
+                    },
                     Err(e) => crate::log_warn!(
                         "train",
                         "autosave at iter {} failed: {e}; continuing (previous checkpoint intact)",
@@ -838,6 +874,70 @@ mod tests {
         // with prob 0.5 over 5 save points, at least one save succeeds for
         // this fixed seed (deterministic — the plan's RNG stream is seeded)
         assert!(loaded > 0, "no checkpoint survived");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Retention ordering under `ckpt_torn_write`: the sweep runs only
+    /// after a new checkpoint is fully on disk and verifiable, counts
+    /// only restorable files toward `keep`, and treats invalid `.blst`
+    /// files and torn `.tmp` debris as junk — so no torn-write storm can
+    /// ever leave the directory with fewer than `keep` valid checkpoints
+    /// once `keep` saves have succeeded.
+    #[test]
+    fn torn_writes_never_shrink_the_valid_retention_window() {
+        let dir = std::env::temp_dir().join("blast_test_autosave_keep");
+        std::fs::remove_dir_all(&dir).ok();
+        let keep = 2usize;
+        let valid_names = |dir: &Path| -> Vec<String> {
+            let mut v: Vec<String> = std::fs::read_dir(dir)
+                .unwrap()
+                .map(|e| e.unwrap().path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|s| s.to_str())
+                        .is_some_and(|s| s.ends_with(".blst"))
+                        && ParamStore::quick_verify(p).is_ok()
+                })
+                .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+                .collect();
+            v.sort();
+            v
+        };
+        let mut t = Trainer::new_native("micro", small_opts(13)).unwrap();
+        // phase 1: clean saves establish a full retention window
+        t.run_with_autosave(6, &dir, 2, keep, &Faults::disabled()).unwrap();
+        assert_eq!(valid_names(&dir), vec!["ckpt-000004.blst", "ckpt-000006.blst"]);
+        // phase 2: every save torn — the window must not shrink
+        let torn = Faults::parse("ckpt_torn_write:1:3").unwrap();
+        t.run_with_autosave(6, &dir, 2, keep, &torn).unwrap();
+        let survivors = valid_names(&dir);
+        assert_eq!(
+            survivors,
+            vec!["ckpt-000004.blst", "ckpt-000006.blst"],
+            "a failed save must never cost a valid checkpoint"
+        );
+        // phase 3: a clean save advances the window and sweeps the torn
+        // .tmp debris phase 2 left behind
+        t.run_with_autosave(2, &dir, 2, keep, &Faults::disabled()).unwrap();
+        assert_eq!(valid_names(&dir), vec!["ckpt-000006.blst", "ckpt-000014.blst"]);
+        assert!(
+            std::fs::read_dir(&dir).unwrap().all(|e| {
+                !e.unwrap().file_name().to_string_lossy().ends_with(".tmp")
+            }),
+            "torn .tmp debris must be swept by the next successful prune"
+        );
+        // phase 4: a garbage .blst that sorts newest must not crowd a
+        // valid checkpoint out of the window — it is junk, not retention
+        std::fs::write(dir.join("ckpt-999998.blst"), b"NOT A CHECKPOINT").unwrap();
+        t.run_with_autosave(2, &dir, 2, keep, &Faults::disabled()).unwrap();
+        let mut all: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        all.sort();
+        assert_eq!(all, vec!["ckpt-000014.blst", "ckpt-000016.blst"]);
+        // the newest survivor actually restores
+        Trainer::resume_from(&dir.join("ckpt-000016.blst")).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

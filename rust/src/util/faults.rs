@@ -19,9 +19,18 @@
 //! | `decode_stall_ms`   | decode round sleeps `value` ms (deadline tests) |
 //! | `ckpt_torn_write`   | checkpoint write stops mid-payload (simulated crash) |
 //! | `scheduler_panic`   | scheduler thread dies *outside* round isolation (watchdog tests) |
+//! | `replica_crash`     | a fleet replica's scheduler dies (fleet restart + session failover) |
+//! | `replica_stall_ms`  | a replica's scheduler loop freezes `value` ms (heartbeat stall detection) |
+//! | `heartbeat_drop`    | a replica skips one heartbeat bump (stall-detector noise immunity) |
 //!
 //! An optional fourth field sets a per-site magnitude
 //! (`decode_stall_ms:1:7:40` = 40 ms stalls); other sites ignore it.
+//!
+//! Multi-replica runs fork one armed plan per replica with
+//! [`Faults::fork`]: each replica re-derives every site's RNG stream from
+//! `(seed, site, salt)`, so per-replica fault schedules are deterministic
+//! regardless of how the replicas' threads interleave — a shared plan
+//! would make the draw order (and thus the whole chaos run) racy.
 //!
 //! **Zero overhead when disabled**: [`Faults`] is an `Option<Arc<..>>`;
 //! with no plan armed every [`Faults::fire`] call is a single pointer
@@ -60,10 +69,21 @@ pub enum FaultSite {
     /// The scheduler thread panics outside per-round isolation; the
     /// watchdog must fail pending requests instead of hanging clients.
     SchedulerPanic,
+    /// A fleet replica's scheduler dies wholesale (same mechanics as
+    /// `scheduler_panic`, armed per replica via [`Faults::fork`]): the
+    /// fleet must detect the death, fail sessions over to survivors and
+    /// restart the replica with bounded backoff.
+    ReplicaCrash,
+    /// A replica's scheduler loop freezes for `value` milliseconds without
+    /// dying — the straggler case heartbeat stall detection exists for.
+    ReplicaStallMs,
+    /// One heartbeat bump is skipped (lossy heartbeat channel); the stall
+    /// detector must tolerate isolated drops without deposing the replica.
+    HeartbeatDrop,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 7] = [
+    pub const ALL: [FaultSite; 10] = [
         FaultSite::DecodeRoundPanic,
         FaultSite::DecodeRoundError,
         FaultSite::PrefillError,
@@ -71,6 +91,9 @@ impl FaultSite {
         FaultSite::DecodeStallMs,
         FaultSite::CkptTornWrite,
         FaultSite::SchedulerPanic,
+        FaultSite::ReplicaCrash,
+        FaultSite::ReplicaStallMs,
+        FaultSite::HeartbeatDrop,
     ];
 
     pub fn name(self) -> &'static str {
@@ -82,6 +105,9 @@ impl FaultSite {
             FaultSite::DecodeStallMs => "decode_stall_ms",
             FaultSite::CkptTornWrite => "ckpt_torn_write",
             FaultSite::SchedulerPanic => "scheduler_panic",
+            FaultSite::ReplicaCrash => "replica_crash",
+            FaultSite::ReplicaStallMs => "replica_stall_ms",
+            FaultSite::HeartbeatDrop => "heartbeat_drop",
         }
     }
 
@@ -93,6 +119,10 @@ impl FaultSite {
     fn default_value(self) -> u64 {
         match self {
             FaultSite::DecodeStallMs => 25,
+            // long enough for a fleet stall detector with a sub-100ms
+            // threshold to notice, short enough that joining the deposed
+            // thread at shutdown stays cheap
+            FaultSite::ReplicaStallMs => 150,
             _ => 0,
         }
     }
@@ -105,15 +135,34 @@ impl FaultSite {
 struct SiteState {
     prob: f64,
     value: u64,
+    /// The spec seed, kept so [`Faults::fork`] can re-derive the stream
+    /// with a per-replica salt instead of splitting the live RNG (which
+    /// would make forked streams depend on how many draws happened first).
+    seed: u64,
     rng: Mutex<Rng>,
     checked: AtomicU64,
     fired: AtomicU64,
 }
 
+impl SiteState {
+    /// Per-site stream seed: the spec seed forked by the site name (so two
+    /// sites with the same seed draw independently) and by an optional
+    /// salt (so each fleet replica draws independently of its peers).
+    /// Salt 0 reproduces the unforked plan bit-for-bit.
+    fn stream_seed(seed: u64, site: FaultSite, salt: u64) -> u64 {
+        seed ^ crate::util::crc::crc32(site.name().as_bytes()) as u64
+            ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+const N_SITES: usize = FaultSite::ALL.len();
+
 /// The armed plan: per-site probability, magnitude and RNG stream.
 pub struct FaultPlan {
-    sites: [Option<SiteState>; 7],
+    sites: [Option<SiteState>; N_SITES],
     spec: String,
+    /// Replica salt this plan was forked with (0 = the root plan).
+    salt: u64,
 }
 
 /// Cheap cloneable handle to an optional [`FaultPlan`].
@@ -146,7 +195,7 @@ impl Faults {
         if spec.is_empty() {
             return Ok(Faults::disabled());
         }
-        let mut sites: [Option<SiteState>; 7] = Default::default();
+        let mut sites: [Option<SiteState>; N_SITES] = Default::default();
         for part in spec.split(',') {
             let part = part.trim();
             if part.is_empty() {
@@ -175,9 +224,8 @@ impl Faults {
             sites[site.index()] = Some(SiteState {
                 prob: prob.clamp(0.0, 1.0),
                 value,
-                // fork per site from the site name so two sites with the
-                // same seed still draw independent streams
-                rng: Mutex::new(Rng::new(seed ^ crate::util::crc::crc32(site.name().as_bytes()) as u64)),
+                seed,
+                rng: Mutex::new(Rng::new(SiteState::stream_seed(seed, site, 0))),
                 checked: AtomicU64::new(0),
                 fired: AtomicU64::new(0),
             });
@@ -185,7 +233,54 @@ impl Faults {
         Ok(Faults(Some(Arc::new(FaultPlan {
             sites,
             spec: spec.to_string(),
+            salt: 0,
         }))))
+    }
+
+    /// Fork a per-replica plan: same sites, probabilities and magnitudes,
+    /// but every site's RNG stream re-derived from `(seed, site, salt)`
+    /// with fresh fired/checked counters. Forking a disabled handle stays
+    /// disabled; salt 0 reproduces the root plan's streams bit-for-bit.
+    pub fn fork(&self, salt: u64) -> Faults {
+        let Some(plan) = &self.0 else {
+            return Faults::disabled();
+        };
+        let mut sites: [Option<SiteState>; N_SITES] = Default::default();
+        for site in FaultSite::ALL {
+            if let Some(s) = &plan.sites[site.index()] {
+                sites[site.index()] = Some(SiteState {
+                    prob: s.prob,
+                    value: s.value,
+                    seed: s.seed,
+                    rng: Mutex::new(Rng::new(SiteState::stream_seed(s.seed, site, salt))),
+                    checked: AtomicU64::new(0),
+                    fired: AtomicU64::new(0),
+                });
+            }
+        }
+        Faults(Some(Arc::new(FaultPlan {
+            sites,
+            spec: plan.spec.clone(),
+            salt,
+        })))
+    }
+
+    /// A deterministic jitter stream tied to this plan: seeded from
+    /// `(crc32(spec), crc32(label), salt)` when armed, from `label` alone
+    /// when disabled. Backoff schedules (round retries, replica restarts)
+    /// draw from this instead of ad-hoc constants so a chaos run's timing
+    /// jitter replays bit-for-bit from the spec string.
+    pub fn fork_rng(&self, label: &str) -> Rng {
+        let l = crate::util::crc::crc32(label.as_bytes()) as u64;
+        match &self.0 {
+            None => Rng::new(0xB0FF ^ l),
+            Some(plan) => Rng::new(
+                ((crate::util::crc::crc32(plan.spec.as_bytes()) as u64) << 32)
+                    ^ l
+                    ^ plan.salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ 0xB0FF,
+            ),
+        }
     }
 
     /// Arm from the `BLAST_FAULTS` environment variable. A malformed spec
@@ -352,6 +447,68 @@ mod tests {
         assert_eq!(g.stall(FaultSite::DecodeStallMs), Some(Duration::from_millis(25)));
         // disabled → None, and no counter movement
         assert_eq!(Faults::disabled().stall(FaultSite::DecodeStallMs), None);
+    }
+
+    #[test]
+    fn fork_streams_are_deterministic_and_replica_independent() {
+        let spec = "replica_crash:0.5:3,heartbeat_drop:0.5:3";
+        let root = Faults::parse(spec).unwrap();
+        // salt 0 reproduces the root plan's streams bit-for-bit
+        let zero = root.fork(0);
+        let again = Faults::parse(spec).unwrap();
+        let draws = |f: &Faults| -> Vec<bool> {
+            (0..64).map(|_| f.fire(FaultSite::ReplicaCrash)).collect()
+        };
+        assert_eq!(draws(&zero), draws(&again));
+        // distinct salts → distinct streams; same salt → identical stream
+        let a = Faults::parse(spec).unwrap().fork(1);
+        let b = Faults::parse(spec).unwrap().fork(2);
+        let a2 = Faults::parse(spec).unwrap().fork(1);
+        let (da, db, da2) = (draws(&a), draws(&b), draws(&a2));
+        assert_eq!(da, da2);
+        assert_ne!(da, db);
+        // counters are per-fork, not shared with the root
+        assert_eq!(root.fired(FaultSite::ReplicaCrash), 0);
+        // forking a disabled handle stays disabled (and free)
+        assert!(!Faults::disabled().fork(7).enabled());
+    }
+
+    #[test]
+    fn replica_stall_uses_default_value() {
+        let f = Faults::parse("replica_stall_ms:1:5").unwrap();
+        assert_eq!(
+            f.stall(FaultSite::ReplicaStallMs),
+            Some(Duration::from_millis(150))
+        );
+        let g = Faults::parse("replica_stall_ms:1:5:60").unwrap();
+        assert_eq!(
+            g.stall(FaultSite::ReplicaStallMs),
+            Some(Duration::from_millis(60))
+        );
+    }
+
+    #[test]
+    fn fork_rng_is_a_pure_function_of_spec_label_and_salt() {
+        let spec = "decode_round_error:0.3:9";
+        let seq = |r: &mut crate::util::rng::Rng| -> Vec<usize> {
+            (0..16).map(|_| r.below(1000)).collect()
+        };
+        let mut a = Faults::parse(spec).unwrap().fork_rng("round_retry");
+        let mut b = Faults::parse(spec).unwrap().fork_rng("round_retry");
+        assert_eq!(seq(&mut a), seq(&mut b), "same spec+label must replay");
+        let mut c = Faults::parse(spec).unwrap().fork_rng("replica_restart");
+        assert_ne!(seq(&mut a), seq(&mut c), "labels draw distinct streams");
+        let mut d = Faults::parse("decode_round_error:0.3:10").unwrap().fork_rng("round_retry");
+        assert_ne!(seq(&mut b), seq(&mut d), "specs draw distinct streams");
+        // per-replica forks jitter independently but deterministically
+        let mut e = Faults::parse(spec).unwrap().fork(3).fork_rng("round_retry");
+        let mut e2 = Faults::parse(spec).unwrap().fork(3).fork_rng("round_retry");
+        assert_eq!(seq(&mut e), seq(&mut e2));
+        assert_ne!(seq(&mut b), seq(&mut e));
+        // disabled handles still get a fixed, label-keyed stream
+        let mut f = Faults::disabled().fork_rng("round_retry");
+        let mut g = Faults::disabled().fork_rng("round_retry");
+        assert_eq!(seq(&mut f), seq(&mut g));
     }
 
     #[test]

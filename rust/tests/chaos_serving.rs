@@ -17,7 +17,9 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Arc;
 use std::time::Duration;
 
-use blast::coordinator::{BatcherConfig, CompletionWait, Coordinator, Request};
+use blast::coordinator::{
+    BatcherConfig, CompletionWait, Coordinator, Fleet, FleetConfig, ReplicaStatus, Request,
+};
 use blast::model::config::{ModelKind, NativeConfig};
 use blast::model::engine::{Engine, MlpMode};
 use blast::model::kv::{KvCache, KvGeom, KvOptions, KvPagePool};
@@ -561,5 +563,280 @@ fn cow_copies_never_alias_their_donor_under_randomized_lifetimes() {
             (0, 0),
             "case {case}: pool must drain to zero pages and zero mappings"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet tier: replicated serving under replica-level chaos
+// ---------------------------------------------------------------------------
+
+/// Shared-prefix request mix for the fleet matrix: every third request
+/// reuses one 4-token prefix (failover replays then also cross the CoW
+/// prefix cache), the rest are unrelated.
+fn fleet_plan(n: u64) -> Vec<(u64, Vec<u32>, usize)> {
+    (0..n)
+        .map(|i| {
+            let mut prompt: Vec<u32> = if i % 3 == 0 { vec![5, 9, 13, 17] } else { Vec::new() };
+            prompt
+                .extend((0..2 + (i as usize % 5)).map(|j| ((i as usize * 7 + j * 3) % 64) as u32));
+            (i, prompt, 1 + (i as usize % 6))
+        })
+        .collect()
+}
+
+/// Expected token streams for `plan`: one clean pass through a bare
+/// coordinator. Greedy decode is deterministic, so every healthy serving
+/// path — and every failover replay — must reproduce these bitwise.
+fn clean_streams(plan: &[(u64, Vec<u32>, usize)]) -> HashMap<u64, Vec<u32>> {
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
+    let mut coord = Coordinator::start(
+        eng,
+        BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+    );
+    let d = serve_prompts_and_drain(&mut coord, plan, None);
+    coord.stop();
+    assert!(!d.disconnected);
+    d.completions
+        .into_iter()
+        .map(|(id, (tokens, err))| {
+            assert!(err.is_none(), "clean run failed request {id}: {err:?}");
+            (id, tokens)
+        })
+        .collect()
+}
+
+/// Submit `plan` through a fleet and drain every completion, enforcing
+/// exactly-once and the 30 s no-deadlock bound.
+fn fleet_serve_and_drain(
+    fleet: &Fleet,
+    plan: &[(u64, Vec<u32>, usize)],
+) -> HashMap<u64, (Vec<u32>, Option<String>)> {
+    for (id, prompt, max_new) in plan {
+        fleet
+            .submit(Request {
+                id: *id,
+                prompt: prompt.clone(),
+                max_new: *max_new,
+                ..Default::default()
+            })
+            .expect("fleet front door must accept while running");
+    }
+    let mut completions = HashMap::new();
+    while completions.len() < plan.len() {
+        match fleet.next_completion(Duration::from_secs(30)) {
+            CompletionWait::Ready(c) => {
+                assert!(
+                    completions.insert(c.id, (c.tokens, c.error)).is_none(),
+                    "duplicate completion for request {}",
+                    c.id
+                );
+            }
+            CompletionWait::Disconnected => panic!("fleet router died mid-load"),
+            CompletionWait::TimedOut => panic!(
+                "deadlock: {}/{} fleet completions after 30s",
+                completions.len(),
+                plan.len()
+            ),
+        }
+    }
+    completions
+}
+
+/// Satellite: `--replicas 1` equivalence. A one-replica fleet with no
+/// fault plan is byte-identical to the bare coordinator — same greedy
+/// streams, same invariant metrics digest, zero fleet-level events.
+#[test]
+fn single_replica_fleet_is_byte_identical_to_bare_coordinator() {
+    let plan = fleet_plan(16);
+
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
+    let pool = eng.kv_pool().clone();
+    let mut coord = Coordinator::start(
+        eng,
+        BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+    );
+    let bare = serve_prompts_and_drain(&mut coord, &plan, None);
+    assert!(!bare.disconnected);
+    let bare_digest = coord.metrics_digest();
+    coord.stop();
+    assert_eq!(pool.pages_in_use(), 0);
+
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
+    let mut fleet = Fleet::start(
+        &eng,
+        FleetConfig {
+            replicas: 1,
+            batcher: BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+            // generous threshold: a false stall depose would change the
+            // digest, and this test is about the quiet path
+            stall_ms: 5_000,
+            ..FleetConfig::default()
+        },
+    );
+    let through_fleet = fleet_serve_and_drain(&fleet, &plan);
+    assert_eq!(
+        fleet.replica_digests(),
+        vec![bare_digest],
+        "one-replica fleet metrics must match the bare coordinator"
+    );
+    let m = fleet.metrics();
+    assert_eq!(
+        (m.failovers, m.restarts, m.deposed_stalls, m.replica_deaths, m.failed),
+        (0, 0, 0, 0, 0),
+        "a healthy one-replica fleet must see no fleet-level events"
+    );
+    let pools = fleet.pools();
+    fleet.stop();
+    assert_eq!(pools.len(), 1, "one replica, one incarnation, one pool");
+    assert_eq!(pools[0].pages_in_use(), 0);
+
+    for (id, (tokens, err)) in &through_fleet {
+        assert!(err.is_none(), "request {id} failed through the fleet: {err:?}");
+        assert_eq!(
+            tokens,
+            &bare.completions[id].0,
+            "request {id}: fleet stream diverged from the bare coordinator"
+        );
+    }
+}
+
+/// Tentpole: replica-kill storm. All three replica-level fault sites
+/// armed over a 3-replica fleet with a tight stall detector. Every
+/// request is answered exactly once within the deadlock bound, every
+/// *successful* stream is bitwise identical to the clean run (failover
+/// replays are exact), and every incarnation's pool drains to zero.
+#[test]
+fn replica_kill_storm_serves_exactly_once_with_bitwise_failover() {
+    let s = chaos_seed();
+    let plan = fleet_plan(24);
+    let expected = clean_streams(&plan);
+
+    let spec =
+        format!("replica_crash:0.02:{s},replica_stall_ms:0.05:{s}:60,heartbeat_drop:0.3:{s}");
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
+    let mut fleet = Fleet::start_with_faults(
+        &eng,
+        FleetConfig {
+            replicas: 3,
+            batcher: BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+            seed: s,
+            // tight enough that the injected 60 ms freezes get deposed
+            stall_ms: 45,
+            ..FleetConfig::default()
+        },
+        Faults::parse(&spec).unwrap(),
+    );
+    let completions = fleet_serve_and_drain(&fleet, &plan);
+    let m = fleet.metrics();
+    let pools = fleet.pools();
+    fleet.stop();
+
+    let mut ok = 0usize;
+    for (id, (tokens, err)) in &completions {
+        if err.is_some() {
+            // exhausted failovers / every replica lost: legal under a storm
+            continue;
+        }
+        ok += 1;
+        assert_eq!(
+            tokens,
+            &expected[id],
+            "request {id}: failover replay diverged from the clean stream"
+        );
+    }
+    assert!(ok > 0, "the storm must not fail every request: {}", m.summary());
+    for (i, p) in pools.iter().enumerate() {
+        assert_eq!(
+            (p.pages_in_use(), p.logical_pages()),
+            (0, 0),
+            "incarnation pool {i}/{} still holds pages or mappings after the storm",
+            pools.len()
+        );
+    }
+}
+
+/// Tentpole: zero-downtime rolling restart. Cycling every replica while a
+/// load is in flight drops nothing — all requests succeed with clean-run
+/// streams, each replica comes back Healthy, and both generations of
+/// every pool drain.
+#[test]
+fn rolling_restart_under_load_drops_nothing() {
+    let plan = fleet_plan(24);
+    let expected = clean_streams(&plan);
+    let (first, second) = plan.split_at(12);
+
+    let eng = engine(KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true });
+    let mut fleet = Fleet::start(
+        &eng,
+        FleetConfig {
+            replicas: 3,
+            batcher: BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+            seed: 9,
+            stall_ms: 5_000,
+            ..FleetConfig::default()
+        },
+    );
+    for (id, prompt, max_new) in first {
+        fleet
+            .submit(Request {
+                id: *id,
+                prompt: prompt.clone(),
+                max_new: *max_new,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    // cycle every replica while the first half is still in flight: each
+    // drains its own sessions before stopping, the others keep serving
+    fleet.rolling_restart().unwrap();
+    assert!(
+        fleet.statuses().iter().all(|s| *s == ReplicaStatus::Healthy),
+        "every replica must come back Healthy: {:?}",
+        fleet.statuses()
+    );
+    for (id, prompt, max_new) in second {
+        fleet
+            .submit(Request {
+                id: *id,
+                prompt: prompt.clone(),
+                max_new: *max_new,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    let mut completions = HashMap::new();
+    while completions.len() < plan.len() {
+        match fleet.next_completion(Duration::from_secs(30)) {
+            CompletionWait::Ready(c) => {
+                assert!(
+                    completions.insert(c.id, (c.tokens, c.error)).is_none(),
+                    "duplicate completion for request {}",
+                    c.id
+                );
+            }
+            CompletionWait::Disconnected => panic!("fleet died during rolling restart"),
+            CompletionWait::TimedOut => panic!(
+                "deadlock during rolling restart: {}/{} completions",
+                completions.len(),
+                plan.len()
+            ),
+        }
+    }
+    let m = fleet.metrics();
+    let pools = fleet.pools();
+    fleet.stop();
+
+    assert_eq!(
+        (m.planned_restarts, m.failed),
+        (3, 0),
+        "rolling restart must cycle all three replicas and drop nothing"
+    );
+    assert_eq!(pools.len(), 6, "three original + three cycled incarnation pools");
+    for (i, p) in pools.iter().enumerate() {
+        assert_eq!((p.pages_in_use(), p.logical_pages()), (0, 0), "incarnation pool {i} leaked");
+    }
+    for (id, (tokens, err)) in &completions {
+        assert!(err.is_none(), "request {id} failed during rolling restart: {err:?}");
+        assert_eq!(tokens, &expected[id], "request {id} diverged across the restart");
     }
 }
