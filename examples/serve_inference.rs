@@ -8,6 +8,7 @@
 //!          [--batched false]                      # sequential A/B baseline
 //!          [--kv-page 64] [--kv-pool-pages 0]     # KV paging (0 = unbounded)
 //!          [--prefix-cache false]                 # disable CoW prefix sharing
+//!          [--attn-threshold 8.0]                 # BLASST dynamic attention sparsity
 //!          [--replicas 3]                         # replicated fleet tier
 //!          [--ckpt path.bin --config llama-sim]   # serve trained weights
 //!
@@ -24,7 +25,7 @@ use anyhow::Result;
 use blast::coordinator::{BatcherConfig, Coordinator, Fleet, FleetConfig, Request};
 use blast::eval::kernel_exps::{fig6_config, fig6_params, random_masks};
 use blast::model::config::NativeConfig;
-use blast::model::engine::{Engine, MlpMode};
+use blast::model::engine::{AttnOptions, Engine, MlpMode};
 use blast::model::kv::{KvOptions, DEFAULT_KV_PAGE};
 use blast::model::params::ParamStore;
 use blast::runtime::Runtime;
@@ -51,6 +52,13 @@ fn main() -> Result<()> {
         // default on; off restores the unshared pool byte-for-byte
         prefix_cache: args.get_bool_or("prefix-cache", true),
     };
+    // BLASST dynamic attention sparsity: omitted = exact attention
+    // (bit-identical to previous releases); NaN/negative τ panics here
+    // and the engine rejects it again at build time
+    let attn = AttnOptions { threshold: args.get_threshold("attn-threshold") };
+    if let Some(tau) = attn.threshold {
+        println!("attn threshold: tau={tau} (skipped-tile counters appear in the summaries)");
+    }
 
     // weights: either a checkpoint trained by examples/pretrain_gpt2 /
     // `blast train --save`, or a synthetic model
@@ -74,7 +82,8 @@ fn main() -> Result<()> {
     // spread, supervision and zero-downtime restarts
     let replicas = args.get_usize("replicas", 1);
     for mode in [MlpMode::Dense, MlpMode::Sparse] {
-        let engine = Arc::new(Engine::new_with_kv(cfg.clone(), &params, &masks, mode, kv)?);
+        let engine =
+            Arc::new(Engine::new_with_opts(cfg.clone(), &params, &masks, mode, kv, attn)?);
         println!(
             "\n=== mode {mode:?} ({}, kv-page {}, replicas {}) — MLP bytes resident {} KiB ===",
             if batched { "batched rounds" } else { "sequential rounds" },

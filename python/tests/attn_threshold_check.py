@@ -1,0 +1,369 @@
+"""Pure-python/numpy transliteration of PR 9's BLASST dynamic attention
+sparsity (rust/src/kernels/attention.rs causal_tile + the thresh decode
+kernel, and the per-page K norm stamps in rust/src/model/kv.rs).
+
+No Rust toolchain ships in this container (same as PRs 1-8), so the new
+skip rule is pinned here against independent oracles:
+
+  1. the prefill k-tile skip rule (skip a causally-live row when
+     scale*max(scores) < m[i] - tau, first contributing tile never skips
+     because m starts at -inf, NaN falls through to the exact path):
+     a float32 transliteration of the tiled streaming-softmax kernel
+     with and without the threshold, checking
+       - tau=off and huge-tau outputs are BITWISE identical to the exact
+         tiled path (np.float32 arrays compared via tobytes()),
+       - the advertised mass bound: each skipped (row, tile)'s true
+         post-softmax mass, measured on the exact kernel's weights, is
+         <= valid_count * e^(-tau),
+       - surviving rows run the identical m/l recurrence: the running
+         max/sum chain restricted to surviving tiles matches the exact
+         chain bit-for-bit at every step,
+       - skipped-row counts are non-increasing in tau and drift collapses
+         to exactly zero at huge tau;
+  2. the paged-decode page-skip rule (Cauchy-Schwarz bound
+     qnorm * k_stamp * scale < m - tau; skipped slots filled with -inf so
+     one softmax over the whole buffer keeps no-skip runs bit-identical):
+       - soundness: the stamp bound dominates every true score in the
+         page, for random and adversarial (RoPE-rotated) keys,
+       - huge-tau decode output is bitwise identical to the exact paged
+         decode, page boundaries swept at page-1/page/page+1,
+       - each skipped position's exact softmax weight is < e^(-tau)
+         relative to the row max;
+  3. the per-page stamp lifecycle (rust/src/model/kv.rs): fresh pages
+     start at zero, writes fold in the new K row's norm with a monotone
+     max (overwrite by a smaller key keeps the old sound bound), CoW
+     copies the donor's stamps and leaves the donor untouched, recycled
+     page buffers never leak stale stamps;
+  4. the threshold validation rule shared by the CLI and the engine
+     (finite and >= 0; NaN/inf/negatives rejected, 0 accepted).
+
+Run: python3 python/tests/attn_threshold_check.py   (prints ALL OK)
+"""
+
+import math
+
+import numpy as np
+
+checks = []
+
+
+def check(name, ok):
+    checks.append((name, bool(ok)))
+    print(("PASS" if ok else "FAIL"), name)
+    assert ok, name
+
+
+f32 = np.float32
+
+# tile shape constants from rust/src/kernels/attention.rs
+TQ, TK = 32, 64
+
+# ---------------------------------------------------------------------
+# 1. prefill k-tile skip rule
+# ---------------------------------------------------------------------
+
+
+def tiled_prefill(q, k, v, offset, tau=None, trace=None, skipped_out=None):
+    """float32 transliteration of causal_tile for one head.
+
+    q: (q_rows, hd) queries for global rows offset..offset+q_rows;
+    k, v: (kv_len, hd). tau=None is the exact path (the Rust plain entry
+    points delegate to the thresh kernel with None, so this single
+    function mirrors the real code shape). trace, when a list, records
+    (qt, k0, i, m, l) after every surviving-row update; skipped_out,
+    when a list, records (global_row, k0, k1) per thresholded row.
+    """
+    q = q.astype(f32)
+    k = k.astype(f32)
+    v = v.astype(f32)
+    q_rows, hd = q.shape
+    scale = f32(1.0 / math.sqrt(hd))
+    out = np.zeros((q_rows, hd), dtype=f32)
+    for qt in range((q_rows + TQ - 1) // TQ):
+        i0, i1 = qt * TQ, min(qt * TQ + TQ, q_rows)
+        tq = i1 - i0
+        m = np.full(tq, -np.inf, dtype=f32)
+        l = np.zeros(tq, dtype=f32)
+        acc = np.zeros((tq, hd), dtype=f32)
+        kend = offset + i1
+        k0 = 0
+        while k0 < kend:
+            k1 = min(k0 + TK, kend)
+            tk = k1 - k0
+            # score GEMM always runs -- it produces the statistic the
+            # skip test thresholds (float32 accumulate like the kernel)
+            s = q[i0:i1] @ k[k0:k1].T
+            p = np.zeros((tq, tk), dtype=f32)
+            live = 0
+            thresh_skips = 0
+            for i in range(tq):
+                gi = offset + i0 + i
+                valid = min(max(gi + 1 - k0, 0), tk)
+                if valid == 0:
+                    continue  # causally dead: P column already zero
+                if tau is not None:
+                    # scale*max is the scaled row max (scale > 0 is
+                    # monotone); m starts at -inf so the first
+                    # contributing tile can never skip
+                    if f32(np.max(s[i, :valid])) * scale < m[i] - f32(tau):
+                        if skipped_out is not None:
+                            skipped_out.append((gi, k0, k1))
+                        thresh_skips += 1
+                        continue
+                live += 1
+                row = s[i, :valid] * scale
+                row_max = f32(np.max(row))
+                new_m = max(m[i], row_max)
+                alpha = f32(np.exp(f32(m[i] - new_m)))
+                if alpha != f32(1.0):
+                    acc[i] *= alpha
+                e = np.exp(row - new_m).astype(f32)
+                p[i, :valid] = e
+                l[i] = f32(l[i] * alpha + f32(np.sum(e)))
+                m[i] = new_m
+                if trace is not None:
+                    trace.append((qt, k0, i, float(m[i]), float(l[i])))
+            if tau is not None and live == 0 and thresh_skips > 0:
+                k0 = k1  # P tile all zero: the P.V GEMM is pure skipped work
+                continue
+            acc += (p @ v[k0:k1]).astype(f32)
+            k0 = k1
+        out[i0:i1] = acc / l[:, None]
+    return out
+
+
+rng = np.random.default_rng(9)
+hd, q_rows, kv_len = 16, 70, 70
+q = rng.standard_normal((q_rows, hd)).astype(f32)
+k = rng.standard_normal((kv_len, hd)).astype(f32)
+v = rng.standard_normal((kv_len, hd)).astype(f32)
+# spike a few keys so finite tau actually skips something
+for j in (3, 40):
+    k[j] *= f32(6.0)
+
+exact = tiled_prefill(q, k, v, 0)
+check(
+    "prefill: tau=off is the exact path (bitwise)",
+    tiled_prefill(q, k, v, 0, tau=None).tobytes() == exact.tobytes(),
+)
+check(
+    "prefill: huge tau is bitwise identical to exact",
+    tiled_prefill(q, k, v, 0, tau=1e30).tobytes() == exact.tobytes(),
+)
+
+# offset (prefix-resume) arm: rows offset.. of the full kernel
+off = 33
+exact_off = tiled_prefill(q[off:], k, v, off)
+check(
+    "prefill offset: huge tau bitwise identical to exact",
+    tiled_prefill(q[off:], k, v, off, tau=1e30).tobytes() == exact_off.tobytes(),
+)
+check(
+    "prefill offset: exact resume rows match full-prefill rows",
+    np.max(np.abs(exact_off - exact[off:])) < 2e-6,
+)
+
+# mass bound: for each thresholded (row, tile), the true post-softmax
+# mass of the skipped span is <= valid_count * e^(-tau)
+TAU = 3.0
+skipped = []
+armed = tiled_prefill(q, k, v, 0, tau=TAU, skipped_out=skipped)
+check("prefill: finite tau actually skipped rows on spiky keys", len(skipped) > 0)
+scale = 1.0 / math.sqrt(hd)
+ok_mass = True
+ok_first = True
+for gi, k0, k1 in skipped:
+    ok_first &= k0 > 0  # the first contributing tile can never skip
+    sc = (q[gi].astype(np.float64) @ k[: gi + 1].astype(np.float64).T) * scale
+    w = np.exp(sc - np.max(sc))
+    w /= w.sum()
+    valid = min(gi + 1, k1) - k0
+    ok_mass &= w[k0 : k0 + valid].sum() <= valid * math.exp(-TAU) * (1 + 1e-6)
+check("prefill: first contributing tile never skips", ok_first)
+check("prefill: skipped mass <= count * e^(-tau) per (row, tile)", ok_mass)
+
+# surviving rows run the identical m/l recurrence: the armed trace is a
+# subsequence of the exact trace (same bits at every surviving step)
+tr_exact, tr_armed = [], []
+tiled_prefill(q, k, v, 0, trace=tr_exact)
+tiled_prefill(q, k, v, 0, tau=TAU, trace=tr_armed)
+exact_steps = {(qt, k0, i): (m, l) for qt, k0, i, m, l in tr_exact}
+skipset = {(gi, k0) for gi, k0, _ in skipped}
+ok_chain = True
+for qt, k0, i, m, l in tr_armed:
+    gi = qt * TQ + i
+    # a surviving step whose row never skipped before this tile must
+    # carry the exact chain's bits; after a skip the chains diverge
+    # (that divergence is the approximation), so only compare prefixes
+    if any((gi, kk) in skipset for kk in range(0, k0, TK)):
+        continue
+    ok_chain &= exact_steps[(qt, k0, i)] == (m, l)
+check("prefill: pre-skip m/l chain is bitwise the exact chain", ok_chain)
+
+# monotonicity: rows skipped non-increasing in tau, drift -> 0
+prev_skips, prev_drift = None, None
+ok_mono, ok_drift = True, True
+for tau in (0.5, 2.0, 4.0, 8.0, 1e30):
+    sk = []
+    o = tiled_prefill(q, k, v, 0, tau=tau, skipped_out=sk)
+    drift = float(np.max(np.abs(o - exact)))
+    if prev_skips is not None:
+        ok_mono &= len(sk) <= prev_skips
+        ok_drift &= drift <= prev_drift + 1e-6
+    prev_skips, prev_drift = len(sk), drift
+check("prefill: skipped rows non-increasing in tau", ok_mono)
+check("prefill: drift non-increasing in tau", ok_drift)
+check("prefill: huge-tau drift is exactly zero", prev_drift == 0.0)
+
+# ---------------------------------------------------------------------
+# 2. paged-decode page-skip rule
+# ---------------------------------------------------------------------
+
+
+def decode_paged(qv, kpages, vpages, pos, page, stamps=None, tau=None):
+    """float32 transliteration of decode_head_paged_(thresh_)into."""
+    qv = qv.astype(f32)
+    hd = qv.shape[0]
+    scale = f32(1.0 / math.sqrt(hd))
+    n = pos + 1
+    n_pages = (n + page - 1) // page
+    scores = np.empty(n, dtype=f32)
+    skipped = np.zeros(n_pages, dtype=bool)
+    if tau is not None:
+        qnorm = f32(math.sqrt(float(np.dot(qv, qv))))
+        m = f32(-np.inf)
+    for pi in range(n_pages):
+        base = pi * page
+        cnt = min(n - base, page)
+        if tau is not None and qnorm * f32(stamps[pi]) * scale < m - f32(tau):
+            scores[base : base + cnt] = -np.inf
+            skipped[pi] = True
+            continue
+        for j in range(cnt):
+            scores[base + j] = f32(np.dot(qv, kpages[pi][j])) * scale
+        if tau is not None:
+            m = max(m, f32(np.max(scores[base : base + cnt])))
+    # one softmax over the whole buffer (exp(-inf - max) = 0)
+    mx = f32(np.max(scores))
+    e = np.exp(scores - mx).astype(f32)
+    w = (e / f32(np.sum(e))).astype(f32)
+    out = np.zeros(hd, dtype=f32)
+    for pi in range(n_pages):
+        if skipped[pi]:
+            continue
+        base = pi * page
+        cnt = min(n - base, page)
+        for j in range(cnt):
+            out += w[base + j] * vpages[pi][j]
+    return out, int(skipped.sum()), w
+
+
+def rope(x, theta):
+    """Pairwise rotation -- an isometry, so K norms (and stamps) hold."""
+    y = x.copy()
+    for d0 in range(0, x.shape[-1], 2):
+        c, s = math.cos(theta * (d0 + 1)), math.sin(theta * (d0 + 1))
+        y[..., d0] = c * x[..., d0] - s * x[..., d0 + 1]
+        y[..., d0 + 1] = s * x[..., d0] + c * x[..., d0 + 1]
+    return y
+
+
+page = 4
+ok_bitwise, ok_sound, ok_weight = True, True, True
+saw_skip = False
+for pos in (page - 2, page - 1, page, page + 1, 3 * page, 3 * page + 1):
+    n = pos + 1
+    n_pages = (n + page - 1) // page
+    qv = rng.standard_normal(hd).astype(f32)
+    kp, vp, stamps = [], [], []
+    for pi in range(n_pages):
+        cnt = min(n - pi * page, page)
+        kk = rng.standard_normal((page, hd)).astype(f32)
+        if pi == 0:
+            kk *= f32(5.0)  # early spike => later quiet pages can skip
+        kk = rope(kk, 0.3 * pi).astype(f32)
+        kp.append(kk)
+        vp.append(rng.standard_normal((page, hd)).astype(f32))
+        # stamp = max written K row norm (only written rows count)
+        stamps.append(float(np.max(np.linalg.norm(kk[:cnt].astype(np.float64), axis=1))))
+    exact_out, _, w_exact = decode_paged(qv, kp, vp, pos, page)
+    huge_out, huge_skips, _ = decode_paged(qv, kp, vp, pos, page, stamps, tau=1e30)
+    ok_bitwise &= huge_out.tobytes() == exact_out.tobytes() and huge_skips == 0
+    # soundness: the Cauchy-Schwarz stamp bound dominates every true score
+    scale64 = 1.0 / math.sqrt(hd)
+    qn = float(np.linalg.norm(qv.astype(np.float64)))
+    for pi in range(n_pages):
+        cnt = min(n - pi * page, page)
+        true_best = float(np.max(kp[pi][:cnt].astype(np.float64) @ qv.astype(np.float64))) * scale64
+        ok_sound &= qn * stamps[pi] * scale64 >= true_best - 1e-9
+    # finite tau: every skipped position's exact weight < e^(-tau) of max
+    tau = 2.0
+    _, skips, w_armed = decode_paged(qv, kp, vp, pos, page, stamps, tau=tau)
+    saw_skip |= skips > 0
+    for j in np.nonzero(w_armed == 0.0)[0]:
+        ok_weight &= w_exact[j] <= math.exp(-tau) * float(np.max(w_exact)) * (1 + 1e-6)
+check("decode: huge tau bitwise identical to exact across page boundaries", ok_bitwise)
+check("decode: stamp bound dominates every true score (RoPE keys)", ok_sound)
+check("decode: finite tau skipped at least one page", saw_skip)
+check("decode: skipped weights < e^(-tau) of the row max", ok_weight)
+
+# ---------------------------------------------------------------------
+# 3. per-page stamp lifecycle
+# ---------------------------------------------------------------------
+
+layers, heads = 2, 3
+
+
+class Page:
+    """KvPage: stamps live on the struct, never on a recycled buffer."""
+
+    def __init__(self):
+        self.kmax = np.zeros(layers * heads, dtype=f32)
+
+    def write(self, layer, head, krow):
+        norm = f32(math.sqrt(float(np.dot(krow, krow))))
+        slot = layer * heads + head
+        self.kmax[slot] = max(self.kmax[slot], norm)  # monotone
+
+    def cow(self):
+        c = Page()
+        c.kmax = self.kmax.copy()  # donor bits carry the donor bounds
+        return c
+
+
+p = Page()
+check("stamps: fresh page starts at zero", float(p.kmax.max()) == 0.0)
+p.write(1, 2, np.array([3.0, 4.0], dtype=f32))
+p.write(1, 2, np.array([1.0, 0.0], dtype=f32))
+check("stamps: write folds max norm, overwrite keeps the bound", p.kmax[1 * heads + 2] == f32(5.0))
+check("stamps: untouched (layer, head) slots stay zero", p.kmax[0 * heads + 1] == f32(0.0))
+c = p.cow()
+check("stamps: CoW copies the donor stamp", c.kmax[1 * heads + 2] == f32(5.0))
+c.write(1, 2, np.array([6.0, 8.0], dtype=f32))
+check(
+    "stamps: copy raises its own bound, donor untouched",
+    c.kmax[1 * heads + 2] == f32(10.0) and p.kmax[1 * heads + 2] == f32(5.0),
+)
+check("stamps: recycled buffer reuse starts from a fresh Page", float(Page().kmax.max()) == 0.0)
+
+# ---------------------------------------------------------------------
+# 4. the validation rule (CLI get_threshold + engine build)
+# ---------------------------------------------------------------------
+
+
+def valid_tau(t):
+    return math.isfinite(t) and t >= 0.0
+
+
+check(
+    "validation: NaN, +/-inf and negatives rejected; 0 and 8.5 accepted",
+    not valid_tau(float("nan"))
+    and not valid_tau(float("inf"))
+    and not valid_tau(float("-inf"))
+    and not valid_tau(-1.0)
+    and valid_tau(0.0)
+    and valid_tau(8.5),
+)
+
+print("ALL OK" if all(ok for _, ok in checks) else "FAILURES")
+assert all(ok for _, ok in checks)

@@ -46,6 +46,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::replica::Replica;
+use crate::kernels::attention::AttnStats;
 use crate::coordinator::router::{BatcherConfig, Request};
 use crate::coordinator::server::{Completion, CompletionWait, Coordinator, HealthState};
 use crate::model::engine::Engine;
@@ -408,7 +409,31 @@ impl Fleet {
         for (r, h) in handles.iter().enumerate() {
             out.push_str(&format!("\n  replica {r}: {}", flock(h).summary()));
         }
+        if let Some(attn) = self.attn_aggregate() {
+            out.push_str(&format!(
+                "\n  fleet attn: rows_skipped={}/{} tiles_skipped={}/{} pages_skipped={}/{}",
+                attn.rows_skipped,
+                attn.rows,
+                attn.tiles_skipped,
+                attn.tiles,
+                attn.pages_skipped,
+                attn.pages,
+            ));
+        }
         out
+    }
+
+    /// BLASST skip counters summed across the current replica
+    /// incarnations, or `None` when no replica's threshold ever engaged
+    /// (exact fleets keep their summary byte-identical to pre-threshold
+    /// output). Counters from deposed incarnations retire with their
+    /// `ServeMetrics`, matching every other per-replica observable.
+    pub fn attn_aggregate(&self) -> Option<AttnStats> {
+        let mut total = AttnStats::default();
+        for h in flock(&self.serve_handles).iter() {
+            total.merge(&flock(h).attn);
+        }
+        total.engaged().then_some(total)
     }
 
     /// Stop the fleet: every replica stops, every tracked request is
@@ -1034,13 +1059,17 @@ fn forward_completion(
 mod tests {
     use super::*;
     use crate::model::config::{ModelKind, NativeConfig};
-    use crate::model::engine::MlpMode;
+    use crate::model::engine::{AttnOptions, MlpMode};
     use crate::model::kv::KvOptions;
     use crate::model::params::ParamStore;
     use crate::tensor::Tensor;
     use std::collections::BTreeMap;
 
     fn tiny_engine() -> Engine {
+        tiny_engine_with_attn(AttnOptions::default())
+    }
+
+    fn tiny_engine_with_attn(attn: AttnOptions) -> Engine {
         let cfg = NativeConfig {
             name: "t".into(),
             kind: ModelKind::Llama,
@@ -1069,12 +1098,13 @@ mod tests {
         }
         s.insert("final_norm".into(), Tensor::full(&[e], 1.0));
         s.insert("lm_head".into(), Tensor::randn(&[e, cfg.vocab], 0.1, &mut rng));
-        Engine::new_with_kv(
+        Engine::new_with_opts(
             cfg,
             &s,
             &BTreeMap::new(),
             MlpMode::Sparse,
             KvOptions { page: 4, pool_pages: Some(32), prefix_cache: true },
+            attn,
         )
         .unwrap()
     }
@@ -1238,6 +1268,62 @@ mod tests {
             other => panic!("stream ended early: {other:?}"),
         }
         assert_eq!(fleet.metrics().events.last().unwrap().chosen, 0);
+        fleet.stop();
+        for p in fleet.pools() {
+            assert_eq!(p.pages_in_use(), 0);
+        }
+    }
+
+    /// A threshold-armed fleet serves a burst exactly once and surfaces
+    /// an aggregated skip digest; an exact fleet never grows one, so its
+    /// summary stays byte-identical to pre-threshold output.
+    #[test]
+    fn fleet_aggregates_attn_skip_counters() {
+        let exact = Fleet::start(
+            &tiny_engine(),
+            FleetConfig { replicas: 2, seed: 11, ..FleetConfig::default() },
+        );
+        assert!(exact.attn_aggregate().is_none());
+        assert!(!exact.metrics_summary().contains("attn_"), "{}", exact.metrics_summary());
+
+        let base = tiny_engine_with_attn(AttnOptions { threshold: Some(1e30) });
+        let mut fleet = Fleet::start(
+            &base,
+            FleetConfig { replicas: 2, seed: 11, ..FleetConfig::default() },
+        );
+        let n = 8u64;
+        for i in 0..n {
+            fleet
+                .submit(Request {
+                    id: i,
+                    prompt: vec![1 + i as u32 % 4, 2, 3, 4, 5],
+                    max_new: 6,
+                    ..Default::default()
+                })
+                .unwrap();
+        }
+        let mut seen = HashSet::new();
+        while seen.len() < n as usize {
+            match fleet.next_completion(Duration::from_secs(30)) {
+                CompletionWait::Ready(c) => {
+                    assert!(c.error.is_none(), "request {} failed: {:?}", c.id, c.error);
+                    assert!(seen.insert(c.id));
+                }
+                other => panic!("stream ended early: {other:?}"),
+            }
+        }
+        let agg = fleet.attn_aggregate().expect("armed fleet must engage counters");
+        assert!(agg.rows > 0 && agg.pages > 0, "{agg:?}");
+        // τ=1e30 visits everything and skips nothing
+        assert_eq!(agg.rows_skipped, 0, "{agg:?}");
+        assert_eq!(agg.pages_skipped, 0, "{agg:?}");
+        // skipped ≤ visited holds per replica too
+        for h in flock(&fleet.serve_handles).iter() {
+            let a = flock(h).attn;
+            assert!(a.rows_skipped <= a.rows && a.pages_skipped <= a.pages, "{a:?}");
+        }
+        let s = fleet.metrics_summary();
+        assert!(s.contains("fleet attn: rows_skipped=0/"), "{s}");
         fleet.stop();
         for p in fleet.pools() {
             assert_eq!(p.pages_in_use(), 0);

@@ -5,6 +5,7 @@
 
 use std::time::Instant;
 
+use crate::model::engine::AttnStats;
 use crate::model::kv::PrefixStats;
 use crate::util::stats::{percentile, Welford};
 
@@ -83,6 +84,11 @@ pub struct ServeMetrics {
     /// multiplied by the logical/physical sharing ratio at its best
     /// observed moment — what the pool would have needed without sharing.
     pub kv_effective_capacity: f64,
+    /// BLASST attention skip counters, mirrored from the engine's
+    /// cumulative [`AttnStats`] snapshot. All-zero on an exact engine
+    /// (threshold off), so the summary stays byte-identical to the
+    /// pre-threshold coordinator unless the knob is armed.
+    pub attn: AttnStats,
 }
 
 impl Default for ServeMetrics {
@@ -125,6 +131,7 @@ impl ServeMetrics {
             cow_copies: 0,
             kv_logical_pages: 0,
             kv_effective_capacity: 0.0,
+            attn: AttnStats::default(),
         }
     }
 
@@ -190,6 +197,14 @@ impl ServeMetrics {
         };
         let base = capacity_pages.unwrap_or(stats.physical_pages) as f64;
         self.kv_effective_capacity = self.kv_effective_capacity.max(base * ratio);
+    }
+
+    /// Mirror the engine's cumulative BLASST skip counters. The engine
+    /// snapshot is already cumulative, so this replaces rather than
+    /// accumulates; an exact engine reports all zeros and the summary
+    /// stays unchanged.
+    pub fn record_attn(&mut self, stats: AttnStats) {
+        self.attn = stats;
     }
 
     /// Decode throughput since startup (tokens/s).
@@ -273,6 +288,21 @@ impl ServeMetrics {
                 self.prefix_pages_shared,
                 self.cow_copies,
                 self.kv_effective_capacity,
+            ));
+        }
+        // attention-skip digest appears only when a threshold-armed
+        // kernel has actually run (exact engines never count), keeping
+        // τ=off summaries byte-identical to the pre-threshold output
+        if self.attn.engaged() {
+            s.push_str(&format!(
+                " attn_rows_skipped={}/{} attn_tiles_skipped={}/{} attn_pages_skipped={}/{} attn_row_skip={:.1}%",
+                self.attn.rows_skipped,
+                self.attn.rows,
+                self.attn.tiles_skipped,
+                self.attn.tiles,
+                self.attn.pages_skipped,
+                self.attn.pages,
+                self.attn.row_skip_frac() * 100.0,
             ));
         }
         s
@@ -407,5 +437,37 @@ mod tests {
         for want in ["round_panics=2", "deadline_misses=1", "shed=4", "watchdog_trips=1"] {
             assert!(s.contains(want), "{s}");
         }
+    }
+
+    #[test]
+    fn attn_fields_appear_only_when_engaged() {
+        let mut m = ServeMetrics::new();
+        assert!(!m.summary().contains("attn_"), "{}", m.summary());
+        // an exact engine records all-zero snapshots; summary stays clean
+        m.record_attn(AttnStats::default());
+        assert!(!m.summary().contains("attn_"), "{}", m.summary());
+        // armed engine: cumulative snapshot replaces, not accumulates
+        m.record_attn(AttnStats {
+            tiles: 10,
+            tiles_skipped: 2,
+            rows: 80,
+            rows_skipped: 20,
+            pages: 6,
+            pages_skipped: 1,
+        });
+        m.record_attn(AttnStats {
+            tiles: 12,
+            tiles_skipped: 3,
+            rows: 100,
+            rows_skipped: 25,
+            pages: 8,
+            pages_skipped: 2,
+        });
+        assert_eq!(m.attn.rows, 100);
+        let s = m.summary();
+        assert!(s.contains("attn_rows_skipped=25/100"), "{s}");
+        assert!(s.contains("attn_tiles_skipped=3/12"), "{s}");
+        assert!(s.contains("attn_pages_skipped=2/8"), "{s}");
+        assert!(s.contains("attn_row_skip=25.0%"), "{s}");
     }
 }

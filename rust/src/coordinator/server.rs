@@ -859,6 +859,7 @@ fn scheduler_loop(
                 kv_pool.resident_bytes(),
             );
             m.record_prefix(&kv_pool.prefix_stats(), kv_pool.capacity_pages());
+            m.record_attn(engine.attn_stats());
         }
 
         // retire finished sessions
@@ -910,6 +911,7 @@ fn scheduler_loop(
                 kv_pool.resident_bytes(),
             );
             m.record_prefix(&kv_pool.prefix_stats(), kv_pool.capacity_pages());
+            m.record_attn(engine.attn_stats());
         }
     }
 

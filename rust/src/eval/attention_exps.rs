@@ -25,10 +25,11 @@ use anyhow::{bail, Result};
 
 use crate::eval::kernel_exps::fig6_params;
 use crate::kernels::attention::{
-    causal_attention, causal_attention_ref, decode_attention_ref, decode_head_paged_into,
+    causal_attention, causal_attention_ref, causal_attention_thresh, decode_attention_ref,
+    decode_head_paged_into, AttnCounters, AttnThreshold,
 };
 use crate::model::config::{ModelKind, NativeConfig};
-use crate::model::engine::{Engine, MlpMode};
+use crate::model::engine::{AttnOptions, Engine, MlpMode};
 use crate::model::kv::KvOptions;
 use crate::testkit::bench::{bench_cfg, black_box, fmt_time, JsonReport, Table};
 use crate::util::cli::Args;
@@ -209,6 +210,170 @@ pub fn attention(args: &Args) -> Result<()> {
         ]));
     }
     dtable.print();
+
+    // ---- BLASST threshold-skipped prefill vs the exact tiled kernel ----
+    // The A/B whose win grows with context length: same tiled kernel,
+    // with k-tile rows whose score max sits more than τ below the running
+    // row max skipped (shifted exp, P build and P·V all elided). Skipped
+    // post-softmax mass is bounded by tq·TK·e^(−τ), so drift shrinks
+    // exponentially in τ while the skipped fraction (and speedup) grows
+    // with seq. `--attn-threshold TAU` pins a single τ; `--attn-taus
+    // 2,4,8` sweeps.
+    let taus: Vec<f64> = match args.get_threshold("attn-threshold") {
+        Some(t) => vec![t as f64],
+        None => args.get_f64_list("attn-taus", &[2.0, 4.0, 8.0]),
+    };
+    let bseqs = args.get_usize_list(
+        "blasst-seqs",
+        if quick { &[512, 2048] } else { &[512, 2048, 8192] },
+    );
+    let mut btable = Table::new(
+        "BLASST threshold-skipped prefill vs exact tiled kernel (skip fraction x speedup; drift <= tq*TK*e^-tau per tile round)",
+        &["kernel", "seq", "tau", "rows-skipped", "tiles-skipped", "exact", "thresh", "speedup", "drift"],
+    );
+    for &seq in &bseqs {
+        let q = rng.normal_vec(heads * seq * hd, 1.0);
+        let k = rng.normal_vec(heads * seq * hd, 1.0);
+        let v = rng.normal_vec(heads * seq * hd, 1.0);
+        let exact = causal_attention(&q, &k, &v, heads, seq, hd);
+        let t_exact = meas("blasst-exact", quick, || {
+            black_box(causal_attention(&q, &k, &v, heads, seq, hd));
+        });
+        for &tau in &taus {
+            let counters = AttnCounters::new();
+            let th = AttnThreshold { tau: tau as f32, counters: &counters };
+            let got = causal_attention_thresh(&q, &k, &v, heads, seq, hd, Some(th));
+            let drift = max_abs_diff(&got, &exact);
+            // one-pass skip census before the clock starts inflating it
+            let st = counters.snapshot();
+            let t_thresh = meas("blasst-thresh", quick, || {
+                black_box(causal_attention_thresh(&q, &k, &v, heads, seq, hd, Some(th)));
+            });
+            let speedup = t_exact / t_thresh;
+            btable.row(&[
+                "blasst-prefill".into(),
+                seq.to_string(),
+                format!("{tau}"),
+                format!("{:.1}%", st.row_skip_frac() * 100.0),
+                format!("{:.1}%", st.tile_skip_frac() * 100.0),
+                fmt_time(t_exact),
+                fmt_time(t_thresh),
+                format!("{speedup:.2}x"),
+                format!("{drift:.1e}"),
+            ]);
+            report.push(Json::obj(vec![
+                ("kernel", Json::str("blasst-prefill")),
+                ("seq", Json::num(seq as f64)),
+                ("tau", Json::num(tau)),
+                ("row_skip_frac", Json::num(st.row_skip_frac())),
+                ("tile_skip_frac", Json::num(st.tile_skip_frac())),
+                ("exact_ns", Json::num(t_exact * 1e9)),
+                ("thresh_ns", Json::num(t_thresh * 1e9)),
+                ("speedup", Json::num(speedup)),
+                ("max_abs_drift", Json::num(drift as f64)),
+            ]));
+        }
+    }
+    btable.print();
+
+    // ---- accuracy: end-to-end logit drift vs exact across the τ sweep ----
+    // The same knob measured where it matters: an engine pair (exact vs
+    // threshold-armed) prefilling real prompts and decoding a few greedy
+    // steps, reporting max/mean logit drift plus the skip census from the
+    // armed engine's counters. Exact attention is the τ=off default; this
+    // table is what the README's accuracy-vs-speed tradeoff quotes.
+    let acc_cfg = NativeConfig {
+        name: "attn-acc-twin".into(),
+        kind: ModelKind::Llama,
+        vocab: 256,
+        emb: 256,
+        ffn: 512,
+        layers: 2,
+        heads,
+        max_seq: 512,
+        block: 32,
+    };
+    let acc_params = fig6_params(&acc_cfg, 9);
+    let acc_kv = KvOptions { page, pool_pages: None, prefix_cache: true };
+    let exact_eng = Engine::new_with_kv(
+        acc_cfg.clone(),
+        &acc_params,
+        &BTreeMap::new(),
+        MlpMode::Dense,
+        acc_kv,
+    )?;
+    let n_prompts = if quick { 2 } else { 4 };
+    let decode_steps = if quick { 2 } else { 4 };
+    let prompts: Vec<Vec<u32>> = (0..n_prompts)
+        .map(|p| {
+            (0..(96 + 64 * p))
+                .map(|i| ((i * 37 + p * 101) % acc_cfg.vocab) as u32)
+                .collect()
+        })
+        .collect();
+    // exact side once: logits per prompt at prefill + each decode step,
+    // with the greedy tokens that drive both engines (same operands)
+    let mut exact_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut drive_tokens: Vec<Vec<u32>> = Vec::new();
+    for prompt in &prompts {
+        let mut cache = exact_eng.new_cache();
+        let mut per = vec![exact_eng.prefill(prompt, &mut cache)?];
+        let mut toks = vec![Engine::argmax(&per[0])];
+        for s in 0..decode_steps {
+            per.push(exact_eng.decode(toks[s], &mut cache)?);
+            toks.push(Engine::argmax(per.last().unwrap()));
+        }
+        exact_logits.push(per);
+        drive_tokens.push(toks);
+    }
+    let mut atable = Table::new(
+        "Logit drift vs exact attention across the tau sweep (engine prefill + greedy decode)",
+        &["tau", "max-drift", "mean-drift", "rows-skipped", "pages-skipped"],
+    );
+    for &tau in &taus {
+        let armed = Engine::new_with_opts(
+            acc_cfg.clone(),
+            &acc_params,
+            &BTreeMap::new(),
+            MlpMode::Dense,
+            acc_kv,
+            AttnOptions { threshold: Some(tau as f32) },
+        )?;
+        let (mut max_drift, mut sum_drift, mut n_vals) = (0.0f64, 0.0f64, 0u64);
+        for (pi, prompt) in prompts.iter().enumerate() {
+            let mut cache = armed.new_cache();
+            let mut got = vec![armed.prefill(prompt, &mut cache)?];
+            for s in 0..decode_steps {
+                got.push(armed.decode(drive_tokens[pi][s], &mut cache)?);
+            }
+            for (g, e) in got.iter().zip(&exact_logits[pi]) {
+                for (a, b) in g.iter().zip(e.iter()) {
+                    let d = (*a as f64 - *b as f64).abs();
+                    max_drift = max_drift.max(d);
+                    sum_drift += d;
+                    n_vals += 1;
+                }
+            }
+        }
+        let mean_drift = sum_drift / n_vals.max(1) as f64;
+        let st = armed.attn_stats();
+        atable.row(&[
+            format!("{tau}"),
+            format!("{max_drift:.2e}"),
+            format!("{mean_drift:.2e}"),
+            format!("{}/{} ({:.1}%)", st.rows_skipped, st.rows, st.row_skip_frac() * 100.0),
+            format!("{}/{} ({:.1}%)", st.pages_skipped, st.pages, st.page_skip_frac() * 100.0),
+        ]);
+        report.push(Json::obj(vec![
+            ("kernel", Json::str("accuracy")),
+            ("tau", Json::num(tau)),
+            ("max_logit_drift", Json::num(max_drift)),
+            ("mean_logit_drift", Json::num(mean_drift)),
+            ("row_skip_frac", Json::num(st.row_skip_frac())),
+            ("page_skip_frac", Json::num(st.page_skip_frac())),
+        ]));
+    }
+    atable.print();
 
     // ---- resident KV memory: 64-token session, paged vs flat bound ----
     // A long-context engine (the deployment shape paging exists for): the

@@ -33,7 +33,7 @@ use crate::coordinator::{
     BatcherConfig, CompletionWait, Coordinator, Fleet, FleetConfig, Request,
 };
 use crate::model::config::{ModelKind, NativeConfig};
-use crate::model::engine::{Engine, MlpMode};
+use crate::model::engine::{AttnOptions, Engine, MlpMode};
 use crate::model::kv::KvOptions;
 use crate::model::params::ParamStore;
 use crate::sparse::BlockMask;
@@ -103,16 +103,23 @@ struct RunReport {
 
 /// One chaos run: serve `n` requests under `faults`, enforce the
 /// invariants, and report what happened.
-fn run_one(faults: Faults, n: usize, deadline_ms: Option<u64>) -> Result<RunReport> {
+fn run_one(
+    faults: Faults,
+    n: usize,
+    deadline_ms: Option<u64>,
+    attn: AttnOptions,
+) -> Result<RunReport> {
     let cfg = chaos_config();
-    let engine = Arc::new(Engine::new_with_kv(
+    let engine = Arc::new(Engine::new_with_opts(
         cfg.clone(),
         &chaos_params(&cfg, 1),
         &chaos_masks(&cfg, 0.5, 2),
         MlpMode::Sparse,
         // bounded pool: admission gating and retirement accounting are on
         KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true },
+        attn,
     )?);
+    let engine_stats = engine.clone();
     let pool = engine.kv_pool().clone();
     let mut coord = Coordinator::start_with_faults(
         engine,
@@ -184,6 +191,16 @@ fn run_one(faults: Faults, n: usize, deadline_ms: Option<u64>) -> Result<RunRepo
     if leak != 0 {
         bail!("invariant violated: {leak} KV pages still held after drain");
     }
+    // skip counters stay internally consistent under chaos: a threshold
+    // can never skip more than it visited, and an exact engine never
+    // counts at all
+    let st = engine_stats.attn_stats();
+    if st.rows_skipped > st.rows || st.tiles_skipped > st.tiles || st.pages_skipped > st.pages {
+        bail!("invariant violated: attention skip counters exceed visits: {st:?}");
+    }
+    if engine_stats.attn_threshold().is_none() && st.engaged() {
+        bail!("invariant violated: exact engine moved skip counters: {st:?}");
+    }
     if !disconnected && seen.len() != submitted {
         bail!(
             "invariant violated: {}/{submitted} accepted requests answered",
@@ -211,14 +228,16 @@ fn run_fleet_storm(
     n: usize,
     replicas: usize,
     stall_ms: u64,
+    attn: AttnOptions,
 ) -> Result<FleetReport> {
     let cfg = chaos_config();
-    let engine = Engine::new_with_kv(
+    let engine = Engine::new_with_opts(
         cfg.clone(),
         &chaos_params(&cfg, 1),
         &chaos_masks(&cfg, 0.5, 2),
         MlpMode::Sparse,
         KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true },
+        attn,
     )?;
     let mut fleet = Fleet::start_with_faults(
         &engine,
@@ -273,6 +292,13 @@ fn run_fleet_storm(
     }
     let metrics = fleet.metrics_summary();
     let statuses = format!("{:?}", fleet.statuses());
+    // aggregated skip counters stay consistent across incarnations
+    if let Some(st) = fleet.attn_aggregate() {
+        if st.rows_skipped > st.rows || st.tiles_skipped > st.tiles || st.pages_skipped > st.pages
+        {
+            bail!("invariant violated: fleet attention skip counters exceed visits: {st:?}");
+        }
+    }
     let pools = fleet.pools();
     fleet.stop();
     // after stop() every session on every incarnation has retired
@@ -286,11 +312,16 @@ fn run_fleet_storm(
     Ok(FleetReport { ok, errored, pool_leak: leak, metrics, statuses })
 }
 
-/// `blast exp chaos [--requests N --seed S --deadline-ms D --replicas R]`.
+/// `blast exp chaos [--requests N --seed S --deadline-ms D --replicas R
+/// --attn-threshold TAU]`.
 pub fn chaos(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", if args.get_bool("quick") { 8 } else { 24 });
     let seed = args.get_usize("seed", 1) as u64;
     let deadline = args.get_usize("deadline-ms", 2_000) as u64;
+    // `--attn-threshold TAU` arms BLASST dynamic attention sparsity on
+    // every chaos engine — the storms then also prove the skip counters
+    // stay consistent (skipped <= visited) under faults
+    let attn = AttnOptions { threshold: args.get_threshold("attn-threshold") };
     let plans: Vec<(&str, String)> = vec![
         ("baseline", String::new()),
         ("round panic", format!("decode_round_panic:0.15:{seed}")),
@@ -311,10 +342,13 @@ pub fn chaos(args: &Args) -> Result<()> {
     println!(
         "chaos sweep: {n} requests/run, seed {seed}, deadline {deadline}ms on stall runs\n"
     );
+    if let Some(tau) = attn.threshold {
+        println!("attn threshold armed: tau={tau}\n");
+    }
     for (label, spec) in &plans {
         let faults = if spec.is_empty() { Faults::disabled() } else { Faults::parse(spec)? };
         let deadline_ms = if spec.contains("stall") { Some(deadline) } else { None };
-        let r = run_one(faults, n, deadline_ms)?;
+        let r = run_one(faults, n, deadline_ms, attn)?;
         println!(
             "[{label}] ok {} / errored {}{}  health {}  pool leak {}",
             r.ok,
@@ -349,7 +383,7 @@ pub fn chaos(args: &Args) -> Result<()> {
             // armed runs tighten the stall detector so injected 60ms
             // freezes are actually deposed
             let stall_ms = if spec.is_empty() { 250 } else { 40 };
-            let r = run_fleet_storm(faults, n, replicas, stall_ms)?;
+            let r = run_fleet_storm(faults, n, replicas, stall_ms, attn)?;
             println!(
                 "[{label}] ok {} / errored {}  pool leak {}",
                 r.ok, r.errored, r.pool_leak

@@ -27,6 +27,8 @@
 //! Layout: `(heads, seq, hd)` per layer for prefill operands; merged
 //! `(seq, heads*hd)` outputs.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::kernels::microkernel::microkernel_d;
 use crate::kernels::ops::{softmax_row, softmax_row_scalar};
 use crate::kernels::pack::pack_kt_panel;
@@ -38,6 +40,157 @@ pub const TQ: usize = 32;
 
 /// Key positions per prefill tile (score columns per streaming step).
 pub const TK: usize = 64;
+
+// ---------------------------------------------------------------------
+// BLASST dynamic blocked attention sparsity
+// ---------------------------------------------------------------------
+//
+// The streaming-softmax recurrence already tracks the exact statistic
+// BLASST ("Dynamic BLocked Attention Sparsity via Softmax Thresholding")
+// thresholds on: the per-row running score max `m`. When a k-tile row's
+// score max falls more than τ below `m`, every one of its post-softmax
+// weights is < e^(−τ) relative to the *final* max (the running max only
+// grows, so `max < m_now − τ` implies `max < m_final − τ`), and the
+// row's whole contribution from that tile carries post-softmax mass
+// ≤ TK·e^(−τ). Skipping the shifted-exp, the `P` column build and the
+// `P·V` accumulation for that row leaves the `m`/`l`/`acc` recurrence
+// untouched and well-defined — the tile simply contributes nothing,
+// exactly like a causally-masked tile.
+//
+// τ is a per-engine knob (`AttnOptions { threshold }`): `None` (the
+// default) takes the exact code path below, bit-for-bit the PR-8
+// kernels; `Some(τ)` arms the skip test, which costs one extra
+// `tile_max` reduction per k-tile row (its own dispatch lane).
+
+/// Cumulative dynamic-sparsity counters, shared by every prefill/decode
+/// call of one engine (replicas get their own). Only armed (`τ = Some`)
+/// kernel paths ever increment, so an exact engine's counters stay
+/// zero and `ServeMetrics` can print them conditionally without
+/// disturbing byte-identical summaries.
+#[derive(Debug, Default)]
+pub struct AttnCounters {
+    tiles: AtomicU64,
+    tiles_skipped: AtomicU64,
+    rows: AtomicU64,
+    rows_skipped: AtomicU64,
+    pages: AtomicU64,
+    pages_skipped: AtomicU64,
+}
+
+impl AttnCounters {
+    /// Fresh all-zero counters.
+    pub fn new() -> AttnCounters {
+        AttnCounters::default()
+    }
+
+    /// One self-consistent-enough snapshot (relaxed loads: counters are
+    /// monotone and only read for reporting).
+    pub fn snapshot(&self) -> AttnStats {
+        AttnStats {
+            tiles: self.tiles.load(Ordering::Relaxed),
+            tiles_skipped: self.tiles_skipped.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            rows_skipped: self.rows_skipped.load(Ordering::Relaxed),
+            pages: self.pages.load(Ordering::Relaxed),
+            pages_skipped: self.pages_skipped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Accumulate one prefill item's locally-counted tile/row totals
+    /// (one relaxed add per field per `(head, q-tile)` item, not per
+    /// tile — the hot loop touches only locals).
+    fn add_prefill(&self, tiles: u64, tiles_skipped: u64, rows: u64, rows_skipped: u64) {
+        self.tiles.fetch_add(tiles, Ordering::Relaxed);
+        self.tiles_skipped.fetch_add(tiles_skipped, Ordering::Relaxed);
+        self.rows.fetch_add(rows, Ordering::Relaxed);
+        self.rows_skipped.fetch_add(rows_skipped, Ordering::Relaxed);
+    }
+
+    /// Accumulate one paged-decode head call's page totals.
+    fn add_decode(&self, pages: u64, pages_skipped: u64) {
+        self.pages.fetch_add(pages, Ordering::Relaxed);
+        self.pages_skipped.fetch_add(pages_skipped, Ordering::Relaxed);
+    }
+}
+
+/// Plain-value snapshot of [`AttnCounters`] — what `ServeMetrics`, the
+/// fleet aggregation and the eval harnesses report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AttnStats {
+    /// k-tile × row-group visits while armed (prefill skip-test
+    /// denominators).
+    pub tiles: u64,
+    /// k-tiles whose `P·V` micro-GEMM was skipped outright (every
+    /// causally-live row thresholded out).
+    pub tiles_skipped: u64,
+    /// Per-row k-tile visits while armed (causally live rows only).
+    pub rows: u64,
+    /// Rows whose shifted-exp + `P` column were skipped by the
+    /// threshold.
+    pub rows_skipped: u64,
+    /// KV pages visited by armed paged decode.
+    pub pages: u64,
+    /// Pages skipped whole by the norm-bound test.
+    pub pages_skipped: u64,
+}
+
+impl AttnStats {
+    /// Whether any armed kernel ran (exact engines stay `false`).
+    pub fn engaged(&self) -> bool {
+        self.tiles != 0 || self.pages != 0
+    }
+
+    /// Fraction of row-level tile work skipped in prefill (0.0 when
+    /// nothing ran).
+    pub fn row_skip_frac(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.rows_skipped as f64 / self.rows as f64
+        }
+    }
+
+    /// Fraction of whole k-tiles whose `P·V` GEMM was skipped.
+    pub fn tile_skip_frac(&self) -> f64 {
+        if self.tiles == 0 {
+            0.0
+        } else {
+            self.tiles_skipped as f64 / self.tiles as f64
+        }
+    }
+
+    /// Fraction of decode pages skipped whole.
+    pub fn page_skip_frac(&self) -> f64 {
+        if self.pages == 0 {
+            0.0
+        } else {
+            self.pages_skipped as f64 / self.pages as f64
+        }
+    }
+
+    /// Counter-wise sum — the fleet aggregation.
+    pub fn merge(&mut self, o: &AttnStats) {
+        self.tiles += o.tiles;
+        self.tiles_skipped += o.tiles_skipped;
+        self.rows += o.rows;
+        self.rows_skipped += o.rows_skipped;
+        self.pages += o.pages;
+        self.pages_skipped += o.pages_skipped;
+    }
+}
+
+/// An armed threshold: τ plus the counters the kernels report into.
+/// `Copy` so it threads through the thread-pool closures by value.
+#[derive(Clone, Copy)]
+pub struct AttnThreshold<'a> {
+    /// Skip a k-tile row when its score max falls more than this far
+    /// below the running row max (post-softmax mass of everything
+    /// skipped is ≤ count·e^(−τ)). Must be finite and ≥ 0 — the engine
+    /// validates at build time.
+    pub tau: f32,
+    /// Where skip/visit counts accumulate.
+    pub counters: &'a AttnCounters,
+}
 
 /// Causal self-attention over a full sequence (prefill / training-eval),
 /// tiled with streaming softmax.
@@ -60,7 +213,22 @@ pub fn causal_attention(
     seq: usize,
     hd: usize,
 ) -> Vec<f32> {
-    causal_attention_offset(q, k, v, heads, seq, seq, hd)
+    causal_attention_thresh(q, k, v, heads, seq, hd, None)
+}
+
+/// [`causal_attention`] with an optional BLASST skip threshold. `None`
+/// is *the* exact path (the plain entry points delegate here), so
+/// τ=off stays bit-identical by construction.
+pub fn causal_attention_thresh(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    seq: usize,
+    hd: usize,
+    th: Option<AttnThreshold<'_>>,
+) -> Vec<f32> {
+    causal_attention_offset_thresh(q, k, v, heads, seq, seq, hd, th)
 }
 
 /// Causal self-attention for the **last `q_rows` positions** of a
@@ -98,6 +266,22 @@ pub fn causal_attention_offset(
     kv_len: usize,
     hd: usize,
 ) -> Vec<f32> {
+    causal_attention_offset_thresh(q, k, v, heads, q_rows, kv_len, hd, None)
+}
+
+/// [`causal_attention_offset`] with an optional BLASST skip threshold
+/// (see [`AttnThreshold`]); `None` is the exact path.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_offset_thresh(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    q_rows: usize,
+    kv_len: usize,
+    hd: usize,
+    th: Option<AttnThreshold<'_>>,
+) -> Vec<f32> {
     assert!(q_rows <= kv_len, "more query rows than key positions");
     let mut out = vec![0.0f32; q_rows * heads * hd];
     if q_rows == 0 || heads == 0 || hd == 0 {
@@ -115,7 +299,7 @@ pub fn causal_attention_offset(
             let qh = &q[h * q_rows * hd..(h + 1) * q_rows * hd];
             let kh = &k[h * kv_len * hd..(h + 1) * kv_len * hd];
             let vh = &v[h * kv_len * hd..(h + 1) * kv_len * hd];
-            causal_tile(d, qh, kh, vh, offset, q_rows, hd, heads, h, qt, out_base);
+            causal_tile(d, qh, kh, vh, offset, q_rows, hd, heads, h, qt, out_base, th);
         },
     );
     out
@@ -129,6 +313,16 @@ pub fn causal_attention_offset(
 /// item writes only rows `qt*TQ..` of column stripe `h*hd..(h+1)*hd`. The
 /// score scale+mask-max, shifted-exp+sum and streaming-rescale row passes
 /// all run on the dispatched SIMD lanes (`d` resolved once per prefill).
+///
+/// With `th` armed, each causally-live row first takes the BLASST skip
+/// test: one `tile_max` reduction over its unscaled scores (max commutes
+/// with the positive scale, so `scale·max` *is* the scaled row max). A
+/// row whose scaled max falls below `m[i] − τ` contributes post-softmax
+/// mass < TK·e^(−τ) no matter what later tiles do (the running max only
+/// grows), so its exp/`P`-build is skipped and its `P` column zeroed;
+/// when every live row of the tile skips, the `P·V` micro-GEMM is
+/// skipped whole. Surviving rows run the *identical* instruction
+/// sequence as the exact path.
 #[allow(clippy::too_many_arguments)]
 fn causal_tile(
     d: &KernelDispatch,
@@ -142,6 +336,7 @@ fn causal_tile(
     h: usize,
     qt: usize,
     out_base: usize,
+    th: Option<AttnThreshold<'_>>,
 ) {
     let i0 = qt * TQ;
     let i1 = (i0 + TQ).min(q_rows);
@@ -158,6 +353,8 @@ fn causal_tile(
     m.fill(f32::NEG_INFINITY);
     l.fill(0.0);
     pack_kt_panel(&qh[i0 * hd..i1 * hd], tq, hd, &mut qp);
+    // per-item skip accounting (armed only): one atomic add at the end
+    let (mut c_tiles, mut c_tiles_skipped, mut c_rows, mut c_rows_skipped) = (0u64, 0u64, 0u64, 0u64);
     // k-tiles stream over the full key range this tile's rows attend to;
     // tile boundaries are absolute multiples of TK, independent of offset
     let kend = offset + i1;
@@ -167,12 +364,15 @@ fn causal_tile(
         let tk = k1 - k0;
         pack_kt_panel(&kh[k0 * hd..k1 * hd], tk, hd, &mut kb);
         // scores tile: S[tq × tk] = Qᵖ · (Kᵀ)ᵖ (microkernel accumulates,
-        // so zero the region first)
+        // so zero the region first). The score GEMM always runs — it
+        // produces the very statistic the BLASST skip test thresholds.
         s[..tq * tk].fill(0.0);
         microkernel_d(d, &qp, tq, tq, &kb, tk, tk, hd, &mut s[..tq * tk], tk, Epilogue::None);
         // online softmax update per row: scale, causal mask, rescale the
         // running accumulator, and build the packed P tile — the three row
         // passes run on the dispatched lanes
+        let mut live = 0usize; // rows that survived into the P tile
+        let mut thresh_skips = 0usize; // rows the threshold (not causality) skipped
         for i in 0..tq {
             let gi = offset + i0 + i;
             // columns this row may attend to within the tile
@@ -189,6 +389,24 @@ fn causal_tile(
                 continue;
             }
             let srow = &mut s[i * tk..i * tk + tk];
+            if let Some(t) = th {
+                c_rows += 1;
+                // the skip test: scale·tile_max is the scaled row max
+                // (multiplication by a positive scale is monotone), and
+                // `m[i]` starts at −inf so a row's first contributing
+                // tile can never skip — `x < −inf − τ` is always false.
+                // NaN scores also compare false, falling through to the
+                // exact path.
+                if (d.tile_max)(&srow[..valid]) * scale < m[i] - t.tau {
+                    for j in 0..tk {
+                        pp[j * tq + i] = 0.0;
+                    }
+                    c_rows_skipped += 1;
+                    thresh_skips += 1;
+                    continue;
+                }
+            }
+            live += 1;
             let row_max = (d.scale_max_slice)(&mut srow[..valid], scale);
             let new_m = m[i].max(row_max);
             // exp(-inf - finite) = 0, so the first tile's rescale is a
@@ -207,6 +425,18 @@ fn causal_tile(
             l[i] = l[i] * alpha + row_sum;
             m[i] = new_m;
         }
+        if th.is_some() {
+            c_tiles += 1;
+            if live == 0 && thresh_skips > 0 {
+                // every causally-live row thresholded out: the P tile is
+                // all zeros, so the P·V micro-GEMM is pure skipped work.
+                // (A tile dead by causality alone still runs it, exactly
+                // like the unarmed path.)
+                c_tiles_skipped += 1;
+                k0 = k1;
+                continue;
+            }
+        }
         // O[tq × hd] += P · V_tile (V rows are already the row-major B
         // operand the micro-kernel wants)
         microkernel_d(
@@ -223,6 +453,9 @@ fn causal_tile(
             Epilogue::None,
         );
         k0 = k1;
+    }
+    if let Some(t) = th {
+        t.counters.add_prefill(c_tiles, c_tiles_skipped, c_rows, c_rows_skipped);
     }
     // normalize and scatter into the merged (q_rows, heads*hd) output
     for i in 0..tq {
@@ -405,6 +638,89 @@ pub fn decode_head_paged_into<'a>(
             (d.axpy)(w, &vp[j * hd..(j + 1) * hd], out);
         }
     }
+}
+
+/// [`decode_head_paged_into`] with the BLASST page-skip rule: before
+/// touching a page's K stripe, bound its best possible score by
+/// Cauchy–Schwarz — `q·kⱼ ≤ ‖q‖·max_j‖kⱼ‖` — using the per-page K
+/// norm stamp the KV pool maintains (`k_stamp(pi)`, see
+/// [`crate::model::kv::KvCache::k_stamp`]). When even that bound falls
+/// more than τ below the running score max `m`, every weight the page
+/// could contribute is < e^(−τ) of the final max (`m` only grows while
+/// pages stream in order), so the page's score dots, shifted-exps and
+/// `w·V` accumulation are skipped whole — the page's KV stripes are
+/// never even read.
+///
+/// Structure deliberately mirrors the exact kernel: surviving pages
+/// fill the same score slots with the same dots, the softmax runs once
+/// over the whole buffer (skipped slots carry `−inf`, whose shifted exp
+/// is exactly `0.0`), and the weighted-V walk visits surviving pages in
+/// the same order. **When no page skips, the output is bit-identical to
+/// [`decode_head_paged_into`]** — asserted by tests with a huge τ.
+///
+/// RoPE-rotated keys keep their norms (rotations are isometries), so
+/// the stamp taken at write time stays valid for scoring.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_head_paged_thresh_into<'a>(
+    q: &[f32],
+    hd: usize,
+    page: usize,
+    pos: usize,
+    kv_page: impl Fn(usize) -> (&'a [f32], &'a [f32]),
+    k_stamp: impl Fn(usize) -> f32,
+    th: AttnThreshold<'_>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hd);
+    debug_assert_eq!(out.len(), hd);
+    debug_assert!(page > 0);
+    let d = simd::dispatch();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let n = pos + 1;
+    let n_pages = n.div_ceil(page);
+    let mut scores = scratch::take_uninit(n);
+    // 0.0 = visited, 1.0 = skipped (f32 flags so the scratch arena serves
+    // them like every other decode buffer)
+    let mut skipped = scratch::take_uninit(n_pages);
+    let qnorm = (d.dot)(q, q).sqrt();
+    let mut m = f32::NEG_INFINITY; // running max over computed scores
+    let mut pages_skipped = 0u64;
+    for pi in 0..n_pages {
+        let base = pi * page;
+        let cnt = (n - base).min(page);
+        // the first page can never skip (anything < −inf − τ is false),
+        // so `m` is finite from page 1 on and `l > 0` is guaranteed
+        if qnorm * k_stamp(pi) * scale < m - th.tau {
+            scores[base..base + cnt].fill(f32::NEG_INFINITY);
+            skipped[pi] = 1.0;
+            pages_skipped += 1;
+            continue;
+        }
+        skipped[pi] = 0.0;
+        let (kp, _) = kv_page(pi);
+        for j in 0..cnt {
+            scores[base + j] = (d.dot)(q, &kp[j * hd..(j + 1) * hd]) * scale;
+        }
+        m = m.max((d.tile_max)(&scores[base..base + cnt]));
+    }
+    // one softmax over the whole buffer, exactly like the exact kernel
+    // (max/exp ignore the −inf slots: exp(−inf − max) = 0 contributes
+    // nothing to the sum)
+    softmax_row(&mut scores);
+    out.fill(0.0);
+    for pi in 0..n_pages {
+        if skipped[pi] != 0.0 {
+            continue;
+        }
+        let (_, vp) = kv_page(pi);
+        let base = pi * page;
+        let cnt = (n - base).min(page);
+        for j in 0..cnt {
+            let w = scores[base + j];
+            (d.axpy)(w, &vp[j * hd..(j + 1) * hd], out);
+        }
+    }
+    th.counters.add_decode(n_pages as u64, pages_skipped);
 }
 
 /// Unrolled 8-lane dot product: eight independent accumulators FMA'd over
@@ -684,6 +1000,183 @@ mod tests {
         let a = causal_attention(&q, &k, &v, h, s, d);
         let b = causal_attention_offset(&q, &k, &v, h, s, s, d);
         assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    /// Inputs engineered so the BLASST skip rule actually fires: a huge
+    /// key spike early in the sequence drives the running row max far
+    /// above everything later, so low-τ runs skip the later k-tiles.
+    /// Returns `(q, k, v)` shaped `(h, s, d)`.
+    fn spiky_qkv(h: usize, s: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let q = rng.normal_vec(h * s * d, 1.0);
+        let mut k: Vec<f32> = rng.normal_vec(h * s * d, 0.05);
+        let v = rng.normal_vec(h * s * d, 1.0);
+        // make position 0's key big and query-aligned in every head
+        for hh in 0..h {
+            for dd in 0..d {
+                k[hh * s * d + dd] = 40.0 * q[hh * s * d + (s - 1) * d + dd].signum();
+            }
+        }
+        (q, k, v)
+    }
+
+    /// An armed threshold so large the skip condition can never fire
+    /// must leave the prefill output **bit-identical** to the exact
+    /// kernel — the armed live path runs the same instructions.
+    #[test]
+    fn huge_tau_prefill_is_bitwise_exact_and_skips_nothing() {
+        for &(h, s, d) in &[(2usize, 2 * TK + 5, 8), (1, TK + 9, 12)] {
+            let (q, k, v) = spiky_qkv(h, s, d, 0xB1A5);
+            let exact = causal_attention(&q, &k, &v, h, s, d);
+            let c = AttnCounters::new();
+            let th = AttnThreshold { tau: 1e30, counters: &c };
+            let got = causal_attention_thresh(&q, &k, &v, h, s, d, Some(th));
+            assert!(got.iter().zip(&exact).all(|(a, b)| a.to_bits() == b.to_bits()));
+            let st = c.snapshot();
+            assert!(st.tiles > 0 && st.rows > 0, "armed path must count visits");
+            assert_eq!(st.rows_skipped, 0);
+            assert_eq!(st.tiles_skipped, 0);
+            // offset resume with huge τ: also bitwise vs the exact rows
+            let off = TQ + 1;
+            let rows = s - off;
+            let mut qt = vec![0.0f32; h * rows * d];
+            for hh in 0..h {
+                qt[hh * rows * d..(hh + 1) * rows * d]
+                    .copy_from_slice(&q[hh * s * d + off * d..(hh + 1) * s * d]);
+            }
+            let c2 = AttnCounters::new();
+            let th2 = AttnThreshold { tau: 1e30, counters: &c2 };
+            let got = causal_attention_offset_thresh(&qt, &k, &v, h, rows, s, d, Some(th2));
+            for i in 0..rows {
+                let a = &got[i * h * d..(i + 1) * h * d];
+                let b = &exact[(off + i) * h * d..(off + i + 1) * h * d];
+                assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+
+    /// The monotone halves of the knob on spike-engineered inputs:
+    /// growing τ never skips *more* rows (the condition only gets
+    /// stricter) and the output drift vs exact never grows.
+    #[test]
+    fn skips_and_drift_are_monotone_in_tau() {
+        let (h, s, d) = (2usize, 3 * TK + 7, 8);
+        let (q, k, v) = spiky_qkv(h, s, d, 0x7A05);
+        let exact = causal_attention(&q, &k, &v, h, s, d);
+        let mut last_skips = u64::MAX;
+        let mut last_drift = f32::INFINITY;
+        let mut fired = false;
+        for tau in [0.0f32, 1.0, 3.0, 6.0, 12.0, 1e30] {
+            let c = AttnCounters::new();
+            let th = AttnThreshold { tau, counters: &c };
+            let got = causal_attention_thresh(&q, &k, &v, h, s, d, Some(th));
+            let st = c.snapshot();
+            let drift = got
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                st.rows_skipped <= last_skips,
+                "τ={tau}: skips grew ({} > {last_skips})",
+                st.rows_skipped
+            );
+            // drift may only shrink as τ grows (1e-6 float slack)
+            assert!(
+                drift <= last_drift + 1e-6,
+                "τ={tau}: drift grew ({drift} > {last_drift})"
+            );
+            assert!(st.rows_skipped <= st.rows && st.tiles_skipped <= st.tiles);
+            fired |= st.rows_skipped > 0;
+            last_skips = st.rows_skipped;
+            last_drift = drift;
+        }
+        assert!(fired, "the spike inputs must actually trigger skips");
+    }
+
+    /// Tight-τ runs on spiky inputs stay close to exact: everything
+    /// skipped carries post-softmax mass ≤ count·e^(−τ), so with τ = 12
+    /// the output drift is bounded far below the signal scale.
+    #[test]
+    fn moderate_tau_drift_is_small() {
+        let (h, s, d) = (2usize, 2 * TK + 3, 8);
+        let (q, k, v) = spiky_qkv(h, s, d, 0xD81F);
+        let exact = causal_attention(&q, &k, &v, h, s, d);
+        let c = AttnCounters::new();
+        let th = AttnThreshold { tau: 12.0, counters: &c };
+        let got = causal_attention_thresh(&q, &k, &v, h, s, d, Some(th));
+        let drift = got
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(drift < 1e-2, "τ=12 drift {drift} too large");
+    }
+
+    /// Paged decode with the norm-stamp bound: huge τ is bitwise the
+    /// exact paged kernel; small τ on spiky data skips pages whole and
+    /// stays within the mass bound; skip counts are monotone in τ.
+    #[test]
+    fn thresh_paged_decode_bitwise_at_huge_tau_and_monotone() {
+        let (s, d, page) = (24usize, 12usize, 4usize);
+        let mut rng = Rng::new(0xDECD);
+        let q = rng.normal_vec(d, 1.0);
+        let mut k = rng.normal_vec(s * d, 0.05);
+        let v = rng.normal_vec(s * d, 1.0);
+        for dd in 0..d {
+            k[dd] = 30.0 * q[dd].signum(); // page-0 spike
+        }
+        // true per-page max K norms — what the pool's stamps hold
+        let n_pages = s.div_ceil(page);
+        let stamps: Vec<f32> = (0..n_pages)
+            .map(|pi| {
+                (pi * page..((pi + 1) * page).min(s))
+                    .map(|j| {
+                        k[j * d..(j + 1) * d].iter().map(|x| x * x).sum::<f32>().sqrt()
+                    })
+                    .fold(0.0f32, f32::max)
+            })
+            .collect();
+        let pos = s - 1;
+        let mut exact = vec![0.0f32; d];
+        decode_head_paged_into(&q, d, page, pos, |pi| (&k[pi * page * d..], &v[pi * page * d..]), &mut exact);
+        let mut last_skips = u64::MAX;
+        let mut fired = false;
+        for tau in [0.0f32, 2.0, 6.0, 1e30] {
+            let c = AttnCounters::new();
+            let th = AttnThreshold { tau, counters: &c };
+            let mut got = vec![0.0f32; d];
+            decode_head_paged_thresh_into(
+                &q,
+                d,
+                page,
+                pos,
+                |pi| (&k[pi * page * d..], &v[pi * page * d..]),
+                |pi| stamps[pi],
+                th,
+                &mut got,
+            );
+            let st = c.snapshot();
+            assert_eq!(st.pages, n_pages as u64);
+            assert!(st.pages_skipped <= last_skips, "τ={tau}: page skips grew");
+            if tau == 1e30 {
+                assert_eq!(st.pages_skipped, 0);
+                assert!(
+                    got.iter().zip(&exact).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "huge-τ paged decode must be bit-identical"
+                );
+            } else {
+                let drift = got
+                    .iter()
+                    .zip(&exact)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(drift < 0.2, "τ={tau} decode drift {drift}");
+            }
+            fired |= st.pages_skipped > 0;
+            last_skips = st.pages_skipped;
+        }
+        assert!(fired, "spiky page-0 data must skip at least one page at low τ");
     }
 
     #[test]

@@ -235,6 +235,15 @@ pub struct KernelDispatch {
     pub add_bias_slice: fn(&mut [f32], &[f32]),
     /// Max over a row (`-inf` for an empty row) — softmax pass 1.
     pub row_max: fn(&[f32]) -> f32,
+    /// Max over an unscaled score-tile row (`-inf` when empty) — the
+    /// BLASST skip test. Kept as its own lane so the dynamic-sparsity
+    /// threshold check costs exactly one extra reduction per k-tile row
+    /// and can be retargeted (e.g. fused into the score epilogue)
+    /// without touching the softmax `row_max` contract. Max commutes
+    /// with the positive score scale (f32 multiply is monotone), so
+    /// thresholding on `scale * tile_max(row)` equals thresholding on
+    /// the scaled row's max bit-for-bit.
+    pub tile_max: fn(&[f32]) -> f32,
     /// `v[i] *= scale` returning the running max — the attention score
     /// scale+mask-max fusion (`-inf` for an empty row).
     pub scale_max_slice: fn(&mut [f32], f32) -> f32,
@@ -385,6 +394,7 @@ static SCALAR_TABLE: KernelDispatch = KernelDispatch {
     swiglu_bwd_slice: scalar_arm::swiglu_bwd_slice,
     add_bias_slice: scalar_arm::add_bias_slice,
     row_max: scalar_arm::row_max,
+    tile_max: scalar_arm::row_max,
     scale_max_slice: scalar_arm::scale_max_slice,
     exp_shift_sum: scalar_arm::exp_shift_sum,
     scale_slice: scalar_arm::scale_slice,
@@ -506,6 +516,7 @@ static AVX2_TABLE: KernelDispatch = KernelDispatch {
     swiglu_bwd_slice: avx2::swiglu_bwd_slice,
     add_bias_slice: avx2::add_bias_slice,
     row_max: avx2::row_max,
+    tile_max: avx2::row_max,
     scale_max_slice: avx2::scale_max_slice,
     exp_shift_sum: avx2::exp_shift_sum,
     scale_slice: avx2::scale_slice,
@@ -1380,6 +1391,7 @@ static NEON_TABLE: KernelDispatch = KernelDispatch {
     swiglu_bwd_slice: neon::swiglu_bwd_slice,
     add_bias_slice: neon::add_bias_slice,
     row_max: neon::row_max,
+    tile_max: neon::row_max,
     scale_max_slice: neon::scale_max_slice,
     exp_shift_sum: neon::exp_shift_sum,
     scale_slice: neon::scale_slice,
@@ -2269,6 +2281,7 @@ mod tests {
                 // max is order-invariant: exact across arms
                 let want_max = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
                 prop_assert!((d.row_max)(&x) == want_max, "row_max");
+                prop_assert!((d.tile_max)(&x) == want_max, "tile_max");
                 let mut v = x.clone();
                 let m = (d.scale_max_slice)(&mut v, 0.37);
                 let mut want_m = f32::NEG_INFINITY;
@@ -2336,6 +2349,7 @@ mod tests {
     fn empty_slices_are_safe() {
         for d in tables() {
             assert_eq!((d.row_max)(&[]), f32::NEG_INFINITY);
+            assert_eq!((d.tile_max)(&[]), f32::NEG_INFINITY);
             assert_eq!((d.scale_max_slice)(&mut [], 2.0), f32::NEG_INFINITY);
             assert_eq!((d.sum_slice)(&[]), 0.0);
             assert_eq!((d.sumsq_shift_slice)(&[], 1.0), 0.0);

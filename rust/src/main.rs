@@ -38,7 +38,7 @@ use anyhow::Result;
 
 use blast::coordinator::{BatcherConfig, CompletionWait, Coordinator, Request};
 use blast::eval;
-use blast::model::engine::{Engine, MlpMode};
+use blast::model::engine::{AttnOptions, Engine, MlpMode};
 use blast::model::params::ParamStore;
 use blast::runtime::Runtime;
 use blast::train::pretrain::{PretrainOptions, Trainer};
@@ -95,13 +95,17 @@ fn print_help() {
          \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
          \x20             --kv-page P --kv-pool-pages M --prefix-cache false --deadline-ms D \\\n\
-         \x20             --replicas R --fleet-seed S --stall-ms T \\\n\
+         \x20             --attn-threshold TAU --replicas R --fleet-seed S --stall-ms T \\\n\
          \x20             --faults site:prob:seed[,..] --no-simd]\n\
          \x20 blast exp <id> [--steps N --quick --backend native|aot ...]   ids: {:?} or 'all'\n\n\
          Fault sites for --faults / BLAST_FAULTS: decode_round_panic,\n\
          decode_round_error, prefill_error, kv_pool_exhausted,\n\
          decode_stall_ms, ckpt_torn_write, scheduler_panic,\n\
          replica_crash, replica_stall_ms, heartbeat_drop.\n\n\
+         `--attn-threshold TAU` arms BLASST dynamic attention sparsity:\n\
+         k-tiles (prefill) and KV pages (decode) whose score bound falls\n\
+         more than TAU below the running row max are skipped. Omitted =\n\
+         exact attention, bit-identical to previous releases.\n\n\
          `--replicas R` (R > 1) serves through the replicated fleet tier:\n\
          deterministic least-loaded placement, heartbeat crash/stall\n\
          detection, bitwise-identical in-flight failover, jittered\n\
@@ -231,12 +235,17 @@ fn run_serve(args: &Args) -> Result<()> {
     // default on; `--prefix-cache false` restores the unshared pool
     // byte-for-byte (same serving output, same metrics summary)
     let prefix_cache = args.get_bool_or("prefix-cache", true);
-    let engine = Arc::new(Engine::new_with_kv(
+    // BLASST dynamic attention sparsity: off (exact attention) unless a
+    // finite τ >= 0 is given; NaN/negative τ panics in the getter and the
+    // engine validates again at build time
+    let attn = AttnOptions { threshold: args.get_threshold("attn-threshold") };
+    let engine = Arc::new(Engine::new_with_opts(
         cfg.clone(),
         &params,
         &masks,
         mode,
         KvOptions { page: kv_page, pool_pages: kv_pool_pages, prefix_cache },
+        attn,
     )?);
     println!(
         "serving {} (mode={mode:?}, isa={}, sparsity={sparsity}, block={block}, batched={batched}, \
@@ -250,6 +259,11 @@ fn run_serve(args: &Args) -> Result<()> {
         // printed only when sharing is on so the off path stays
         // byte-identical to the pre-sharing coordinator
         println!("kv prefix cache: on (copy-on-write page sharing, --prefix-cache false to disable)");
+    }
+    if let Some(tau) = attn.threshold {
+        // printed only when armed so τ=off output stays byte-identical
+        // to the pre-threshold coordinator
+        println!("attn threshold: tau={tau} (BLASST dynamic sparsity; omit --attn-threshold for exact attention)");
     }
     let faults = faults_from_args(args)?;
     if faults.enabled() {

@@ -34,7 +34,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::attention::{causal_attention, causal_attention_offset, decode_head_paged_into};
+use crate::kernels::attention::{
+    causal_attention_offset_thresh, causal_attention_thresh, decode_head_paged_into,
+    decode_head_paged_thresh_into, AttnCounters, AttnThreshold,
+};
 use crate::kernels::bspmm::{fused_mlp_sparse, gelu_mlp_sparse, FusedMlpWeights};
 use crate::kernels::gemm::{gemm_packed_ep_into, gemm_packed_into};
 use crate::kernels::ops;
@@ -47,7 +50,21 @@ use crate::sparse::{Bcsc, BlockMask};
 use crate::tensor::Tensor;
 use crate::util::{scratch, threadpool};
 
+pub use crate::kernels::attention::AttnStats;
 pub use crate::model::kv::KvCache;
+
+/// BLASST dynamic attention sparsity knobs (see
+/// [`crate::kernels::attention`]): `threshold = None` (the default) is
+/// exact attention, bit-identical to an engine built before the knob
+/// existed; `Some(τ)` arms the k-tile / KV-page skip rule — everything
+/// skipped carries post-softmax mass ≤ count·e^(−τ). `blast serve
+/// --attn-threshold τ` maps straight onto this.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AttnOptions {
+    /// Skip threshold τ; must be finite and ≥ 0 (validated at engine
+    /// build). `None` = exact.
+    pub threshold: Option<f32>,
+}
 
 /// MLP execution mode (the Fig. 6 switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +117,10 @@ pub struct Engine {
     cfg: NativeConfig,
     w: Arc<EngineWeights>,
     kv_pool: Arc<KvPagePool>,
+    attn: AttnOptions,
+    /// Cumulative BLASST skip counters — per engine, so every fleet
+    /// replica reports its own (`fork_with_fresh_kv` starts fresh ones).
+    attn_counters: Arc<AttnCounters>,
 }
 
 /// Masked dense weight, packed once into micro-kernel panel form.
@@ -159,8 +180,31 @@ impl Engine {
         mode: MlpMode,
         kv: KvOptions,
     ) -> Result<Engine> {
+        Engine::new_with_opts(cfg, params, masks, mode, kv, AttnOptions::default())
+    }
+
+    /// [`Engine::new_with_kv`] plus the BLASST attention knobs. An armed
+    /// threshold also arms K norm stamping on the KV pool (so paged
+    /// decode can skip pages by score bound); `AttnOptions::default()`
+    /// is byte-for-byte [`Engine::new_with_kv`].
+    pub fn new_with_opts(
+        cfg: NativeConfig,
+        params: &ParamStore,
+        masks: &BTreeMap<String, BlockMask>,
+        mode: MlpMode,
+        kv: KvOptions,
+        attn: AttnOptions,
+    ) -> Result<Engine> {
         if kv.page == 0 {
             bail!("KV page size must be >= 1 position");
+        }
+        if let Some(tau) = attn.threshold {
+            // NaN or negative τ would silently turn the skip test into
+            // garbage (NaN compares false everywhere; negative skips
+            // tiles *above* the running max) — reject at build time
+            if !tau.is_finite() || tau < 0.0 {
+                bail!("attention threshold must be a finite value >= 0, got {tau}");
+            }
         }
         if cfg.kind == ModelKind::Vit {
             bail!("the autoregressive engine serves LM configs; use the eval drivers for ViT");
@@ -214,8 +258,15 @@ impl Engine {
                 final_norm: params.req("final_norm").data().to_vec(),
                 lm_head: packed(params, "lm_head"),
             }),
-            kv_pool: KvPagePool::new(geom, kv.pool_pages, kv.prefix_cache),
+            kv_pool: KvPagePool::new_with_stamping(
+                geom,
+                kv.pool_pages,
+                kv.prefix_cache,
+                attn.threshold.is_some(),
+            ),
             cfg,
+            attn,
+            attn_counters: Arc::new(AttnCounters::new()),
         })
     }
 
@@ -229,11 +280,16 @@ impl Engine {
         Engine {
             cfg: self.cfg.clone(),
             w: self.w.clone(),
-            kv_pool: KvPagePool::new(
+            kv_pool: KvPagePool::new_with_stamping(
                 self.kv_pool.geom(),
                 self.kv_pool.capacity_pages(),
                 self.kv_pool.prefix_enabled(),
+                self.kv_pool.stamping_enabled(),
             ),
+            attn: self.attn,
+            // fresh counters: each replica incarnation reports its own
+            // skip totals, like its fresh KV pool
+            attn_counters: Arc::new(AttnCounters::new()),
         }
     }
 
@@ -245,6 +301,30 @@ impl Engine {
     /// Dense or sparse MLP execution (fixed at build time).
     pub fn mode(&self) -> MlpMode {
         self.w.mode
+    }
+
+    /// The BLASST attention options this engine was built with.
+    pub fn attn_options(&self) -> AttnOptions {
+        self.attn
+    }
+
+    /// Armed skip threshold τ (`None` = exact attention).
+    pub fn attn_threshold(&self) -> Option<f32> {
+        self.attn.threshold
+    }
+
+    /// Snapshot of the cumulative skip counters (all zero on an exact
+    /// engine — only armed kernel paths count).
+    pub fn attn_stats(&self) -> AttnStats {
+        self.attn_counters.snapshot()
+    }
+
+    /// The armed threshold handle kernels take, or `None` for the exact
+    /// paths.
+    fn attn_th(&self) -> Option<AttnThreshold<'_>> {
+        self.attn
+            .threshold
+            .map(|tau| AttnThreshold { tau, counters: &self.attn_counters })
     }
 
     /// Weight bytes resident for the MLP blocks in the current mode — the
@@ -450,7 +530,7 @@ impl Engine {
                     cache.write_pos(li, hh, s, &kh[src..src + hd], &vh[src..src + hd]);
                 }
             }
-            let att = causal_attention(&qh, &kh, &vh, h, seq, hd);
+            let att = causal_attention_thresh(&qh, &kh, &vh, h, seq, hd, self.attn_th());
             let mut proj = Tensor::zeros(&[seq, e]);
             gemm_packed_into(&att, &l.wo, proj.data_mut(), seq);
             x.add_inplace(&proj);
@@ -556,7 +636,7 @@ impl Engine {
                     vf[dst..dst + rows * hd].copy_from_slice(&cache.v_head(li, hh, pi)[..rows * hd]);
                 }
             }
-            let att = causal_attention_offset(&qh, &kf, &vf, h, rn, seq, hd);
+            let att = causal_attention_offset_thresh(&qh, &kf, &vf, h, rn, seq, hd, self.attn_th());
             let mut proj = Tensor::zeros(&[rn, e]);
             gemm_packed_into(&att, &l.wo, proj.data_mut(), rn);
             x.add_inplace(&proj);
@@ -625,20 +705,33 @@ impl Engine {
                 let cache_ref: &KvCache = &*cache;
                 let qd: &[f32] = &q;
                 let page = self.kv_page();
+                let th = self.attn_th();
                 threadpool::parallel_for(h, |hh| {
                     // SAFETY: each head writes a disjoint `hd`-wide stripe
                     // of `att`; parallel_for blocks until all heads finish.
                     let orow = unsafe {
                         std::slice::from_raw_parts_mut((att_base as *mut f32).add(hh * hd), hd)
                     };
-                    decode_head_paged_into(
-                        &qd[hh * hd..(hh + 1) * hd],
-                        hd,
-                        page,
-                        pos,
-                        |pi| (cache_ref.k_head(li, hh, pi), cache_ref.v_head(li, hh, pi)),
-                        orow,
-                    );
+                    match th {
+                        Some(at) => decode_head_paged_thresh_into(
+                            &qd[hh * hd..(hh + 1) * hd],
+                            hd,
+                            page,
+                            pos,
+                            |pi| (cache_ref.k_head(li, hh, pi), cache_ref.v_head(li, hh, pi)),
+                            |pi| cache_ref.k_stamp(li, hh, pi),
+                            at,
+                            orow,
+                        ),
+                        None => decode_head_paged_into(
+                            &qd[hh * hd..(hh + 1) * hd],
+                            hd,
+                            page,
+                            pos,
+                            |pi| (cache_ref.k_head(li, hh, pi), cache_ref.v_head(li, hh, pi)),
+                            orow,
+                        ),
+                    }
                 });
             }
             let mut proj = vec![0.0f32; e];
@@ -793,6 +886,7 @@ impl Engine {
                 let positions_ref: &[usize] = &positions;
                 let qd: &[f32] = &q;
                 let page = self.kv_page();
+                let th = self.attn_th();
                 let att_base = att.as_mut_ptr() as usize;
                 threadpool::parallel_for_weighted(
                     bsz * h,
@@ -809,14 +903,26 @@ impl Engine {
                                 hd,
                             )
                         };
-                        decode_head_paged_into(
-                            &qd[i * e + hh * hd..i * e + (hh + 1) * hd],
-                            hd,
-                            page,
-                            positions_ref[i],
-                            |pi| (c.k_head(li, hh, pi), c.v_head(li, hh, pi)),
-                            orow,
-                        );
+                        match th {
+                            Some(at) => decode_head_paged_thresh_into(
+                                &qd[i * e + hh * hd..i * e + (hh + 1) * hd],
+                                hd,
+                                page,
+                                positions_ref[i],
+                                |pi| (c.k_head(li, hh, pi), c.v_head(li, hh, pi)),
+                                |pi| c.k_stamp(li, hh, pi),
+                                at,
+                                orow,
+                            ),
+                            None => decode_head_paged_into(
+                                &qd[i * e + hh * hd..i * e + (hh + 1) * hd],
+                                hd,
+                                page,
+                                positions_ref[i],
+                                |pi| (c.k_head(li, hh, pi), c.v_head(li, hh, pi)),
+                                orow,
+                            ),
+                        }
                     },
                 );
             }
@@ -1445,5 +1551,226 @@ mod tests {
         assert!(eng.prefill(&long, &mut c).is_err());
         eng.prefill(&vec![1; cfg.max_seq], &mut c).unwrap();
         assert!(eng.decode(1, &mut c).is_err());
+    }
+
+    /// Drive an exact engine and a candidate engine through the same
+    /// serving matrix — plain prefill (page−1/page/page+1 prompts),
+    /// prefix-resume prefill, decode across page boundaries, and a
+    /// ragged `decode_batch` — asserting bit-identical logits
+    /// throughout. Shared by the τ=off and huge-τ identity tests.
+    fn assert_engines_bitwise_identical(exact: &Engine, cand: &Engine, tag: &str) {
+        // plain prefill + decode at prompt lengths page−1/page/page+1
+        for plen in [3usize, 4, 5] {
+            let prompt: Vec<u32> = (0..plen).map(|i| (i as u32 * 5 + 1) % 32).collect();
+            let mut ce = exact.new_cache();
+            let mut cc = cand.new_cache();
+            let le = exact.prefill(&prompt, &mut ce).unwrap();
+            let lc = cand.prefill(&prompt, &mut cc).unwrap();
+            assert!(
+                le.iter().zip(&lc).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{tag} plen={plen}: prefill logits bits differ"
+            );
+            let mut tok = Engine::argmax(&le);
+            for step in 0..6 {
+                let a = exact.decode(tok, &mut ce).unwrap();
+                let b = cand.decode(tok, &mut cc).unwrap();
+                assert!(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{tag} plen={plen} step={step}: decode logits bits differ"
+                );
+                tok = Engine::argmax(&a);
+            }
+        }
+        // prefix-resume: a second session re-prefilling prefix+tail hits
+        // the prefix cache and runs the offset kernel on the tail
+        let prefix: Vec<u32> = (0..5).map(|i| (i as u32 * 3 + 2) % 32).collect();
+        let mut warm_e = exact.new_cache();
+        let mut warm_c = cand.new_cache();
+        exact.prefill(&prefix, &mut warm_e).unwrap();
+        cand.prefill(&prefix, &mut warm_c).unwrap();
+        let mut full = prefix.clone();
+        full.extend_from_slice(&[7, 11, 13]);
+        let mut re = exact.new_cache();
+        let mut rc = cand.new_cache();
+        let le = exact.prefill(&full, &mut re).unwrap();
+        let lc = cand.prefill(&full, &mut rc).unwrap();
+        assert!(
+            le.iter().zip(&lc).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{tag}: prefix-resume logits bits differ"
+        );
+        // ragged decode_batch over sessions of uneven length
+        let prompts: Vec<Vec<u32>> = vec![vec![3, 7, 11], vec![2], vec![9, 4, 1, 5]];
+        let (mut ce, mut cc, mut te, mut tc) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for p in &prompts {
+            let mut a = exact.new_cache();
+            let mut b = cand.new_cache();
+            let la = exact.prefill(p, &mut a).unwrap();
+            let lb = cand.prefill(p, &mut b).unwrap();
+            te.push(Engine::argmax(&la));
+            tc.push(Engine::argmax(&lb));
+            ce.push(a);
+            cc.push(b);
+        }
+        for round in 0..6 {
+            let la = exact.decode_batch(&te, &mut ce).unwrap();
+            let lb = cand.decode_batch(&tc, &mut cc).unwrap();
+            for (i, (a, b)) in la.iter().zip(&lb).enumerate() {
+                assert!(
+                    a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{tag} round {round} session {i}: decode_batch bits differ"
+                );
+            }
+            te = la.iter().map(|l| Engine::argmax(l)).collect();
+            tc = lb.iter().map(|l| Engine::argmax(l)).collect();
+        }
+    }
+
+    /// τ=off acceptance gate: `AttnOptions::default()` through
+    /// `new_with_opts` is bit-identical to the plain `new_with_kv`
+    /// engine on every serving path, and the counters never move.
+    #[test]
+    fn attn_threshold_off_is_bitwise_identical() {
+        for mode in [MlpMode::Dense, MlpMode::Sparse] {
+            let cfg = test_cfg(ModelKind::Llama); // max_seq 16
+            let params = test_params(&cfg, 51);
+            let masks = random_masks(&cfg, 0.5, 52);
+            let kv = KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true };
+            let exact =
+                Engine::new_with_kv(cfg.clone(), &params, &masks, mode, kv.clone()).unwrap();
+            let off = Engine::new_with_opts(
+                cfg.clone(),
+                &params,
+                &masks,
+                mode,
+                kv,
+                AttnOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(off.attn_threshold(), None);
+            assert!(!off.kv_pool().stamping_enabled());
+            assert_engines_bitwise_identical(&exact, &off, &format!("{mode:?}/tau=off"));
+            // exact paths never touch the counters
+            assert_eq!(off.attn_stats(), AttnStats::default());
+            assert!(!off.attn_stats().engaged());
+        }
+    }
+
+    /// A huge τ arms every threshold code path — stamped pool, thresh
+    /// prefill/offset/decode kernels — yet skips nothing, so streams
+    /// stay bit-identical to exact attention while the visit counters
+    /// prove the armed paths actually ran.
+    #[test]
+    fn attn_threshold_huge_tau_bitwise_and_counts_visits() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 53);
+        let masks = random_masks(&cfg, 0.5, 54);
+        let kv = KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true };
+        let exact = Engine::new_with_kv(cfg.clone(), &params, &masks, MlpMode::Dense, kv.clone())
+            .unwrap();
+        let armed = Engine::new_with_opts(
+            cfg.clone(),
+            &params,
+            &masks,
+            MlpMode::Dense,
+            kv,
+            AttnOptions { threshold: Some(1e30) },
+        )
+        .unwrap();
+        assert!(armed.kv_pool().stamping_enabled());
+        assert_engines_bitwise_identical(&exact, &armed, "tau=1e30");
+        let st = armed.attn_stats();
+        assert!(st.engaged(), "armed engine should have visited tiles/pages");
+        assert!(st.rows > 0 && st.tiles > 0 && st.pages > 0, "{st:?}");
+        assert_eq!(st.rows_skipped, 0, "{st:?}");
+        assert_eq!(st.tiles_skipped, 0, "{st:?}");
+        assert_eq!(st.pages_skipped, 0, "{st:?}");
+        // fork keeps the options (and stamping) but starts fresh counters
+        let fork = armed.fork_with_fresh_kv();
+        assert_eq!(fork.attn_options(), armed.attn_options());
+        assert!(fork.kv_pool().stamping_enabled());
+        assert_eq!(fork.attn_stats(), AttnStats::default());
+    }
+
+    /// A finite τ on a real engine skips work while keeping logits
+    /// close to exact, and drift/skips are monotone in τ.
+    #[test]
+    fn attn_threshold_engine_drift_and_skips_monotone() {
+        let cfg = test_cfg(ModelKind::Llama);
+        let params = test_params(&cfg, 55);
+        let masks = random_masks(&cfg, 0.5, 56);
+        let kv = KvOptions { page: 4, pool_pages: Some(64), prefix_cache: false };
+        let exact = Engine::new_with_kv(cfg.clone(), &params, &masks, MlpMode::Dense, kv.clone())
+            .unwrap();
+        let prompt: Vec<u32> = (0..12).map(|i| (i as u32 * 7 + 3) % 32).collect();
+        let mut ce = exact.new_cache();
+        let le = exact.prefill(&prompt, &mut ce).unwrap();
+        let mut prev_skipped = u64::MAX;
+        let mut prev_drift = f32::INFINITY;
+        for tau in [0.5f32, 4.0, 1e30] {
+            let eng = Engine::new_with_opts(
+                cfg.clone(),
+                &params,
+                &masks,
+                MlpMode::Dense,
+                kv.clone(),
+                AttnOptions { threshold: Some(tau) },
+            )
+            .unwrap();
+            let mut c = eng.new_cache();
+            let l = eng.prefill(&prompt, &mut c).unwrap();
+            let drift = l
+                .iter()
+                .zip(&le)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let st = eng.attn_stats();
+            assert!(st.rows > 0, "tau={tau}: counters never engaged");
+            assert!(
+                st.rows_skipped <= prev_skipped,
+                "tau={tau}: skips grew as tau grew ({} > {prev_skipped})",
+                st.rows_skipped
+            );
+            assert!(
+                drift <= prev_drift + 1e-6,
+                "tau={tau}: drift grew as tau grew ({drift} > {prev_drift})"
+            );
+            prev_skipped = st.rows_skipped;
+            prev_drift = drift;
+        }
+        assert_eq!(prev_drift, 0.0, "tau=1e30 must be exact");
+        assert_eq!(prev_skipped, 0, "tau=1e30 must skip nothing");
+    }
+
+    /// NaN / negative / infinite τ are rejected at engine build with a
+    /// clean error — never a silently-garbage skip mask.
+    #[test]
+    fn attn_threshold_rejects_nan_negative_inf() {
+        let cfg = test_cfg(ModelKind::Gpt2);
+        let params = test_params(&cfg, 57);
+        for bad in [f32::NAN, -1.0, -0.5, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = Engine::new_with_opts(
+                cfg.clone(),
+                &params,
+                &BTreeMap::new(),
+                MlpMode::Dense,
+                KvOptions { page: 4, pool_pages: None, prefix_cache: true },
+                AttnOptions { threshold: Some(bad) },
+            )
+            .unwrap_err();
+            assert!(
+                err.to_string().contains("attention threshold"),
+                "tau={bad}: wrong error: {err}"
+            );
+        }
+        // τ = 0.0 is aggressive but legal
+        assert!(Engine::new_with_opts(
+            cfg.clone(),
+            &params,
+            &BTreeMap::new(),
+            MlpMode::Dense,
+            KvOptions { page: 4, pool_pages: None, prefix_cache: true },
+            AttnOptions { threshold: Some(0.0) },
+        )
+        .is_ok());
     }
 }

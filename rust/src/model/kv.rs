@@ -159,6 +159,16 @@ pub struct KvPage {
     /// Prefix-index key, set once at registration (before the index takes
     /// its weak reference) so `Drop` can purge the entry.
     key: OnceLock<u64>,
+    /// BLASST score-bound stamps: per `(layer, head)`, the max L2 norm of
+    /// every K row ever written into this page (`layers × heads` slots,
+    /// see [`KvCache::k_stamp`]). Lives on the page *struct*, not the
+    /// recycled buffer, so a fresh allocation always starts from zero —
+    /// a recycled buffer's stale stamps can never leak. Maintained only
+    /// when the pool was built with stamping on; monotone under writes
+    /// (an overwrite keeps the old max, which stays a valid upper
+    /// bound), copied on CoW (the copy starts life with the donor's
+    /// bound and invalidates upward from there on its own writes).
+    kmax: Box<[f32]>,
 }
 
 impl Drop for KvPage {
@@ -226,17 +236,36 @@ pub struct KvPagePool {
     max_pages: Option<usize>,
     /// Prefix sharing armed at build time ([`KvOptions::prefix_cache`]).
     prefix_cache: bool,
+    /// Maintain per-page K norm stamps on every write — armed by engines
+    /// with a BLASST attention threshold; off costs nothing (one branch
+    /// per `write_pos`).
+    stamp_kmax: bool,
     inner: Mutex<PoolInner>,
 }
 
 impl KvPagePool {
     /// A pool for the given geometry; `max_pages = None` is unbounded,
-    /// `prefix_cache` arms the sharing index.
+    /// `prefix_cache` arms the sharing index. K norm stamping is off —
+    /// use [`KvPagePool::new_with_stamping`] for threshold-armed engines.
     pub fn new(geom: KvGeom, max_pages: Option<usize>, prefix_cache: bool) -> Arc<KvPagePool> {
+        Self::new_with_stamping(geom, max_pages, prefix_cache, false)
+    }
+
+    /// [`KvPagePool::new`] plus the `stamp_kmax` switch: when on, every
+    /// [`KvCache::write_pos`] folds the written K row's L2 norm into the
+    /// page's per-`(layer, head)` stamp so threshold-armed decode can
+    /// skip whole pages by score bound.
+    pub fn new_with_stamping(
+        geom: KvGeom,
+        max_pages: Option<usize>,
+        prefix_cache: bool,
+        stamp_kmax: bool,
+    ) -> Arc<KvPagePool> {
         Arc::new(KvPagePool {
             geom,
             max_pages,
             prefix_cache,
+            stamp_kmax,
             inner: Mutex::new(PoolInner {
                 free: Vec::new(),
                 in_use: 0,
@@ -271,6 +300,11 @@ impl KvPagePool {
     /// Whether copy-on-write prefix sharing is armed.
     pub fn prefix_enabled(&self) -> bool {
         self.prefix_cache
+    }
+
+    /// Whether per-page K norm stamping is armed.
+    pub fn stamping_enabled(&self) -> bool {
+        self.stamp_kmax
     }
 
     /// Physical pages currently held by live caches.
@@ -340,10 +374,14 @@ impl KvPagePool {
                 .pop()
                 .unwrap_or_else(|| vec![0.0f32; pool.geom.page_floats()].into_boxed_slice())
         };
+        // stamps are fresh (never recycled): a page starts with zero
+        // bounds and only its own writes raise them
+        let kmax = vec![0.0f32; pool.geom.layers * pool.geom.heads].into_boxed_slice();
         Ok(Arc::new(KvPage {
             pool: pool.clone(),
             data,
             key: OnceLock::new(),
+            kmax,
         }))
     }
 
@@ -588,10 +626,14 @@ impl KvCache {
             return Ok(());
         }
         let mut fresh = KvPagePool::alloc(&self.pool)?;
-        Arc::get_mut(&mut fresh)
-            .expect("freshly allocated page is unshared")
-            .data
-            .copy_from_slice(&self.pages[pi].data);
+        {
+            let f = Arc::get_mut(&mut fresh).expect("freshly allocated page is unshared");
+            f.data.copy_from_slice(&self.pages[pi].data);
+            // the copy carries the donor's KV bits, so it must carry the
+            // donor's score bounds too — its own writes then invalidate
+            // the stamp upward from here (the donor's stamp is untouched)
+            f.kmax.copy_from_slice(&self.pages[pi].kmax);
+        }
         self.pool.note_cow();
         // repoint: one logical mapping moves from the shared page to the
         // copy (alloc counted the copy, so drop this mapping's old count)
@@ -629,6 +671,18 @@ impl KvCache {
         &self.pages[pi].data[o..o + self.geom.page * self.geom.head_dim]
     }
 
+    /// The page's BLASST score-bound stamp for `(layer, head)`: an upper
+    /// bound on the L2 norm of every K row positions of page `pi` hold
+    /// for that `(layer, head)` — `q·k ≤ ‖q‖ · k_stamp` by
+    /// Cauchy–Schwarz, which is what threshold-armed decode skips pages
+    /// by. Zero until the first write (a page with no written K rows
+    /// bounds every score at 0); only meaningful when the pool stamps
+    /// ([`KvPagePool::stamping_enabled`]).
+    #[inline]
+    pub fn k_stamp(&self, layer: usize, head: usize, pi: usize) -> f32 {
+        self.pages[pi].kmax[layer * self.geom.heads + head]
+    }
+
     /// Write one position's K and V rows for `(layer, head)`. The page
     /// covering `pos` must already exist **and be private** — growth goes
     /// through [`KvCache::ensure_writable`] (or plain [`KvCache::ensure`]
@@ -645,11 +699,18 @@ impl KvCache {
         let (pi, off) = (pos / self.geom.page, pos % self.geom.page);
         let ko = self.geom.stripe(layer, 0, head) + off * hd;
         let vo = self.geom.stripe(layer, 1, head) + off * hd;
-        let page = &mut Arc::get_mut(&mut self.pages[pi])
-            .expect("KV write to a shared page (copy-on-write was skipped)")
-            .data;
-        page[ko..ko + hd].copy_from_slice(k);
-        page[vo..vo + hd].copy_from_slice(v);
+        let page = Arc::get_mut(&mut self.pages[pi])
+            .expect("KV write to a shared page (copy-on-write was skipped)");
+        page.data[ko..ko + hd].copy_from_slice(k);
+        page.data[vo..vo + hd].copy_from_slice(v);
+        if self.pool.stamp_kmax {
+            // fold the new K row's norm into the page's (layer, head)
+            // bound; monotone max keeps the stamp a valid upper bound
+            // even when a position is overwritten with a smaller key
+            let norm = k.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let slot = &mut page.kmax[layer * self.geom.heads + head];
+            *slot = slot.max(norm);
+        }
     }
 }
 
@@ -978,6 +1039,56 @@ mod tests {
         // writes stay in place — no CoW ever
         donor.ensure_writable(8).unwrap();
         assert_eq!(pool.prefix_stats().cow_copies, 0);
+    }
+
+    #[test]
+    fn kmax_stamp_lifecycle_write_cow_recycle() {
+        let pool = KvPagePool::new_with_stamping(geom(4), None, true, true);
+        let prompt: Vec<u32> = (0..4).collect();
+        let mut donor = KvCache::new(pool.clone());
+        donor.ensure(4).unwrap();
+        // two writes into (layer 1, head 2): stamp must hold the max norm
+        donor.write_pos(1, 2, 0, &[3.0, 4.0, 0.0, 0.0], &[0.0; 4]); // ‖k‖ = 5
+        donor.write_pos(1, 2, 1, &[1.0, 0.0, 0.0, 0.0], &[0.0; 4]); // ‖k‖ = 1
+        assert_eq!(donor.k_stamp(1, 2, 0), 5.0);
+        // untouched (layer, head) slots bound every score at zero
+        assert_eq!(donor.k_stamp(0, 1, 0), 0.0);
+        donor.len = 4;
+        donor.register_prefix(&prompt);
+
+        // CoW: the copy starts with the donor's stamp and raises it on
+        // its own writes; the donor's stamp never moves
+        let mut c = KvCache::new(pool.clone());
+        assert_eq!(c.attach_prefix(&prompt), 1);
+        assert_eq!(c.k_stamp(1, 2, 0), 5.0, "shared mapping sees the donor stamp");
+        c.make_private(0).unwrap();
+        assert_eq!(c.k_stamp(1, 2, 0), 5.0, "CoW copies the stamp");
+        c.write_pos(1, 2, 2, &[0.0, 0.0, 6.0, 8.0], &[0.0; 4]); // ‖k‖ = 10
+        assert_eq!(c.k_stamp(1, 2, 0), 10.0);
+        assert_eq!(donor.k_stamp(1, 2, 0), 5.0, "donor stamp untouched by the copy");
+
+        // overwriting with a smaller key keeps the old bound (monotone,
+        // still a sound upper bound)
+        c.write_pos(1, 2, 2, &[0.1, 0.0, 0.0, 0.0], &[0.0; 4]);
+        assert_eq!(c.k_stamp(1, 2, 0), 10.0);
+
+        // recycled buffers must not leak stale stamps: drop everything,
+        // then a fresh page (reusing the freed buffer) starts at zero
+        drop(donor);
+        drop(c);
+        let mut fresh = KvCache::new(pool.clone());
+        fresh.ensure(4).unwrap();
+        assert_eq!(fresh.k_stamp(1, 2, 0), 0.0, "fresh page must start unstamped");
+    }
+
+    #[test]
+    fn stamping_off_is_free_and_zero() {
+        let pool = pool(4, None); // stamping off
+        assert!(!pool.stamping_enabled());
+        let mut c = KvCache::new(pool);
+        c.ensure(4).unwrap();
+        c.write_pos(0, 0, 0, &[3.0, 4.0, 0.0, 0.0], &[0.0; 4]);
+        assert_eq!(c.k_stamp(0, 0, 0), 0.0, "unarmed pools never stamp");
     }
 
     #[test]

@@ -90,6 +90,22 @@ impl Args {
         }
     }
 
+    /// Optional non-negative finite f32, e.g. `--attn-threshold 8.0`.
+    /// Absent → `None`. NaN, ±inf, negatives and non-numbers panic with a
+    /// clean message instead of silently arming a garbage threshold (NaN
+    /// compares false in the skip test; a negative τ would skip tiles
+    /// *above* the running row max).
+    pub fn get_threshold(&self, key: &str) -> Option<f32> {
+        let v = self.get(key)?;
+        let t: f32 = v
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"));
+        if !t.is_finite() || t < 0.0 {
+            panic!("--{key} expects a finite value >= 0, got {v:?}");
+        }
+        Some(t)
+    }
+
     /// Comma-separated list of usize, e.g. `--blocks 32,64,128`.
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.get(key) {
@@ -146,6 +162,44 @@ mod tests {
     fn trailing_flag() {
         let a = Args::parse_from(argv("--flag"));
         assert!(a.get_bool("flag"));
+    }
+
+    #[test]
+    fn threshold_parses_and_is_optional() {
+        let a = Args::parse_from(argv("--attn-threshold 8.5"));
+        assert_eq!(a.get_threshold("attn-threshold"), Some(8.5));
+        let a = Args::parse_from(argv("--attn-threshold=0"));
+        assert_eq!(a.get_threshold("attn-threshold"), Some(0.0));
+        let a = Args::parse_from(argv("serve"));
+        assert_eq!(a.get_threshold("attn-threshold"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "--attn-threshold expects a finite value >= 0")]
+    fn threshold_rejects_nan() {
+        let a = Args::parse_from(argv("--attn-threshold NaN"));
+        a.get_threshold("attn-threshold");
+    }
+
+    #[test]
+    #[should_panic(expected = "--attn-threshold expects a finite value >= 0")]
+    fn threshold_rejects_negative() {
+        let a = Args::parse_from(argv("--attn-threshold=-2.0"));
+        a.get_threshold("attn-threshold");
+    }
+
+    #[test]
+    #[should_panic(expected = "--attn-threshold expects a finite value >= 0")]
+    fn threshold_rejects_infinity() {
+        let a = Args::parse_from(argv("--attn-threshold inf"));
+        a.get_threshold("attn-threshold");
+    }
+
+    #[test]
+    #[should_panic(expected = "--attn-threshold expects a number")]
+    fn threshold_rejects_garbage() {
+        let a = Args::parse_from(argv("--attn-threshold high"));
+        a.get_threshold("attn-threshold");
     }
 
     #[test]

@@ -21,7 +21,7 @@ use blast::coordinator::{
     BatcherConfig, CompletionWait, Coordinator, Fleet, FleetConfig, ReplicaStatus, Request,
 };
 use blast::model::config::{ModelKind, NativeConfig};
-use blast::model::engine::{Engine, MlpMode};
+use blast::model::engine::{AttnOptions, Engine, MlpMode};
 use blast::model::kv::{KvCache, KvGeom, KvOptions, KvPagePool};
 use blast::model::params::ParamStore;
 use blast::sparse::BlockMask;
@@ -79,10 +79,21 @@ fn masks(cfg: &NativeConfig, sparsity: f64, seed: u64) -> BTreeMap<String, Block
 }
 
 fn engine(kv: KvOptions) -> Arc<Engine> {
+    engine_with_attn(kv, AttnOptions::default())
+}
+
+fn engine_with_attn(kv: KvOptions, attn: AttnOptions) -> Arc<Engine> {
     let c = cfg();
     Arc::new(
-        Engine::new_with_kv(c.clone(), &params(&c, 1), &masks(&c, 0.5, 2), MlpMode::Sparse, kv)
-            .unwrap(),
+        Engine::new_with_opts(
+            c.clone(),
+            &params(&c, 1),
+            &masks(&c, 0.5, 2),
+            MlpMode::Sparse,
+            kv,
+            attn,
+        )
+        .unwrap(),
     )
 }
 
@@ -563,6 +574,95 @@ fn cow_copies_never_alias_their_donor_under_randomized_lifetimes() {
             (0, 0),
             "case {case}: pool must drain to zero pages and zero mappings"
         );
+    }
+}
+
+/// Satellite: a τ=1e30 threshold-armed coordinator serves bit-identical
+/// token streams to the exact (τ=off) coordinator — every armed code
+/// path runs (stamped pool, thresh prefill/decode kernels, skip
+/// counters) yet nothing is skipped, so serving output cannot move.
+#[test]
+fn huge_tau_serving_is_bitwise_identical_to_exact() {
+    let kv = KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true };
+    let plan = fleet_plan(16);
+    let mut streams: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for attn in [AttnOptions::default(), AttnOptions { threshold: Some(1e30) }] {
+        let eng = engine_with_attn(kv, attn);
+        let stats_handle = eng.clone();
+        let mut coord = Coordinator::start(
+            eng,
+            BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+        );
+        let d = serve_prompts_and_drain(&mut coord, &plan, None);
+        assert!(!d.disconnected);
+        let st = stats_handle.attn_stats();
+        if attn.threshold.is_some() {
+            assert!(st.rows > 0 && st.pages > 0, "armed paths must have counted: {st:?}");
+            assert_eq!((st.rows_skipped, st.pages_skipped), (0, 0), "{st:?}");
+            assert!(coord.metrics_summary().contains("attn_rows_skipped=0/"), "summary must surface the armed counters");
+        } else {
+            assert!(!st.engaged(), "exact engine must never count: {st:?}");
+            assert!(!coord.metrics_summary().contains("attn_"), "τ=off summary must stay byte-identical");
+        }
+        let mut got: Vec<(u64, Vec<u32>)> = d
+            .completions
+            .into_iter()
+            .map(|(id, (tokens, err))| {
+                assert!(err.is_none(), "request {id}: {err:?}");
+                (id, tokens)
+            })
+            .collect();
+        got.sort_by_key(|(id, _)| *id);
+        coord.stop();
+        streams.push(got);
+    }
+    assert_eq!(streams[0], streams[1], "huge-τ streams must be bitwise identical to exact");
+}
+
+/// Satellite: the threshold-armed chaos mix. A finite τ under the fault
+/// matrix keeps every liveness invariant — exactly one completion per
+/// request, pool drained to zero — and the skip counters stay
+/// consistent (engaged, and skipped never exceeds visited) across round
+/// panics, retries, prefill failures and deadline retirements.
+#[test]
+fn threshold_armed_sessions_survive_chaos_with_consistent_counters() {
+    let s = chaos_seed();
+    let specs = [
+        format!("decode_round_panic:0.15:{s}"),
+        format!("prefill_error:0.25:{}", s + 2),
+        format!(
+            "decode_round_panic:0.05:{q},decode_round_error:0.1:{q},prefill_error:0.1:{q},\
+             kv_pool_exhausted:0.05:{q},decode_stall_ms:0.1:{q}:5",
+            q = s + 4
+        ),
+    ];
+    for spec in &specs {
+        for tau in [0.5f32, 4.0] {
+            let eng = engine_with_attn(
+                KvOptions { page: 4, pool_pages: Some(64), prefix_cache: true },
+                AttnOptions { threshold: Some(tau) },
+            );
+            let stats_handle = eng.clone();
+            let pool = eng.kv_pool().clone();
+            let mut coord = Coordinator::start_with_faults(
+                eng,
+                BatcherConfig { max_batch: 3, max_queue: 64, ..BatcherConfig::default() },
+                Faults::parse(spec).unwrap(),
+            );
+            let d = serve_and_drain(&mut coord, &std_plan(24), None);
+            assert!(!d.disconnected, "{spec} tau={tau}: unexpected worker death");
+            assert_eq!(d.completions.len(), 24, "{spec} tau={tau}: request lost");
+            coord.stop();
+            assert_eq!(pool.pages_in_use(), 0, "{spec} tau={tau}: KV pages leaked");
+            let st = stats_handle.attn_stats();
+            assert!(st.engaged(), "{spec} tau={tau}: armed engine never counted");
+            assert!(
+                st.rows_skipped <= st.rows
+                    && st.tiles_skipped <= st.tiles
+                    && st.pages_skipped <= st.pages,
+                "{spec} tau={tau}: skip counters exceed visits: {st:?}"
+            );
+        }
     }
 }
 
