@@ -1,0 +1,372 @@
+"""Pure-python transliteration of PR 10's self-healing training guard
+(rust/src/train/guard.rs and the guarded trainer plumbing in
+rust/src/train/pretrain.rs).
+
+No Rust toolchain ships in this container, so the guard's deterministic
+surfaces are pinned here against independent oracles:
+
+  1. the RNG substrate: splitmix64 (published reference vector) seeding
+     xoshiro256**, the Lemire `below(n)` sampler and the 53-bit `f64()`
+     draw that fault-site probability checks consume;
+  2. seed derivations: per-site `stream_seed` for the four training fault
+     sites, the guard's `fork_rng("train_guard")` jitter stream (armed
+     and disabled forms), and `forked_corpus_seed` (fork 0 = identity —
+     the guards-off bit-identity guarantee);
+  3. guard arithmetic, bit-for-bit: the accepted-loss EWMA recurrence
+     (f32 loss widened to f64), the f32 clip scale `clip_norm/grad_norm`,
+     `guard_backoff_ms` (base clamp, shift cap at 16x, jitter in
+     [0, base)), the divergence decision `ewma > best*(1+div_tol)` with
+     its best-update ordering, and the NaN-bits persist sentinel for an
+     uninitialized EWMA;
+  4. the mask-guardrail decision table: cooldown consumption, deferred
+     accounting and the relaxed (half-climb) retry target;
+  5. fault-stream simulation pinning the exact trajectories asserted in
+     rust/tests/chaos_training.rs: `grad_nan:0.25:5` fires 9/24 (longest
+     run 2 -> 9 skips, 15 accepted), `grad_explode:0.3:11` fires 7/16,
+     `loss_spike_mul:0.3:7` fires 6/23 post-warmup, the everything-storm
+     seed-4 streams, and the probability-1 skip-escalation ladder
+     (max_skips 3 / max_rollbacks 2 -> 9 skips, 2 rollbacks, 2 data
+     forks; the exp-driver variant 2/3 -> 8 skips, 3 rollbacks).
+
+A mismatch in section 5 means the RNG or stream-seed derivation drifted
+— fix that, do not re-pin the constants.
+
+Run: python3 python/tests/train_guard_check.py   (prints ALL OK)
+"""
+
+import struct
+import zlib
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+checks = []
+
+
+def check(name, ok):
+    checks.append((name, bool(ok)))
+    print(("PASS" if ok else "FAIL"), name)
+    assert ok, name
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", np.float32(x)))[0]
+
+
+# ---------------------------------------------------------------------
+# 1. RNG substrate (util/rng.rs)
+# ---------------------------------------------------------------------
+
+def splitmix64_next(state):
+    state = (state + GOLDEN) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded through splitmix64 — util/rng.rs verbatim."""
+
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = splitmix64_next(s)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        assert n > 0
+        return (self.next_u64() * n) >> 64
+
+    def f64(self):
+        # (next_u64 >> 11) * 2^-53 — exact in python floats
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+
+_, first = splitmix64_next(0)
+check("splitmix64 reference vector: next(0) == 0xE220A8397B1DCDAF",
+      first == 0xE220A8397B1DCDAF)
+r = Rng(7)
+draws = [r.f64() for _ in range(500)]
+check("f64(): every draw in [0, 1) with 53-bit granularity",
+      all(0.0 <= d < 1.0 and f64_bits(d) == f64_bits((f64_bits(d) and d))
+          for d in draws))
+
+
+# ---------------------------------------------------------------------
+# 2. Seed derivations (util/faults.rs, train/pretrain.rs)
+# ---------------------------------------------------------------------
+
+def crc32(s):
+    return zlib.crc32(s.encode()) & 0xFFFFFFFF
+
+
+def stream_seed(seed, site, salt=0):
+    """SiteState::stream_seed — the per-site fault draw stream."""
+    return (seed ^ crc32(site) ^ ((salt * GOLDEN) & MASK)) & MASK
+
+
+def fork_rng_seed(spec, label, salt, armed):
+    """Faults::fork_rng — the guard's backoff jitter stream."""
+    l = crc32(label)
+    if not armed:
+        return (0xB0FF ^ l) & MASK
+    return (((crc32(spec) << 32) ^ l ^ ((salt * GOLDEN) & MASK)) ^ 0xB0FF) & MASK
+
+
+def forked_corpus_seed(seed, fork):
+    """pretrain.rs: the data-order re-fork after a divergence rollback."""
+    return (seed ^ ((fork * GOLDEN) & MASK)) & MASK
+
+
+TRAIN_SITES = ["grad_nan", "grad_explode", "loss_spike_mul", "mask_corrupt"]
+
+check("train sites: distinct per-site streams from one spec seed",
+      len({stream_seed(5, s) for s in TRAIN_SITES}) == 4)
+check("guard jitter: disabled form is 0xB0FF ^ crc32('train_guard')",
+      fork_rng_seed("", "train_guard", 0, False) == 0xB0FF ^ crc32("train_guard"))
+check("guard jitter: armed form folds the spec hash in",
+      fork_rng_seed("grad_nan:0.25:5", "train_guard", 0, True)
+      == ((crc32("grad_nan:0.25:5") << 32) ^ crc32("train_guard") ^ 0xB0FF))
+check("forked_corpus_seed: fork 0 is the identity (guards-off bit-identity)",
+      forked_corpus_seed(0xB1A57, 0) == 0xB1A57)
+check("forked_corpus_seed: forks 1..8 all distinct from the root and each other",
+      len({forked_corpus_seed(0xB1A57, f) for f in range(9)}) == 9)
+
+
+# ---------------------------------------------------------------------
+# 3. Guard arithmetic (train/guard.rs), bit-for-bit
+# ---------------------------------------------------------------------
+
+# EWMA recurrence: first accepted loss seeds it, then
+# e = alpha*l + (1-alpha)*e, all in f64 on the f32 loss widened exactly.
+def ewma_fold(losses_f32, alpha):
+    e = None
+    for l in losses_f32:
+        l = float(np.float64(np.float32(l)))
+        e = l if e is None else alpha * l + (1.0 - alpha) * e
+    return e
+
+
+e = ewma_fold([4.0, 3.5, 3.8, 3.2, 3.0], 0.3)
+check("EWMA: pinned bits for the [4.0,3.5,3.8,3.2,3.0] @ alpha=0.3 fold "
+      "(losses widened from f32, as the guard sees them)",
+      f64_bits(e) == 0x400B9BF48863F140)
+check("EWMA: first accepted loss seeds the baseline exactly",
+      ewma_fold([3.7], 0.3) == float(np.float32(3.7)))
+
+# Clip scale: (clip_norm / grad_norm) as f32 — the one f32 rounding in
+# the guard. Pinned against independently computed IEEE bit patterns.
+check("clip scale: f32(10/25) == 0x3ECCCCCD",
+      f32_bits(10.0 / 25.0) == 0x3ECCCCCD)
+check("clip scale: f32(10/1e6) == 0x3727C5AC",
+      f32_bits(10.0 / 1e6) == 0x3727C5AC)
+check("clip scale: f32(1/3) == 0x3EAAAAAB",
+      f32_bits(1.0 / 3.0) == 0x3EAAAAAB)
+
+
+def guard_backoff_ms(base_ms, streak, rng):
+    """guard.rs::guard_backoff_ms verbatim."""
+    base = max(base_ms, 1)
+    return (base << min(max(streak - 1, 0), 4)) + rng.below(base)
+
+
+jr = Rng(fork_rng_seed("grad_nan:1:1", "train_guard", 0, True))
+backoffs = [guard_backoff_ms(5, k, jr) for k in range(1, 11)]
+check("backoff: exponential with the shift capped at 16x base",
+      all(5 * 2 ** min(k - 1, 4) <= b < 5 * 2 ** min(k - 1, 4) + 5
+          for k, b in zip(range(1, 11), backoffs)))
+jr2 = Rng(fork_rng_seed("grad_nan:1:1", "train_guard", 0, True))
+check("backoff: replays bit-for-bit from the spec-derived jitter stream",
+      backoffs == [guard_backoff_ms(5, k, jr2) for k in range(1, 11)])
+check("backoff: base 0 clamps to 1 (never a zero-length sleep window)",
+      guard_backoff_ms(0, 1, Rng(1)) >= 1)
+
+
+# Divergence decision: streak advances when ewma > best*(1+tol), and the
+# check runs BEFORE best absorbs the new ewma (a fresh minimum cannot
+# also count as divergence).
+def divergence_sim(losses_f32, alpha, tol, div_steps):
+    e, best, streak = None, float("inf"), 0
+    trigger = None
+    for i, l in enumerate(losses_f32):
+        l = float(np.float64(np.float32(l)))
+        e = l if e is None else alpha * l + (1.0 - alpha) * e
+        if e > best * (1.0 + tol):
+            streak += 1
+        else:
+            streak = 0
+        if e < best:
+            best = e
+        if streak >= div_steps and trigger is None:
+            trigger = i
+    return trigger
+
+
+losses = [3.0, 2.9, 2.8] + [4.2] * 10
+check("divergence: 20% tolerance, 5 steps — triggers once the EWMA has "
+      "climbed and held",
+      divergence_sim(losses, 0.3, 0.2, 5) == 8)
+check("divergence: an improving run never triggers",
+      divergence_sim([3.0 - 0.01 * i for i in range(50)], 0.3, 0.2, 5) is None)
+check("divergence: INF tolerance (permissive guard) never triggers",
+      divergence_sim(losses, 0.3, float("inf"), 5) is None)
+
+# Persist sentinel: uninitialized EWMA round-trips through NaN bits.
+nan_bits = f64_bits(float("nan"))
+restored = struct.unpack("<d", struct.pack("<Q", nan_bits))[0]
+check("persist: EWMA None <-> NaN-bits sentinel survives the round-trip",
+      restored != restored)
+check("persist: a real EWMA round-trips bit-exactly",
+      struct.unpack("<d", struct.pack("<Q", f64_bits(e)))[0] == e)
+
+
+# ---------------------------------------------------------------------
+# 4. Mask-guardrail decision table (cooldown / deferred / relaxed)
+# ---------------------------------------------------------------------
+
+def mask_ladder(iters, step_size, cooldown_updates, revert_all):
+    """Walk the trainer's update schedule with every probed update
+    reverting (the mask_corrupt:1 + paranoid-budget storm)."""
+    cooldown, reverts, deferred = 0, 0, 0
+    for it in range(iters):
+        if it % step_size != 0:
+            continue
+        if cooldown > 0:
+            cooldown -= 1
+            deferred += 1
+            continue
+        if revert_all:
+            reverts += 1
+            cooldown = cooldown_updates
+    return reverts, deferred
+
+
+check("mask ladder: 12 iters, step 5, cooldown 2 -> 1 revert, 2 deferred "
+      "(chaos_training.rs pin)",
+      mask_ladder(12, 5, 2, True) == (1, 2))
+check("mask ladder: 24 iters -> 2 reverts, 3 deferred (exp-driver full run)",
+      mask_ladder(24, 5, 2, True) == (2, 3))
+check("mask ladder: 10 iters -> 1 revert, 1 deferred (exp-driver --quick)",
+      mask_ladder(10, 5, 2, True) == (1, 1))
+
+# Relaxed retry target: half the remaining climb, schedule otherwise.
+def mask_target(relaxed, scheduled, current):
+    if relaxed and scheduled > current:
+        return current + (scheduled - current) * 0.5
+    return scheduled
+
+
+check("mask target: relaxed halves the climb",
+      mask_target(True, 0.75, 0.25) == 0.5)
+check("mask target: relaxed never raises a descending schedule",
+      mask_target(True, 0.25, 0.5) == 0.25)
+check("mask target: unrelaxed follows the schedule",
+      mask_target(False, 0.75, 0.25) == 0.75)
+
+# Paranoid probe budget: after <= before*(1 - 0.5) is impossible for
+# positive losses, so every probed update reverts — the determinism the
+# mask storm relies on.
+check("paranoid budget: a positive probe loss can never pass budget -0.5",
+      all(not (after <= before * 0.5)
+          for before in [0.1, 2.0, 5.5] for after in [before, before * 0.99]))
+
+
+# ---------------------------------------------------------------------
+# 5. Fault-stream simulation — the constants chaos_training.rs asserts
+# ---------------------------------------------------------------------
+
+def fire_pattern(site, seed, prob, n):
+    rng = Rng(stream_seed(seed, site))
+    return [rng.f64() < prob for _ in range(n)]
+
+
+def longest_run(fires):
+    run = best = 0
+    for f in fires:
+        run = run + 1 if f else 0
+        best = max(best, run)
+    return best
+
+
+nan24 = fire_pattern("grad_nan", 5, 0.25, 24)
+check("grad_nan:0.25:5 over 24 checks: exactly 9 fires",
+      sum(nan24) == 9)
+check("grad_nan:0.25:5: longest fire run 2 (< max_skips 8, no escalation)",
+      longest_run(nan24) == 2)
+check("grad_nan:0.25:5: trajectory 9 skips / 15 accepted",
+      (sum(nan24), 24 - sum(nan24)) == (9, 15))
+
+exp16 = fire_pattern("grad_explode", 11, 0.3, 16)
+check("grad_explode:0.3:11 over 16 checks: exactly 7 fires, longest run 3",
+      (sum(exp16), longest_run(exp16)) == (7, 3))
+
+spike23 = fire_pattern("loss_spike_mul", 7, 0.3, 23)
+check("loss_spike_mul:0.3:7 over 23 post-warmup checks: exactly 6 fires",
+      sum(spike23) == 6)
+check("loss_spike_mul:0.3:7: longest run 2 — EWMA stays clean, every fire "
+      "skipped",
+      longest_run(spike23) == 2)
+
+# everything-at-once storm, seed 4: grad_nan never fires; grad_explode's
+# 4 fires and loss_spike's 1 guarantee the `skips >= 1` assertion.
+all4 = {s: sum(fire_pattern(s, 4, p, 24))
+        for s, p in [("grad_nan", 0.1), ("grad_explode", 0.1),
+                     ("loss_spike_mul", 0.15)]}
+check("everything storm seed 4: grad_nan 0, grad_explode 4, loss_spike 1 fires",
+      (all4["grad_nan"], all4["grad_explode"], all4["loss_spike_mul"]) == (0, 4, 1))
+
+
+def escalation_sim(max_skips, max_rollbacks):
+    """The probability-1 grad_nan ladder: every step skips (no RNG draw at
+    prob >= 1), max_skips consecutive skips escalate to an anchored
+    rollback, and the (max_rollbacks+1)-th escalation aborts."""
+    skips = rollbacks = forks = streak = 0
+    while True:
+        skips += 1
+        streak += 1
+        if streak >= max_skips:
+            if rollbacks >= max_rollbacks:
+                return skips, rollbacks, forks, "rollback budget exhausted"
+            rollbacks += 1
+            forks += 1
+            streak = 0
+
+
+check("escalation 3/2 (chaos_training.rs): 9 skips, 2 rollbacks, 2 forks, abort",
+      escalation_sim(3, 2) == (9, 2, 2, "rollback budget exhausted"))
+check("escalation 2/3 (exp driver): 8 skips, 3 rollbacks, 3 forks, abort",
+      escalation_sim(2, 3) == (8, 3, 3, "rollback budget exhausted"))
+check("probability-1 fires draw nothing: pattern independent of the seed",
+      all(all(Rng(stream_seed(s, "grad_nan")).f64() is not None for _ in [0])
+          for s in range(4)))  # prob>=1 short-circuits before the stream
+
+
+# ---------------------------------------------------------------------
+
+failed = [n for n, ok in checks if not ok]
+assert not failed, failed
+print(f"ALL OK ({len(checks)} checks)")

@@ -24,6 +24,7 @@
 
 use std::collections::BTreeMap;
 use std::collections::HashSet;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -38,8 +39,10 @@ use crate::model::kv::KvOptions;
 use crate::model::params::ParamStore;
 use crate::sparse::BlockMask;
 use crate::tensor::Tensor;
+use crate::train::pretrain::{PretrainOptions, Trainer};
+use crate::train::GuardConfig;
 use crate::util::cli::Args;
-use crate::util::faults::Faults;
+use crate::util::faults::{FaultSite, Faults};
 use crate::util::rng::Rng;
 
 fn chaos_config() -> NativeConfig {
@@ -312,9 +315,252 @@ fn run_fleet_storm(
     Ok(FleetReport { ok, errored, pool_leak: leak, metrics, statuses })
 }
 
+fn train_opts(iters: usize, seed: u64) -> PretrainOptions {
+    PretrainOptions {
+        total_iters: iters,
+        s_max: 0.5,
+        step_size: 5,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// One guarded training storm on the micro twin: arm `spec` + `gcfg`,
+/// run `iters` iterations (autosaving into `ckpt_dir` when given, which
+/// also pins a rollback anchor), and hand back the trainer + injector +
+/// run outcome for invariant checks.
+fn run_train_storm(
+    spec: &str,
+    gcfg: GuardConfig,
+    iters: usize,
+    seed: u64,
+    ckpt_dir: Option<&Path>,
+) -> Result<(Trainer<'static>, Faults, Result<()>)> {
+    let faults = if spec.is_empty() { Faults::disabled() } else { Faults::parse(spec)? };
+    let mut t = Trainer::new_native("micro", train_opts(iters, seed))?;
+    t.set_faults(faults.clone());
+    t.arm_guard(gcfg);
+    let run = match ckpt_dir {
+        Some(dir) => t.run_with_autosave(iters, dir, 4, 8, &faults),
+        None => t.run(iters),
+    };
+    Ok((t, faults, run))
+}
+
+fn finite_params(t: &Trainer) -> bool {
+    t.params().in_order().all(|(_, w)| w.data().iter().all(|v| v.is_finite()))
+}
+
+fn final_loss(t: &Trainer) -> f32 {
+    t.log.last().map(|l| l.loss).unwrap_or(f32::NAN)
+}
+
+/// Scratch checkpoint directory for one storm; pid-scoped so concurrent
+/// CI shards never collide.
+fn storm_dir(tag: &str, seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("blast-chaos-train-{tag}-{seed}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `blast exp chaos --train [--steps N --seed S --quick]` — the guarded
+/// pretraining storm matrix. Each storm arms one (or all) of the four
+/// training fault sites against the self-healing ladder on the micro twin
+/// and checks the recovery invariants:
+///
+/// 1. a quiet (permissive) guard is **bit-identical** to guards-off;
+/// 2. every armed storm finishes with finite loss + parameters, and every
+///    anomaly fire is answered by a recorded skip/clip/revert;
+/// 3. the rollback anchor checkpoint stays loadable (CRC quick-verify);
+/// 4. exhausted budgets fail loudly (the escalation storm *expects* the
+///    run to abort with exact skip/rollback/data-fork counts).
+pub fn chaos_train(args: &Args) -> Result<()> {
+    let iters = args.get_usize("steps", if args.get_bool("quick") { 10 } else { 24 });
+    let seed = args.get_usize("seed", 1) as u64;
+    println!("chaos training storms: micro twin, {iters} iters/run, seed {seed}\n");
+
+    // [quiet guard] permissive thresholds must not perturb a single bit
+    let mut plain = Trainer::new_native("micro", train_opts(iters, seed))?;
+    plain.run(iters)?;
+    let (quiet, _, run) = run_train_storm("", GuardConfig::permissive(), iters, seed, None)?;
+    run?;
+    let identical = plain.log.len() == quiet.log.len()
+        && plain
+            .log
+            .iter()
+            .zip(quiet.log.iter())
+            .all(|(a, b)| a.loss.to_bits() == b.loss.to_bits());
+    if !identical {
+        bail!("invariant violated: a permissive guard changed the loss stream");
+    }
+    let s = quiet.guard().expect("guard armed").stats();
+    if s.skips + s.clips + s.rollbacks + s.mask_reverts != 0 {
+        bail!("invariant violated: permissive guard intervened: {:?}", s);
+    }
+    println!("[quiet guard] {iters} iters bit-identical to guards-off");
+
+    // [single-site storms] every fire must be answered by a skip
+    let storms: Vec<(&str, String)> = vec![
+        ("grad nan storm", format!("grad_nan:0.25:{seed}")),
+        ("grad explode storm", format!("grad_explode:0.2:{}:1000000", seed + 1)),
+    ];
+    for (label, spec) in &storms {
+        let (t, f, run) = run_train_storm(spec, GuardConfig::default(), iters, seed, None)?;
+        run?;
+        let s = t.guard().expect("guard armed").stats();
+        let fired: u64 = FaultSite::ALL.iter().map(|&site| f.fired(site)).sum();
+        if s.skips < fired {
+            bail!(
+                "invariant violated: [{label}] {} fires but only {} skips",
+                fired,
+                s.skips
+            );
+        }
+        if !final_loss(&t).is_finite() || !finite_params(&t) {
+            bail!("invariant violated: [{label}] non-finite loss or params survived the guard");
+        }
+        println!("[{label}] guard: {}", t.guard().unwrap().summary());
+        println!("  faults: {}\n", f.summary());
+    }
+
+    // [loss spike storm] armed only after one clean iteration: a spike
+    // landing before the EWMA baseline exists would be *accepted* (by
+    // design — there is nothing to compare against) and poison the
+    // baseline; past iteration 0 every fire must be skipped
+    {
+        let spec = format!("loss_spike_mul:0.3:{}:100", seed + 2);
+        let mut t = Trainer::new_native("micro", train_opts(iters, seed))?;
+        t.arm_guard(GuardConfig::default());
+        t.run(1)?;
+        let f = Faults::parse(&spec)?;
+        t.set_faults(f.clone());
+        t.run(iters - 1)?;
+        let s = t.guard().expect("guard armed").stats();
+        let fired = f.fired(FaultSite::LossSpikeMul);
+        if s.skips < fired {
+            bail!(
+                "invariant violated: [loss spike storm] {} fires but only {} skips",
+                fired,
+                s.skips
+            );
+        }
+        if !final_loss(&t).is_finite() || !finite_params(&t) {
+            bail!("invariant violated: [loss spike storm] non-finite state");
+        }
+        println!("[loss spike storm] guard: {}", t.guard().unwrap().summary());
+        println!("  faults: {}\n", f.summary());
+    }
+
+    // [mask corrupt storm] every update is corrupted; under a paranoid
+    // budget (the probe passes only if the update *halves* the loss —
+    // impossible) every probed update must revert deterministically, so
+    // the corruption never reaches the masks
+    {
+        let spec = format!("mask_corrupt:1:{}", seed + 3);
+        let gcfg = GuardConfig { mask_budget: -0.5, ..GuardConfig::default() };
+        let (t, f, run) = run_train_storm(&spec, gcfg, iters, seed, None)?;
+        run?;
+        let s = t.guard().expect("guard armed").stats();
+        if s.mask_reverts < 1 || s.mask_updates_deferred < 1 {
+            bail!(
+                "invariant violated: [mask corrupt storm] reverts {} deferred {} (want >=1 each)",
+                s.mask_reverts,
+                s.mask_updates_deferred
+            );
+        }
+        if t.controller().mean_sparsity() != 0.0 {
+            bail!(
+                "invariant violated: [mask corrupt storm] corruption reached the masks \
+                 (sparsity {:.3})",
+                t.controller().mean_sparsity()
+            );
+        }
+        if !final_loss(&t).is_finite() || !finite_params(&t) {
+            bail!("invariant violated: [mask corrupt storm] non-finite state");
+        }
+        println!("[mask corrupt storm] guard: {}", t.guard().unwrap().summary());
+        println!("  faults: {}\n", f.summary());
+    }
+
+    // [everything at once] all four sites against loosened budgets, with
+    // autosaves pinning a rollback anchor that must stay loadable
+    {
+        let dir = storm_dir("all", seed);
+        let spec = format!(
+            "grad_nan:0.1:{s},grad_explode:0.1:{s}:1000000,\
+             loss_spike_mul:0.15:{s}:100,mask_corrupt:0.5:{s}",
+            s = seed + 4
+        );
+        let gcfg = GuardConfig {
+            max_skips: 12,
+            max_rollbacks: 50,
+            mask_budget: 0.1,
+            // a persistent-corruption regime is flat, not rising: loosen
+            // the divergence trigger so the storm cannot ping-pong the
+            // rollback budget
+            div_tol: 0.5,
+            ..GuardConfig::default()
+        };
+        let (t, f, run) = run_train_storm(&spec, gcfg, iters, seed, Some(&dir))?;
+        run?;
+        if !final_loss(&t).is_finite() || !finite_params(&t) {
+            bail!("invariant violated: [everything at once] non-finite state");
+        }
+        let anchor = t
+            .rollback_anchor()
+            .ok_or_else(|| anyhow::anyhow!("no rollback anchor was pinned"))?;
+        ParamStore::quick_verify(anchor)?;
+        println!("[everything at once] guard: {}", t.guard().unwrap().summary());
+        println!("  anchor {} quick-verified, faults: {}\n", anchor.display(), f.summary());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // [skip escalation] grad_nan at probability 1 never draws the RNG, so
+    // the trajectory is exact regardless of seed: 2 skips per lap, three
+    // anchored rollbacks (each re-forking the data order), then the
+    // budget-exhaustion abort on the fourth escalation
+    {
+        let dir = storm_dir("esc", seed);
+        let spec = format!("grad_nan:1:{}", seed + 5);
+        let gcfg = GuardConfig { max_skips: 2, max_rollbacks: 3, ..GuardConfig::default() };
+        let (t, _f, run) = run_train_storm(&spec, gcfg, iters, seed, Some(&dir))?;
+        let err = match run {
+            Ok(()) => bail!("invariant violated: rollback budget never exhausted"),
+            Err(e) => format!("{e:#}"),
+        };
+        if !err.contains("rollback budget") {
+            bail!("invariant violated: unexpected escalation failure: {err}");
+        }
+        let s = t.guard().expect("guard armed").stats();
+        if s.rollbacks != 3 || s.skips != 8 || t.data_fork() != 3 {
+            bail!(
+                "invariant violated: escalation trajectory off: rollbacks {} skips {} forks {}",
+                s.rollbacks,
+                s.skips,
+                t.data_fork()
+            );
+        }
+        println!("[skip escalation] aborted as designed after 3 rollbacks / 8 skips");
+        println!("  error: {err}\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    println!(
+        "all training storm invariants held: quiet guard bit-identical, anomalies answered, \
+         anchors verifiable, budgets fail loudly"
+    );
+    Ok(())
+}
+
 /// `blast exp chaos [--requests N --seed S --deadline-ms D --replicas R
-/// --attn-threshold TAU]`.
+/// --attn-threshold TAU | --train --steps N]`.
 pub fn chaos(args: &Args) -> Result<()> {
+    // `--train` selects the guarded-pretraining storm matrix instead of
+    // the serving sweep
+    if args.get_bool("train") {
+        return chaos_train(args);
+    }
     let n = args.get_usize("requests", if args.get_bool("quick") { 8 } else { 24 });
     let seed = args.get_usize("seed", 1) as u64;
     let deadline = args.get_usize("deadline-ms", 2_000) as u64;

@@ -8,7 +8,9 @@
 //!   prune-and-grow; optionally save a checkpoint. The default `native`
 //!   backend runs forward + backward + Adam on the packed kernel stack
 //!   (no artifacts needed); `aot` drives the PJRT `train_step`
-//!   executables.
+//!   executables. `--guard` (plus `--guard-*` overrides) arms the
+//!   self-healing ladder: anomaly skip/clip, divergence rollback to the
+//!   last verified autosave, mask-update probe + revert.
 //! * `blast serve [--sparsity 0.9 --block 128 --batched false --kv-page 64
 //!   --kv-pool-pages 0 --prefix-cache false ...]` — run the
 //!   continuous-batching inference coordinator over the native sparse
@@ -42,6 +44,7 @@ use blast::model::engine::{AttnOptions, Engine, MlpMode};
 use blast::model::params::ParamStore;
 use blast::runtime::Runtime;
 use blast::train::pretrain::{PretrainOptions, Trainer};
+use blast::train::GuardConfig;
 use blast::util::cli::Args;
 use blast::util::faults::Faults;
 
@@ -53,6 +56,44 @@ fn faults_from_args(args: &Args) -> Result<Faults> {
         Some(spec) => Faults::parse(spec),
         None => Faults::from_env(),
     }
+}
+
+/// `--guard` (or any `--guard-*` threshold override) arms the
+/// self-healing training ladder; with none present `run_train` takes the
+/// exact pre-guard path, bit-identical to previous releases.
+fn guard_from_args(args: &Args) -> Option<GuardConfig> {
+    const KEYS: [&str; 12] = [
+        "guard-clip",
+        "guard-explode",
+        "guard-spike",
+        "guard-ewma",
+        "guard-div-tol",
+        "guard-div-steps",
+        "guard-max-skips",
+        "guard-backoff-ms",
+        "guard-max-rollbacks",
+        "guard-mask-budget",
+        "guard-cooldown",
+        "guard-probe-batches",
+    ];
+    if !args.get_bool("guard") && KEYS.iter().all(|k| args.get(k).is_none()) {
+        return None;
+    }
+    let d = GuardConfig::default();
+    Some(GuardConfig {
+        clip_norm: args.get_f64("guard-clip", d.clip_norm),
+        explode_norm: args.get_f64("guard-explode", d.explode_norm),
+        spike_mul: args.get_f64("guard-spike", d.spike_mul),
+        ewma_alpha: args.get_f64("guard-ewma", d.ewma_alpha),
+        div_tol: args.get_f64("guard-div-tol", d.div_tol),
+        div_steps: args.get_usize("guard-div-steps", d.div_steps),
+        max_skips: args.get_usize("guard-max-skips", d.max_skips),
+        backoff_ms: args.get_usize("guard-backoff-ms", d.backoff_ms as usize) as u64,
+        max_rollbacks: args.get_usize("guard-max-rollbacks", d.max_rollbacks),
+        mask_budget: args.get_f64("guard-mask-budget", d.mask_budget),
+        cooldown_updates: args.get_usize("guard-cooldown", d.cooldown_updates),
+        probe_batches: args.get_usize("guard-probe-batches", d.probe_batches),
+    })
 }
 
 fn main() {
@@ -92,6 +133,10 @@ fn print_help() {
          \x20            --decay D --dense-right L --block-mult M --save ckpt.bin \\\n\
          \x20            --save-ckpt full.blst --resume full.blst \\\n\
          \x20            --ckpt-dir dir --ckpt-every N --ckpt-keep K \\\n\
+         \x20            --guard [--guard-clip C --guard-explode E --guard-spike M \\\n\
+         \x20            --guard-ewma A --guard-div-tol T --guard-div-steps K \\\n\
+         \x20            --guard-max-skips K --guard-backoff-ms MS --guard-max-rollbacks K \\\n\
+         \x20            --guard-mask-budget B --guard-cooldown K --guard-probe-batches N] \\\n\
          \x20            --backend native|aot]\n\
          \x20 blast serve [--sparsity S --block B --requests N --max-batch K --batched false \\\n\
          \x20             --kv-page P --kv-pool-pages M --prefix-cache false --deadline-ms D \\\n\
@@ -101,7 +146,15 @@ fn print_help() {
          Fault sites for --faults / BLAST_FAULTS: decode_round_panic,\n\
          decode_round_error, prefill_error, kv_pool_exhausted,\n\
          decode_stall_ms, ckpt_torn_write, scheduler_panic,\n\
-         replica_crash, replica_stall_ms, heartbeat_drop.\n\n\
+         replica_crash, replica_stall_ms, heartbeat_drop, grad_nan,\n\
+         grad_explode, loss_spike_mul, mask_corrupt (the four training\n\
+         sites inject only on the guarded path).\n\n\
+         `blast train --guard` arms the self-healing ladder: global-norm\n\
+         clip, anomaly skip with jittered backoff, divergence rollback to\n\
+         the last verified autosave (data order re-forked), and a held-out\n\
+         probe that reverts mask updates regressing loss beyond\n\
+         --guard-mask-budget. Guards off = bit-identical to previous\n\
+         releases.\n\n\
          `--attn-threshold TAU` arms BLASST dynamic attention sparsity:\n\
          k-tiles (prefill) and KV pages (decode) whose score bound falls\n\
          more than TAU below the running row max are skipped. Omitted =\n\
@@ -174,6 +227,28 @@ fn run_train(args: &Args) -> Result<()> {
         };
         Trainer::from_backend(rt.as_ref(), &config, opts)?
     };
+    // the trainer shares the CLI's injector handle so the exit summary
+    // below reflects training-path fires; set before arming the guard —
+    // the guard's jitter stream forks off this injector's spec
+    trainer.set_faults(faults.clone());
+    if let Some(cfg) = guard_from_args(args) {
+        trainer.arm_guard(cfg);
+        println!(
+            "training guard armed: clip={} explode={} spike={} div_tol={}/{} \
+             max_skips={} max_rollbacks={} mask_budget={}",
+            cfg.clip_norm,
+            cfg.explode_norm,
+            cfg.spike_mul,
+            cfg.div_tol,
+            cfg.div_steps,
+            cfg.max_skips,
+            cfg.max_rollbacks,
+            cfg.mask_budget
+        );
+    }
+    if faults.enabled() {
+        println!("fault injection active: {}", faults.spec());
+    }
     let config = trainer.config().name.clone();
     println!("backend: {}", trainer.backend_name());
     let t0 = std::time::Instant::now();
@@ -195,6 +270,20 @@ fn run_train(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64(),
         trainer.controller().mean_sparsity()
     );
+    if let Some(g) = trainer.guard() {
+        println!("guard: {}", g.summary());
+        if trainer.data_fork() > 0 {
+            println!(
+                "data order re-forked {} time(s) by divergence rollback",
+                trainer.data_fork()
+            );
+        }
+    }
+    // per-site fired/checked accounting, mirroring `blast serve`'s exit
+    // line; printed only when armed so plain runs stay byte-identical
+    if faults.enabled() {
+        println!("fault injector: {}", faults.summary());
+    }
     if let Some(path) = args.get("save") {
         trainer.params().save(Path::new(path))?;
         println!("checkpoint saved to {path}");

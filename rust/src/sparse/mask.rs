@@ -156,6 +156,49 @@ impl BlockMask {
             }
         }
     }
+
+    /// Pack the values of every *kept* block of a dense `(rb*b, cb*b)`
+    /// matrix into a contiguous vector: blocks in row-major grid order,
+    /// each block row-major. With `scatter_blocks` this gives a cheap
+    /// undo buffer for a mask update — snapshot the blocks about to be
+    /// zeroed, and restore them if the update is reverted.
+    pub fn gather_blocks(&self, w: &[f32], block: usize) -> Vec<f32> {
+        let c = self.cb * block;
+        assert_eq!(w.len(), self.rb * block * c);
+        let mut out = Vec::with_capacity(self.nnzb() * block * block);
+        for br in 0..self.rb {
+            for bc in 0..self.cb {
+                if self.get(br, bc) {
+                    for i in 0..block {
+                        let row = (br * block + i) * c + bc * block;
+                        out.extend_from_slice(&w[row..row + block]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`gather_blocks`](Self::gather_blocks): write `vals`
+    /// back into the kept blocks of `w`, same traversal order. Pruned
+    /// blocks are left untouched.
+    pub fn scatter_blocks(&self, vals: &[f32], w: &mut [f32], block: usize) {
+        let c = self.cb * block;
+        assert_eq!(w.len(), self.rb * block * c);
+        assert_eq!(vals.len(), self.nnzb() * block * block);
+        let mut at = 0;
+        for br in 0..self.rb {
+            for bc in 0..self.cb {
+                if self.get(br, bc) {
+                    for i in 0..block {
+                        let row = (br * block + i) * c + bc * block;
+                        w[row..row + block].copy_from_slice(&vals[at..at + block]);
+                        at += block;
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +268,35 @@ mod tests {
         assert_eq!(w[4], 0.0);
         assert_eq!(w[5], 0.0);
         assert_eq!(w[2], 3.0); // block (0,1) intact
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_restores_zeroed_blocks() {
+        prop::check_default("mask-gather-scatter", |rng| {
+            let rb = prop::usize_in(rng, 1, 5);
+            let cb = prop::usize_in(rng, 1, 5);
+            let block = prop::usize_in(rng, 1, 4);
+            let m = BlockMask::random(rb, cb, rng.f64(), rng);
+            let w0: Vec<f32> = (0..rb * cb * block * block)
+                .map(|_| rng.f64() as f32 - 0.5)
+                .collect();
+            let saved = m.gather_blocks(&w0, block);
+            prop_assert!(
+                saved.len() == m.nnzb() * block * block,
+                "gather size mismatch"
+            );
+            // zero the kept blocks (what a prune step does to regrown
+            // blocks), then scatter the snapshot back
+            let mut w = w0.clone();
+            let inverse = BlockMask::from_bits(rb, cb, m.bits().iter().map(|b| !b).collect());
+            inverse.apply_to(&mut w, block);
+            m.scatter_blocks(&saved, &mut w, block);
+            prop_assert!(
+                w.iter().zip(&w0).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gather→zero→scatter not bit-identical"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -155,6 +155,19 @@ impl PruneGrowController {
         grads: &BTreeMap<String, Tensor>,
     ) -> MaskUpdate {
         let s = self.target_sparsity(iteration);
+        self.update_with_target(iteration, s, weights, grads)
+    }
+
+    /// [`update`](Self::update) with an explicit target sparsity instead
+    /// of the scheduled one — the guarded trainer retries a reverted mask
+    /// update at lower aggression by passing a target below the schedule.
+    pub fn update_with_target(
+        &mut self,
+        iteration: usize,
+        s: f64,
+        weights: &BTreeMap<String, Tensor>,
+        grads: &BTreeMap<String, Tensor>,
+    ) -> MaskUpdate {
         let mut upd = MaskUpdate {
             target_sparsity: s,
             iteration,
@@ -194,6 +207,21 @@ impl PruneGrowController {
         upd.stats = agg;
         self.history.push(upd.clone());
         upd
+    }
+
+    /// Revert the most recent [`update`](Self::update): restore the
+    /// caller's pre-update mask snapshot and drop the update from the
+    /// history so the Fig. 10 series only records updates that stuck.
+    /// The caller is responsible for restoring the weight blocks the
+    /// update zeroed (see `BlockMask::gather_blocks`).
+    pub fn undo_last_update(
+        &mut self,
+        masks: BTreeMap<String, BlockMask>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.history.is_empty(), "no mask update to undo");
+        self.restore_masks(masks)?;
+        self.history.pop();
+        Ok(())
     }
 
     /// Mean realized sparsity across all tracked masks (dense-policy layers
@@ -319,6 +347,25 @@ mod tests {
             }
         }
         let _ = upd;
+    }
+
+    #[test]
+    fn update_with_target_overrides_schedule_and_undo_reverts() {
+        let mut c = controller(1, DensePolicy::default());
+        let specs = specs_2layer(4, 4);
+        let w = tensors(&specs, 4, 7);
+        let g = tensors(&specs, 4, 8);
+        let before = c.masks().clone();
+        // schedule at iter 99 is ~0.75, but ask for a gentler 0.25
+        let upd = c.update_with_target(99, 0.25, &w, &g);
+        assert!(upd.target_sparsity <= 0.25 + 1e-9);
+        assert!(c.mean_sparsity() <= 0.25 + 1e-9);
+        assert_eq!(c.history().len(), 1);
+        c.undo_last_update(before.clone()).unwrap();
+        assert_eq!(c.masks(), &before);
+        assert!(c.history().is_empty());
+        // nothing left to undo
+        assert!(c.undo_last_update(before).is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::corpus::LmBatch;
 use crate::model::params::ParamStore;
@@ -90,6 +90,31 @@ pub trait TrainBackend {
         masks: &BTreeMap<String, BlockMask>,
         batch: &LmBatch,
     ) -> Result<f32>;
+
+    /// First half of a *split* step: forward + backward only, no state
+    /// mutation. Returns `Some((loss, grads))` when the backend can
+    /// separate gradient computation from the optimizer update — the
+    /// guarded trainer needs this window to inspect/clip/reject gradients
+    /// before they reach Adam. `None` (the default) means the backend only
+    /// offers the fused [`train_step`](Self::train_step); guards cannot be
+    /// armed on it.
+    fn grad_step(
+        &mut self,
+        _state: &TrainState,
+        _masks: &BTreeMap<String, BlockMask>,
+        _batch: &LmBatch,
+    ) -> Result<Option<(f32, ParamStore)>> {
+        Ok(None)
+    }
+
+    /// Second half of a split step: apply `grads` to `state` via the
+    /// optimizer and advance the step counter — exactly what
+    /// [`train_step`](Self::train_step) does after its backward pass, so a
+    /// `grad_step` + `apply_update` pair is bit-identical to one fused
+    /// step. Backends without a split step reject the call.
+    fn apply_update(&mut self, _state: &mut TrainState, _grads: &ParamStore) -> Result<()> {
+        bail!("backend has no split-step path (grad_step returned None)")
+    }
 }
 
 /// The PJRT/AOT executor: drives the `<config>_train_step` /

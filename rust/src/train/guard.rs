@@ -1,0 +1,608 @@
+//! Per-step training guard — the training-side mirror of the serving
+//! HealthState ladder (PR 6/8). Where serving retries a round, retires a
+//! session, and finally fails a replica over, training:
+//!
+//! ```text
+//! L1  clip     gradient norm > clip_norm        → scale grads to clip_norm
+//! L2  skip     NaN/Inf loss or grads, norm >    → drop the update, jittered
+//!              explode_norm, loss > EWMA·spike    bounded backoff, retry on
+//!                                                 the next batch
+//! L3  revert   mask update degrades the held-   → restore previous mask +
+//!              out probe beyond mask_budget       zeroed blocks, cooldown,
+//!                                                 retry at lower aggression
+//! L4  rollback loss EWMA > best·(1+div_tol)     → restore last-good
+//!              for div_steps consecutive          checkpoint, re-fork the
+//!              accepted steps, or max_skips       data order
+//!              consecutive skips
+//! ```
+//!
+//! The guard is pure bookkeeping over `(loss, grad_norm)` pairs — all
+//! decisions are deterministic functions of the observation stream, the
+//! config, and one `fork_rng`-seeded jitter stream, so the whole ladder
+//! is transliterated and pinned by `python/tests/train_guard_check.py`.
+//! Guards-off runs never construct a `StepGuard` and are bit-identical
+//! to the unguarded trainer.
+
+use std::time::Duration;
+
+use crate::model::params::ParamStore;
+use crate::util::rng::Rng;
+
+/// Thresholds and budgets for the guard ladder. Defaults are deliberately
+/// loose — they catch catastrophic anomalies (NaN, 100× spikes), not
+/// ordinary loss noise.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardConfig {
+    /// Global-norm clip: gradients scaled so their norm never exceeds this.
+    pub clip_norm: f64,
+    /// Gradient norm above this is an anomaly (skip, don't clip).
+    pub explode_norm: f64,
+    /// Loss above `EWMA · spike_mul` is an anomaly.
+    pub spike_mul: f64,
+    /// EWMA smoothing weight of the newest accepted loss.
+    pub ewma_alpha: f64,
+    /// Divergence tolerance: EWMA above `best · (1 + div_tol)` counts
+    /// toward the rollback streak.
+    pub div_tol: f64,
+    /// Consecutive diverged steps that trigger a rollback.
+    pub div_steps: usize,
+    /// Consecutive skipped steps that escalate to a rollback.
+    pub max_skips: usize,
+    /// Base backoff after a skipped step (doubles per consecutive skip,
+    /// capped at 16×, plus `below(base)` ms of jitter — the
+    /// `restart_backoff_ms` idiom from the fleet).
+    pub backoff_ms: u64,
+    /// Rollbacks allowed before the run fails loudly.
+    pub max_rollbacks: usize,
+    /// Mask probe budget: post-update probe loss above
+    /// `pre · (1 + mask_budget)` reverts the update. `INFINITY` disables
+    /// the probe entirely.
+    pub mask_budget: f64,
+    /// Mask updates to defer after a revert.
+    pub cooldown_updates: usize,
+    /// Held-out batches per mask probe.
+    pub probe_batches: usize,
+}
+
+impl Default for GuardConfig {
+    fn default() -> GuardConfig {
+        GuardConfig {
+            clip_norm: 10.0,
+            explode_norm: 1e3,
+            spike_mul: 3.0,
+            ewma_alpha: 0.3,
+            div_tol: 0.2,
+            div_steps: 5,
+            max_skips: 8,
+            backoff_ms: 5,
+            max_rollbacks: 8,
+            mask_budget: 0.25,
+            cooldown_updates: 2,
+            probe_batches: 1,
+        }
+    }
+}
+
+impl GuardConfig {
+    /// Every threshold at infinity: the guard observes but can never
+    /// clip, skip, revert, or roll back. A permissive guard's run must be
+    /// bit-identical to guards-off (asserted in `chaos_training.rs`).
+    pub fn permissive() -> GuardConfig {
+        GuardConfig {
+            clip_norm: f64::INFINITY,
+            explode_norm: f64::INFINITY,
+            spike_mul: f64::INFINITY,
+            div_tol: f64::INFINITY,
+            mask_budget: f64::INFINITY,
+            ..GuardConfig::default()
+        }
+    }
+}
+
+/// Counters the guard accumulates over a run (monotone across rollbacks).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GuardStats {
+    pub steps_accepted: u64,
+    pub skips: u64,
+    pub clips: u64,
+    pub rollbacks: u64,
+    pub mask_reverts: u64,
+    pub mask_updates_deferred: u64,
+    pub last_anomaly: Option<&'static str>,
+}
+
+/// The guard's verdict on one `(loss, grad_norm)` observation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    /// Apply the optimizer update, scaling gradients by `clip_scale`
+    /// first when present.
+    Accept { clip_scale: Option<f32> },
+    /// Drop the update (gradients discarded, step counter untouched) and
+    /// sleep `backoff` before the next batch.
+    Skip {
+        reason: &'static str,
+        backoff: Duration,
+    },
+}
+
+/// Guard state in checkpoint-portable form: f64s as IEEE bit patterns
+/// (`NAN` bits = uninitialized EWMA) so a save/restore round-trip is
+/// bit-exact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GuardPersist {
+    pub ewma_bits: u64,
+    pub best_bits: u64,
+    pub div_streak: usize,
+    pub skip_streak: usize,
+    pub cooldown: usize,
+    pub relaxed: bool,
+    pub rollbacks: u64,
+    pub skips: u64,
+    pub clips: u64,
+    pub mask_reverts: u64,
+    pub deferred: u64,
+}
+
+/// The per-step anomaly guard. One instance lives on a guarded
+/// [`Trainer`](crate::train::Trainer); all methods are deterministic.
+pub struct StepGuard {
+    cfg: GuardConfig,
+    /// Backoff jitter stream, forked from the fault plan so armed storms
+    /// replay bit-for-bit (`faults.fork_rng("train_guard")`).
+    rng: Rng,
+    /// EWMA of *accepted* losses; `None` until the first accepted step.
+    ewma: Option<f64>,
+    /// Best (lowest) EWMA seen — the divergence reference level.
+    best: f64,
+    div_streak: usize,
+    skip_streak: usize,
+    /// Mask updates still to defer after a revert.
+    cooldown: usize,
+    /// After a revert, the next attempted update halves its sparsity
+    /// increment; cleared when an update passes the probe.
+    relaxed: bool,
+    stats: GuardStats,
+}
+
+impl StepGuard {
+    pub fn new(cfg: GuardConfig, rng: Rng) -> StepGuard {
+        StepGuard {
+            cfg,
+            rng,
+            ewma: None,
+            best: f64::INFINITY,
+            div_streak: 0,
+            skip_streak: 0,
+            cooldown: 0,
+            relaxed: false,
+            stats: GuardStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &GuardConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &GuardStats {
+        &self.stats
+    }
+
+    /// No live anomaly streak — the condition for advancing the rollback
+    /// anchor to a fresh checkpoint.
+    pub fn healthy(&self) -> bool {
+        self.div_streak == 0 && self.skip_streak == 0
+    }
+
+    /// Judge one step's `(loss, grad_norm)` *before* the optimizer runs.
+    /// Counters and the skip streak advance here; the EWMA only advances
+    /// in [`observe_accepted`](Self::observe_accepted) once the update is
+    /// actually applied.
+    pub fn check(&mut self, loss: f32, grad_norm: f64) -> Verdict {
+        let reason = if !loss.is_finite() {
+            Some("loss_nonfinite")
+        } else if !grad_norm.is_finite() {
+            Some("grad_nonfinite")
+        } else if grad_norm > self.cfg.explode_norm {
+            Some("grad_explode")
+        } else if self
+            .ewma
+            .is_some_and(|e| loss as f64 > e * self.cfg.spike_mul)
+        {
+            Some("loss_spike")
+        } else {
+            None
+        };
+        match reason {
+            Some(reason) => {
+                self.skip_streak += 1;
+                self.stats.skips += 1;
+                self.stats.last_anomaly = Some(reason);
+                let ms = guard_backoff_ms(self.cfg.backoff_ms, self.skip_streak, &mut self.rng);
+                Verdict::Skip {
+                    reason,
+                    backoff: Duration::from_millis(ms),
+                }
+            }
+            None => {
+                self.skip_streak = 0;
+                self.stats.steps_accepted += 1;
+                let clip_scale = if grad_norm > self.cfg.clip_norm {
+                    self.stats.clips += 1;
+                    Some((self.cfg.clip_norm / grad_norm) as f32)
+                } else {
+                    None
+                };
+                Verdict::Accept { clip_scale }
+            }
+        }
+    }
+
+    /// Fold an accepted step's loss into the EWMA and advance the
+    /// divergence streak. Returns `true` when the streak has reached
+    /// `div_steps` — the trainer must roll back to the last-good anchor.
+    pub fn observe_accepted(&mut self, loss: f32) -> bool {
+        let l = loss as f64;
+        let e = match self.ewma {
+            None => l,
+            Some(e) => self.cfg.ewma_alpha * l + (1.0 - self.cfg.ewma_alpha) * e,
+        };
+        self.ewma = Some(e);
+        if e > self.best * (1.0 + self.cfg.div_tol) {
+            self.div_streak += 1;
+        } else {
+            self.div_streak = 0;
+        }
+        if e < self.best {
+            self.best = e;
+        }
+        self.div_streak >= self.cfg.div_steps
+    }
+
+    /// Has the consecutive-skip budget run out? (Escalates to rollback.)
+    pub fn skips_exhausted(&self) -> bool {
+        self.skip_streak >= self.cfg.max_skips
+    }
+
+    /// Account a rollback and restore the anchor's guard trajectory
+    /// (EWMA/best/cooldown/relaxed) while keeping the monotone counters —
+    /// the rolled-back run remembers how much trouble it has been in.
+    /// `None` anchor (plain `run()` with no checkpoint dir) just clears
+    /// the streaks so the run can limp on.
+    pub fn rollback_restore(&mut self, anchor: Option<&GuardPersist>) {
+        self.stats.rollbacks += 1;
+        if let Some(a) = anchor {
+            let e = f64::from_bits(a.ewma_bits);
+            self.ewma = if e.is_nan() { None } else { Some(e) };
+            self.best = f64::from_bits(a.best_bits);
+            self.cooldown = a.cooldown;
+            self.relaxed = a.relaxed;
+        }
+        self.div_streak = 0;
+        self.skip_streak = 0;
+    }
+
+    /// True when the rollback budget is spent — the trainer fails the run
+    /// loudly instead of thrashing.
+    pub fn rollbacks_exhausted(&self) -> bool {
+        self.stats.rollbacks >= self.cfg.max_rollbacks as u64
+    }
+
+    // ---- mask-update guardrail ----
+
+    /// Gate one scheduled mask update. A cooldown from a recent revert
+    /// consumes the update instead (counted as deferred).
+    pub fn mask_update_allowed(&mut self) -> bool {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            self.stats.mask_updates_deferred += 1;
+            return false;
+        }
+        true
+    }
+
+    /// Target sparsity for the next update: the schedule's value, or —
+    /// right after a revert — only half the remaining climb from the
+    /// current level (retry at lower aggression).
+    pub fn mask_target(&self, scheduled: f64, current: f64) -> f64 {
+        if self.relaxed && scheduled > current {
+            current + (scheduled - current) * 0.5
+        } else {
+            scheduled
+        }
+    }
+
+    /// Did the post-update probe stay inside the budget?
+    pub fn mask_probe_ok(&self, before: f32, after: f32) -> bool {
+        after.is_finite() && (after as f64) <= (before as f64) * (1.0 + self.cfg.mask_budget)
+    }
+
+    /// Account a reverted mask update: controller on cooldown, next
+    /// attempt relaxed.
+    pub fn note_mask_reverted(&mut self) {
+        self.stats.mask_reverts += 1;
+        self.cooldown = self.cfg.cooldown_updates;
+        self.relaxed = true;
+    }
+
+    /// Account an accepted mask update (probe passed or probe disabled).
+    pub fn note_mask_accepted(&mut self) {
+        self.relaxed = false;
+    }
+
+    // ---- persistence ----
+
+    /// Snapshot for the checkpoint meta block.
+    pub fn persist(&self) -> GuardPersist {
+        GuardPersist {
+            ewma_bits: self.ewma.unwrap_or(f64::NAN).to_bits(),
+            best_bits: self.best.to_bits(),
+            div_streak: self.div_streak,
+            skip_streak: self.skip_streak,
+            cooldown: self.cooldown,
+            relaxed: self.relaxed,
+            rollbacks: self.stats.rollbacks,
+            skips: self.stats.skips,
+            clips: self.stats.clips,
+            mask_reverts: self.stats.mask_reverts,
+            deferred: self.stats.mask_updates_deferred,
+        }
+    }
+
+    /// Restore from a checkpoint meta block (the resume path) — the
+    /// inverse of [`persist`](Self::persist), bit-exact.
+    pub fn restore(&mut self, p: &GuardPersist) {
+        let e = f64::from_bits(p.ewma_bits);
+        self.ewma = if e.is_nan() { None } else { Some(e) };
+        self.best = f64::from_bits(p.best_bits);
+        self.div_streak = p.div_streak;
+        self.skip_streak = p.skip_streak;
+        self.cooldown = p.cooldown;
+        self.relaxed = p.relaxed;
+        self.stats.rollbacks = p.rollbacks;
+        self.stats.skips = p.skips;
+        self.stats.clips = p.clips;
+        self.stats.mask_reverts = p.mask_reverts;
+        self.stats.mask_updates_deferred = p.deferred;
+    }
+
+    /// One-line counter summary for the CLI exit report.
+    pub fn summary(&self) -> String {
+        let s = &self.stats;
+        let mut out = format!(
+            "accepted={} skips={} clips={} rollbacks={} mask_reverts={} deferred={}",
+            s.steps_accepted, s.skips, s.clips, s.rollbacks, s.mask_reverts, s.mask_updates_deferred
+        );
+        if let Some(a) = s.last_anomaly {
+            out.push_str(&format!(" last_anomaly={a}"));
+        }
+        out
+    }
+}
+
+/// Jittered bounded backoff after the `streak`-th consecutive skip
+/// (1-based): `base · 2^min(streak−1, 4)` plus `below(base)` ms of
+/// spec-seeded jitter — the same shape as the fleet's
+/// `restart_backoff_ms`, so storms desynchronize instead of thundering.
+pub fn guard_backoff_ms(base_ms: u64, streak: usize, rng: &mut Rng) -> u64 {
+    let base = base_ms.max(1);
+    (base << streak.saturating_sub(1).min(4)) + rng.below(base as usize) as u64
+}
+
+/// Global L2 norm over every tensor in `grads`, accumulated in f64 (the
+/// clip decision must not itself overflow on exploded f32 gradients).
+pub fn global_grad_norm(grads: &ParamStore) -> f64 {
+    let mut acc = 0.0f64;
+    for (_, t) in grads.in_order() {
+        for &x in t.data() {
+            acc += (x as f64) * (x as f64);
+        }
+    }
+    acc.sqrt()
+}
+
+/// Scale every gradient tensor in place (the clip application).
+pub fn scale_grads(grads: &mut ParamStore, scale: f32) {
+    let names: Vec<String> = grads.names().to_vec();
+    for name in &names {
+        for x in grads.get_mut(name).unwrap().data_mut() {
+            *x *= scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guard(cfg: GuardConfig) -> StepGuard {
+        StepGuard::new(cfg, Rng::new(7))
+    }
+
+    #[test]
+    fn ewma_matches_closed_form_recurrence() {
+        let mut g = guard(GuardConfig::permissive());
+        let losses = [4.0f32, 3.5, 3.8, 3.2, 3.0];
+        let mut expect: Option<f64> = None;
+        for &l in &losses {
+            assert_eq!(g.check(l, 1.0), Verdict::Accept { clip_scale: None });
+            g.observe_accepted(l);
+            expect = Some(match expect {
+                None => l as f64,
+                Some(e) => 0.3 * l as f64 + 0.7 * e,
+            });
+            assert_eq!(g.persist().ewma_bits, expect.unwrap().to_bits());
+        }
+    }
+
+    #[test]
+    fn clip_scale_kicks_in_above_threshold_only() {
+        let mut g = guard(GuardConfig::default());
+        assert_eq!(g.check(2.0, 9.99), Verdict::Accept { clip_scale: None });
+        match g.check(2.0, 40.0) {
+            Verdict::Accept {
+                clip_scale: Some(s),
+            } => assert_eq!(s.to_bits(), ((10.0f64 / 40.0) as f32).to_bits()),
+            v => panic!("expected clipped accept, got {v:?}"),
+        }
+        assert_eq!(g.stats().clips, 1);
+        assert_eq!(g.stats().steps_accepted, 2);
+    }
+
+    #[test]
+    fn nonfinite_and_exploded_observations_skip() {
+        let mut g = guard(GuardConfig::default());
+        for (loss, norm, want) in [
+            (f32::NAN, 1.0, "loss_nonfinite"),
+            (2.0, f64::INFINITY, "grad_nonfinite"),
+            (2.0, 1e4, "grad_explode"),
+        ] {
+            match g.check(loss, norm) {
+                Verdict::Skip { reason, .. } => assert_eq!(reason, want),
+                v => panic!("expected skip, got {v:?}"),
+            }
+        }
+        assert_eq!(g.stats().skips, 3);
+        assert!(!g.skips_exhausted());
+        // accepting resets the streak
+        g.check(2.0, 1.0);
+        assert!(g.healthy());
+    }
+
+    #[test]
+    fn loss_spike_needs_an_initialized_ewma() {
+        let mut g = guard(GuardConfig::default());
+        // first-ever loss can't spike — there is no baseline yet
+        assert!(matches!(g.check(1e6, 1.0), Verdict::Accept { .. }));
+        g.observe_accepted(2.0); // pretend the accepted loss was sane
+        match g.check(100.0, 1.0) {
+            Verdict::Skip { reason, .. } => assert_eq!(reason, "loss_spike"),
+            v => panic!("expected spike skip, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn backoff_schedule_is_bounded_and_grows() {
+        let mut rng = Rng::new(1);
+        for streak in 1..=12usize {
+            let ms = guard_backoff_ms(5, streak, &mut rng);
+            let det = 5u64 << (streak - 1).min(4);
+            assert!(ms >= det && ms < det + 5, "streak {streak}: {ms}");
+        }
+        // zero base is clamped to 1 (never a divide/modulo-by-zero)
+        let ms = guard_backoff_ms(0, 1, &mut rng);
+        assert!(ms >= 1 && ms < 2);
+    }
+
+    #[test]
+    fn divergence_streak_triggers_rollback_after_div_steps() {
+        let cfg = GuardConfig {
+            div_steps: 3,
+            ..GuardConfig::default()
+        };
+        let mut g = guard(cfg);
+        // establish a good baseline
+        for _ in 0..8 {
+            g.check(1.0, 1.0);
+            assert!(!g.observe_accepted(1.0));
+        }
+        // regress > 20% above best: streak builds, fires on the 3rd
+        g.check(2.0, 1.0);
+        assert!(!g.observe_accepted(2.0));
+        g.check(2.0, 1.0);
+        assert!(!g.observe_accepted(2.0));
+        g.check(2.0, 1.0);
+        assert!(g.observe_accepted(2.0));
+        // one good-enough step anywhere resets the streak
+        let mut h = guard(cfg);
+        for _ in 0..8 {
+            h.check(1.0, 1.0);
+            h.observe_accepted(1.0);
+        }
+        h.check(2.0, 1.0);
+        assert!(!h.observe_accepted(2.0));
+        // EWMA decays back under best·1.2 if the loss recovers
+        for _ in 0..12 {
+            h.check(1.0, 1.0);
+            assert!(!h.observe_accepted(1.0));
+        }
+        assert!(h.healthy());
+    }
+
+    #[test]
+    fn rollback_restore_keeps_monotone_counters() {
+        let mut g = guard(GuardConfig::default());
+        g.check(1.0, 1.0);
+        g.observe_accepted(1.0);
+        let anchor = g.persist();
+        // trouble after the anchor: skips accumulate
+        g.check(f32::NAN, 1.0);
+        g.check(f32::NAN, 1.0);
+        g.rollback_restore(Some(&anchor));
+        assert_eq!(g.stats().rollbacks, 1);
+        assert_eq!(g.stats().skips, 2, "skip counter must survive rollback");
+        assert!(g.healthy());
+        assert_eq!(g.persist().ewma_bits, anchor.ewma_bits);
+        assert!(!g.rollbacks_exhausted());
+    }
+
+    #[test]
+    fn persist_restore_roundtrip_is_bit_exact() {
+        let mut g = guard(GuardConfig::default());
+        // uninitialized EWMA survives the NaN sentinel
+        let p0 = g.persist();
+        let mut h = guard(GuardConfig::default());
+        h.restore(&p0);
+        assert_eq!(h.persist().ewma_bits, p0.ewma_bits);
+        // initialized state roundtrips every field
+        g.check(3.0, 20.0);
+        g.observe_accepted(3.0);
+        g.check(f32::NAN, 1.0);
+        g.note_mask_reverted();
+        let p = g.persist();
+        let mut k = guard(GuardConfig::default());
+        k.restore(&p);
+        let q = k.persist();
+        assert_eq!(p.ewma_bits, q.ewma_bits);
+        assert_eq!(p.best_bits, q.best_bits);
+        assert_eq!(p.skip_streak, q.skip_streak);
+        assert_eq!(p.cooldown, q.cooldown);
+        assert_eq!(p.relaxed, q.relaxed);
+        assert_eq!(p.skips, q.skips);
+        assert_eq!(p.clips, q.clips);
+        assert_eq!(p.mask_reverts, q.mask_reverts);
+    }
+
+    #[test]
+    fn mask_guardrail_cooldown_and_relaxed_target() {
+        let mut g = guard(GuardConfig::default());
+        assert!(g.mask_update_allowed());
+        assert_eq!(g.mask_target(0.6, 0.2), 0.6, "not relaxed: schedule wins");
+        assert!(g.mask_probe_ok(2.0, 2.4));
+        assert!(!g.mask_probe_ok(2.0, 2.6));
+        assert!(!g.mask_probe_ok(2.0, f32::NAN));
+        g.note_mask_reverted();
+        // cooldown_updates=2 deferred updates, then allowed again
+        assert!(!g.mask_update_allowed());
+        assert!(!g.mask_update_allowed());
+        assert!(g.mask_update_allowed());
+        assert_eq!(g.stats().mask_updates_deferred, 2);
+        // relaxed halves the remaining climb, never lowers below current
+        assert_eq!(g.mask_target(0.6, 0.2), 0.4);
+        assert_eq!(g.mask_target(0.1, 0.2), 0.1, "descending schedule passes through");
+        g.note_mask_accepted();
+        assert_eq!(g.mask_target(0.6, 0.2), 0.6);
+    }
+
+    #[test]
+    fn permissive_guard_never_intervenes() {
+        let mut g = guard(GuardConfig::permissive());
+        for i in 0..100 {
+            let loss = 1.0 + (i % 7) as f32 * 100.0; // wild swings
+            assert_eq!(g.check(loss, 1e9), Verdict::Accept { clip_scale: None });
+            assert!(!g.observe_accepted(loss));
+        }
+        assert_eq!(g.stats().skips, 0);
+        assert_eq!(g.stats().clips, 0);
+        assert!(g.healthy());
+    }
+}

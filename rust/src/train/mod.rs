@@ -8,6 +8,8 @@
 //! * [`native`] — the default executor: forward + backward + AdamW on the
 //!   packed kernel stack, block sparsity accelerating both directions of
 //!   the MLP (no artifacts, runs in every build).
+//! * [`guard`] — the self-healing ladder around the step: anomaly
+//!   skip/clip, divergence rollback, mask-update probe + revert.
 //! * [`pretrain`] — LM pretraining on the synthetic corpus
 //!   (backend-generic; `Trainer::new_native` / `Trainer::new`).
 //! * [`classify`] — classification (ViT / GLUE twins) training +
@@ -17,10 +19,12 @@
 
 pub mod backend;
 pub mod classify;
+pub mod guard;
 pub mod native;
 pub mod pretrain;
 
 pub use backend::{AotBackend, StepOutput, TrainBackend, TrainState};
 pub use classify::{ClassifyTrainer, EvalScores};
+pub use guard::{GuardConfig, GuardPersist, GuardStats, StepGuard, Verdict};
 pub use native::{MlpExec, NativeBackend, RepackStats};
 pub use pretrain::{open_backend_runtime, IterLog, PretrainOptions, Trainer};

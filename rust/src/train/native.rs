@@ -890,6 +890,21 @@ impl TrainBackend for NativeBackend {
     ) -> Result<f32> {
         self.loss_only(&state.params, masks, batch)
     }
+
+    fn grad_step(
+        &mut self,
+        state: &TrainState,
+        masks: &BTreeMap<String, BlockMask>,
+        batch: &LmBatch,
+    ) -> Result<Option<(f32, ParamStore)>> {
+        self.loss_and_grads(&state.params, masks, batch).map(Some)
+    }
+
+    fn apply_update(&mut self, state: &mut TrainState, grads: &ParamStore) -> Result<()> {
+        self.adam(state, grads);
+        state.step += 1;
+        Ok(())
+    }
 }
 
 #[inline]
@@ -1225,5 +1240,40 @@ mod tests {
             losses.last().unwrap() < losses.first().unwrap(),
             "loss did not decrease on a fixed batch: {losses:?}"
         );
+    }
+
+    /// The split step (`grad_step` + `apply_update`) is bit-identical to
+    /// the fused `train_step` — the invariant the guarded trainer's
+    /// bit-identity guarantee rests on.
+    #[test]
+    fn split_step_is_bit_identical_to_fused_step() {
+        let cfg = tiny_cfg("gpt2");
+        let mut rng = Rng::new(61);
+        let masks = rand_masks(&cfg, 0.5, &mut rng);
+        let mut be_fused = NativeBackend::new(&cfg).unwrap();
+        let mut be_split = NativeBackend::new(&cfg).unwrap();
+        let mut fused = TrainState::new(ParamStore::init(&cfg, 62));
+        let mut split = TrainState::new(ParamStore::init(&cfg, 62));
+        for _ in 0..4 {
+            let batch = rand_batch(&cfg, &mut rng);
+            let out = be_fused.train_step(&mut fused, &masks, &batch, false).unwrap();
+            let (loss, grads) = be_split.grad_step(&split, &masks, &batch).unwrap().unwrap();
+            be_split.apply_update(&mut split, &grads).unwrap();
+            assert_eq!(out.loss.to_bits(), loss.to_bits());
+        }
+        assert_eq!(fused.step, split.step);
+        for store in [
+            (&fused.params, &split.params),
+            (&fused.adam_m, &split.adam_m),
+            (&fused.adam_v, &split.adam_v),
+        ] {
+            for ((na, ta), (nb, tb)) in store.0.in_order().zip(store.1.in_order()) {
+                assert_eq!(na, nb);
+                assert!(
+                    ta.data().iter().zip(tb.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{na}: split step diverged from fused step"
+                );
+            }
+        }
     }
 }

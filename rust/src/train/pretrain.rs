@@ -10,12 +10,12 @@
 //! the dense weights — the Rust realization of the paper's Listing 1.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::data::corpus::Corpus;
+use crate::data::corpus::{Corpus, LmBatch};
 use crate::model::config::sim_config;
 use crate::model::params::ParamStore;
 use crate::runtime::{ConfigInfo, Runtime};
@@ -24,9 +24,19 @@ use crate::sparsify::controller::{DensePolicy, PruneGrowConfig, PruneGrowControl
 use crate::sparsify::SparsitySchedule;
 use crate::tensor::Tensor;
 use crate::train::backend::{AotBackend, TrainBackend, TrainState};
+use crate::train::guard::{
+    global_grad_norm, scale_grads, GuardConfig, GuardPersist, StepGuard, Verdict,
+};
 use crate::train::native::NativeBackend;
-use crate::util::faults::Faults;
+use crate::util::faults::{FaultSite, Faults};
 use crate::util::json::Json;
+
+/// Seed of the re-forked corpus after `fork` divergence rollbacks: the
+/// run must not replay into the same loss cliff, so each rollback draws a
+/// fresh but deterministic data order. `fork = 0` is the original seed.
+fn forked_corpus_seed(seed: u64, fork: u64) -> u64 {
+    seed ^ fork.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
 
 /// Hyper-parameters of one pretraining run (Table 2's columns).
 #[derive(Clone, Debug)]
@@ -125,9 +135,27 @@ pub struct Trainer<'rt> {
     corpus: Corpus,
     /// Iterations executed so far across the whole run — survives a
     /// checkpoint/resume round trip (unlike `log`, which is per-process
-    /// diagnostics). [`Trainer::run`] continues from here.
+    /// diagnostics). [`Trainer::run`] continues from here. A divergence
+    /// rollback rewinds this to the anchor's iteration, so after a
+    /// rollback `log` can carry more than one entry per iteration.
     done_iters: usize,
     pub log: Vec<IterLog>,
+    /// The anomaly guard; `None` (the default) leaves every code path
+    /// bit-identical to the unguarded trainer.
+    guard: Option<StepGuard>,
+    /// Fault plan for the training-path sites (`grad_nan`, …) — consulted
+    /// only on the guarded path.
+    faults: Faults,
+    /// Divergence rollbacks so far; keys [`forked_corpus_seed`].
+    data_fork: u64,
+    /// Last checkpoint known good — the rollback target. Advances only
+    /// while the guard is healthy.
+    rollback_anchor: Option<PathBuf>,
+    /// Held-out probe batches for the mask guardrail (built lazily).
+    probe: Option<Vec<LmBatch>>,
+    /// Guard state carried by a resumed checkpoint, applied when
+    /// [`Trainer::arm_guard`] runs.
+    pending_guard_state: Option<GuardPersist>,
 }
 
 /// A block mask as a `[rb, cb]` 0/1 tensor (checkpoint representation).
@@ -156,6 +184,50 @@ fn tensor_to_mask(t: &Tensor) -> BlockMask {
     m
 }
 
+/// Split a checkpoint's flat tensor store into the four prefixed
+/// sections (`param.` / `adam_m.` / `adam_v.` / `mask.`).
+fn split_checkpoint_store(
+    store: &ParamStore,
+) -> (ParamStore, ParamStore, ParamStore, BTreeMap<String, BlockMask>) {
+    let mut params = ParamStore::new();
+    let mut adam_m = ParamStore::new();
+    let mut adam_v = ParamStore::new();
+    let mut masks: BTreeMap<String, BlockMask> = BTreeMap::new();
+    for (n, t) in store.in_order() {
+        if let Some(s) = n.strip_prefix("param.") {
+            params.insert(s.to_string(), t.clone());
+        } else if let Some(s) = n.strip_prefix("adam_m.") {
+            adam_m.insert(s.to_string(), t.clone());
+        } else if let Some(s) = n.strip_prefix("adam_v.") {
+            adam_v.insert(s.to_string(), t.clone());
+        } else if let Some(s) = n.strip_prefix("mask.") {
+            masks.insert(s.to_string(), tensor_to_mask(t));
+        }
+    }
+    (params, adam_m, adam_v, masks)
+}
+
+/// Guard trajectory from a checkpoint's meta block, when the checkpoint
+/// was written by a guarded run (the f64 fields travel as IEEE-bit
+/// strings so the round trip is exact).
+fn guard_persist_from_meta(meta: &Json) -> Option<GuardPersist> {
+    let ewma_bits: u64 = meta.str_or("guard_ewma_bits", "").parse().ok()?;
+    let best_bits: u64 = meta.str_or("guard_best_bits", "").parse().ok()?;
+    Some(GuardPersist {
+        ewma_bits,
+        best_bits,
+        div_streak: meta.usize_or("guard_div_streak", 0),
+        skip_streak: meta.usize_or("guard_skip_streak", 0),
+        cooldown: meta.usize_or("guard_cooldown", 0),
+        relaxed: meta.usize_or("guard_relaxed", 0) != 0,
+        rollbacks: meta.usize_or("guard_rollbacks", 0) as u64,
+        skips: meta.usize_or("guard_skips", 0) as u64,
+        clips: meta.usize_or("guard_clips", 0) as u64,
+        mask_reverts: meta.usize_or("guard_mask_reverts", 0) as u64,
+        deferred: meta.usize_or("guard_deferred", 0) as u64,
+    })
+}
+
 /// Newest-first retention sweep over `ckpt-*.blst` in `dir` (zero-padded
 /// iteration numbers make lexicographic order chronological). Only
 /// checkpoints that pass [`ParamStore::quick_verify`] count toward
@@ -166,7 +238,12 @@ fn tensor_to_mask(t: &Tensor) -> BlockMask {
 /// `.blst.tmp` debris abandoned by torn writers are swept as junk, and
 /// any deletion is followed by a best-effort directory fsync so the
 /// prune is durable no later than the rename that triggered it.
-fn prune_checkpoints(dir: &Path, keep: usize) {
+///
+/// `pin` protects one path from the sweep regardless of age: the guarded
+/// trainer's current rollback anchor must survive even when it has aged
+/// out of the `keep` window, or a divergence would have nothing valid to
+/// roll back to.
+fn prune_checkpoints(dir: &Path, keep: usize, pin: Option<&Path>) {
     let Ok(rd) = std::fs::read_dir(dir) else { return };
     let mut valid: Vec<std::path::PathBuf> = Vec::new();
     let mut junk: Vec<std::path::PathBuf> = Vec::new();
@@ -185,8 +262,12 @@ fn prune_checkpoints(dir: &Path, keep: usize) {
     }
     valid.sort();
     let mut removed = false;
-    while valid.len() > keep.max(1) {
-        std::fs::remove_file(valid.remove(0)).ok();
+    let aged_out = valid.len().saturating_sub(keep.max(1));
+    for p in valid.into_iter().take(aged_out) {
+        if pin.is_some_and(|a| a == p.as_path()) {
+            continue;
+        }
+        std::fs::remove_file(&p).ok();
         removed = true;
     }
     for p in junk {
@@ -317,6 +398,12 @@ impl<'rt> Trainer<'rt> {
             corpus,
             done_iters: 0,
             log: Vec::new(),
+            guard: None,
+            faults: Faults::disabled(),
+            data_fork: 0,
+            rollback_anchor: None,
+            probe: None,
+            pending_guard_state: None,
         })
     }
 
@@ -352,6 +439,51 @@ impl<'rt> Trainer<'rt> {
         self.backend.name()
     }
 
+    /// Thread a fault plan through to the guarded training path. Call
+    /// *before* [`Trainer::arm_guard`] — the guard's backoff jitter
+    /// stream is forked from this plan's spec.
+    pub fn set_faults(&mut self, faults: Faults) {
+        self.faults = faults;
+    }
+
+    /// Arm the anomaly guard. A checkpointed guard trajectory (from
+    /// [`Trainer::resume_from`]) is applied here, so resume + arm
+    /// continues the guarded run exactly where it left off.
+    pub fn arm_guard(&mut self, cfg: GuardConfig) {
+        let mut g = StepGuard::new(cfg, self.faults.fork_rng("train_guard"));
+        if let Some(p) = self.pending_guard_state.take() {
+            g.restore(&p);
+        }
+        self.guard = Some(g);
+    }
+
+    pub fn guard(&self) -> Option<&StepGuard> {
+        self.guard.as_ref()
+    }
+
+    /// Divergence rollbacks so far (0 = the original data order).
+    pub fn data_fork(&self) -> u64 {
+        self.data_fork
+    }
+
+    /// The checkpoint a divergence would roll back to.
+    pub fn rollback_anchor(&self) -> Option<&Path> {
+        self.rollback_anchor.as_deref()
+    }
+
+    /// Rebuild the corpus stream for the current `data_fork` and
+    /// fast-forward it to the batch iteration `done_iters` consumes next.
+    fn rebuild_corpus(&mut self) {
+        self.corpus = Corpus::new(
+            self.cfg.vocab,
+            self.opts.branching,
+            forked_corpus_seed(self.opts.seed, self.data_fork),
+        );
+        for _ in 0..self.done_iters {
+            self.corpus.batch(self.cfg.batch, self.cfg.seq);
+        }
+    }
+
     /// Masks expanded from the controller's (possibly coarse) grid to the
     /// fine ABI grid every backend consumes.
     fn fine_masks(&self) -> BTreeMap<String, BlockMask> {
@@ -369,7 +501,21 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Execute one training iteration (Listing 1 body). Returns the loss.
+    ///
+    /// With a guard armed ([`Trainer::arm_guard`]) the step runs split
+    /// (gradients inspected before the optimizer) and may be skipped,
+    /// clipped, or — on a divergence — answered with a rollback that
+    /// *rewinds* [`Trainer::done_iters`] to the anchor's iteration.
     pub fn train_iteration(&mut self, iter: usize) -> Result<f32> {
+        if self.guard.is_none() {
+            self.train_iteration_unguarded(iter)
+        } else {
+            self.train_iteration_guarded(iter)
+        }
+    }
+
+    /// The unguarded fused step — byte-for-byte the pre-guard trainer.
+    fn train_iteration_unguarded(&mut self, iter: usize) -> Result<f32> {
         let t0 = Instant::now();
         let batch = self.corpus.batch(self.cfg.batch, self.cfg.seq);
         let fine = self.fine_masks();
@@ -389,27 +535,122 @@ impl<'rt> Trainer<'rt> {
             }
             let upd = self.controller.update(iter, &weights, &out.mlp_grads);
             regrown_ratio = upd.stats.regrown_ratio;
-            // prune_weights(): zero newly-enabled blocks in the dense W
-            for (name, to_zero) in &upd.regrown {
-                let block = self.cfg.block * self.opts.block_mult.max(1);
-                let w = self.state.params.get_mut(name).unwrap();
-                let inverse = {
-                    // apply_to zeroes *pruned* blocks, so invert: we want to
-                    // zero exactly the to_zero set
-                    let mut inv = BlockMask::ones(to_zero.rb, to_zero.cb);
-                    for r in 0..to_zero.rb {
-                        for c in 0..to_zero.cb {
-                            if to_zero.get(r, c) {
-                                inv.set(r, c, false);
-                            }
-                        }
-                    }
-                    inv
-                };
-                inverse.apply_to(w.data_mut(), block);
-            }
+            self.zero_regrown(&upd.regrown);
         }
 
+        self.push_iter_log(iter, loss, t0, regrown_ratio, mask_update);
+        self.done_iters = self.done_iters.max(iter + 1);
+        Ok(loss)
+    }
+
+    /// The guarded split step: grad fault sites → norm check → clip or
+    /// skip-with-backoff → optimizer → EWMA divergence watch → probed
+    /// mask update. Escalates to [`Trainer::rollback_to_anchor`] when the
+    /// skip budget runs out or the EWMA diverges `div_steps` in a row.
+    fn train_iteration_guarded(&mut self, iter: usize) -> Result<f32> {
+        let t0 = Instant::now();
+        let batch = self.corpus.batch(self.cfg.batch, self.cfg.seq);
+        let fine = self.fine_masks();
+        let mask_update = self.controller.should_update(iter);
+        let (mut loss, mut grads) = self
+            .backend
+            .grad_step(&self.state, &fine, &batch)?
+            .ok_or_else(|| {
+                anyhow!(
+                    "--guard-* needs a backend with a split step; the {:?} \
+                     backend only offers the fused train_step",
+                    self.backend.name()
+                )
+            })?;
+
+        // deterministic training fault sites (armed storms only; the
+        // unguarded path never consults them)
+        if self.faults.fire(FaultSite::GradNan) {
+            if let Some(name) = grads.names().first().cloned() {
+                if let Some(x) = grads.get_mut(&name).unwrap().data_mut().first_mut() {
+                    *x = f32::NAN;
+                }
+            }
+        }
+        if self.faults.fire(FaultSite::GradExplode) {
+            scale_grads(&mut grads, self.faults.magnitude(FaultSite::GradExplode) as f32);
+        }
+        if self.faults.fire(FaultSite::LossSpikeMul) {
+            loss *= self.faults.magnitude(FaultSite::LossSpikeMul) as f32;
+        }
+
+        let gnorm = global_grad_norm(&grads);
+        let verdict = self.guard.as_mut().unwrap().check(loss, gnorm);
+        match verdict {
+            Verdict::Skip { reason, backoff } => {
+                crate::log_warn!(
+                    "train",
+                    "iter {iter}: step skipped ({reason}, loss {loss:.4}, |g| {gnorm:.3e}); \
+                     backing off {}ms",
+                    backoff.as_millis()
+                );
+                std::thread::sleep(backoff);
+                self.push_iter_log(iter, loss, t0, 0.0, false);
+                self.done_iters = self.done_iters.max(iter + 1);
+                if self.guard.as_ref().unwrap().skips_exhausted() {
+                    self.rollback_to_anchor("consecutive-skip budget exhausted")?;
+                }
+                return Ok(loss);
+            }
+            Verdict::Accept { clip_scale } => {
+                if let Some(s) = clip_scale {
+                    scale_grads(&mut grads, s);
+                }
+                self.backend.apply_update(&mut self.state, &grads)?;
+                let diverged = self.guard.as_mut().unwrap().observe_accepted(loss);
+                let mut regrown_ratio = 0.0;
+                if mask_update && !diverged {
+                    let mut mlp_grads = BTreeMap::new();
+                    for name in &self.cfg.mlp_weights {
+                        mlp_grads.insert(name.clone(), grads.req(name).clone());
+                    }
+                    regrown_ratio = self.guarded_mask_update(iter, &mlp_grads)?;
+                }
+                self.push_iter_log(iter, loss, t0, regrown_ratio, mask_update);
+                self.done_iters = self.done_iters.max(iter + 1);
+                if diverged {
+                    self.rollback_to_anchor("loss EWMA diverged beyond tolerance")?;
+                }
+                Ok(loss)
+            }
+        }
+    }
+
+    /// `prune_weights()`: zero newly-enabled blocks in the dense weights.
+    fn zero_regrown(&mut self, regrown: &BTreeMap<String, BlockMask>) {
+        let block = self.cfg.block * self.opts.block_mult.max(1);
+        for (name, to_zero) in regrown {
+            let w = self.state.params.get_mut(name).unwrap();
+            let inverse = {
+                // apply_to zeroes *pruned* blocks, so invert: we want to
+                // zero exactly the to_zero set
+                let mut inv = BlockMask::ones(to_zero.rb, to_zero.cb);
+                for r in 0..to_zero.rb {
+                    for c in 0..to_zero.cb {
+                        if to_zero.get(r, c) {
+                            inv.set(r, c, false);
+                        }
+                    }
+                }
+                inv
+            };
+            inverse.apply_to(w.data_mut(), block);
+        }
+    }
+
+    fn push_iter_log(
+        &mut self,
+        iter: usize,
+        loss: f32,
+        t0: Instant,
+        regrown_ratio: f64,
+        mask_update: bool,
+    ) {
         self.log.push(IterLog {
             iter,
             loss,
@@ -419,17 +660,179 @@ impl<'rt> Trainer<'rt> {
             regrown_ratio,
             mask_update,
         });
-        self.done_iters = self.done_iters.max(iter + 1);
-        Ok(loss)
+    }
+
+    /// Mean loss over the held-out probe batches (a corpus stream distinct
+    /// from both training and [`Trainer::eval_perplexity`], so probing
+    /// never perturbs the training data order).
+    fn probe_loss(&mut self) -> Result<f32> {
+        if self.probe.is_none() {
+            let n = self.guard.as_ref().unwrap().config().probe_batches.max(1);
+            self.probe = Some(Corpus::eval_batches(
+                self.cfg.vocab,
+                self.opts.branching,
+                self.opts.seed ^ 0x9A7D_5EED,
+                n,
+                self.cfg.batch,
+                self.cfg.seq,
+            ));
+        }
+        let batches = self.probe.take().unwrap();
+        let fine = self.fine_masks();
+        let mut total = 0.0f64;
+        for b in &batches {
+            total += self.backend.eval_loss(&self.state, &fine, b)? as f64;
+        }
+        let n = batches.len();
+        self.probe = Some(batches);
+        Ok((total / n as f64) as f32)
+    }
+
+    /// One mask update under the guardrail: cooldown gate → (relaxed)
+    /// target → probe before → update + zero regrown → probe after →
+    /// revert with cooldown when the probe degrades beyond budget. The
+    /// revert restores both the previous masks and the exact weight
+    /// values the update zeroed, so a reverted update is a no-op on
+    /// training state. Returns the regrown ratio (0 when deferred or
+    /// reverted).
+    fn guarded_mask_update(
+        &mut self,
+        iter: usize,
+        mlp_grads: &BTreeMap<String, Tensor>,
+    ) -> Result<f64> {
+        if !self.guard.as_mut().unwrap().mask_update_allowed() {
+            crate::log_warn!("train", "iter {iter}: mask update deferred (controller on cooldown)");
+            return Ok(0.0);
+        }
+        let scheduled = self.controller.target_sparsity(iter);
+        let current = self.controller.mean_sparsity();
+        let target = self.guard.as_ref().unwrap().mask_target(scheduled, current);
+        let probe_enabled = self.guard.as_ref().unwrap().config().mask_budget.is_finite();
+        let before = if probe_enabled { Some(self.probe_loss()?) } else { None };
+        let old_masks = self.controller.masks().clone();
+
+        let mut weights = BTreeMap::new();
+        for wname in &self.cfg.mlp_weights {
+            weights.insert(wname.clone(), self.state.params.req(wname).clone());
+        }
+        let upd = self
+            .controller
+            .update_with_target(iter, target, &weights, mlp_grads);
+        let regrown_ratio = upd.stats.regrown_ratio;
+        // snapshot the exact values the zeroing is about to destroy
+        let block = self.cfg.block * self.opts.block_mult.max(1);
+        let snapshots: Vec<(String, Vec<f32>)> = if probe_enabled {
+            upd.regrown
+                .iter()
+                .map(|(name, to_zero)| {
+                    let w = self.state.params.req(name);
+                    (name.clone(), to_zero.gather_blocks(w.data(), block))
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.zero_regrown(&upd.regrown);
+
+        // catastrophic-update fault: the controller's fresh masks are
+        // replaced wholesale with one-surviving-block grids — the probe
+        // (or, with the probe disabled, divergence rollback) must catch it
+        if self.faults.fire(FaultSite::MaskCorrupt) {
+            let corrupt: BTreeMap<String, BlockMask> = self
+                .controller
+                .masks()
+                .iter()
+                .map(|(name, m)| {
+                    let mut z = BlockMask::zeros(m.rb, m.cb);
+                    z.set(0, 0, true);
+                    (name.clone(), z)
+                })
+                .collect();
+            self.controller.restore_masks(corrupt)?;
+            crate::log_warn!("train", "iter {iter}: mask_corrupt fault fired");
+        }
+
+        if let Some(before) = before {
+            let after = self.probe_loss()?;
+            if !self.guard.as_ref().unwrap().mask_probe_ok(before, after) {
+                for (name, vals) in &snapshots {
+                    let w = self.state.params.get_mut(name).unwrap();
+                    upd.regrown[name].scatter_blocks(vals, w.data_mut(), block);
+                }
+                self.controller.undo_last_update(old_masks)?;
+                self.guard.as_mut().unwrap().note_mask_reverted();
+                crate::log_warn!(
+                    "train",
+                    "iter {iter}: mask update reverted (probe {before:.4} → {after:.4} \
+                     beyond budget); controller on cooldown"
+                );
+                return Ok(0.0);
+            }
+        }
+        self.guard.as_mut().unwrap().note_mask_accepted();
+        Ok(regrown_ratio)
+    }
+
+    /// Restore the last-good checkpoint in place and re-fork the data
+    /// order. Monotone guard counters survive; the EWMA trajectory and
+    /// cooldown state come back from the anchor. Without an anchor (plain
+    /// [`Trainer::run`], no checkpoint dir) the streaks are cleared and
+    /// the run limps on. Fails once the rollback budget is spent.
+    fn rollback_to_anchor(&mut self, why: &str) -> Result<()> {
+        if self.guard.as_ref().unwrap().rollbacks_exhausted() {
+            bail!(
+                "{why} and the rollback budget is exhausted \
+                 ({} rollbacks); refusing to thrash",
+                self.guard.as_ref().unwrap().stats().rollbacks
+            );
+        }
+        let Some(anchor) = self.rollback_anchor.clone() else {
+            crate::log_warn!(
+                "train",
+                "{why}, but no rollback anchor exists (run without --ckpt-dir); \
+                 clearing anomaly streaks and continuing"
+            );
+            self.guard.as_mut().unwrap().rollback_restore(None);
+            return Ok(());
+        };
+        let (store, meta) = ParamStore::load_with_meta(&anchor)
+            .with_context(|| format!("loading rollback anchor {anchor:?}"))?;
+        let (params, adam_m, adam_v, masks) = split_checkpoint_store(&store);
+        self.state = TrainState {
+            params,
+            adam_m,
+            adam_v,
+            step: meta.usize_or("step", 0) as i32,
+        };
+        self.controller.restore_masks(masks)?;
+        self.done_iters = meta.usize_or("iter", 0);
+        self.guard
+            .as_mut()
+            .unwrap()
+            .rollback_restore(guard_persist_from_meta(&meta).as_ref());
+        self.data_fork += 1;
+        self.rebuild_corpus();
+        crate::log_warn!(
+            "train",
+            "{why}: rolled back to {anchor:?} (iter {}), data order re-forked (fork {})",
+            self.done_iters,
+            self.data_fork
+        );
+        Ok(())
     }
 
     /// Run `n` iterations continuing from [`Trainer::done_iters`] (0 for a
-    /// fresh trainer, the checkpointed iteration after a resume).
+    /// fresh trainer, the checkpointed iteration after a resume). A
+    /// divergence rollback rewinds `done_iters`, so the loop is a while
+    /// over the target iteration, not a fixed count — identical to the
+    /// old for-loop whenever no rollback fires.
     pub fn run(&mut self, n: usize) -> Result<()> {
         let start = self.done_iters;
-        for i in start..start + n {
+        let end = start + n;
+        while self.done_iters < end {
+            let i = self.done_iters;
             let loss = self.train_iteration(i)?;
-            if i % 20 == 0 || i + 1 == start + n {
+            if i % 20 == 0 || i + 1 == end {
                 crate::log_info!(
                     "train",
                     "{} iter {i} loss {loss:.4} s={:.2}",
@@ -457,9 +860,36 @@ impl<'rt> Trainer<'rt> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
         let start = self.done_iters;
-        for i in start..start + n {
+        let end = start + n;
+        // a guarded run needs a rollback target before the first anomaly
+        // can strike: anchor on the starting state
+        if self.guard.is_some() && self.rollback_anchor.is_none() && every > 0 {
+            let path = dir.join(format!("ckpt-{:06}.blst", start));
+            match self.save_checkpoint_faulted(&path, faults) {
+                Ok(()) => match ParamStore::quick_verify(&path) {
+                    Ok(()) => self.rollback_anchor = Some(path),
+                    Err(e) => crate::log_warn!(
+                        "train",
+                        "initial rollback anchor is not restorable ({e}); \
+                         running without one until the first good autosave"
+                    ),
+                },
+                Err(e) => crate::log_warn!(
+                    "train",
+                    "initial rollback anchor failed to save: {e}; \
+                     running without one until the first good autosave"
+                ),
+            }
+        }
+        while self.done_iters < end {
+            let i = self.done_iters;
             let loss = self.train_iteration(i)?;
-            if i % 20 == 0 || i + 1 == start + n {
+            if self.done_iters != i + 1 {
+                // the iteration answered with a rollback — no autosave on
+                // this lap, the loop re-runs from the anchor's iteration
+                continue;
+            }
+            if i % 20 == 0 || i + 1 == end {
                 crate::log_info!(
                     "train",
                     "{} iter {i} loss {loss:.4} s={:.2}",
@@ -475,7 +905,15 @@ impl<'rt> Trainer<'rt> {
                     // success but left an invalid file must not trigger
                     // deletion of the older good checkpoints
                     Ok(()) => match ParamStore::quick_verify(&path) {
-                        Ok(()) => prune_checkpoints(dir, keep),
+                        Ok(()) => {
+                            // the anchor advances only while the guard sees
+                            // a clean streak — an anomalous window must not
+                            // overwrite the known-good rollback target
+                            if self.guard.as_ref().is_some_and(|g| g.healthy()) {
+                                self.rollback_anchor = Some(path);
+                            }
+                            prune_checkpoints(dir, keep, self.rollback_anchor.as_deref());
+                        }
                         Err(e) => crate::log_warn!(
                             "train",
                             "autosave at iter {} is not restorable ({e}); \
@@ -519,7 +957,7 @@ impl<'rt> Trainer<'rt> {
             store.insert(format!("mask.{name}"), mask_to_tensor(m));
         }
         let o = &self.opts;
-        let meta = Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("trainer")),
             ("config", Json::str(&self.cfg.name)),
             ("iter", Json::num(self.done_iters as f64)),
@@ -535,7 +973,25 @@ impl<'rt> Trainer<'rt> {
             ("seed", Json::str(&o.seed.to_string())),
             ("branching", Json::num(o.branching as f64)),
             ("block_mult", Json::num(o.block_mult as f64)),
-        ]);
+        ];
+        // guard trajectory travels only in guarded runs, so guards-off
+        // checkpoints stay byte-identical to the pre-guard format
+        if let Some(g) = &self.guard {
+            let p = g.persist();
+            fields.push(("data_fork", Json::str(&self.data_fork.to_string())));
+            fields.push(("guard_ewma_bits", Json::str(&p.ewma_bits.to_string())));
+            fields.push(("guard_best_bits", Json::str(&p.best_bits.to_string())));
+            fields.push(("guard_div_streak", Json::num(p.div_streak as f64)));
+            fields.push(("guard_skip_streak", Json::num(p.skip_streak as f64)));
+            fields.push(("guard_cooldown", Json::num(p.cooldown as f64)));
+            fields.push(("guard_relaxed", Json::num(if p.relaxed { 1.0 } else { 0.0 })));
+            fields.push(("guard_rollbacks", Json::num(p.rollbacks as f64)));
+            fields.push(("guard_skips", Json::num(p.skips as f64)));
+            fields.push(("guard_clips", Json::num(p.clips as f64)));
+            fields.push(("guard_mask_reverts", Json::num(p.mask_reverts as f64)));
+            fields.push(("guard_deferred", Json::num(p.deferred as f64)));
+        }
+        let meta = Json::obj(fields);
         store.save_with_meta(path, &meta, faults)
     }
 
@@ -572,30 +1028,18 @@ impl<'rt> Trainer<'rt> {
         };
         let iter = meta.usize_or("iter", 0);
         let step = meta.usize_or("step", 0) as i32;
-        let mut params = ParamStore::new();
-        let mut adam_m = ParamStore::new();
-        let mut adam_v = ParamStore::new();
-        let mut masks: BTreeMap<String, BlockMask> = BTreeMap::new();
-        for (n, t) in store.in_order() {
-            if let Some(s) = n.strip_prefix("param.") {
-                params.insert(s.to_string(), t.clone());
-            } else if let Some(s) = n.strip_prefix("adam_m.") {
-                adam_m.insert(s.to_string(), t.clone());
-            } else if let Some(s) = n.strip_prefix("adam_v.") {
-                adam_v.insert(s.to_string(), t.clone());
-            } else if let Some(s) = n.strip_prefix("mask.") {
-                masks.insert(s.to_string(), tensor_to_mask(t));
-            }
-        }
+        let (params, adam_m, adam_v, masks) = split_checkpoint_store(&store);
         let mut t = Trainer::new_native_with_params(&config, opts, params)?;
         t.state.adam_m = adam_m;
         t.state.adam_v = adam_v;
         t.state.step = step;
         t.controller.restore_masks(masks)?;
-        for _ in 0..iter {
-            t.corpus.batch(t.cfg.batch, t.cfg.seq);
-        }
         t.done_iters = iter;
+        // a guarded checkpoint carries the re-forked data order and the
+        // guard trajectory (applied when the caller re-arms the guard)
+        t.data_fork = meta.str_or("data_fork", "0").parse().unwrap_or(0);
+        t.pending_guard_state = guard_persist_from_meta(&meta);
+        t.rebuild_corpus();
         Ok(t)
     }
 
@@ -938,6 +1382,85 @@ mod tests {
         assert_eq!(all, vec!["ckpt-000014.blst", "ckpt-000016.blst"]);
         // the newest survivor actually restores
         Trainer::resume_from(&dir.join("ckpt-000016.blst")).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite regression: the rollback anchor is pinned through the
+    /// retention sweep even at retention window 1 — the sweep may never
+    /// delete the one checkpoint a divergence would restore.
+    #[test]
+    fn retention_pin_protects_rollback_anchor_at_window_1() {
+        let dir = std::env::temp_dir().join("blast_test_retention_pin");
+        std::fs::remove_dir_all(&dir).ok();
+        let names = |dir: &Path| -> Vec<String> {
+            let mut v: Vec<String> = std::fs::read_dir(dir)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+                .collect();
+            v.sort();
+            v
+        };
+        let mut t = Trainer::new_native("micro", small_opts(17)).unwrap();
+        t.run_with_autosave(6, &dir, 2, 3, &Faults::disabled()).unwrap();
+        assert_eq!(
+            names(&dir),
+            vec!["ckpt-000002.blst", "ckpt-000004.blst", "ckpt-000006.blst"]
+        );
+        // an anchor two windows old survives a keep=1 sweep...
+        let pin = dir.join("ckpt-000002.blst");
+        prune_checkpoints(&dir, 1, Some(&pin));
+        assert_eq!(
+            names(&dir),
+            vec!["ckpt-000002.blst", "ckpt-000006.blst"],
+            "the pinned anchor must survive outside the retention window"
+        );
+        // ...and the same sweep without the pin deletes it
+        prune_checkpoints(&dir, 1, None);
+        assert_eq!(names(&dir), vec!["ckpt-000006.blst"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite sweep: kill a *guarded* run at every autosave boundary,
+    /// resume from each checkpoint with the same guard config, and land
+    /// bit-identical to the never-killed run — params, Adam moments, step
+    /// counter, masks, and the guard's EWMA trajectory. Extends the
+    /// single-point `kill_resume_roundtrip` test to the guarded path
+    /// (clipping active every step via a tiny clip norm).
+    #[test]
+    fn guarded_kill_at_every_autosave_boundary_resumes_bit_identically() {
+        let dir = std::env::temp_dir().join("blast_test_guard_boundaries");
+        std::fs::remove_dir_all(&dir).ok();
+        let gcfg = GuardConfig {
+            clip_norm: 0.05,
+            ..GuardConfig::permissive()
+        };
+        let mut base = Trainer::new_native("micro", small_opts(21)).unwrap();
+        base.arm_guard(gcfg);
+        base.run_with_autosave(12, &dir, 3, 100, &Faults::disabled()).unwrap();
+        assert!(
+            base.guard().unwrap().stats().clips > 0,
+            "clip threshold was never hit — the sweep is not exercising guard math"
+        );
+        for boundary in [0usize, 3, 6, 9, 12] {
+            let p = dir.join(format!("ckpt-{boundary:06}.blst"));
+            let mut r = Trainer::resume_from(&p)
+                .unwrap_or_else(|e| panic!("resume from {p:?}: {e}"));
+            assert_eq!(r.done_iters(), boundary);
+            r.arm_guard(gcfg);
+            r.run(12 - boundary).unwrap();
+            assert_eq!(r.state().step, base.state().step, "boundary {boundary}");
+            assert_stores_identical(&r.state().params, &base.state().params, "params");
+            assert_stores_identical(&r.state().adam_m, &base.state().adam_m, "adam_m");
+            assert_stores_identical(&r.state().adam_v, &base.state().adam_v, "adam_v");
+            assert_eq!(r.masks(), base.masks(), "boundary {boundary}");
+            let (a, b) = (
+                r.guard().unwrap().persist(),
+                base.guard().unwrap().persist(),
+            );
+            assert_eq!(a.ewma_bits, b.ewma_bits, "boundary {boundary}: EWMA diverged");
+            assert_eq!(a.best_bits, b.best_bits, "boundary {boundary}");
+            assert_eq!(a.clips, b.clips, "boundary {boundary}: clip count diverged");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -22,9 +22,16 @@
 //! | `replica_crash`     | a fleet replica's scheduler dies (fleet restart + session failover) |
 //! | `replica_stall_ms`  | a replica's scheduler loop freezes `value` ms (heartbeat stall detection) |
 //! | `heartbeat_drop`    | a replica skips one heartbeat bump (stall-detector noise immunity) |
+//! | `grad_nan`          | one gradient element becomes NaN before the optimizer (guarded training) |
+//! | `grad_explode`      | all gradients scaled by `value` (default 10⁶) — clip/skip ladder |
+//! | `loss_spike_mul`    | the observed loss multiplied by `value` (default 100) — EWMA spike detector |
+//! | `mask_corrupt`      | a prune-and-grow mask update replaced with a catastrophic mask (probe/revert path) |
 //!
 //! An optional fourth field sets a per-site magnitude
 //! (`decode_stall_ms:1:7:40` = 40 ms stalls); other sites ignore it.
+//! The four training sites inject on the **guarded** training path
+//! (`StepGuard` armed) — they exist to prove the guard ladder catches
+//! them, and the unguarded fused step never consults them.
 //!
 //! Multi-replica runs fork one armed plan per replica with
 //! [`Faults::fork`]: each replica re-derives every site's RNG stream from
@@ -80,10 +87,26 @@ pub enum FaultSite {
     /// One heartbeat bump is skipped (lossy heartbeat channel); the stall
     /// detector must tolerate isolated drops without deposing the replica.
     HeartbeatDrop,
+    /// One gradient element turns NaN after the backward pass — the
+    /// guarded trainer must skip the optimizer update instead of letting
+    /// Adam propagate the NaN into every parameter.
+    GradNan,
+    /// Every gradient scaled by `value` (default 10⁶): below the guard's
+    /// explode threshold this exercises global-norm clipping, above it
+    /// the skip-with-backoff path.
+    GradExplode,
+    /// The observed loss multiplied by `value` (default 100) — gradients
+    /// stay healthy, so this isolates the EWMA spike detector (a false
+    /// positive the run must survive by skipping one clean batch).
+    LossSpikeMul,
+    /// A prune-and-grow mask update replaced with a catastrophic mask
+    /// (one surviving block per weight) — the held-out probe must catch
+    /// the degradation and revert, or divergence rollback must recover.
+    MaskCorrupt,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 10] = [
+    pub const ALL: [FaultSite; 14] = [
         FaultSite::DecodeRoundPanic,
         FaultSite::DecodeRoundError,
         FaultSite::PrefillError,
@@ -94,6 +117,10 @@ impl FaultSite {
         FaultSite::ReplicaCrash,
         FaultSite::ReplicaStallMs,
         FaultSite::HeartbeatDrop,
+        FaultSite::GradNan,
+        FaultSite::GradExplode,
+        FaultSite::LossSpikeMul,
+        FaultSite::MaskCorrupt,
     ];
 
     pub fn name(self) -> &'static str {
@@ -108,6 +135,10 @@ impl FaultSite {
             FaultSite::ReplicaCrash => "replica_crash",
             FaultSite::ReplicaStallMs => "replica_stall_ms",
             FaultSite::HeartbeatDrop => "heartbeat_drop",
+            FaultSite::GradNan => "grad_nan",
+            FaultSite::GradExplode => "grad_explode",
+            FaultSite::LossSpikeMul => "loss_spike_mul",
+            FaultSite::MaskCorrupt => "mask_corrupt",
         }
     }
 
@@ -123,6 +154,12 @@ impl FaultSite {
             // threshold to notice, short enough that joining the deposed
             // thread at shutdown stays cheap
             FaultSite::ReplicaStallMs => 150,
+            // far above any sane explode threshold, so the default storm
+            // exercises the skip ladder rather than silent clipping
+            FaultSite::GradExplode => 1_000_000,
+            // two orders of magnitude over a healthy LM loss: trips any
+            // reasonable EWMA spike multiplier
+            FaultSite::LossSpikeMul => 100,
             _ => 0,
         }
     }
@@ -325,6 +362,17 @@ impl Faults {
         }
     }
 
+    /// The armed magnitude of `site` (the optional fourth spec field),
+    /// falling back to the site's default when unarmed — the guarded
+    /// trainer uses this for `grad_explode` / `loss_spike_mul` scaling.
+    pub fn magnitude(&self, site: FaultSite) -> u64 {
+        self.0
+            .as_ref()
+            .and_then(|p| p.sites[site.index()].as_ref())
+            .map(|s| s.value)
+            .unwrap_or_else(|| site.default_value())
+    }
+
     /// Times `site` has fired so far.
     pub fn fired(&self, site: FaultSite) -> u64 {
         self.0
@@ -509,6 +557,26 @@ mod tests {
         let mut f = Faults::disabled().fork_rng("round_retry");
         let mut g = Faults::disabled().fork_rng("round_retry");
         assert_eq!(seq(&mut f), seq(&mut g));
+    }
+
+    #[test]
+    fn training_sites_parse_fire_and_report_magnitude() {
+        let f = Faults::parse("grad_nan:1:1,grad_explode:1:1,loss_spike_mul:1:1:7,mask_corrupt:0:1")
+            .unwrap();
+        assert!(f.fire(FaultSite::GradNan));
+        assert!(f.fire(FaultSite::GradExplode));
+        assert!(f.fire(FaultSite::LossSpikeMul));
+        assert!(!f.fire(FaultSite::MaskCorrupt));
+        // armed value wins; unarmed/absent sites fall back to the default
+        assert_eq!(f.magnitude(FaultSite::LossSpikeMul), 7);
+        assert_eq!(f.magnitude(FaultSite::GradExplode), 1_000_000);
+        assert_eq!(f.magnitude(FaultSite::GradNan), 0);
+        assert_eq!(Faults::disabled().magnitude(FaultSite::LossSpikeMul), 100);
+        // round-trip through from_name like the spec parser does
+        for name in ["grad_nan", "grad_explode", "loss_spike_mul", "mask_corrupt"] {
+            let site = FaultSite::from_name(name).unwrap();
+            assert_eq!(site.name(), name);
+        }
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Chaos-training integration suite: the guarded pretraining runtime
+//! under seeded fault injection at the four training sites (`grad_nan`,
+//! `grad_explode`, `loss_spike_mul`, `mask_corrupt`).
+//!
+//! The invariants, mirroring `blast exp chaos --train`:
+//!
+//! 1. **zero-overhead guarantee** — with no guard armed the trainer never
+//!    consults the training fault sites, and a *permissive* guard is
+//!    bit-identical to guards-off (loss stream, parameters, masks);
+//! 2. **every anomaly is answered** — skips/reverts/rollbacks are
+//!    recorded, the optimizer state stays finite, and the final
+//!    checkpoint quick-verifies;
+//! 3. **budgets fail loudly** — exhausting the rollback budget aborts
+//!    with an exact, seed-independent trajectory.
+//!
+//! The pinned fire counts (`grad_nan:0.25:5` → 9 fires over 24 checks,
+//! etc.) are cross-checked bit-for-bit by the numpy transliteration in
+//! `python/tests/train_guard_check.py`; a mismatch means the RNG or
+//! stream-seed derivation drifted, not the test.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use blast::model::params::ParamStore;
+use blast::sparse::BlockMask;
+use blast::train::pretrain::{PretrainOptions, Trainer};
+use blast::train::GuardConfig;
+use blast::util::faults::{FaultSite, Faults};
+
+fn opts(iters: usize, seed: u64) -> PretrainOptions {
+    PretrainOptions {
+        total_iters: iters,
+        s_max: 0.5,
+        step_size: 5,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn trainer(iters: usize, seed: u64) -> Trainer<'static> {
+    Trainer::new_native("micro", opts(iters, seed)).unwrap()
+}
+
+fn finite_params(t: &Trainer) -> bool {
+    t.params().in_order().all(|(_, w)| w.data().iter().all(|v| v.is_finite()))
+}
+
+fn loss_bits(t: &Trainer) -> Vec<u32> {
+    t.log.iter().map(|l| l.loss.to_bits()).collect()
+}
+
+fn param_bits(t: &Trainer) -> Vec<(String, Vec<u32>)> {
+    t.params()
+        .in_order()
+        .map(|(n, w)| (n.clone(), w.data().iter().map(|v| v.to_bits()).collect()))
+        .collect()
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("blast_chaos_training_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Armed training sites + no guard: the unguarded path must never consult
+/// them (prob 1 would fire on the very first check), and the run is
+/// bit-identical to a faultless twin.
+#[test]
+fn unguarded_trainer_never_consults_training_fault_sites() {
+    let mut plain = trainer(8, 33);
+    plain.run(8).unwrap();
+
+    let faults = Faults::parse(
+        "grad_nan:1:1,grad_explode:1:1,loss_spike_mul:1:1:100,mask_corrupt:1:1",
+    )
+    .unwrap();
+    let mut armed = trainer(8, 33);
+    armed.set_faults(faults.clone());
+    armed.run(8).unwrap();
+
+    assert_eq!(faults.total_fired(), 0, "unguarded path consulted a training site");
+    assert_eq!(loss_bits(&plain), loss_bits(&armed));
+    assert_eq!(param_bits(&plain), param_bits(&armed));
+}
+
+/// A permissive guard routes every step through the split
+/// `grad_step`/`apply_update` path yet changes nothing: losses,
+/// parameters, masks and the optimizer step all match guards-off
+/// bit-for-bit, and the guard never intervenes.
+#[test]
+fn permissive_guard_is_bit_identical_to_guards_off() {
+    let mut plain = trainer(12, 62);
+    plain.run(12).unwrap();
+
+    let mut guarded = trainer(12, 62);
+    guarded.arm_guard(GuardConfig::permissive());
+    guarded.run(12).unwrap();
+
+    assert_eq!(loss_bits(&plain), loss_bits(&guarded));
+    assert_eq!(param_bits(&plain), param_bits(&guarded));
+    assert_eq!(plain.masks(), guarded.masks());
+    assert_eq!(plain.state().step, guarded.state().step);
+    let s = guarded.guard().unwrap().stats();
+    assert_eq!(
+        (s.skips, s.clips, s.rollbacks, s.mask_reverts, s.mask_updates_deferred),
+        (0, 0, 0, 0, 0),
+        "permissive guard intervened: {s:?}"
+    );
+    assert_eq!(s.steps_accepted, 12);
+}
+
+/// `grad_nan:0.25:5` over 24 iterations: the stream fires 9 times with a
+/// longest run of 2 (pinned in train_guard_check.py), so the trajectory
+/// is exact — 9 skips, 15 accepted steps, no NaN ever reaching Adam.
+#[test]
+fn grad_nan_burst_matches_python_pinned_trajectory() {
+    let faults = Faults::parse("grad_nan:0.25:5").unwrap();
+    let mut t = trainer(24, 21);
+    t.set_faults(faults.clone());
+    t.arm_guard(GuardConfig::default());
+    t.run(24).unwrap();
+
+    assert_eq!(faults.fired(FaultSite::GradNan), 9);
+    let s = t.guard().unwrap().stats();
+    assert_eq!(s.skips, 9);
+    assert_eq!(s.steps_accepted, 15);
+    assert!(finite_params(&t), "NaN leaked into parameters");
+    assert!(t.log.last().unwrap().loss.is_finite());
+
+    let ckpt = scratch_dir("nan_ckpt").join("final.blst");
+    std::fs::create_dir_all(ckpt.parent().unwrap()).unwrap();
+    t.save_checkpoint(&ckpt).unwrap();
+    ParamStore::quick_verify(&ckpt).unwrap();
+    let _ = std::fs::remove_dir_all(ckpt.parent().unwrap());
+}
+
+/// `grad_explode:0.3:11` scales gradients by 1e6 — far past the 1e3
+/// explosion threshold — on each of its 7 pinned fires over 16 checks;
+/// every fire must be skipped, never clipped into Adam.
+#[test]
+fn grad_explode_storm_skips_every_fire() {
+    let faults = Faults::parse("grad_explode:0.3:11:1000000").unwrap();
+    let mut t = trainer(16, 21);
+    t.set_faults(faults.clone());
+    t.arm_guard(GuardConfig::default());
+    t.run(16).unwrap();
+
+    assert_eq!(faults.fired(FaultSite::GradExplode), 7);
+    let s = t.guard().unwrap().stats();
+    assert_eq!(s.skips, 7);
+    assert_eq!(s.steps_accepted, 9);
+    assert!(finite_params(&t));
+    assert!(t.log.last().unwrap().loss.is_finite());
+}
+
+/// The spike site is armed only after one clean iteration (a spike landing
+/// before the EWMA baseline exists is accepted by design). Past that,
+/// every 100× spiked loss sits far above `EWMA · 3` and must be skipped —
+/// and skipped losses never feed the EWMA, so one fire cannot mask the
+/// next. 6 fires pinned over the 23 armed checks.
+#[test]
+fn loss_spike_storm_skips_every_fire_after_warmup() {
+    let mut t = trainer(24, 21);
+    t.arm_guard(GuardConfig::default());
+    t.run(1).unwrap();
+
+    let faults = Faults::parse("loss_spike_mul:0.3:7:100").unwrap();
+    t.set_faults(faults.clone());
+    t.run(23).unwrap();
+
+    assert_eq!(faults.fired(FaultSite::LossSpikeMul), 6);
+    let s = t.guard().unwrap().stats();
+    assert_eq!(s.skips, 6);
+    assert_eq!(s.steps_accepted, 18);
+    assert_eq!(s.last_anomaly, Some("loss_spike"));
+    assert!(finite_params(&t));
+}
+
+/// `mask_corrupt:1` + a paranoid budget (probe passes only if the update
+/// *halves* the loss — impossible): every attempted update is corrupted,
+/// probed, and reverted, deterministically. Updates land at iterations
+/// 0/5/10; the revert at 0 starts a 2-update cooldown deferring 5 and 10,
+/// so the corruption never reaches the masks: they stay bit-identical to
+/// the initial full grids, and the run's checkpoint quick-verifies.
+#[test]
+fn paranoid_mask_budget_reverts_every_corrupted_update() {
+    let faults = Faults::parse("mask_corrupt:1:3").unwrap();
+    let mut t = trainer(12, 21);
+    t.set_faults(faults.clone());
+    t.arm_guard(GuardConfig {
+        mask_budget: -0.5,
+        ..GuardConfig::default()
+    });
+    t.run(12).unwrap();
+
+    let s = t.guard().unwrap().stats();
+    assert_eq!(s.mask_reverts, 1);
+    assert_eq!(s.mask_updates_deferred, 2);
+    assert_eq!(faults.fired(FaultSite::MaskCorrupt), 1);
+    assert_eq!(t.controller().mean_sparsity(), 0.0, "corruption reached the masks");
+    let full: BTreeMap<String, BlockMask> = trainer(12, 21).masks().clone();
+    assert_eq!(t.masks(), &full);
+    assert!(finite_params(&t));
+
+    let ckpt = scratch_dir("mask_ckpt").join("final.blst");
+    std::fs::create_dir_all(ckpt.parent().unwrap()).unwrap();
+    t.save_checkpoint(&ckpt).unwrap();
+    ParamStore::quick_verify(&ckpt).unwrap();
+    let _ = std::fs::remove_dir_all(ckpt.parent().unwrap());
+}
+
+/// `grad_nan:1` never draws the RNG, so the escalation is exact for any
+/// seed: 3 skips exhaust the skip budget, the anchored rollback re-forks
+/// the data order, and after `max_rollbacks = 2` the third escalation
+/// aborts with the budget error — 9 skips, 2 rollbacks, 2 data forks.
+#[test]
+fn skip_escalation_exhausts_rollback_budget_deterministically() {
+    let dir = scratch_dir("escalation");
+    let faults = Faults::parse("grad_nan:1:1").unwrap();
+    let mut t = trainer(24, 21);
+    t.set_faults(faults.clone());
+    t.arm_guard(GuardConfig {
+        max_skips: 3,
+        max_rollbacks: 2,
+        ..GuardConfig::default()
+    });
+    let err = t
+        .run_with_autosave(24, &dir, 4, 8, &faults)
+        .expect_err("rollback budget should exhaust");
+    assert!(
+        format!("{err:#}").contains("rollback budget"),
+        "unexpected error: {err:#}"
+    );
+
+    let s = t.guard().unwrap().stats();
+    assert_eq!(s.rollbacks, 2);
+    assert_eq!(s.skips, 9);
+    assert_eq!(s.steps_accepted, 0);
+    assert_eq!(t.data_fork(), 2);
+    // the anchor (the initial iteration-0 autosave) is still restorable
+    let anchor = t.rollback_anchor().expect("anchor pinned").to_path_buf();
+    ParamStore::quick_verify(&anchor).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// All four sites at once against loosened budgets: the run must complete
+/// with finite state, the rollback anchor must quick-verify, and resuming
+/// from it must continue cleanly.
+#[test]
+fn everything_at_once_storm_completes_with_verified_anchor() {
+    let dir = scratch_dir("all_sites");
+    let faults = Faults::parse(
+        "grad_nan:0.1:4,grad_explode:0.1:4:1000000,loss_spike_mul:0.15:4:100,mask_corrupt:0.5:4",
+    )
+    .unwrap();
+    let mut t = trainer(24, 21);
+    t.set_faults(faults.clone());
+    t.arm_guard(GuardConfig {
+        max_skips: 12,
+        max_rollbacks: 50,
+        mask_budget: 0.1,
+        // a persistent-corruption regime is flat, not rising — loosen the
+        // divergence trigger so the storm can't ping-pong the rollback
+        // budget and the other guard layers stay observable
+        div_tol: 0.5,
+        ..GuardConfig::default()
+    });
+    t.run_with_autosave(24, &dir, 4, 3, &faults).unwrap();
+
+    assert!(t.log.last().unwrap().loss.is_finite());
+    assert!(finite_params(&t));
+    // seed 4's streams pin 4 grad_explode + 1 loss_spike fire — at least
+    // one anomaly was answered by a skip
+    assert!(t.guard().unwrap().stats().skips >= 1);
+    let anchor = t.rollback_anchor().expect("anchor pinned").to_path_buf();
+    ParamStore::quick_verify(&anchor).unwrap();
+
+    let mut resumed = Trainer::resume_from(&anchor).unwrap();
+    resumed.run(2).unwrap();
+    assert!(resumed.log.last().unwrap().loss.is_finite());
+    let _ = std::fs::remove_dir_all(&dir);
+}
